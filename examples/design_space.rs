@@ -1,0 +1,72 @@
+//! Design-space exploration over the Mamba-X configuration: SSA count,
+//! chunk size, GEMM-engine geometry and buffer size — the ablations
+//! DESIGN.md calls out beyond the paper's Fig 17 sweep. Reports
+//! performance, area, and performance-per-area so the Pareto frontier is
+//! visible.
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use mamba_x::config::{GpuConfig, MambaXConfig, VimModel};
+use mamba_x::energy::{AreaModel, TechNode};
+use mamba_x::gpu::GpuModel;
+use mamba_x::sim::Accelerator;
+use mamba_x::vision::{vim_model_ops, vim_selective_ssm_ops};
+
+fn main() {
+    let m = VimModel::small();
+    let img = 738;
+    let scan_ops = vim_selective_ssm_ops(&m, m.seq_len(img));
+    let e2e_ops = vim_model_ops(&m, img);
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    let t_gpu_scan = gpu.run(&scan_ops).total_seconds();
+    let t_gpu_e2e = gpu.run(&e2e_ops).total_seconds();
+
+    println!("== design space: vim-{} @ {img}px (edge GPU scan {:.2} ms) ==", m.name, t_gpu_scan * 1e3);
+    println!(
+        "{:>5} {:>6} {:>9} {:>10} {:>10} {:>10} {:>10} {:>12}",
+        "SSAs", "chunk", "gemm", "scan x", "e2e x", "mm2@12nm", "perf/mm2", "ssa util"
+    );
+
+    let mut best: Option<(f64, String)> = None;
+    for n_ssa in [1usize, 2, 4, 8, 16] {
+        for chunk in [8usize, 16, 32] {
+            for gemm in [32usize, 64] {
+                let cfg = MambaXConfig {
+                    n_ssa,
+                    chunk,
+                    gemm_rows: gemm,
+                    gemm_cols: gemm,
+                    ..MambaXConfig::default()
+                };
+                let acc = Accelerator::new(cfg.clone());
+                let r_scan = acc.run(&scan_ops);
+                let r_e2e = acc.run(&e2e_ops);
+                let sp_scan = t_gpu_scan / r_scan.seconds(&cfg);
+                let sp_e2e = t_gpu_e2e / r_e2e.seconds(&cfg);
+                let area = AreaModel::mamba_x(&cfg).at(TechNode::N12).total();
+                let ppa = sp_e2e / area;
+                let label = format!("{n_ssa} SSAs, chunk {chunk}, {gemm}x{gemm}");
+                println!(
+                    "{:>5} {:>6} {:>6}x{:<3} {:>9.1}x {:>9.2}x {:>10.2} {:>10.2} {:>11.1}%",
+                    n_ssa,
+                    chunk,
+                    gemm,
+                    gemm,
+                    sp_scan,
+                    sp_e2e,
+                    area,
+                    ppa,
+                    r_scan.ssa_utilization * 100.0
+                );
+                if best.as_ref().map(|(b, _)| ppa > *b).unwrap_or(true) {
+                    best = Some((ppa, label));
+                }
+            }
+        }
+    }
+    let (ppa, label) = best.unwrap();
+    println!("\nbest perf/area: {label} ({ppa:.2} speedup/mm^2)");
+    println!("(paper's default: 8 SSAs, chunk 16, 64x64 GEMM — Table 2)");
+}

@@ -1,0 +1,57 @@
+//! Reproduce the paper's four headline numbers in one run (abstract/§8):
+//!
+//!   11.6x selective-scan throughput, 11.5x end-to-end energy-efficiency,
+//!   601x performance/area, 2.3x end-to-end speedup.
+//!
+//! ```sh
+//! cargo run --release --example paper_headline
+//! ```
+
+use mamba_x::config::{GpuConfig, MambaXConfig, VimModel, IMAGE_SIZES};
+use mamba_x::energy::{AreaModel, TechNode};
+use mamba_x::gpu::GpuModel;
+use mamba_x::sim::Accelerator;
+use mamba_x::vision::{vim_model_ops, vim_selective_ssm_ops};
+
+fn geomean(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+fn main() {
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    let acc = Accelerator::new(MambaXConfig::default());
+    let area12 = AreaModel::mamba_x(&acc.cfg).at(TechNode::N12).total();
+    let die = GpuConfig::xavier().die_mm2;
+
+    let (mut scan_sp, mut e2e_sp, mut e2e_ee, mut ppa) =
+        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for name in VimModel::ALL {
+        let m = VimModel::by_name(name).unwrap();
+        for img in IMAGE_SIZES {
+            let scan = vim_selective_ssm_ops(&m, m.seq_len(img));
+            let e2e = vim_model_ops(&m, img);
+            let g_scan = gpu.run(&scan);
+            let a_scan = acc.run(&scan);
+            let g_e2e = gpu.run(&e2e);
+            let a_e2e = acc.run(&e2e);
+            scan_sp.push(g_scan.total_seconds() / a_scan.seconds(&acc.cfg));
+            let sp = g_e2e.total_seconds() / a_e2e.seconds(&acc.cfg);
+            e2e_sp.push(sp);
+            e2e_ee.push(g_e2e.energy_j / a_e2e.energy_j);
+            ppa.push(sp * die / area12);
+        }
+    }
+
+    println!("== paper headline numbers (geomean over 3 models x 4 sizes) ==");
+    println!("{:<32} {:>10} {:>10}", "metric", "paper", "this repo");
+    println!("{:<32} {:>10} {:>9.1}x", "selective-scan speedup", "11.6x", geomean(&scan_sp));
+    println!("{:<32} {:>10} {:>9.1}x", "e2e energy-efficiency", "11.5x", geomean(&e2e_ee));
+    println!("{:<32} {:>10} {:>9.0}x", "performance / area", "601x", geomean(&ppa));
+    println!("{:<32} {:>10} {:>9.1}x", "e2e speedup", "2.3x", geomean(&e2e_sp));
+    println!(
+        "{:<32} {:>10} {:>9.2}%",
+        "die fraction @12nm",
+        "0.4%",
+        100.0 * area12 / die
+    );
+}

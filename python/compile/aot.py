@@ -1,0 +1,252 @@
+"""AOT pipeline: lower the JAX/Pallas stack to HLO text + export goldens.
+
+Python's ONLY job at build time (`make artifacts`). Produces, under
+artifacts/:
+
+  model.hlo.txt          micro ViM single-image forward (params baked in) —
+                         the request-path executable the rust coordinator
+                         serves (fused Pallas SSM inside).
+  scan_<cfg>.hlo.txt     standalone selective-scan modules at Tiny-class
+                         shapes, for runtime microbenches.
+  encoder_block.hlo.txt  one bidirectional Vim encoder block (micro).
+  manifest.json          shapes/dtypes/entry metadata for every artifact.
+  sfu_luts.json          fitted SFU tables (shared with rust SFU model).
+  golden/*.json          bit-exact test vectors: integer SPE scan, quantize
+                         rounding, LUT evaluation, plus an end-to-end
+                         image -> logits pair for the runtime test.
+
+Interchange is HLO **text**: jax >= 0.5 serializes HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, lut, quant
+from . import model as M
+from . import train as T
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants: the default ELIDES big weight arrays as
+    # "{...}", which the 0.5.1 text parser silently reads as zeros.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write(path: pathlib.Path, text: str) -> None:
+    path.write_text(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+# --------------------------------------------------------------------------
+# Artifact builders
+# --------------------------------------------------------------------------
+
+def build_model_artifact(art: pathlib.Path, params, cfg: M.VimConfig,
+                         manifest: dict) -> None:
+    # chunk=8, h_tile=full-H won the §Perf sweep on the CPU-PJRT path
+    # (EXPERIMENTS.md §Perf L1: 39.4 -> 25.5 ms p50): fewer Kogge-Stone
+    # steps per chunk and half the grid steps vs the (16, 64) default.
+    ops = M.PallasOps(chunk=8, fused=True, h_tile=cfg.d_inner)
+
+    def fwd(img):
+        return (M.forward(params, img, cfg, ops),)
+
+    spec = jax.ShapeDtypeStruct((cfg.img, cfg.img, cfg.in_ch), jnp.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    _write(art / "model.hlo.txt", to_hlo_text(lowered))
+    manifest["model"] = {
+        "file": "model.hlo.txt", "model": cfg.name,
+        "input": [cfg.img, cfg.img, cfg.in_ch], "input_dtype": "f32",
+        "output": [cfg.n_classes], "output_dtype": "f32",
+        "seq_len": cfg.seq_len, "d_model": cfg.d_model,
+        "n_blocks": cfg.n_blocks, "d_state": cfg.d_state,
+    }
+
+
+def build_scan_artifacts(art: pathlib.Path, manifest: dict) -> None:
+    """Standalone scan modules at paper-relevant shapes (runtime benches)."""
+    from .kernels.scan import selective_scan
+    shapes = {
+        # (L, H, N): tiny @224 (L=197), tiny @448; micro shape for tests.
+        "tiny224": (197, 384, 16),
+        "tiny448": (785, 384, 16),
+        "micro": (65, 128, 8),
+    }
+    manifest["scan"] = {}
+    for name, (L, H, N) in shapes.items():
+        def fn(dA, dBu):
+            return (selective_scan(dA, dBu, chunk=16),)
+
+        spec = jax.ShapeDtypeStruct((L, H, N), jnp.float32)
+        lowered = jax.jit(fn).lower(spec, spec)
+        _write(art / f"scan_{name}.hlo.txt", to_hlo_text(lowered))
+        manifest["scan"][name] = {
+            "file": f"scan_{name}.hlo.txt", "shape": [L, H, N],
+            "dtype": "f32",
+        }
+
+
+def build_block_artifact(art: pathlib.Path, params, cfg: M.VimConfig,
+                         manifest: dict) -> None:
+    ops = M.PallasOps(chunk=8, fused=True, h_tile=cfg.d_inner)
+    bp = params["blocks"][0]
+
+    def blk(x):
+        return (M.vim_block(bp, x, cfg, ops, "blk0"),)
+
+    spec = jax.ShapeDtypeStruct((cfg.seq_len, cfg.d_model), jnp.float32)
+    lowered = jax.jit(blk).lower(spec)
+    _write(art / "encoder_block.hlo.txt", to_hlo_text(lowered))
+    manifest["encoder_block"] = {
+        "file": "encoder_block.hlo.txt",
+        "shape": [cfg.seq_len, cfg.d_model], "dtype": "f32",
+    }
+
+
+def build_luts(art: pathlib.Path, params, cfg: M.VimConfig,
+               manifest: dict) -> lut.LutSet:
+    # Profile-guided fit: collect SFU input samples from calibration images.
+    samples: dict[str, list] = {"silu": [], "exp": [], "softplus": []}
+
+    def sink(name, x):
+        if name.endswith((".u", ".silu_in")):
+            samples["silu"].append(np.asarray(x).ravel())
+        elif name.endswith(".exp_in"):
+            samples["exp"].append(np.asarray(x).ravel())
+        elif name.endswith(".softplus_in"):
+            samples["softplus"].append(np.asarray(x).ravel())
+
+    imgs, _ = data.make_dataset(4, cfg.img, seed=123)
+    ops = M.TapOps(sink)
+    for im in imgs:
+        M.forward(params, jnp.asarray(im), cfg, ops)
+    flat = {k: np.concatenate(v) for k, v in samples.items()}
+    ranges = lut.profile_ranges(flat)
+    luts = lut.LutSet({
+        name: lut.fit_lut(name, entries=lut.PAPER_ENTRIES[name],
+                          rng_range=ranges[name],
+                          samples=np.random.RandomState(0).choice(
+                              flat[name], size=min(8192, flat[name].size),
+                              replace=False),
+                          gd_steps=200)
+        for name in lut.FUNCS
+    })
+    luts.save(str(art / "sfu_luts.json"))
+    print(f"  wrote {art / 'sfu_luts.json'}")
+    manifest["sfu_luts"] = {"file": "sfu_luts.json",
+                            "ranges": {k: list(v) for k, v in ranges.items()}}
+    return luts
+
+
+def build_goldens(art: pathlib.Path, params, cfg: M.VimConfig,
+                  luts: lut.LutSet, manifest: dict) -> None:
+    g = art / "golden"
+    g.mkdir(exist_ok=True)
+    rng = np.random.RandomState(42)
+
+    # 1. Integer SPE scan vectors (rust quant::spe must match exactly).
+    cases = []
+    for (L, H, N, seed) in [(16, 2, 2, 0), (33, 3, 4, 1), (64, 4, 8, 2)]:
+        r = np.random.RandomState(seed)
+        P = r.randint(-127, 128, (L, H, N)).astype(np.int64)
+        Q = r.randint(-127, 128, (L, H, N)).astype(np.int64)
+        shift = r.randint(4, 10, (H,)).astype(np.int32)
+        out = quant.spe_scan_int(P, Q, shift)
+        cases.append({
+            "L": L, "H": H, "N": N,
+            "p": P.ravel().tolist(), "q": Q.ravel().tolist(),
+            "shift": shift.tolist(),
+            "out": out.ravel().tolist(),
+        })
+    (g / "spe_scan.json").write_text(json.dumps({"cases": cases}))
+
+    # 2. Quantize rounding vectors (round-half-away + clip).
+    xs = np.concatenate([
+        rng.uniform(-3, 3, 64).astype(np.float32),
+        np.array([0.5, -0.5, 1.5, -1.5, 2.5, 126.6, -300.0, 0.0],
+                 np.float32)])
+    s = np.float32(0.0125)
+    q = np.asarray(quant.quantize(jnp.asarray(xs), s), np.float32)
+    (g / "quantize.json").write_text(json.dumps({
+        "x": xs.tolist(), "scale": float(s), "q": q.tolist()}))
+
+    # 3. LUT evaluation vectors (rust SFU must match at f32).
+    lut_cases = {}
+    for name, l in luts.luts.items():
+        lo, hi = float(l.bps[0]), float(l.bps[-1])
+        xs = np.concatenate([
+            rng.uniform(lo - 1, hi + 1, 64),
+            l.bps[:3], [lo, hi]]).astype(np.float32)
+        ys = np.asarray(l.eval(jnp.asarray(xs)), np.float32)
+        lut_cases[name] = {"x": xs.tolist(), "y": ys.tolist()}
+    (g / "lut_eval.json").write_text(json.dumps(lut_cases))
+
+    # 4. End-to-end image -> logits golden for the rust runtime test.
+    imgs, labels = data.make_dataset(2, cfg.img, seed=777)
+    logits = np.asarray(M.forward_batch(params, jnp.asarray(imgs), cfg,
+                                        M.PallasOps(chunk=16, fused=True)))
+    (g / "model_io.json").write_text(json.dumps({
+        "input_shape": list(imgs.shape[1:]),
+        "images": [im.ravel().tolist() for im in imgs],
+        "labels": labels.tolist(),
+        "logits": [lo.tolist() for lo in logits],
+    }))
+
+    # 5. pow2 scale approximation vectors (Fig 16 mechanics).
+    s_in = rng.uniform(2 ** -10, 2 ** -5, 32).astype(np.float32)
+    (g / "pow2.json").write_text(json.dumps({
+        "s": s_in.tolist(),
+        "rounded": np.asarray(quant.pow2_round(jnp.asarray(s_in)),
+                              np.float32).tolist(),
+        "shift": quant.pow2_shift(s_in).tolist()}))
+    print(f"  wrote {g}/*.json")
+    manifest["golden"] = {"dir": "golden"}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact (its dir is used)")
+    ap.add_argument("--train-steps", type=int, default=180,
+                    help="training steps if no checkpoint exists yet")
+    args = ap.parse_args()
+    art = pathlib.Path(args.out).parent
+    art.mkdir(parents=True, exist_ok=True)
+
+    cfg = M.CONFIGS["micro"]
+    ckpt = art / "micro_params.npz"
+    if ckpt.exists():
+        params, cfg = T.load_trained("micro", str(art))
+        print(f"loaded trained micro params from {ckpt}")
+    else:
+        print("no checkpoint; training micro model "
+              f"({args.train_steps} steps) ...")
+        params, cfg, _, _ = T.train("micro", steps=args.train_steps,
+                                    batch=48, out_dir=str(art))
+
+    manifest: dict = {"format": "hlo-text", "models": list(M.CONFIGS)}
+    build_model_artifact(art, params, cfg, manifest)
+    build_scan_artifacts(art, manifest)
+    build_block_artifact(art, params, cfg, manifest)
+    luts = build_luts(art, params, cfg, manifest)
+    build_goldens(art, params, cfg, luts, manifest)
+    (art / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"  wrote {art / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

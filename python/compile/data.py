@@ -1,0 +1,81 @@
+"""Synthetic procedural-shapes dataset (ImageNet-1K stand-in).
+
+We have no ImageNet (DESIGN.md substitution table): accuracy experiments use
+a 10-class procedurally generated grayscale shape dataset. Classes exercise
+both local texture and global structure so that quantization error has a
+measurable effect on accuracy, like on natural images.
+
+Deterministic given the seed; generated with numpy only.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N_CLASSES = 10
+CLASS_NAMES = ["circle", "square", "triangle", "cross", "ring",
+               "h_stripes", "v_stripes", "diag_stripes", "checker", "dots"]
+
+
+def _grid(img: int):
+    c = np.arange(img, dtype=np.float32)
+    return np.meshgrid(c, c, indexing="ij")  # (y, x)
+
+
+def _render(cls: int, img: int, rng: np.random.RandomState) -> np.ndarray:
+    y, x = _grid(img)
+    cy = img / 2 + rng.uniform(-img / 8, img / 8)
+    cx = img / 2 + rng.uniform(-img / 8, img / 8)
+    r = img * rng.uniform(0.22, 0.38)
+    period = max(2, int(img * rng.uniform(0.12, 0.25)))
+    canvas = np.zeros((img, img), np.float32)
+
+    if cls == 0:   # circle
+        canvas = ((y - cy) ** 2 + (x - cx) ** 2 <= r * r).astype(np.float32)
+    elif cls == 1:  # square
+        canvas = ((np.abs(y - cy) <= r * 0.9) &
+                  (np.abs(x - cx) <= r * 0.9)).astype(np.float32)
+    elif cls == 2:  # triangle (upward)
+        h = r * 1.6
+        inside = (y <= cy + h / 2) & (y >= cy - h / 2)
+        half_w = (y - (cy - h / 2)) / h * r * 1.4
+        canvas = (inside & (np.abs(x - cx) <= half_w)).astype(np.float32)
+    elif cls == 3:  # cross
+        t = r * 0.35
+        canvas = (((np.abs(y - cy) <= t) & (np.abs(x - cx) <= r)) |
+                  ((np.abs(x - cx) <= t) & (np.abs(y - cy) <= r))
+                  ).astype(np.float32)
+    elif cls == 4:  # ring
+        d2 = (y - cy) ** 2 + (x - cx) ** 2
+        canvas = ((d2 <= r * r) & (d2 >= (r * 0.55) ** 2)).astype(np.float32)
+    elif cls == 5:  # horizontal stripes
+        canvas = ((y // (period // 2 + 1)) % 2).astype(np.float32)
+    elif cls == 6:  # vertical stripes
+        canvas = ((x // (period // 2 + 1)) % 2).astype(np.float32)
+    elif cls == 7:  # diagonal stripes
+        canvas = (((x + y) // (period // 2 + 1)) % 2).astype(np.float32)
+    elif cls == 8:  # checkerboard
+        p = period // 2 + 1
+        canvas = (((x // p) + (y // p)) % 2).astype(np.float32)
+    elif cls == 9:  # dot grid
+        p = period
+        canvas = (((y % p) - p / 2) ** 2 + ((x % p) - p / 2) ** 2
+                  <= (p * 0.3) ** 2).astype(np.float32)
+    else:
+        raise ValueError(cls)
+
+    canvas = canvas * rng.uniform(0.7, 1.0)
+    canvas += rng.normal(0, 0.08, canvas.shape).astype(np.float32)
+    return np.clip(canvas, 0.0, 1.0)
+
+
+def make_dataset(n: int, img: int = 32, seed: int = 0,
+                 normalize: bool = True):
+    """Returns (images (n, img, img, 1) f32, labels (n,) i32)."""
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(0, N_CLASSES, size=n).astype(np.int32)
+    imgs = np.stack([_render(int(c), img, rng) for c in labels])
+    imgs = imgs[..., None]
+    if normalize:
+        imgs = (imgs - 0.5) / 0.5
+    return imgs.astype(np.float32), labels

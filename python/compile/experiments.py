@@ -1,0 +1,280 @@
+"""Accuracy-side experiment drivers (paper Tables 1/5, Figs 14/15/16/19/20).
+
+Performance-side experiments (Figs 1/4/7/8/17/18, Tables 2/4) are driven by
+the rust simulator (`mamba-x figures`, `cargo bench`); this module covers
+every experiment that needs model *accuracy*, which lives on the python
+side since it requires the trained weights and the dataset.
+
+All results are written to artifacts/experiments/<name>.json and printed as
+the paper's table rows. Run e.g.:
+
+    python -m compile.experiments table1 table5 fig19 fig20 fig14 fig15 fig16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, lut, quant
+from . import model as M
+from . import train as T
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+OUT = ART / "experiments"
+
+# Evaluation set size for quantized (eager, integer-scan) evaluation. The
+# paper uses the 50k ImageNet val set; our synthetic test set is cheaper to
+# generate but the integer SPE scan runs on the host, so we bound it.
+N_EVAL = 256
+N_CALIB = 16  # paper: 1% of the test set; same ratio.
+
+
+def _load(model_name: str):
+    params, cfg = T.load_trained(model_name, str(ART))
+    test_x, test_y = data.make_dataset(N_EVAL, cfg.img, seed=10_000)
+    calib_x, _ = data.make_dataset(N_CALIB, cfg.img, seed=20_000)
+    return params, cfg, test_x, test_y, calib_x
+
+
+def _acc(params, cfg, x, y, ops=None):
+    return T.evaluate(params, cfg, x, y, ops=ops)
+
+
+def _save(name: str, obj) -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(obj, indent=1))
+    print(f"-> {OUT / f'{name}.json'}")
+
+
+def _luts(gd_steps=200) -> lut.LutSet:
+    p = ART / "sfu_luts.json"
+    if p.exists():
+        return lut.LutSet.load(str(p))
+    return lut.LutSet.fit(gd_steps=gd_steps)
+
+
+# --------------------------------------------------------------------------
+# Table 1: activation-quantization granularity
+# --------------------------------------------------------------------------
+
+def table1():
+    """Activation-quantization granularity (paper Table 1).
+
+    DEVIATION (EXPERIMENTS.md): the paper's catastrophic tensor-granularity
+    collapse (76% -> 14.7%) is driven by ImageNet-ViM's extreme outlier
+    channels (~100x the median). The micro model trained on shapes only
+    exhibits mild channel variance, so INT8 hides the mechanism; we sweep
+    the bit width and the crossover appears at lower precision, where the
+    per-channel/per-tensor distinction is decisive — same mechanism,
+    smaller outlier ratio."""
+    params, cfg, x, y, cx = _load("micro")
+    calib = quant.Calibration().run(params, cx, cfg)
+    rows = {}
+    rows["baseline_fp32"] = _acc(params, cfg, x, y)
+    for bits in (8, 6, 4):
+        for gran in ("tensor", "channel"):
+            ops = quant.QuantOps(
+                quant.QuantConfig(granularity=gran, bits=bits),
+                calib.scales(gran, bits))
+            rows[f"int{bits}_{gran}"] = _acc(params, cfg, x, y, ops)
+    print("\nTable 1 — activation quantization granularity (micro ViM)")
+    print(f"{'config':>24} {'Top-1':>8} {'Top-5':>8}")
+    for k, (t1, t5) in rows.items():
+        print(f"{k:>24} {t1 * 100:7.2f}% {t5 * 100:7.2f}%")
+    _save("table1", rows)
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Table 5: baseline vs proposed (H2 + pow2 + LUT) across model sizes
+# --------------------------------------------------------------------------
+
+def table5():
+    rows = {}
+    luts = _luts()
+    for name in ("micro_s", "micro", "micro_l"):
+        try:
+            params, cfg, x, y, cx = _load(name)
+        except FileNotFoundError:
+            print(f"  (skipping {name}: no checkpoint)", file=sys.stderr)
+            continue
+        calib = quant.Calibration().run(params, cx, cfg)
+        base = _acc(params, cfg, x, y)
+        ops = quant.QuantOps(
+            quant.QuantConfig(granularity="channel", pow2_scale=True,
+                              use_lut=True),
+            calib.scales("channel"), luts=luts)
+        prop = _acc(params, cfg, x, y, ops)
+        rows[name] = {"baseline": base, "proposed": prop,
+                      "top1_loss_pp": (base[0] - prop[0]) * 100}
+    print("\nTable 5 — baseline vs proposed")
+    print(f"{'model':>10} {'base T1':>9} {'base T5':>9} "
+          f"{'prop T1':>9} {'prop T5':>9} {'ΔT1 pp':>8}")
+    for k, r in rows.items():
+        print(f"{k:>10} {r['baseline'][0] * 100:8.2f}% "
+              f"{r['baseline'][1] * 100:8.2f}% {r['proposed'][0] * 100:8.2f}% "
+              f"{r['proposed'][1] * 100:8.2f}% {r['top1_loss_pp']:7.2f}")
+    _save("table5", rows)
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Fig 19: accuracy vs number of LUT entries
+# --------------------------------------------------------------------------
+
+def fig19(entry_sweep=(4, 8, 16, 32, 64)):
+    params, cfg, x, y, cx = _load("micro")
+    calib = quant.Calibration().run(params, cx, cfg)
+    scales = calib.scales("channel")
+    results = {f: {} for f in ("exp", "silu", "softplus")}
+    for func in results:
+        for n in entry_sweep:
+            entries = dict(lut.PAPER_ENTRIES)
+            entries[func] = n
+            luts = lut.LutSet.fit(entries=entries, gd_steps=120)
+            ops = quant.QuantOps(
+                quant.QuantConfig(use_lut=True), scales, luts=luts)
+            t1, t5 = _acc(params, cfg, x, y, ops)
+            results[func][n] = [t1, t5]
+            print(f"  fig19 {func} entries={n}: top1={t1 * 100:.2f}%")
+    _save("fig19", results)
+    return results
+
+
+# --------------------------------------------------------------------------
+# Fig 20: ablation Vanilla -> +H -> +H+S -> +H+S+L
+# --------------------------------------------------------------------------
+
+def fig20():
+    params, cfg, x, y, cx = _load("micro")
+    calib = quant.Calibration().run(params, cx, cfg)
+    scales = calib.scales("channel")
+    luts = _luts()
+    steps = {
+        "vanilla": None,
+        "H": quant.QuantConfig(pow2_scale=False, use_lut=False),
+        "H+S": quant.QuantConfig(pow2_scale=True, use_lut=False),
+        "H+S+L": quant.QuantConfig(pow2_scale=True, use_lut=True),
+    }
+    rows = {}
+    for name, qc in steps.items():
+        ops = None if qc is None else quant.QuantOps(
+            qc, scales, luts=luts if qc.use_lut else None)
+        rows[name] = _acc(params, cfg, x, y, ops)
+        print(f"  fig20 {name:6}: top1={rows[name][0] * 100:.2f}%")
+    _save("fig20", rows)
+    return rows
+
+
+# --------------------------------------------------------------------------
+# Fig 14(c,d,e): SFU input distributions + 99.9% ranges
+# --------------------------------------------------------------------------
+
+def fig14():
+    params, cfg, x, y, cx = _load("micro")
+    samples = {"silu": [], "exp": [], "softplus": []}
+
+    def sink(name, v):
+        if name.endswith((".u", ".silu_in")):
+            samples["silu"].append(np.asarray(v).ravel())
+        elif name.endswith(".exp_in"):
+            samples["exp"].append(np.asarray(v).ravel())
+        elif name.endswith(".softplus_in"):
+            samples["softplus"].append(np.asarray(v).ravel())
+
+    for im in cx[:8]:
+        M.forward(params, jnp.asarray(im), cfg, M.TapOps(sink))
+    flat = {k: np.concatenate(v) for k, v in samples.items()}
+    ranges = lut.profile_ranges(flat)
+    hists = {}
+    for k, v in flat.items():
+        h, edges = np.histogram(v, bins=64)
+        hists[k] = {"counts": h.tolist(), "edges": edges.tolist(),
+                    "range_99.9": list(ranges[k])}
+        print(f"  fig14 {k}: 99.9% of inputs in "
+              f"[{ranges[k][0]:.2f}, {ranges[k][1]:.2f}] "
+              f"(paper: {lut.PAPER_RANGES[k]})")
+    _save("fig14", hists)
+    return hists
+
+
+# --------------------------------------------------------------------------
+# Fig 15: weight vs activation magnitude over channels (encoder 0)
+# --------------------------------------------------------------------------
+
+def fig15():
+    params, cfg, x, y, cx = _load("micro")
+    w = np.abs(np.asarray(params["blocks"][0]["in_w"]))
+    acts = {}
+
+    def sink(name, v):
+        if name == "blk0.fwd.u":
+            acts["u"] = np.abs(np.asarray(v))
+
+    M.forward(params, jnp.asarray(cx[0]), cfg, M.TapOps(sink))
+    out = {
+        "weight_channel_max": w.max(axis=0).tolist(),
+        "weight_channel_mean": w.mean(axis=0).tolist(),
+        "act_channel_max": acts["u"].max(axis=0).tolist(),
+        "act_channel_mean": acts["u"].mean(axis=0).tolist(),
+    }
+    wcv = np.std(out["weight_channel_max"]) / np.mean(
+        out["weight_channel_max"])
+    acv = np.std(out["act_channel_max"]) / np.mean(out["act_channel_max"])
+    out["weight_cv"] = float(wcv)
+    out["act_cv"] = float(acv)
+    print(f"  fig15: channel-max coefficient of variation — "
+          f"weights {wcv:.3f} vs activations {acv:.3f} "
+          f"(paper: activations have outlier channels)")
+    _save("fig15", out)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Fig 16(a): histogram of dA scaling factors (pow2 clustering)
+# --------------------------------------------------------------------------
+
+def fig16():
+    params, cfg, x, y, cx = _load("micro")
+    calib = quant.Calibration().run(params, cx, cfg)
+    scales = calib.scales("channel")
+    all_sa = np.concatenate([
+        np.atleast_1d(v) for k, v in scales.items() if k.endswith(".dA")])
+    log2s = np.log2(all_sa)
+    frac = np.abs(log2s - np.round(log2s))
+    h, edges = np.histogram(log2s, bins=32)
+    out = {"log2_scales_hist": h.tolist(), "edges": edges.tolist(),
+           "mean_pow2_distance": float(frac.mean()),
+           "range": [float(log2s.min()), float(log2s.max())]}
+    print(f"  fig16: dA scales span 2^{log2s.min():.1f}..2^{log2s.max():.1f}, "
+          f"mean distance to nearest pow2 = {frac.mean():.3f} bits "
+          f"(paper: clustered near powers of two, 2^-9..2^-7)")
+    _save("fig16", out)
+    return out
+
+
+EXPERIMENTS = {
+    "table1": table1, "table5": table5, "fig14": fig14, "fig15": fig15,
+    "fig16": fig16, "fig19": fig19, "fig20": fig20,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="+", choices=list(EXPERIMENTS) + ["all"])
+    args = ap.parse_args()
+    names = list(EXPERIMENTS) if "all" in args.names else args.names
+    for n in names:
+        print(f"\n=== {n} ===")
+        EXPERIMENTS[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Pallas kernels (L1) and pure-jnp oracles for the Mamba-X reproduction."""
+
+from . import ref  # noqa: F401
+from .conv1d import causal_conv1d  # noqa: F401
+from .scan import selective_scan  # noqa: F401
+from .ssm import selective_ssm  # noqa: F401

@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: depthwise causal 1-D convolution.
+
+Vision Mamba applies a short (K=4) depthwise causal convolution per
+direction before the SSM parameter projections (paper Fig 3(a), step 4).
+On Mamba-X this runs on the VPU; here it is a Pallas kernel tiled over the
+hidden dimension, with the full (short) L axis resident per block — the
+K-1 halo is handled inside the block by shifting, so no inter-block
+communication is needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, K: int):
+    x = x_ref[...]            # (L, h_tile)
+    w = w_ref[...]            # (h_tile, K)
+    b = b_ref[...]            # (1, h_tile)
+    acc = jnp.zeros_like(x)
+    for k in range(K):
+        # tap k multiplies x shifted right by (K-1-k): causal window.
+        shift = K - 1 - k
+        if shift == 0:
+            xs = x
+        else:
+            xs = jnp.concatenate(
+                [jnp.zeros_like(x[:shift]), x[:-shift]], axis=0)
+        acc = acc + xs * w[None, :, k]
+    o_ref[...] = acc + b
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, *,
+                  h_tile: int | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """Depthwise causal conv. x: (L, H), w: (H, K), b: (H,) -> (L, H)."""
+    L, H = x.shape
+    K = w.shape[1]
+    if h_tile is None:
+        h_tile = min(H, 128)
+    pad_h = (-H) % h_tile
+    if pad_h:
+        x = jnp.pad(x, ((0, 0), (0, pad_h)))
+        w = jnp.pad(w, ((0, pad_h), (0, 0)))
+        b = jnp.pad(b, (0, pad_h))
+    Hp = H + pad_h
+    b2 = b.reshape(1, Hp)
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, K=K),
+        grid=(Hp // h_tile,),
+        in_specs=[
+            pl.BlockSpec((L, h_tile), lambda ih: (0, ih)),
+            pl.BlockSpec((h_tile, K), lambda ih: (ih, 0)),
+            pl.BlockSpec((1, h_tile), lambda ih: (0, ih)),
+        ],
+        out_specs=pl.BlockSpec((L, h_tile), lambda ih: (0, ih)),
+        out_shape=jax.ShapeDtypeStruct((L, Hp), x.dtype),
+        interpret=interpret,
+    )(x, w, b2)
+    return out[:, :H]

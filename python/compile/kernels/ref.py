@@ -1,0 +1,145 @@
+"""Pure-jnp reference oracles for the Mamba-X kernels.
+
+These are the CORRECTNESS ground truth. Every Pallas kernel in this package
+is tested against the functions here (pytest + hypothesis), and the rust
+fixed-point datapath is tested against golden vectors generated from the
+quantized variants.
+
+Conventions (match the paper's Fig 2(b) / Fig 3(b) notation):
+
+  dA  : exp(delta * A)              -- the paper's  P  inputs, shape (L, H, N)
+  dBu : delta * B * u               -- the paper's  Q  inputs, shape (L, H, N)
+  state_n = dA_n * state_{n-1} + dBu_n            (selective scan, Fig 2(b))
+  y_n     = sum_m C_{n,m} * state_{n,m} + D * u_n (output inner product)
+
+L = sequence length, H = hidden (inner) dimension, N = state dimension (m in
+the paper's figures). The scan is independent across (H, N) lanes; the
+sequential dependency is only along L.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_seq(dA: jax.Array, dBu: jax.Array) -> jax.Array:
+    """Sequential (lax.scan) selective scan. Shapes: (L, H, N) -> (L, H, N).
+
+    The literal recurrence from the paper's Fig 2(b); slowest but most
+    obviously correct. Used as the oracle of oracles.
+    """
+
+    def step(carry, inputs):
+        a, bu = inputs
+        state = a * carry + bu
+        return state, state
+
+    init = jnp.zeros(dA.shape[1:], dA.dtype)
+    _, states = jax.lax.scan(step, init, (dA, dBu))
+    return states
+
+
+def selective_scan_assoc(dA: jax.Array, dBu: jax.Array) -> jax.Array:
+    """Kogge-Stone-equivalent parallel scan via lax.associative_scan.
+
+    The combine rule is the paper's Fig 6(a): (P1,Q1) o (P2,Q2) =
+    (P1*P2, P2*Q1 + Q2). Differentiable; used on the training path.
+    """
+
+    def combine(left, right):
+        p1, q1 = left
+        p2, q2 = right
+        return p1 * p2, p2 * q1 + q2
+
+    _, states = jax.lax.associative_scan(combine, (dA, dBu), axis=0)
+    return states
+
+
+def ssm_output(states: jax.Array, C: jax.Array, D: jax.Array,
+               u: jax.Array) -> jax.Array:
+    """Step 3-4 of Fig 3(b): y_n = <C_n, state_n> + D * u_n.
+
+    states: (L, H, N), C: (L, N), D: (H,), u: (L, H) -> y: (L, H).
+    """
+    y = jnp.einsum("lhn,ln->lh", states, C)
+    return y + D[None, :] * u
+
+
+def selective_ssm_ref(u: jax.Array, delta: jax.Array, A: jax.Array,
+                      B: jax.Array, C: jax.Array, D: jax.Array,
+                      z: jax.Array | None = None) -> jax.Array:
+    """Full selective-SSM block oracle (Fig 3(b), steps 1-4).
+
+    u:     (L, H)   input activations
+    delta: (L, H)   softplus-ed timestep
+    A:     (H, N)   state matrix (negative real parts)
+    B:     (L, N)   input projection (time variant)
+    C:     (L, N)   output projection (time variant)
+    D:     (H,)     skip connection
+    z:     (L, H)   optional gate; output is y * silu(z) when given
+    returns (L, H)
+    """
+    dA = jnp.exp(delta[..., None] * A[None])            # (L, H, N)
+    dBu = (delta * u)[..., None] * B[:, None, :]        # (L, H, N)
+    states = selective_scan_seq(dA, dBu)
+    y = ssm_output(states, C, D, u)
+    if z is not None:
+        y = y * jax.nn.silu(z)
+    return y
+
+
+def chunked_scan_ref(dA: jax.Array, dBu: jax.Array, chunk: int) -> jax.Array:
+    """Reference for the SSA chunk-wise dataflow (Fig 11-13).
+
+    Splits L into `chunk`-sized pieces, scans each independently (what one
+    SSA does), then resolves inter-chunk carries sequentially (what the LISU
+    does). Equal (up to fp reassociation) to selective_scan_seq. Pads the
+    tail chunk with the identity element (P=1, Q=0).
+    """
+    L, H, N = dA.shape
+    pad = (-L) % chunk
+    if pad:
+        dA = jnp.concatenate([dA, jnp.ones((pad, H, N), dA.dtype)], axis=0)
+        dBu = jnp.concatenate([dBu, jnp.zeros((pad, H, N), dBu.dtype)], axis=0)
+    n_chunks = dA.shape[0] // chunk
+    dA_c = dA.reshape(n_chunks, chunk, H, N)
+    dBu_c = dBu.reshape(n_chunks, chunk, H, N)
+
+    # Per-chunk local scans (parallel across chunks — the SSAs).
+    def local(args):
+        a, bu = args
+        p, q = jax.lax.associative_scan(
+            lambda l, r: (l[0] * r[0], r[0] * l[1] + r[1]), (a, bu), axis=0)
+        return p, q
+
+    P, Q = jax.vmap(local)((dA_c, dBu_c))  # (n_chunks, chunk, H, N)
+
+    # LISU: sequential carry resolution across chunks.
+    def carry_step(h_prev, args):
+        p, q = args
+        states = q + p * h_prev[None]
+        return states[-1], states
+
+    init = jnp.zeros((H, N), dA.dtype)
+    _, states = jax.lax.scan(carry_step, init, (P, Q))
+    states = states.reshape(n_chunks * chunk, H, N)
+    return states[:L]
+
+
+def causal_conv1d_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal 1-D convolution. x: (L, H), w: (H, K), b: (H,)."""
+    L, H = x.shape
+    K = w.shape[1]
+    xp = jnp.pad(x, ((K - 1, 0), (0, 0)))
+    # out[l, h] = sum_k xp[l + k, h] * w[h, k]
+    windows = jnp.stack([xp[k:k + L] for k in range(K)], axis=-1)  # (L, H, K)
+    return jnp.einsum("lhk,hk->lh", windows, w) + b[None, :]
+
+
+def silu_ref(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus_ref(x):
+    return jax.nn.softplus(x)

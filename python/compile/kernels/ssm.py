@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: fused selective-SSM block.
+
+Fuses all four steps of the paper's Fig 3(b) in one kernel so the (L, H, N)
+state tensor is never materialized in HBM — the property the paper's fused
+CUDA kernel has on the GPU, and that the Mamba-X PPU preserves in hardware:
+
+  step 1  dA = exp(delta * A),  dBu = delta * B * u      (VPU + SFU)
+  step 2  selective scan over L                          (SSA)
+  step 3  y = <C, state> over N                          (PPU MAC array)
+  step 4  y = y + D*u ; y *= silu(z)                     (PPU)
+
+Unlike the GPU baseline — where the fusion *forces* the scan to run
+sequentially over the state dimension (paper §3.2, Fig 5) — the lane
+dimension here is (h_tile, N), so every state dimension scans in parallel,
+which is precisely the parallelism the SSA recovers in hardware.
+
+Grid = (H tiles, L chunks); the chunk axis iterates sequentially and carries
+the running state in a persistent output block (the LISU role).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .scan import _kogge_stone
+
+
+def _ssm_kernel(u_ref, delta_ref, A_ref, B_ref, C_ref, D_ref, z_ref,
+                y_ref, carry_ref, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    u = u_ref[...]            # (chunk, h_tile)
+    delta = delta_ref[...]    # (chunk, h_tile)
+    A = A_ref[...]            # (h_tile, N)
+    B = B_ref[...]            # (chunk, N)
+    C = C_ref[...]            # (chunk, N)
+    D = D_ref[...]            # (1, h_tile)
+    z = z_ref[...]            # (chunk, h_tile)
+
+    # Step 1 (VPU/SFU): discretize.
+    p = jnp.exp(delta[..., None] * A[None])                 # (chunk, h, N)
+    q = (delta * u)[..., None] * B[:, None, :]              # (chunk, h, N)
+
+    # Step 2 (SSA): chunk-local Kogge-Stone + LISU carry fold.
+    p, q = _kogge_stone(p, q, chunk)
+    states = q + p * carry_ref[...][None]
+    carry_ref[...] = states[-1]
+
+    # Step 3 (PPU MAC): contract the state dimension.
+    y = jnp.einsum("lhn,ln->lh", states, C,
+                   preferred_element_type=states.dtype)
+
+    # Step 4 (PPU): skip connection + gate.
+    y = y + D * u
+    y_ref[...] = y * (z * jax.nn.sigmoid(z))
+
+
+def selective_ssm(u: jax.Array, delta: jax.Array, A: jax.Array,
+                  B: jax.Array, C: jax.Array, D: jax.Array, z: jax.Array,
+                  *, chunk: int = 16, h_tile: int | None = None,
+                  interpret: bool = True) -> jax.Array:
+    """Fused selective SSM. See kernels.ref.selective_ssm_ref for semantics.
+
+    u, delta, z: (L, H); A: (H, N); B, C: (L, N); D: (H,) -> y: (L, H).
+    """
+    if chunk & (chunk - 1):
+        raise ValueError(f"chunk must be a power of two, got {chunk}")
+    L, H = u.shape
+    N = A.shape[1]
+    if h_tile is None:
+        h_tile = min(H, 64)
+
+    pad_l = (-L) % chunk
+    pad_h = (-H) % h_tile
+    if pad_l or pad_h:
+        # Identity padding: delta=0 => dA=1 on padded rows, dBu=0; padded
+        # columns of H never read back.
+        u = jnp.pad(u, ((0, pad_l), (0, pad_h)))
+        delta = jnp.pad(delta, ((0, pad_l), (0, pad_h)))
+        z = jnp.pad(z, ((0, pad_l), (0, pad_h)))
+        A = jnp.pad(A, ((0, pad_h), (0, 0)))
+        B = jnp.pad(B, ((0, pad_l), (0, 0)))
+        C = jnp.pad(C, ((0, pad_l), (0, 0)))
+        D = jnp.pad(D, (0, pad_h))
+    Lp, Hp = L + pad_l, H + pad_h
+    D2 = D.reshape(1, Hp)
+    grid = (Hp // h_tile, Lp // chunk)
+
+    y, _carry = pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, h_tile), lambda ih, ic: (ic, ih)),   # u
+            pl.BlockSpec((chunk, h_tile), lambda ih, ic: (ic, ih)),   # delta
+            pl.BlockSpec((h_tile, N), lambda ih, ic: (ih, 0)),        # A
+            pl.BlockSpec((chunk, N), lambda ih, ic: (ic, 0)),         # B
+            pl.BlockSpec((chunk, N), lambda ih, ic: (ic, 0)),         # C
+            pl.BlockSpec((1, h_tile), lambda ih, ic: (0, ih)),        # D
+            pl.BlockSpec((chunk, h_tile), lambda ih, ic: (ic, ih)),   # z
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk, h_tile), lambda ih, ic: (ic, ih)),   # y
+            pl.BlockSpec((h_tile, N), lambda ih, ic: (ih, 0)),        # carry
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Lp, Hp), u.dtype),
+            jax.ShapeDtypeStruct((Hp, N), u.dtype),
+        ],
+        interpret=interpret,
+    )(u, delta, A, B, C, D2, z)
+    return y[:L, :H]

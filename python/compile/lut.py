@@ -1,0 +1,177 @@
+"""LUT-based SFU: profile-guided piecewise-linear approximation — paper §4.3.
+
+Approximates SiLU, exp and softplus with non-uniform piecewise-linear
+segments. Breakpoints are (a) restricted to the input range that covers
+99.9% of profiled activations (paper Fig 14(c-e)), and (b) refined by
+gradient descent on the profile-weighted squared error (the Flex-SFU
+method the paper follows).
+
+The fitted tables are exported to `artifacts/sfu_luts.json`; the rust SFU
+model (`rust/src/sim/sfu.rs`) loads the same tables and evaluates them with
+the binary-search ADU + linear-interp CU of paper Fig 14(b), so python and
+rust agree bit-for-bit at f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FUNCS = {
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "exp": jnp.exp,
+    "softplus": jax.nn.softplus,
+}
+
+# Paper Fig 14(c,d,e): ranges containing 99.9% of inputs during inference.
+PAPER_RANGES = {
+    "silu": (-8.7, 10.2),
+    "exp": (-8.5, 0.0),
+    "softplus": (-17.6, 2.7),
+}
+
+# Paper §4.3: 16 entries suffice for exp; 32 for SiLU and softplus.
+PAPER_ENTRIES = {"silu": 32, "exp": 16, "softplus": 32}
+
+
+@dataclasses.dataclass
+class Lut:
+    """One fitted function: sorted breakpoints + per-segment (a, b)."""
+    name: str
+    bps: np.ndarray      # (E+1,) segment boundaries, sorted
+    a: np.ndarray        # (E,) slopes
+    b: np.ndarray        # (E,) intercepts
+
+    def eval(self, x):
+        """ADU (binary search segment lookup) + CU (a*x + b), saturating to
+        the end segments outside the fitted range."""
+        xs = jnp.asarray(x)
+        idx = jnp.clip(jnp.searchsorted(jnp.asarray(self.bps), xs,
+                                        side="right") - 1,
+                       0, len(self.a) - 1)
+        return jnp.asarray(self.a)[idx] * xs + jnp.asarray(self.b)[idx]
+
+    def to_json(self) -> dict:
+        return {"name": self.name,
+                "bps": [float(v) for v in self.bps],
+                "a": [float(v) for v in self.a],
+                "b": [float(v) for v in self.b]}
+
+    @staticmethod
+    def from_json(d: dict) -> "Lut":
+        return Lut(d["name"], np.asarray(d["bps"], np.float32),
+                   np.asarray(d["a"], np.float32),
+                   np.asarray(d["b"], np.float32))
+
+
+def _coeffs(fn, bps: jnp.ndarray):
+    """Interpolating coefficients: segment i connects (bp_i, f(bp_i)) and
+    (bp_{i+1}, f(bp_{i+1}))."""
+    f = fn(bps)
+    a = (f[1:] - f[:-1]) / (bps[1:] - bps[:-1])
+    b = f[:-1] - a * bps[:-1]
+    return a, b
+
+
+def fit_lut(name: str, entries: int | None = None,
+            rng_range: tuple[float, float] | None = None,
+            samples: np.ndarray | None = None,
+            gd_steps: int = 300, lr: float = 2e-2) -> Lut:
+    """Fit `entries` PWL segments to FUNCS[name] over the profiled range.
+
+    samples: profiled activation inputs (Fig 14 histograms); used as the
+    error weighting. Falls back to uniform samples over the range.
+    """
+    fn = FUNCS[name]
+    entries = entries or PAPER_ENTRIES[name]
+    lo, hi = rng_range or PAPER_RANGES[name]
+    if samples is None:
+        xs = jnp.linspace(lo, hi, 4096)
+    else:
+        xs = jnp.clip(jnp.asarray(samples, jnp.float32), lo, hi)
+    ys = fn(xs)
+
+    # Breakpoints parametrized as softmax segment widths: sorted by
+    # construction, strictly inside [lo, hi], differentiable (no jnp.sort
+    # on the GD path).
+    def bps_from(w):
+        widths = jax.nn.softmax(w)
+        cum = jnp.cumsum(widths)[:-1]
+        return jnp.concatenate([jnp.array([lo]), lo + cum * (hi - lo),
+                                jnp.array([hi])])
+
+    w0 = jnp.zeros(entries)  # uniform init
+
+    def loss(w):
+        bps = bps_from(w)
+        a, b = _coeffs(fn, bps)
+        idx = jnp.clip(jnp.searchsorted(bps, xs, side="right") - 1,
+                       0, entries - 1)
+        pred = a[idx] * xs + b[idx]
+        return jnp.mean((pred - ys) ** 2)
+
+    # Adam on the width logits (heuristically range-restricted, §4.3).
+    grad = jax.jit(jax.grad(loss))
+    m = v = jnp.zeros_like(w0)
+    w = w0
+    for t in range(1, gd_steps + 1):
+        g = grad(w)
+        m = 0.9 * m + 0.1 * g
+        v = 0.999 * v + 0.001 * g * g
+        mh, vh = m / (1 - 0.9 ** t), v / (1 - 0.999 ** t)
+        w = w - lr * mh / (jnp.sqrt(vh) + 1e-8)
+
+    if float(loss(w)) > float(loss(w0)):
+        w = w0  # GD must never make things worse
+    bps = np.asarray(bps_from(w), np.float32)
+    a, b = _coeffs(fn, jnp.asarray(bps))
+    return Lut(name, bps, np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+class LutSet:
+    """The SFU's three fitted tables, as used by QuantOps (L toggle)."""
+
+    def __init__(self, luts: dict[str, Lut]):
+        self.luts = luts
+
+    @staticmethod
+    def fit(entries: dict[str, int] | None = None,
+            samples: dict[str, np.ndarray] | None = None,
+            gd_steps: int = 300) -> "LutSet":
+        entries = entries or PAPER_ENTRIES
+        return LutSet({
+            name: fit_lut(name, entries=entries.get(name),
+                          samples=(samples or {}).get(name),
+                          gd_steps=gd_steps)
+            for name in FUNCS
+        })
+
+    def eval(self, name: str, x):
+        return self.luts[name].eval(x)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({k: v.to_json() for k, v in self.luts.items()},
+                      f, indent=1)
+
+    @staticmethod
+    def load(path: str) -> "LutSet":
+        with open(path) as f:
+            d = json.load(f)
+        return LutSet({k: Lut.from_json(v) for k, v in d.items()})
+
+
+def profile_ranges(samples: dict[str, np.ndarray],
+                   coverage: float = 0.999) -> dict[str, tuple[float, float]]:
+    """Fig 14(c-e): the [lo, hi] covering `coverage` of profiled inputs."""
+    out = {}
+    q = (1 - coverage) / 2
+    for name, xs in samples.items():
+        xs = np.asarray(xs).ravel()
+        out[name] = (float(np.quantile(xs, q)),
+                     float(np.quantile(xs, 1 - q)))
+    return out

@@ -1,0 +1,300 @@
+"""Layer-2: Vision Mamba (Vim) in JAX, calling the L1 Pallas kernels.
+
+Implements the architecture of paper Fig 3(a): patch embedding + middle
+class token + position embedding, N bidirectional Vim encoder blocks
+(forward and backward selective-SSM paths), final norm and linear head.
+
+Model configurations follow paper Table 3 (Tiny/Small/Base: 24 blocks,
+hidden 192/384/768, state 16) plus a `micro` config used to *train* a model
+from scratch for the accuracy experiments (we have no ImageNet; see
+DESIGN.md substitutions).
+
+All compute routes through an `Ops` object so the H2-quantization and
+LUT-SFU ablations (paper Fig 20, Tables 1/5) swap numerics without forking
+the model code: `ExactOps` is the FP32 baseline; `compile.quant.QuantOps`
+fake-quantizes weights/activations and runs the bit-accurate INT8 scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.conv1d import causal_conv1d
+from .kernels.scan import selective_scan
+from .kernels.ssm import selective_ssm
+
+
+# --------------------------------------------------------------------------
+# Configuration (paper Table 3)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class VimConfig:
+    name: str
+    d_model: int            # hidden dimension (Table 3)
+    n_blocks: int           # encoder blocks (Table 3)
+    d_state: int            # state dimension N (Table 3)
+    expand: int = 2         # inner dim E = expand * d_model
+    conv_k: int = 4         # depthwise conv width
+    patch: int = 16         # patch size
+    img: int = 224          # input resolution
+    in_ch: int = 3
+    n_classes: int = 1000
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, self.d_model // 16)
+
+    @property
+    def n_patches(self) -> int:
+        return (self.img // self.patch) ** 2
+
+    @property
+    def seq_len(self) -> int:
+        return self.n_patches + 1  # + middle class token
+
+    def with_img(self, img: int) -> "VimConfig":
+        return dataclasses.replace(self, img=img)
+
+
+CONFIGS = {
+    "tiny": VimConfig("tiny", d_model=192, n_blocks=24, d_state=16),
+    "small": VimConfig("small", d_model=384, n_blocks=24, d_state=16),
+    "base": VimConfig("base", d_model=768, n_blocks=24, d_state=16),
+    # Trainable-on-CPU configs for the accuracy experiments (synthetic
+    # data). micro_s/micro/micro_l are the Tiny/Small/Base analogs of the
+    # paper's Table 5 (scaled to what trains in minutes on CPU).
+    "micro_s": VimConfig("micro_s", d_model=48, n_blocks=3, d_state=8,
+                         patch=4, img=32, in_ch=1, n_classes=10),
+    "micro": VimConfig("micro", d_model=64, n_blocks=4, d_state=8,
+                       patch=4, img=32, in_ch=1, n_classes=10),
+    "micro_l": VimConfig("micro_l", d_model=96, n_blocks=6, d_state=8,
+                         patch=4, img=32, in_ch=1, n_classes=10),
+}
+
+
+# --------------------------------------------------------------------------
+# Ops abstraction: exact vs quantized numerics
+# --------------------------------------------------------------------------
+
+class ExactOps:
+    """FP32 baseline numerics (stands in for the paper's FP16-AMP baseline)."""
+
+    def linear(self, name: str, x: jax.Array, w: jax.Array,
+               b: jax.Array | None) -> jax.Array:
+        y = x @ w
+        return y if b is None else y + b
+
+    def scan(self, name: str, dA: jax.Array, dBu: jax.Array) -> jax.Array:
+        return ref.selective_scan_assoc(dA, dBu)
+
+    def silu(self, x: jax.Array) -> jax.Array:
+        return x * jax.nn.sigmoid(x)
+
+    def exp(self, x: jax.Array) -> jax.Array:
+        return jnp.exp(x)
+
+    def softplus(self, x: jax.Array) -> jax.Array:
+        return jax.nn.softplus(x)
+
+    def tap(self, name: str, x: jax.Array) -> None:
+        """Observation hook (calibration / distribution profiling)."""
+
+    def ssm(self, tag: str, u, delta, A, B, C, D, z) -> jax.Array:
+        """Steps 1-4 of Fig 3(b) + gate. Overridable as one fused unit."""
+        dA = self.exp(delta[..., None] * A[None])         # (L, E, N)
+        dBu = (delta * u)[..., None] * B[:, None, :]      # (L, E, N)
+        self.tap(f"{tag}.dA", dA)
+        self.tap(f"{tag}.dBu", dBu)
+        states = self.scan(tag, dA, dBu)
+        y = ref.ssm_output(states, C, D, u)
+        self.tap(f"{tag}.silu_in", z)
+        return y * self.silu(z)
+
+
+class PallasOps(ExactOps):
+    """Exact numerics with the hot path routed through the L1 Pallas kernels.
+
+    fused=True uses the single fused selective-SSM kernel (state tensor never
+    materialized); fused=False uses the standalone scan kernel.
+    """
+
+    def __init__(self, chunk: int = 16, fused: bool = True,
+                 h_tile: int | None = None):
+        self.chunk = chunk
+        self.fused = fused
+        self.h_tile = h_tile
+
+    def scan(self, name, dA, dBu):
+        return selective_scan(dA, dBu, chunk=self.chunk, h_tile=self.h_tile)
+
+    def ssm(self, tag, u, delta, A, B, C, D, z):
+        if not self.fused:
+            return super().ssm(tag, u, delta, A, B, C, D, z)
+        return selective_ssm(u, delta, A, B, C, D, z, chunk=self.chunk,
+                             h_tile=self.h_tile)
+
+
+class TapOps(ExactOps):
+    """Exact numerics that records activations by name (calibration path)."""
+
+    def __init__(self, sink: Callable[[str, jax.Array], None]):
+        self._sink = sink
+
+    def tap(self, name, x):
+        self._sink(name, jnp.asarray(x))
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def _dense_init(rng, fan_in, shape):
+    return jax.random.normal(rng, shape) * (1.0 / math.sqrt(fan_in))
+
+
+def init_block_params(rng: jax.Array, cfg: VimConfig) -> dict:
+    """One bidirectional Vim encoder block."""
+    E, N, R, K, D = cfg.d_inner, cfg.d_state, cfg.dt_rank, cfg.conv_k, cfg.d_model
+    ks = jax.random.split(rng, 16)
+    p: dict = {
+        "norm_g": jnp.ones((D,)),
+        "norm_b": jnp.zeros((D,)),
+        # in-proj produces x and z, each E wide.
+        "in_w": _dense_init(ks[0], D, (D, 2 * E)),
+        "in_b": jnp.zeros((2 * E,)),
+        "out_w": _dense_init(ks[1], E, (E, D)),
+        "out_b": jnp.zeros((D,)),
+    }
+    for i, d in enumerate(("fwd", "bwd")):
+        kd = jax.random.split(ks[2 + i], 8)
+        # dt bias init per Mamba: softplus^-1 of dt in [1e-3, 1e-1].
+        dt = jnp.exp(jax.random.uniform(kd[5], (E,)) *
+                     (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+        p[d] = {
+            "conv_w": _dense_init(kd[0], K, (E, K)),
+            "conv_b": jnp.zeros((E,)),
+            # x-proj: E -> dt_rank + 2N (dt_raw, B, C).
+            "xproj_w": _dense_init(kd[1], E, (E, R + 2 * N)),
+            "dt_w": _dense_init(kd[2], R, (R, E)),
+            "dt_b": dt_bias,
+            # A = -exp(A_log), HiPPO-ish init: A_log = log(1..N).
+            "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                      (E, 1))),
+            "D": jnp.ones((E,)),
+        }
+    return p
+
+
+def init_params(rng: jax.Array, cfg: VimConfig) -> dict:
+    D = cfg.d_model
+    patch_dim = cfg.patch * cfg.patch * cfg.in_ch
+    ks = jax.random.split(rng, cfg.n_blocks + 4)
+    return {
+        "patch_w": _dense_init(ks[0], patch_dim, (patch_dim, D)),
+        "patch_b": jnp.zeros((D,)),
+        "cls": jax.random.normal(ks[1], (1, D)) * 0.02,
+        "pos": jax.random.normal(ks[2], (cfg.seq_len, D)) * 0.02,
+        "blocks": [init_block_params(ks[3 + i], cfg)
+                   for i in range(cfg.n_blocks)],
+        "head_norm_g": jnp.ones((D,)),
+        "head_norm_b": jnp.zeros((D,)),
+        "head_w": _dense_init(ks[-1], D, (D, cfg.n_classes)),
+        "head_b": jnp.zeros((cfg.n_classes,)),
+    }
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def patchify(img: jax.Array, cfg: VimConfig) -> jax.Array:
+    """(H, W, C) -> (n_patches, patch*patch*C), row-major patches."""
+    P = cfg.patch
+    H = W = cfg.img
+    x = img.reshape(H // P, P, W // P, P, cfg.in_ch)
+    x = x.transpose(0, 2, 1, 3, 4)
+    return x.reshape((H // P) * (W // P), P * P * cfg.in_ch)
+
+
+def _ssm_path(p: dict, x: jax.Array, z: jax.Array, cfg: VimConfig,
+              ops: ExactOps, tag: str) -> jax.Array:
+    """One direction of the bidirectional block: conv -> proj -> scan."""
+    N, R = cfg.d_state, cfg.dt_rank
+    u = causal_conv1d(x, p["conv_w"], p["conv_b"]) \
+        if isinstance(ops, PallasOps) else ref.causal_conv1d_ref(
+            x, p["conv_w"], p["conv_b"])
+    ops.tap(f"{tag}.conv_out", u)
+    u = ops.silu(u)
+    ops.tap(f"{tag}.u", u)
+
+    xdbc = ops.linear(f"{tag}.xproj", u, p["xproj_w"], None)
+    dt_raw, B, C = jnp.split(xdbc, [R, R + N], axis=-1)
+    delta_pre = ops.linear(f"{tag}.dtproj", dt_raw, p["dt_w"], p["dt_b"])
+    ops.tap(f"{tag}.softplus_in", delta_pre)
+    delta = ops.softplus(delta_pre)
+
+    # A = -exp(A_log) is an offline *parameter* transformation (not an SFU
+    # op at inference time), so it always uses exact exp.
+    A = -jnp.exp(p["A_log"])
+    ops.tap(f"{tag}.exp_in", delta[..., None] * A[None])
+    return ops.ssm(tag, u, delta, A, B, C, p["D"], z)
+
+
+def vim_block(p: dict, x: jax.Array, cfg: VimConfig, ops: ExactOps,
+              tag: str) -> jax.Array:
+    """Bidirectional Vim encoder block (paper Fig 3(a), steps 3-5)."""
+    E = cfg.d_inner
+    h = layer_norm(x, p["norm_g"], p["norm_b"])
+    ops.tap(f"{tag}.in_act", h)
+    xz = ops.linear(f"{tag}.inproj", h, p["in_w"], p["in_b"])
+    xi, z = xz[:, :E], xz[:, E:]
+
+    y_f = _ssm_path(p["fwd"], xi, z, cfg, ops, f"{tag}.fwd")
+    y_b = _ssm_path(p["bwd"], xi[::-1], z[::-1], cfg, ops, f"{tag}.bwd")[::-1]
+
+    y = ops.linear(f"{tag}.outproj", y_f + y_b, p["out_w"], p["out_b"])
+    return x + y
+
+
+def forward(params: dict, img: jax.Array, cfg: VimConfig,
+            ops: ExactOps | None = None) -> jax.Array:
+    """Single-image forward: (H, W, C) -> (n_classes,) logits."""
+    ops = ops or ExactOps()
+    tok = ops.linear("patch", patchify(img, cfg),
+                     params["patch_w"], params["patch_b"])
+    mid = tok.shape[0] // 2
+    x = jnp.concatenate([tok[:mid], params["cls"], tok[mid:]], axis=0)
+    x = x + params["pos"]
+    for i, bp in enumerate(params["blocks"]):
+        x = vim_block(bp, x, cfg, ops, f"blk{i}")
+    x = layer_norm(x, params["head_norm_g"], params["head_norm_b"])
+    cls = x[mid]
+    return ops.linear("head", cls, params["head_w"], params["head_b"])
+
+
+def forward_batch(params: dict, imgs: jax.Array, cfg: VimConfig,
+                  ops: ExactOps | None = None) -> jax.Array:
+    return jax.vmap(lambda im: forward(params, im, cfg, ops))(imgs)

@@ -1,0 +1,266 @@
+"""H2 (Hybrid, Hardware-friendly) quantization — paper §4.4.
+
+Three independently toggleable pieces (the paper's Fig 20 ablation axes):
+
+  H — hybrid quantization: INT8 weights at *tensor* granularity, INT8
+      activations in the selective-SSM block at *channel* granularity
+      (per hidden-dim channel), with scales calibrated offline (static PTQ,
+      Eq. (1)).
+  S — hardware-friendly scale approximation: round the dA scale to the
+      nearest power of two so the SPE's rescale multiply becomes a shift
+      (paper Fig 16). The integer scan here reproduces the SPE datapath
+      *bit-exactly* (the rust `quant::spe` module replays the same golden
+      vectors): INT8 inputs, state held with 2 extra fractional bits
+      (paper §4.2), round-half-away-from-zero everywhere.
+  L — LUT-based SFU for SiLU / exp / softplus (see compile.lut).
+
+Granularity ablation for Table 1 is `granularity="tensor" | "channel"`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels import ref
+
+QMAX = 127  # symmetric INT8
+
+
+# --------------------------------------------------------------------------
+# Primitives (mirrored bit-exactly by rust/src/quant/)
+# --------------------------------------------------------------------------
+
+def round_half_away(x):
+    """round-half-away-from-zero — the paper's ⌈·⌋ operator."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def scale_for(xmax, bits: int = 8):
+    """Eq. (1): s = X_max / (2^(b-1) - 1), floored away from zero."""
+    return jnp.maximum(xmax, 1e-12) / (2 ** (bits - 1) - 1)
+
+
+def quantize(x, s, qmax: int = QMAX):
+    return jnp.clip(round_half_away(x / s), -qmax, qmax)
+
+
+def pow2_round(s):
+    """Round scale to nearest power of two (paper Fig 16(b))."""
+    return jnp.exp2(round_half_away(jnp.log2(jnp.maximum(s, 1e-30))))
+
+
+def pow2_shift(s) -> np.ndarray:
+    """The right-shift amount k with s ≈ 2^-k (k may be negative)."""
+    return np.asarray(-round_half_away(jnp.log2(np.maximum(s, 1e-30))),
+                      np.int32)
+
+
+# --------------------------------------------------------------------------
+# Bit-exact integer SPE scan (paper Fig 11, step 3 rescale + Fig 16(b))
+# --------------------------------------------------------------------------
+
+FRAC_BITS = 2        # "2 extra fractional bits" for the intermediate state
+STATE_SAT = 2 ** 31 - 1
+
+
+def _rshift_round(x: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """Arithmetic shift by per-channel k with round-half-away, on int64.
+
+    x: (H, N), k: (H,). k <= 0 means a left shift (scale >= 1)."""
+    k = k[:, None].astype(np.int64)
+    kp = np.maximum(k, 0)
+    half = np.where(kp > 0, np.int64(1) << np.maximum(kp - 1, 0),
+                    np.int64(0))
+    mag = (np.abs(x) + half) >> kp
+    right = np.where(x >= 0, mag, -mag)
+    left = x << np.maximum(-k, 0)
+    return np.where(k > 0, right, left)
+
+
+def spe_scan_int(P: np.ndarray, Q: np.ndarray, shift_a: np.ndarray,
+                 sa_float: np.ndarray | None = None) -> np.ndarray:
+    """Integer selective scan exactly as the SPE datapath computes it.
+
+    P, Q          : int8-valued int64 arrays, shape (L, H, N)
+    shift_a       : per-H right-shift amounts (pow2-approximated s_dA)
+    sa_float      : if given, use the exact float rescale instead of shifts
+                    (the ablation *without* S — "expensive multiplication")
+
+    Returns the state sequence as int64 with FRAC_BITS fractional bits at
+    scale s_Q (i.e. real value = out * s_Q / 2^FRAC_BITS).
+    """
+    L, H, N = P.shape
+    state = np.zeros((H, N), np.int64)
+    out = np.empty((L, H, N), np.int64)
+    shift_a = np.asarray(shift_a, np.int64)
+    for n in range(L):
+        prod = P[n] * state  # int8 x state
+        if sa_float is None:
+            resc = _rshift_round(prod, shift_a)
+        else:
+            f = prod.astype(np.float64) * sa_float[:, None]
+            resc = (np.sign(f) * np.floor(np.abs(f) + 0.5)).astype(np.int64)
+        state = resc + (Q[n] << FRAC_BITS)
+        np.clip(state, -STATE_SAT, STATE_SAT, out=state)
+        out[n] = state
+    return out
+
+
+# --------------------------------------------------------------------------
+# Calibration (static PTQ, paper §2.3 / §4.4)
+# --------------------------------------------------------------------------
+
+class CalibOps(M.TapOps):
+    """TapOps that additionally records every linear layer's input
+    activation (as ``<name>.in``) — the tensors H2 quantizes at runtime."""
+
+    def linear(self, name, x, w, b):
+        self._sink(f"{name}.in", x)
+        return super().linear(name, x, w, b)
+
+
+class Calibration:
+    """Accumulates per-tap abs-max statistics over calibration images.
+
+    For every tapped activation we track both the tensor-granularity max and
+    the channel-granularity max along the last ("hidden") axis, so either
+    granularity can be materialized afterwards (Table 1)."""
+
+    def __init__(self):
+        self.tensor_max: dict[str, float] = {}
+        self.channel_max: dict[str, np.ndarray] = {}
+
+    def observe(self, name: str, x) -> None:
+        a = np.abs(np.asarray(x, np.float32))
+        if a.ndim >= 2 and name.endswith((".dA", ".dBu")):
+            # scan inputs: channel = hidden dim = axis -2 of (L, H, N)
+            cm = a.max(axis=(0, a.ndim - 1))
+        else:
+            cm = a.reshape(-1, a.shape[-1]).max(axis=0)
+        t = float(a.max()) if a.size else 0.0
+        self.tensor_max[name] = max(self.tensor_max.get(name, 0.0), t)
+        if name in self.channel_max:
+            np.maximum(self.channel_max[name], cm, out=self.channel_max[name])
+        else:
+            self.channel_max[name] = cm
+
+    def run(self, params, images, cfg: M.VimConfig) -> "Calibration":
+        ops = CalibOps(self.observe)
+        for img in images:
+            M.forward(params, jnp.asarray(img), cfg, ops)
+        return self
+
+    def scales(self, granularity: str, bits: int = 8) -> dict[str, np.ndarray]:
+        if granularity == "tensor":
+            return {k: np.asarray(scale_for(v, bits), np.float32)
+                    for k, v in self.tensor_max.items()}
+        if granularity == "channel":
+            return {k: np.asarray(scale_for(jnp.asarray(v), bits), np.float32)
+                    for k, v in self.channel_max.items()}
+        raise ValueError(granularity)
+
+
+# --------------------------------------------------------------------------
+# QuantOps: the model's numerics under H2 quantization
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QuantConfig:
+    granularity: str = "channel"     # activation granularity (Table 1 axis)
+    pow2_scale: bool = True          # S toggle
+    use_lut: bool = False            # L toggle (needs luts=)
+    quant_weights: bool = True
+    quant_acts: bool = True
+    bits: int = 8                    # activation bit width
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+
+class QuantOps(M.ExactOps):
+    """Fake-quant weights/activations + bit-exact integer scan.
+
+    Weights: tensor-granularity INT8 (fake-quant, computed on the fly —
+    weights are static so this equals precomputation).
+    Scan inputs dA / dBu: channel-granularity INT8 (or tensor, for the
+    Table 1 ablation) using *calibrated* static scales, then the integer
+    SPE datapath, then dequantization.
+    Non-linearities: optional LUT approximation (compile.lut.LutSet).
+    """
+
+    def __init__(self, qcfg: QuantConfig, scales: dict[str, np.ndarray],
+                 luts=None):
+        self.qcfg = qcfg
+        self.scales = scales
+        self.luts = luts
+        if qcfg.use_lut and luts is None:
+            raise ValueError("use_lut=True requires luts")
+
+    # -- linear layers: weight PTQ (tensor gran) + activation fake-quant --
+    def linear(self, name, x, w, b):
+        if self.qcfg.quant_acts:
+            # Input activations at calibrated static scales: per-channel
+            # (foldable into the weight rows) or per-tensor (Table 1 axis).
+            s = self.scales.get(f"{name}.in")
+            if s is not None:
+                s = jnp.asarray(s)
+                x = quantize(x, s, self.qcfg.qmax) * s
+        if self.qcfg.quant_weights:
+            sw = scale_for(jnp.max(jnp.abs(w)))
+            w = quantize(w, sw) * sw
+        y = x @ w
+        return y if b is None else y + b
+
+    # -- non-linearities ---------------------------------------------------
+    def silu(self, x):
+        if self.qcfg.use_lut:
+            return self.luts.eval("silu", x)
+        return super().silu(x)
+
+    def exp(self, x):
+        if self.qcfg.use_lut:
+            return self.luts.eval("exp", x)
+        return super().exp(x)
+
+    def softplus(self, x):
+        if self.qcfg.use_lut:
+            return self.luts.eval("softplus", x)
+        return super().softplus(x)
+
+    # -- the scan: bit-exact integer SPE datapath --------------------------
+    def _scale(self, name) -> np.ndarray:
+        if name not in self.scales:
+            raise KeyError(f"no calibrated scale for {name!r}")
+        return self.scales[name]
+
+    def scan(self, name, dA, dBu):
+        if not self.qcfg.quant_acts:
+            return ref.selective_scan_assoc(dA, dBu)
+        L, H, N = dA.shape
+        sa = np.atleast_1d(self._scale(f"{name}.dA"))
+        sq = np.atleast_1d(self._scale(f"{name}.dBu"))
+        if sa.shape[0] == 1:  # tensor granularity: broadcast over H
+            sa = np.repeat(sa, H)
+            sq = np.repeat(sq, H)
+        if self.qcfg.pow2_scale:
+            shift = pow2_shift(sa)
+            sa_eff, sa_float = np.exp2(-shift.astype(np.float64)), None
+        else:
+            shift = np.zeros(H, np.int32)
+            sa_eff, sa_float = sa.astype(np.float64), sa.astype(np.float64)
+        qm = self.qcfg.qmax
+        P = np.asarray(quantize(dA, jnp.asarray(sa_eff if self.qcfg.pow2_scale
+                                                else sa)[None, :, None], qm),
+                       np.int64)
+        Q = np.asarray(quantize(dBu, jnp.asarray(sq)[None, :, None], qm),
+                       np.int64)
+        states_q = spe_scan_int(P, Q, shift, sa_float)
+        states = states_q.astype(np.float32) * \
+            (sq.astype(np.float32)[None, :, None] / (1 << FRAC_BITS))
+        return jnp.asarray(states)

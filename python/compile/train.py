@@ -1,0 +1,165 @@
+"""Train micro Vision Mamba models on the synthetic shapes dataset.
+
+This is the build-time substitute for the paper's pretrained ImageNet Vim
+checkpoints (DESIGN.md substitution table): the accuracy experiments
+(Tables 1/5, Figs 19/20) need a model whose accuracy is meaningful, so we
+train the same architecture, scaled down, from scratch in JAX. The training
+path uses the differentiable `lax.associative_scan` oracle; the Pallas
+kernel (inference path) is verified equal to it by the kernel tests.
+
+Usage:  python -m compile.train [--model micro] [--steps 400] [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from . import model as M
+
+
+def loss_fn(params, imgs, labels, cfg):
+    logits = M.forward_batch(params, imgs, cfg)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll, logits
+
+
+def make_update(cfg, lr=1e-3):
+    @jax.jit
+    def update(params, opt, imgs, labels, step):
+        (nll, logits), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, imgs, labels, cfg)
+        m, v = opt
+        m = jax.tree.map(lambda a, g: 0.9 * a + 0.1 * g, m, grads)
+        v = jax.tree.map(lambda a, g: 0.999 * a + 0.001 * g * g, v, grads)
+        t = step + 1
+        def upd(p, mi, vi):
+            mh = mi / (1 - 0.9 ** t)
+            vh = vi / (1 - 0.999 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        params = jax.tree.map(upd, params, m, v)
+        acc = (jnp.argmax(logits, -1) == labels).mean()
+        return params, (m, v), nll, acc
+    return update
+
+
+def evaluate(params, cfg, imgs, labels, batch=64, ops=None):
+    """Top-1 / top-5 accuracy over a dataset.
+
+    ops=None runs the jitted FP32 baseline batched; with ops (e.g. QuantOps,
+    whose integer scan is host-side numpy and cannot be traced) images are
+    evaluated one at a time in eager mode."""
+    top1 = top5 = 0
+    if ops is None:
+        fwd = jax.jit(lambda b: M.forward_batch(params, b, cfg))
+        chunks = [(jnp.asarray(imgs[i:i + batch]), labels[i:i + batch])
+                  for i in range(0, len(imgs), batch)]
+        outs = [(np.asarray(fwd(bi)), bl) for bi, bl in chunks]
+    else:
+        outs = [(np.asarray(M.forward(params, jnp.asarray(im), cfg,
+                                      ops))[None], labels[i:i + 1])
+                for i, im in enumerate(imgs)]
+    for logits, bl in outs:
+        order = np.argsort(-logits, axis=1)
+        top1 += int((order[:, 0] == bl).sum())
+        top5 += int((order[:, :5] == bl[:, None]).any(axis=1).sum())
+    n = len(imgs)
+    return top1 / n, top5 / n
+
+
+def flatten_params(params, prefix=""):
+    """Flatten the param tree to {dotted.path: ndarray} for npz storage."""
+    out = {}
+    if isinstance(params, dict):
+        for k, v in params.items():
+            out.update(flatten_params(v, f"{prefix}{k}."))
+    elif isinstance(params, (list, tuple)):
+        for i, v in enumerate(params):
+            out.update(flatten_params(v, f"{prefix}{i}."))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def unflatten_params(flat: dict, cfg: M.VimConfig) -> dict:
+    """Inverse of flatten_params given the known tree structure."""
+    tmpl = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def fill(node, prefix=""):
+        if isinstance(node, dict):
+            return {k: fill(v, f"{prefix}{k}.") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return [fill(v, f"{prefix}{i}.") for i, v in enumerate(node)]
+        return jnp.asarray(flat[prefix[:-1]])
+
+    return fill(tmpl)
+
+
+def train(model_name: str = "micro", steps: int = 400, batch: int = 64,
+          lr: float = 1.5e-3, seed: int = 0, n_train: int = 4096,
+          n_test: int = 1024, out_dir: str | None = None,
+          log_every: int = 25, verbose: bool = True):
+    cfg = M.CONFIGS[model_name]
+    train_x, train_y = data.make_dataset(n_train, cfg.img, seed=seed)
+    test_x, test_y = data.make_dataset(n_test, cfg.img, seed=seed + 10_000)
+
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    opt = (zeros, jax.tree.map(jnp.zeros_like, params))
+    update = make_update(cfg, lr)
+
+    rng = np.random.RandomState(seed)
+    history = []
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.randint(0, n_train, size=batch)
+        params, opt, nll, acc = update(
+            params, opt, jnp.asarray(train_x[idx]),
+            jnp.asarray(train_y[idx]), step)
+        history.append({"step": step, "loss": float(nll),
+                        "train_acc": float(acc)})
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            print(f"[{model_name}] step {step:4d} loss {float(nll):.4f} "
+                  f"acc {float(acc):.3f} ({time.time() - t0:.0f}s)")
+
+    top1, top5 = evaluate(params, cfg, test_x, test_y)
+    if verbose:
+        print(f"[{model_name}] test top1 {top1:.4f} top5 {top5:.4f}")
+
+    if out_dir:
+        out = pathlib.Path(out_dir)
+        out.mkdir(parents=True, exist_ok=True)
+        np.savez(out / f"{model_name}_params.npz", **flatten_params(params))
+        with open(out / f"{model_name}_train.json", "w") as f:
+            json.dump({"model": model_name, "steps": steps,
+                       "test_top1": top1, "test_top5": top5,
+                       "history": history}, f)
+    return params, cfg, (top1, top5), history
+
+
+def load_trained(model_name: str, art_dir: str = "../artifacts"):
+    cfg = M.CONFIGS[model_name]
+    flat = dict(np.load(pathlib.Path(art_dir) / f"{model_name}_params.npz"))
+    return unflatten_params(flat, cfg), cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="micro")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    train(args.model, steps=args.steps, batch=args.batch, out_dir=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""LUT-based SFU: fit quality, monotone breakpoints, JSON round-trip."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import lut
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", ["silu", "exp", "softplus"])
+def test_fit_paper_entries_accuracy(name):
+    """Paper §4.3: 16 entries suffice for exp, 32 for silu/softplus.
+
+    Max abs error within the fitted range must be small relative to the
+    function's range there."""
+    l = lut.fit_lut(name, gd_steps=150)
+    lo, hi = lut.PAPER_RANGES[name]
+    xs = jnp.linspace(lo, hi, 5000)
+    want = np.asarray(lut.FUNCS[name](xs))
+    got = np.asarray(l.eval(xs))
+    scale = max(1.0, float(np.abs(want).max()))
+    assert np.abs(got - want).max() / scale < 0.01
+
+
+def test_fit_more_entries_monotone_error():
+    """Fig 19's mechanism: error decreases with LUT entries."""
+    errs = []
+    for entries in (4, 8, 32):
+        l = lut.fit_lut("silu", entries=entries, gd_steps=60)
+        xs = jnp.linspace(*lut.PAPER_RANGES["silu"], 2000)
+        errs.append(float(jnp.mean((l.eval(xs) -
+                                    lut.FUNCS["silu"](xs)) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_breakpoints_sorted_and_bounded():
+    l = lut.fit_lut("softplus", gd_steps=100)
+    bps = l.bps
+    assert (np.diff(bps) > 0).all()
+    lo, hi = lut.PAPER_RANGES["softplus"]
+    assert bps[0] == np.float32(lo) and bps[-1] == np.float32(hi)
+    assert len(l.a) == len(l.bps) - 1 == lut.PAPER_ENTRIES["softplus"]
+
+
+def test_eval_saturates_out_of_range():
+    l = lut.fit_lut("exp", gd_steps=20)
+    lo, hi = lut.PAPER_RANGES["exp"]
+    # Left of range: first segment extension, still finite & close to 0.
+    y_left = float(l.eval(jnp.float32(lo - 100.0)))
+    assert np.isfinite(y_left)
+    # Right of range: last segment extension.
+    y_hi = float(l.eval(jnp.float32(hi)))
+    assert y_hi == pytest.approx(1.0, abs=0.02)  # exp(0) = 1
+
+
+def test_interpolation_exact_at_breakpoints():
+    l = lut.fit_lut("silu", entries=8, gd_steps=30)
+    xs = jnp.asarray(l.bps[:-1])
+    np.testing.assert_allclose(np.asarray(l.eval(xs)),
+                               np.asarray(lut.FUNCS["silu"](xs)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_json_roundtrip(tmp_path):
+    ls = lut.LutSet.fit(entries={"silu": 8, "exp": 8, "softplus": 8},
+                        gd_steps=10)
+    p = tmp_path / "luts.json"
+    ls.save(str(p))
+    ls2 = lut.LutSet.load(str(p))
+    xs = jnp.linspace(-5, 2, 100)
+    for name in lut.FUNCS:
+        np.testing.assert_array_equal(np.asarray(ls.eval(name, xs)),
+                                      np.asarray(ls2.eval(name, xs)))
+    # File is valid JSON with the three functions.
+    d = json.loads(p.read_text())
+    assert set(d) == {"silu", "exp", "softplus"}
+
+
+def test_profile_ranges_coverage():
+    rng = np.random.RandomState(0)
+    xs = rng.normal(0, 1, 100_000)
+    (lo, hi), = [lut.profile_ranges({"silu": xs})["silu"]]
+    # 99.9% coverage of a standard normal: ~ +-3.29.
+    assert 3.0 < -lo < 3.6 and 3.0 < hi < 3.6
+
+
+def test_profile_guided_fit_beats_uniform_range():
+    """Profile-guided restriction (Fig 14) reduces error where inputs live."""
+    rng = np.random.RandomState(1)
+    samples = rng.normal(-1, 0.5, 20000).astype(np.float32)
+    wide = lut.fit_lut("silu", entries=8, rng_range=(-20.0, 20.0),
+                       gd_steps=0)
+    narrow = lut.fit_lut("silu", entries=8,
+                         rng_range=(float(samples.min()),
+                                    float(samples.max())),
+                         samples=samples, gd_steps=0)
+    xs = jnp.asarray(samples[:4000])
+    want = lut.FUNCS["silu"](xs)
+    err_wide = float(jnp.mean((wide.eval(xs) - want) ** 2))
+    err_narrow = float(jnp.mean((narrow.eval(xs) - want) ** 2))
+    assert err_narrow < err_wide

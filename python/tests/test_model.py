@@ -1,0 +1,112 @@
+"""Vision Mamba model: shapes, pallas-vs-exact equivalence, config sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = M.CONFIGS["micro"]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_config_table3():
+    """Model configs must match paper Table 3."""
+    for name, (d, blocks, n) in {
+        "tiny": (192, 24, 16), "small": (384, 24, 16), "base": (768, 24, 16),
+    }.items():
+        cfg = M.CONFIGS[name]
+        assert cfg.d_model == d and cfg.n_blocks == blocks and cfg.d_state == n
+
+
+def test_param_counts_order_of_magnitude():
+    """Table 3 reports 7M/26M/98M parameters for Tiny/Small/Base."""
+    for name, target in [("tiny", 7e6), ("small", 26e6), ("base", 98e6)]:
+        cfg = M.CONFIGS[name]
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        n = M.count_params(params)
+        assert 0.5 * target < n < 1.6 * target, (name, n)
+
+
+def test_forward_shape(micro):
+    cfg, params = micro
+    img = jnp.zeros((cfg.img, cfg.img, cfg.in_ch))
+    logits = M.forward(params, img, cfg)
+    assert logits.shape == (cfg.n_classes,)
+
+
+def test_forward_batch(micro):
+    cfg, params = micro
+    imgs = jnp.zeros((3, cfg.img, cfg.img, cfg.in_ch))
+    logits = M.forward_batch(params, imgs, cfg)
+    assert logits.shape == (3, cfg.n_classes)
+
+
+def test_pallas_matches_exact(micro):
+    cfg, params = micro
+    rng = np.random.RandomState(0)
+    img = jnp.asarray(rng.normal(size=(cfg.img, cfg.img, cfg.in_ch))
+                      .astype(np.float32))
+    exact = M.forward(params, img, cfg, M.ExactOps())
+    fused = M.forward(params, img, cfg, M.PallasOps(chunk=16, fused=True))
+    unfused = M.forward(params, img, cfg, M.PallasOps(chunk=8, fused=False))
+    np.testing.assert_allclose(fused, exact, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(unfused, exact, rtol=1e-3, atol=1e-3)
+
+
+def test_patchify_roundtrip():
+    cfg = M.CONFIGS["micro"]
+    img = jnp.arange(cfg.img * cfg.img * cfg.in_ch, dtype=jnp.float32) \
+        .reshape(cfg.img, cfg.img, cfg.in_ch)
+    p = M.patchify(img, cfg)
+    assert p.shape == (cfg.n_patches, cfg.patch * cfg.patch * cfg.in_ch)
+    # First patch is the top-left corner block.
+    want = img[:cfg.patch, :cfg.patch].reshape(-1)
+    np.testing.assert_array_equal(np.asarray(p[0]), np.asarray(want))
+
+
+def test_tap_ops_collects_activations(micro):
+    cfg, params = micro
+    seen = {}
+    ops = M.TapOps(lambda name, x: seen.setdefault(name, x))
+    img = jnp.zeros((cfg.img, cfg.img, cfg.in_ch))
+    M.forward(params, img, cfg, ops)
+    assert "blk0.fwd.u" in seen
+    assert "blk0.bwd.softplus_in" in seen
+    assert "blk0.fwd.dA" in seen
+    assert seen["blk0.fwd.dA"].shape == (cfg.seq_len, cfg.d_inner, cfg.d_state)
+
+
+def test_bidirectional_not_degenerate(micro):
+    """fwd and bwd paths must produce different intermediates."""
+    cfg, params = micro
+    seen = {}
+    ops = M.TapOps(lambda name, x: seen.setdefault(name, x))
+    rng = np.random.RandomState(1)
+    img = jnp.asarray(rng.normal(size=(cfg.img, cfg.img, cfg.in_ch))
+                      .astype(np.float32))
+    M.forward(params, img, cfg, ops)
+    f = np.asarray(seen["blk0.fwd.u"])
+    b = np.asarray(seen["blk0.bwd.u"])
+    assert not np.allclose(f, b)
+
+
+def test_layer_norm():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.normal(size=(5, 16)).astype(np.float32) * 3 + 1)
+    y = M.layer_norm(x, jnp.ones(16), jnp.zeros(16))
+    np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0, atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(y), -1), 1, atol=1e-3)
+
+
+def test_seq_len_scales_with_image():
+    cfg = M.CONFIGS["tiny"]
+    assert cfg.seq_len == 197
+    assert cfg.with_img(448).seq_len == 785

@@ -1,0 +1,187 @@
+"""H2 quantization: primitives, integer SPE scan, calibration, QuantOps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import quant
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# -- primitives -------------------------------------------------------------
+
+def test_round_half_away():
+    x = jnp.array([0.5, -0.5, 1.5, -1.5, 2.4, -2.4, 2.6, 0.0])
+    want = np.array([1.0, -1.0, 2.0, -2.0, 2.0, -2.0, 3.0, 0.0])
+    np.testing.assert_array_equal(np.asarray(quant.round_half_away(x)), want)
+
+
+def test_quantize_saturates():
+    q = quant.quantize(jnp.array([1e6, -1e6]), 1.0)
+    np.testing.assert_array_equal(np.asarray(q), [127.0, -127.0])
+
+
+def test_scale_eq1():
+    # Eq (1): s = Xmax / (2^(b-1) - 1)
+    assert float(quant.scale_for(jnp.float32(127.0))) == pytest.approx(1.0)
+    assert float(quant.scale_for(jnp.float32(1.0), bits=4)) == \
+        pytest.approx(1.0 / 7)
+
+
+def test_pow2_round_and_shift():
+    s = jnp.array([0.0030, 0.0040, 0.0078, 0.0156])  # near 2^-8.., 2^-6
+    r = np.asarray(quant.pow2_round(s))
+    assert set(np.log2(r)).issubset({-9.0, -8.0, -7.0, -6.0})
+    sh = quant.pow2_shift(np.asarray(s))
+    np.testing.assert_array_equal(2.0 ** (-sh.astype(np.float64)), r)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(1e-6, 1e3))
+def test_pow2_round_within_factor_sqrt2(s):
+    r = float(quant.pow2_round(jnp.float32(s)))
+    assert r / s <= 2 ** 0.5 + 1e-4 and s / r <= 2 ** 0.5 + 1e-4
+
+
+# -- integer SPE scan -------------------------------------------------------
+
+def test_rshift_round_basics():
+    x = np.array([[5, -5, 6, -6, 127 * 100, -127 * 100]], np.int64)
+    k = np.array([2], np.int64)
+    got = quant._rshift_round(x, k)
+    # 5/4=1.25->1, 6/4=1.5->2 (half away), symmetric for negatives.
+    np.testing.assert_array_equal(got[0][:4], [1, -1, 2, -2])
+    assert got[0][4] == round(127 * 100 / 4)
+
+
+def test_rshift_round_left_shift():
+    x = np.array([[3, -3]], np.int64)
+    got = quant._rshift_round(x, np.array([-2], np.int64))
+    np.testing.assert_array_equal(got[0], [12, -12])
+
+
+def test_spe_scan_int_identity_p_zero():
+    """P == 0 means no history: state_n = Q_n << FRAC_BITS."""
+    L, H, N = 5, 2, 3
+    P = np.zeros((L, H, N), np.int64)
+    Q = np.arange(L * H * N).reshape(L, H, N).astype(np.int64)
+    out = quant.spe_scan_int(P, Q, np.array([4, 4], np.int32))
+    np.testing.assert_array_equal(out, Q << quant.FRAC_BITS)
+
+
+def test_spe_scan_int_matches_float_recurrence():
+    """With s_A = 2^-k, the integer datapath approximates the fp scan to
+    within quantization error."""
+    rng = np.random.RandomState(0)
+    L, H, N = 48, 4, 4
+    dA = rng.uniform(0.1, 0.98, (L, H, N)).astype(np.float32)
+    dBu = rng.uniform(-1, 1, (L, H, N)).astype(np.float32)
+
+    sa = np.asarray(quant.pow2_round(
+        quant.scale_for(jnp.asarray(np.abs(dA).max(axis=(0, 2))))))
+    sq = np.asarray(quant.scale_for(
+        jnp.asarray(np.abs(dBu).max(axis=(0, 2)))))
+    shift = quant.pow2_shift(sa)
+    P = np.asarray(quant.quantize(jnp.asarray(dA), sa[None, :, None]),
+                   np.int64)
+    Q = np.asarray(quant.quantize(jnp.asarray(dBu), sq[None, :, None]),
+                   np.int64)
+    got = quant.spe_scan_int(P, Q, shift).astype(np.float64) * \
+        sq[None, :, None] / (1 << quant.FRAC_BITS)
+    # Oracle on the *quantized* inputs: errors come only from the datapath.
+    want = np.asarray(ref.selective_scan_seq(
+        jnp.asarray(P * sa[None, :, None]), jnp.asarray(Q * sq[None, :, None])))
+    err = np.abs(got - want).max()
+    tol = 6 * sq.max()  # a few LSBs of accumulated rounding
+    assert err < tol, (err, tol)
+
+
+def test_spe_scan_saturation():
+    """Growing state must clamp at STATE_SAT, not wrap."""
+    L, H, N = 64, 1, 1
+    P = np.full((L, H, N), 127, np.int64)
+    Q = np.full((L, H, N), 127, np.int64)
+    out = quant.spe_scan_int(P, Q, np.array([0], np.int32))  # s_A = 1
+    assert out.max() == quant.STATE_SAT
+    assert (np.diff(out[:, 0, 0]) >= 0).all()
+
+
+# -- calibration + QuantOps -------------------------------------------------
+
+@pytest.fixture(scope="module")
+def calibrated():
+    cfg = M.CONFIGS["micro"]
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    imgs = rng.normal(size=(2, cfg.img, cfg.img, cfg.in_ch)) \
+        .astype(np.float32)
+    calib = quant.Calibration().run(params, imgs, cfg)
+    return cfg, params, calib, imgs
+
+
+def test_calibration_collects_scan_scales(calibrated):
+    cfg, params, calib, _ = calibrated
+    ch = calib.scales("channel")
+    tn = calib.scales("tensor")
+    assert ch["blk0.fwd.dA"].shape == (cfg.d_inner,)
+    assert tn["blk0.fwd.dA"].shape == ()
+    # channel max <= tensor max, elementwise.
+    assert (ch["blk0.fwd.dA"] <= tn["blk0.fwd.dA"] + 1e-7).all()
+
+
+def test_quantops_close_to_exact(calibrated):
+    cfg, params, calib, imgs = calibrated
+    img = jnp.asarray(imgs[0])
+    exact = np.asarray(M.forward(params, img, cfg))
+    qops = quant.QuantOps(quant.QuantConfig(), calib.scales("channel"))
+    qout = np.asarray(M.forward(params, img, cfg, qops))
+    # INT8 PTQ on an *untrained* model: logits track within coarse tolerance
+    # and the top-1 argmax is preserved (the property that matters).
+    assert np.argmax(qout) == np.argmax(exact)
+    cos = np.dot(qout, exact) / (np.linalg.norm(qout) *
+                                 np.linalg.norm(exact) + 1e-9)
+    assert cos > 0.98, cos
+
+
+def test_quantops_tensor_worse_than_channel(calibrated):
+    """Table 1's mechanism: tensor-granularity activation scales produce
+    larger quantization error than channel granularity. At INT8 on this
+    small model the gap hides in noise (EXPERIMENTS.md deviation note), so
+    the mechanism is asserted at 4 bits where levels are scarce."""
+    cfg, params, calib, imgs = calibrated
+    img = jnp.asarray(imgs[0])
+    exact = np.asarray(M.forward(params, img, cfg))
+
+    def err(granularity):
+        ops = quant.QuantOps(
+            quant.QuantConfig(granularity=granularity, bits=4),
+            calib.scales(granularity, bits=4))
+        out = np.asarray(M.forward(params, img, cfg, ops))
+        return np.linalg.norm(out - exact)
+
+    assert err("tensor") >= err("channel") * 0.99
+
+
+def test_quantops_requires_scale(calibrated):
+    cfg, params, calib, imgs = calibrated
+    qops = quant.QuantOps(quant.QuantConfig(), {})
+    with pytest.raises(KeyError, match="no calibrated scale"):
+        M.forward(params, jnp.asarray(imgs[0]), cfg, qops)
+
+
+def test_pow2_vs_exact_scale_small_delta(calibrated):
+    """S toggle (Fig 16) changes outputs only slightly."""
+    cfg, params, calib, imgs = calibrated
+    img = jnp.asarray(imgs[0])
+    scales = calib.scales("channel")
+    a = np.asarray(M.forward(params, img, cfg, quant.QuantOps(
+        quant.QuantConfig(pow2_scale=True), scales)))
+    b = np.asarray(M.forward(params, img, cfg, quant.QuantOps(
+        quant.QuantConfig(pow2_scale=False), scales)))
+    rel = np.linalg.norm(a - b) / (np.linalg.norm(b) + 1e-9)
+    assert rel < 0.35, rel

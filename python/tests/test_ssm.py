@@ -1,0 +1,96 @@
+"""Fused selective-SSM Pallas kernel + conv1d kernel vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.conv1d import causal_conv1d
+from compile.kernels.ssm import selective_ssm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ssm_inputs(rng, L, H, N):
+    u = jnp.asarray(rng.normal(size=(L, H)).astype(np.float32))
+    delta = jnp.asarray(rng.uniform(0.01, 0.5, (L, H)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.2, 3.0, (H, N)).astype(np.float32))
+    B = jnp.asarray(rng.normal(size=(L, N)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(L, N)).astype(np.float32))
+    D = jnp.asarray(rng.normal(size=(H,)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(L, H)).astype(np.float32))
+    return u, delta, A, B, C, D, z
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    L=st.integers(2, 100),
+    H=st.integers(1, 20),
+    N=st.sampled_from([1, 4, 8, 16]),
+    chunk=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_ssm_matches_ref(L, H, N, chunk, seed):
+    rng = np.random.RandomState(seed)
+    args = _ssm_inputs(rng, L, H, N)
+    got = selective_ssm(*args, chunk=chunk)
+    want = ref.selective_ssm_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_fused_ssm_h_tiling():
+    rng = np.random.RandomState(11)
+    args = _ssm_inputs(rng, 65, 33, 8)
+    want = ref.selective_ssm_ref(*args)
+    for h_tile in (1, 8, 64):
+        got = selective_ssm(*args, chunk=16, h_tile=h_tile)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_fused_ssm_rejects_bad_chunk():
+    rng = np.random.RandomState(0)
+    args = _ssm_inputs(rng, 8, 2, 2)
+    with pytest.raises(ValueError, match="power of two"):
+        selective_ssm(*args, chunk=5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    L=st.integers(1, 80),
+    H=st.integers(1, 40),
+    K=st.sampled_from([1, 2, 4, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1d_matches_ref(L, H, K, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.normal(size=(L, H)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(H, K)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(H,)).astype(np.float32))
+    got = causal_conv1d(x, w, b)
+    want = ref.causal_conv1d_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv1d_h_tiling():
+    rng = np.random.RandomState(5)
+    x = jnp.asarray(rng.normal(size=(31, 50)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(50,)).astype(np.float32))
+    want = ref.causal_conv1d_ref(x, w, b)
+    for h_tile in (7, 16, 128):
+        got = causal_conv1d(x, w, b, h_tile=h_tile)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_conv1d_causality():
+    """Output at position l must not depend on inputs at positions > l."""
+    rng = np.random.RandomState(9)
+    x = jnp.asarray(rng.normal(size=(20, 4)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    b = jnp.zeros((4,), jnp.float32)
+    base = causal_conv1d(x, w, b)
+    x2 = x.at[15:].set(99.0)
+    pert = causal_conv1d(x2, w, b)
+    np.testing.assert_array_equal(np.asarray(base[:15]), np.asarray(pert[:15]))

@@ -1,0 +1,45 @@
+//! Paper Fig 1: ViT vs Vision Mamba end-to-end latency and memory on the
+//! edge GPU, swept over input image size. Expected shape: ViT's latency
+//! and memory blow up superlinearly (L² attention + score matrix); Vim
+//! stays near-linear, with the gap widening as resolution grows.
+
+use mamba_x::config::{GpuConfig, VimModel, VitModel};
+use mamba_x::gpu::GpuModel;
+use mamba_x::util::bench::{bench, report};
+use mamba_x::vision::{vim_model_ops, vit_model_ops, vit_score_matrix_bytes};
+
+fn main() {
+    println!("=== Fig 1: ViT vs Vision Mamba (edge GPU model) ===");
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    let vim = VimModel::tiny();
+    let vit = VitModel::tiny();
+
+    println!(
+        "{:>6} {:>11} {:>11} {:>9} {:>11} {:>11}",
+        "img", "ViT ms", "Vim ms", "ViT/Vim", "ViT MB", "Vim MB"
+    );
+    let mut last_ratio = 0.0;
+    for img in [224usize, 448, 672, 896, 1024] {
+        let tv = gpu.run(&vit_model_ops(&vit, img)).total_seconds() * 1e3;
+        let tm = gpu.run(&vim_model_ops(&vim, img)).total_seconds() * 1e3;
+        let mv = (vit.param_count() as f64 * 2.0
+            + vit_score_matrix_bytes(&vit, img, 2.0)
+            + vit.seq_len(img) as f64 * vit.d_model as f64 * 8.0)
+            / 1e6;
+        let mm = (vim.param_count() as f64 * 2.0
+            + vim.seq_len(img) as f64 * vim.d_inner() as f64 * 16.0)
+            / 1e6;
+        let ratio = tv / tm;
+        println!(
+            "{:>6} {:>11.2} {:>11.2} {:>8.2}x {:>11.1} {:>11.1}",
+            img, tv, tm, ratio, mv, mm
+        );
+        // Paper Fig 1: Vim's advantage grows with image size.
+        assert!(ratio >= last_ratio * 0.95, "advantage must grow with size");
+        last_ratio = ratio;
+    }
+
+    // Timing: the device-model evaluation itself (sim throughput).
+    let s = bench(2, 20, || gpu.run(&vim_model_ops(&vim, 1024)).total_seconds());
+    report("gpu_model(vim_tiny@1024)", &s);
+}

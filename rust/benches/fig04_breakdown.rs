@@ -1,0 +1,44 @@
+//! Paper Fig 4: latency breakdown of the Vim encoder on the edge GPU.
+//! Expected shape: selective SSM dominates (up to ~60%+) for >=512 px,
+//! GEMM share grows with model size.
+
+use mamba_x::config::{GpuConfig, VimModel, IMAGE_SIZES};
+use mamba_x::gpu::GpuModel;
+use mamba_x::util::bench::{bench, report};
+use mamba_x::vision::{vim_model_ops, OpClass};
+
+fn main() {
+    println!("=== Fig 4: Vim encoder latency breakdown on edge GPU ===");
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    println!(
+        "{:>7} {:>5} {:>7} {:>9} {:>7} {:>9} {:>12}",
+        "model", "img", "GEMM", "LayerNorm", "Conv1D", "Elemwise", "SelectiveSSM"
+    );
+    for name in VimModel::ALL {
+        let m = VimModel::by_name(name).unwrap();
+        for img in IMAGE_SIZES {
+            let r = gpu.run(&vim_model_ops(&m, img));
+            let t = r.total_seconds();
+            let pct = |c| 100.0 * r.seconds(c) / t;
+            println!(
+                "{:>7} {:>5} {:>6.1}% {:>8.1}% {:>6.1}% {:>8.1}% {:>11.1}%",
+                name,
+                img,
+                pct(OpClass::Gemm),
+                pct(OpClass::LayerNorm),
+                pct(OpClass::Conv1d),
+                pct(OpClass::Elementwise),
+                pct(OpClass::SelectiveSsm)
+            );
+            if img >= 512 {
+                assert!(
+                    pct(OpClass::SelectiveSsm) > 40.0,
+                    "scan must dominate at {img} (paper: up to 60%)"
+                );
+            }
+        }
+    }
+    let m = VimModel::base();
+    let s = bench(2, 20, || gpu.run(&vim_model_ops(&m, 738)).total_seconds());
+    report("gpu_model(vim_base@738)", &s);
+}

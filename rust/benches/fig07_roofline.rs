@@ -1,0 +1,55 @@
+//! Paper Fig 7: roofline analysis on the Jetson AGX Xavier — selective
+//! SSM sits at low operational intensity AND low achieved performance;
+//! GEMM sits near the compute roof.
+
+use mamba_x::config::{GpuConfig, VimModel, IMAGE_SIZES};
+use mamba_x::gpu::roofline_point;
+use mamba_x::vision::Op;
+
+fn main() {
+    println!("=== Fig 7: roofline (Xavier) ===");
+    let gpu = GpuConfig::xavier();
+    println!(
+        "{:>7} {:>5} {:>10} {:>12} {:>9} {:>10} {:>12} {:>9}",
+        "model", "img", "scan I", "scan GFLOPS", "scan %pk", "gemm I", "gemm GFLOPS", "gemm %pk"
+    );
+    for name in VimModel::ALL {
+        let m = VimModel::by_name(name).unwrap();
+        for img in IMAGE_SIZES {
+            let l = m.seq_len(img);
+            let scan = roofline_point(
+                &gpu,
+                &m,
+                img,
+                &Op::SelectiveSsm { l, h: m.d_inner(), n_state: m.d_state },
+            );
+            let gemm = roofline_point(
+                &gpu,
+                &m,
+                img,
+                &Op::Gemm { m: l, n: 2 * m.d_inner(), k: m.d_model },
+            );
+            println!(
+                "{:>7} {:>5} {:>10.1} {:>12.1} {:>8.1}% {:>10.1} {:>12.1} {:>8.1}%",
+                name,
+                img,
+                scan.intensity,
+                scan.achieved_flops / 1e9,
+                scan.peak_fraction * 100.0,
+                gemm.intensity,
+                gemm.achieved_flops / 1e9,
+                gemm.peak_fraction * 100.0
+            );
+            // Paper Fig 7's qualitative claims.
+            assert!(scan.intensity < gemm.intensity);
+            assert!(scan.achieved_flops < gemm.achieved_flops);
+            assert!(scan.peak_fraction < 0.30, "scan far from peak");
+        }
+    }
+    println!(
+        "(roofs: CUDA fp32 {:.2} TFLOPS, tensor {:.1} TFLOPS, {:.1} GB/s)",
+        gpu.fp32_flops() / 1e12,
+        gpu.tensor_tflops,
+        gpu.dram_bw_gbs
+    );
+}

@@ -1,0 +1,49 @@
+//! Paper Fig 8: off-chip traffic of the selective SSM on A100 vs Jetson
+//! AGX Xavier vs an ideal (infinite-SRAM) GPU, normalized to Ideal@224
+//! READ. Expected shape: A100 tracks Ideal at every size; Xavier diverges
+//! sharply at high resolution (shared-memory spills).
+
+use mamba_x::config::{GpuConfig, VimModel, IMAGE_SIZES};
+use mamba_x::gpu::GpuModel;
+use mamba_x::vision::vim_selective_ssm_ops;
+
+fn main() {
+    println!("=== Fig 8: selective-SSM off-chip traffic (normalized) ===");
+    let m = VimModel::tiny();
+    let ideal = GpuModel::new(GpuConfig::ideal());
+    let norm = ideal.run(&vim_selective_ssm_ops(&m, m.seq_len(224))).read_bytes;
+
+    println!("{:>7} {:>6} {:>9} {:>9} {:>12}", "device", "img", "READ", "WRITE", "vs ideal");
+    for dev in [GpuConfig::ideal(), GpuConfig::a100(), GpuConfig::xavier()] {
+        let gm = GpuModel::new(dev.clone());
+        for img in IMAGE_SIZES {
+            let ops = vim_selective_ssm_ops(&m, m.seq_len(img));
+            let r = gm.run(&ops);
+            let id = ideal.run(&ops);
+            let ratio = r.total_bytes() / id.total_bytes();
+            println!(
+                "{:>7} {:>6} {:>9.2} {:>9.2} {:>11.2}x",
+                dev.name,
+                img,
+                r.read_bytes / norm,
+                r.write_bytes / norm,
+                ratio
+            );
+        }
+    }
+
+    // Assertions on the paper's qualitative result.
+    let xavier = GpuModel::new(GpuConfig::xavier());
+    let a100 = GpuModel::new(GpuConfig::a100());
+    let big = vim_selective_ssm_ops(&m, m.seq_len(1024));
+    let r_x = xavier.run(&big).total_bytes();
+    let r_a = a100.run(&big).total_bytes();
+    let r_i = ideal.run(&big).total_bytes();
+    assert!(r_a / r_i < 1.05, "A100 ~ ideal (paper Fig 8)");
+    assert!(r_x / r_i > 1.5, "Xavier >> ideal at 1024 (paper Fig 8)");
+    println!(
+        "\nXavier/ideal @1024: {:.2}x ; A100/ideal @1024: {:.2}x",
+        r_x / r_i,
+        r_a / r_i
+    );
+}

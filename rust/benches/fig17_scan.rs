@@ -1,0 +1,68 @@
+//! Paper Fig 17: selective-SSM speedup (a), energy-efficiency (b) and
+//! off-chip traffic reduction (c) of Mamba-X vs the edge GPU, swept over
+//! #SSAs ({2,4,8}), image size and model. Expected shape: speedup grows
+//! with #SSAs and image size; paper averages 11.6x speedup, ~2.5x traffic.
+
+use mamba_x::config::{GpuConfig, MambaXConfig, VimModel, IMAGE_SIZES, SSA_SWEEP};
+use mamba_x::gpu::GpuModel;
+use mamba_x::sim::Accelerator;
+use mamba_x::util::bench::{bench, report};
+use mamba_x::vision::vim_selective_ssm_ops;
+
+fn geomean(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+fn main() {
+    println!("=== Fig 17: selective-SSM — Mamba-X vs edge GPU ===");
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    println!(
+        "{:>7} {:>5} {:>6} {:>9} {:>11} {:>10}",
+        "model", "img", "SSAs", "speedup", "energy-eff", "traffic-x"
+    );
+    let mut sp8 = Vec::new();
+    let mut ee8 = Vec::new();
+    let mut tr8 = Vec::new();
+    for name in VimModel::ALL {
+        let m = VimModel::by_name(name).unwrap();
+        for img in IMAGE_SIZES {
+            let ops = vim_selective_ssm_ops(&m, m.seq_len(img));
+            let rg = gpu.run(&ops);
+            let mut prev_speedup = 0.0;
+            for n_ssa in SSA_SWEEP {
+                let acc = Accelerator::new(MambaXConfig::with_ssas(n_ssa));
+                let ra = acc.run(&ops);
+                let sp = rg.total_seconds() / ra.seconds(&acc.cfg);
+                let ee = rg.energy_j / ra.energy_j;
+                let tr = rg.total_bytes() / ra.total_bytes();
+                println!(
+                    "{:>7} {:>5} {:>6} {:>8.1}x {:>10.1}x {:>9.2}x",
+                    name, img, n_ssa, sp, ee, tr
+                );
+                // Fig 17(a): scalable with SSA count.
+                assert!(sp >= prev_speedup, "speedup must scale with SSAs");
+                prev_speedup = sp;
+                if n_ssa == 8 {
+                    sp8.push(sp);
+                    ee8.push(ee);
+                    tr8.push(tr);
+                    assert!(sp > 1.0, "Mamba-X must beat the GPU on the scan");
+                    assert!(tr > 1.0, "traffic must shrink (paper: 2.5x avg)");
+                }
+            }
+        }
+    }
+    println!(
+        "\ngeomean @8 SSAs: speedup {:.1}x (paper 11.6x), energy-eff {:.1}x, traffic {:.2}x (paper 2.5x)",
+        geomean(&sp8),
+        geomean(&ee8),
+        geomean(&tr8)
+    );
+
+    // Simulator hot-path timing: the chunk-level cycle scheduler.
+    let m = VimModel::base();
+    let ops = vim_selective_ssm_ops(&m, m.seq_len(1024));
+    let acc = Accelerator::new(MambaXConfig::default());
+    let s = bench(2, 10, || acc.run(&ops).total_cycles());
+    report("sim.scan_timing(base@1024)", &s);
+}

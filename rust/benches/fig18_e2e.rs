@@ -1,0 +1,78 @@
+//! Paper Fig 18: end-to-end latency breakdown (a) and energy-efficiency
+//! (b) of Mamba-X vs the edge GPU. Expected shape: large scan-latency
+//! reduction, GEMM comparable, overall ~2-3x e2e speedup that *shrinks*
+//! with model size (GEMM-dominated), energy-efficiency ~order 10x.
+
+use mamba_x::config::{GpuConfig, MambaXConfig, VimModel, IMAGE_SIZES};
+use mamba_x::gpu::GpuModel;
+use mamba_x::sim::Accelerator;
+use mamba_x::util::bench::{bench, report};
+use mamba_x::vision::{vim_model_ops, OpClass};
+
+fn geomean(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+fn main() {
+    println!("=== Fig 18: end-to-end — Mamba-X vs edge GPU ===");
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    let acc = Accelerator::new(MambaXConfig::default());
+    println!(
+        "{:>7} {:>5} {:>10} {:>12} {:>11} {:>13} {:>9} {:>11}",
+        "model", "img", "gpu ms", "gpu scan %", "mamba-x ms", "mx scan %", "speedup", "energy-eff"
+    );
+    let mut sp_all = Vec::new();
+    let mut ee_all = Vec::new();
+    let mut per_model_sp = Vec::new();
+    for name in VimModel::ALL {
+        let m = VimModel::by_name(name).unwrap();
+        let mut model_sp = Vec::new();
+        for img in IMAGE_SIZES {
+            let ops = vim_model_ops(&m, img);
+            let rg = gpu.run(&ops);
+            let ra = acc.run(&ops);
+            let t_g = rg.total_seconds();
+            let t_a = ra.seconds(&acc.cfg);
+            let scan_g = 100.0 * rg.seconds(OpClass::SelectiveSsm) / t_g;
+            let scan_a = 100.0 * ra.cycles(OpClass::SelectiveSsm) as f64
+                / ra.total_cycles() as f64;
+            let sp = t_g / t_a;
+            let ee = rg.energy_j / ra.energy_j;
+            println!(
+                "{:>7} {:>5} {:>10.2} {:>11.1}% {:>11.2} {:>12.1}% {:>8.2}x {:>10.1}x",
+                name,
+                img,
+                t_g * 1e3,
+                scan_g,
+                t_a * 1e3,
+                scan_a,
+                sp,
+                ee
+            );
+            assert!(sp > 1.0, "Mamba-X must win e2e");
+            // Fig 18(a): the scan's latency share collapses on Mamba-X.
+            assert!(scan_a < scan_g, "scan share must shrink on Mamba-X");
+            sp_all.push(sp);
+            ee_all.push(ee);
+            model_sp.push(sp);
+        }
+        per_model_sp.push((name, geomean(&model_sp)));
+    }
+    println!(
+        "\ngeomean e2e speedup {:.2}x (paper 2.3x); energy-eff {:.1}x (paper 11.5x)",
+        geomean(&sp_all),
+        geomean(&ee_all)
+    );
+    for (name, sp) in &per_model_sp {
+        println!("  {name}: {sp:.2}x");
+    }
+    // Fig 18: speedup diminishes as the model gets GEMM-bound.
+    assert!(
+        per_model_sp[0].1 >= per_model_sp[2].1 * 0.8,
+        "tiny should benefit at least comparably to base"
+    );
+
+    let ops = vim_model_ops(&VimModel::base(), 1024);
+    let s = bench(1, 5, || acc.run(&ops).total_cycles());
+    report("sim.e2e(base@1024)", &s);
+}

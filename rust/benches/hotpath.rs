@@ -1,0 +1,93 @@
+//! Hot-path microbenchmarks (the §Perf targets in EXPERIMENTS.md):
+//!
+//!  * sim.scan_timing — the chunk-level cycle scheduler (the simulator's
+//!    hot loop: one iteration per chunk-job);
+//!  * quant.spe_scan_int — the bit-exact integer datapath;
+//!  * sfu.eval — LUT evaluation;
+//!  * batcher — coordinator enqueue/release;
+//!  * gpu model — full-device workload evaluation.
+
+use mamba_x::config::{GpuConfig, MambaXConfig, VimModel};
+use mamba_x::coordinator::{BatchPolicy, DynamicBatcher};
+use mamba_x::gpu::GpuModel;
+use mamba_x::quant::spe_scan_int;
+use mamba_x::sim::memory::Dram;
+use mamba_x::sim::{scan_timing, Accelerator};
+use mamba_x::util::bench::{bench, report};
+use mamba_x::util::Pcg;
+use mamba_x::vision::{vim_model_ops, vim_selective_ssm_ops};
+
+fn main() {
+    println!("=== hot-path microbenches ===");
+
+    // 1. Cycle scheduler at the largest paper shape (base@1024).
+    let m = VimModel::base();
+    let (l, h, n) = (m.seq_len(1024), m.d_inner(), m.d_state);
+    let cfg = MambaXConfig::default();
+    let jobs = (h * n * l.div_ceil(cfg.chunk)) as f64;
+    let s = bench(2, 10, || {
+        let mut dram = Dram::new(cfg.dram_bytes_per_cycle());
+        scan_timing(&cfg, &mut dram, l, h, n).cycles
+    });
+    report("scan_timing(base@1024)", &s);
+    println!(
+        "    -> {:.1} M chunk-jobs/s ({:.0} jobs/run)",
+        jobs / s.mean_ns * 1e3,
+        jobs
+    );
+
+    // 2. Integer SPE datapath.
+    let (sl, sh, sn) = (512usize, 64, 16);
+    let mut rng = Pcg::new(1);
+    let total = sl * sh * sn;
+    let p: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+    let q: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+    let shift: Vec<i32> = (0..sh).map(|_| 7).collect();
+    let s = bench(2, 20, || spe_scan_int(&p, &q, &shift, sl, sh, sn));
+    report("spe_scan_int(512x64x16)", &s);
+    println!(
+        "    -> {:.1} M lane-steps/s",
+        total as f64 / s.mean_ns * 1e3
+    );
+
+    // 3. SFU LUT evaluation (if artifacts exist).
+    if let Ok(tables) = mamba_x::sim::sfu::SfuTables::load("artifacts/sfu_luts.json") {
+        let xs: Vec<f32> = (0..65536).map(|i| -8.0 + 16.0 * (i as f32 / 65536.0)).collect();
+        let s = bench(2, 50, || {
+            let mut acc = 0.0f32;
+            for &x in &xs {
+                acc += tables.silu.eval(x);
+            }
+            acc
+        });
+        report("sfu.silu_lut(64k evals)", &s);
+        println!("    -> {:.1} M evals/s", 65536.0 / s.mean_ns * 1e3);
+    } else {
+        println!("(skipping sfu bench: run `make artifacts`)");
+    }
+
+    // 4. Batcher throughput.
+    let s = bench(2, 50, || {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 8, max_wait_us: 100 });
+        let mut out = 0usize;
+        for i in 0..10_000u64 {
+            b.push(i, i);
+            if let Some(batch) = b.poll(i) {
+                out += batch.len();
+            }
+        }
+        out + b.flush().len()
+    });
+    report("batcher(10k reqs)", &s);
+
+    // 5. Device models end-to-end.
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    let ops = vim_model_ops(&VimModel::base(), 1024);
+    let s = bench(2, 10, || gpu.run(&ops).total_seconds());
+    report("gpu_model.e2e(base@1024)", &s);
+
+    let acc = Accelerator::new(MambaXConfig::default());
+    let scan_ops = vim_selective_ssm_ops(&VimModel::tiny(), 197);
+    let s = bench(2, 50, || acc.run(&scan_ops).total_cycles());
+    report("sim.scan(tiny@224)", &s);
+}

@@ -1,0 +1,68 @@
+//! Paper Table 4: Mamba-X area breakdown at 32 nm and 12 nm, plus the
+//! §6.2 headline: Mamba-X uses ~0.4% of the Xavier die and delivers
+//! ~601x performance/area on the end-to-end workload.
+
+use mamba_x::config::{GpuConfig, MambaXConfig, VimModel, IMAGE_SIZES};
+use mamba_x::energy::{AreaModel, TechNode};
+use mamba_x::gpu::GpuModel;
+use mamba_x::sim::Accelerator;
+use mamba_x::vision::vim_model_ops;
+
+fn geomean(v: &[f64]) -> f64 {
+    (v.iter().map(|x| x.ln()).sum::<f64>() / v.len() as f64).exp()
+}
+
+fn main() {
+    println!("=== Table 4: area breakdown (mm^2) ===");
+    let cfg = MambaXConfig::default();
+    println!(
+        "{:>6} {:>6} {:>6} {:>6} {:>6} {:>6} {:>7} {:>7} {:>7}",
+        "node", "SSA", "SFU", "VPU", "PPU", "GEMM", "Buffer", "Others", "Total"
+    );
+    let paper32 = [0.28, 1.00, 0.23, 0.85, 5.34, 1.74, 0.04, 9.48];
+    let a32 = AreaModel::mamba_x(&cfg);
+    for node in [TechNode::N32, TechNode::N12] {
+        let a = a32.at(node);
+        println!(
+            "{:>6} {:>6.2} {:>6.2} {:>6.2} {:>6.2} {:>6.2} {:>7.2} {:>7.2} {:>7.2}",
+            format!("{node:?}"),
+            a.ssa,
+            a.sfu,
+            a.vpu,
+            a.ppu,
+            a.gemm,
+            a.buffer,
+            a.others,
+            a.total()
+        );
+    }
+    println!(
+        "paper32 {:>5.2} {:>6.2} {:>6.2} {:>6.2} {:>6.2} {:>7.2} {:>7.2} {:>7.2}",
+        paper32[0], paper32[1], paper32[2], paper32[3], paper32[4], paper32[5], paper32[6], paper32[7]
+    );
+    let got = [a32.ssa, a32.sfu, a32.vpu, a32.ppu, a32.gemm, a32.buffer, a32.others, a32.total()];
+    for (g, w) in got.iter().zip(paper32.iter()) {
+        assert!((g - w).abs() / w < 0.12, "area row off: got {g:.2}, paper {w}");
+    }
+
+    // §6.2 headline: perf/area vs the edge GPU.
+    let a12 = a32.at(TechNode::N12).total();
+    let die = GpuConfig::xavier().die_mm2;
+    println!("\nMamba-X @12nm: {:.2} mm^2 = {:.2}% of Xavier die ({die} mm^2)", a12, 100.0 * a12 / die);
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    let acc = Accelerator::new(cfg.clone());
+    let mut ppa = Vec::new();
+    for name in VimModel::ALL {
+        let m = VimModel::by_name(name).unwrap();
+        for img in IMAGE_SIZES {
+            let ops = vim_model_ops(&m, img);
+            let sp = gpu.run(&ops).total_seconds() / acc.run(&ops).seconds(&acc.cfg);
+            ppa.push(sp * die / a12);
+        }
+    }
+    println!(
+        "perf/area vs edge GPU: geomean {:.0}x (paper: 601x)",
+        geomean(&ppa)
+    );
+    assert!(geomean(&ppa) > 100.0, "perf/area advantage must be large");
+}

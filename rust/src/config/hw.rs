@@ -1,0 +1,218 @@
+//! Hardware configurations (paper Table 2 + the A100/Ideal of Fig 8).
+
+
+/// GPU device model parameters.
+///
+/// `Xavier` is the paper's edge-GPU baseline (Table 2); `A100` and `Ideal`
+/// are the Fig 8 comparison points. `Ideal` is the oracular device with
+/// infinite on-chip storage (never spills).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    pub name: &'static str,
+    pub cuda_cores: usize,
+    pub tensor_cores: usize,
+    pub sms: usize,
+    pub freq_ghz: f64,
+    /// Peak tensor-core GEMM throughput (FP16), TFLOPS (Table 2: 11).
+    pub tensor_tflops: f64,
+    /// Usable shared memory per SM, KiB.
+    pub smem_per_sm_kb: f64,
+    /// Last-level cache, MiB (absorbs spills that exceed shared memory
+    /// but fit on chip: the A100-vs-Xavier distinction of Fig 8).
+    pub l2_mb: f64,
+    /// Off-chip bandwidth, GB/s (Table 2: 136.5).
+    pub dram_bw_gbs: f64,
+    /// Off-chip energy per bit, pJ (paper §5: 4 pJ/bit for LPDDR4).
+    pub dram_pj_per_bit: f64,
+    /// Board TDP, watts.
+    pub tdp_w: f64,
+    pub warp_size: usize,
+    /// Die area at its native node, mm^2 (Xavier: 350 at 12 nm).
+    pub die_mm2: f64,
+}
+
+impl GpuConfig {
+    /// NVIDIA Jetson AGX Xavier (paper Table 2 / §5).
+    pub fn xavier() -> Self {
+        Self {
+            name: "xavier",
+            cuda_cores: 512,
+            tensor_cores: 64,
+            sms: 8,
+            freq_ghz: 1.377,
+            tensor_tflops: 11.0,
+            // Table 2: 512 KB total on-chip => 64 KiB/SM usable shared mem.
+            smem_per_sm_kb: 64.0,
+            l2_mb: 0.25,
+            dram_bw_gbs: 136.5,
+            dram_pj_per_bit: 4.0,
+            tdp_w: 30.0,
+            warp_size: 32,
+            die_mm2: 350.0,
+        }
+    }
+
+    /// NVIDIA A100-40GB (Fig 8 reference; ample on-chip SRAM).
+    pub fn a100() -> Self {
+        Self {
+            name: "a100",
+            cuda_cores: 6912,
+            tensor_cores: 432,
+            sms: 108,
+            freq_ghz: 1.41,
+            tensor_tflops: 312.0,
+            smem_per_sm_kb: 164.0,
+            l2_mb: 40.0,
+            dram_bw_gbs: 1555.0,
+            dram_pj_per_bit: 7.0, // HBM2e
+            tdp_w: 400.0,
+            warp_size: 32,
+            die_mm2: 826.0,
+        }
+    }
+
+    /// Oracular GPU with unlimited on-chip storage (Fig 8 "Ideal").
+    pub fn ideal() -> Self {
+        Self {
+            name: "ideal",
+            smem_per_sm_kb: f64::INFINITY,
+            l2_mb: f64::INFINITY,
+            ..Self::xavier()
+        }
+    }
+
+    /// CUDA-core FP32 throughput, FLOPS.
+    pub fn fp32_flops(&self) -> f64 {
+        self.cuda_cores as f64 * 2.0 * self.freq_ghz * 1e9
+    }
+
+    /// Peak tensor throughput, FLOPS.
+    pub fn tensor_flops(&self) -> f64 {
+        self.tensor_tflops * 1e12
+    }
+
+    /// Off-chip bandwidth in bytes/sec.
+    pub fn dram_bw(&self) -> f64 {
+        self.dram_bw_gbs * 1e9
+    }
+
+    /// Total usable shared memory across the device, bytes.
+    pub fn total_smem_bytes(&self) -> f64 {
+        self.smem_per_sm_kb * 1024.0 * self.sms as f64
+    }
+}
+
+/// The Mamba-X accelerator configuration (paper Table 2 + Fig 9).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MambaXConfig {
+    /// Number of Systolic Scan Arrays (Table 2: 8; Fig 17 sweeps 2/4/8).
+    pub n_ssa: usize,
+    /// Chunk size per SSA along the L dimension (Table 2: 16).
+    pub chunk: usize,
+    /// GEMM engine dimensions (Table 2: 64x64 output-stationary PEs).
+    pub gemm_rows: usize,
+    pub gemm_cols: usize,
+    /// Vector processing unit lanes (element ops / cycle).
+    pub vpu_lanes: usize,
+    /// SFU ADU+CU pairs (non-linear evaluations / cycle).
+    pub sfu_lanes: usize,
+    /// PPU MAC lanes (C-reduction multiply-accumulates / cycle).
+    pub ppu_macs: usize,
+    /// Clock, GHz (Table 2: 1.0).
+    pub freq_ghz: f64,
+    /// On-chip scratchpad, KiB (Table 2: 384).
+    pub onchip_kb: f64,
+    /// Off-chip bandwidth, GB/s (Table 2: matched to Xavier, 136.5).
+    pub dram_bw_gbs: f64,
+    /// LPDDR4 energy per bit, pJ (paper §5).
+    pub dram_pj_per_bit: f64,
+    /// SFU LUT entries (paper §4.3: exp 16, silu/softplus 32).
+    pub lut_entries_exp: usize,
+    pub lut_entries_silu: usize,
+    pub lut_entries_softplus: usize,
+}
+
+impl Default for MambaXConfig {
+    fn default() -> Self {
+        Self {
+            n_ssa: 8,
+            chunk: 16,
+            gemm_rows: 64,
+            gemm_cols: 64,
+            vpu_lanes: 512,
+            sfu_lanes: 128,
+            ppu_macs: 256,
+            freq_ghz: 1.0,
+            onchip_kb: 384.0,
+            dram_bw_gbs: 136.5,
+            dram_pj_per_bit: 4.0,
+            lut_entries_exp: 16,
+            lut_entries_silu: 32,
+            lut_entries_softplus: 32,
+        }
+    }
+}
+
+impl MambaXConfig {
+    pub fn with_ssas(n_ssa: usize) -> Self {
+        Self { n_ssa, ..Self::default() }
+    }
+
+    /// Peak GEMM throughput, ops/sec (Table 2: 8 TOPS at 64x64, 1 GHz).
+    pub fn gemm_ops(&self) -> f64 {
+        (self.gemm_rows * self.gemm_cols) as f64 * 2.0 * self.freq_ghz * 1e9
+    }
+
+    /// Scan throughput: each SSA retires `chunk` scan elements per cycle in
+    /// steady state (one chunk-row per cycle, pipelined; Fig 12).
+    pub fn scan_elems_per_cycle(&self) -> f64 {
+        (self.n_ssa * self.chunk) as f64
+    }
+
+    pub fn dram_bw(&self) -> f64 {
+        self.dram_bw_gbs * 1e9
+    }
+
+    /// Bytes per cycle of off-chip bandwidth at the accelerator clock.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_bw() / (self.freq_ghz * 1e9)
+    }
+
+    pub fn onchip_bytes(&self) -> f64 {
+        self.onchip_kb * 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_xavier() {
+        let x = GpuConfig::xavier();
+        assert_eq!(x.cuda_cores, 512);
+        assert_eq!(x.tensor_cores, 64);
+        assert!((x.dram_bw_gbs - 136.5).abs() < 1e-9);
+        assert!((x.tensor_tflops - 11.0).abs() < 1e-9);
+        // 512 KB total on-chip (Table 2).
+        assert!((x.total_smem_bytes() - 512.0 * 1024.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table2_mamba_x() {
+        let m = MambaXConfig::default();
+        assert_eq!(m.n_ssa, 8);
+        assert_eq!(m.chunk, 16);
+        assert_eq!((m.gemm_rows, m.gemm_cols), (64, 64));
+        // 8 TOPS (Table 2): 64*64*2 ops/cycle at 1 GHz = 8.192e12.
+        assert!((m.gemm_ops() - 8.192e12).abs() < 1e6);
+        assert!((m.onchip_kb - 384.0).abs() < 1e-9);
+        // Bandwidth parity with the edge GPU (Table 2).
+        assert!((m.dram_bw_gbs - GpuConfig::xavier().dram_bw_gbs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ideal_never_smaller_smem() {
+        assert!(GpuConfig::ideal().total_smem_bytes().is_infinite());
+    }
+}

@@ -1,0 +1,13 @@
+//! Model (paper Table 3) and hardware (paper Table 2) configurations.
+
+mod hw;
+mod model;
+
+pub use hw::{GpuConfig, MambaXConfig};
+pub use model::{VimModel, VitModel};
+
+/// Image sizes swept throughout the paper's evaluation (Figs 1/4/7/8/17/18).
+pub const IMAGE_SIZES: [usize; 4] = [224, 512, 738, 1024];
+
+/// SSA-count sweep of Fig 17.
+pub const SSA_SWEEP: [usize; 3] = [2, 4, 8];

@@ -1,0 +1,174 @@
+//! Vision Mamba / ViT model configurations (paper Table 3).
+
+
+/// A Vision Mamba model configuration (paper Table 3).
+///
+/// `Tiny`/`Small`/`Base` all use 24 encoder blocks and state dimension 16;
+/// they differ in the hidden dimension (192/384/768). `micro` mirrors the
+/// trained-from-scratch model used by the accuracy experiments.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VimModel {
+    pub name: &'static str,
+    /// Hidden dimension D (Table 3 "Hidden dimension").
+    pub d_model: usize,
+    /// Number of encoder blocks.
+    pub n_blocks: usize,
+    /// State dimension N (the paper's `m`).
+    pub d_state: usize,
+    /// Inner expansion factor; E = expand * d_model.
+    pub expand: usize,
+    /// Depthwise conv width.
+    pub conv_k: usize,
+    /// Patch size.
+    pub patch: usize,
+}
+
+impl VimModel {
+    pub const fn tiny() -> Self {
+        Self { name: "tiny", d_model: 192, n_blocks: 24, d_state: 16, expand: 2, conv_k: 4, patch: 16 }
+    }
+    pub const fn small() -> Self {
+        Self { name: "small", d_model: 384, n_blocks: 24, d_state: 16, expand: 2, conv_k: 4, patch: 16 }
+    }
+    pub const fn base() -> Self {
+        Self { name: "base", d_model: 768, n_blocks: 24, d_state: 16, expand: 2, conv_k: 4, patch: 16 }
+    }
+    /// The trained-on-synthetic-data model served by the coordinator.
+    pub const fn micro() -> Self {
+        Self { name: "micro", d_model: 64, n_blocks: 4, d_state: 8, expand: 2, conv_k: 4, patch: 4 }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "tiny" => Some(Self::tiny()),
+            "small" => Some(Self::small()),
+            "base" => Some(Self::base()),
+            "micro" => Some(Self::micro()),
+            _ => None,
+        }
+    }
+
+    pub const ALL: [&'static str; 3] = ["tiny", "small", "base"];
+
+    /// Inner (expanded) dimension E.
+    pub fn d_inner(&self) -> usize {
+        self.expand * self.d_model
+    }
+
+    /// Low-rank dt projection dimension.
+    pub fn dt_rank(&self) -> usize {
+        (self.d_model / 16).max(1)
+    }
+
+    /// Token count for a square input image (+1 middle class token).
+    pub fn seq_len(&self, img: usize) -> usize {
+        let p = img / self.patch;
+        p * p + 1
+    }
+
+    /// Parameter count (for memory-footprint estimates, Fig 1(b)).
+    pub fn param_count(&self) -> usize {
+        let (d, e, n, r, k) = (
+            self.d_model,
+            self.d_inner(),
+            self.d_state,
+            self.dt_rank(),
+            self.conv_k,
+        );
+        let per_dir = e * k + e // conv
+            + e * (r + 2 * n)   // x_proj
+            + r * e + e         // dt_proj
+            + e * n             // A_log
+            + e; // D
+        let per_block = 2 * d // norm
+            + d * 2 * e + 2 * e // in_proj
+            + e * d + d         // out_proj
+            + 2 * per_dir;
+        let patch_dim = self.patch * self.patch * 3;
+        patch_dim * d + d                // patch embed
+            + self.n_blocks * per_block
+            + 2 * d                      // final norm
+            + d * 1000 + 1000 // head
+    }
+}
+
+/// ViT baseline (DeiT-style) for the Fig 1 comparison.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VitModel {
+    pub name: &'static str,
+    pub d_model: usize,
+    pub n_blocks: usize,
+    pub n_heads: usize,
+    pub mlp_ratio: usize,
+    pub patch: usize,
+}
+
+impl VitModel {
+    /// DeiT-Tiny: the ViT counterpart of Vim-Tiny.
+    pub const fn tiny() -> Self {
+        Self { name: "vit-tiny", d_model: 192, n_blocks: 12, n_heads: 3, mlp_ratio: 4, patch: 16 }
+    }
+    pub const fn small() -> Self {
+        Self { name: "vit-small", d_model: 384, n_blocks: 12, n_heads: 6, mlp_ratio: 4, patch: 16 }
+    }
+
+    pub fn seq_len(&self, img: usize) -> usize {
+        let p = img / self.patch;
+        p * p + 1
+    }
+
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_block = 2 * d      // norm1
+            + 3 * d * d + 3 * d    // qkv
+            + d * d + d            // proj
+            + 2 * d                // norm2
+            + 2 * d * self.mlp_ratio * d + self.mlp_ratio * d + d; // mlp
+        let patch_dim = self.patch * self.patch * 3;
+        patch_dim * d + d + self.n_blocks * per_block + 2 * d + d * 1000 + 1000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_configs() {
+        for (m, d, b, n) in [
+            (VimModel::tiny(), 192, 24, 16),
+            (VimModel::small(), 384, 24, 16),
+            (VimModel::base(), 768, 24, 16),
+        ] {
+            assert_eq!(m.d_model, d);
+            assert_eq!(m.n_blocks, b);
+            assert_eq!(m.d_state, n);
+        }
+    }
+
+    #[test]
+    fn table3_param_counts() {
+        // Table 3: 7M / 26M / 98M.
+        let within = |got: usize, want: f64| {
+            let g = got as f64;
+            g > want * 0.5 && g < want * 1.6
+        };
+        assert!(within(VimModel::tiny().param_count(), 7e6));
+        assert!(within(VimModel::small().param_count(), 26e6));
+        assert!(within(VimModel::base().param_count(), 98e6));
+    }
+
+    #[test]
+    fn seq_len_scaling() {
+        let t = VimModel::tiny();
+        assert_eq!(t.seq_len(224), 197);
+        assert_eq!(t.seq_len(448), 785);
+        assert_eq!(t.seq_len(1024), 4097);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(VimModel::by_name("tiny"), Some(VimModel::tiny()));
+        assert_eq!(VimModel::by_name("nope"), None);
+    }
+}

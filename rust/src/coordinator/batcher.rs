@@ -1,0 +1,150 @@
+//! Dynamic batching policy — pure logic, independently testable.
+//!
+//! Requests accumulate until either `max_batch` are pending or the oldest
+//! pending request has waited `max_wait_us`. Invariants (proptest-checked
+//! in `rust/tests/coordinator_props.rs`):
+//!
+//! * FIFO: requests leave in arrival order;
+//! * no request is dropped or duplicated;
+//! * no batch exceeds `max_batch`;
+//! * no request waits longer than `max_wait_us` past a `poll` call.
+
+use std::collections::VecDeque;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait_us: 2_000 }
+    }
+}
+
+#[derive(Debug)]
+struct Pending<T> {
+    item: T,
+    enqueued_us: u64,
+}
+
+/// Time-driven dynamic batcher. Time is passed in (microseconds) so the
+/// policy is deterministic and testable without a clock.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+    /// Total items ever enqueued / dequeued (audit counters).
+    pub enqueued: u64,
+    pub dequeued: u64,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        Self { policy, queue: VecDeque::new(), enqueued: 0, dequeued: 0 }
+    }
+
+    pub fn push(&mut self, item: T, now_us: u64) {
+        self.queue.push_back(Pending { item, enqueued_us: now_us });
+        self.enqueued += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Earliest deadline by which a batch must be released, if any.
+    pub fn deadline_us(&self) -> Option<u64> {
+        self.queue.front().map(|p| p.enqueued_us + self.policy.max_wait_us)
+    }
+
+    /// Whether a batch should be released at `now_us`.
+    pub fn ready(&self, now_us: u64) -> bool {
+        self.queue.len() >= self.policy.max_batch
+            || self.deadline_us().is_some_and(|d| now_us >= d)
+    }
+
+    /// Release a batch if the policy says so.
+    pub fn poll(&mut self, now_us: u64) -> Option<Vec<T>> {
+        if !self.ready(now_us) {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        let batch: Vec<T> = self.queue.drain(..n).map(|p| p.item).collect();
+        self.dequeued += batch.len() as u64;
+        Some(batch)
+    }
+
+    /// Drain everything regardless of policy (shutdown path).
+    pub fn flush(&mut self) -> Vec<T> {
+        let batch: Vec<T> = self.queue.drain(..).map(|p| p.item).collect();
+        self.dequeued += batch.len() as u64;
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b(max_batch: usize, max_wait_us: u64) -> DynamicBatcher<u32> {
+        DynamicBatcher::new(BatchPolicy { max_batch, max_wait_us })
+    }
+
+    #[test]
+    fn releases_on_full_batch() {
+        let mut q = b(3, 1000);
+        q.push(1, 0);
+        q.push(2, 1);
+        assert!(q.poll(2).is_none());
+        q.push(3, 2);
+        assert_eq!(q.poll(2), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn releases_on_timeout() {
+        let mut q = b(8, 1000);
+        q.push(1, 100);
+        assert!(q.poll(500).is_none());
+        assert_eq!(q.deadline_us(), Some(1100));
+        assert_eq!(q.poll(1100), Some(vec![1]));
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let mut q = b(2, 0);
+        for i in 0..5 {
+            q.push(i, 0);
+        }
+        assert_eq!(q.poll(0).unwrap().len(), 2);
+        assert_eq!(q.poll(0).unwrap().len(), 2);
+        assert_eq!(q.poll(0).unwrap().len(), 1);
+        assert_eq!(q.enqueued, q.dequeued);
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = b(10, 0);
+        for i in 0..7 {
+            q.push(i, i as u64);
+        }
+        assert_eq!(q.poll(100), Some((0..7).collect()));
+    }
+
+    #[test]
+    fn flush_empties() {
+        let mut q = b(100, u64::MAX);
+        q.push(1, 0);
+        q.push(2, 0);
+        assert!(q.poll(10).is_none());
+        assert_eq!(q.flush(), vec![1, 2]);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,112 @@
+//! Serving metrics: latency histogram + throughput accounting.
+
+/// Simple reservoir-free latency recorder (exact percentiles; the request
+/// volumes of an edge service are small enough to keep all samples).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    pub batches: u64,
+    pub batch_items: u64,
+    pub first_us: Option<u64>,
+    pub last_us: u64,
+}
+
+impl Metrics {
+    pub fn record_request(&mut self, latency_us: u64, completed_at_us: u64) {
+        self.latencies_us.push(latency_us);
+        if self.first_us.is_none() {
+            self.first_us = Some(completed_at_us);
+        }
+        self.last_us = completed_at_us.max(self.last_us);
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_items += size as u64;
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.latencies_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        // Nearest-rank: smallest value with at least p% of samples <= it.
+        let idx = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[idx.saturating_sub(1).min(v.len() - 1)]
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batch_items as f64 / self.batches as f64
+    }
+
+    /// Requests per second over the observed completion window.
+    pub fn throughput_rps(&self) -> f64 {
+        match self.first_us {
+            Some(first) if self.last_us > first => {
+                (self.count() as f64 - 1.0).max(1.0)
+                    / ((self.last_us - first) as f64 / 1e6)
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms \
+             batch_avg={:.2} throughput={:.1} req/s",
+            self.count(),
+            self.mean_us() / 1e3,
+            self.percentile_us(50.0) as f64 / 1e3,
+            self.percentile_us(95.0) as f64 / 1e3,
+            self.percentile_us(99.0) as f64 / 1e3,
+            self.mean_batch_size(),
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_request(i * 1000, i * 10);
+        }
+        assert_eq!(m.percentile_us(50.0), 50_000);
+        assert_eq!(m.percentile_us(99.0), 99_000);
+        assert!(m.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.percentile_us(99.0), 0);
+        assert_eq!(m.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::default();
+        m.record_batch(4);
+        m.record_batch(2);
+        assert_eq!(m.mean_batch_size(), 3.0);
+    }
+}

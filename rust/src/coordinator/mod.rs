@@ -1,0 +1,21 @@
+//! Edge-serving coordinator (Layer 3).
+//!
+//! Mamba-X's system contribution is the accelerator; its deployment story
+//! is an *edge vision service* (paper §1: autonomous vehicles, smart
+//! surveillance, AR). This module is that service: an async request
+//! router + dynamic batcher in front of the PJRT-compiled Vision Mamba
+//! (the vLLM-router shape, scaled to edge):
+//!
+//! * [`batcher`] — pure batching policy (max batch / max wait), FIFO per
+//!   stream, proptest-verified invariants;
+//! * [`server`] — tokio server: mpsc ingress, a worker that owns the
+//!   compiled executable, per-request latency accounting;
+//! * [`metrics`] — latency/throughput percentiles for the E2E example.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use metrics::Metrics;
+pub use server::{InferenceRequest, InferenceResponse, Server, ServerHandle};

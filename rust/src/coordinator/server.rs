@@ -1,0 +1,173 @@
+//! Serving loop: mpsc ingress -> dynamic batcher -> PJRT worker thread.
+//!
+//! The worker thread owns the compiled executable (PJRT handles are not
+//! Sync); clients submit over an mpsc channel and block on a per-request
+//! reply channel (std threads — the offline build has no async runtime,
+//! and an edge serving loop with one device worker doesn't need one; the
+//! batcher policy is identical either way). The batch-1 model artifact is
+//! executed per item inside a batch window — batching amortizes dispatch
+//! and keeps the queue policy identical to a batched-executable
+//! deployment (DESIGN.md).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{Executable, Tensor};
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::metrics::Metrics;
+
+/// One inference request: a flattened image.
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    pub image: Tensor,
+}
+
+/// Response with logits and measured latency.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub latency_us: u64,
+}
+
+struct Job {
+    req: InferenceRequest,
+    reply: mpsc::Sender<Result<InferenceResponse>>,
+    t0: Instant,
+}
+
+/// Client handle: submit requests, await responses. Cloneable; the server
+/// shuts down when every handle is dropped.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl ServerHandle {
+    /// Submit a request and return a waiter for its response.
+    pub fn submit(&self, req: InferenceRequest) -> Result<ResponseWaiter> {
+        let (reply, rx) = mpsc::channel();
+        let job = Job { req, reply, t0: Instant::now() };
+        self.tx.send(job).map_err(|_| anyhow!("server stopped"))?;
+        Ok(ResponseWaiter { rx })
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, req: InferenceRequest) -> Result<InferenceResponse> {
+        self.submit(req)?.wait()
+    }
+}
+
+/// Pending response.
+pub struct ResponseWaiter {
+    rx: mpsc::Receiver<Result<InferenceResponse>>,
+}
+
+impl ResponseWaiter {
+    pub fn wait(self) -> Result<InferenceResponse> {
+        self.rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+}
+
+/// The serving loop configuration.
+///
+/// PJRT handles are not `Send` (`Rc` internals), so the executable is
+/// *constructed on the worker thread* via the factory passed to
+/// [`Server::spawn`] — the worker owns the device end to end.
+pub struct Server {
+    policy: BatchPolicy,
+}
+
+impl Server {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Spawn the worker thread; `factory` runs on that thread to build the
+    /// executable. Returns a client handle and the join handle resolving
+    /// to the final [`Metrics`] once all handles drop.
+    pub fn spawn<F>(self, factory: F) -> (ServerHandle, std::thread::JoinHandle<Result<Metrics>>)
+    where
+        F: FnOnce() -> Result<Executable> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = ServerHandle { tx };
+        let join = std::thread::spawn(move || {
+            let exe = factory()?;
+            Ok(Self::worker(&exe, self.policy, rx))
+        });
+        (handle, join)
+    }
+
+    fn worker(exe: &Executable, policy: BatchPolicy, rx: mpsc::Receiver<Job>) -> Metrics {
+        let start = Instant::now();
+        let now_us = |s: &Instant| s.elapsed().as_micros() as u64;
+        let mut metrics = Metrics::default();
+        let mut batcher: DynamicBatcher<Job> = DynamicBatcher::new(policy);
+        let mut closed = false;
+        while !closed || !batcher.is_empty() {
+            // Phase 1: gather — block for the first job, then drain.
+            if batcher.is_empty() && !closed {
+                match rx.recv() {
+                    Ok(job) => batcher.push(job, now_us(&start)),
+                    Err(_) => {
+                        closed = true;
+                        continue;
+                    }
+                }
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(job) => batcher.push(job, now_us(&start)),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        closed = true;
+                        break;
+                    }
+                }
+            }
+            // Phase 2: wait out the batch window (absorbing arrivals).
+            let now = now_us(&start);
+            if !closed && !batcher.ready(now) {
+                let deadline = batcher.deadline_us().unwrap_or(now);
+                let wait = deadline.saturating_sub(now);
+                match rx.recv_timeout(Duration::from_micros(wait)) {
+                    Ok(job) => {
+                        batcher.push(job, now_us(&start));
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
+                }
+            }
+            // Phase 3: serve one batch (policy release or shutdown flush).
+            let batch = match batcher.poll(now_us(&start)) {
+                Some(b) => b,
+                None if closed => batcher.flush(),
+                None => continue,
+            };
+            if batch.is_empty() {
+                continue;
+            }
+            metrics.record_batch(batch.len());
+            for job in batch {
+                let res = exe.run(std::slice::from_ref(&job.req.image)).map(|outs| {
+                    InferenceResponse {
+                        id: job.req.id,
+                        logits: outs.into_iter().next().unwrap_or_default(),
+                        latency_us: job.t0.elapsed().as_micros() as u64,
+                    }
+                });
+                if let Ok(r) = &res {
+                    metrics.record_request(r.latency_us, now_us(&start));
+                }
+                let _ = job.reply.send(res);
+            }
+        }
+        metrics
+    }
+}

@@ -1,0 +1,15 @@
+//! Energy and area models (paper §5 Methodology, Table 4).
+//!
+//! The paper synthesizes RTL (Design Compiler, 65 nm) and uses CACTI for
+//! SRAM; we cannot run either, so these are compositional analytical
+//! models: unit counts × per-primitive costs, with Stillmaker-Baas
+//! technology scaling. Per-primitive area constants are calibrated so the
+//! composed 32 nm totals reproduce the paper's Table 4 breakdown; energy
+//! constants follow Horowitz (ISSCC'14). All constants are documented at
+//! their definition.
+
+mod area;
+mod power;
+
+pub use area::{scale_area, AreaBreakdown, AreaModel, TechNode};
+pub use power::{EnergyModel, OpEnergy};

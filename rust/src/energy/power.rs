@@ -1,0 +1,104 @@
+//! Energy model (paper §5): logic energy from per-op costs (Horowitz,
+//! ISSCC'14, scaled to the modeled node), SRAM access energy
+//! (CACTI-class), and off-chip LPDDR4 at 4 pJ/bit.
+
+
+/// Per-operation energies in pJ at ~32 nm. INT8 ops are the H2-quantized
+/// SSA/GEMM datapath; FP16 ops cover VPU/SFU/PPU lanes.
+#[derive(Debug, Clone, Copy)]
+pub struct OpEnergy {
+    pub int8_mac_pj: f64,
+    pub fp16_mac_pj: f64,
+    pub fp32_op_pj: f64,
+    pub sram_pj_per_byte: f64,
+    pub dram_pj_per_bit: f64,
+    /// Static power per mm² of logic, watts (leakage + clock tree).
+    pub static_w_per_mm2: f64,
+}
+
+impl Default for OpEnergy {
+    fn default() -> Self {
+        Self {
+            // Horowitz: int8 add 0.03 pJ + int8 mult 0.2 pJ (45 nm) ~> MAC
+            // with operand movement at 32 nm.
+            int8_mac_pj: 0.3,
+            // fp16 add 0.4 + mult 1.1 + movement.
+            fp16_mac_pj: 1.8,
+            fp32_op_pj: 2.5,
+            // 32-384 KB scratchpad read/write per byte.
+            sram_pj_per_byte: 1.2,
+            // LPDDR4 (paper §5).
+            dram_pj_per_bit: 4.0,
+            static_w_per_mm2: 0.10,
+        }
+    }
+}
+
+/// Accumulates energy for one simulated execution.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyModel {
+    pub int8_macs: f64,
+    pub fp16_macs: f64,
+    pub fp32_ops: f64,
+    pub sram_bytes: f64,
+    pub dram_bytes: f64,
+}
+
+impl EnergyModel {
+    pub fn add_int8_macs(&mut self, n: f64) {
+        self.int8_macs += n;
+    }
+    pub fn add_fp16_macs(&mut self, n: f64) {
+        self.fp16_macs += n;
+    }
+    pub fn add_fp32_ops(&mut self, n: f64) {
+        self.fp32_ops += n;
+    }
+    pub fn add_sram_bytes(&mut self, n: f64) {
+        self.sram_bytes += n;
+    }
+    pub fn add_dram_bytes(&mut self, n: f64) {
+        self.dram_bytes += n;
+    }
+
+    /// Total energy in joules for a run taking `seconds` on `area_mm2` of
+    /// logic.
+    pub fn total_joules(&self, e: &OpEnergy, seconds: f64, area_mm2: f64) -> f64 {
+        let dynamic = self.int8_macs * e.int8_mac_pj
+            + self.fp16_macs * e.fp16_mac_pj
+            + self.fp32_ops * e.fp32_op_pj
+            + self.sram_bytes * e.sram_pj_per_byte
+            + self.dram_bytes * 8.0 * e.dram_pj_per_bit;
+        dynamic * 1e-12 + e.static_w_per_mm2 * area_mm2 * seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_cheaper_than_fp16() {
+        let e = OpEnergy::default();
+        assert!(e.int8_mac_pj < e.fp16_mac_pj / 2.0);
+    }
+
+    #[test]
+    fn dram_dominates_sram_per_byte() {
+        // Off-chip is ~an order of magnitude costlier per byte: the whole
+        // premise of minimizing spills (paper §3.2).
+        let e = OpEnergy::default();
+        assert!(8.0 * e.dram_pj_per_bit > 10.0 * e.sram_pj_per_byte);
+    }
+
+    #[test]
+    fn accumulation() {
+        let mut m = EnergyModel::default();
+        m.add_int8_macs(1e9);
+        m.add_dram_bytes(1e6);
+        let j = m.total_joules(&OpEnergy::default(), 1e-3, 10.0);
+        // 1e9 * 0.3 pJ = 0.3 mJ; 1e6 B * 32 pJ = 32 µJ;
+        // static 0.1 W/mm² x 10 mm² x 1 ms = 1 mJ.
+        assert!((j - (3.0e-4 + 3.2e-5 + 1e-3)).abs() < 1e-8);
+    }
+}

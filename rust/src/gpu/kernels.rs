@@ -1,0 +1,137 @@
+//! Per-operator GPU timing: the device model driving Figs 1/4/7/8.
+
+use crate::config::GpuConfig;
+use crate::vision::Op;
+
+use super::scan::scan_kernel_model;
+use super::Report;
+
+/// FP16 element size for GEMM operands (the paper's AMP baseline).
+const GEMM_ELEM: f64 = 2.0;
+/// f32 for everything else.
+const ELEM: f64 = 4.0;
+/// Achievable fraction of DRAM bandwidth for streaming kernels.
+const STREAM_BW_EFF: f64 = 0.80;
+/// Kernel launch overhead (CUDA dispatch + driver), seconds.
+const LAUNCH_OVERHEAD_S: f64 = 5e-6;
+/// Energy per FP32-equivalent FLOP, pJ (Horowitz ISSCC'14 ballpark for a
+/// 12-16 nm mobile GPU datapath incl. register/operand movement).
+const GPU_PJ_PER_FLOP: f64 = 2.0;
+/// Static (leakage + uncore) fraction of TDP burned while running.
+const STATIC_POWER_FRACTION: f64 = 0.35;
+
+/// A GPU device model: runs workloads built by [`crate::vision`].
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub cfg: GpuConfig,
+}
+
+impl GpuModel {
+    pub fn new(cfg: GpuConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// cuBLAS-like tensor-core efficiency: large square-ish GEMMs approach
+    /// ~65% of peak; small or skinny ones fall off.
+    fn gemm_efficiency(&self, m: usize, n: usize, k: usize) -> f64 {
+        let size_factor = |d: usize, t: f64| (d as f64 / t).min(1.0);
+        0.65 * size_factor(m, 256.0) * size_factor(n, 64.0).max(0.4) * size_factor(k, 64.0).max(0.4)
+    }
+
+    /// Time + traffic for one operator.
+    pub fn run_op(&self, op: &Op) -> (f64, f64, f64) {
+        // returns (seconds, read_bytes, write_bytes)
+        match *op {
+            Op::Gemm { m, n, k } => {
+                let eff = self.gemm_efficiency(m, n, k).max(0.02);
+                let t_comp = op.flops() / (self.cfg.tensor_flops() * eff);
+                let read = ((m * k + k * n) as f64) * GEMM_ELEM;
+                let write = (m * n) as f64 * GEMM_ELEM;
+                let t_mem = (read + write) / (self.cfg.dram_bw() * STREAM_BW_EFF);
+                (t_comp.max(t_mem) + LAUNCH_OVERHEAD_S, read, write)
+            }
+            Op::SelectiveSsm { l, h, n_state } => {
+                let e = scan_kernel_model(&self.cfg, l, h, n_state);
+                (
+                    e.seconds + LAUNCH_OVERHEAD_S,
+                    e.ideal_read + e.spill_bytes / 2.0,
+                    e.ideal_write + e.spill_bytes / 2.0,
+                )
+            }
+            // Streaming (bandwidth-bound) kernels.
+            Op::LayerNorm { .. } | Op::Conv1d { .. } | Op::Elementwise { .. } | Op::Sfu { .. } => {
+                let bytes = op.ideal_bytes(ELEM);
+                let t_mem = bytes / (self.cfg.dram_bw() * STREAM_BW_EFF);
+                let t_comp = op.flops() / (self.cfg.fp32_flops() * 0.5);
+                (t_mem.max(t_comp) + LAUNCH_OVERHEAD_S, bytes / 2.0, bytes / 2.0)
+            }
+        }
+    }
+
+    /// Run a whole workload; aggregates per Fig 4 class.
+    pub fn run(&self, ops: &[Op]) -> Report {
+        let mut r = Report::default();
+        let mut flops = 0.0;
+        for op in ops {
+            let (s, rd, wr) = self.run_op(op);
+            r.add_seconds(op.class(), s);
+            r.read_bytes += rd;
+            r.write_bytes += wr;
+            flops += op.flops();
+        }
+        let t = r.total_seconds();
+        r.energy_j = self.cfg.tdp_w * STATIC_POWER_FRACTION * t
+            + flops * GPU_PJ_PER_FLOP * 1e-12
+            + (r.read_bytes + r.write_bytes) * 8.0 * self.cfg.dram_pj_per_bit * 1e-12;
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::VimModel;
+    use crate::vision::{vim_model_ops, OpClass};
+
+    fn xavier() -> GpuModel {
+        GpuModel::new(GpuConfig::xavier())
+    }
+
+    #[test]
+    fn scan_dominates_at_high_resolution() {
+        // Paper Fig 4: selective SSM >= ~50-60% of encoder latency at >=512.
+        let m = VimModel::tiny();
+        let r = xavier().run(&vim_model_ops(&m, 738));
+        let frac = r.seconds(OpClass::SelectiveSsm) / r.total_seconds();
+        assert!(frac > 0.4, "scan fraction {frac}");
+    }
+
+    #[test]
+    fn gemm_grows_with_model_size() {
+        // Paper Fig 18: Base is increasingly GEMM-dominated.
+        let tiny = xavier().run(&vim_model_ops(&VimModel::tiny(), 512));
+        let base = xavier().run(&vim_model_ops(&VimModel::base(), 512));
+        let f_t = tiny.seconds(OpClass::Gemm) / tiny.total_seconds();
+        let f_b = base.seconds(OpClass::Gemm) / base.total_seconds();
+        assert!(f_b > f_t);
+    }
+
+    #[test]
+    fn latency_increases_with_image_size() {
+        let m = VimModel::small();
+        let mut last = 0.0;
+        for img in [224, 512, 1024] {
+            let t = xavier().run(&vim_model_ops(&m, img)).total_seconds();
+            assert!(t > last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn energy_positive_and_bounded() {
+        let r = xavier().run(&vim_model_ops(&VimModel::tiny(), 224));
+        assert!(r.energy_j > 0.0);
+        // An edge inference can't plausibly burn > 100 J.
+        assert!(r.energy_j < 100.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Edge-GPU performance model (paper §3: Figs 1, 4, 7, 8).
+//!
+//! The paper characterizes Vision Mamba on a *real* Jetson AGX Xavier; we
+//! have no such device (DESIGN.md substitution table), so this module
+//! implements the mechanisms the paper identifies, parameterized by the
+//! published device configs:
+//!
+//! * GEMM runs on tensor cores near a size-dependent fraction of peak
+//!   (cuBLAS-like efficiency curve) — [`kernels`];
+//! * the fused selective-SSM kernel parallelizes only the hidden dimension,
+//!   performs Kogge-Stone warp scans with branch divergence, pays explicit
+//!   inter-warp synchronization, and spills intermediate state to off-chip
+//!   memory when shared memory is exhausted — [`scan`];
+//! * everything else (LayerNorm, conv1d, element-wise) is bandwidth-bound.
+
+mod kernels;
+mod roofline;
+mod scan;
+
+pub use kernels::GpuModel;
+pub use roofline::{roofline_point, RooflinePoint};
+pub use scan::{scan_kernel_model, ScanKernelEstimate};
+
+use std::collections::HashMap;
+
+use crate::vision::OpClass;
+
+/// Result of running a workload through a device model.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Seconds per Fig 4 latency class.
+    pub class_seconds: HashMap<OpClass, f64>,
+    /// Off-chip traffic.
+    pub read_bytes: f64,
+    pub write_bytes: f64,
+    /// Energy, joules.
+    pub energy_j: f64,
+}
+
+impl Report {
+    pub fn total_seconds(&self) -> f64 {
+        self.class_seconds.values().sum()
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    pub fn seconds(&self, class: OpClass) -> f64 {
+        self.class_seconds.get(&class).copied().unwrap_or(0.0)
+    }
+
+    pub fn add_seconds(&mut self, class: OpClass, s: f64) {
+        *self.class_seconds.entry(class).or_insert(0.0) += s;
+    }
+
+    pub fn merge(&mut self, other: &Report) {
+        for (c, s) in &other.class_seconds {
+            self.add_seconds(*c, *s);
+        }
+        self.read_bytes += other.read_bytes;
+        self.write_bytes += other.write_bytes;
+        self.energy_j += other.energy_j;
+    }
+}

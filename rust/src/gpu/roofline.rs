@@ -1,0 +1,69 @@
+//! Roofline analysis (paper Fig 7): operational intensity vs achieved
+//! performance for selective SSM and GEMM on the edge GPU.
+
+use crate::config::{GpuConfig, VimModel};
+use crate::vision::Op;
+
+use super::kernels::GpuModel;
+
+/// One point of Fig 7.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// FLOPs / off-chip byte.
+    pub intensity: f64,
+    /// Achieved FLOPS.
+    pub achieved_flops: f64,
+    /// Fraction of the applicable peak (tensor peak for GEMM, CUDA-core
+    /// peak for the scan).
+    pub peak_fraction: f64,
+}
+
+/// Compute the Fig 7 roofline point for an op on a GPU.
+pub fn roofline_point(gpu: &GpuConfig, model: &VimModel, img: usize, op: &Op) -> RooflinePoint {
+    let gm = GpuModel::new(gpu.clone());
+    let (s, rd, wr) = gm.run_op(op);
+    let flops = op.flops();
+    let achieved = flops / s;
+    let peak = match op {
+        Op::Gemm { .. } => gpu.tensor_flops(),
+        _ => gpu.fp32_flops(),
+    };
+    RooflinePoint {
+        label: format!("{}@{img}:{:?}", model.name, op.class()),
+        intensity: flops / (rd + wr).max(1.0),
+        achieved_flops: achieved,
+        peak_fraction: achieved / peak,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_scan_below_gemm() {
+        // Paper Fig 7: selective SSM has far lower intensity AND achieved
+        // performance than GEMM, at every size.
+        let gpu = GpuConfig::xavier();
+        let m = VimModel::small();
+        for img in [224usize, 512, 1024] {
+            let l = m.seq_len(img);
+            let scan = roofline_point(
+                &gpu,
+                &m,
+                img,
+                &Op::SelectiveSsm { l, h: m.d_inner(), n_state: m.d_state },
+            );
+            let gemm = roofline_point(
+                &gpu,
+                &m,
+                img,
+                &Op::Gemm { m: l, n: 2 * m.d_inner(), k: m.d_model },
+            );
+            assert!(scan.intensity < gemm.intensity);
+            assert!(scan.achieved_flops < gemm.achieved_flops);
+            assert!(scan.peak_fraction < 0.3);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Fused selective-SSM GPU kernel model (paper §3.2, Figs 5/6/8).
+//!
+//! Mechanisms modeled, with the paper's reasoning:
+//!
+//! 1. **h-only parallelism** (Fig 5): the fused kernel launches one thread
+//!    block per hidden channel. The scan over the state dimension runs
+//!    *sequentially inside* the block, because step 3's inner product along
+//!    m forces the block to own all m rows.
+//! 2. **Kogge-Stone divergence** (Fig 6(a)): at scan step `d`, only
+//!    `W - d` of the `W` threads in a warp combine; the average active
+//!    fraction over log2(W) steps caps warp efficiency.
+//! 3. **Inter-warp synchronization** (Fig 6(b)): warp partials go through
+//!    shared memory with a block-wide barrier per combine level.
+//! 4. **Shared-memory spills** (Fig 8): the per-block working set
+//!    (intermediate state + staged partials for all m rows) exceeds the
+//!    edge GPU's per-SM shared memory, so the overflow round-trips to
+//!    off-chip DRAM once per scan pass.
+
+use crate::config::GpuConfig;
+
+/// Cycles for one block-wide `__syncthreads()` round trip.
+const BARRIER_CYCLES: f64 = 40.0;
+/// Effective cycles per element per Kogge-Stone step: two shared-memory
+/// loads + one store + the MAC, with bank conflicts — smem-latency-bound,
+/// not ALU-bound (why scans underuse GPUs even before divergence).
+const SMEM_STEP_COST: f64 = 6.0;
+/// Warps that must be resident per core-group to hide ALU+mem latency.
+const LATENCY_HIDING: f64 = 4.0;
+/// DRAM efficiency for strided spill traffic.
+const SPILL_BW_EFF: f64 = 0.75;
+/// f32 element size on the GPU path (paper baseline is FP16 AMP for GEMM,
+/// but the scan state is kept at f32 by the CUB implementation).
+const ELEM: f64 = 4.0;
+
+/// Timing + traffic estimate for one fused selective-SSM invocation.
+#[derive(Debug, Clone)]
+pub struct ScanKernelEstimate {
+    pub seconds: f64,
+    /// Compulsory (ideal) off-chip bytes.
+    pub ideal_read: f64,
+    pub ideal_write: f64,
+    /// Spill traffic beyond ideal (read + write symmetric).
+    pub spill_bytes: f64,
+    /// Average fraction of launched threads doing useful work.
+    pub compute_utilization: f64,
+    /// Achieved FLOPS.
+    pub achieved_flops: f64,
+}
+
+/// Average active-lane fraction of a Kogge-Stone scan over `width` lanes.
+///
+/// Step with offset d has (width - d) active lanes; offsets are
+/// 1, 2, 4, ... width/2.
+pub fn kogge_stone_active_fraction(width: usize) -> f64 {
+    let mut active = 0.0;
+    let mut steps = 0.0;
+    let mut d = 1;
+    while d < width {
+        active += (width - d) as f64;
+        steps += 1.0;
+        d *= 2;
+    }
+    active / (steps * width as f64)
+}
+
+/// Model one fused selective-SSM kernel: `l` sequence steps, `h` hidden
+/// channels (thread blocks), `n_state` state rows per block.
+pub fn scan_kernel_model(gpu: &GpuConfig, l: usize, h: usize, n_state: usize) -> ScanKernelEstimate {
+    let w = gpu.warp_size;
+    let lf = l as f64;
+    let hf = h as f64;
+    let nf = n_state as f64;
+    let freq = gpu.freq_ghz * 1e9;
+
+    // ---- occupancy / parallelism ----------------------------------------
+    let threads_per_block = (l.min(1024)) as f64;
+    let warps_per_block = (threads_per_block / w as f64).ceil().max(1.0);
+    // Working set per block: the Kogge-Stone scan needs the (P, Q)
+    // partial arrays over L resident for its log-step updates (one state
+    // row at a time — step 3 consumes y_n streaming), plus the staged
+    // operand tile (u, delta, B, C) and inter-warp partials.
+    let ws_per_block = 2.0 * lf * ELEM       // P, Q partial arrays
+        + warps_per_block * nf * 2.0 * ELEM  // inter-warp partials
+        + 4.0 * lf * ELEM; // u, delta, B, C staging
+    let smem_per_sm = gpu.smem_per_sm_kb * 1024.0;
+    let blocks_per_sm = if smem_per_sm.is_infinite() {
+        16.0
+    } else {
+        (smem_per_sm / ws_per_block).floor().clamp(1.0, 16.0)
+    };
+    let concurrent_blocks = blocks_per_sm * gpu.sms as f64;
+    let waves = (hf / concurrent_blocks).ceil().max(1.0);
+
+    // ---- per-block cycles -------------------------------------------------
+    // Each of the n_state rows runs: intra-warp KS scan (log2 W steps at
+    // divergence-limited efficiency), log2(warps) inter-warp combine levels
+    // (each a barrier), then the apply pass.
+    let div = kogge_stone_active_fraction(w);
+    let intra_steps = (w as f64).log2();
+    // Cycles for one scan pass over l elements with `threads_per_block`
+    // threads on (cuda_cores / sms) cores shared by blocks_per_sm blocks.
+    let cores_per_block = (gpu.cuda_cores as f64 / gpu.sms as f64 / blocks_per_sm).max(1.0);
+    let elem_cycles_per_row = (lf / cores_per_block).max(1.0);
+    let scan_cycles_per_row = elem_cycles_per_row * intra_steps * SMEM_STEP_COST / div
+        + warps_per_block.log2().ceil().max(0.0) * BARRIER_CYCLES
+        + elem_cycles_per_row * 2.0; // apply pass (smem read + write)
+    // Discretize (exp + 2 mul) + C-reduce (2 ops) add ~5 element-ops/row.
+    let aux_cycles_per_row = 5.0 * elem_cycles_per_row;
+    let block_cycles = nf * (scan_cycles_per_row + aux_cycles_per_row);
+
+    // Underutilization when too few blocks to hide latency (small h).
+    let occupancy = (concurrent_blocks.min(hf) * warps_per_block
+        / (gpu.sms as f64 * LATENCY_HIDING * 2.0))
+        .clamp(0.05, 1.0);
+    let compute_seconds = waves * block_cycles / occupancy / freq;
+
+    // ---- traffic ----------------------------------------------------------
+    // Compulsory: the SelectiveSsm op's ideal bytes.
+    let ideal_read = (4.0 * lf * hf + 2.0 * lf * nf + hf * nf) * ELEM;
+    let ideal_write = lf * hf * ELEM;
+    // Spill: per block, whatever exceeds its shared-memory share makes one
+    // store+load round trip per inter-warp combine level (CUB re-stages
+    // partials each level).
+    let smem_share = if smem_per_sm.is_infinite() {
+        f64::INFINITY
+    } else {
+        smem_per_sm / blocks_per_sm
+    };
+    let excess = (ws_per_block - smem_share).max(0.0);
+    // The spilled region round-trips once per Kogge-Stone pass that
+    // touches it; passes beyond the first few hit in DRAM row buffers /
+    // TLB-warm regions, so the effective re-read factor is capped.
+    let levels = (1.0 + warps_per_block.log2().ceil()).min(3.0);
+    // Spills that still fit in the LLC stay on chip (the A100's 40 MB L2
+    // absorbs what its SMEM can't — Fig 8's A100 ~ Ideal); on the edge GPU
+    // the overflow goes to LPDDR. The spill repeats for each of the
+    // n_state sequential row passes.
+    let resident_excess = excess * concurrent_blocks.min(hf);
+    let spill_bytes = if excess > 0.0 && resident_excess > gpu.l2_mb * 1e6 {
+        excess * levels * hf
+    } else {
+        0.0
+    };
+
+    let mem_seconds = (ideal_read + ideal_write + spill_bytes) / (gpu.dram_bw() * SPILL_BW_EFF);
+
+    let seconds = compute_seconds.max(mem_seconds);
+    let flops = 8.0 * lf * hf * nf + 3.0 * lf * hf;
+    ScanKernelEstimate {
+        seconds,
+        ideal_read,
+        ideal_write,
+        spill_bytes,
+        compute_utilization: div * occupancy,
+        achieved_flops: flops / seconds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ks_active_fraction_w32() {
+        // Offsets 1,2,4,8,16 -> active 31,30,28,24,16 of 32 over 5 steps.
+        let f = kogge_stone_active_fraction(32);
+        assert!((f - (31.0 + 30.0 + 28.0 + 24.0 + 16.0) / 160.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xavier_spills_a100_does_not() {
+        // Paper Fig 8: at high resolution Xavier spills, A100 ~ ideal.
+        let l = 4097; // 1024x1024 image, patch 16
+        let (h, n) = (384, 16);
+        let xav = scan_kernel_model(&GpuConfig::xavier(), l, h, n);
+        let a100 = scan_kernel_model(&GpuConfig::a100(), l, h, n);
+        let ideal = scan_kernel_model(&GpuConfig::ideal(), l, h, n);
+        assert!(xav.spill_bytes > 0.0);
+        assert_eq!(ideal.spill_bytes, 0.0);
+        assert!(a100.spill_bytes <= xav.spill_bytes * 0.2);
+    }
+
+    #[test]
+    fn no_spill_at_low_resolution() {
+        // 224x224 (l=197) fits in Xavier's shared memory.
+        let e = scan_kernel_model(&GpuConfig::xavier(), 197, 384, 16);
+        assert_eq!(e.spill_bytes, 0.0);
+    }
+
+    #[test]
+    fn utilization_is_poor() {
+        // Paper Fig 7: selective SSM sits far below peak.
+        let e = scan_kernel_model(&GpuConfig::xavier(), 1025, 384, 16);
+        let peak = GpuConfig::xavier().fp32_flops();
+        assert!(
+            e.achieved_flops < 0.25 * peak,
+            "scan should be far from peak: {} vs {}",
+            e.achieved_flops,
+            peak
+        );
+    }
+
+    #[test]
+    fn seconds_scale_superlinearly_when_spilling() {
+        let g = GpuConfig::xavier();
+        let t1 = scan_kernel_model(&g, 1025, 384, 16).seconds;
+        let t4 = scan_kernel_model(&g, 4097, 384, 16).seconds;
+        assert!(t4 / t1 > 3.5);
+    }
+}

@@ -1,0 +1,40 @@
+//! # Mamba-X — an end-to-end Vision Mamba accelerator for edge devices
+//!
+//! Full-system reproduction of the ICCAD'25 paper (Yoon et al., KAIST).
+//! The crate contains:
+//!
+//! * [`config`] — model (paper Table 3) and hardware (paper Table 2)
+//!   configurations for Mamba-X, the Jetson AGX Xavier edge GPU baseline,
+//!   the A100 reference, and an infinite-SRAM "Ideal" device;
+//! * [`vision`] — operator-level workload models of Vision Mamba and the
+//!   ViT baseline (op/byte counts per encoder, per image size);
+//! * [`gpu`] — the edge-GPU performance model: fused selective-scan kernel
+//!   with Kogge-Stone warp divergence and shared-memory spill traffic,
+//!   tensor-core GEMM roofline (paper §3, Figs 4/7/8);
+//! * [`sim`] — the cycle-level Mamba-X simulator: DMA, on-chip buffer,
+//!   LPDDR memory, GEMM engine, VPU, SFU, SSA (+SPE), PPU (+LISU)
+//!   (paper §4, Figs 9-13);
+//! * [`quant`] — the bit-exact INT8 SPE datapath + H2 scale machinery
+//!   (paper §4.4, Fig 16), replaying golden vectors from the python side;
+//! * [`energy`] — energy and area models with technology scaling
+//!   (paper §5, Table 4);
+//! * [`runtime`] — the PJRT runtime that loads AOT artifacts
+//!   (`artifacts/*.hlo.txt`) and executes them on the request path;
+//! * [`coordinator`] — the edge-serving coordinator: request router,
+//!   dynamic batcher, latency/energy accounting.
+//!
+//! Python/JAX/Pallas exist only at build time (`make artifacts`); the
+//! serving path is pure rust + PJRT.
+
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod gpu;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod vision;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,444 @@
+//! `mamba-x` CLI: serve, simulate, and regenerate the paper's figures.
+//!
+//! Arg parsing is hand-rolled (`--key value` flags after a subcommand);
+//! clap is unavailable in the offline build.
+
+use anyhow::{bail, Result};
+
+use mamba_x::config::{GpuConfig, MambaXConfig, VimModel, IMAGE_SIZES, SSA_SWEEP};
+use mamba_x::energy::{AreaModel, TechNode};
+use mamba_x::gpu::GpuModel;
+use mamba_x::sim::Accelerator;
+use mamba_x::vision::{vim_model_ops, vim_selective_ssm_ops, OpClass};
+
+const USAGE: &str = "\
+mamba-x — Mamba-X Vision Mamba accelerator (ICCAD'25 reproduction)
+
+USAGE: mamba-x <COMMAND> [--key value ...]
+
+COMMANDS:
+  config                          show the Table 2 system configurations
+  area     [--ssas 8]             show the Table 4 area breakdown
+  sim      [--model tiny] [--img 224] [--ssas 8]
+                                  simulate one inference vs the edge GPU
+  figures  --fig N                print a paper figure (1, 4, 7, 8, 17, 18)
+  serve    [--artifacts artifacts] [--requests 64] [--max-batch 8]
+                                  serve the compiled model (E2E demo)
+";
+
+/// Minimal `--key value` flag parser.
+struct Flags {
+    pairs: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Result<Flags> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = &args[i];
+            if !k.starts_with("--") {
+                bail!("unexpected argument {k:?}\n\n{USAGE}");
+            }
+            let v = args.get(i + 1).ok_or_else(|| anyhow::anyhow!("missing value for {k}"))?;
+            pairs.push((k[2..].to_string(), v.clone()));
+            i += 2;
+        }
+        Ok(Flags { pairs })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn string(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "config" => cmd_config(),
+        "area" => cmd_area(flags.usize("ssas", 8)?),
+        "sim" => cmd_sim(
+            &flags.string("model", "tiny"),
+            flags.usize("img", 224)?,
+            flags.usize("ssas", 8)?,
+        ),
+        "figures" => cmd_figures(flags.usize("fig", 0)? as u32),
+        "serve" => cmd_serve(
+            &flags.string("artifacts", "artifacts"),
+            flags.usize("requests", 64)?,
+            flags.usize("max-batch", 8)?,
+        ),
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn cmd_config() -> Result<()> {
+    let x = GpuConfig::xavier();
+    let m = MambaXConfig::default();
+    println!("== Table 2: system configurations ==");
+    println!(
+        "Jetson AGX Xavier: {} CUDA cores, {} tensor cores, {:.2} GHz,",
+        x.cuda_cores, x.tensor_cores, x.freq_ghz
+    );
+    println!(
+        "  {:.0} FP16 TFLOPS, {:.0} KB on-chip, {:.1} GB/s",
+        x.tensor_tflops,
+        x.total_smem_bytes() / 1024.0,
+        x.dram_bw_gbs
+    );
+    println!(
+        "Mamba-X: {} SSAs (chunk {}), {}x{} GEMM PEs, {:.1} GHz,",
+        m.n_ssa, m.chunk, m.gemm_rows, m.gemm_cols, m.freq_ghz
+    );
+    println!(
+        "  {:.2} TOPS GEMM, {:.0} KB on-chip, {:.1} GB/s",
+        m.gemm_ops() / 1e12,
+        m.onchip_kb,
+        m.dram_bw_gbs
+    );
+    Ok(())
+}
+
+fn cmd_area(ssas: usize) -> Result<()> {
+    let cfg = MambaXConfig::with_ssas(ssas);
+    println!("== Table 4: area breakdown (mm^2), {} SSAs ==", ssas);
+    println!(
+        "{:>6} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7} {:>7}",
+        "node", "SSA", "SFU", "VPU", "PPU", "GEMM", "Buffer", "Others", "Total"
+    );
+    for node in [TechNode::N32, TechNode::N12] {
+        let a = AreaModel::mamba_x(&cfg).at(node);
+        println!(
+            "{:>6} {:>7.2} {:>7.2} {:>7.2} {:>7.2} {:>7.2} {:>7.2} {:>7.2} {:>7.2}",
+            format!("{:?}", node),
+            a.ssa,
+            a.sfu,
+            a.vpu,
+            a.ppu,
+            a.gemm,
+            a.buffer,
+            a.others,
+            a.total()
+        );
+    }
+    let a12 = AreaModel::mamba_x(&cfg).at(TechNode::N12).total();
+    println!(
+        "vs Xavier die ({} mm^2 @12nm): {:.2}% of die",
+        GpuConfig::xavier().die_mm2,
+        100.0 * a12 / GpuConfig::xavier().die_mm2
+    );
+    Ok(())
+}
+
+fn cmd_sim(model: &str, img: usize, ssas: usize) -> Result<()> {
+    let m = VimModel::by_name(model).ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
+    let ops = vim_model_ops(&m, img);
+    let acc = Accelerator::new(MambaXConfig::with_ssas(ssas));
+    let gpu = GpuModel::new(GpuConfig::xavier());
+    let ra = acc.run(&ops);
+    let rg = gpu.run(&ops);
+    println!("== {model}@{img}: Mamba-X ({ssas} SSAs) vs edge GPU ==");
+    println!(
+        "Mamba-X : {:>9.3} ms  traffic {:>8.1} MB  energy {:>7.1} mJ",
+        ra.seconds(&acc.cfg) * 1e3,
+        ra.total_bytes() / 1e6,
+        ra.energy_j * 1e3
+    );
+    println!(
+        "edge GPU: {:>9.3} ms  traffic {:>8.1} MB  energy {:>7.1} mJ",
+        rg.total_seconds() * 1e3,
+        rg.total_bytes() / 1e6,
+        rg.energy_j * 1e3
+    );
+    println!(
+        "speedup {:.2}x  traffic {:.2}x  energy-eff {:.2}x",
+        rg.total_seconds() / ra.seconds(&acc.cfg),
+        rg.total_bytes() / ra.total_bytes(),
+        rg.energy_j / ra.energy_j
+    );
+    println!("\nper-class breakdown (Fig 4/18):");
+    for c in OpClass::ALL {
+        println!(
+            "  {:<13} gpu {:>9.3} ms   mamba-x {:>9.3} ms",
+            c.label(),
+            rg.seconds(c) * 1e3,
+            ra.cycles(c) as f64 / (acc.cfg.freq_ghz * 1e9) * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figures(fig: u32) -> Result<()> {
+    match fig {
+        1 => figures::fig1(),
+        4 => figures::fig4(),
+        7 => figures::fig7(),
+        8 => figures::fig8(),
+        17 => figures::fig17(),
+        18 => figures::fig18(),
+        n => anyhow::bail!("no figure {n}; available: 1 4 7 8 17 18"),
+    }
+    Ok(())
+}
+
+pub mod figures {
+    use super::*;
+    use mamba_x::config::VitModel;
+    use mamba_x::gpu::roofline_point;
+    use mamba_x::vision::{vit_model_ops, vit_score_matrix_bytes, Op};
+
+    pub fn fig1() {
+        println!("== Fig 1: ViT vs Vision Mamba on the edge GPU ==");
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        let vim = VimModel::tiny();
+        let vit = VitModel::tiny();
+        println!("{:>6} {:>12} {:>12} {:>12} {:>12}", "img", "ViT ms", "Vim ms", "ViT MB", "Vim MB");
+        for img in [224usize, 448, 672, 896, 1024] {
+            let tv = gpu.run(&vit_model_ops(&vit, img)).total_seconds() * 1e3;
+            let tm = gpu.run(&vim_model_ops(&vim, img)).total_seconds() * 1e3;
+            // Memory: params (fp16) + peak activations (the L x L score
+            // matrix for ViT; O(L) activations for Vim).
+            let mv = (vit.param_count() as f64 * 2.0
+                + vit_score_matrix_bytes(&vit, img, 2.0)
+                + vit.seq_len(img) as f64 * vit.d_model as f64 * 4.0 * 2.0)
+                / 1e6;
+            let mm = (vim.param_count() as f64 * 2.0
+                + vim.seq_len(img) as f64 * vim.d_inner() as f64 * 4.0 * 4.0)
+                / 1e6;
+            println!("{:>6} {:>12.2} {:>12.2} {:>12.1} {:>12.1}", img, tv, tm, mv, mm);
+        }
+    }
+
+    pub fn fig4() {
+        println!("== Fig 4: Vim encoder latency breakdown on edge GPU (%) ==");
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        println!(
+            "{:>7} {:>5} {:>7} {:>9} {:>7} {:>9} {:>12}",
+            "model", "img", "GEMM", "LayerNorm", "Conv1D", "Elemwise", "SelectiveSSM"
+        );
+        for name in VimModel::ALL {
+            let m = VimModel::by_name(name).unwrap();
+            for img in IMAGE_SIZES {
+                let r = gpu.run(&vim_model_ops(&m, img));
+                let t = r.total_seconds();
+                let pct = |c| 100.0 * r.seconds(c) / t;
+                println!(
+                    "{:>7} {:>5} {:>6.1}% {:>8.1}% {:>6.1}% {:>8.1}% {:>11.1}%",
+                    name,
+                    img,
+                    pct(OpClass::Gemm),
+                    pct(OpClass::LayerNorm),
+                    pct(OpClass::Conv1d),
+                    pct(OpClass::Elementwise),
+                    pct(OpClass::SelectiveSsm)
+                );
+            }
+        }
+    }
+
+    pub fn fig7() {
+        println!("== Fig 7: roofline on Xavier (intensity FLOP/B, achieved GFLOPS) ==");
+        let gpu = GpuConfig::xavier();
+        println!("{:>7} {:>5} {:>18} {:>18}", "model", "img", "scan (I, GFLOPS)", "gemm (I, GFLOPS)");
+        for name in VimModel::ALL {
+            let m = VimModel::by_name(name).unwrap();
+            for img in IMAGE_SIZES {
+                let l = m.seq_len(img);
+                let scan = roofline_point(
+                    &gpu,
+                    &m,
+                    img,
+                    &Op::SelectiveSsm { l, h: m.d_inner(), n_state: m.d_state },
+                );
+                let gemm = roofline_point(
+                    &gpu,
+                    &m,
+                    img,
+                    &Op::Gemm { m: l, n: 2 * m.d_inner(), k: m.d_model },
+                );
+                println!(
+                    "{:>7} {:>5} {:>8.1} {:>9.1} {:>8.1} {:>9.1}",
+                    name,
+                    img,
+                    scan.intensity,
+                    scan.achieved_flops / 1e9,
+                    gemm.intensity,
+                    gemm.achieved_flops / 1e9
+                );
+            }
+        }
+    }
+
+    pub fn fig8() {
+        println!("== Fig 8: selective-SSM off-chip traffic, normalized to Ideal@224 READ ==");
+        let m = VimModel::tiny();
+        let devices = [GpuConfig::ideal(), GpuConfig::a100(), GpuConfig::xavier()];
+        let l224 = m.seq_len(224);
+        let ideal224 = GpuModel::new(GpuConfig::ideal()).run(&vim_selective_ssm_ops(&m, l224));
+        let norm = ideal224.read_bytes;
+        println!("{:>7} {:>6} {:>9} {:>9}", "device", "img", "READ", "WRITE");
+        for dev in devices {
+            let gm = GpuModel::new(dev.clone());
+            for img in IMAGE_SIZES {
+                let r = gm.run(&vim_selective_ssm_ops(&m, m.seq_len(img)));
+                println!(
+                    "{:>7} {:>6} {:>9.2} {:>9.2}",
+                    dev.name,
+                    img,
+                    r.read_bytes / norm,
+                    r.write_bytes / norm
+                );
+            }
+        }
+    }
+
+    pub fn fig17() {
+        println!("== Fig 17: selective-SSM speedup / energy-eff / traffic vs edge GPU ==");
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        println!(
+            "{:>7} {:>5} {:>6} {:>9} {:>11} {:>10}",
+            "model", "img", "SSAs", "speedup", "energy-eff", "traffic-x"
+        );
+        let mut speedups = Vec::new();
+        for name in VimModel::ALL {
+            let m = VimModel::by_name(name).unwrap();
+            for img in IMAGE_SIZES {
+                let ops = vim_selective_ssm_ops(&m, m.seq_len(img));
+                let rg = gpu.run(&ops);
+                for n_ssa in SSA_SWEEP {
+                    let acc = Accelerator::new(MambaXConfig::with_ssas(n_ssa));
+                    let ra = acc.run(&ops);
+                    let sp = rg.total_seconds() / ra.seconds(&acc.cfg);
+                    let ee = rg.energy_j / ra.energy_j;
+                    let tr = rg.total_bytes() / ra.total_bytes();
+                    if n_ssa == 8 {
+                        speedups.push(sp);
+                    }
+                    println!(
+                        "{:>7} {:>5} {:>6} {:>8.1}x {:>10.1}x {:>9.2}x",
+                        name, img, n_ssa, sp, ee, tr
+                    );
+                }
+            }
+        }
+        let g: f64 = speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64;
+        println!("geomean scan speedup @8 SSAs: {:.1}x (paper: 11.6x)", g.exp());
+    }
+
+    pub fn fig18() {
+        println!("== Fig 18: end-to-end latency breakdown + energy efficiency ==");
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        println!(
+            "{:>7} {:>5} {:>11} {:>11} {:>9} {:>11}",
+            "model", "img", "gpu ms", "mamba-x ms", "speedup", "energy-eff"
+        );
+        let mut sp_all = Vec::new();
+        let mut ee_all = Vec::new();
+        for name in VimModel::ALL {
+            let m = VimModel::by_name(name).unwrap();
+            for img in IMAGE_SIZES {
+                let ops = vim_model_ops(&m, img);
+                let acc = Accelerator::new(MambaXConfig::default());
+                let ra = acc.run(&ops);
+                let rg = gpu.run(&ops);
+                let sp = rg.total_seconds() / ra.seconds(&acc.cfg);
+                let ee = rg.energy_j / ra.energy_j;
+                sp_all.push(sp);
+                ee_all.push(ee);
+                println!(
+                    "{:>7} {:>5} {:>11.2} {:>11.2} {:>8.2}x {:>10.1}x",
+                    name,
+                    img,
+                    rg.total_seconds() * 1e3,
+                    ra.seconds(&acc.cfg) * 1e3,
+                    sp,
+                    ee
+                );
+            }
+        }
+        let gm = |v: &[f64]| (v.iter().map(|s| s.ln()).sum::<f64>() / v.len() as f64).exp();
+        println!(
+            "geomean: e2e speedup {:.2}x (paper: 2.3x), energy-eff {:.1}x (paper: 11.5x)",
+            gm(&sp_all),
+            gm(&ee_all)
+        );
+    }
+}
+
+fn cmd_serve(artifacts: &str, requests: usize, max_batch: usize) -> Result<()> {
+    use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
+    use mamba_x::runtime::{Runtime, Tensor};
+
+    // Manifest is read on the main thread for shapes; the PJRT client and
+    // executable live on the worker thread (PJRT handles are not Send).
+    let meta = mamba_x::runtime::Manifest::load(
+        std::path::Path::new(artifacts).join("manifest.json"),
+    )?
+    .model;
+    println!("model: {} ({} blocks, d={})", meta.model, meta.n_blocks, meta.d_model);
+
+    let server = Server::new(BatchPolicy { max_batch, max_wait_us: 2000 });
+    let art_dir = artifacts.to_string();
+    let (handle, join) = server.spawn(move || {
+        let rt = Runtime::new(&art_dir)?;
+        println!("platform: {}", rt.platform());
+        rt.load_model()
+    });
+    let shape = meta.input.clone();
+    let n_elems: usize = shape.iter().product();
+
+    // Wait for readiness (compile + warmup) so client latencies measure
+    // steady-state serving, not cold start.
+    handle
+        .infer(InferenceRequest { id: u64::MAX, image: Tensor::zeros(shape.clone()) })
+        .expect("readiness probe");
+
+    // Client threads submit concurrently (4 synthetic camera streams).
+    let streams = 4usize;
+    let per_stream = requests.div_ceil(streams);
+    let mut clients = Vec::new();
+    for s in 0..streams {
+        let h = handle.clone();
+        let shape = shape.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut ok = 0usize;
+            for r in 0..per_stream {
+                let id = (s * per_stream + r) as u64;
+                // Synthetic image: deterministic pseudo-noise.
+                let data: Vec<f32> = (0..n_elems)
+                    .map(|i| {
+                        ((id as usize + i).wrapping_mul(2654435761) % 1000) as f32 / 500.0 - 1.0
+                    })
+                    .collect();
+                let req =
+                    InferenceRequest { id, image: Tensor::new(shape.clone(), data).unwrap() };
+                if h.infer(req).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let ok: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    drop(handle);
+    let metrics = join.join().unwrap()?;
+    println!("served {ok}/{} requests", per_stream * streams);
+    println!("{}", metrics.summary());
+    Ok(())
+}

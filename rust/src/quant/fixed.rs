@@ -1,0 +1,76 @@
+//! Uniform symmetric INT8 quantization primitives (paper Eq. (1), §2.3)
+//! and the power-of-two scale approximation (paper Fig 16).
+
+/// Symmetric INT8 maximum magnitude.
+pub const QMAX: i32 = 127;
+
+/// Round half away from zero — the paper's ⌈·⌋ operator. Must match
+/// `compile.quant.round_half_away` exactly.
+pub fn round_half_away(x: f32) -> f32 {
+    x.signum() * (x.abs() + 0.5).floor()
+}
+
+/// Eq. (1): s = X_max / (2^(b-1) - 1).
+pub fn scale_for(xmax: f32, bits: u32) -> f32 {
+    xmax.max(1e-12) / ((1u32 << (bits - 1)) - 1) as f32
+}
+
+/// Quantize to a clipped signed integer at scale `s`.
+pub fn quantize(x: f32, s: f32) -> i32 {
+    (round_half_away(x / s) as i64).clamp(-(QMAX as i64), QMAX as i64) as i32
+}
+
+/// Round a scale to the nearest power of two (Fig 16(b)).
+pub fn pow2_round(s: f32) -> f32 {
+    (round_half_away(s.max(1e-30).log2()) as f64).exp2() as f32
+}
+
+/// The right-shift amount k with s ≈ 2^-k (negative k = left shift).
+pub fn pow2_shift(s: f32) -> i32 {
+    -round_half_away(s.max(1e-30).log2()) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_away_cases() {
+        let cases = [
+            (0.5, 1.0),
+            (-0.5, -1.0),
+            (1.5, 2.0),
+            (-1.5, -2.0),
+            (2.4, 2.0),
+            (2.6, 3.0),
+            (0.0, 0.0),
+        ];
+        for (x, want) in cases {
+            assert_eq!(round_half_away(x), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn quantize_saturates() {
+        assert_eq!(quantize(1e9, 1.0), 127);
+        assert_eq!(quantize(-1e9, 1.0), -127);
+    }
+
+    #[test]
+    fn scale_eq1() {
+        assert!((scale_for(127.0, 8) - 1.0).abs() < 1e-7);
+        assert!((scale_for(1.0, 4) - 1.0 / 7.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn pow2_consistency() {
+        for s in [0.003f32, 0.004, 0.0078, 0.0156, 0.9, 1.7] {
+            let r = pow2_round(s);
+            let k = pow2_shift(s);
+            assert!((r - (-k as f64).exp2() as f32).abs() < 1e-12);
+            // Within sqrt(2) of the original.
+            assert!(r / s <= 2f32.sqrt() + 1e-4);
+            assert!(s / r <= 2f32.sqrt() + 1e-4);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! H2 quantization datapath — bit-exact mirror of `python/compile/quant.py`.
+//!
+//! The python side generates golden vectors (`artifacts/golden/*.json`);
+//! the integration tests in `rust/tests/quant_golden.rs` replay them and
+//! require exact integer equality. This is the arithmetic the SSA's SPEs
+//! implement in hardware (paper Fig 11 step 3 + Fig 16(b)).
+
+mod fixed;
+mod spe;
+
+pub use fixed::{pow2_round, pow2_shift, quantize, round_half_away, scale_for, QMAX};
+pub use spe::{rshift_round, spe_scan_int, SpeDatapath, FRAC_BITS, STATE_SAT};

@@ -1,0 +1,173 @@
+//! The SPE's integer scan datapath (paper Fig 11 + Fig 16(b)).
+//!
+//! An SPE consumes INT8 pairs (P, Q) = (quantized dA, quantized dBu),
+//! computes `P_{n+1} * state_n`, rescales the product by s_dA — a shift,
+//! thanks to the power-of-two scale approximation — and accumulates
+//! `Q_{n+1}` with [`FRAC_BITS`] extra fractional bits (paper §4.2:
+//! "2 extra fractional bits"). Saturating at [`STATE_SAT`].
+//!
+//! `spe_scan_int` must be *bit-identical* to `compile.quant.spe_scan_int`;
+//! `rust/tests/quant_golden.rs` enforces this against python goldens.
+
+/// Extra fractional bits on the intermediate state (paper §4.2).
+pub const FRAC_BITS: u32 = 2;
+/// Saturation bound of the state register.
+pub const STATE_SAT: i64 = i32::MAX as i64;
+
+/// Arithmetic shift by `k` with round-half-away-from-zero.
+/// `k <= 0` is a left shift (scale >= 1).
+pub fn rshift_round(x: i64, k: i32) -> i64 {
+    if k <= 0 {
+        return x << (-k) as u32;
+    }
+    let half = 1i64 << (k - 1) as u32;
+    let mag = (x.abs() + half) >> k as u32;
+    if x >= 0 {
+        mag
+    } else {
+        -mag
+    }
+}
+
+/// One lane's SPE recurrence (one (h, n) pair), streaming interface.
+#[derive(Debug, Clone)]
+pub struct SpeDatapath {
+    state: i64,
+    shift: i32,
+}
+
+impl SpeDatapath {
+    pub fn new(shift: i32) -> Self {
+        Self { state: 0, shift }
+    }
+
+    /// Feed one (P, Q) input pair; returns the updated state.
+    pub fn step(&mut self, p: i64, q: i64) -> i64 {
+        let prod = p * self.state;
+        let resc = rshift_round(prod, self.shift);
+        self.state = (resc + (q << FRAC_BITS)).clamp(-STATE_SAT, STATE_SAT);
+        self.state
+    }
+
+    pub fn state(&self) -> i64 {
+        self.state
+    }
+
+    pub fn reset(&mut self) {
+        self.state = 0;
+    }
+
+    /// Inject a carried state (what the LISU does between chunks).
+    pub fn set_state(&mut self, state: i64) {
+        self.state = state;
+    }
+}
+
+/// Batch integer scan over (L, H, N) row-major arrays: the reference the
+/// cycle-level SSA model is checked against, and the mirror of the python
+/// oracle.
+///
+/// `p`/`q` hold int8-valued entries; `shift` has one entry per H channel.
+/// Returns states at scale s_Q with FRAC_BITS fractional bits.
+pub fn spe_scan_int(p: &[i64], q: &[i64], shift: &[i32], l: usize, h: usize, n: usize) -> Vec<i64> {
+    assert_eq!(p.len(), l * h * n, "p length");
+    assert_eq!(q.len(), l * h * n, "q length");
+    assert_eq!(shift.len(), h, "shift length");
+    let mut out = vec![0i64; l * h * n];
+    let mut lanes: Vec<SpeDatapath> =
+        (0..h * n).map(|i| SpeDatapath::new(shift[i / n])).collect();
+    for step in 0..l {
+        let base = step * h * n;
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            out[base + i] = lane.step(p[base + i], q[base + i]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rshift_round_cases() {
+        // 5/4 = 1.25 -> 1; 6/4 = 1.5 -> 2 (half away); symmetric negatives.
+        assert_eq!(rshift_round(5, 2), 1);
+        assert_eq!(rshift_round(6, 2), 2);
+        assert_eq!(rshift_round(-5, 2), -1);
+        assert_eq!(rshift_round(-6, 2), -2);
+        // Left shift for k < 0.
+        assert_eq!(rshift_round(3, -2), 12);
+        assert_eq!(rshift_round(-3, -2), -12);
+        // k = 0 identity.
+        assert_eq!(rshift_round(7, 0), 7);
+    }
+
+    #[test]
+    fn p_zero_means_no_history() {
+        let l = 4;
+        let p = vec![0i64; l];
+        let q = vec![1i64, 2, 3, 4];
+        let out = spe_scan_int(&p, &q, &[4], l, 1, 1);
+        assert_eq!(out, vec![4, 8, 12, 16]); // q << FRAC_BITS
+    }
+
+    #[test]
+    fn saturates_instead_of_wrapping() {
+        let l = 64;
+        let p = vec![127i64; l];
+        let q = vec![127i64; l];
+        let out = spe_scan_int(&p, &q, &[0], l, 1, 1);
+        assert_eq!(*out.last().unwrap(), STATE_SAT);
+        assert!(out.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let (l, h, n) = (16, 2, 3);
+        let mut p = Vec::new();
+        let mut q = Vec::new();
+        let mut seed = 12345u64;
+        let mut rnd = || {
+            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((seed >> 33) as i64 % 255) - 127
+        };
+        for _ in 0..l * h * n {
+            p.push(rnd());
+            q.push(rnd());
+        }
+        let shift = [5, 7];
+        let batch = spe_scan_int(&p, &q, &shift, l, h, n);
+        // Streaming per lane.
+        for lane_h in 0..h {
+            for lane_n in 0..n {
+                let mut dp = SpeDatapath::new(shift[lane_h]);
+                for step in 0..l {
+                    let i = step * h * n + lane_h * n + lane_n;
+                    assert_eq!(dp.step(p[i], q[i]), batch[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lisu_carry_injection_matches_unchunked() {
+        // Chunked scan with set_state carry == monolithic scan.
+        let l = 32;
+        let chunk = 8;
+        let p: Vec<i64> = (0..l).map(|i| (i % 100) as i64 - 50).collect();
+        let q: Vec<i64> = (0..l).map(|i| (i * 7 % 255) as i64 - 127).collect();
+        let mono = spe_scan_int(&p, &q, &[6], l, 1, 1);
+        let mut carried = Vec::new();
+        let mut carry = 0i64;
+        for c in 0..l / chunk {
+            let mut dp = SpeDatapath::new(6);
+            dp.set_state(carry);
+            for i in c * chunk..(c + 1) * chunk {
+                carried.push(dp.step(p[i], q[i]));
+            }
+            carry = dp.state();
+        }
+        assert_eq!(carried, mono);
+    }
+}

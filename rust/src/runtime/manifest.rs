@@ -1,0 +1,111 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub file: String,
+    pub model: String,
+    pub input: Vec<usize>,
+    pub output: Vec<usize>,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_blocks: usize,
+    pub d_state: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ScanMeta {
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockMeta {
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub model: ModelMeta,
+    pub scan: HashMap<String, ScanMeta>,
+    pub encoder_block: BlockMeta,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let j = Json::load(path.as_ref())?;
+        Self::from_json(&j).with_context(|| format!("in {}", path.as_ref().display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let m = j.get("model")?;
+        let model = ModelMeta {
+            file: m.get("file")?.str()?.to_string(),
+            model: m.get("model")?.str()?.to_string(),
+            input: m.get("input")?.usize_vec()?,
+            output: m.get("output")?.usize_vec()?,
+            seq_len: m.get("seq_len")?.usize()?,
+            d_model: m.get("d_model")?.usize()?,
+            n_blocks: m.get("n_blocks")?.usize()?,
+            d_state: m.get("d_state")?.usize()?,
+        };
+        let mut scan = HashMap::new();
+        for (k, v) in j.get("scan")?.obj()? {
+            scan.insert(
+                k.clone(),
+                ScanMeta {
+                    file: v.get("file")?.str()?.to_string(),
+                    shape: v.get("shape")?.usize_vec()?,
+                },
+            );
+        }
+        let b = j.get("encoder_block")?;
+        Ok(Manifest {
+            format: j.get("format")?.str()?.to_string(),
+            model,
+            scan,
+            encoder_block: BlockMeta {
+                file: b.get("file")?.str()?.to_string(),
+                shape: b.get("shape")?.usize_vec()?,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let json = r#"{
+          "format": "hlo-text",
+          "model": {"file": "model.hlo.txt", "model": "micro",
+                    "input": [32,32,1], "input_dtype": "f32",
+                    "output": [10], "output_dtype": "f32",
+                    "seq_len": 65, "d_model": 64, "n_blocks": 4,
+                    "d_state": 8},
+          "scan": {"micro": {"file": "scan_micro.hlo.txt",
+                             "shape": [65,128,8], "dtype": "f32"}},
+          "encoder_block": {"file": "encoder_block.hlo.txt",
+                            "shape": [65,64], "dtype": "f32"}
+        }"#;
+        let m = Manifest::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(m.model.seq_len, 65);
+        assert_eq!(m.scan["micro"].shape, vec![65, 128, 8]);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let j = Json::parse(r#"{"format": "hlo-text"}"#).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

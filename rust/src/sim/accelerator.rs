@@ -1,0 +1,200 @@
+//! Top-level Mamba-X scheduler: plays an [`Op`] workload through the
+//! units (paper Fig 9/10 dataflow) and aggregates cycles, traffic and
+//! energy per Fig 4/18 latency class.
+
+use std::collections::HashMap;
+
+use crate::config::MambaXConfig;
+use crate::energy::{AreaModel, EnergyModel, OpEnergy, TechNode};
+use crate::vision::{Op, OpClass};
+
+use super::gemm::gemm_timing;
+use super::memory::Dram;
+use super::sfu::sfu_timing;
+use super::ssa::scan_timing;
+use super::vpu::{conv1d_timing, layernorm_timing, vpu_timing};
+
+/// Result of simulating one workload on Mamba-X.
+#[derive(Debug, Clone, Default)]
+pub struct SimReport {
+    pub class_cycles: HashMap<OpClass, u64>,
+    pub read_bytes: f64,
+    pub write_bytes: f64,
+    pub energy_j: f64,
+    /// SSA issue-slot utilization over scan ops (weighted mean).
+    pub ssa_utilization: f64,
+    /// GEMM PE utilization (weighted mean).
+    pub gemm_utilization: f64,
+}
+
+impl SimReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.class_cycles.values().sum()
+    }
+
+    pub fn cycles(&self, c: OpClass) -> u64 {
+        self.class_cycles.get(&c).copied().unwrap_or(0)
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    /// Wall-clock seconds at the configured frequency.
+    pub fn seconds(&self, cfg: &MambaXConfig) -> f64 {
+        self.total_cycles() as f64 / (cfg.freq_ghz * 1e9)
+    }
+}
+
+/// The simulated accelerator.
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub cfg: MambaXConfig,
+    pub energy_cfg: OpEnergy,
+}
+
+impl Accelerator {
+    pub fn new(cfg: MambaXConfig) -> Self {
+        Self { cfg, energy_cfg: OpEnergy::default() }
+    }
+
+    /// Simulate one workload (ops execute back-to-back; units are
+    /// activated on demand — paper Fig 10 — with DMA overlapped inside
+    /// each op's schedule).
+    pub fn run(&self, ops: &[Op]) -> SimReport {
+        let mut r = SimReport::default();
+        let mut e = EnergyModel::default();
+        let mut dram = Dram::new(self.cfg.dram_bytes_per_cycle());
+        let mut scan_util_num = 0.0;
+        let mut scan_util_den = 0.0;
+        let mut gemm_util_num = 0.0;
+        let mut gemm_util_den = 0.0;
+
+        for op in ops {
+            // Each op gets a fresh channel timeline (ops are serialized);
+            // traffic accumulates in `dram`'s counters.
+            let cycles = match *op {
+                Op::Gemm { m, n, k } => {
+                    let t = gemm_timing(&self.cfg, &mut dram, m, n, k);
+                    e.add_int8_macs(t.macs);
+                    e.add_sram_bytes(t.dram_read_bytes + t.dram_write_bytes);
+                    gemm_util_num += t.utilization * t.cycles as f64;
+                    gemm_util_den += t.cycles as f64;
+                    t.cycles
+                }
+                Op::SelectiveSsm { l, h, n_state } => {
+                    let t = scan_timing(&self.cfg, &mut dram, l, h, n_state);
+                    e.add_int8_macs(t.spe_ops);
+                    // PPU C-reduction + gate: fp16 MACs, overlapped with
+                    // the scan pipeline (PPU consumes SSA output directly).
+                    let ppu_macs = (l * h * n_state) as f64;
+                    e.add_fp16_macs(ppu_macs);
+                    let ppu_cycles = (ppu_macs / self.cfg.ppu_macs as f64).ceil() as u64;
+                    e.add_sram_bytes(t.dram_read_bytes + t.dram_write_bytes);
+                    scan_util_num += t.ssa_utilization * t.cycles as f64;
+                    scan_util_den += t.cycles as f64;
+                    t.cycles.max(ppu_cycles)
+                }
+                Op::LayerNorm { rows, cols } => {
+                    let t = layernorm_timing(&self.cfg, &mut dram, rows, cols);
+                    e.add_fp16_macs(t.lane_ops);
+                    t.cycles
+                }
+                Op::Conv1d { l, h, k } => {
+                    let t = conv1d_timing(&self.cfg, &mut dram, l, h, k);
+                    e.add_fp16_macs(t.lane_ops);
+                    t.cycles
+                }
+                Op::Elementwise { n, flops_per } => {
+                    let bytes = n as f64 * 2.0;
+                    let t = vpu_timing(&self.cfg, &mut dram, n, flops_per, bytes, bytes);
+                    e.add_fp16_macs(t.lane_ops);
+                    t.cycles
+                }
+                Op::Sfu { n, .. } => {
+                    let t = sfu_timing(&self.cfg, &mut dram, n);
+                    e.add_fp16_macs(t.evals * 2.0); // ADU compare + CU mac
+                    t.cycles
+                }
+            };
+            *r.class_cycles.entry(op.class()).or_insert(0) += cycles;
+        }
+
+        r.read_bytes = dram.read_bytes;
+        r.write_bytes = dram.write_bytes;
+        e.add_dram_bytes(dram.total_bytes());
+        let area = AreaModel::mamba_x(&self.cfg).at(TechNode::N12).total();
+        r.energy_j = e.total_joules(&self.energy_cfg, r.seconds(&self.cfg), area);
+        r.ssa_utilization = if scan_util_den > 0.0 { scan_util_num / scan_util_den } else { 0.0 };
+        r.gemm_utilization = if gemm_util_den > 0.0 { gemm_util_num / gemm_util_den } else { 0.0 };
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuConfig, VimModel};
+    use crate::gpu::GpuModel;
+    use crate::vision::{vim_model_ops, vim_selective_ssm_ops};
+
+    #[test]
+    fn scan_speedup_over_edge_gpu() {
+        // Paper Fig 17(a): order-10x selective-scan speedup at 8 SSAs.
+        let m = VimModel::tiny();
+        let acc = Accelerator::new(MambaXConfig::default());
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        for img in [512usize, 1024] {
+            let ops = vim_selective_ssm_ops(&m, m.seq_len(img));
+            let t_acc = acc.run(&ops).seconds(&acc.cfg);
+            let t_gpu = gpu.run(&ops).total_seconds();
+            let speedup = t_gpu / t_acc;
+            assert!(speedup > 3.0, "img {img}: speedup {speedup}");
+        }
+    }
+
+    #[test]
+    fn e2e_speedup_moderate() {
+        // Paper Fig 18: ~2-3x end-to-end, shrinking as GEMM dominates.
+        let acc = Accelerator::new(MambaXConfig::default());
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        let ops = vim_model_ops(&VimModel::tiny(), 512);
+        let s = gpu.run(&ops).total_seconds() / acc.run(&ops).seconds(&acc.cfg);
+        assert!(s > 1.2 && s < 20.0, "e2e speedup {s}");
+    }
+
+    #[test]
+    fn traffic_less_than_gpu_at_high_res()  {
+        // Paper Fig 17(c): ~2.5x average traffic reduction.
+        let m = VimModel::small();
+        let acc = Accelerator::new(MambaXConfig::default());
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        let ops = vim_selective_ssm_ops(&m, m.seq_len(1024));
+        let b_acc = acc.run(&ops).total_bytes();
+        let b_gpu = gpu.run(&ops).total_bytes();
+        assert!(b_gpu / b_acc > 1.5, "traffic ratio {}", b_gpu / b_acc);
+    }
+
+    #[test]
+    fn energy_improves_on_gpu() {
+        let acc = Accelerator::new(MambaXConfig::default());
+        let gpu = GpuModel::new(GpuConfig::xavier());
+        let ops = vim_model_ops(&VimModel::tiny(), 512);
+        let e_acc = acc.run(&ops).energy_j;
+        let e_gpu = gpu.run(&ops).energy_j;
+        assert!(e_gpu / e_acc > 2.0, "energy ratio {}", e_gpu / e_acc);
+    }
+
+    #[test]
+    fn more_ssas_faster_scans() {
+        let m = VimModel::small();
+        let ops = vim_selective_ssm_ops(&m, m.seq_len(738));
+        let mut last = u64::MAX;
+        for n in [2usize, 4, 8] {
+            let acc = Accelerator::new(MambaXConfig::with_ssas(n));
+            let c = acc.run(&ops).total_cycles();
+            assert!(c < last, "n_ssa={n}: {c} !< {last}");
+            last = c;
+        }
+    }
+}

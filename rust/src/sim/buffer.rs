@@ -1,0 +1,90 @@
+//! On-chip scratchpad model (Table 2: 384 KB).
+//!
+//! Tracks allocations and the high-water mark; `alloc` fails when the
+//! working set exceeds capacity, which forces the accelerator scheduler to
+//! tile (exactly the constraint that shapes the chunk-wise dataflow).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone)]
+pub struct Scratchpad {
+    capacity: f64,
+    used: f64,
+    high_water: f64,
+    pub accesses_bytes: f64,
+}
+
+impl Scratchpad {
+    pub fn new(capacity_bytes: f64) -> Self {
+        Self { capacity: capacity_bytes, used: 0.0, high_water: 0.0, accesses_bytes: 0.0 }
+    }
+
+    pub fn alloc(&mut self, bytes: f64) -> Result<Allocation> {
+        if self.used + bytes > self.capacity {
+            bail!(
+                "scratchpad overflow: {} + {} > {} bytes",
+                self.used,
+                bytes,
+                self.capacity
+            );
+        }
+        self.used += bytes;
+        self.high_water = self.high_water.max(self.used);
+        Ok(Allocation { bytes })
+    }
+
+    pub fn free(&mut self, a: Allocation) {
+        self.used -= a.bytes;
+    }
+
+    /// Record read/write traffic to the scratchpad (energy accounting).
+    pub fn touch(&mut self, bytes: f64) {
+        self.accesses_bytes += bytes;
+    }
+
+    pub fn fits(&self, bytes: f64) -> bool {
+        self.used + bytes <= self.capacity
+    }
+
+    pub fn capacity(&self) -> f64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> f64 {
+        self.used
+    }
+
+    pub fn high_water(&self) -> f64 {
+        self.high_water
+    }
+}
+
+/// RAII-less allocation token (explicit free keeps the model simple).
+#[derive(Debug)]
+pub struct Allocation {
+    bytes: f64,
+}
+
+impl Allocation {
+    pub fn bytes(&self) -> f64 {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_highwater() {
+        let mut sp = Scratchpad::new(1000.0);
+        let a = sp.alloc(600.0).unwrap();
+        let b = sp.alloc(300.0).unwrap();
+        assert!(sp.alloc(200.0).is_err());
+        sp.free(b);
+        assert!(sp.fits(200.0));
+        sp.free(a);
+        assert_eq!(sp.used(), 0.0);
+        assert_eq!(sp.high_water(), 900.0);
+    }
+}

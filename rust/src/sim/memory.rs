@@ -1,0 +1,82 @@
+//! Off-chip memory (LPDDR4X-class) + DMA model.
+//!
+//! Single shared channel at the configured bandwidth (Table 2: 136.5 GB/s,
+//! bandwidth parity with the edge GPU). Transfers serialize on the channel;
+//! the DMA double-buffers, so compute only stalls when it outruns the
+//! channel. Traffic counters feed Fig 17(c) and the energy model.
+
+/// Cycle-resolution DRAM channel.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    /// Bytes transferable per accelerator cycle.
+    pub bytes_per_cycle: f64,
+    /// Cycle at which the channel becomes free.
+    busy_until: u64,
+    pub read_bytes: f64,
+    pub write_bytes: f64,
+}
+
+impl Dram {
+    pub fn new(bytes_per_cycle: f64) -> Self {
+        Self { bytes_per_cycle, busy_until: 0, read_bytes: 0.0, write_bytes: 0.0 }
+    }
+
+    fn cycles_for(&self, bytes: f64) -> u64 {
+        (bytes / self.bytes_per_cycle).ceil().max(1.0) as u64
+    }
+
+    /// Issue a read at `now`; returns the completion cycle.
+    pub fn read(&mut self, bytes: f64, now: u64) -> u64 {
+        self.read_bytes += bytes;
+        let start = self.busy_until.max(now);
+        self.busy_until = start + self.cycles_for(bytes);
+        self.busy_until
+    }
+
+    /// Issue a write at `now`; returns the completion cycle.
+    pub fn write(&mut self, bytes: f64, now: u64) -> u64 {
+        self.write_bytes += bytes;
+        let start = self.busy_until.max(now);
+        self.busy_until = start + self.cycles_for(bytes);
+        self.busy_until
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    pub fn busy_until(&self) -> u64 {
+        self.busy_until
+    }
+
+    /// Bulk accounting for streaming phases where per-beat scheduling is
+    /// irrelevant: returns the cycles the transfer occupies.
+    pub fn stream(&mut self, read: f64, write: f64) -> u64 {
+        self.read_bytes += read;
+        self.write_bytes += write;
+        self.cycles_for(read + write)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_on_channel() {
+        let mut d = Dram::new(128.0);
+        let t1 = d.read(1280.0, 0); // 10 cycles
+        assert_eq!(t1, 10);
+        let t2 = d.read(1280.0, 0); // queued behind
+        assert_eq!(t2, 20);
+        let t3 = d.write(128.0, 100); // idle until 100
+        assert_eq!(t3, 101);
+        assert_eq!(d.total_bytes(), 2688.0);
+    }
+
+    #[test]
+    fn min_one_cycle() {
+        let mut d = Dram::new(128.0);
+        assert_eq!(d.read(1.0, 0), 1);
+    }
+}

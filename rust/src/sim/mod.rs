@@ -1,0 +1,27 @@
+//! Cycle-level Mamba-X simulator (paper §4 + §5 "we model Mamba-X as a
+//! cycle-level simulator").
+//!
+//! Units (paper Fig 9): DMA + off-chip memory model ([`memory`]), on-chip
+//! scratchpad ([`buffer`]), output-stationary GEMM engine ([`gemm`]), VPU
+//! ([`vpu`]), LUT-based SFU ([`sfu`]), Systolic Scan Array ([`ssa`]) with
+//! the PPU's LISU ([`ssa::scan_timing`]), and the top-level scheduler
+//! ([`accelerator`]) that plays a [`crate::vision::Op`] workload through
+//! them.
+//!
+//! Two faces, deliberately separated:
+//! * **timing** — cycle-accurate scheduling at chunk/tile granularity
+//!   (what Figs 17/18 need);
+//! * **function** — the bit-exact INT8 datapath ([`crate::quant`]), checked
+//!   against python goldens and proptest invariants (schedule-invariance:
+//!   chunking/SSA-count never changes results).
+
+pub mod accelerator;
+pub mod buffer;
+pub mod gemm;
+pub mod memory;
+pub mod sfu;
+pub mod ssa;
+pub mod vpu;
+
+pub use accelerator::{Accelerator, SimReport};
+pub use ssa::{scan_timing, ssa_scan_functional, ScanTiming};

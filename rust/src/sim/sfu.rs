@@ -1,0 +1,178 @@
+//! Special Function Unit: LUT-based piecewise-linear non-linearities
+//! (paper §4.3, Fig 14(b)).
+//!
+//! Functional model: loads the *same* fitted tables the python side
+//! exports (`artifacts/sfu_luts.json`) and evaluates them with the binary
+//! -search ADU + `a*x + b` CU, bit-compatible at f32 with
+//! `compile.lut.Lut.eval` (golden-tested).
+//!
+//! Timing model: `sfu_lanes` ADU+CU pairs, one evaluation per lane per
+//! cycle (the binary search is pipelined across log2(entries) stages).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+use crate::config::MambaXConfig;
+use crate::vision::SfuFunc;
+
+use super::memory::Dram;
+
+/// One fitted PWL table (mirror of `compile.lut.Lut`).
+#[derive(Debug, Clone)]
+pub struct LutTable {
+    pub name: String,
+    pub bps: Vec<f32>,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl LutTable {
+    /// ADU: binary-search the segment (paper Fig 14(b)), saturating to the
+    /// end segments outside the fitted range. Must match
+    /// `compile.lut.Lut.eval` exactly (same segment convention).
+    pub fn segment(&self, x: f32) -> usize {
+        // jnp.searchsorted(side="right") - 1, clipped to [0, len(a)-1].
+        let mut lo = 0usize; // count of bps <= x
+        let mut hi = self.bps.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.bps[mid] <= x {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo.saturating_sub(1).min(self.a.len() - 1)
+    }
+
+    /// CU: linear interpolation with the fetched coefficients.
+    pub fn eval(&self, x: f32) -> f32 {
+        let i = self.segment(x);
+        self.a[i] * x + self.b[i]
+    }
+
+    /// Exact non-linearity (for error measurements).
+    pub fn exact(func: SfuFunc, x: f32) -> f32 {
+        match func {
+            SfuFunc::Silu => x / (1.0 + (-x).exp()),
+            SfuFunc::Exp => x.exp(),
+            SfuFunc::Softplus => {
+                if x > 20.0 {
+                    x
+                } else {
+                    (1.0 + x.exp()).ln()
+                }
+            }
+        }
+    }
+}
+
+/// The SFU's three tables.
+#[derive(Debug, Clone)]
+pub struct SfuTables {
+    pub silu: LutTable,
+    pub exp: LutTable,
+    pub softplus: LutTable,
+}
+
+impl LutTable {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(LutTable {
+            name: j.get("name")?.str()?.to_string(),
+            bps: j.get("bps")?.f32_vec()?,
+            a: j.get("a")?.f32_vec()?,
+            b: j.get("b")?.f32_vec()?,
+        })
+    }
+}
+
+impl SfuTables {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let j = Json::load(path.as_ref())?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(SfuTables {
+            silu: LutTable::from_json(j.get("silu")?)?,
+            exp: LutTable::from_json(j.get("exp")?)?,
+            softplus: LutTable::from_json(j.get("softplus")?)?,
+        })
+    }
+
+    pub fn table(&self, func: SfuFunc) -> &LutTable {
+        match func {
+            SfuFunc::Silu => &self.silu,
+            SfuFunc::Exp => &self.exp,
+            SfuFunc::Softplus => &self.softplus,
+        }
+    }
+
+    pub fn eval(&self, func: SfuFunc, x: f32) -> f32 {
+        self.table(func).eval(x)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SfuTiming {
+    pub cycles: u64,
+    pub evals: f64,
+    pub dram_read_bytes: f64,
+    pub dram_write_bytes: f64,
+}
+
+/// Timing for `n` evaluations streaming FP16 in/out.
+pub fn sfu_timing(cfg: &MambaXConfig, dram: &mut Dram, n: usize) -> SfuTiming {
+    let compute = (n as f64 / cfg.sfu_lanes as f64).ceil() as u64;
+    let bytes = n as f64 * 2.0;
+    let dma = dram.stream(bytes, bytes);
+    SfuTiming {
+        cycles: compute.max(dma).max(1),
+        evals: n as f64,
+        dram_read_bytes: bytes,
+        dram_write_bytes: bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_table() -> LutTable {
+        // y = x on [0,1), y = 2x - 1 on [1,2].
+        LutTable {
+            name: "toy".into(),
+            bps: vec![0.0, 1.0, 2.0],
+            a: vec![1.0, 2.0],
+            b: vec![0.0, -1.0],
+        }
+    }
+
+    #[test]
+    fn segment_lookup() {
+        let t = toy_table();
+        assert_eq!(t.segment(0.5), 0);
+        assert_eq!(t.segment(1.0), 1); // side="right" at the boundary
+        assert_eq!(t.segment(1.5), 1);
+        assert_eq!(t.segment(-5.0), 0); // saturate left
+        assert_eq!(t.segment(9.0), 1); // saturate right
+    }
+
+    #[test]
+    fn eval_interpolates() {
+        let t = toy_table();
+        assert_eq!(t.eval(0.25), 0.25);
+        assert_eq!(t.eval(1.5), 2.0);
+    }
+
+    #[test]
+    fn timing_lanes() {
+        let cfg = MambaXConfig::default();
+        let mut d = Dram::new(1e9);
+        let t = sfu_timing(&cfg, &mut d, 64000);
+        assert_eq!(t.cycles, 64000 / cfg.sfu_lanes as u64);
+    }
+}

@@ -1,0 +1,218 @@
+//! Systolic Scan Array + LISU: timing (cycle-level) and function
+//! (bit-exact) models — paper §4.2, Figs 11-13.
+//!
+//! **Timing** (`scan_timing`): the selective scan of one (L, H, N) op is
+//! decomposed into chunk-jobs — one `chunk`-long slice of one (h, n) lane
+//! row. Jobs are scheduled onto `n_ssa` arrays; each array issues one
+//! chunk-row per cycle (pipelined; Fig 12) with a fill latency of
+//! log2(chunk) systolic rows. The LISU serializes inter-chunk carries of
+//! the same row at one combine per cycle (Fig 13). DMA traffic for the
+//! INT8 (P, Q) streams shares the LPDDR channel.
+//!
+//! **Function** (`ssa_scan_functional`): the same job decomposition run
+//! through the integer SPE datapath ([`crate::quant::SpeDatapath`]) with
+//! LISU carry injection. Whatever the chunk size or SSA count, the result
+//! must be bit-identical to the monolithic sequential scan — the proptest
+//! in `rust/tests/sim_props.rs` enforces this schedule-invariance.
+
+use crate::config::MambaXConfig;
+use crate::quant::SpeDatapath;
+
+use super::memory::Dram;
+
+/// Result of the cycle-level scan schedule.
+#[derive(Debug, Clone)]
+pub struct ScanTiming {
+    pub cycles: u64,
+    pub dram_read_bytes: f64,
+    pub dram_write_bytes: f64,
+    /// Total SPE multiply-accumulate operations (energy accounting).
+    pub spe_ops: f64,
+    /// Fraction of SSA issue slots doing useful work.
+    pub ssa_utilization: f64,
+}
+
+/// Cycle-level schedule of one selective-SSM scan (paper Fig 12/13).
+///
+/// `l` sequence length, `h` hidden channels, `n` state dims.
+///
+/// DMA reads only the *operands* (u, delta, z at INT8 over (l, h); B over
+/// (l, n); A over (h, n)): the (l, h, n) P/Q streams are generated on-chip
+/// by the VPU+SFU (Fig 10) and never touch DRAM — that, plus the SSA's
+/// register-to-register carry path, is exactly the traffic advantage over
+/// the GPU (Fig 17(c)). The generation pipeline (discretize: exp on the
+/// SFU, multiplies on the VPU) runs chunk-ahead of the SSAs; its
+/// throughput bounds the issue rate when SSAs outnumber it.
+pub fn scan_timing(cfg: &MambaXConfig, dram: &mut Dram, l: usize, h: usize, n: usize) -> ScanTiming {
+    let chunk = cfg.chunk;
+    let n_ssa = cfg.n_ssa.max(1);
+    let rows = h * n; // independent scan lanes
+    let chunks_per_row = l.div_ceil(chunk);
+    let pipe_fill = (chunk as f64).log2().ceil() as u64 + 1;
+
+    // --- DMA: operands in, y out (all streamed once) --------------------
+    let read_bytes = (3 * l * h) as f64      // u, delta, z (INT8)
+        + (l * n) as f64                     // B (INT8)
+        + (h * n) as f64;                    // A (INT8)
+    let write_bytes = (l * h) as f64 * 2.0; // y (FP16)
+    let dram_cycles = dram.stream(read_bytes, write_bytes);
+
+    // --- SSA + LISU schedule --------------------------------------------
+    let mut ssa_free = vec![0u64; n_ssa];
+    // LISU: one carry combine per SPE lane per cycle; `chunk` lanes
+    // (paper Fig 13: "an additional row of SPEs").
+    let mut lisu_free = vec![0u64; chunk];
+    let mut finish: u64 = 0;
+    let mut issued: u64 = 0;
+    let mut rr = 0usize; // round-robin SSA pointer (wrap-around counter)
+    let mut lane = 0usize;
+
+    for _row in 0..rows {
+        // Each row's serial carry chain is pinned to one LISU SPE lane:
+        // the lane's busy-until enforces both the chain order within the
+        // row and sharing across rows (up to `chunk` chains in flight).
+        for _c in 0..chunks_per_row {
+            let ssa_idx = rr;
+            rr += 1;
+            if rr == n_ssa {
+                rr = 0;
+            }
+            // Issue: an SSA accepts one chunk-row per cycle once fed.
+            let start = ssa_free[ssa_idx];
+            ssa_free[ssa_idx] = start + 1;
+            issued += 1;
+            // Result exits the array after the systolic pipeline fill.
+            let result_ready = start + pipe_fill;
+            // LISU combine (Fig 13): one per cycle per lane, in order.
+            let lisu_start = result_ready.max(lisu_free[lane]);
+            lisu_free[lane] = lisu_start + 1;
+            finish = finish.max(lisu_start + 1);
+        }
+        lane += 1;
+        if lane == chunk {
+            lane = 0;
+        }
+    }
+
+    // --- generation pipeline bound ---------------------------------------
+    // P = exp(delta*A) needs one SFU exp + one VPU mul per element; Q needs
+    // two VPU muls. Sustained elements/cycle:
+    let gen_rate = (cfg.sfu_lanes as f64).min(cfg.vpu_lanes as f64 / 3.0);
+    let gen_bound = ((rows * l) as f64 / gen_rate).ceil() as u64;
+
+    let cycles = finish.max(gen_bound).max(dram_cycles);
+    let spe_ops = (rows * l) as f64 * 2.0; // 2 mults + add per element
+    let total_slots = (cycles.max(1) * n_ssa as u64) as f64;
+    ScanTiming {
+        cycles,
+        dram_read_bytes: read_bytes,
+        dram_write_bytes: write_bytes,
+        spe_ops,
+        ssa_utilization: (issued as f64 / total_slots).min(1.0),
+    }
+}
+
+/// Bit-exact chunked scan: the functional contract of the SSA + LISU.
+///
+/// Layout: `p`/`q` are (L, H, N) row-major int8-valued; `shift` per-H.
+/// Processes each lane's chunks in order with carry injection — identical
+/// results to [`crate::quant::spe_scan_int`] by construction of the LISU.
+pub fn ssa_scan_functional(
+    cfg: &MambaXConfig,
+    p: &[i64],
+    q: &[i64],
+    shift: &[i32],
+    l: usize,
+    h: usize,
+    n: usize,
+) -> Vec<i64> {
+    assert_eq!(p.len(), l * h * n);
+    assert_eq!(q.len(), l * h * n);
+    assert_eq!(shift.len(), h);
+    let chunk = cfg.chunk;
+    let mut out = vec![0i64; l * h * n];
+    for lane_h in 0..h {
+        for lane_n in 0..n {
+            let mut carry = 0i64;
+            let mut start = 0usize;
+            while start < l {
+                let end = (start + chunk).min(l);
+                // One SSA processes [start, end); LISU injects the carry.
+                let mut dp = SpeDatapath::new(shift[lane_h]);
+                dp.set_state(carry);
+                for step in start..end {
+                    let i = step * h * n + lane_h * n + lane_n;
+                    out[i] = dp.step(p[i], q[i]);
+                }
+                carry = dp.state();
+                start = end;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::spe_scan_int;
+
+    fn mk(l: usize, h: usize, n: usize, seed: u64) -> (Vec<i64>, Vec<i64>) {
+        let mut s = seed;
+        let mut rnd = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((s >> 33) as i64 % 255) - 127
+        };
+        let total = l * h * n;
+        ((0..total).map(|_| rnd()).collect(), (0..total).map(|_| rnd()).collect())
+    }
+
+    #[test]
+    fn functional_matches_sequential_oracle() {
+        let (l, h, n) = (67, 3, 4);
+        let (p, q) = mk(l, h, n, 7);
+        let shift = vec![5, 8, 6];
+        let want = spe_scan_int(&p, &q, &shift, l, h, n);
+        for n_ssa in [1usize, 2, 8] {
+            for chunk in [4usize, 16, 64] {
+                let cfg = MambaXConfig { n_ssa, chunk, ..MambaXConfig::default() };
+                let got = ssa_scan_functional(&cfg, &p, &q, &shift, l, h, n);
+                assert_eq!(got, want, "n_ssa={n_ssa} chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn timing_scales_with_ssas() {
+        // Paper Fig 17(a): more SSAs => higher scan throughput.
+        let mut t = Vec::new();
+        for n_ssa in [2usize, 4, 8] {
+            let cfg = MambaXConfig::with_ssas(n_ssa);
+            let mut dram = Dram::new(cfg.dram_bytes_per_cycle());
+            t.push(scan_timing(&cfg, &mut dram, 1025, 384, 16).cycles);
+        }
+        assert!(t[0] > t[1] && t[1] > t[2], "{t:?}");
+    }
+
+    #[test]
+    fn timing_tracks_workload_size() {
+        let cfg = MambaXConfig::default();
+        let mut d1 = Dram::new(cfg.dram_bytes_per_cycle());
+        let mut d2 = Dram::new(cfg.dram_bytes_per_cycle());
+        let small = scan_timing(&cfg, &mut d1, 197, 384, 16).cycles;
+        let big = scan_timing(&cfg, &mut d2, 788, 384, 16).cycles;
+        let ratio = big as f64 / small as f64;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn no_offchip_state_traffic() {
+        // The (L,H,N) state tensor must never hit DRAM (the SSA's point).
+        let cfg = MambaXConfig::default();
+        let mut dram = Dram::new(cfg.dram_bytes_per_cycle());
+        let (l, h, n) = (1025usize, 384, 16);
+        let t = scan_timing(&cfg, &mut dram, l, h, n);
+        let state_bytes = (l * h * n) as f64 * 2.0;
+        assert!(t.dram_read_bytes + t.dram_write_bytes < state_bytes);
+    }
+}

@@ -1,0 +1,75 @@
+//! Vector Processing Unit: LayerNorm, Conv1D, flips, element-wise ops
+//! (paper Fig 9, component 3).
+
+use crate::config::MambaXConfig;
+
+use super::memory::Dram;
+
+#[derive(Debug, Clone)]
+pub struct VpuTiming {
+    pub cycles: u64,
+    pub lane_ops: f64,
+    pub dram_read_bytes: f64,
+    pub dram_write_bytes: f64,
+}
+
+/// Element-wise pass: `n` elements, `ops_per` lane-ops each, streaming
+/// `in_bytes`/`out_bytes` through DRAM (FP16 activations).
+pub fn vpu_timing(
+    cfg: &MambaXConfig,
+    dram: &mut Dram,
+    n: usize,
+    ops_per: usize,
+    in_bytes: f64,
+    out_bytes: f64,
+) -> VpuTiming {
+    let lane_ops = (n * ops_per.max(1)) as f64;
+    let compute = (lane_ops / cfg.vpu_lanes as f64).ceil() as u64;
+    let dma = dram.stream(in_bytes, out_bytes);
+    VpuTiming {
+        cycles: compute.max(dma).max(1),
+        lane_ops,
+        dram_read_bytes: in_bytes,
+        dram_write_bytes: out_bytes,
+    }
+}
+
+/// LayerNorm: two reduction passes + normalize (3 passes over the data).
+pub fn layernorm_timing(cfg: &MambaXConfig, dram: &mut Dram, rows: usize, cols: usize) -> VpuTiming {
+    let n = rows * cols;
+    vpu_timing(cfg, dram, n, 3, n as f64 * 2.0, n as f64 * 2.0)
+}
+
+/// Depthwise causal conv1d: k MACs per element.
+pub fn conv1d_timing(cfg: &MambaXConfig, dram: &mut Dram, l: usize, h: usize, k: usize) -> VpuTiming {
+    let n = l * h;
+    vpu_timing(cfg, dram, n, k, n as f64 * 2.0 + (h * k) as f64, n as f64 * 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compute_vs_bandwidth_bound() {
+        let cfg = MambaXConfig::default();
+        // Heavy per-element work -> compute-bound.
+        let mut d1 = Dram::new(cfg.dram_bytes_per_cycle());
+        let t1 = vpu_timing(&cfg, &mut d1, 1 << 16, 64, 16.0, 16.0);
+        assert_eq!(t1.cycles, ((1u64 << 16) * 64) / cfg.vpu_lanes as u64);
+        // Light work over lots of data -> bandwidth-bound.
+        let mut d2 = Dram::new(cfg.dram_bytes_per_cycle());
+        let bytes = 1e6;
+        let t2 = vpu_timing(&cfg, &mut d2, 100, 1, bytes, bytes);
+        assert!(t2.cycles as f64 >= 2.0 * bytes / cfg.dram_bytes_per_cycle());
+    }
+
+    #[test]
+    fn conv_cost_scales_with_k() {
+        let cfg = MambaXConfig::default();
+        let mut d = Dram::new(1e9); // effectively unlimited bandwidth
+        let a = conv1d_timing(&cfg, &mut d, 1024, 512, 2).cycles;
+        let b = conv1d_timing(&cfg, &mut d, 1024, 512, 8).cycles;
+        assert_eq!(b, a * 4);
+    }
+}

@@ -1,0 +1,91 @@
+//! Tiny benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean / stddev / min reporting, and a
+//! table-printing helper shared by the per-figure benches.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Timing stats in nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:>10.3} ms ± {:>7.3} (min {:.3}, n={})",
+            self.mean_ns / 1e6,
+            self.stddev_ns / 1e6,
+            self.min_ns / 1e6,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations, then up to `iters`
+/// timed ones (capped at ~2 s wall time).
+pub fn bench<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let budget = std::time::Duration::from_secs(2);
+    let t_start = Instant::now();
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+        if t_start.elapsed() > budget && samples.len() >= 3 {
+            break;
+        }
+    }
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    Stats {
+        iters: samples.len() as u32,
+        mean_ns: mean,
+        stddev_ns: var.sqrt(),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Print a named measurement in a stable, grep-friendly format.
+pub fn report(name: &str, stats: &Stats) {
+    println!("bench {name:<44} {stats}");
+}
+
+/// Print one row of a paper-table reproduction.
+pub fn row(cols: &[String]) {
+    println!("{}", cols.join(" | "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_measures() {
+        let s = bench(1, 5, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.iters >= 3);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.mean_ns);
+    }
+}

@@ -1,0 +1,9 @@
+//! In-crate utilities replacing external dependencies (offline build: only
+//! the vendored `xla` closure is available — DESIGN.md).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Pcg;

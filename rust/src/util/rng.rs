@@ -1,0 +1,105 @@
+//! Small deterministic PRNG (PCG-XSH-RR) for tests, property harnesses and
+//! synthetic workloads. No external deps; reproducible across platforms.
+
+#[derive(Debug, Clone)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        let mut p = Self { state: 0, inc: (seed << 1) | 1 };
+        p.next_u32();
+        p.state = p.state.wrapping_add(seed);
+        p.next_u32();
+        p
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6364136223846793005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Rejection-free biased is fine for tests, but cheap to do right:
+        let zone = u64::MAX - (u64::MAX % n.max(1));
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % n.max(1);
+            }
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f64() as f32
+    }
+
+    /// INT8 value in [-127, 127].
+    pub fn int8(&mut self) -> i64 {
+        self.below(255) as i64 - 127
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = Pcg::new(7);
+        for _ in 0..1000 {
+            let v = r.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+            let q = r.int8();
+            assert!((-127..=127).contains(&q));
+        }
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        let mut r = Pcg::new(3);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+}

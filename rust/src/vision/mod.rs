@@ -1,0 +1,14 @@
+//! Operator-level workload models of Vision Mamba and the ViT baseline.
+//!
+//! The performance models ([`crate::gpu`], [`crate::sim`]) consume a flat
+//! list of [`Op`]s describing one inference; this module builds those lists
+//! from a model config + image size. FLOP/byte counts follow the encoder
+//! structure of paper Fig 3 (Vim) and the standard pre-norm ViT encoder.
+
+mod ops;
+mod vim;
+mod vit;
+
+pub use ops::{Op, OpClass, SfuFunc};
+pub use vim::{vim_block_ops, vim_model_ops, vim_selective_ssm_ops};
+pub use vit::{vit_block_ops, vit_model_ops, vit_score_matrix_bytes};

@@ -1,0 +1,150 @@
+//! The operator vocabulary shared by the GPU model and the Mamba-X sim.
+
+
+/// Non-linear functions executed by the SFU (paper §4.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SfuFunc {
+    Silu,
+    Exp,
+    Softplus,
+}
+
+/// Latency-breakdown class (paper Fig 4's categories).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Gemm,
+    LayerNorm,
+    Conv1d,
+    Elementwise,
+    SelectiveSsm,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 5] = [
+        OpClass::Gemm,
+        OpClass::LayerNorm,
+        OpClass::Conv1d,
+        OpClass::Elementwise,
+        OpClass::SelectiveSsm,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OpClass::Gemm => "GEMM",
+            OpClass::LayerNorm => "LayerNorm",
+            OpClass::Conv1d => "Conv1D",
+            OpClass::Elementwise => "Elementwise",
+            OpClass::SelectiveSsm => "SelectiveSSM",
+        }
+    }
+}
+
+/// One operator instance in an inference workload.
+///
+/// Dimensions are *logical*; each backend derives FLOPs, bytes and timing
+/// from them with its own microarchitectural assumptions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// C[m,n] += A[m,k] * B[k,n].
+    Gemm { m: usize, n: usize, k: usize },
+    /// LayerNorm over `rows` rows of `cols` features.
+    LayerNorm { rows: usize, cols: usize },
+    /// Depthwise causal conv: `l` positions, `h` channels, width `k`.
+    Conv1d { l: usize, h: usize, k: usize },
+    /// Pointwise op over `n` elements with `flops_per` FLOPs each.
+    Elementwise { n: usize, flops_per: usize },
+    /// SFU non-linearity over `n` elements.
+    Sfu { n: usize, func: SfuFunc },
+    /// The selective-SSM block (paper Fig 3(b), steps 1-4, fused):
+    /// scan over `l` steps across `h` hidden channels and `n_state` state
+    /// dims, including discretization and the C-reduction.
+    SelectiveSsm { l: usize, h: usize, n_state: usize },
+}
+
+impl Op {
+    /// Fig 4 class of this op. SFU ops count as element-wise on the GPU
+    /// (they run on CUDA special-function units there).
+    pub fn class(&self) -> OpClass {
+        match self {
+            Op::Gemm { .. } => OpClass::Gemm,
+            Op::LayerNorm { .. } => OpClass::LayerNorm,
+            Op::Conv1d { .. } => OpClass::Conv1d,
+            Op::Elementwise { .. } | Op::Sfu { .. } => OpClass::Elementwise,
+            Op::SelectiveSsm { .. } => OpClass::SelectiveSsm,
+        }
+    }
+
+    /// Arithmetic work in FLOPs.
+    pub fn flops(&self) -> f64 {
+        match *self {
+            Op::Gemm { m, n, k } => 2.0 * m as f64 * n as f64 * k as f64,
+            Op::LayerNorm { rows, cols } => 8.0 * rows as f64 * cols as f64,
+            Op::Conv1d { l, h, k } => 2.0 * l as f64 * h as f64 * k as f64,
+            Op::Elementwise { n, flops_per } => n as f64 * flops_per as f64,
+            Op::Sfu { n, .. } => 8.0 * n as f64, // ~cost of exp/silu on SFU
+            Op::SelectiveSsm { l, h, n_state } => {
+                let lane = l as f64 * h as f64 * n_state as f64;
+                // discretize (exp + 2 mul) + scan (2 mul + 1 add) + C-reduce
+                // (2) + skip/gate (~3 per (l,h)).
+                lane * (3.0 + 3.0 + 2.0) + 3.0 * l as f64 * h as f64
+            }
+        }
+    }
+
+    /// Essential (compulsory) off-chip traffic in bytes at `elem_bytes`
+    /// per element: inputs read once + outputs written once, assuming
+    /// perfect on-chip reuse. This is the Fig 8 "Ideal" traffic.
+    pub fn ideal_bytes(&self, elem_bytes: f64) -> f64 {
+        let e = elem_bytes;
+        match *self {
+            Op::Gemm { m, n, k } => {
+                (m * k + k * n + m * n) as f64 * e
+            }
+            Op::LayerNorm { rows, cols } => 2.0 * (rows * cols) as f64 * e,
+            Op::Conv1d { l, h, k } => ((2 * l * h) + h * k) as f64 * e,
+            Op::Elementwise { n, .. } => 2.0 * n as f64 * e,
+            Op::Sfu { n, .. } => 2.0 * n as f64 * e,
+            Op::SelectiveSsm { l, h, n_state } => {
+                // in: u, delta, z (3 LH) + B, C (2 LN) + A (HN), out: y (LH).
+                // Intermediate (L,H,N) state never leaves chip in the ideal
+                // (and in Mamba-X, thanks to the SSA; paper §4.2).
+                let (l, h, n) = (l as f64, h as f64, n_state as f64);
+                (4.0 * l * h + 2.0 * l * n + h * n) * e
+            }
+        }
+    }
+
+    /// Total lane-steps of scan work (L per lane), if this is a scan op.
+    pub fn scan_lanes(&self) -> Option<(usize, usize)> {
+        match *self {
+            Op::SelectiveSsm { l, h, n_state } => Some((l, h * n_state)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops() {
+        let op = Op::Gemm { m: 10, n: 20, k: 30 };
+        assert_eq!(op.flops(), 2.0 * 10.0 * 20.0 * 30.0);
+        assert_eq!(op.class(), OpClass::Gemm);
+    }
+
+    #[test]
+    fn scan_ideal_traffic_excludes_state_tensor() {
+        // The (L,H,N) intermediate must NOT appear in ideal traffic.
+        let op = Op::SelectiveSsm { l: 100, h: 64, n_state: 16 };
+        let state_bytes = 100.0 * 64.0 * 16.0 * 4.0;
+        assert!(op.ideal_bytes(4.0) < state_bytes);
+    }
+
+    #[test]
+    fn classes_cover_fig4_categories() {
+        assert_eq!(OpClass::ALL.len(), 5);
+        assert_eq!(Op::Sfu { n: 1, func: SfuFunc::Exp }.class(), OpClass::Elementwise);
+    }
+}

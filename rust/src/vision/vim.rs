@@ -1,0 +1,111 @@
+//! Vision Mamba workload builder (paper Fig 3).
+
+use crate::config::VimModel;
+
+use super::ops::{Op, SfuFunc};
+
+/// The ops of the selective-SSM block for ONE direction (paper Fig 3(b)).
+///
+/// `l` = sequence length. Returned separately because Fig 17 evaluates the
+/// selective-SSM block in isolation.
+pub fn vim_selective_ssm_ops(m: &VimModel, l: usize) -> Vec<Op> {
+    let (e, n) = (m.d_inner(), m.d_state);
+    vec![Op::SelectiveSsm { l, h: e, n_state: n }]
+}
+
+/// One direction's pre-SSM pipeline: conv1d, SiLU, SSM-parameter
+/// projections, softplus (paper Fig 3(a) step 4 up to the SSM block).
+fn direction_ops(m: &VimModel, l: usize) -> Vec<Op> {
+    let (e, n, r) = (m.d_inner(), m.d_state, m.dt_rank());
+    let mut ops = vec![
+        Op::Conv1d { l, h: e, k: m.conv_k },
+        Op::Sfu { n: l * e, func: SfuFunc::Silu },
+        // x_proj: E -> dt_rank + 2N.
+        Op::Gemm { m: l, n: r + 2 * n, k: e },
+        // dt_proj: dt_rank -> E.
+        Op::Gemm { m: l, n: e, k: r },
+    ];
+    // The fused selective-SSM op subsumes softplus, discretization, the
+    // scan, the C-reduction and the silu(z) gate (paper Fig 3(b) steps
+    // 1-4 run as ONE fused kernel on the GPU and as the VPU->SFU->SSA->PPU
+    // pipeline on Mamba-X).
+    ops.extend(vim_selective_ssm_ops(m, l));
+    ops
+}
+
+/// One bidirectional Vim encoder block (paper Fig 3(a), steps 3-5).
+pub fn vim_block_ops(m: &VimModel, l: usize) -> Vec<Op> {
+    let (d, e) = (m.d_model, m.d_inner());
+    let mut ops = vec![
+        Op::LayerNorm { rows: l, cols: d },
+        // in_proj: D -> 2E (x and z).
+        Op::Gemm { m: l, n: 2 * e, k: d },
+    ];
+    // Forward + backward paths (backward includes the flips, elementwise).
+    ops.extend(direction_ops(m, l));
+    ops.push(Op::Elementwise { n: l * e, flops_per: 1 }); // flip in
+    ops.extend(direction_ops(m, l));
+    ops.push(Op::Elementwise { n: l * e, flops_per: 1 }); // flip out
+    // Combine directions + out_proj + residual.
+    ops.push(Op::Elementwise { n: l * e, flops_per: 1 });
+    ops.push(Op::Gemm { m: l, n: d, k: e });
+    ops.push(Op::Elementwise { n: l * d, flops_per: 1 });
+    ops
+}
+
+/// Full Vision Mamba inference at image size `img` (square).
+pub fn vim_model_ops(m: &VimModel, img: usize) -> Vec<Op> {
+    let l = m.seq_len(img);
+    let d = m.d_model;
+    let patch_dim = m.patch * m.patch * 3;
+    let mut ops = vec![
+        // Patch embedding.
+        Op::Gemm { m: l - 1, n: d, k: patch_dim },
+        Op::Elementwise { n: l * d, flops_per: 1 }, // +pos embed
+    ];
+    for _ in 0..m.n_blocks {
+        ops.extend(vim_block_ops(m, l));
+    }
+    ops.push(Op::LayerNorm { rows: l, cols: d });
+    ops.push(Op::Gemm { m: 1, n: 1000, k: d }); // head
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vision::OpClass;
+
+    #[test]
+    fn block_has_two_scans() {
+        let ops = vim_block_ops(&VimModel::tiny(), 197);
+        let scans = ops
+            .iter()
+            .filter(|o| o.class() == OpClass::SelectiveSsm)
+            .count();
+        assert_eq!(scans, 2); // bidirectional
+    }
+
+    #[test]
+    fn model_scales_linearly_with_length() {
+        // Vim's point: total FLOPs grow O(L), not O(L^2).
+        let m = VimModel::tiny();
+        let f224: f64 = vim_model_ops(&m, 224).iter().map(|o| o.flops()).sum();
+        let f448: f64 = vim_model_ops(&m, 448).iter().map(|o| o.flops()).sum();
+        let ratio = f448 / f224;
+        let l_ratio = m.seq_len(448) as f64 / m.seq_len(224) as f64;
+        assert!((ratio / l_ratio - 1.0).abs() < 0.05, "ratio {ratio} vs L ratio {l_ratio}");
+    }
+
+    #[test]
+    fn encoder_blocks_dominate_flops() {
+        // Paper §3.1: the 24 encoder blocks are ~98-99% of inference time.
+        let m = VimModel::tiny();
+        let all: f64 = vim_model_ops(&m, 224).iter().map(|o| o.flops()).sum();
+        let blocks: f64 = (0..m.n_blocks)
+            .flat_map(|_| vim_block_ops(&m, m.seq_len(224)))
+            .map(|o| o.flops())
+            .sum();
+        assert!(blocks / all > 0.95);
+    }
+}

@@ -1,0 +1,85 @@
+//! ViT (DeiT-style) baseline workload builder — for the Fig 1 comparison.
+
+use crate::config::VitModel;
+
+use super::ops::{Op, SfuFunc};
+
+/// One pre-norm ViT encoder block: MHSA + MLP.
+///
+/// Attention's score and context GEMMs are O(L^2 * d) — the quadratic term
+/// that Fig 1 shows overwhelming ViT at high resolution.
+pub fn vit_block_ops(m: &VitModel, l: usize) -> Vec<Op> {
+    let d = m.d_model;
+    let mlp = m.mlp_ratio * d;
+    vec![
+        Op::LayerNorm { rows: l, cols: d },
+        // QKV projection.
+        Op::Gemm { m: l, n: 3 * d, k: d },
+        // Scores: (L x d_h) x (d_h x L) per head, total O(L^2 d); the
+        // score tensor is materialized PER HEAD (heads x L x L) in the
+        // unfused eager pipeline the edge GPU runs.
+        Op::Gemm { m: l, n: l, k: d },
+        // Scale + softmax over heads x L x L scores (multi-pass: max,
+        // exp-sum, normalize — each a full sweep of the score tensor).
+        Op::Sfu { n: m.n_heads * l * l, func: SfuFunc::Exp },
+        Op::Elementwise { n: m.n_heads * l * l, flops_per: 3 },
+        // Context: (L x L) x (L x d_h) per head.
+        Op::Gemm { m: l, n: d, k: l },
+        // Output projection + residual.
+        Op::Gemm { m: l, n: d, k: d },
+        Op::Elementwise { n: l * d, flops_per: 1 },
+        // MLP.
+        Op::LayerNorm { rows: l, cols: d },
+        Op::Gemm { m: l, n: mlp, k: d },
+        Op::Sfu { n: l * mlp, func: SfuFunc::Silu }, // GELU ~ SiLU cost
+        Op::Gemm { m: l, n: d, k: mlp },
+        Op::Elementwise { n: l * d, flops_per: 1 },
+    ]
+}
+
+/// Full ViT inference at image size `img`.
+pub fn vit_model_ops(m: &VitModel, img: usize) -> Vec<Op> {
+    let l = m.seq_len(img);
+    let d = m.d_model;
+    let patch_dim = m.patch * m.patch * 3;
+    let mut ops = vec![
+        Op::Gemm { m: l - 1, n: d, k: patch_dim },
+        Op::Elementwise { n: l * d, flops_per: 1 },
+    ];
+    for _ in 0..m.n_blocks {
+        ops.extend(vit_block_ops(m, l));
+    }
+    ops.push(Op::LayerNorm { rows: l, cols: d });
+    ops.push(Op::Gemm { m: 1, n: 1000, k: d });
+    ops
+}
+
+/// Peak activation memory of attention: the L x L score matrix per head —
+/// the term Vim eliminates (Fig 1(b)).
+pub fn vit_score_matrix_bytes(m: &VitModel, img: usize, elem_bytes: f64) -> f64 {
+    let l = m.seq_len(img) as f64;
+    l * l * m.n_heads as f64 * elem_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vit_flops_superlinear_in_length() {
+        let m = VitModel::tiny();
+        let f224: f64 = vit_model_ops(&m, 224).iter().map(|o| o.flops()).sum();
+        let f896: f64 = vit_model_ops(&m, 896).iter().map(|o| o.flops()).sum();
+        let l_ratio = m.seq_len(896) as f64 / m.seq_len(224) as f64; // 16x
+        // Must grow clearly faster than linear (quadratic attention term).
+        assert!(f896 / f224 > 1.5 * l_ratio);
+    }
+
+    #[test]
+    fn score_matrix_grows_quartically_with_img() {
+        let m = VitModel::tiny();
+        let s224 = vit_score_matrix_bytes(&m, 224, 2.0);
+        let s448 = vit_score_matrix_bytes(&m, 448, 2.0);
+        assert!(s448 / s224 > 15.0); // L^2 with L ~ img^2 => ~16x
+    }
+}

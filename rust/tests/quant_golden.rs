@@ -1,0 +1,116 @@
+//! Bit-exactness contract: the rust INT8 SPE datapath, quantizer rounding,
+//! pow2 scale approximation and SFU LUT evaluation must reproduce the
+//! python-generated golden vectors in `artifacts/golden/` EXACTLY.
+//!
+//! Requires `make artifacts` to have run; tests are skipped (with a
+//! loud message) if the goldens are missing.
+
+use mamba_x::quant::{pow2_round, pow2_shift, quantize, spe_scan_int};
+use mamba_x::sim::sfu::SfuTables;
+use mamba_x::util::Json;
+
+fn golden(name: &str) -> Option<Json> {
+    let path = format!("artifacts/golden/{name}");
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("SKIP: {path} missing — run `make artifacts` first");
+        return None;
+    }
+    Some(Json::load(&path).expect("golden parse"))
+}
+
+#[test]
+fn spe_scan_matches_python_exactly() {
+    let Some(j) = golden("spe_scan.json") else { return };
+    let cases = j.get("cases").unwrap().arr().unwrap();
+    assert!(!cases.is_empty());
+    for (ci, c) in cases.iter().enumerate() {
+        let l = c.get("L").unwrap().usize().unwrap();
+        let h = c.get("H").unwrap().usize().unwrap();
+        let n = c.get("N").unwrap().usize().unwrap();
+        let p = c.get("p").unwrap().i64_vec().unwrap();
+        let q = c.get("q").unwrap().i64_vec().unwrap();
+        let shift: Vec<i32> = c
+            .get("shift")
+            .unwrap()
+            .i64_vec()
+            .unwrap()
+            .iter()
+            .map(|&x| x as i32)
+            .collect();
+        let want = c.get("out").unwrap().i64_vec().unwrap();
+        let got = spe_scan_int(&p, &q, &shift, l, h, n);
+        assert_eq!(got, want, "case {ci} (L={l},H={h},N={n})");
+    }
+}
+
+#[test]
+fn quantize_rounding_matches_python_exactly() {
+    let Some(j) = golden("quantize.json") else { return };
+    let xs = j.get("x").unwrap().f32_vec().unwrap();
+    let s = j.get("scale").unwrap().num().unwrap() as f32;
+    let want = j.get("q").unwrap().f32_vec().unwrap();
+    for (i, (&x, &w)) in xs.iter().zip(want.iter()).enumerate() {
+        assert_eq!(quantize(x, s) as f32, w, "x[{i}]={x}");
+    }
+}
+
+#[test]
+fn pow2_matches_python_exactly() {
+    let Some(j) = golden("pow2.json") else { return };
+    let s = j.get("s").unwrap().f32_vec().unwrap();
+    let rounded = j.get("rounded").unwrap().f32_vec().unwrap();
+    let shift = j.get("shift").unwrap().i64_vec().unwrap();
+    for i in 0..s.len() {
+        assert_eq!(pow2_round(s[i]), rounded[i], "s[{i}]={}", s[i]);
+        assert_eq!(pow2_shift(s[i]) as i64, shift[i], "s[{i}]={}", s[i]);
+    }
+}
+
+#[test]
+fn sfu_lut_eval_matches_python_exactly() {
+    let Some(j) = golden("lut_eval.json") else { return };
+    let tables = SfuTables::load("artifacts/sfu_luts.json").expect("luts");
+    for (name, case) in j.obj().unwrap() {
+        let xs = case.get("x").unwrap().f32_vec().unwrap();
+        let want = case.get("y").unwrap().f32_vec().unwrap();
+        let t = match name.as_str() {
+            "silu" => &tables.silu,
+            "exp" => &tables.exp,
+            "softplus" => &tables.softplus,
+            other => panic!("unknown function {other}"),
+        };
+        for (i, (&x, &w)) in xs.iter().zip(want.iter()).enumerate() {
+            let got = t.eval(x);
+            assert_eq!(got, w, "{name} x[{i}]={x}: got {got} want {w}");
+        }
+    }
+}
+
+#[test]
+fn sfu_lut_is_accurate_in_range() {
+    // Beyond bit-exactness: the fitted tables approximate the real
+    // functions well where the profile says inputs live (Fig 19's left
+    // end-state).
+    if !std::path::Path::new("artifacts/sfu_luts.json").exists() {
+        eprintln!("SKIP: artifacts/sfu_luts.json missing");
+        return;
+    }
+    let tables = SfuTables::load("artifacts/sfu_luts.json").unwrap();
+    for (t, f) in [
+        (&tables.exp, mamba_x::vision::SfuFunc::Exp),
+        (&tables.silu, mamba_x::vision::SfuFunc::Silu),
+        (&tables.softplus, mamba_x::vision::SfuFunc::Softplus),
+    ] {
+        let lo = t.bps[0];
+        let hi = *t.bps.last().unwrap();
+        let mut max_err = 0.0f32;
+        let mut scale = 1.0f32;
+        for i in 0..2000 {
+            let x = lo + (hi - lo) * i as f32 / 1999.0;
+            let exact = mamba_x::sim::sfu::LutTable::exact(f, x);
+            max_err = max_err.max((t.eval(x) - exact).abs());
+            scale = scale.max(exact.abs());
+        }
+        assert!(max_err / scale < 0.02, "{}: rel err {}", t.name, max_err / scale);
+    }
+}

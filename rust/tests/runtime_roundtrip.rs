@@ -1,0 +1,136 @@
+//! End-to-end runtime contract: the PJRT-loaded AOT artifacts must
+//! reproduce the JAX-side golden outputs (artifacts/golden/model_io.json),
+//! and the coordinator must serve them faithfully.
+//!
+//! Skipped with a message when artifacts are missing.
+
+use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
+use mamba_x::runtime::{Runtime, Tensor};
+use mamba_x::util::Json;
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts` first");
+    }
+    ok
+}
+
+fn load_model_io() -> (Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<usize>) {
+    let j = Json::load("artifacts/golden/model_io.json").expect("model_io");
+    let shape = j.get("input_shape").unwrap().usize_vec().unwrap();
+    let images: Vec<Vec<f32>> = j
+        .get("images")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.f32_vec().unwrap())
+        .collect();
+    let logits: Vec<Vec<f32>> = j
+        .get("logits")
+        .unwrap()
+        .arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.f32_vec().unwrap())
+        .collect();
+    (images, logits, shape)
+}
+
+#[test]
+fn model_artifact_reproduces_jax_logits() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new("artifacts").expect("runtime");
+    assert_eq!(rt.platform(), "cpu");
+    let exe = rt.load_model().expect("compile model");
+    let (images, want_logits, shape) = load_model_io();
+    for (img, want) in images.iter().zip(want_logits.iter()) {
+        let out = exe
+            .run(&[Tensor::new(shape.clone(), img.clone()).unwrap()])
+            .expect("execute");
+        let got = &out[0];
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                "logit[{i}]: got {g}, want {w}"
+            );
+        }
+        // Classification agreement (the property that matters downstream).
+        let argmax = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
+        };
+        assert_eq!(argmax(got), argmax(want));
+    }
+}
+
+#[test]
+fn scan_artifact_runs_at_tiny_shape() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::new("artifacts").expect("runtime");
+    let meta = rt.manifest.scan.get("micro").expect("micro scan").clone();
+    let exe = rt.load(&meta.file).expect("compile scan");
+    let n: usize = meta.shape.iter().product();
+    // dA in (0,1], dBu small: the scan of ones/halves has a closed form
+    // per lane: state_k = sum_{i<=k} 0.5^(k-i) -> 2 - 0.5^k.
+    let d_a = Tensor::new(meta.shape.clone(), vec![0.5; n]).unwrap();
+    let d_bu = Tensor::new(meta.shape.clone(), vec![1.0; n]).unwrap();
+    let out = exe.run(&[d_a, d_bu]).expect("execute scan");
+    let states = &out[0];
+    assert_eq!(states.len(), n);
+    let (l, rest) = (meta.shape[0], meta.shape[1] * meta.shape[2]);
+    for k in 0..l.min(12) {
+        let want = 2.0 - 0.5f32.powi(k as i32);
+        let got = states[k * rest]; // lane (0,0) at step k
+        assert!((got - want).abs() < 1e-4, "step {k}: got {got} want {want}");
+    }
+}
+
+#[test]
+fn coordinator_serves_golden_images() {
+    if !have_artifacts() {
+        return;
+    }
+    let (images, want_logits, shape) = load_model_io();
+    let server = Server::new(BatchPolicy { max_batch: 4, max_wait_us: 500 });
+    let (handle, join) = server.spawn(move || {
+        let rt = Runtime::new("artifacts")?;
+        rt.load_model()
+    });
+    // Submit each golden image a few times from two client threads.
+    let mut clients = Vec::new();
+    for t in 0..2u64 {
+        let h = handle.clone();
+        let images = images.clone();
+        let want = want_logits.clone();
+        let shape = shape.clone();
+        clients.push(std::thread::spawn(move || {
+            for rep in 0..3u64 {
+                for (i, img) in images.iter().enumerate() {
+                    let req = InferenceRequest {
+                        id: t * 1000 + rep * 10 + i as u64,
+                        image: Tensor::new(shape.clone(), img.clone()).unwrap(),
+                    };
+                    let resp = h.infer(req).expect("infer");
+                    let w = &want[i];
+                    for (g, ww) in resp.logits.iter().zip(w.iter()) {
+                        assert!((g - ww).abs() < 1e-3 * (1.0 + ww.abs()));
+                    }
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    drop(handle);
+    let metrics = join.join().unwrap().expect("server ok");
+    assert_eq!(metrics.count(), 2 * 3 * 2);
+    assert!(metrics.percentile_us(99.0) > 0);
+    assert!(metrics.batches >= 1);
+}

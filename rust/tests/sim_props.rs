@@ -1,0 +1,165 @@
+//! Property tests over the simulator and coordinator invariants
+//! (hand-rolled harness: proptest is unavailable offline; `Pcg` provides
+//! deterministic shrink-free random cases, 100+ per property).
+
+use mamba_x::config::MambaXConfig;
+use mamba_x::coordinator::{BatchPolicy, DynamicBatcher};
+use mamba_x::quant::spe_scan_int;
+use mamba_x::sim::{scan_timing, ssa_scan_functional};
+use mamba_x::sim::memory::Dram;
+use mamba_x::util::Pcg;
+
+/// PROPERTY: the SSA+LISU functional datapath equals the monolithic
+/// sequential SPE scan for EVERY (chunk size, SSA count, shape) —
+/// chunking is semantically invisible (the whole point of the LISU).
+#[test]
+fn prop_chunked_scan_schedule_invariant() {
+    let mut rng = Pcg::new(0xC0FFEE);
+    for case in 0..120 {
+        let l = rng.usize_in(1, 90);
+        let h = rng.usize_in(1, 5);
+        let n = rng.usize_in(1, 5);
+        let chunk = 1usize << rng.usize_in(1, 6);
+        let n_ssa = rng.usize_in(1, 12);
+        let total = l * h * n;
+        let p: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+        let q: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+        let shift: Vec<i32> = (0..h).map(|_| rng.usize_in(0, 12) as i32).collect();
+        let want = spe_scan_int(&p, &q, &shift, l, h, n);
+        let cfg = MambaXConfig { chunk, n_ssa, ..MambaXConfig::default() };
+        let got = ssa_scan_functional(&cfg, &p, &q, &shift, l, h, n);
+        assert_eq!(got, want, "case {case}: l={l} h={h} n={n} chunk={chunk} ssa={n_ssa}");
+    }
+}
+
+/// PROPERTY: scan timing is monotone — more SSAs never slow it down, and
+/// larger workloads never speed it up.
+#[test]
+fn prop_scan_timing_monotone() {
+    let mut rng = Pcg::new(42);
+    for _ in 0..60 {
+        let l = rng.usize_in(64, 2048);
+        let h = rng.usize_in(32, 512);
+        let n = rng.usize_in(4, 16);
+        let cycles = |n_ssa: usize, l: usize| {
+            let cfg = MambaXConfig::with_ssas(n_ssa);
+            let mut dram = Dram::new(cfg.dram_bytes_per_cycle());
+            scan_timing(&cfg, &mut dram, l, h, n).cycles
+        };
+        assert!(cycles(2, l) >= cycles(4, l), "l={l} h={h} n={n}");
+        assert!(cycles(4, l) >= cycles(8, l), "l={l} h={h} n={n}");
+        assert!(cycles(8, 2 * l) > cycles(8, l), "l={l} h={h} n={n}");
+    }
+}
+
+/// PROPERTY: DMA byte conservation — scan traffic equals exactly the
+/// operand + output footprint, independent of schedule knobs.
+#[test]
+fn prop_scan_traffic_schedule_independent() {
+    let mut rng = Pcg::new(7);
+    for _ in 0..60 {
+        let l = rng.usize_in(16, 1024);
+        let h = rng.usize_in(16, 256);
+        let n = rng.usize_in(2, 16);
+        let expect_read = (3 * l * h + l * n + h * n) as f64;
+        let expect_write = (l * h) as f64 * 2.0;
+        for n_ssa in [1, 3, 8] {
+            for chunk in [8, 16, 32] {
+                let cfg = MambaXConfig { n_ssa, chunk, ..MambaXConfig::default() };
+                let mut dram = Dram::new(cfg.dram_bytes_per_cycle());
+                let t = scan_timing(&cfg, &mut dram, l, h, n);
+                assert_eq!(t.dram_read_bytes, expect_read);
+                assert_eq!(t.dram_write_bytes, expect_write);
+                assert_eq!(dram.read_bytes, expect_read);
+                assert_eq!(dram.write_bytes, expect_write);
+            }
+        }
+    }
+}
+
+/// PROPERTY: the batcher is FIFO, lossless, duplicate-free, and never
+/// exceeds max_batch — under arbitrary interleavings of push/poll.
+#[test]
+fn prop_batcher_fifo_lossless() {
+    let mut rng = Pcg::new(99);
+    for case in 0..100 {
+        let max_batch = rng.usize_in(1, 10);
+        let max_wait = rng.usize_in(0, 500) as u64;
+        let mut b: DynamicBatcher<u64> =
+            DynamicBatcher::new(BatchPolicy { max_batch, max_wait_us: max_wait });
+        let n_items = rng.usize_in(1, 200);
+        let mut sent = Vec::new();
+        let mut recv = Vec::new();
+        let mut now = 0u64;
+        let mut next = 0u64;
+        while recv.len() < n_items {
+            now += rng.usize_in(0, 100) as u64;
+            if next < n_items as u64 && rng.f64() < 0.6 {
+                b.push(next, now);
+                sent.push(next);
+                next += 1;
+            }
+            if let Some(batch) = b.poll(now) {
+                assert!(batch.len() <= max_batch, "case {case}");
+                recv.extend(batch);
+            }
+            if next == n_items as u64 && !b.is_empty() {
+                // Drain phase: keep polling with advancing time.
+                now += max_wait + 1;
+                if let Some(batch) = b.poll(now) {
+                    assert!(batch.len() <= max_batch);
+                    recv.extend(batch);
+                }
+            }
+        }
+        assert_eq!(recv, sent, "case {case}: FIFO order violated");
+        assert_eq!(b.enqueued, b.dequeued);
+    }
+}
+
+/// PROPERTY: a released batch is never stale — whenever poll returns at
+/// time `now`, either the batch was full or the oldest item's deadline
+/// had passed.
+#[test]
+fn prop_batcher_release_reason() {
+    let mut rng = Pcg::new(123);
+    for _ in 0..100 {
+        let policy = BatchPolicy {
+            max_batch: rng.usize_in(2, 8),
+            max_wait_us: rng.usize_in(10, 1000) as u64,
+        };
+        let mut b: DynamicBatcher<(u64, u64)> = DynamicBatcher::new(policy);
+        let mut now = 0u64;
+        for i in 0..50u64 {
+            now += rng.usize_in(0, 300) as u64;
+            b.push((i, now), now);
+            if let Some(batch) = b.poll(now) {
+                let full = batch.len() == policy.max_batch;
+                let oldest_enq = batch.first().unwrap().1;
+                let expired = now >= oldest_enq + policy.max_wait_us;
+                assert!(full || expired, "release without cause at t={now}");
+            }
+        }
+    }
+}
+
+/// PROPERTY: GEMM-engine utilization is in (0, 1] and cycles scale
+/// superlinearly never (doubling one dim at most ~doubles cycles + tiles).
+#[test]
+fn prop_gemm_sane() {
+    use mamba_x::sim::gemm::gemm_timing;
+    let mut rng = Pcg::new(5);
+    for _ in 0..80 {
+        let cfg = MambaXConfig::default();
+        let m = rng.usize_in(1, 2048);
+        let n = rng.usize_in(1, 2048);
+        let k = rng.usize_in(1, 1024);
+        let mut dram = Dram::new(cfg.dram_bytes_per_cycle());
+        let t = gemm_timing(&cfg, &mut dram, m, n, k);
+        assert!(t.utilization > 0.0 && t.utilization <= 1.0);
+        assert!(t.cycles >= 1);
+        let mut dram2 = Dram::new(cfg.dram_bytes_per_cycle());
+        let t2 = gemm_timing(&cfg, &mut dram2, 2 * m, n, k);
+        assert!(t2.cycles as f64 <= 2.6 * t.cycles as f64 + 1000.0);
+    }
+}
