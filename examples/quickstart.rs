@@ -1,33 +1,40 @@
-//! Quickstart: load the AOT-compiled Vision Mamba, classify one synthetic
-//! image, and compare Mamba-X vs edge-GPU timing for the same inference.
-//!
-//! Run after `make artifacts`:
+//! Quickstart: classify one synthetic image on the hermetic native
+//! Vision Mamba executor (pure rust, INT8 SPE scan + LUT SFU — no
+//! Python, no XLA, no artifacts), then compare Mamba-X vs edge-GPU
+//! timing for the same inference on the modeled hardware.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
+//!
+//! With the `pjrt` cargo feature and a real xla crate, the same flow can
+//! run trained AOT artifacts instead (`mamba-x serve --backend pjrt`).
 
 use anyhow::Result;
 use mamba_x::config::{GpuConfig, MambaXConfig, VimModel};
 use mamba_x::gpu::GpuModel;
-use mamba_x::runtime::{Runtime, Tensor};
+use mamba_x::runtime::{InferenceBackend, NativeBackend, Tensor};
 use mamba_x::sim::Accelerator;
 use mamba_x::vision::vim_model_ops;
 
 fn main() -> Result<()> {
-    // --- 1. Functional path: run the real compiled model via PJRT. ------
-    let rt = Runtime::new("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
-    let meta = &rt.manifest.model;
+    // --- 1. Functional path: real quantized inference, pure rust. -------
+    let mut backend = NativeBackend::micro(7);
+    let cfg = backend.config().clone();
     println!(
-        "model: {} ({} blocks, d_model {}, seq len {})",
-        meta.model, meta.n_blocks, meta.d_model, meta.seq_len
+        "native backend: {} ({} blocks, d_model {}, {}x{}x{} -> {} classes)",
+        cfg.model.name,
+        cfg.model.n_blocks,
+        cfg.model.d_model,
+        cfg.img,
+        cfg.img,
+        cfg.in_ch,
+        cfg.n_classes
     );
-    let exe = rt.load_model()?;
 
     // A synthetic "ring" image (class 4 of the shapes dataset).
-    let img_sz = meta.input[0];
-    let mut img = vec![-1.0f32; meta.input.iter().product()];
+    let img_sz = cfg.img;
+    let mut img = vec![-1.0f32; cfg.input_len()];
     let c = img_sz as f32 / 2.0;
     for y in 0..img_sz {
         for x in 0..img_sz {
@@ -37,13 +44,15 @@ fn main() -> Result<()> {
             }
         }
     }
-    let logits = &exe.run(&[Tensor::new(meta.input.clone(), img)?])?[0];
+    let t0 = std::time::Instant::now();
+    let logits = backend.infer(&Tensor::new(cfg.input_shape(), img)?)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     let (cls, score) = logits
         .iter()
         .enumerate()
         .max_by(|a, b| a.1.total_cmp(b.1))
         .unwrap();
-    println!("predicted class {cls} (logit {score:.3}); logits: {logits:.3?}");
+    println!("predicted class {cls} (logit {score:.3}) in {wall_ms:.2} ms; logits: {logits:.3?}");
 
     // --- 2. Timing path: the same inference on the modeled hardware. ----
     let m = VimModel::micro();

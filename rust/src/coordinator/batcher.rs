@@ -1,8 +1,9 @@
 //! Dynamic batching policy — pure logic, independently testable.
 //!
 //! Requests accumulate until either `max_batch` are pending or the oldest
-//! pending request has waited `max_wait_us`. Invariants (proptest-checked
-//! in `rust/tests/coordinator_props.rs`):
+//! pending request has waited `max_wait_us`. Invariants (unit tests
+//! below, property-checked by the Pcg harness in `rust/tests/sim_props.rs`
+//! and at the serving layer in `rust/tests/pool_props.rs`):
 //!
 //! * FIFO: requests leave in arrival order;
 //! * no request is dropped or duplicated;
@@ -61,8 +62,10 @@ impl<T> DynamicBatcher<T> {
     }
 
     /// Earliest deadline by which a batch must be released, if any.
+    /// Saturating: `max_wait_us == u64::MAX` means "never release on
+    /// time", not an overflow panic for late enqueues (debug builds).
     pub fn deadline_us(&self) -> Option<u64> {
-        self.queue.front().map(|p| p.enqueued_us + self.policy.max_wait_us)
+        self.queue.front().map(|p| p.enqueued_us.saturating_add(self.policy.max_wait_us))
     }
 
     /// Whether a batch should be released at `now_us`.
@@ -82,11 +85,20 @@ impl<T> DynamicBatcher<T> {
         Some(batch)
     }
 
-    /// Drain everything regardless of policy (shutdown path).
-    pub fn flush(&mut self) -> Vec<T> {
-        let batch: Vec<T> = self.queue.drain(..).map(|p| p.item).collect();
+    /// Release up to `max` items regardless of policy (shutdown drain in
+    /// policy-sized chunks, so multiple workers can share the drain and
+    /// batch-size accounting stays honest).
+    pub fn drain_up_to(&mut self, max: usize) -> Vec<T> {
+        let n = self.queue.len().min(max);
+        let batch: Vec<T> = self.queue.drain(..n).map(|p| p.item).collect();
         self.dequeued += batch.len() as u64;
         batch
+    }
+
+    /// Drain everything regardless of policy (shutdown path).
+    pub fn flush(&mut self) -> Vec<T> {
+        let n = self.queue.len();
+        self.drain_up_to(n)
     }
 }
 
@@ -146,5 +158,30 @@ mod tests {
         assert!(q.poll(10).is_none());
         assert_eq!(q.flush(), vec![1, 2]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deadline_saturates_instead_of_overflowing() {
+        // Regression: `enqueued_us + max_wait_us` overflowed in debug
+        // builds for huge max_wait with a nonzero enqueue time.
+        let mut q = b(100, u64::MAX);
+        q.push(1, 5);
+        assert_eq!(q.deadline_us(), Some(u64::MAX));
+        assert!(!q.ready(u64::MAX - 1));
+        assert!(q.poll(u64::MAX - 1).is_none());
+        // Saturated deadline still releases at the end of time.
+        assert!(q.ready(u64::MAX));
+    }
+
+    #[test]
+    fn drain_up_to_respects_cap_and_counters() {
+        let mut q = b(3, u64::MAX);
+        for i in 0..5 {
+            q.push(i, 1);
+        }
+        assert_eq!(q.drain_up_to(2), vec![0, 1]);
+        assert_eq!(q.drain_up_to(100), vec![2, 3, 4]);
+        assert!(q.drain_up_to(4).is_empty());
+        assert_eq!(q.enqueued, q.dequeued);
     }
 }

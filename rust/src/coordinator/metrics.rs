@@ -9,9 +9,25 @@ pub struct Metrics {
     pub batch_items: u64,
     pub first_us: Option<u64>,
     pub last_us: u64,
+    /// Requests refused at admission (bounded-queue backpressure).
+    pub rejected: u64,
 }
 
 impl Metrics {
+    /// Fold another worker's metrics into this one (pool shutdown path).
+    /// Percentiles of the merged recorder are percentiles over the union
+    /// of all samples, not averages of per-worker percentiles.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batches += other.batches;
+        self.batch_items += other.batch_items;
+        self.first_us = match (self.first_us, other.first_us) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last_us = self.last_us.max(other.last_us);
+        self.rejected += other.rejected;
+    }
     pub fn record_request(&mut self, latency_us: u64, completed_at_us: u64) {
         self.latencies_us.push(latency_us);
         if self.first_us.is_none() {
@@ -67,9 +83,10 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "n={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms \
+            "n={} rejected={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms \
              batch_avg={:.2} throughput={:.1} req/s",
             self.count(),
+            self.rejected,
             self.mean_us() / 1e3,
             self.percentile_us(50.0) as f64 / 1e3,
             self.percentile_us(95.0) as f64 / 1e3,
@@ -108,5 +125,37 @@ mod tests {
         m.record_batch(4);
         m.record_batch(2);
         assert_eq!(m.mean_batch_size(), 3.0);
+    }
+
+    #[test]
+    fn merge_combines_samples_and_window() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        for i in 1..=10u64 {
+            a.record_request(i * 100, i);
+            b.record_request(i * 1000, 100 + i);
+        }
+        a.record_batch(10);
+        b.record_batch(5);
+        b.rejected = 3;
+        a.merge(&b);
+        assert_eq!(a.count(), 20);
+        assert_eq!(a.batches, 2);
+        assert_eq!(a.batch_items, 15);
+        assert_eq!(a.first_us, Some(1));
+        assert_eq!(a.last_us, 110);
+        assert_eq!(a.rejected, 3);
+        // Union percentiles: p50 over {100..1000, 1000..10000} samples.
+        assert_eq!(a.percentile_us(50.0), 1000);
+    }
+
+    #[test]
+    fn merge_into_empty() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        b.record_request(500, 7);
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.first_us, Some(7));
     }
 }

@@ -2,15 +2,17 @@
 //!
 //! Mamba-X's system contribution is the accelerator; its deployment story
 //! is an *edge vision service* (paper §1: autonomous vehicles, smart
-//! surveillance, AR). This module is that service: an async request
-//! router + dynamic batcher in front of the PJRT-compiled Vision Mamba
-//! (the vLLM-router shape, scaled to edge):
+//! surveillance, AR). This module is that service: a request router +
+//! shared dynamic batcher in front of an N-worker pool of
+//! [`crate::runtime::InferenceBackend`]s (the vLLM-router shape, scaled
+//! to edge):
 //!
 //! * [`batcher`] — pure batching policy (max batch / max wait), FIFO per
-//!   stream, proptest-verified invariants;
-//! * [`server`] — tokio server: mpsc ingress, a worker that owns the
-//!   compiled executable, per-request latency accounting;
-//! * [`metrics`] — latency/throughput percentiles for the E2E example.
+//!   stream, property-tested invariants (`rust/tests/sim_props.rs`);
+//! * [`server`] — worker pool: shared bounded ingress queue, per-worker
+//!   backend ownership, shutdown drain with exactly-once replies;
+//! * [`metrics`] — latency/throughput percentiles, merged across the
+//!   pool at join time.
 
 pub mod batcher;
 pub mod metrics;
@@ -18,4 +20,7 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use metrics::Metrics;
-pub use server::{InferenceRequest, InferenceResponse, Server, ServerHandle};
+pub use server::{
+    InferenceRequest, InferenceResponse, PoolJoin, ResponseWaiter, Server, ServerHandle,
+    DEFAULT_QUEUE_DEPTH,
+};

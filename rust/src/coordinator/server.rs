@@ -1,23 +1,42 @@
-//! Serving loop: mpsc ingress -> dynamic batcher -> PJRT worker thread.
+//! Serving loop: shared ingress queue -> dynamic batcher -> N worker
+//! threads, with bounded-queue backpressure.
 //!
-//! The worker thread owns the compiled executable (PJRT handles are not
-//! Sync); clients submit over an mpsc channel and block on a per-request
-//! reply channel (std threads — the offline build has no async runtime,
-//! and an edge serving loop with one device worker doesn't need one; the
-//! batcher policy is identical either way). The batch-1 model artifact is
-//! executed per item inside a batch window — batching amortizes dispatch
-//! and keeps the queue policy identical to a batched-executable
-//! deployment (DESIGN.md).
+//! Clients submit through a [`ServerHandle`] into one shared
+//! [`DynamicBatcher`] guarded by a mutex + condvar; workers pull
+//! policy-released batches and execute them on their own
+//! [`InferenceBackend`] instance (std threads — the offline build has no
+//! async runtime, and device-bound workers want thread affinity anyway).
+//! Backends are constructed *on the worker thread* via the factory passed
+//! to [`Server::spawn`] / [`Server::spawn_pool`]: PJRT handles are not
+//! `Send`, and per-worker ownership means no locking on the hot path.
+//!
+//! Invariants the property tests (`rust/tests/pool_props.rs`,
+//! `rust/tests/serving_props.rs`) enforce:
+//!
+//! * every accepted request is answered exactly once, including across a
+//!   shutdown drain (conservation);
+//! * admission beyond `queue_depth` pending requests is refused
+//!   immediately (bounded queue, counted in [`Metrics::rejected`]);
+//! * responses are independent of worker count, batch composition and
+//!   client interleaving (backends are deterministic pure functions);
+//! * the final [`Metrics`] are the merge of every worker's recorder.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::{Executable, Tensor};
+use crate::runtime::{InferenceBackend, Tensor};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::metrics::Metrics;
+
+/// Default bound on queued (admitted, not yet executing) requests.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
+
+/// How long an idle worker sleeps between shutdown/deadline re-checks.
+const IDLE_WAIT: Duration = Duration::from_millis(50);
 
 /// One inference request: a flattened image.
 #[derive(Debug)]
@@ -40,19 +59,75 @@ struct Job {
     t0: Instant,
 }
 
+struct QueueState {
+    batcher: DynamicBatcher<Job>,
+    /// All client handles dropped: drain and stop.
+    closed: bool,
+    /// Workers still running (including ones still in their factory).
+    workers_alive: usize,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    work_cv: Condvar,
+    start: Instant,
+    policy: BatchPolicy,
+    queue_depth: usize,
+    /// Live `ServerHandle` clones; the last drop closes the queue.
+    handles: AtomicUsize,
+    rejected: AtomicU64,
+}
+
+impl Shared {
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+}
+
 /// Client handle: submit requests, await responses. Cloneable; the server
-/// shuts down when every handle is dropped.
-#[derive(Clone)]
+/// drains and shuts down when every handle is dropped.
 pub struct ServerHandle {
-    tx: mpsc::Sender<Job>,
+    shared: Arc<Shared>,
+}
+
+impl Clone for ServerHandle {
+    fn clone(&self) -> Self {
+        self.shared.handles.fetch_add(1, Ordering::Relaxed);
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if self.shared.handles.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+    }
 }
 
 impl ServerHandle {
-    /// Submit a request and return a waiter for its response.
+    /// Submit a request and return a waiter for its response. Fails
+    /// immediately (without enqueueing) when the queue is at depth or no
+    /// worker is alive.
     pub fn submit(&self, req: InferenceRequest) -> Result<ResponseWaiter> {
         let (reply, rx) = mpsc::channel();
         let job = Job { req, reply, t0: Instant::now() };
-        self.tx.send(job).map_err(|_| anyhow!("server stopped"))?;
+        let mut st = self.shared.state.lock().unwrap();
+        if st.workers_alive == 0 {
+            bail!("server stopped: no live workers");
+        }
+        if st.batcher.len() >= self.shared.queue_depth {
+            drop(st);
+            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!("server overloaded: queue depth {} reached", self.shared.queue_depth);
+        }
+        let now = self.shared.now_us();
+        st.batcher.push(job, now);
+        drop(st);
+        self.shared.work_cv.notify_one();
         Ok(ResponseWaiter { rx })
     }
 
@@ -73,101 +148,307 @@ impl ResponseWaiter {
     }
 }
 
-/// The serving loop configuration.
-///
-/// PJRT handles are not `Send` (`Rc` internals), so the executable is
-/// *constructed on the worker thread* via the factory passed to
-/// [`Server::spawn`] — the worker owns the device end to end.
+/// Serving configuration: batch policy + admission bound.
 pub struct Server {
     policy: BatchPolicy,
+    queue_depth: usize,
 }
 
 impl Server {
     pub fn new(policy: BatchPolicy) -> Self {
-        Self { policy }
+        Self { policy, queue_depth: DEFAULT_QUEUE_DEPTH }
     }
 
-    /// Spawn the worker thread; `factory` runs on that thread to build the
-    /// executable. Returns a client handle and the join handle resolving
-    /// to the final [`Metrics`] once all handles drop.
-    pub fn spawn<F>(self, factory: F) -> (ServerHandle, std::thread::JoinHandle<Result<Metrics>>)
-    where
-        F: FnOnce() -> Result<Executable> + Send + 'static,
-    {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let handle = ServerHandle { tx };
-        let join = std::thread::spawn(move || {
-            let exe = factory()?;
-            Ok(Self::worker(&exe, self.policy, rx))
+    /// Bound the number of queued requests (admission control).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    fn shared(&self, workers: usize) -> (Arc<Shared>, ServerHandle) {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                batcher: DynamicBatcher::new(self.policy),
+                closed: false,
+                workers_alive: workers,
+            }),
+            work_cv: Condvar::new(),
+            start: Instant::now(),
+            policy: self.policy,
+            queue_depth: self.queue_depth,
+            handles: AtomicUsize::new(1),
+            rejected: AtomicU64::new(0),
         });
-        (handle, join)
+        let handle = ServerHandle { shared: Arc::clone(&shared) };
+        (shared, handle)
     }
 
-    fn worker(exe: &Executable, policy: BatchPolicy, rx: mpsc::Receiver<Job>) -> Metrics {
-        let start = Instant::now();
-        let now_us = |s: &Instant| s.elapsed().as_micros() as u64;
-        let mut metrics = Metrics::default();
-        let mut batcher: DynamicBatcher<Job> = DynamicBatcher::new(policy);
-        let mut closed = false;
-        while !closed || !batcher.is_empty() {
-            // Phase 1: gather — block for the first job, then drain.
-            if batcher.is_empty() && !closed {
-                match rx.recv() {
-                    Ok(job) => batcher.push(job, now_us(&start)),
-                    Err(_) => {
-                        closed = true;
-                        continue;
+    /// Spawn a single worker whose backend is built by a one-shot factory
+    /// *on the worker thread* (required for non-`Send` backends like
+    /// PJRT). Returns a client handle and the pool join handle.
+    pub fn spawn<B, F>(self, factory: F) -> (ServerHandle, PoolJoin)
+    where
+        B: InferenceBackend,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
+        let (shared, handle) = self.shared(1);
+        let worker_shared = Arc::clone(&shared);
+        let thread = std::thread::spawn(move || worker_entry(&worker_shared, factory));
+        (handle, PoolJoin { threads: vec![thread], shared })
+    }
+
+    /// Spawn `workers` threads sharing the ingress queue and batcher;
+    /// `factory(worker_index)` runs on each worker thread to build its
+    /// backend. Use backends that are deterministic across instances
+    /// (same seed/config) so routing stays invisible to clients.
+    pub fn spawn_pool<B, F>(self, workers: usize, factory: F) -> (ServerHandle, PoolJoin)
+    where
+        B: InferenceBackend,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let (shared, handle) = self.shared(workers);
+        let factory = Arc::new(factory);
+        let threads = (0..workers)
+            .map(|w| {
+                let worker_shared = Arc::clone(&shared);
+                let factory = Arc::clone(&factory);
+                std::thread::spawn(move || worker_entry(&worker_shared, move || (*factory)(w)))
+            })
+            .collect();
+        (handle, PoolJoin { threads, shared })
+    }
+}
+
+/// Join handle over the worker pool; resolves to the merged [`Metrics`].
+pub struct PoolJoin {
+    threads: Vec<std::thread::JoinHandle<Result<Metrics>>>,
+    shared: Arc<Shared>,
+}
+
+impl PoolJoin {
+    /// Wait for every worker and merge their metrics (union of latency
+    /// samples, summed batch counters, widened completion window, plus
+    /// the admission-rejection count). Errors only if a worker panicked
+    /// or *no* worker ever became ready; individual factory failures in a
+    /// partially-healthy pool are tolerated.
+    pub fn join(self) -> Result<Metrics> {
+        let PoolJoin { threads, shared } = self;
+        let mut merged = Metrics::default();
+        let mut ok = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for t in threads {
+            match t.join() {
+                Ok(Ok(m)) => {
+                    merged.merge(&m);
+                    ok += 1;
+                }
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
                     }
                 }
-            }
-            loop {
-                match rx.try_recv() {
-                    Ok(job) => batcher.push(job, now_us(&start)),
-                    Err(mpsc::TryRecvError::Empty) => break,
-                    Err(mpsc::TryRecvError::Disconnected) => {
-                        closed = true;
-                        break;
-                    }
+                Err(_) => {
+                    return Err(anyhow!("worker thread panicked"));
                 }
-            }
-            // Phase 2: wait out the batch window (absorbing arrivals).
-            let now = now_us(&start);
-            if !closed && !batcher.ready(now) {
-                let deadline = batcher.deadline_us().unwrap_or(now);
-                let wait = deadline.saturating_sub(now);
-                match rx.recv_timeout(Duration::from_micros(wait)) {
-                    Ok(job) => {
-                        batcher.push(job, now_us(&start));
-                        continue;
-                    }
-                    Err(mpsc::RecvTimeoutError::Timeout) => {}
-                    Err(mpsc::RecvTimeoutError::Disconnected) => closed = true,
-                }
-            }
-            // Phase 3: serve one batch (policy release or shutdown flush).
-            let batch = match batcher.poll(now_us(&start)) {
-                Some(b) => b,
-                None if closed => batcher.flush(),
-                None => continue,
-            };
-            if batch.is_empty() {
-                continue;
-            }
-            metrics.record_batch(batch.len());
-            for job in batch {
-                let res = exe.run(std::slice::from_ref(&job.req.image)).map(|outs| {
-                    InferenceResponse {
-                        id: job.req.id,
-                        logits: outs.into_iter().next().unwrap_or_default(),
-                        latency_us: job.t0.elapsed().as_micros() as u64,
-                    }
-                });
-                if let Ok(r) = &res {
-                    metrics.record_request(r.latency_us, now_us(&start));
-                }
-                let _ = job.reply.send(res);
             }
         }
-        metrics
+        if ok == 0 {
+            return Err(first_err.unwrap_or_else(|| anyhow!("pool had no workers")));
+        }
+        merged.rejected += shared.rejected.load(Ordering::Relaxed);
+        Ok(merged)
+    }
+}
+
+/// Decrements `workers_alive` on EVERY exit path — normal shutdown,
+/// factory failure, or a panic unwinding out of the backend — and, when
+/// the last worker leaves, error-fails whatever is still queued so no
+/// client blocks forever on a reply that will never come.
+struct WorkerExit<'a> {
+    shared: &'a Shared,
+    message: String,
+}
+
+impl Drop for WorkerExit<'_> {
+    fn drop(&mut self) {
+        // A panic inside `infer` happens with the state lock released,
+        // but recover from poisoning anyway: this guard must run.
+        let mut st = self.shared.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        st.workers_alive -= 1;
+        if st.workers_alive == 0 {
+            for job in st.batcher.flush() {
+                let _ = job.reply.send(Err(anyhow!("{}", self.message)));
+            }
+        }
+        drop(st);
+        self.shared.work_cv.notify_all();
+    }
+}
+
+fn worker_entry<B, F>(shared: &Shared, factory: F) -> Result<Metrics>
+where
+    B: InferenceBackend,
+    F: FnOnce() -> Result<B>,
+{
+    let mut exit =
+        WorkerExit { shared, message: "worker panicked; request not served".to_string() };
+    match factory() {
+        Ok(mut backend) => {
+            let metrics = worker_loop(shared, &mut backend);
+            exit.message = "server stopped before the request ran".to_string();
+            Ok(metrics)
+        }
+        Err(e) => {
+            exit.message = format!("backend init failed: {e}");
+            Err(e)
+        }
+    }
+}
+
+fn worker_loop<B: InferenceBackend>(shared: &Shared, backend: &mut B) -> Metrics {
+    let mut metrics = Metrics::default();
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let now = shared.now_us();
+        if st.closed && st.batcher.is_empty() {
+            break;
+        }
+        let batch = if let Some(b) = st.batcher.poll(now) {
+            b
+        } else if st.closed {
+            // Shutdown drain, in policy-sized chunks shared across
+            // workers so every pending request is answered exactly once.
+            st.batcher.drain_up_to(shared.policy.max_batch)
+        } else {
+            // Wait for work or for the oldest request's deadline.
+            let wait = match st.batcher.deadline_us() {
+                Some(d) => Duration::from_micros(d.saturating_sub(now)).min(IDLE_WAIT),
+                None => IDLE_WAIT,
+            };
+            let (guard, _timeout) = shared.work_cv.wait_timeout(st, wait).unwrap();
+            st = guard;
+            continue;
+        };
+        drop(st);
+        metrics.record_batch(batch.len());
+        for job in batch {
+            let result = backend.infer(&job.req.image);
+            let latency_us = job.t0.elapsed().as_micros() as u64;
+            let res = result.map(|logits| InferenceResponse { id: job.req.id, logits, latency_us });
+            if res.is_ok() {
+                metrics.record_request(latency_us, shared.now_us());
+            }
+            let _ = job.reply.send(res);
+        }
+        st = shared.state.lock().unwrap();
+    }
+    // Exit bookkeeping (workers_alive, failing leftovers) lives in the
+    // caller's WorkerExit guard so it also runs on unwind.
+    drop(st);
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic test backend: logits = [sum, count] of the image.
+    struct Summing;
+
+    impl InferenceBackend for Summing {
+        fn name(&self) -> &'static str {
+            "summing"
+        }
+
+        fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+            Ok(vec![image.data.iter().sum::<f32>(), image.data.len() as f32])
+        }
+    }
+
+    fn req(id: u64, v: f32) -> InferenceRequest {
+        InferenceRequest { id, image: Tensor::new(vec![2], vec![v, v + 1.0]).unwrap() }
+    }
+
+    #[test]
+    fn single_worker_round_trip() {
+        let server = Server::new(BatchPolicy { max_batch: 4, max_wait_us: 100 });
+        let (handle, join) = server.spawn(|| Ok(Summing));
+        let resp = handle.infer(req(3, 1.0)).unwrap();
+        assert_eq!(resp.id, 3);
+        assert_eq!(resp.logits, vec![3.0, 2.0]);
+        drop(handle);
+        let metrics = join.join().unwrap();
+        assert_eq!(metrics.count(), 1);
+    }
+
+    #[test]
+    fn pool_serves_from_multiple_clients() {
+        let server = Server::new(BatchPolicy { max_batch: 3, max_wait_us: 200 });
+        let (handle, join) = server.spawn_pool(3, |_w| Ok(Summing));
+        let mut clients = Vec::new();
+        for c in 0..4u64 {
+            let h = handle.clone();
+            clients.push(std::thread::spawn(move || {
+                (0..8u64)
+                    .map(|i| {
+                        let id = c * 100 + i;
+                        let resp = h.infer(req(id, id as f32)).unwrap();
+                        assert_eq!(resp.id, id);
+                        assert_eq!(resp.logits[0], 2.0 * id as f32 + 1.0);
+                        1usize
+                    })
+                    .sum::<usize>()
+            }));
+        }
+        let served: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+        drop(handle);
+        let metrics = join.join().unwrap();
+        assert_eq!(served, 32);
+        assert_eq!(metrics.count(), 32);
+        assert_eq!(metrics.rejected, 0);
+        assert!(metrics.batches >= 1);
+    }
+
+    /// Backend that panics on every inference (worst-case user impl).
+    struct Panicking;
+
+    impl InferenceBackend for Panicking {
+        fn name(&self) -> &'static str {
+            "panicking"
+        }
+
+        fn infer(&mut self, _image: &Tensor) -> Result<Vec<f32>> {
+            panic!("backend exploded")
+        }
+    }
+
+    #[test]
+    fn panicking_backend_fails_requests_not_hangs() {
+        let server = Server::new(BatchPolicy { max_batch: 1, max_wait_us: 0 });
+        let (handle, join) = server.spawn_pool(1, |_w| Ok(Panicking));
+        // Depending on timing each submit is either accepted (then must
+        // resolve to an error — in-flight via sender drop, queued via the
+        // WorkerExit flush) or rejected outright. Never a hang.
+        for id in 0..3u64 {
+            if let Ok(waiter) = handle.submit(req(id, 0.0)) {
+                assert!(waiter.wait().is_err(), "request {id} must fail, not hang");
+            }
+        }
+        drop(handle);
+        assert!(join.join().is_err(), "worker panic must surface at join");
+    }
+
+    #[test]
+    fn failed_factory_fails_requests_not_hangs() {
+        let server = Server::new(BatchPolicy::default());
+        let (handle, join) = server.spawn::<Summing, _>(|| Err(anyhow!("no device")));
+        // Either rejected at submit (worker already died) or failed via
+        // the drain path — never a hang.
+        if let Ok(waiter) = handle.submit(req(1, 0.0)) {
+            assert!(waiter.wait().is_err());
+        }
+        drop(handle);
+        assert!(join.join().is_err());
     }
 }

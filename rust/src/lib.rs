@@ -18,13 +18,20 @@
 //!   (paper §4.4, Fig 16), replaying golden vectors from the python side;
 //! * [`energy`] — energy and area models with technology scaling
 //!   (paper §5, Table 4);
-//! * [`runtime`] — the PJRT runtime that loads AOT artifacts
-//!   (`artifacts/*.hlo.txt`) and executes them on the request path;
-//! * [`coordinator`] — the edge-serving coordinator: request router,
-//!   dynamic batcher, latency/energy accounting.
+//! * [`runtime`] — pluggable inference backends behind
+//!   [`runtime::InferenceBackend`]: the pure-rust
+//!   [`runtime::NativeBackend`] executing the quantized Vim forward pass
+//!   ([`vision::forward`]) hermetically, and the feature-gated
+//!   [`runtime::pjrt`] path (`pjrt` cargo feature) that loads AOT
+//!   artifacts (`artifacts/*.hlo.txt`);
+//! * [`coordinator`] — the edge-serving coordinator: shared dynamic
+//!   batcher feeding an N-worker backend pool with bounded-queue
+//!   admission control and merged latency metrics.
 //!
-//! Python/JAX/Pallas exist only at build time (`make artifacts`); the
-//! serving path is pure rust + PJRT.
+//! The default build is fully hermetic: no Python, no XLA, no artifacts —
+//! `cargo build --release && cargo test -q` on a fresh checkout exercises
+//! real quantized inference end to end. Python/JAX/Pallas remain an
+//! optional build-time pipeline (`make artifacts`) for the `pjrt` path.
 
 pub mod config;
 pub mod coordinator;

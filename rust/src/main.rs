@@ -22,8 +22,16 @@ COMMANDS:
   sim      [--model tiny] [--img 224] [--ssas 8]
                                   simulate one inference vs the edge GPU
   figures  --fig N                print a paper figure (1, 4, 7, 8, 17, 18)
-  serve    [--artifacts artifacts] [--requests 64] [--max-batch 8]
-                                  serve the compiled model (E2E demo)
+  serve    [--backend native|pjrt] [--workers 4] [--requests 64]
+           [--max-batch 8] [--queue-depth 1024] [--seed 7]
+           [--artifacts artifacts]
+                                  serve inference E2E through the
+                                  coordinator pool. `native` (default)
+                                  is hermetic: the pure-rust quantized
+                                  Vim executor, no artifacts needed.
+                                  `pjrt` loads AOT artifacts (requires
+                                  the `pjrt` cargo feature + a real xla
+                                  crate; workers forced to 1)
 ";
 
 /// Minimal `--key value` flag parser.
@@ -79,11 +87,7 @@ fn main() -> Result<()> {
             flags.usize("ssas", 8)?,
         ),
         "figures" => cmd_figures(flags.usize("fig", 0)? as u32),
-        "serve" => cmd_serve(
-            &flags.string("artifacts", "artifacts"),
-            flags.usize("requests", 64)?,
-            flags.usize("max-batch", 8)?,
-        ),
+        "serve" => cmd_serve(&flags),
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
     }
 }
@@ -381,7 +385,97 @@ pub mod figures {
     }
 }
 
-fn cmd_serve(artifacts: &str, requests: usize, max_batch: usize) -> Result<()> {
+fn cmd_serve(flags: &Flags) -> Result<()> {
+    let backend = flags.string("backend", "native");
+    let workers = flags.usize("workers", 4)?;
+    let requests = flags.usize("requests", 64)?;
+    let max_batch = flags.usize("max-batch", 8)?;
+    let queue_depth = flags.usize("queue-depth", 1024)?;
+    let seed = flags.usize("seed", 7)? as u64;
+    match backend.as_str() {
+        "native" => serve_native(workers, requests, max_batch, queue_depth, seed),
+        "pjrt" => serve_pjrt(&flags.string("artifacts", "artifacts"), requests, max_batch),
+        other => bail!("unknown backend {other:?}; available: native pjrt"),
+    }
+}
+
+/// Hermetic serving demo: N pool workers, each owning a native quantized
+/// Vim executor built from the same seed, fed by 4 synthetic camera
+/// streams. Spot-checks serving-vs-direct invariance at the end.
+fn serve_native(
+    workers: usize,
+    requests: usize,
+    max_batch: usize,
+    queue_depth: usize,
+    seed: u64,
+) -> Result<()> {
+    use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
+    use mamba_x::runtime::{native::synthetic_image, InferenceBackend, NativeBackend, Tensor};
+    use mamba_x::vision::ForwardConfig;
+
+    let cfg = ForwardConfig::micro();
+    println!(
+        "serving {} ({} blocks, d={}) natively: {} workers, max_batch {}, queue depth {}",
+        cfg.model.name, cfg.model.n_blocks, cfg.model.d_model, workers, max_batch, queue_depth
+    );
+    let server =
+        Server::new(BatchPolicy { max_batch, max_wait_us: 2000 }).queue_depth(queue_depth);
+    let model_cfg = cfg.clone();
+    let (handle, join) =
+        server.spawn_pool(workers, move |_w| Ok(NativeBackend::new(&model_cfg, seed)));
+
+    let shape = cfg.input_shape();
+    let n_elems = cfg.input_len();
+    let streams = 4usize;
+    let per_stream = requests.div_ceil(streams);
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for s in 0..streams {
+        let h = handle.clone();
+        let shape = shape.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut served = Vec::new();
+            for r in 0..per_stream {
+                let id = (s * per_stream + r) as u64;
+                let data = synthetic_image(seed, id, n_elems);
+                let req =
+                    InferenceRequest { id, image: Tensor::new(shape.clone(), data).unwrap() };
+                if let Ok(resp) = h.infer(req) {
+                    served.push(resp);
+                }
+            }
+            served
+        }));
+    }
+    let mut responses = Vec::new();
+    for c in clients {
+        responses.extend(c.join().unwrap());
+    }
+    drop(handle);
+    let metrics = join.join()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("served {}/{} requests in {wall:.2}s", responses.len(), per_stream * streams);
+    println!("{}", metrics.summary());
+
+    // Serving-vs-direct invariance spot check (the full property lives in
+    // rust/tests/serving_props.rs): pool routing must be invisible.
+    let mut direct = NativeBackend::new(&cfg, seed);
+    let checks = responses.len().min(8);
+    for resp in responses.iter().take(checks) {
+        let img = Tensor::new(shape.clone(), synthetic_image(seed, resp.id, n_elems))?;
+        let want = direct.infer(&img)?;
+        if resp.logits != want {
+            bail!("response {} diverged from direct inference", resp.id);
+        }
+    }
+    println!("serving == direct inference (bitwise) on {checks} sampled requests");
+    Ok(())
+}
+
+/// PJRT serving demo over AOT artifacts (single worker: PJRT handles are
+/// not Send). Requires the `pjrt` cargo feature and a real xla crate.
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(artifacts: &str, requests: usize, max_batch: usize) -> Result<()> {
     use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
     use mamba_x::runtime::{Runtime, Tensor};
 
@@ -437,8 +531,16 @@ fn cmd_serve(artifacts: &str, requests: usize, max_batch: usize) -> Result<()> {
     }
     let ok: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
     drop(handle);
-    let metrics = join.join().unwrap()?;
+    let metrics = join.join()?;
     println!("served {ok}/{} requests", per_stream * streams);
     println!("{}", metrics.summary());
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(_artifacts: &str, _requests: usize, _max_batch: usize) -> Result<()> {
+    bail!(
+        "the pjrt backend is not compiled in; rebuild with `--features pjrt` \
+         (and patch in the real `xla` crate — see vendor/xla/src/lib.rs)"
+    )
 }

@@ -1,12 +1,19 @@
 //! H2 quantization datapath — bit-exact mirror of `python/compile/quant.py`.
 //!
-//! The python side generates golden vectors (`artifacts/golden/*.json`);
+//! The golden fixtures in `rust/tests/data/` (regenerable with
+//! `python/compile/make_goldens.py`) pin this arithmetic down to the bit;
 //! the integration tests in `rust/tests/quant_golden.rs` replay them and
 //! require exact integer equality. This is the arithmetic the SSA's SPEs
 //! implement in hardware (paper Fig 11 step 3 + Fig 16(b)).
+//!
+//! [`scan_quant`] layers channel-granularity (de)quantization of the scan
+//! streams on top, which is what the native inference backend
+//! ([`crate::runtime::NativeBackend`]) feeds the integer scan with.
 
 mod fixed;
+mod scan_quant;
 mod spe;
 
 pub use fixed::{pow2_round, pow2_shift, quantize, round_half_away, scale_for, QMAX};
+pub use scan_quant::{dequantize_states, quantize_scan_inputs, ScanScales};
 pub use spe::{rshift_round, spe_scan_int, SpeDatapath, FRAC_BITS, STATE_SAT};

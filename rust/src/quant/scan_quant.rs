@@ -1,0 +1,134 @@
+//! Channel-granularity quantization of the scan inputs (paper §4.4, the
+//! "H" axis of H2) — the bridge between the float discretization outputs
+//! and the integer SPE datapath.
+//!
+//! The paper calibrates static per-channel scales offline; the hermetic
+//! native backend has no calibration set, so scales are computed from the
+//! tensor being quantized (dynamic PTQ at the same granularity). The
+//! arithmetic downstream of the scales — pow2 approximation, INT8
+//! rounding, the integer scan, dequantization by `s_Q / 2^FRAC_BITS` — is
+//! exactly the paper's Fig 16(b) datapath.
+
+use super::fixed::{pow2_round, pow2_shift, quantize, scale_for};
+use super::spe::FRAC_BITS;
+
+/// Per-channel quantization parameters of one scan invocation.
+#[derive(Debug, Clone)]
+pub struct ScanScales {
+    /// Per-H right-shift amounts implementing the pow2-approximated s_dA.
+    pub shift: Vec<i32>,
+    /// Per-H dBu scales (s_Q); also the dequantization scale of the state.
+    pub sq: Vec<f32>,
+}
+
+/// Quantize (L, H, N) row-major `da` / `dbu` streams to the SPE's INT8
+/// (P, Q) inputs with per-H channel scales (dA scales pow2-rounded so the
+/// SPE rescale is a shift).
+pub fn quantize_scan_inputs(
+    da: &[f32],
+    dbu: &[f32],
+    l: usize,
+    h: usize,
+    n: usize,
+) -> (Vec<i64>, Vec<i64>, ScanScales) {
+    let total = l * h * n;
+    assert_eq!(da.len(), total, "da length");
+    assert_eq!(dbu.len(), total, "dbu length");
+    // Channel (H-axis) abs-max over (L, N) — compile.quant.Calibration's
+    // convention for `.dA` / `.dBu` taps.
+    let mut da_max = vec![0f32; h];
+    let mut dbu_max = vec![0f32; h];
+    for step in 0..l {
+        for ch in 0..h {
+            let base = (step * h + ch) * n;
+            for i in base..base + n {
+                da_max[ch] = da_max[ch].max(da[i].abs());
+                dbu_max[ch] = dbu_max[ch].max(dbu[i].abs());
+            }
+        }
+    }
+    let sa_eff: Vec<f32> = da_max.iter().map(|&m| pow2_round(scale_for(m, 8))).collect();
+    let shift: Vec<i32> = da_max.iter().map(|&m| pow2_shift(scale_for(m, 8))).collect();
+    let sq: Vec<f32> = dbu_max.iter().map(|&m| scale_for(m, 8)).collect();
+    let mut p = vec![0i64; total];
+    let mut q = vec![0i64; total];
+    for step in 0..l {
+        for ch in 0..h {
+            let base = (step * h + ch) * n;
+            for i in base..base + n {
+                p[i] = quantize(da[i], sa_eff[ch]) as i64;
+                q[i] = quantize(dbu[i], sq[ch]) as i64;
+            }
+        }
+    }
+    (p, q, ScanScales { shift, sq })
+}
+
+/// Dequantize integer scan states back to f32: `state * s_Q / 2^FRAC_BITS`
+/// per H channel (the PPU's output rescale).
+pub fn dequantize_states(states: &[i64], sq: &[f32], l: usize, h: usize, n: usize) -> Vec<f32> {
+    assert_eq!(states.len(), l * h * n, "states length");
+    assert_eq!(sq.len(), h, "sq length");
+    let denom = (1i64 << FRAC_BITS) as f32;
+    let mut out = vec![0f32; states.len()];
+    for step in 0..l {
+        for ch in 0..h {
+            let scale = sq[ch] / denom;
+            let base = (step * h + ch) * n;
+            for i in base..base + n {
+                out[i] = states[i] as f32 * scale;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::spe_scan_int;
+    use super::*;
+
+    #[test]
+    fn quantize_then_scan_approximates_float_recurrence() {
+        // A decaying scan: dA in (0, 1), dBu moderate. The INT8 datapath
+        // should track the float recurrence within a few quantization steps.
+        let (l, h, n) = (24usize, 3usize, 2usize);
+        let total = l * h * n;
+        let mut da: Vec<f32> =
+            (0..total).map(|i| 0.35 + 0.4 * ((i * 37 % 97) as f32 / 97.0)).collect();
+        // Plant a known per-channel max so the pow2 scale rounds up for
+        // every channel (no INT8 clipping; keeps the float oracle tight).
+        for v in da.iter_mut().take(h * n) {
+            *v = 0.8;
+        }
+        let dbu: Vec<f32> = (0..total).map(|i| ((i * 13 % 41) as f32 / 41.0) - 0.5).collect();
+        let (p, q, scales) = quantize_scan_inputs(&da, &dbu, l, h, n);
+        assert!(p.iter().all(|&v| (-127..=127).contains(&v)));
+        assert!(q.iter().all(|&v| (-127..=127).contains(&v)));
+        let states_q = spe_scan_int(&p, &q, &scales.shift, l, h, n);
+        let states = dequantize_states(&states_q, &scales.sq, l, h, n);
+        // Float oracle.
+        let mut float_state = vec![0f32; h * n];
+        let mut max_err = 0f32;
+        let mut max_mag = 0f32;
+        for step in 0..l {
+            for i in 0..h * n {
+                let idx = step * h * n + i;
+                float_state[i] = da[idx] * float_state[i] + dbu[idx];
+                max_err = max_err.max((states[idx] - float_state[i]).abs());
+                max_mag = max_mag.max(float_state[i].abs());
+            }
+        }
+        assert!(max_err / max_mag < 0.1, "rel err {}", max_err / max_mag);
+    }
+
+    #[test]
+    fn zero_input_is_safe() {
+        let (p, q, scales) = quantize_scan_inputs(&[0.0; 6], &[0.0; 6], 3, 2, 1);
+        assert!(p.iter().all(|&v| v == 0));
+        assert!(q.iter().all(|&v| v == 0));
+        let states_q = spe_scan_int(&p, &q, &scales.shift, 3, 2, 1);
+        let states = dequantize_states(&states_q, &scales.sq, 3, 2, 1);
+        assert!(states.iter().all(|&v| v == 0.0));
+    }
+}

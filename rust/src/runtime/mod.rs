@@ -1,73 +1,32 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Inference runtimes behind one pluggable [`InferenceBackend`] trait.
 //!
-//! This is the only place the `xla` crate is touched. The interchange
-//! format is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
-//! serializes protos with 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Two implementations:
+//!
+//! * [`NativeBackend`] (always available, default) — a pure-Rust executor
+//!   of the quantized Vision Mamba forward pass
+//!   ([`crate::vision::forward`]): no Python, no XLA, no artifacts. This
+//!   is what the coordinator serves hermetically and what the tier-1
+//!   tests exercise end to end.
+//! * [`pjrt::Runtime`] (`pjrt` cargo feature) — the PJRT/XLA path that
+//!   loads AOT artifacts (`artifacts/*.hlo.txt` from `make artifacts`)
+//!   and executes trained models. Compiles against the `vendor/xla` stub
+//!   by default; patch in the real `xla` crate to run it.
+//!
+//! Backends are constructed *on the worker thread* via the factory passed
+//! to [`crate::coordinator::Server::spawn`] — PJRT handles are not `Send`,
+//! and the native backend is happiest owning its scratch state per worker.
 
 mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use manifest::{Manifest, ModelMeta, ScanMeta};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, Runtime};
 
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, Context, Result};
-
-/// A PJRT CPU client plus the artifact directory it loads from.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    art_dir: PathBuf,
-    pub manifest: Manifest,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client over an artifact directory produced by
-    /// `make artifacts`.
-    pub fn new(art_dir: impl AsRef<Path>) -> Result<Self> {
-        let art_dir = art_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(art_dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Self { client, art_dir, manifest })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile one HLO-text artifact.
-    pub fn load(&self, file: &str) -> Result<Executable> {
-        let path = self.art_dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        Ok(Executable { exe, name: file.to_string() })
-    }
-
-    /// Load the primary model artifact and warm it up.
-    ///
-    /// The first execution on this XLA build pays a large one-time cost
-    /// (lazy thunk/kernel initialization — §Perf measured 7-18 s); running
-    /// one throwaway zero-input inference here keeps it off the serving
-    /// path.
-    pub fn load_model(&self) -> Result<Executable> {
-        let exe = self.load(&self.manifest.model.file.clone())?;
-        let input = Tensor::zeros(self.manifest.model.input.clone());
-        exe.run(&[input]).context("warmup execution")?;
-        Ok(exe)
-    }
-}
-
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+use anyhow::{anyhow, Result};
 
 /// A host-side f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -89,34 +48,23 @@ impl Tensor {
         let n = shape.iter().product();
         Self { shape, data: vec![0.0; n] }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        xla::Literal::vec1(&self.data)
-            .reshape(&dims)
-            .map_err(|e| anyhow!("reshape to {:?}: {e:?}", self.shape))
-    }
 }
 
-impl Executable {
-    /// Execute with f32 inputs; returns the flattened f32 outputs of the
-    /// result tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let elems = result.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        elems
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect::<Result<Vec<_>>>()
-            .context("extracting outputs")
-    }
+/// One model executor: image in, logits out.
+///
+/// Implementations must be *deterministic* — identical images produce
+/// bit-identical logits — because the serving layer promises that routing
+/// (worker choice, batch composition, request interleaving) is invisible
+/// to clients; `rust/tests/serving_props.rs` enforces it.
+///
+/// Backends need not be `Send`: each coordinator worker constructs its own
+/// via the factory and never moves it across threads.
+pub trait InferenceBackend {
+    /// Short backend name for logs ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Run one inference; returns the flattened logits.
+    fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>>;
 }
 
 #[cfg(test)]

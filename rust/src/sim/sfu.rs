@@ -68,6 +68,35 @@ impl LutTable {
             }
         }
     }
+
+    /// Fit a table to `func` over `[lo, hi]` with `segments` uniform
+    /// segments interpolating the exact function at the breakpoints.
+    ///
+    /// This is the profile-free fallback the hermetic native backend uses
+    /// when no python-fitted `sfu_luts.json` is available: same table
+    /// format and ADU/CU evaluation, uniform breakpoints instead of the
+    /// GD-refined ones (paper §4.3 / Flex-SFU).
+    pub fn fit(func: SfuFunc, lo: f32, hi: f32, segments: usize) -> LutTable {
+        assert!(segments >= 1 && hi > lo, "degenerate fit range");
+        let name = match func {
+            SfuFunc::Silu => "silu",
+            SfuFunc::Exp => "exp",
+            SfuFunc::Softplus => "softplus",
+        };
+        let bps: Vec<f32> = (0..=segments)
+            .map(|i| lo + (hi - lo) * i as f32 / segments as f32)
+            .collect();
+        let mut a = Vec::with_capacity(segments);
+        let mut b = Vec::with_capacity(segments);
+        for w in bps.windows(2) {
+            let (x0, x1) = (w[0], w[1]);
+            let (y0, y1) = (Self::exact(func, x0), Self::exact(func, x1));
+            let slope = (y1 - y0) / (x1 - x0);
+            a.push(slope);
+            b.push(y0 - slope * x0);
+        }
+        LutTable { name: name.to_string(), bps, a, b }
+    }
 }
 
 /// The SFU's three tables.
@@ -93,6 +122,18 @@ impl SfuTables {
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let j = Json::load(path.as_ref())?;
         Self::from_json(&j)
+    }
+
+    /// Self-contained tables over the paper's Fig 14(c-e) input ranges,
+    /// fitted with 64 uniform segments per function (< 0.5% relative
+    /// error in range). Used by the native backend so inference needs no
+    /// artifacts.
+    pub fn fitted() -> Self {
+        SfuTables {
+            silu: LutTable::fit(SfuFunc::Silu, -8.7, 10.2, 64),
+            exp: LutTable::fit(SfuFunc::Exp, -8.5, 0.0, 64),
+            softplus: LutTable::fit(SfuFunc::Softplus, -17.6, 2.7, 64),
+        }
     }
 
     pub fn from_json(j: &Json) -> Result<Self> {
@@ -166,6 +207,38 @@ mod tests {
         let t = toy_table();
         assert_eq!(t.eval(0.25), 0.25);
         assert_eq!(t.eval(1.5), 2.0);
+    }
+
+    #[test]
+    fn fitted_tables_are_accurate_in_range() {
+        let tables = SfuTables::fitted();
+        for (t, f) in [
+            (&tables.silu, SfuFunc::Silu),
+            (&tables.exp, SfuFunc::Exp),
+            (&tables.softplus, SfuFunc::Softplus),
+        ] {
+            let lo = t.bps[0];
+            let hi = *t.bps.last().unwrap();
+            let mut max_err = 0f32;
+            let mut scale = 1e-6f32;
+            for i in 0..2000 {
+                let x = lo + (hi - lo) * i as f32 / 1999.0;
+                let exact = LutTable::exact(f, x);
+                max_err = max_err.max((t.eval(x) - exact).abs());
+                scale = scale.max(exact.abs());
+            }
+            assert!(max_err / scale < 0.01, "{}: rel err {}", t.name, max_err / scale);
+        }
+    }
+
+    #[test]
+    fn fitted_table_interpolates_breakpoints_exactly() {
+        let t = LutTable::fit(SfuFunc::Exp, -4.0, 0.0, 16);
+        for (i, &bp) in t.bps.iter().enumerate().take(t.a.len()) {
+            let want = LutTable::exact(SfuFunc::Exp, bp);
+            let got = t.a[i] * bp + t.b[i];
+            assert!((got - want).abs() < 1e-5, "bp {i}: got {got} want {want}");
+        }
     }
 
     #[test]

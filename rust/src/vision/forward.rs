@@ -1,0 +1,501 @@
+//! Real (executable) Vision Mamba forward pass on the quantized Mamba-X
+//! datapath — the functional twin of the op-counting workload models in
+//! [`super::vim`].
+//!
+//! Structure mirrors `python/compile/model.py` (paper Fig 3): patch embed
+//! + middle class token + position embedding, N bidirectional encoder
+//! blocks, final norm and linear head. The numerics route through the
+//! same hardware-model primitives the simulator is tested against:
+//!
+//! * non-linearities (SiLU / exp / softplus) evaluate on the SFU's
+//!   piecewise-linear tables ([`crate::sim::sfu::SfuTables`]);
+//! * the selective scan quantizes dA/dBu to INT8 at channel granularity
+//!   ([`crate::quant::quantize_scan_inputs`], pow2 dA scales) and runs the
+//!   bit-exact SSA+LISU integer datapath
+//!   ([`crate::sim::ssa_scan_functional`] over `SpeDatapath` lanes);
+//! * everything else (GEMMs, layer norm, conv1d, gating) is plain f32.
+//!
+//! Weights are synthetic (seeded, Mamba-style initialization): the crate
+//! ships no trained checkpoint, so this backend demonstrates the *system*
+//! — deterministic quantized inference end to end — not ImageNet accuracy.
+//! The forward is a pure function of (weights, image): identical inputs
+//! produce bit-identical logits, which is the property the serving tests
+//! lean on.
+
+use crate::config::{MambaXConfig, VimModel};
+use crate::quant::{dequantize_states, quantize_scan_inputs};
+use crate::sim::sfu::SfuTables;
+use crate::sim::ssa_scan_functional;
+use crate::util::Pcg;
+
+use super::ops::SfuFunc;
+
+/// Shape of one executable Vim instance: model config + input geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ForwardConfig {
+    pub model: VimModel,
+    /// Square input resolution.
+    pub img: usize,
+    pub in_ch: usize,
+    pub n_classes: usize,
+}
+
+impl ForwardConfig {
+    /// The micro model the coordinator serves (32x32x1 -> 10 classes),
+    /// matching `python/compile/model.py::CONFIGS["micro"]`.
+    pub fn micro() -> Self {
+        Self { model: VimModel::micro(), img: 32, in_ch: 1, n_classes: 10 }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.model.seq_len(self.img)
+    }
+
+    pub fn n_patches(&self) -> usize {
+        self.seq_len() - 1
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.model.patch * self.model.patch * self.in_ch
+    }
+
+    /// Flattened (img, img, in_ch) input length.
+    pub fn input_len(&self) -> usize {
+        self.img * self.img * self.in_ch
+    }
+
+    pub fn input_shape(&self) -> Vec<usize> {
+        vec![self.img, self.img, self.in_ch]
+    }
+}
+
+/// One scan direction's parameters (row-major matrices).
+#[derive(Debug, Clone)]
+pub struct DirWeights {
+    /// Depthwise conv taps, (E, K).
+    pub conv_w: Vec<f32>,
+    pub conv_b: Vec<f32>,
+    /// x-proj E -> dt_rank + 2N, (E, R+2N).
+    pub xproj_w: Vec<f32>,
+    /// dt-proj dt_rank -> E, (R, E).
+    pub dt_w: Vec<f32>,
+    pub dt_b: Vec<f32>,
+    /// State matrix A = -exp(A_log), (E, N); negative real parts.
+    pub a: Vec<f32>,
+    /// Skip connection, (E,).
+    pub d: Vec<f32>,
+}
+
+/// One bidirectional encoder block's parameters.
+#[derive(Debug, Clone)]
+pub struct BlockWeights {
+    pub norm_g: Vec<f32>,
+    pub norm_b: Vec<f32>,
+    /// in-proj D -> 2E (x and z), (D, 2E).
+    pub in_w: Vec<f32>,
+    pub in_b: Vec<f32>,
+    /// out-proj E -> D, (E, D).
+    pub out_w: Vec<f32>,
+    pub out_b: Vec<f32>,
+    pub fwd: DirWeights,
+    pub bwd: DirWeights,
+}
+
+/// Full model parameters, synthetically initialized from a seed.
+#[derive(Debug, Clone)]
+pub struct VimWeights {
+    pub cfg: ForwardConfig,
+    /// Patch embedding, (patch_dim, D).
+    pub patch_w: Vec<f32>,
+    pub patch_b: Vec<f32>,
+    /// Class token, (D,).
+    pub cls: Vec<f32>,
+    /// Position embedding, (L, D).
+    pub pos: Vec<f32>,
+    pub blocks: Vec<BlockWeights>,
+    pub head_norm_g: Vec<f32>,
+    pub head_norm_b: Vec<f32>,
+    /// Classifier head, (D, n_classes).
+    pub head_w: Vec<f32>,
+    pub head_b: Vec<f32>,
+}
+
+fn rand_mat(rng: &mut Pcg, fan_in: usize, len: usize) -> Vec<f32> {
+    let s = 1.0 / (fan_in.max(1) as f32).sqrt();
+    (0..len).map(|_| rng.f32_in(-s, s)).collect()
+}
+
+fn init_dir(rng: &mut Pcg, m: &VimModel) -> DirWeights {
+    let (e, n, r, k) = (m.d_inner(), m.d_state, m.dt_rank(), m.conv_k);
+    // dt bias per Mamba: softplus^-1 of dt log-uniform in [1e-3, 1e-1],
+    // so the initial timestep (and thus dA) sits in a stable range.
+    let dt_b: Vec<f32> = (0..e)
+        .map(|_| {
+            let u = rng.f64() as f32;
+            let dt = (u * (0.1f32.ln() - 1e-3f32.ln()) + 1e-3f32.ln()).exp();
+            (dt.exp() - 1.0).ln()
+        })
+        .collect();
+    // HiPPO-ish A: row e is -(1..=N), identically across channels.
+    let a: Vec<f32> = (0..e)
+        .flat_map(|_| (1..=n).map(|i| -(i as f32)))
+        .collect();
+    DirWeights {
+        conv_w: rand_mat(rng, k, e * k),
+        conv_b: vec![0.0; e],
+        xproj_w: rand_mat(rng, e, e * (r + 2 * n)),
+        dt_w: rand_mat(rng, r, r * e),
+        dt_b,
+        a,
+        d: vec![1.0; e],
+    }
+}
+
+fn init_block(rng: &mut Pcg, m: &VimModel) -> BlockWeights {
+    let (d, e) = (m.d_model, m.d_inner());
+    BlockWeights {
+        norm_g: vec![1.0; d],
+        norm_b: vec![0.0; d],
+        in_w: rand_mat(rng, d, d * 2 * e),
+        in_b: vec![0.0; 2 * e],
+        out_w: rand_mat(rng, e, e * d),
+        out_b: vec![0.0; d],
+        fwd: init_dir(rng, m),
+        bwd: init_dir(rng, m),
+    }
+}
+
+impl VimWeights {
+    /// Deterministic synthetic initialization: the same (config, seed)
+    /// always produces bit-identical weights on every platform (Pcg).
+    pub fn init(cfg: &ForwardConfig, seed: u64) -> Self {
+        let m = &cfg.model;
+        let (d, l) = (m.d_model, cfg.seq_len());
+        let mut rng = Pcg::new(seed);
+        let patch_w = rand_mat(&mut rng, cfg.patch_dim(), cfg.patch_dim() * d);
+        let cls: Vec<f32> = (0..d).map(|_| rng.f32_in(-0.02, 0.02)).collect();
+        let pos: Vec<f32> = (0..l * d).map(|_| rng.f32_in(-0.02, 0.02)).collect();
+        let blocks = (0..m.n_blocks).map(|_| init_block(&mut rng, m)).collect();
+        VimWeights {
+            cfg: cfg.clone(),
+            patch_w,
+            patch_b: vec![0.0; d],
+            cls,
+            pos,
+            blocks,
+            head_norm_g: vec![1.0; d],
+            head_norm_b: vec![0.0; d],
+            head_w: rand_mat(&mut rng, d, d * cfg.n_classes),
+            head_b: vec![0.0; cfg.n_classes],
+        }
+    }
+
+    /// Full inference: flattened (img, img, in_ch) image -> n_classes
+    /// logits. Panics if `image.len() != cfg.input_len()` (backends
+    /// validate shapes before calling).
+    pub fn forward(
+        &self,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+        image: &[f32],
+    ) -> Vec<f32> {
+        let cfg = &self.cfg;
+        assert_eq!(image.len(), cfg.input_len(), "input image length");
+        let (d, l) = (cfg.model.d_model, cfg.seq_len());
+        let (np, pd) = (cfg.n_patches(), cfg.patch_dim());
+        let patches = self.patchify(image);
+        let tok = matmul(&patches, &self.patch_w, Some(&self.patch_b), np, pd, d);
+        // Middle class token (paper Fig 3(a) step 2) + position embedding.
+        let mid = cfg.n_patches() / 2;
+        let mut x = Vec::with_capacity(l * d);
+        x.extend_from_slice(&tok[..mid * d]);
+        x.extend_from_slice(&self.cls);
+        x.extend_from_slice(&tok[mid * d..]);
+        for (v, p) in x.iter_mut().zip(&self.pos) {
+            *v += p;
+        }
+        for bw in &self.blocks {
+            self.block(bw, &mut x, tables, scan_cfg);
+        }
+        layer_norm(&mut x, d, &self.head_norm_g, &self.head_norm_b);
+        let cls_row = &x[mid * d..(mid + 1) * d];
+        matmul(cls_row, &self.head_w, Some(&self.head_b), 1, d, cfg.n_classes)
+    }
+
+    /// (img, img, C) row-major -> (n_patches, patch*patch*C), patches in
+    /// row-major grid order (mirror of `model.patchify`).
+    fn patchify(&self, image: &[f32]) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (p, c, img) = (cfg.model.patch, cfg.in_ch, cfg.img);
+        let grid = img / p;
+        let mut out = Vec::with_capacity(cfg.n_patches() * cfg.patch_dim());
+        for pi in 0..grid {
+            for pj in 0..grid {
+                for py in 0..p {
+                    for px in 0..p {
+                        let pixel = ((pi * p + py) * img + pj * p + px) * c;
+                        out.extend_from_slice(&image[pixel..pixel + c]);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// One bidirectional encoder block, in place (paper Fig 3(a) 3-5).
+    fn block(
+        &self,
+        bw: &BlockWeights,
+        x: &mut [f32],
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+    ) {
+        let (d, e) = (self.cfg.model.d_model, self.cfg.model.d_inner());
+        let l = self.cfg.seq_len();
+        let mut h = x.to_vec();
+        layer_norm(&mut h, d, &bw.norm_g, &bw.norm_b);
+        let xz = matmul(&h, &bw.in_w, Some(&bw.in_b), l, d, 2 * e);
+        let mut xi = vec![0f32; l * e];
+        let mut z = vec![0f32; l * e];
+        for row in 0..l {
+            xi[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e..row * 2 * e + e]);
+            z[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e + e..(row + 1) * 2 * e]);
+        }
+        let y_f = self.ssm_path(&bw.fwd, &xi, &z, tables, scan_cfg);
+        let xi_rev = reversed_rows(&xi, l, e);
+        let z_rev = reversed_rows(&z, l, e);
+        let y_b_rev = self.ssm_path(&bw.bwd, &xi_rev, &z_rev, tables, scan_cfg);
+        let y_b = reversed_rows(&y_b_rev, l, e);
+        let sum: Vec<f32> = y_f.iter().zip(&y_b).map(|(a, b)| a + b).collect();
+        let y = matmul(&sum, &bw.out_w, Some(&bw.out_b), l, e, d);
+        for (xv, yv) in x.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+    }
+
+    /// One direction: conv -> SiLU -> projections -> softplus ->
+    /// discretize (exp on the SFU) -> INT8 scan -> C-reduction -> gate
+    /// (paper Fig 3(b) steps 1-4 as the VPU->SFU->SSA->PPU pipeline).
+    fn ssm_path(
+        &self,
+        dw: &DirWeights,
+        x: &[f32],
+        z: &[f32],
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+    ) -> Vec<f32> {
+        let m = &self.cfg.model;
+        let (e, n, r, k) = (m.d_inner(), m.d_state, m.dt_rank(), m.conv_k);
+        let l = self.cfg.seq_len();
+        let mut u = causal_conv1d(x, &dw.conv_w, &dw.conv_b, l, e, k);
+        for v in u.iter_mut() {
+            *v = tables.eval(SfuFunc::Silu, *v);
+        }
+        // x-proj: split into (dt_raw, B, C) per step.
+        let cols = r + 2 * n;
+        let xdbc = matmul(&u, &dw.xproj_w, None, l, e, cols);
+        let mut dt_raw = vec![0f32; l * r];
+        let mut b_mat = vec![0f32; l * n];
+        let mut c_mat = vec![0f32; l * n];
+        for row in 0..l {
+            let src = &xdbc[row * cols..(row + 1) * cols];
+            dt_raw[row * r..(row + 1) * r].copy_from_slice(&src[..r]);
+            b_mat[row * n..(row + 1) * n].copy_from_slice(&src[r..r + n]);
+            c_mat[row * n..(row + 1) * n].copy_from_slice(&src[r + n..]);
+        }
+        let mut delta = matmul(&dt_raw, &dw.dt_w, Some(&dw.dt_b), l, r, e);
+        for v in delta.iter_mut() {
+            *v = tables.eval(SfuFunc::Softplus, *v);
+        }
+        // Discretize: dA = exp(delta*A) on the SFU, dBu = delta*u*B (VPU).
+        let mut da = vec![0f32; l * e * n];
+        let mut dbu = vec![0f32; l * e * n];
+        for row in 0..l {
+            for ch in 0..e {
+                let dv = delta[row * e + ch];
+                let uv = u[row * e + ch];
+                let base = (row * e + ch) * n;
+                for s in 0..n {
+                    da[base + s] = tables.eval(SfuFunc::Exp, dv * dw.a[ch * n + s]);
+                    dbu[base + s] = dv * uv * b_mat[row * n + s];
+                }
+            }
+        }
+        // INT8 scan on the SSA+LISU functional datapath.
+        let (p, q, scales) = quantize_scan_inputs(&da, &dbu, l, e, n);
+        let states_q = ssa_scan_functional(scan_cfg, &p, &q, &scales.shift, l, e, n);
+        let states = dequantize_states(&states_q, &scales.sq, l, e, n);
+        // Output: y = <C, state> + D*u, gated by silu(z) (PPU).
+        let mut y = vec![0f32; l * e];
+        for row in 0..l {
+            for ch in 0..e {
+                let base = (row * e + ch) * n;
+                let mut acc = 0f32;
+                for s in 0..n {
+                    acc += states[base + s] * c_mat[row * n + s];
+                }
+                let i = row * e + ch;
+                y[i] = (acc + dw.d[ch] * u[i]) * tables.eval(SfuFunc::Silu, z[i]);
+            }
+        }
+        y
+    }
+}
+
+/// Row-major (m, k) x (k, n) GEMM with optional bias on the output rows.
+fn matmul(x: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "matmul lhs");
+    assert_eq!(w.len(), k * n, "matmul rhs");
+    let mut out = vec![0f32; m * n];
+    for (xr, or) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        if let Some(b) = bias {
+            or.copy_from_slice(b);
+        }
+        for (xv, wr) in xr.iter().zip(w.chunks_exact(n)) {
+            for (o, wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+/// Row-wise layer norm over `cols`-wide rows, in place.
+fn layer_norm(x: &mut [f32], cols: usize, g: &[f32], b: &[f32]) {
+    for row in x.chunks_exact_mut(cols) {
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (v, (gv, bv)) in row.iter_mut().zip(g.iter().zip(b)) {
+            *v = (*v - mean) * inv * gv + bv;
+        }
+    }
+}
+
+/// Depthwise causal conv over (L, E): tap j reaches back k-1-j steps.
+fn causal_conv1d(x: &[f32], w: &[f32], bias: &[f32], l: usize, e: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0f32; l * e];
+    for li in 0..l {
+        for ch in 0..e {
+            let mut acc = bias[ch];
+            for j in 0..k {
+                if li + j + 1 >= k {
+                    let t = li + j + 1 - k;
+                    acc += w[ch * k + j] * x[t * e + ch];
+                }
+            }
+            out[li * e + ch] = acc;
+        }
+    }
+    out
+}
+
+/// Reverse the row order of a (rows, cols) matrix (sequence flip).
+fn reversed_rows(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len());
+    for r in (0..rows).rev() {
+        out.extend_from_slice(&x[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ForwardConfig {
+        ForwardConfig {
+            model: VimModel {
+                name: "test-tiny",
+                d_model: 16,
+                n_blocks: 2,
+                d_state: 4,
+                expand: 2,
+                conv_k: 4,
+                patch: 4,
+            },
+            img: 8,
+            in_ch: 1,
+            n_classes: 6,
+        }
+    }
+
+    fn image(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = Pcg::new(seed);
+        (0..len).map(|_| rng.f32_in(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let cfg = tiny_cfg();
+        let w = VimWeights::init(&cfg, 1);
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let logits = w.forward(&tables, &scan, &image(3, cfg.input_len()));
+        assert_eq!(logits.len(), cfg.n_classes);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(logits.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let img = image(7, cfg.input_len());
+        let a = VimWeights::init(&cfg, 42).forward(&tables, &scan, &img);
+        let b = VimWeights::init(&cfg, 42).forward(&tables, &scan, &img);
+        assert_eq!(a, b, "same (seed, image) must be bit-identical");
+    }
+
+    #[test]
+    fn forward_depends_on_weights_and_input() {
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let img = image(7, cfg.input_len());
+        let base = VimWeights::init(&cfg, 42).forward(&tables, &scan, &img);
+        let other_seed = VimWeights::init(&cfg, 43).forward(&tables, &scan, &img);
+        let other_img =
+            VimWeights::init(&cfg, 42).forward(&tables, &scan, &image(8, cfg.input_len()));
+        assert_ne!(base, other_seed);
+        assert_ne!(base, other_img);
+    }
+
+    #[test]
+    fn forward_invariant_to_scan_schedule() {
+        // The SSA chunk/count knobs must not change inference results —
+        // the serving layer relies on this (schedule invariance).
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let w = VimWeights::init(&cfg, 9);
+        let img = image(11, cfg.input_len());
+        let want = w.forward(&tables, &MambaXConfig::default(), &img);
+        for (chunk, n_ssa) in [(4usize, 1usize), (8, 2), (64, 12)] {
+            let scan = MambaXConfig { chunk, n_ssa, ..MambaXConfig::default() };
+            assert_eq!(w.forward(&tables, &scan, &img), want, "chunk={chunk} ssa={n_ssa}");
+        }
+    }
+
+    #[test]
+    fn micro_config_matches_manifest_geometry() {
+        let cfg = ForwardConfig::micro();
+        assert_eq!(cfg.seq_len(), 65);
+        assert_eq!(cfg.input_len(), 32 * 32);
+        assert_eq!(cfg.patch_dim(), 16);
+    }
+
+    #[test]
+    fn conv_is_causal() {
+        // Output at step 0 must not see steps > 0.
+        let (l, e, k) = (4usize, 1usize, 3usize);
+        let w = [0.5f32, 0.25, 1.0];
+        let b = [0.0f32];
+        let x1 = [1.0f32, 9.0, 9.0, 9.0];
+        let x2 = [1.0f32, -3.0, 5.0, 7.0];
+        let y1 = causal_conv1d(&x1, &w, &b, l, e, k);
+        let y2 = causal_conv1d(&x2, &w, &b, l, e, k);
+        assert_eq!(y1[0], y2[0], "step 0 sees only step 0");
+        assert_eq!(y1[0], 1.0); // last tap * x[0]
+    }
+}

@@ -4,11 +4,17 @@
 //! list of [`Op`]s describing one inference; this module builds those lists
 //! from a model config + image size. FLOP/byte counts follow the encoder
 //! structure of paper Fig 3 (Vim) and the standard pre-norm ViT encoder.
+//!
+//! [`forward`] is the *executable* counterpart: the same Fig 3 encoder
+//! computed for real on the quantized INT8 SPE/LUT datapath, powering the
+//! hermetic native inference backend ([`crate::runtime::NativeBackend`]).
 
+pub mod forward;
 mod ops;
 mod vim;
 mod vit;
 
+pub use forward::{BlockWeights, DirWeights, ForwardConfig, VimWeights};
 pub use ops::{Op, OpClass, SfuFunc};
 pub use vim::{vim_block_ops, vim_model_ops, vim_selective_ssm_ops};
 pub use vit::{vit_block_ops, vit_model_ops, vit_score_matrix_bytes};

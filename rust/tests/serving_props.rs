@@ -1,0 +1,117 @@
+//! Serving-invariance property (the serving-layer mirror of
+//! `prop_chunked_scan_schedule_invariant`): inference routed through the
+//! coordinator — ANY worker count, batch policy, queue depth and client
+//! interleaving — must return per-request logits *bit-identical* to a
+//! direct `NativeBackend` call on the same image.
+//!
+//! Hand-rolled harness (proptest is unavailable offline): `Pcg` provides
+//! deterministic shrink-free random cases, 100+ per property.
+
+use mamba_x::config::VimModel;
+use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
+use mamba_x::runtime::{native::synthetic_image, InferenceBackend, NativeBackend, Tensor};
+use mamba_x::util::Pcg;
+use mamba_x::vision::ForwardConfig;
+
+/// Small-but-real model so 100+ serving cases stay fast in debug builds:
+/// 2 bidirectional blocks, E=32, N=4, L=5 — every datapath stage of the
+/// micro model, an order of magnitude fewer multiplies.
+fn prop_cfg() -> ForwardConfig {
+    ForwardConfig {
+        model: VimModel {
+            name: "prop",
+            d_model: 16,
+            n_blocks: 2,
+            d_state: 4,
+            expand: 2,
+            conv_k: 4,
+            patch: 4,
+        },
+        img: 8,
+        in_ch: 1,
+        n_classes: 6,
+    }
+}
+
+#[test]
+fn prop_serving_equals_direct_inference() {
+    let cfg = prop_cfg();
+    let n_elems = cfg.input_len();
+    let mut rng = Pcg::new(0x5EED5);
+    for case in 0..110u64 {
+        let workers = rng.usize_in(1, 4);
+        let max_batch = rng.usize_in(1, 8);
+        let max_wait_us = rng.usize_in(0, 1500) as u64;
+        let n_clients = rng.usize_in(1, 3);
+        let per_client = rng.usize_in(1, 4);
+        let weight_seed = 100 + (case % 7); // vary weights across cases too
+        let image_seed = case;
+
+        let server =
+            Server::new(BatchPolicy { max_batch, max_wait_us }).queue_depth(64);
+        let model_cfg = cfg.clone();
+        let (handle, join) =
+            server.spawn_pool(workers, move |_w| Ok(NativeBackend::new(&model_cfg, weight_seed)));
+
+        let mut clients = Vec::new();
+        for c in 0..n_clients {
+            let h = handle.clone();
+            let shape = cfg.input_shape();
+            clients.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..per_client {
+                    let id = (c * per_client + i) as u64;
+                    let data = synthetic_image(image_seed, id, n_elems);
+                    let req =
+                        InferenceRequest { id, image: Tensor::new(shape.clone(), data).unwrap() };
+                    let resp = h.infer(req).expect("queue depth 64 never rejects here");
+                    got.push((resp.id, resp.logits));
+                }
+                got
+            }));
+        }
+        let mut responses = Vec::new();
+        for c in clients {
+            responses.extend(c.join().unwrap());
+        }
+        drop(handle);
+        let metrics = join.join().expect("pool joins cleanly");
+        assert_eq!(responses.len(), n_clients * per_client, "case {case}");
+        assert_eq!(metrics.count(), responses.len(), "case {case}");
+
+        // Direct single-backend oracle: bit-identical logits per request.
+        let mut direct = NativeBackend::new(&cfg, weight_seed);
+        for (id, logits) in responses {
+            let img = Tensor::new(cfg.input_shape(), synthetic_image(image_seed, id, n_elems))
+                .unwrap();
+            let want = direct.infer(&img).unwrap();
+            assert_eq!(
+                logits, want,
+                "case {case} req {id}: served logits diverge \
+                 (workers={workers} max_batch={max_batch} wait={max_wait_us})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_response_ids_match_requests() {
+    // Batching must never cross wires: response id == request id, and the
+    // logits for distinct images differ (the backend is not constant).
+    let cfg = prop_cfg();
+    let n_elems = cfg.input_len();
+    let server = Server::new(BatchPolicy { max_batch: 4, max_wait_us: 300 });
+    let model_cfg = cfg.clone();
+    let (handle, join) = server.spawn_pool(3, move |_w| Ok(NativeBackend::new(&model_cfg, 1)));
+    let mut logits_seen = Vec::new();
+    for id in 0..24u64 {
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(9, id, n_elems)).unwrap();
+        let resp = handle.infer(InferenceRequest { id, image: img }).unwrap();
+        assert_eq!(resp.id, id);
+        logits_seen.push(resp.logits);
+    }
+    drop(handle);
+    join.join().unwrap();
+    logits_seen.dedup();
+    assert!(logits_seen.len() > 1, "distinct images must yield distinct logits");
+}
