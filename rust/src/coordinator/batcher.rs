@@ -74,25 +74,48 @@ impl<T> DynamicBatcher<T> {
             || self.deadline_us().is_some_and(|d| now_us >= d)
     }
 
-    /// Release a batch if the policy says so.
+    /// Release a batch if the policy says so. Allocates a fresh `Vec` per
+    /// release; the serving hot loop uses [`Self::poll_into`] instead.
     pub fn poll(&mut self, now_us: u64) -> Option<Vec<T>> {
+        let mut batch = Vec::new();
+        if self.poll_into(now_us, &mut batch) {
+            Some(batch)
+        } else {
+            None
+        }
+    }
+
+    /// Allocation-free [`Self::poll`]: drains the released batch into a
+    /// caller-owned buffer (cleared first, capacity retained), so a worker
+    /// reuses one buffer across every batch it executes. Returns whether a
+    /// batch was released; on `false` the buffer is left empty.
+    pub fn poll_into(&mut self, now_us: u64, batch: &mut Vec<T>) -> bool {
+        batch.clear();
         if !self.ready(now_us) {
-            return None;
+            return false;
         }
         let n = self.queue.len().min(self.policy.max_batch);
-        let batch: Vec<T> = self.queue.drain(..n).map(|p| p.item).collect();
+        batch.extend(self.queue.drain(..n).map(|p| p.item));
         self.dequeued += batch.len() as u64;
-        Some(batch)
+        true
     }
 
     /// Release up to `max` items regardless of policy (shutdown drain in
     /// policy-sized chunks, so multiple workers can share the drain and
     /// batch-size accounting stays honest).
     pub fn drain_up_to(&mut self, max: usize) -> Vec<T> {
-        let n = self.queue.len().min(max);
-        let batch: Vec<T> = self.queue.drain(..n).map(|p| p.item).collect();
-        self.dequeued += batch.len() as u64;
+        let mut batch = Vec::new();
+        self.drain_up_to_into(max, &mut batch);
         batch
+    }
+
+    /// Buffer-reusing [`Self::drain_up_to`] (same contract as
+    /// [`Self::poll_into`]).
+    pub fn drain_up_to_into(&mut self, max: usize, batch: &mut Vec<T>) {
+        batch.clear();
+        let n = self.queue.len().min(max);
+        batch.extend(self.queue.drain(..n).map(|p| p.item));
+        self.dequeued += batch.len() as u64;
     }
 
     /// Drain everything regardless of policy (shutdown path).
@@ -171,6 +194,42 @@ mod tests {
         assert!(q.poll(u64::MAX - 1).is_none());
         // Saturated deadline still releases at the end of time.
         assert!(q.ready(u64::MAX));
+    }
+
+    #[test]
+    fn poll_into_reuses_buffer_and_matches_poll() {
+        let mut q = b(3, 1000);
+        let mut buf: Vec<u32> = Vec::with_capacity(8);
+        buf.push(99); // stale content must be cleared even on miss
+        assert!(!q.poll_into(0, &mut buf));
+        assert!(buf.is_empty());
+        for i in 0..5 {
+            q.push(i, 0);
+        }
+        assert!(q.poll_into(0, &mut buf));
+        assert_eq!(buf, vec![0, 1, 2]);
+        let cap = buf.capacity();
+        // Two leftovers < max_batch: released at the deadline.
+        assert!(q.poll_into(1000, &mut buf), "deadline release reuses the buffer");
+        assert_eq!(buf, vec![3, 4]);
+        assert_eq!(buf.capacity(), cap, "no reallocation across releases");
+        assert_eq!(q.enqueued, q.dequeued);
+    }
+
+    #[test]
+    fn drain_up_to_into_clears_and_caps() {
+        let mut q = b(4, u64::MAX);
+        for i in 0..3 {
+            q.push(i, 0);
+        }
+        let mut buf = vec![7u32, 8];
+        q.drain_up_to_into(2, &mut buf);
+        assert_eq!(buf, vec![0, 1]);
+        q.drain_up_to_into(2, &mut buf);
+        assert_eq!(buf, vec![2]);
+        q.drain_up_to_into(2, &mut buf);
+        assert!(buf.is_empty());
+        assert_eq!(q.enqueued, q.dequeued);
     }
 
     #[test]

@@ -308,38 +308,67 @@ where
 
 fn worker_loop<B: InferenceBackend>(shared: &Shared, backend: &mut B) -> Metrics {
     let mut metrics = Metrics::default();
+    // One reusable batch buffer per worker: `poll_into` drains into it
+    // without allocating on the serve hot path.
+    let mut batch: Vec<Job> = Vec::new();
     let mut st = shared.state.lock().unwrap();
     loop {
         let now = shared.now_us();
         if st.closed && st.batcher.is_empty() {
             break;
         }
-        let batch = if let Some(b) = st.batcher.poll(now) {
-            b
-        } else if st.closed {
-            // Shutdown drain, in policy-sized chunks shared across
-            // workers so every pending request is answered exactly once.
-            st.batcher.drain_up_to(shared.policy.max_batch)
-        } else {
-            // Wait for work or for the oldest request's deadline.
-            let wait = match st.batcher.deadline_us() {
-                Some(d) => Duration::from_micros(d.saturating_sub(now)).min(IDLE_WAIT),
-                None => IDLE_WAIT,
-            };
-            let (guard, _timeout) = shared.work_cv.wait_timeout(st, wait).unwrap();
-            st = guard;
-            continue;
-        };
+        if !st.batcher.poll_into(now, &mut batch) {
+            if st.closed {
+                // Shutdown drain, in policy-sized chunks shared across
+                // workers so every pending request is answered exactly once.
+                st.batcher.drain_up_to_into(shared.policy.max_batch, &mut batch);
+            } else {
+                // Wait for work or for the oldest request's deadline.
+                let wait = match st.batcher.deadline_us() {
+                    Some(d) => Duration::from_micros(d.saturating_sub(now)).min(IDLE_WAIT),
+                    None => IDLE_WAIT,
+                };
+                let (guard, _timeout) = shared.work_cv.wait_timeout(st, wait).unwrap();
+                st = guard;
+                continue;
+            }
+        }
         drop(st);
         metrics.record_batch(batch.len());
-        for job in batch {
-            let result = backend.infer(&job.req.image);
-            let latency_us = job.t0.elapsed().as_micros() as u64;
-            let res = result.map(|logits| InferenceResponse { id: job.req.id, logits, latency_us });
-            if res.is_ok() {
-                metrics.record_request(latency_us, shared.now_us());
+        if batch.is_empty() {
+            // Lost the shutdown-drain race to another worker.
+            st = shared.state.lock().unwrap();
+            continue;
+        }
+        // One batched backend call for the whole released batch: backends
+        // with a real batch path (native) amortize every weight walk over
+        // the batch; others fall back to a per-item loop. Results are
+        // per-item, so one malformed request fails only its own slot.
+        let results = {
+            let images: Vec<&Tensor> = batch.iter().map(|j| &j.req.image).collect();
+            backend.infer_batch(&images)
+        };
+        if results.len() == batch.len() {
+            for (job, result) in batch.drain(..).zip(results) {
+                let latency_us = job.t0.elapsed().as_micros() as u64;
+                let res =
+                    result.map(|logits| InferenceResponse { id: job.req.id, logits, latency_us });
+                if res.is_ok() {
+                    metrics.record_request(latency_us, shared.now_us());
+                }
+                let _ = job.reply.send(res);
             }
-            let _ = job.reply.send(res);
+        } else {
+            // A broken backend contract must not strand clients.
+            let msg = format!(
+                "backend {} returned {} results for a batch of {}",
+                backend.name(),
+                results.len(),
+                batch.len()
+            );
+            for job in batch.drain(..) {
+                let _ = job.reply.send(Err(anyhow!("{msg}")));
+            }
         }
         st = shared.state.lock().unwrap();
     }
@@ -437,6 +466,38 @@ mod tests {
         }
         drop(handle);
         assert!(join.join().is_err(), "worker panic must surface at join");
+    }
+
+    /// Backend whose `infer_batch` violates the one-result-per-image
+    /// contract (worst-case custom override).
+    struct Miscounting;
+
+    impl InferenceBackend for Miscounting {
+        fn name(&self) -> &'static str {
+            "miscounting"
+        }
+
+        fn infer(&mut self, _image: &Tensor) -> Result<Vec<f32>> {
+            Ok(vec![0.0])
+        }
+
+        fn infer_batch(&mut self, _images: &[&Tensor]) -> Vec<Result<Vec<f32>>> {
+            Vec::new() // always short: every slot is missing
+        }
+    }
+
+    #[test]
+    fn short_batch_results_fail_requests_not_hang() {
+        let server = Server::new(BatchPolicy { max_batch: 2, max_wait_us: 0 });
+        let (handle, join) = server.spawn_pool(1, |_w| Ok(Miscounting));
+        for id in 0..4u64 {
+            if let Ok(waiter) = handle.submit(req(id, 0.0)) {
+                assert!(waiter.wait().is_err(), "request {id} must fail, not hang");
+            }
+        }
+        drop(handle);
+        // Workers stayed alive (no panic); join merges cleanly.
+        join.join().unwrap();
     }
 
     #[test]

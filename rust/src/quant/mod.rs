@@ -16,4 +16,7 @@ mod spe;
 
 pub use fixed::{pow2_round, pow2_shift, quantize, round_half_away, scale_for, QMAX};
 pub use scan_quant::{dequantize_states, quantize_scan_inputs, ScanScales};
-pub use spe::{rshift_round, spe_scan_int, SpeDatapath, FRAC_BITS, STATE_SAT};
+pub use spe::{
+    rshift_round, spe_scan_int, spe_scan_int_seq, spe_scan_int_threaded, SpeDatapath, FRAC_BITS,
+    STATE_SAT,
+};

@@ -6,13 +6,31 @@
 //! `Q_{n+1}` with [`FRAC_BITS`] extra fractional bits (paper §4.2:
 //! "2 extra fractional bits"). Saturating at [`STATE_SAT`].
 //!
-//! `spe_scan_int` must be *bit-identical* to `compile.quant.spe_scan_int`;
-//! `rust/tests/quant_golden.rs` enforces this against python goldens.
+//! Two implementations of the batch scan:
+//!
+//! * [`spe_scan_int_seq`] — the sequential per-lane oracle: one
+//!   [`SpeDatapath`] per (h, n) lane, stepped lane-by-lane. This is the
+//!   bit-exact mirror of `compile.quant.spe_scan_int` that the golden
+//!   fixtures and the fast path are checked against.
+//! * [`spe_scan_int`] — the hot path: the same recurrence walked L-major
+//!   with the (H·N) lanes as the *inner contiguous* dimension (the lane
+//!   parallelism the SSA exploits in hardware, Fig 12), manually 4-wide
+//!   unrolled, and row-partitioned across `std::thread::scope` threads for
+//!   large shapes. Every lane is arithmetically independent and all ops
+//!   are exact i64, so the result is bit-identical to the oracle for any
+//!   thread count — `rust/tests/hotpath_props.rs` pins it.
 
 /// Extra fractional bits on the intermediate state (paper §4.2).
 pub const FRAC_BITS: u32 = 2;
 /// Saturation bound of the state register.
 pub const STATE_SAT: i64 = i32::MAX as i64;
+
+/// Element count below which [`spe_scan_int`] stays single-threaded
+/// (thread spawn + partitioning overhead dominates tiny scans).
+const PAR_THRESHOLD: usize = 1 << 17;
+
+/// Cap on scan worker threads (beyond this the scan is memory-bound).
+const MAX_SCAN_THREADS: usize = 8;
 
 /// Arithmetic shift by `k` with round-half-away-from-zero.
 /// `k <= 0` is a left shift (scale >= 1).
@@ -29,6 +47,16 @@ pub fn rshift_round(x: i64, k: i32) -> i64 {
     }
 }
 
+/// One SPE recurrence step on an inlined state register: rescale the
+/// P*state product, accumulate Q at FRAC_BITS, saturate. Exactly
+/// [`SpeDatapath::step`], shaped for the unrolled lane-inner loop.
+#[inline(always)]
+fn lane_step(state: &mut i64, p: i64, q: i64, shift: i32) -> i64 {
+    let resc = rshift_round(p * *state, shift);
+    *state = (resc + (q << FRAC_BITS)).clamp(-STATE_SAT, STATE_SAT);
+    *state
+}
+
 /// One lane's SPE recurrence (one (h, n) pair), streaming interface.
 #[derive(Debug, Clone)]
 pub struct SpeDatapath {
@@ -43,10 +71,7 @@ impl SpeDatapath {
 
     /// Feed one (P, Q) input pair; returns the updated state.
     pub fn step(&mut self, p: i64, q: i64) -> i64 {
-        let prod = p * self.state;
-        let resc = rshift_round(prod, self.shift);
-        self.state = (resc + (q << FRAC_BITS)).clamp(-STATE_SAT, STATE_SAT);
-        self.state
+        lane_step(&mut self.state, p, q, self.shift)
     }
 
     pub fn state(&self) -> i64 {
@@ -63,16 +88,25 @@ impl SpeDatapath {
     }
 }
 
-/// Batch integer scan over (L, H, N) row-major arrays: the reference the
-/// cycle-level SSA model is checked against, and the mirror of the python
-/// oracle.
-///
-/// `p`/`q` hold int8-valued entries; `shift` has one entry per H channel.
-/// Returns states at scale s_Q with FRAC_BITS fractional bits.
-pub fn spe_scan_int(p: &[i64], q: &[i64], shift: &[i32], l: usize, h: usize, n: usize) -> Vec<i64> {
+fn check_shapes(p: &[i64], q: &[i64], shift: &[i32], l: usize, h: usize, n: usize) {
     assert_eq!(p.len(), l * h * n, "p length");
     assert_eq!(q.len(), l * h * n, "q length");
     assert_eq!(shift.len(), h, "shift length");
+}
+
+/// Sequential per-lane oracle: the pre-optimization reference scan, kept
+/// as the bit-exactness anchor for [`spe_scan_int`] (and as the "before"
+/// side of the hot-path benchmark pairs). Mirrors
+/// `compile.quant.spe_scan_int`.
+pub fn spe_scan_int_seq(
+    p: &[i64],
+    q: &[i64],
+    shift: &[i32],
+    l: usize,
+    h: usize,
+    n: usize,
+) -> Vec<i64> {
+    check_shapes(p, q, shift, l, h, n);
     let mut out = vec![0i64; l * h * n];
     let mut lanes: Vec<SpeDatapath> =
         (0..h * n).map(|i| SpeDatapath::new(shift[i / n])).collect();
@@ -83,6 +117,121 @@ pub fn spe_scan_int(p: &[i64], q: &[i64], shift: &[i32], l: usize, h: usize, n: 
         }
     }
     out
+}
+
+/// Batch integer scan over (L, H, N) row-major arrays — the hot path.
+///
+/// `p`/`q` hold int8-valued entries; `shift` has one entry per H channel.
+/// Returns states at scale s_Q with FRAC_BITS fractional bits, bit-exact
+/// against [`spe_scan_int_seq`] (and the python goldens). Large shapes are
+/// partitioned across H rows onto worker threads automatically; use
+/// [`spe_scan_int_threaded`] to pin the thread count.
+pub fn spe_scan_int(p: &[i64], q: &[i64], shift: &[i32], l: usize, h: usize, n: usize) -> Vec<i64> {
+    let threads = if l * h * n < PAR_THRESHOLD {
+        1
+    } else {
+        std::thread::available_parallelism().map_or(1, |v| v.get()).min(MAX_SCAN_THREADS)
+    };
+    spe_scan_int_threaded(p, q, shift, l, h, n, threads)
+}
+
+/// [`spe_scan_int`] with an explicit worker-thread count (clamped to
+/// `[1, h]`). Results are bit-identical for every `threads` value: the
+/// partition is over arithmetically independent (h, n) lanes.
+pub fn spe_scan_int_threaded(
+    p: &[i64],
+    q: &[i64],
+    shift: &[i32],
+    l: usize,
+    h: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<i64> {
+    check_shapes(p, q, shift, l, h, n);
+    let mut out = vec![0i64; l * h * n];
+    let threads = threads.clamp(1, h.max(1));
+    if threads <= 1 || h == 0 || l == 0 || n == 0 {
+        // SAFETY: single thread, `out` sized l*h*n, full band [0, h).
+        unsafe { scan_band(p, q, shift, l, h, n, 0, h, OutPtr(out.as_mut_ptr())) };
+        return out;
+    }
+    let ptr = OutPtr(out.as_mut_ptr());
+    let per = h.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut h0 = per; // band [0, per) runs on this thread below
+        while h0 < h {
+            let h1 = (h0 + per).min(h);
+            // SAFETY: bands are disjoint H ranges, so every (l, h, n)
+            // index is written by exactly one thread; `out` lives past
+            // the scope (owned by this frame) and is not read until all
+            // scoped threads join.
+            s.spawn(move || unsafe { scan_band(p, q, shift, l, h, n, h0, h1, ptr) });
+            h0 = h1;
+        }
+        unsafe { scan_band(p, q, shift, l, h, n, 0, per.min(h), ptr) };
+    });
+    out
+}
+
+/// Raw output pointer shared across the scoped scan workers. Sound because
+/// each worker writes a disjoint H band (see the SAFETY notes at spawn).
+#[derive(Clone, Copy)]
+struct OutPtr(*mut i64);
+
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Scan H channels `[h0, h1)` of the (L, H, N) streams: L-major walk with
+/// the band's (H·N) lanes as the inner *contiguous* dimension, 4-wide
+/// manually unrolled. States live in a dense per-band register file, so
+/// each step is a straight stream over `p`/`q`/`out` — no lane-major
+/// striding (the pre-optimization layout walked one lane across all of L
+/// at stride `h*n`, thrashing the cache for large shapes).
+///
+/// # Safety
+/// `out` must be valid for `l*h*n` element writes, and no other thread may
+/// concurrently write indices whose H channel lies in `[h0, h1)`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn scan_band(
+    p: &[i64],
+    q: &[i64],
+    shift: &[i32],
+    l: usize,
+    h: usize,
+    n: usize,
+    h0: usize,
+    h1: usize,
+    out: OutPtr,
+) {
+    let lanes = (h1 - h0) * n;
+    if lanes == 0 {
+        return;
+    }
+    let mut state = vec![0i64; lanes];
+    // Per-lane shift, expanded from per-H so the inner loop stays flat.
+    let sh: Vec<i32> = (0..lanes).map(|i| shift[h0 + i / n]).collect();
+    for step in 0..l {
+        let base = step * h * n + h0 * n;
+        let ps = &p[base..base + lanes];
+        let qs = &q[base..base + lanes];
+        let ob = out.0.add(base);
+        let mut i = 0;
+        while i + 4 <= lanes {
+            let v0 = lane_step(&mut state[i], ps[i], qs[i], sh[i]);
+            let v1 = lane_step(&mut state[i + 1], ps[i + 1], qs[i + 1], sh[i + 1]);
+            let v2 = lane_step(&mut state[i + 2], ps[i + 2], qs[i + 2], sh[i + 2]);
+            let v3 = lane_step(&mut state[i + 3], ps[i + 3], qs[i + 3], sh[i + 3]);
+            ob.add(i).write(v0);
+            ob.add(i + 1).write(v1);
+            ob.add(i + 2).write(v2);
+            ob.add(i + 3).write(v3);
+            i += 4;
+        }
+        while i < lanes {
+            ob.add(i).write(lane_step(&mut state[i], ps[i], qs[i], sh[i]));
+            i += 1;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -122,20 +271,39 @@ mod tests {
         assert!(out.windows(2).all(|w| w[0] <= w[1]));
     }
 
+    fn random_case(l: usize, h: usize, n: usize, seed: u64) -> (Vec<i64>, Vec<i64>, Vec<i32>) {
+        let mut s = seed;
+        let mut rnd = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((s >> 33) as i64 % 255) - 127
+        };
+        let total = l * h * n;
+        let p = (0..total).map(|_| rnd()).collect();
+        let q = (0..total).map(|_| rnd()).collect();
+        let shift = (0..h).map(|i| (i % 13) as i32).collect();
+        (p, q, shift)
+    }
+
+    #[test]
+    fn fast_path_matches_sequential_oracle() {
+        for (l, h, n) in [(1, 1, 1), (7, 3, 5), (33, 6, 4), (64, 11, 3)] {
+            let (p, q, shift) = random_case(l, h, n, 7 + (l * h * n) as u64);
+            let want = spe_scan_int_seq(&p, &q, &shift, l, h, n);
+            assert_eq!(spe_scan_int(&p, &q, &shift, l, h, n), want, "{l}x{h}x{n}");
+            for threads in [1usize, 2, 3, 16] {
+                assert_eq!(
+                    spe_scan_int_threaded(&p, &q, &shift, l, h, n, threads),
+                    want,
+                    "{l}x{h}x{n} threads={threads}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn streaming_equals_batch() {
         let (l, h, n) = (16, 2, 3);
-        let mut p = Vec::new();
-        let mut q = Vec::new();
-        let mut seed = 12345u64;
-        let mut rnd = || {
-            seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1);
-            ((seed >> 33) as i64 % 255) - 127
-        };
-        for _ in 0..l * h * n {
-            p.push(rnd());
-            q.push(rnd());
-        }
+        let (p, q, _) = random_case(l, h, n, 12345);
         let shift = [5, 7];
         let batch = spe_scan_int(&p, &q, &shift, l, h, n);
         // Streaming per lane.

@@ -65,6 +65,19 @@ pub trait InferenceBackend {
 
     /// Run one inference; returns the flattened logits.
     fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>>;
+
+    /// Run a batch of inferences, one result per input image, in order.
+    ///
+    /// The default loops [`Self::infer`]; backends with a real batched
+    /// execution path (the native backend's (B·L, K)x(K, N) GEMM pass)
+    /// override it so coordinator workers hand a whole dynamic batch to
+    /// one weight walk. Overrides MUST be per-item bit-identical to
+    /// `infer` — batch composition is invisible to serving clients
+    /// (`rust/tests/serving_props.rs`) — and must report per-item errors
+    /// (one bad image fails only its own slot).
+    fn infer_batch(&mut self, images: &[&Tensor]) -> Vec<Result<Vec<f32>>> {
+        images.iter().map(|img| self.infer(img)).collect()
+    }
 }
 
 #[cfg(test)]

@@ -5,7 +5,9 @@
 //! plus the SFU's fitted LUT tables; `infer` is a deterministic pure
 //! function of (seed, image), so any number of pool workers built from
 //! the same seed are interchangeable — the invariance the serving
-//! property tests pin down.
+//! property tests pin down. `infer_batch` executes a whole dynamic batch
+//! through one (B·L, K)x(K, N) GEMM pass, per-item bit-identical to
+//! `infer`, which is what the coordinator workers call.
 
 use anyhow::{bail, Result};
 
@@ -54,12 +56,8 @@ impl NativeBackend {
     }
 }
 
-impl InferenceBackend for NativeBackend {
-    fn name(&self) -> &'static str {
-        "native"
-    }
-
-    fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+impl NativeBackend {
+    fn check_shape(&self, image: &Tensor) -> Result<()> {
         let want = self.weights.cfg.input_len();
         if image.data.len() != want {
             bail!(
@@ -70,7 +68,44 @@ impl InferenceBackend for NativeBackend {
                 self.weights.cfg.input_shape()
             );
         }
+        Ok(())
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+        self.check_shape(image)?;
         Ok(self.weights.forward(&self.tables, &self.scan_cfg, &image.data))
+    }
+
+    /// Real batched execution: every well-shaped image in the batch runs
+    /// through one (B·L, K)x(K, N) GEMM pass
+    /// ([`VimWeights::forward_batch`]); malformed images fail only their
+    /// own slot. Per-item bit-identical to [`Self::infer`] — the serving
+    /// layer's batch-composition invariance rests on this.
+    fn infer_batch(&mut self, images: &[&Tensor]) -> Vec<anyhow::Result<Vec<f32>>> {
+        let mut results: Vec<anyhow::Result<Vec<f32>>> = Vec::with_capacity(images.len());
+        let mut valid: Vec<&[f32]> = Vec::with_capacity(images.len());
+        let mut valid_slots: Vec<usize> = Vec::with_capacity(images.len());
+        for (slot, image) in images.iter().enumerate() {
+            match self.check_shape(image) {
+                Ok(()) => {
+                    valid.push(&image.data);
+                    valid_slots.push(slot);
+                    results.push(Ok(Vec::new())); // placeholder, filled below
+                }
+                Err(e) => results.push(Err(e)),
+            }
+        }
+        let logits = self.weights.forward_batch(&self.tables, &self.scan_cfg, &valid);
+        for (slot, row) in valid_slots.into_iter().zip(logits) {
+            results[slot] = Ok(row);
+        }
+        results
     }
 }
 
@@ -109,5 +144,31 @@ mod tests {
     fn synthetic_images_are_stable_and_distinct() {
         assert_eq!(synthetic_image(1, 2, 64), synthetic_image(1, 2, 64));
         assert_ne!(synthetic_image(1, 2, 64), synthetic_image(1, 3, 64));
+    }
+
+    #[test]
+    fn infer_batch_matches_per_item_and_isolates_bad_shapes() {
+        let cfg = ForwardConfig::micro();
+        let mut b = NativeBackend::new(&cfg, 3);
+        let imgs: Vec<Tensor> = (0..3)
+            .map(|id| {
+                Tensor::new(cfg.input_shape(), synthetic_image(4, id, cfg.input_len())).unwrap()
+            })
+            .collect();
+        let bad = Tensor::zeros(vec![2, 2, 1]);
+        let batch: Vec<&Tensor> = vec![&imgs[0], &bad, &imgs[1], &imgs[2]];
+        let results = b.infer_batch(&batch);
+        assert_eq!(results.len(), 4);
+        assert!(results[1].is_err(), "bad shape fails only its own slot");
+        for (slot, img) in [(0usize, &imgs[0]), (2, &imgs[1]), (3, &imgs[2])] {
+            let want = b.infer(img).unwrap();
+            assert_eq!(results[slot].as_ref().unwrap(), &want, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn infer_batch_empty_is_empty() {
+        let mut b = NativeBackend::micro(1);
+        assert!(b.infer_batch(&[]).is_empty());
     }
 }

@@ -24,4 +24,4 @@ pub mod ssa;
 pub mod vpu;
 
 pub use accelerator::{Accelerator, SimReport};
-pub use ssa::{scan_timing, ssa_scan_functional, ScanTiming};
+pub use ssa::{scan_timing, ssa_scan_chunked_ref, ssa_scan_functional, ScanTiming};

@@ -30,11 +30,44 @@ pub struct LutTable {
 }
 
 impl LutTable {
-    /// ADU: binary-search the segment (paper Fig 14(b)), saturating to the
-    /// end segments outside the fitted range. Must match
-    /// `compile.lut.Lut.eval` exactly (same segment convention).
+    /// ADU: find the segment (paper Fig 14(b)), saturating to the end
+    /// segments outside the fitted range. Must match
+    /// `compile.lut.Lut.eval` exactly (same
+    /// `jnp.searchsorted(side="right") - 1` convention, golden-tested).
+    ///
+    /// Hot path: the tables are (near-)uniformly spaced, so a direct
+    /// index guess verified against the actual breakpoints lands in O(1)
+    /// for the common case — this eval sits under every SiLU/exp/softplus
+    /// of the forward pass. The guess is only *accepted* when it satisfies
+    /// the exact searchsorted conditions, so any miss (non-uniform loaded
+    /// tables, NaN) falls back to the original binary search and the
+    /// returned index is always bit-identical to it.
     pub fn segment(&self, x: f32) -> usize {
-        // jnp.searchsorted(side="right") - 1, clipped to [0, len(a)-1].
+        let nb = self.bps.len();
+        let na = self.a.len();
+        if x < self.bps[0] {
+            return 0; // count(bps <= x) == 0, saturate left
+        }
+        if nb >= 2 {
+            let lo0 = self.bps[0];
+            let step = (self.bps[nb - 1] - lo0) / (nb - 1) as f32;
+            if step > 0.0 {
+                let g = (((x - lo0) / step) as usize).min(nb - 1);
+                for cand in [g, g.saturating_sub(1), (g + 1).min(nb - 1)] {
+                    // Exactly "cand == count(bps <= x) - 1".
+                    if self.bps[cand] <= x && (cand + 1 == nb || x < self.bps[cand + 1]) {
+                        return cand.min(na - 1);
+                    }
+                }
+            }
+        }
+        self.segment_search(x)
+    }
+
+    /// The reference binary search (`searchsorted(side="right") - 1`,
+    /// clipped to `[0, len(a)-1]`): the oracle for [`Self::segment`] and
+    /// its fallback for inputs the O(1) guess cannot place.
+    pub fn segment_search(&self, x: f32) -> usize {
         let mut lo = 0usize; // count of bps <= x
         let mut hi = self.bps.len();
         while lo < hi {
@@ -200,6 +233,36 @@ mod tests {
         assert_eq!(t.segment(1.5), 1);
         assert_eq!(t.segment(-5.0), 0); // saturate left
         assert_eq!(t.segment(9.0), 1); // saturate right
+    }
+
+    #[test]
+    fn fast_segment_matches_binary_search_everywhere() {
+        // The O(1) guess must agree with the reference search on dense
+        // sweeps, exactly at every breakpoint, just around them, outside
+        // the range, and on non-uniform tables + non-finite inputs.
+        let mut tables = vec![toy_table(), LutTable::fit(SfuFunc::Silu, -8.7, 10.2, 64)];
+        tables.push(LutTable {
+            name: "nonuniform".into(),
+            bps: vec![-4.0, -3.9, 0.0, 0.25, 8.0],
+            a: vec![1.0, 2.0, 3.0, 4.0],
+            b: vec![0.0; 4],
+        });
+        for t in &tables {
+            let lo = t.bps[0];
+            let hi = *t.bps.last().unwrap();
+            for i in 0..4000 {
+                let x = lo - 1.0 + (hi - lo + 2.0) * i as f32 / 3999.0;
+                assert_eq!(t.segment(x), t.segment_search(x), "{}: x={x}", t.name);
+            }
+            for &bp in &t.bps {
+                for x in [bp, bp - 1e-6, bp + 1e-6, bp - 1e-3, bp + 1e-3] {
+                    assert_eq!(t.segment(x), t.segment_search(x), "{}: bp x={x}", t.name);
+                }
+            }
+            for x in [f32::NEG_INFINITY, f32::INFINITY, f32::NAN, -1e30, 1e30] {
+                assert_eq!(t.segment(x), t.segment_search(x), "{}: edge x={x}", t.name);
+            }
+        }
     }
 
     #[test]

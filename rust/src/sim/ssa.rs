@@ -9,11 +9,14 @@
 //! the same row at one combine per cycle (Fig 13). DMA traffic for the
 //! INT8 (P, Q) streams shares the LPDDR channel.
 //!
-//! **Function** (`ssa_scan_functional`): the same job decomposition run
-//! through the integer SPE datapath ([`crate::quant::SpeDatapath`]) with
-//! LISU carry injection. Whatever the chunk size or SSA count, the result
-//! must be bit-identical to the monolithic sequential scan — the proptest
-//! in `rust/tests/sim_props.rs` enforces this schedule-invariance.
+//! **Function** (`ssa_scan_functional`): the integer SPE datapath
+//! ([`crate::quant::SpeDatapath`]) result of that schedule. Whatever the
+//! chunk size or SSA count, the result is bit-identical to the monolithic
+//! sequential scan (the LISU carry is an exact state hand-off), so the
+//! functional model runs the L-major lane-parallel hot path; the explicit
+//! chunk-job walk survives as [`ssa_scan_chunked_ref`] and the proptests
+//! in `rust/tests/sim_props.rs` / `rust/tests/hotpath_props.rs` enforce
+//! the schedule-invariance across all three implementations.
 
 use crate::config::MambaXConfig;
 use crate::quant::SpeDatapath;
@@ -112,12 +115,39 @@ pub fn scan_timing(cfg: &MambaXConfig, dram: &mut Dram, l: usize, h: usize, n: u
     }
 }
 
-/// Bit-exact chunked scan: the functional contract of the SSA + LISU.
+/// Bit-exact scan: the functional contract of the SSA + LISU.
 ///
 /// Layout: `p`/`q` are (L, H, N) row-major int8-valued; `shift` per-H.
-/// Processes each lane's chunks in order with carry injection — identical
-/// results to [`crate::quant::spe_scan_int`] by construction of the LISU.
+///
+/// The LISU's carry injection is an *exact* state hand-off
+/// ([`SpeDatapath::set_state`]), so the chunked SSA schedule is
+/// bit-identical to the monolithic sequential scan for every `chunk` /
+/// `n_ssa` — the schedule-invariance the proptests pin down. The
+/// functional model therefore executes the L-major lane-parallel hot path
+/// ([`crate::quant::spe_scan_int`]) directly: (H·N) lanes inner and
+/// contiguous, thread row-partitioning for large shapes. The
+/// schedule-*faithful* walk (one SSA chunk-job at a time with explicit
+/// LISU carries) is kept as [`ssa_scan_chunked_ref`]; tests assert all
+/// three paths agree to the bit.
 pub fn ssa_scan_functional(
+    cfg: &MambaXConfig,
+    p: &[i64],
+    q: &[i64],
+    shift: &[i32],
+    l: usize,
+    h: usize,
+    n: usize,
+) -> Vec<i64> {
+    assert!(cfg.chunk >= 1, "chunk must be >= 1");
+    crate::quant::spe_scan_int(p, q, shift, l, h, n)
+}
+
+/// Schedule-faithful reference of the SSA + LISU execution: each (h, n)
+/// lane is processed one `chunk`-long SSA job at a time, with the LISU
+/// injecting the inter-chunk carry — exactly the hardware's decomposition
+/// (Fig 12/13), lane-major and unoptimized. The oracle
+/// [`ssa_scan_functional`]'s schedule-invariance is tested against.
+pub fn ssa_scan_chunked_ref(
     cfg: &MambaXConfig,
     p: &[i64],
     q: &[i64],
@@ -155,7 +185,7 @@ pub fn ssa_scan_functional(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::spe_scan_int;
+    use crate::quant::{spe_scan_int, spe_scan_int_seq};
 
     fn mk(l: usize, h: usize, n: usize, seed: u64) -> (Vec<i64>, Vec<i64>) {
         let mut s = seed;
@@ -172,12 +202,15 @@ mod tests {
         let (l, h, n) = (67, 3, 4);
         let (p, q) = mk(l, h, n, 7);
         let shift = vec![5, 8, 6];
-        let want = spe_scan_int(&p, &q, &shift, l, h, n);
+        let want = spe_scan_int_seq(&p, &q, &shift, l, h, n);
+        assert_eq!(spe_scan_int(&p, &q, &shift, l, h, n), want);
         for n_ssa in [1usize, 2, 8] {
             for chunk in [4usize, 16, 64] {
                 let cfg = MambaXConfig { n_ssa, chunk, ..MambaXConfig::default() };
                 let got = ssa_scan_functional(&cfg, &p, &q, &shift, l, h, n);
                 assert_eq!(got, want, "n_ssa={n_ssa} chunk={chunk}");
+                let chunked = ssa_scan_chunked_ref(&cfg, &p, &q, &shift, l, h, n);
+                assert_eq!(chunked, want, "chunked ref: n_ssa={n_ssa} chunk={chunk}");
             }
         }
     }

@@ -1,9 +1,16 @@
 //! Tiny benchmark harness (criterion is unavailable offline): warmup +
-//! timed iterations with mean / stddev / min reporting, and a
-//! table-printing helper shared by the per-figure benches.
+//! timed iterations with mean / stddev / min reporting, a table-printing
+//! helper shared by the per-figure benches, and a machine-readable
+//! [`BenchReport`] that persists `BENCH_<name>.json` — the recorded perf
+//! trajectory every future PR is held against (regenerate with
+//! `cargo bench --bench hotpath`).
 
 use std::hint::black_box;
 use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::Json;
 
 /// Timing stats in nanoseconds.
 #[derive(Debug, Clone, Copy)]
@@ -66,6 +73,122 @@ pub fn report(name: &str, stats: &Stats) {
     println!("bench {name:<44} {stats}");
 }
 
+/// One named measurement destined for a `BENCH_*.json` file.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Human-readable workload shape, e.g. "512x64x16" or "batch=8".
+    pub shape: String,
+    /// Work items per iteration (lane-steps, requests, images, MACs...)
+    /// from which the throughput is derived.
+    pub items_per_iter: f64,
+    pub stats: Stats,
+}
+
+impl BenchRecord {
+    /// Items per second at the mean iteration time.
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.stats.mean_ns <= 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter / (self.stats.mean_ns / 1e9)
+    }
+}
+
+/// Collects [`BenchRecord`]s plus named baseline-vs-optimized speedup
+/// pairs and serializes them to `BENCH_<suite>.json`, so the perf
+/// trajectory of the hot paths is recorded per commit (CI uploads it as
+/// an artifact) and future optimizations have a floor to beat.
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    suite: String,
+    records: Vec<BenchRecord>,
+    /// (label, baseline record, optimized record, speedup).
+    speedups: Vec<(String, String, String, f64)>,
+}
+
+impl BenchReport {
+    pub fn new(suite: &str) -> Self {
+        BenchReport { suite: suite.to_string(), ..Default::default() }
+    }
+
+    /// Record one measurement (also printed via [`report`]).
+    pub fn push(&mut self, name: &str, shape: &str, items_per_iter: f64, stats: Stats) {
+        report(name, &stats);
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            shape: shape.to_string(),
+            items_per_iter,
+            stats,
+        });
+    }
+
+    fn mean_of(&self, name: &str) -> Option<f64> {
+        self.records.iter().find(|r| r.name == name).map(|r| r.stats.mean_ns)
+    }
+
+    /// Record `baseline_mean / optimized_mean` for two already-pushed
+    /// records and return it (None if either is missing). Both sides are
+    /// measured in the same process/run, so the ratio self-normalizes
+    /// across machines.
+    pub fn speedup(&mut self, label: &str, baseline: &str, optimized: &str) -> Option<f64> {
+        let (b, o) = (self.mean_of(baseline)?, self.mean_of(optimized)?);
+        if o <= 0.0 {
+            return None;
+        }
+        let s = b / o;
+        println!("    -> {label}: {s:.2}x vs {baseline}");
+        self.speedups.push((label.to_string(), baseline.to_string(), optimized.to_string(), s));
+        Some(s)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let records = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj_from(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("shape", Json::Str(r.shape.clone())),
+                    ("iters", Json::Num(r.stats.iters as f64)),
+                    ("mean_ns", Json::Num(r.stats.mean_ns)),
+                    ("stddev_ns", Json::Num(r.stats.stddev_ns)),
+                    ("min_ns", Json::Num(r.stats.min_ns)),
+                    ("items_per_iter", Json::Num(r.items_per_iter)),
+                    ("throughput_per_s", Json::Num(r.throughput_per_s())),
+                ])
+            })
+            .collect();
+        let speedups = self
+            .speedups
+            .iter()
+            .map(|(label, base, opt, s)| {
+                Json::obj_from(vec![
+                    ("name", Json::Str(label.clone())),
+                    ("baseline", Json::Str(base.clone())),
+                    ("optimized", Json::Str(opt.clone())),
+                    ("speedup", Json::Num(*s)),
+                ])
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("records", Json::Arr(records)),
+            ("speedups", Json::Arr(speedups)),
+        ])
+    }
+
+    /// Serialize to `path` (conventionally `BENCH_<suite>.json` at the
+    /// repo root).
+    pub fn write(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing {}", path.display()))?;
+        println!("wrote {}", path.display());
+        Ok(())
+    }
+}
+
 /// Print one row of a paper-table reproduction.
 pub fn row(cols: &[String]) {
     println!("{}", cols.join(" | "));
@@ -74,6 +197,30 @@ pub fn row(cols: &[String]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn report_records_and_serializes() {
+        let mut rep = BenchReport::new("unit");
+        let fast = Stats { iters: 5, mean_ns: 1000.0, stddev_ns: 10.0, min_ns: 990.0 };
+        let slow = Stats { iters: 5, mean_ns: 3000.0, stddev_ns: 30.0, min_ns: 2800.0 };
+        rep.push("kernel_ref", "8x8", 64.0, slow);
+        rep.push("kernel", "8x8", 64.0, fast);
+        let s = rep.speedup("kernel_vs_ref", "kernel_ref", "kernel").unwrap();
+        assert!((s - 3.0).abs() < 1e-9);
+        assert!(rep.speedup("missing", "nope", "kernel").is_none());
+        let j = rep.to_json();
+        assert_eq!(j.get("suite").unwrap().str().unwrap(), "unit");
+        let recs = j.get("records").unwrap().arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        // throughput = items / mean-seconds: 64 / 1µs = 64M/s.
+        let tp = recs[1].get("throughput_per_s").unwrap().num().unwrap();
+        assert!((tp - 64e6).abs() / 64e6 < 1e-9, "tp {tp}");
+        let sp = j.get("speedups").unwrap().arr().unwrap();
+        assert_eq!(sp.len(), 1);
+        // Round-trips through the writer.
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("records").unwrap().arr().unwrap().len(), 2);
+    }
 
     #[test]
     fn bench_runs_and_measures() {

@@ -13,7 +13,21 @@
 //!   ([`crate::quant::quantize_scan_inputs`], pow2 dA scales) and runs the
 //!   bit-exact SSA+LISU integer datapath
 //!   ([`crate::sim::ssa_scan_functional`] over `SpeDatapath` lanes);
-//! * everything else (GEMMs, layer norm, conv1d, gating) is plain f32.
+//! * everything else (GEMMs, layer norm, conv1d, gating) is plain f32 on
+//!   the register-tiled kernel in [`super::gemm`].
+//!
+//! The hot path is *batched*: [`VimWeights::forward_batch`] carries B
+//! images through every projection as one (B·L, K)x(K, N) GEMM — patchify
+//! (B·patches rows), in/x/dt/out projections (B·L rows), classifier head
+//! (B rows) — so a serving batch pays for each weight matrix walk once.
+//! Only the depthwise causal conv and the quantized scan stay per-item:
+//! conv causality must not leak across images, and the scan's dynamic
+//! per-channel scales are calibrated per invocation, so batching them
+//! would change numerics. Everything row-wise is order-preserving, which
+//! makes `forward_batch` *bitwise identical* to per-item [`VimWeights::forward`]
+//! calls — the invariant serving batches lean on, pinned by
+//! `rust/tests/hotpath_props.rs` (and against the pre-optimization
+//! [`VimWeights::forward_ref`] path, which is also the benchmark baseline).
 //!
 //! Weights are synthetic (seeded, Mamba-style initialization): the crate
 //! ships no trained checkpoint, so this backend demonstrates the *system*
@@ -25,9 +39,10 @@
 use crate::config::{MambaXConfig, VimModel};
 use crate::quant::{dequantize_states, quantize_scan_inputs};
 use crate::sim::sfu::SfuTables;
-use crate::sim::ssa_scan_functional;
+use crate::sim::{ssa_scan_chunked_ref, ssa_scan_functional};
 use crate::util::Pcg;
 
+use super::gemm::{matmul, matmul_ref};
 use super::ops::SfuFunc;
 
 /// Shape of one executable Vim instance: model config + input geometry.
@@ -192,43 +207,80 @@ impl VimWeights {
 
     /// Full inference: flattened (img, img, in_ch) image -> n_classes
     /// logits. Panics if `image.len() != cfg.input_len()` (backends
-    /// validate shapes before calling).
+    /// validate shapes before calling). A batch of one on the batched hot
+    /// path — bit-identical to the pre-batching implementation
+    /// ([`Self::forward_ref`], tested).
     pub fn forward(
         &self,
         tables: &SfuTables,
         scan_cfg: &MambaXConfig,
         image: &[f32],
     ) -> Vec<f32> {
-        let cfg = &self.cfg;
-        assert_eq!(image.len(), cfg.input_len(), "input image length");
-        let (d, l) = (cfg.model.d_model, cfg.seq_len());
-        let (np, pd) = (cfg.n_patches(), cfg.patch_dim());
-        let patches = self.patchify(image);
-        let tok = matmul(&patches, &self.patch_w, Some(&self.patch_b), np, pd, d);
-        // Middle class token (paper Fig 3(a) step 2) + position embedding.
-        let mid = cfg.n_patches() / 2;
-        let mut x = Vec::with_capacity(l * d);
-        x.extend_from_slice(&tok[..mid * d]);
-        x.extend_from_slice(&self.cls);
-        x.extend_from_slice(&tok[mid * d..]);
-        for (v, p) in x.iter_mut().zip(&self.pos) {
-            *v += p;
-        }
-        for bw in &self.blocks {
-            self.block(bw, &mut x, tables, scan_cfg);
-        }
-        layer_norm(&mut x, d, &self.head_norm_g, &self.head_norm_b);
-        let cls_row = &x[mid * d..(mid + 1) * d];
-        matmul(cls_row, &self.head_w, Some(&self.head_b), 1, d, cfg.n_classes)
+        self.forward_batch(tables, scan_cfg, &[image])
+            .pop()
+            .expect("batch of one yields one logits row")
     }
 
-    /// (img, img, C) row-major -> (n_patches, patch*patch*C), patches in
-    /// row-major grid order (mirror of `model.patchify`).
-    fn patchify(&self, image: &[f32]) -> Vec<f32> {
+    /// Batched inference: B flattened images -> B logits rows, every
+    /// projection executed as one (B·L, K)x(K, N) GEMM over the stacked
+    /// batch. Bitwise identical to calling [`Self::forward`] per image
+    /// (see the module docs for why), so serving batch composition stays
+    /// invisible to clients. Panics if any image has the wrong length.
+    pub fn forward_batch(
+        &self,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+        images: &[&[f32]],
+    ) -> Vec<Vec<f32>> {
+        let cfg = &self.cfg;
+        let b = images.len();
+        if b == 0 {
+            return Vec::new();
+        }
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(img.len(), cfg.input_len(), "input image {i} length");
+        }
+        let (d, l) = (cfg.model.d_model, cfg.seq_len());
+        let (np, pd) = (cfg.n_patches(), cfg.patch_dim());
+        // Patchify the whole batch into (B·np, pd): one patch-embed GEMM.
+        let mut patches = Vec::with_capacity(b * np * pd);
+        for img in images {
+            self.patchify_into(img, &mut patches);
+        }
+        let tok = matmul(&patches, &self.patch_w, Some(&self.patch_b), b * np, pd, d);
+        // Middle class token (paper Fig 3(a) step 2) + position embedding,
+        // per item -> contiguous (B·L, D) activations.
+        let mid = np / 2;
+        let mut x = Vec::with_capacity(b * l * d);
+        for item in 0..b {
+            let t = &tok[item * np * d..(item + 1) * np * d];
+            x.extend_from_slice(&t[..mid * d]);
+            x.extend_from_slice(&self.cls);
+            x.extend_from_slice(&t[mid * d..]);
+            for (v, p) in x[item * l * d..].iter_mut().zip(&self.pos) {
+                *v += p;
+            }
+        }
+        for bw in &self.blocks {
+            self.block(bw, &mut x, b, tables, scan_cfg);
+        }
+        layer_norm(&mut x, d, &self.head_norm_g, &self.head_norm_b);
+        // Gather every item's class-token row -> (B, D); one head GEMM.
+        let mut cls_rows = Vec::with_capacity(b * d);
+        for item in 0..b {
+            let base = (item * l + mid) * d;
+            cls_rows.extend_from_slice(&x[base..base + d]);
+        }
+        let logits = matmul(&cls_rows, &self.head_w, Some(&self.head_b), b, d, cfg.n_classes);
+        logits.chunks_exact(cfg.n_classes).map(|row| row.to_vec()).collect()
+    }
+
+    /// (img, img, C) row-major -> (n_patches, patch*patch*C) appended to
+    /// `out`, patches in row-major grid order (mirror of `model.patchify`).
+    fn patchify_into(&self, image: &[f32], out: &mut Vec<f32>) {
         let cfg = &self.cfg;
         let (p, c, img) = (cfg.model.patch, cfg.in_ch, cfg.img);
         let grid = img / p;
-        let mut out = Vec::with_capacity(cfg.n_patches() * cfg.patch_dim());
         for pi in 0..grid {
             for pj in 0..grid {
                 for py in 0..p {
@@ -239,11 +291,169 @@ impl VimWeights {
                 }
             }
         }
-        out
     }
 
-    /// One bidirectional encoder block, in place (paper Fig 3(a) 3-5).
+    /// One bidirectional encoder block over the stacked (B·L, D) batch,
+    /// in place (paper Fig 3(a) 3-5).
     fn block(
+        &self,
+        bw: &BlockWeights,
+        x: &mut [f32],
+        b: usize,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+    ) {
+        let (d, e) = (self.cfg.model.d_model, self.cfg.model.d_inner());
+        let l = self.cfg.seq_len();
+        let rows = b * l;
+        let mut h = x.to_vec();
+        layer_norm(&mut h, d, &bw.norm_g, &bw.norm_b);
+        let xz = matmul(&h, &bw.in_w, Some(&bw.in_b), rows, d, 2 * e);
+        let mut xi = vec![0f32; rows * e];
+        let mut z = vec![0f32; rows * e];
+        for row in 0..rows {
+            xi[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e..row * 2 * e + e]);
+            z[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e + e..(row + 1) * 2 * e]);
+        }
+        let y_f = self.ssm_path(&bw.fwd, &xi, &z, b, tables, scan_cfg);
+        let xi_rev = reversed_rows_batched(&xi, b, l, e);
+        let z_rev = reversed_rows_batched(&z, b, l, e);
+        let y_b_rev = self.ssm_path(&bw.bwd, &xi_rev, &z_rev, b, tables, scan_cfg);
+        let y_b = reversed_rows_batched(&y_b_rev, b, l, e);
+        let sum: Vec<f32> = y_f.iter().zip(&y_b).map(|(a, b)| a + b).collect();
+        let y = matmul(&sum, &bw.out_w, Some(&bw.out_b), rows, e, d);
+        for (xv, yv) in x.iter_mut().zip(&y) {
+            *xv += yv;
+        }
+    }
+
+    /// One direction over the stacked batch: conv -> SiLU -> projections
+    /// -> softplus -> discretize (exp on the SFU) -> INT8 scan ->
+    /// C-reduction -> gate (paper Fig 3(b) steps 1-4 as the
+    /// VPU->SFU->SSA->PPU pipeline). Projections span all B·L rows; the
+    /// causal conv and the quantized scan run per item (see module docs).
+    fn ssm_path(
+        &self,
+        dw: &DirWeights,
+        x: &[f32],
+        z: &[f32],
+        b: usize,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+    ) -> Vec<f32> {
+        let m = &self.cfg.model;
+        let (e, n, r, k) = (m.d_inner(), m.d_state, m.dt_rank(), m.conv_k);
+        let l = self.cfg.seq_len();
+        let rows = b * l;
+        // Depthwise causal conv per item: causality must not cross images.
+        let mut u = vec![0f32; rows * e];
+        for item in 0..b {
+            let span = item * l * e..(item + 1) * l * e;
+            causal_conv1d_into(&x[span.clone()], &dw.conv_w, &dw.conv_b, l, e, k, &mut u[span]);
+        }
+        for v in u.iter_mut() {
+            *v = tables.eval(SfuFunc::Silu, *v);
+        }
+        // x-proj: split into (dt_raw, B, C) per step.
+        let cols = r + 2 * n;
+        let xdbc = matmul(&u, &dw.xproj_w, None, rows, e, cols);
+        let mut dt_raw = vec![0f32; rows * r];
+        let mut b_mat = vec![0f32; rows * n];
+        let mut c_mat = vec![0f32; rows * n];
+        for row in 0..rows {
+            let src = &xdbc[row * cols..(row + 1) * cols];
+            dt_raw[row * r..(row + 1) * r].copy_from_slice(&src[..r]);
+            b_mat[row * n..(row + 1) * n].copy_from_slice(&src[r..r + n]);
+            c_mat[row * n..(row + 1) * n].copy_from_slice(&src[r + n..]);
+        }
+        let mut delta = matmul(&dt_raw, &dw.dt_w, Some(&dw.dt_b), rows, r, e);
+        for v in delta.iter_mut() {
+            *v = tables.eval(SfuFunc::Softplus, *v);
+        }
+        // Discretize: dA = exp(delta*A) on the SFU, dBu = delta*u*B (VPU).
+        let mut da = vec![0f32; rows * e * n];
+        let mut dbu = vec![0f32; rows * e * n];
+        for row in 0..rows {
+            for ch in 0..e {
+                let dv = delta[row * e + ch];
+                let uv = u[row * e + ch];
+                let base = (row * e + ch) * n;
+                for s in 0..n {
+                    da[base + s] = tables.eval(SfuFunc::Exp, dv * dw.a[ch * n + s]);
+                    dbu[base + s] = dv * uv * b_mat[row * n + s];
+                }
+            }
+        }
+        // INT8 scan on the SSA+LISU functional datapath, per item: the
+        // dynamic per-channel scales are calibrated over one (L, N) image,
+        // so batch composition never shifts quantization.
+        let mut states = vec![0f32; rows * e * n];
+        for item in 0..b {
+            let span = item * l * e * n..(item + 1) * l * e * n;
+            let (p, q, scales) =
+                quantize_scan_inputs(&da[span.clone()], &dbu[span.clone()], l, e, n);
+            let states_q = ssa_scan_functional(scan_cfg, &p, &q, &scales.shift, l, e, n);
+            states[span].copy_from_slice(&dequantize_states(&states_q, &scales.sq, l, e, n));
+        }
+        // Output: y = <C, state> + D*u, gated by silu(z) (PPU).
+        let mut y = vec![0f32; rows * e];
+        for row in 0..rows {
+            for ch in 0..e {
+                let base = (row * e + ch) * n;
+                let mut acc = 0f32;
+                for s in 0..n {
+                    acc += states[base + s] * c_mat[row * n + s];
+                }
+                let i = row * e + ch;
+                y[i] = (acc + dw.d[ch] * u[i]) * tables.eval(SfuFunc::Silu, z[i]);
+            }
+        }
+        y
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pre-optimization reference path: the seed's scalar single-item forward,
+// kept verbatim (naive GEMM, lane-major chunked scan, per-item execution).
+// It is both the bit-exactness oracle for the optimized pipeline
+// (`rust/tests/hotpath_props.rs`) and the recorded "before" baseline of
+// `rust/benches/hotpath.rs` / BENCH_hotpath.json.
+// ---------------------------------------------------------------------------
+
+impl VimWeights {
+    /// The pre-optimization forward pass (scalar triple-loop GEMM +
+    /// lane-major chunked scan). Slow by design — use [`Self::forward`]
+    /// for anything but oracle checks and baseline benchmarking.
+    pub fn forward_ref(
+        &self,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+        image: &[f32],
+    ) -> Vec<f32> {
+        let cfg = &self.cfg;
+        assert_eq!(image.len(), cfg.input_len(), "input image length");
+        let (d, l) = (cfg.model.d_model, cfg.seq_len());
+        let (np, pd) = (cfg.n_patches(), cfg.patch_dim());
+        let mut patches = Vec::with_capacity(np * pd);
+        self.patchify_into(image, &mut patches);
+        let tok = matmul_ref(&patches, &self.patch_w, Some(&self.patch_b), np, pd, d);
+        let mid = np / 2;
+        let mut x = Vec::with_capacity(l * d);
+        x.extend_from_slice(&tok[..mid * d]);
+        x.extend_from_slice(&self.cls);
+        x.extend_from_slice(&tok[mid * d..]);
+        for (v, p) in x.iter_mut().zip(&self.pos) {
+            *v += p;
+        }
+        for bw in &self.blocks {
+            self.block_ref(bw, &mut x, tables, scan_cfg);
+        }
+        layer_norm(&mut x, d, &self.head_norm_g, &self.head_norm_b);
+        let cls_row = &x[mid * d..(mid + 1) * d];
+        matmul_ref(cls_row, &self.head_w, Some(&self.head_b), 1, d, cfg.n_classes)
+    }
+
+    fn block_ref(
         &self,
         bw: &BlockWeights,
         x: &mut [f32],
@@ -254,29 +464,26 @@ impl VimWeights {
         let l = self.cfg.seq_len();
         let mut h = x.to_vec();
         layer_norm(&mut h, d, &bw.norm_g, &bw.norm_b);
-        let xz = matmul(&h, &bw.in_w, Some(&bw.in_b), l, d, 2 * e);
+        let xz = matmul_ref(&h, &bw.in_w, Some(&bw.in_b), l, d, 2 * e);
         let mut xi = vec![0f32; l * e];
         let mut z = vec![0f32; l * e];
         for row in 0..l {
             xi[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e..row * 2 * e + e]);
             z[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e + e..(row + 1) * 2 * e]);
         }
-        let y_f = self.ssm_path(&bw.fwd, &xi, &z, tables, scan_cfg);
-        let xi_rev = reversed_rows(&xi, l, e);
-        let z_rev = reversed_rows(&z, l, e);
-        let y_b_rev = self.ssm_path(&bw.bwd, &xi_rev, &z_rev, tables, scan_cfg);
-        let y_b = reversed_rows(&y_b_rev, l, e);
+        let y_f = self.ssm_path_ref(&bw.fwd, &xi, &z, tables, scan_cfg);
+        let xi_rev = reversed_rows_batched(&xi, 1, l, e);
+        let z_rev = reversed_rows_batched(&z, 1, l, e);
+        let y_b_rev = self.ssm_path_ref(&bw.bwd, &xi_rev, &z_rev, tables, scan_cfg);
+        let y_b = reversed_rows_batched(&y_b_rev, 1, l, e);
         let sum: Vec<f32> = y_f.iter().zip(&y_b).map(|(a, b)| a + b).collect();
-        let y = matmul(&sum, &bw.out_w, Some(&bw.out_b), l, e, d);
+        let y = matmul_ref(&sum, &bw.out_w, Some(&bw.out_b), l, e, d);
         for (xv, yv) in x.iter_mut().zip(&y) {
             *xv += yv;
         }
     }
 
-    /// One direction: conv -> SiLU -> projections -> softplus ->
-    /// discretize (exp on the SFU) -> INT8 scan -> C-reduction -> gate
-    /// (paper Fig 3(b) steps 1-4 as the VPU->SFU->SSA->PPU pipeline).
-    fn ssm_path(
+    fn ssm_path_ref(
         &self,
         dw: &DirWeights,
         x: &[f32],
@@ -287,13 +494,13 @@ impl VimWeights {
         let m = &self.cfg.model;
         let (e, n, r, k) = (m.d_inner(), m.d_state, m.dt_rank(), m.conv_k);
         let l = self.cfg.seq_len();
-        let mut u = causal_conv1d(x, &dw.conv_w, &dw.conv_b, l, e, k);
+        let mut u = vec![0f32; l * e];
+        causal_conv1d_into(x, &dw.conv_w, &dw.conv_b, l, e, k, &mut u);
         for v in u.iter_mut() {
             *v = tables.eval(SfuFunc::Silu, *v);
         }
-        // x-proj: split into (dt_raw, B, C) per step.
         let cols = r + 2 * n;
-        let xdbc = matmul(&u, &dw.xproj_w, None, l, e, cols);
+        let xdbc = matmul_ref(&u, &dw.xproj_w, None, l, e, cols);
         let mut dt_raw = vec![0f32; l * r];
         let mut b_mat = vec![0f32; l * n];
         let mut c_mat = vec![0f32; l * n];
@@ -303,11 +510,10 @@ impl VimWeights {
             b_mat[row * n..(row + 1) * n].copy_from_slice(&src[r..r + n]);
             c_mat[row * n..(row + 1) * n].copy_from_slice(&src[r + n..]);
         }
-        let mut delta = matmul(&dt_raw, &dw.dt_w, Some(&dw.dt_b), l, r, e);
+        let mut delta = matmul_ref(&dt_raw, &dw.dt_w, Some(&dw.dt_b), l, r, e);
         for v in delta.iter_mut() {
             *v = tables.eval(SfuFunc::Softplus, *v);
         }
-        // Discretize: dA = exp(delta*A) on the SFU, dBu = delta*u*B (VPU).
         let mut da = vec![0f32; l * e * n];
         let mut dbu = vec![0f32; l * e * n];
         for row in 0..l {
@@ -321,11 +527,9 @@ impl VimWeights {
                 }
             }
         }
-        // INT8 scan on the SSA+LISU functional datapath.
         let (p, q, scales) = quantize_scan_inputs(&da, &dbu, l, e, n);
-        let states_q = ssa_scan_functional(scan_cfg, &p, &q, &scales.shift, l, e, n);
+        let states_q = ssa_scan_chunked_ref(scan_cfg, &p, &q, &scales.shift, l, e, n);
         let states = dequantize_states(&states_q, &scales.sq, l, e, n);
-        // Output: y = <C, state> + D*u, gated by silu(z) (PPU).
         let mut y = vec![0f32; l * e];
         for row in 0..l {
             for ch in 0..e {
@@ -342,24 +546,6 @@ impl VimWeights {
     }
 }
 
-/// Row-major (m, k) x (k, n) GEMM with optional bias on the output rows.
-fn matmul(x: &[f32], w: &[f32], bias: Option<&[f32]>, m: usize, k: usize, n: usize) -> Vec<f32> {
-    assert_eq!(x.len(), m * k, "matmul lhs");
-    assert_eq!(w.len(), k * n, "matmul rhs");
-    let mut out = vec![0f32; m * n];
-    for (xr, or) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
-        if let Some(b) = bias {
-            or.copy_from_slice(b);
-        }
-        for (xv, wr) in xr.iter().zip(w.chunks_exact(n)) {
-            for (o, wv) in or.iter_mut().zip(wr) {
-                *o += xv * wv;
-            }
-        }
-    }
-    out
-}
-
 /// Row-wise layer norm over `cols`-wide rows, in place.
 fn layer_norm(x: &mut [f32], cols: usize, g: &[f32], b: &[f32]) {
     for row in x.chunks_exact_mut(cols) {
@@ -372,9 +558,19 @@ fn layer_norm(x: &mut [f32], cols: usize, g: &[f32], b: &[f32]) {
     }
 }
 
-/// Depthwise causal conv over (L, E): tap j reaches back k-1-j steps.
-fn causal_conv1d(x: &[f32], w: &[f32], bias: &[f32], l: usize, e: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![0f32; l * e];
+/// Depthwise causal conv over (L, E) into `out`: tap j reaches back
+/// k-1-j steps.
+fn causal_conv1d_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    l: usize,
+    e: usize,
+    k: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(x.len(), l * e, "conv input");
+    assert_eq!(out.len(), l * e, "conv output");
     for li in 0..l {
         for ch in 0..e {
             let mut acc = bias[ch];
@@ -387,14 +583,18 @@ fn causal_conv1d(x: &[f32], w: &[f32], bias: &[f32], l: usize, e: usize, k: usiz
             out[li * e + ch] = acc;
         }
     }
-    out
 }
 
-/// Reverse the row order of a (rows, cols) matrix (sequence flip).
-fn reversed_rows(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+/// Reverse the row order of each item's (rows, cols) matrix in a stacked
+/// (b, rows, cols) tensor (per-sequence flip; never crosses items).
+fn reversed_rows_batched(x: &[f32], b: usize, rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(x.len(), b * rows * cols, "reversed_rows_batched input");
     let mut out = Vec::with_capacity(x.len());
-    for r in (0..rows).rev() {
-        out.extend_from_slice(&x[r * cols..(r + 1) * cols]);
+    for item in 0..b {
+        let base = item * rows * cols;
+        for r in (0..rows).rev() {
+            out.extend_from_slice(&x[base + r * cols..base + (r + 1) * cols]);
+        }
     }
     out
 }
@@ -478,6 +678,41 @@ mod tests {
     }
 
     #[test]
+    fn forward_matches_reference_path_bitwise() {
+        // The optimized pipeline (tiled GEMM + lane-parallel scan, batched
+        // structure) must reproduce the seed's scalar forward to the bit.
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let w = VimWeights::init(&cfg, 21);
+        for seed in [1u64, 2, 3] {
+            let img = image(seed, cfg.input_len());
+            assert_eq!(
+                w.forward(&tables, &scan, &img),
+                w.forward_ref(&tables, &scan, &img),
+                "image seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn forward_batch_matches_per_item_bitwise() {
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let w = VimWeights::init(&cfg, 5);
+        let imgs: Vec<Vec<f32>> =
+            (0..5).map(|s| image(100 + s, cfg.input_len())).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let batched = w.forward_batch(&tables, &scan, &refs);
+        assert_eq!(batched.len(), imgs.len());
+        for (img, got) in imgs.iter().zip(&batched) {
+            assert_eq!(got, &w.forward(&tables, &scan, img), "batch composition leaked");
+        }
+        assert!(w.forward_batch(&tables, &scan, &[]).is_empty());
+    }
+
+    #[test]
     fn micro_config_matches_manifest_geometry() {
         let cfg = ForwardConfig::micro();
         assert_eq!(cfg.seq_len(), 65);
@@ -493,8 +728,10 @@ mod tests {
         let b = [0.0f32];
         let x1 = [1.0f32, 9.0, 9.0, 9.0];
         let x2 = [1.0f32, -3.0, 5.0, 7.0];
-        let y1 = causal_conv1d(&x1, &w, &b, l, e, k);
-        let y2 = causal_conv1d(&x2, &w, &b, l, e, k);
+        let mut y1 = vec![0f32; l];
+        let mut y2 = vec![0f32; l];
+        causal_conv1d_into(&x1, &w, &b, l, e, k, &mut y1);
+        causal_conv1d_into(&x2, &w, &b, l, e, k, &mut y2);
         assert_eq!(y1[0], y2[0], "step 0 sees only step 0");
         assert_eq!(y1[0], 1.0); // last tap * x[0]
     }

@@ -1,0 +1,231 @@
+//! Register-tiled f32 GEMM shared by every projection site of the native
+//! forward pass (patch embed, in/x/dt/out projections, classifier head)
+//! and benchmarked against the naive kernel by `rust/benches/hotpath.rs`.
+//!
+//! [`matmul`] computes a row-major `(m, k) x (k, n)` product with an
+//! optional bias on every output row, *bit-identically* to the scalar
+//! triple loop [`matmul_ref`]: each output element starts at the bias and
+//! accumulates `x[i,k] * w[k,j]` in ascending-k order, so no f32 sum is
+//! reassociated — only the schedule changes. The fast path processes
+//! [`MR`]`x`[`NR`] output tiles held in registers, streaming one `w` row
+//! slice per k step (amortized over [`MR`] rows) instead of re-walking the
+//! n-wide output row per k like the naive kernel does. The fixed-width
+//! inner loop unrolls/vectorizes on stable Rust with no dependencies.
+//!
+//! `rust/tests/hotpath_props.rs` pins `matmul == matmul_ref` bitwise over
+//! randomized shapes, which in turn keeps the whole forward pass (and the
+//! serving stack above it) bit-stable across this optimization.
+
+/// Output-tile rows held in registers by the fast path.
+pub const MR: usize = 4;
+/// Output-tile columns held in registers by the fast path (the unroll
+/// width of the inner loop).
+pub const NR: usize = 8;
+
+/// Row-major (m, k) x (k, n) GEMM with optional bias on the output rows.
+/// Bit-identical to [`matmul_ref`].
+pub fn matmul(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    matmul_into(&mut out, x, w, bias, m, k, n);
+    out
+}
+
+/// [`matmul`] writing into a caller-provided `(m, n)` buffer, for call
+/// sites that want to reuse an output allocation across invocations.
+pub fn matmul_into(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(x.len(), m * k, "matmul lhs");
+    assert_eq!(w.len(), k * n, "matmul rhs");
+    assert_eq!(out.len(), m * n, "matmul out");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "matmul bias");
+    }
+    let mut i0 = 0;
+    while i0 < m {
+        let rows = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < n {
+            let cols = (n - j0).min(NR);
+            if rows == MR && cols == NR {
+                tile_full(out, x, w, bias, k, n, i0, j0);
+            } else {
+                tile_edge(out, x, w, bias, k, n, i0, rows, j0, cols);
+            }
+            j0 += cols;
+        }
+        i0 += rows;
+    }
+}
+
+/// Full MRxNR register tile: constant trip counts so the accumulator array
+/// stays in registers and the NR-wide inner loop vectorizes.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_full(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    if let Some(b) = bias {
+        let brow = &b[j0..j0 + NR];
+        for row in acc.iter_mut() {
+            row.copy_from_slice(brow);
+        }
+    }
+    for kk in 0..k {
+        let wrow = &w[kk * n + j0..kk * n + j0 + NR];
+        for (r, row) in acc.iter_mut().enumerate() {
+            let xv = x[(i0 + r) * k + kk];
+            for (a, wv) in row.iter_mut().zip(wrow) {
+                *a += xv * wv;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        out[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR].copy_from_slice(row);
+    }
+}
+
+/// Partial tile at the m/n edges (`rows <= MR`, `cols <= NR`), same
+/// ascending-k accumulation order as the full tile.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_edge(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    i0: usize,
+    rows: usize,
+    j0: usize,
+    cols: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    if let Some(b) = bias {
+        for row in acc.iter_mut().take(rows) {
+            row[..cols].copy_from_slice(&b[j0..j0 + cols]);
+        }
+    }
+    for kk in 0..k {
+        let wrow = &w[kk * n + j0..kk * n + j0 + cols];
+        for (r, row) in acc.iter_mut().enumerate().take(rows) {
+            let xv = x[(i0 + r) * k + kk];
+            for (a, wv) in row[..cols].iter_mut().zip(wrow) {
+                *a += xv * wv;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate().take(rows) {
+        out[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols].copy_from_slice(&row[..cols]);
+    }
+}
+
+/// The pre-optimization scalar GEMM: the oracle [`matmul`] is tested
+/// against and the "naive" side of the hot-path benchmark pairs. One
+/// output row is re-walked per k step — exactly what the register tile
+/// avoids.
+pub fn matmul_ref(
+    x: &[f32],
+    w: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "matmul lhs");
+    assert_eq!(w.len(), k * n, "matmul rhs");
+    let mut out = vec![0f32; m * n];
+    for (xr, or) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        if let Some(b) = bias {
+            or.copy_from_slice(b);
+        }
+        for (xv, wr) in xr.iter().zip(w.chunks_exact(n)) {
+            for (o, wv) in or.iter_mut().zip(wr) {
+                *o += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg;
+
+    fn rand_vec(rng: &mut Pcg, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.f32_in(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn tiled_matches_reference_bitwise() {
+        let mut rng = Pcg::new(11);
+        // Shapes crossing every tile-edge case: m % MR, n % NR, tiny k.
+        for (m, k, n) in [
+            (1usize, 1usize, 1usize),
+            (4, 8, 8),
+            (5, 3, 9),
+            (7, 16, 30),
+            (13, 21, 17),
+            (65, 64, 256),
+        ] {
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let b = rand_vec(&mut rng, n);
+            assert_eq!(
+                matmul(&x, &w, Some(&b), m, k, n),
+                matmul_ref(&x, &w, Some(&b), m, k, n),
+                "biased {m}x{k}x{n}"
+            );
+            assert_eq!(
+                matmul(&x, &w, None, m, k, n),
+                matmul_ref(&x, &w, None, m, k, n),
+                "unbiased {m}x{k}x{n}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer() {
+        let mut rng = Pcg::new(3);
+        let (m, k, n) = (6usize, 5usize, 10usize);
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let mut out = vec![f32::NAN; m * n]; // stale garbage must be overwritten
+        matmul_into(&mut out, &x, &w, None, m, k, n);
+        assert_eq!(out, matmul_ref(&x, &w, None, m, k, n));
+    }
+
+    #[test]
+    fn identity_product() {
+        let n = 9usize; // crosses the NR edge
+        let mut w = vec![0f32; n * n];
+        for i in 0..n {
+            w[i * n + i] = 1.0;
+        }
+        let x: Vec<f32> = (0..2 * n).map(|i| i as f32).collect();
+        assert_eq!(matmul(&x, &w, None, 2, n, n), x);
+    }
+}

@@ -10,11 +10,13 @@
 //! hermetic native inference backend ([`crate::runtime::NativeBackend`]).
 
 pub mod forward;
+pub mod gemm;
 mod ops;
 mod vim;
 mod vit;
 
 pub use forward::{BlockWeights, DirWeights, ForwardConfig, VimWeights};
+pub use gemm::{matmul, matmul_ref};
 pub use ops::{Op, OpClass, SfuFunc};
 pub use vim::{vim_block_ops, vim_model_ops, vim_selective_ssm_ops};
 pub use vit::{vit_block_ops, vit_model_ops, vit_score_matrix_bytes};

@@ -1,0 +1,147 @@
+//! Bit-exactness properties of the optimized hot paths (hand-rolled
+//! harness: proptest is unavailable offline; `Pcg` provides deterministic
+//! shrink-free random cases).
+//!
+//! Everything this PR made fast must be *bitwise* indistinguishable from
+//! the seed's sequential reference implementations:
+//!
+//! * the register-tiled GEMM vs the naive triple loop;
+//! * the lane-parallel (threaded) scan vs the per-lane sequential oracle,
+//!   across every (L, H, N, chunk, n_ssa, threads) schedule;
+//! * the batched forward pass vs per-item forward calls vs the pre-PR
+//!   scalar reference forward.
+
+use mamba_x::config::{MambaXConfig, VimModel};
+use mamba_x::quant::{spe_scan_int, spe_scan_int_seq, spe_scan_int_threaded};
+use mamba_x::sim::sfu::SfuTables;
+use mamba_x::sim::{ssa_scan_chunked_ref, ssa_scan_functional};
+use mamba_x::util::Pcg;
+use mamba_x::vision::{matmul, matmul_ref, ForwardConfig, VimWeights};
+
+/// PROPERTY: the tiled GEMM is bit-identical to the scalar reference for
+/// arbitrary shapes (all tile-edge combinations) and bias modes.
+#[test]
+fn prop_tiled_gemm_matches_reference() {
+    let mut rng = Pcg::new(0x6E44);
+    for case in 0..150 {
+        let m = rng.usize_in(1, 40);
+        let k = rng.usize_in(1, 48);
+        let n = rng.usize_in(1, 40);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+        let use_bias = rng.f64() < 0.5;
+        let b = if use_bias { Some(bias.as_slice()) } else { None };
+        assert_eq!(
+            matmul(&x, &w, b, m, k, n),
+            matmul_ref(&x, &w, b, m, k, n),
+            "case {case}: {m}x{k}x{n} bias={use_bias}"
+        );
+    }
+}
+
+/// PROPERTY: the lane-parallel scan — auto-threaded, explicitly threaded
+/// at any count, and through the SSA functional model at any (chunk,
+/// n_ssa) — equals the sequential per-lane oracle bit-for-bit.
+#[test]
+fn prop_lane_parallel_scan_matches_sequential_oracle() {
+    let mut rng = Pcg::new(0x5CA11);
+    for case in 0..100 {
+        let l = rng.usize_in(1, 70);
+        let h = rng.usize_in(1, 9);
+        let n = rng.usize_in(1, 7);
+        let chunk = 1usize << rng.usize_in(1, 6);
+        let n_ssa = rng.usize_in(1, 12);
+        let threads = rng.usize_in(1, 9);
+        let total = l * h * n;
+        let p: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+        let q: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+        let shift: Vec<i32> = (0..h).map(|_| rng.usize_in(0, 12) as i32).collect();
+        let want = spe_scan_int_seq(&p, &q, &shift, l, h, n);
+        let ctx = format!("case {case}: l={l} h={h} n={n} chunk={chunk} ssa={n_ssa} t={threads}");
+        assert_eq!(spe_scan_int(&p, &q, &shift, l, h, n), want, "auto {ctx}");
+        assert_eq!(
+            spe_scan_int_threaded(&p, &q, &shift, l, h, n, threads),
+            want,
+            "threaded {ctx}"
+        );
+        let cfg = MambaXConfig { chunk, n_ssa, ..MambaXConfig::default() };
+        assert_eq!(ssa_scan_functional(&cfg, &p, &q, &shift, l, h, n), want, "functional {ctx}");
+        assert_eq!(
+            ssa_scan_chunked_ref(&cfg, &p, &q, &shift, l, h, n),
+            want,
+            "chunked ref {ctx}"
+        );
+    }
+}
+
+/// The auto-threading threshold only trips on large shapes; cover one
+/// explicitly so the scoped-thread path runs under the test suite too.
+#[test]
+fn prop_large_scan_auto_threaded_matches_oracle() {
+    let mut rng = Pcg::new(0xB16);
+    let (l, h, n) = (300usize, 30usize, 16usize); // 144k elements > threshold
+    let total = l * h * n;
+    let p: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+    let q: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
+    let shift: Vec<i32> = (0..h).map(|_| rng.usize_in(0, 12) as i32).collect();
+    let want = spe_scan_int_seq(&p, &q, &shift, l, h, n);
+    assert_eq!(spe_scan_int(&p, &q, &shift, l, h, n), want);
+    for threads in [2usize, 5, 30, 64] {
+        assert_eq!(spe_scan_int_threaded(&p, &q, &shift, l, h, n, threads), want, "t={threads}");
+    }
+}
+
+/// Small-but-real model so the forward-pass cases stay fast in debug
+/// builds (mirrors `rust/tests/serving_props.rs::prop_cfg`).
+fn prop_cfg() -> ForwardConfig {
+    ForwardConfig {
+        model: VimModel {
+            name: "prop",
+            d_model: 16,
+            n_blocks: 2,
+            d_state: 4,
+            expand: 2,
+            conv_k: 4,
+            patch: 4,
+        },
+        img: 8,
+        in_ch: 1,
+        n_classes: 6,
+    }
+}
+
+/// PROPERTY: `forward_batch` is bitwise identical to per-item `forward`
+/// calls — batch composition is invisible — and both equal the pre-PR
+/// scalar reference `forward_ref`, across randomized weights, images,
+/// batch sizes and scan schedules.
+#[test]
+fn prop_forward_batch_matches_per_item_and_reference() {
+    let cfg = prop_cfg();
+    let tables = SfuTables::fitted();
+    let mut rng = Pcg::new(0xF0D);
+    for case in 0..12u64 {
+        let weights = VimWeights::init(&cfg, 50 + case);
+        let scan = MambaXConfig {
+            chunk: 1usize << rng.usize_in(2, 6),
+            n_ssa: rng.usize_in(1, 8),
+            ..MambaXConfig::default()
+        };
+        let b = rng.usize_in(1, 6);
+        let imgs: Vec<Vec<f32>> = (0..b)
+            .map(|i| {
+                let mut r = Pcg::new(case * 100 + i as u64);
+                (0..cfg.input_len()).map(|_| r.f32_in(-1.0, 1.0)).collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let batched = weights.forward_batch(&tables, &scan, &refs);
+        assert_eq!(batched.len(), b, "case {case}");
+        for (i, img) in imgs.iter().enumerate() {
+            let item = weights.forward(&tables, &scan, img);
+            let reference = weights.forward_ref(&tables, &scan, img);
+            assert_eq!(item, reference, "case {case} img {i}: optimized != pre-PR reference");
+            assert_eq!(batched[i], item, "case {case} img {i}: batch composition leaked");
+        }
+    }
+}

@@ -4,8 +4,8 @@
 
 use mamba_x::config::MambaXConfig;
 use mamba_x::coordinator::{BatchPolicy, DynamicBatcher};
-use mamba_x::quant::spe_scan_int;
-use mamba_x::sim::{scan_timing, ssa_scan_functional};
+use mamba_x::quant::spe_scan_int_seq;
+use mamba_x::sim::{scan_timing, ssa_scan_chunked_ref, ssa_scan_functional};
 use mamba_x::sim::memory::Dram;
 use mamba_x::util::Pcg;
 
@@ -25,10 +25,12 @@ fn prop_chunked_scan_schedule_invariant() {
         let p: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
         let q: Vec<i64> = (0..total).map(|_| rng.int8()).collect();
         let shift: Vec<i32> = (0..h).map(|_| rng.usize_in(0, 12) as i32).collect();
-        let want = spe_scan_int(&p, &q, &shift, l, h, n);
+        let want = spe_scan_int_seq(&p, &q, &shift, l, h, n);
         let cfg = MambaXConfig { chunk, n_ssa, ..MambaXConfig::default() };
         let got = ssa_scan_functional(&cfg, &p, &q, &shift, l, h, n);
         assert_eq!(got, want, "case {case}: l={l} h={h} n={n} chunk={chunk} ssa={n_ssa}");
+        let chunked = ssa_scan_chunked_ref(&cfg, &p, &q, &shift, l, h, n);
+        assert_eq!(chunked, want, "case {case}: chunked ref diverged");
     }
 }
 
