@@ -13,7 +13,9 @@
 use mamba_x::config::{GpuConfig, MambaXConfig, VimModel};
 use mamba_x::coordinator::{BatchPolicy, DynamicBatcher};
 use mamba_x::gpu::GpuModel;
-use mamba_x::quant::{spe_scan_int, spe_scan_int_seq, spe_scan_int_threaded};
+use mamba_x::quant::{
+    spe_scan_int, spe_scan_int_batch_fused, spe_scan_int_seq, spe_scan_int_threaded,
+};
 use mamba_x::runtime::native::synthetic_image;
 use mamba_x::sim::memory::Dram;
 use mamba_x::sim::sfu::SfuTables;
@@ -21,7 +23,7 @@ use mamba_x::sim::{scan_timing, ssa_scan_chunked_ref, Accelerator};
 use mamba_x::util::bench::{bench, report, BenchReport};
 use mamba_x::util::Pcg;
 use mamba_x::vision::{
-    matmul, matmul_ref, vim_model_ops, vim_selective_ssm_ops, ForwardConfig, VimWeights,
+    matmul, matmul_ref, vim_model_ops, vim_selective_ssm_ops, ForwardConfig, ScanExec, VimWeights,
 };
 
 /// Checked-in fallback for the SFU tables so the bench never skips.
@@ -73,6 +75,34 @@ fn main() {
         "spe_scan_int_vs_chunked_lane_major",
         "ssa_scan_chunked_ref(512x64x16)",
         "spe_scan_int(512x64x16)",
+    );
+
+    // 2b. Batch fusion at the micro serve shape: 8 items of (65, 128, 8).
+    //     One item sits below the threading threshold, so per-item scans
+    //     (the dynamic-scale seam) run single-threaded; the fused walk —
+    //     what a static calibration table enables — sees all B·H·N lanes
+    //     at once.
+    let (bl, bh, bn, bb) = (65usize, 128usize, 8usize, 8usize);
+    let per = bl * bh * bn;
+    let bshape = format!("{bb}x{bl}x{bh}x{bn}");
+    let pb: Vec<i64> = (0..bb * per).map(|_| rng.int8()).collect();
+    let qb: Vec<i64> = (0..bb * per).map(|_| rng.int8()).collect();
+    let bshift: Vec<i32> = (0..bh).map(|i| (i % 11) as i32).collect();
+    let s = bench(warm, iters, || {
+        (0..bb)
+            .map(|it| {
+                let span = it * per..(it + 1) * per;
+                spe_scan_int(&pb[span.clone()], &qb[span], &bshift, bl, bh, bn)
+            })
+            .collect::<Vec<_>>()
+    });
+    rep.push("spe_scan_per_item_x8(65x128x8)", &bshape, (bb * per) as f64, s);
+    let s = bench(warm, iters, || spe_scan_int_batch_fused(&pb, &qb, &bshift, bb, bl, bh, bn));
+    rep.push("spe_scan_batch_fused_x8(65x128x8)", &bshape, (bb * per) as f64, s);
+    rep.speedup(
+        "scan_batch_fused_vs_per_item",
+        "spe_scan_per_item_x8(65x128x8)",
+        "spe_scan_batch_fused_x8(65x128x8)",
     );
 
     // 3. Register-tiled GEMM vs the naive triple loop, at the batch-8
@@ -172,6 +202,21 @@ fn main() {
         "native_forward_batch8(micro)",
     );
 
+    // 6b. Static calibration: table built (max-abs) from the same 8
+    //     images, then the batched forward with the batch-fused quantized
+    //     scan vs the dynamic per-item-scan batched path above.
+    let calib = weights.calibrate(&sfu, &scan, &img_refs, 1.0).expect("calibration pass");
+    let s = bench(warm_big, iters_big, || {
+        let mut exec = ScanExec::Static(&calib);
+        weights.forward_batch_ex(&sfu, &scan, &img_refs, &mut exec)
+    });
+    rep.push("native_forward_batch8_calib(micro)", "batch=8", 8.0, s);
+    let calib_speedup = rep.speedup(
+        "forward_batch8_calib_vs_dynamic",
+        "native_forward_batch8(micro)",
+        "native_forward_batch8_calib(micro)",
+    );
+
     // 7. Device models end-to-end (timing models, unchanged).
     let gpu = GpuModel::new(GpuConfig::xavier());
     let ops = vim_model_ops(&VimModel::base(), 1024);
@@ -189,4 +234,8 @@ fn main() {
             "targets: scan {scan_s:.2}x (goal >= 2x), forward batch8 {fwd_s:.2}x (goal >= 1.5x)"
         );
     }
+    if let Some(c) = calib_speedup {
+        println!("calibrated batch8 forward vs dynamic: {c:.2}x (static scales, fused scan)");
+    }
+    println!("gate these records in CI with: mamba-x perfcheck (vs BENCH_baseline.json)");
 }

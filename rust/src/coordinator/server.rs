@@ -9,6 +9,10 @@
 //! Backends are constructed *on the worker thread* via the factory passed
 //! to [`Server::spawn`] / [`Server::spawn_pool`]: PJRT handles are not
 //! `Send`, and per-worker ownership means no locking on the hot path.
+//! Backend-wide configuration rides the factory the same way — e.g.
+//! `serve --calib` clones one `Arc<CalibTable>` into every worker's
+//! native backend so each released batch runs the batch-fused quantized
+//! scan; the queue, batcher and handles stay calibration-agnostic.
 //!
 //! Invariants the property tests (`rust/tests/pool_props.rs`,
 //! `rust/tests/serving_props.rs`) enforce:

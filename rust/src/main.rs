@@ -22,16 +22,38 @@ COMMANDS:
   sim      [--model tiny] [--img 224] [--ssas 8]
                                   simulate one inference vs the edge GPU
   figures  --fig N                print a paper figure (1, 4, 7, 8, 17, 18)
+  calibrate [--samples 64] [--seed 7] [--percentile 1.0]
+            [--out artifacts/calib_micro.json]
+                                  offline static scan calibration: run
+                                  the dynamic-scale forward over
+                                  synthetic samples, aggregate each scan
+                                  site's per-channel ranges (max-abs,
+                                  optional percentile clipping) and
+                                  write a versioned CalibTable artifact
+                                  for `serve --calib`. Use the same
+                                  --seed you will serve with.
   serve    [--backend native|pjrt] [--workers 4] [--requests 64]
            [--max-batch 8] [--queue-depth 1024] [--seed 7]
-           [--artifacts artifacts]
+           [--calib table.json] [--artifacts artifacts]
                                   serve inference E2E through the
                                   coordinator pool. `native` (default)
                                   is hermetic: the pure-rust quantized
                                   Vim executor, no artifacts needed.
-                                  `pjrt` loads AOT artifacts (requires
-                                  the `pjrt` cargo feature + a real xla
-                                  crate; workers forced to 1)
+                                  `--calib` loads a static calibration
+                                  table so the INT8 scan runs batch-fused
+                                  across items (omit it for dynamic
+                                  per-item scales). `pjrt` loads AOT
+                                  artifacts (requires the `pjrt` cargo
+                                  feature + a real xla crate; single
+                                  worker, and native-only flags like
+                                  --workers/--seed/--calib are rejected)
+  perfcheck [--current BENCH_hotpath.json] [--baseline BENCH_baseline.json]
+            [--tolerance 0.5]     CI perf-regression gate: compare the
+                                  bench record's speedup pairs against
+                                  the committed baseline; exits nonzero
+                                  on regression beyond the tolerance band
+
+Unknown flags for a subcommand are rejected, not silently ignored.
 ";
 
 /// Minimal `--key value` flag parser.
@@ -66,8 +88,34 @@ impl Flags {
         }
     }
 
+    fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
     fn string(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Reject flags the subcommand does not know (a typo'd flag silently
+    /// falling through to its default is worse than an error).
+    fn expect_keys(&self, cmd: &str, allowed: &[&str]) -> Result<()> {
+        for (k, _) in &self.pairs {
+            if !allowed.contains(&k.as_str()) {
+                let valid = if allowed.is_empty() {
+                    "it takes no flags".to_string()
+                } else {
+                    format!(
+                        "valid flags: {}",
+                        allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(" ")
+                    )
+                };
+                bail!("unknown flag --{k} for {cmd:?}; {valid}\n\n{USAGE}");
+            }
+        }
+        Ok(())
     }
 }
 
@@ -79,17 +127,134 @@ fn main() -> Result<()> {
     };
     let flags = Flags::parse(&args[1..])?;
     match cmd.as_str() {
-        "config" => cmd_config(),
-        "area" => cmd_area(flags.usize("ssas", 8)?),
-        "sim" => cmd_sim(
-            &flags.string("model", "tiny"),
-            flags.usize("img", 224)?,
-            flags.usize("ssas", 8)?,
-        ),
-        "figures" => cmd_figures(flags.usize("fig", 0)? as u32),
-        "serve" => cmd_serve(&flags),
+        "config" => {
+            flags.expect_keys("config", &[])?;
+            cmd_config()
+        }
+        "area" => {
+            flags.expect_keys("area", &["ssas"])?;
+            cmd_area(flags.usize("ssas", 8)?)
+        }
+        "sim" => {
+            flags.expect_keys("sim", &["model", "img", "ssas"])?;
+            cmd_sim(
+                &flags.string("model", "tiny"),
+                flags.usize("img", 224)?,
+                flags.usize("ssas", 8)?,
+            )
+        }
+        "figures" => {
+            flags.expect_keys("figures", &["fig"])?;
+            cmd_figures(flags.usize("fig", 0)? as u32)
+        }
+        "calibrate" => {
+            flags.expect_keys("calibrate", &["samples", "seed", "percentile", "out"])?;
+            cmd_calibrate(&flags)
+        }
+        "serve" => {
+            flags.expect_keys(
+                "serve",
+                &[
+                    "backend",
+                    "workers",
+                    "requests",
+                    "max-batch",
+                    "queue-depth",
+                    "seed",
+                    "calib",
+                    "artifacts",
+                ],
+            )?;
+            cmd_serve(&flags)
+        }
+        "perfcheck" => {
+            flags.expect_keys("perfcheck", &["current", "baseline", "tolerance"])?;
+            cmd_perfcheck(&flags)
+        }
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
     }
+}
+
+/// Offline static scan calibration over the synthetic serve stream:
+/// aggregates per-site channel ranges with the recording forward pass and
+/// writes the versioned CalibTable artifact `serve --calib` loads.
+fn cmd_calibrate(flags: &Flags) -> Result<()> {
+    use mamba_x::runtime::native::synthetic_image;
+    use mamba_x::sim::sfu::SfuTables;
+    use mamba_x::vision::{ForwardConfig, VimWeights};
+
+    let samples = flags.usize("samples", 64)?.max(1);
+    let seed = flags.usize("seed", 7)? as u64;
+    let percentile = flags.f64("percentile", 1.0)? as f32;
+    let out = flags.string("out", "artifacts/calib_micro.json");
+
+    let cfg = ForwardConfig::micro();
+    let weights = VimWeights::init(&cfg, seed);
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    println!(
+        "calibrating {} ({} blocks, E={}): {} samples, percentile {percentile}",
+        cfg.model.name,
+        cfg.model.n_blocks,
+        cfg.model.d_inner(),
+        samples
+    );
+    let imgs: Vec<Vec<f32>> =
+        (0..samples).map(|id| synthetic_image(seed, id as u64, cfg.input_len())).collect();
+    let t0 = std::time::Instant::now();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let table = weights.calibrate(&tables, &scan, &refs, percentile)?;
+    println!(
+        "calibrated {} scan sites in {:.2}s",
+        table.sites.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    table.save(&out)?;
+    println!("wrote calibration table to {out} (format v{})", table.version);
+    println!("serve with it: mamba-x serve --backend native --seed {seed} --calib {out}");
+    Ok(())
+}
+
+/// CI perf-regression gate over the bench record's speedup pairs.
+fn cmd_perfcheck(flags: &Flags) -> Result<()> {
+    use mamba_x::util::bench::check_speedups;
+    use mamba_x::util::Json;
+
+    let current_path = flags.string("current", "BENCH_hotpath.json");
+    let baseline_path = flags.string("baseline", "BENCH_baseline.json");
+    let tolerance = match flags.get("tolerance") {
+        Some(v) => Some(v.parse::<f64>()?),
+        None => None,
+    };
+    let current = Json::load(&current_path)?;
+    let baseline = Json::load(&baseline_path)?;
+    let gate = check_speedups(&current, &baseline, tolerance)?;
+    println!(
+        "perf gate: {current_path} vs {baseline_path} (tolerance {:.0}%)",
+        gate.tolerance * 100.0
+    );
+    for c in &gate.checks {
+        let verdict = if c.pass { "ok  " } else { "FAIL" };
+        match c.current {
+            Some(v) => println!(
+                "  {verdict} {:<40} current {v:>6.2}x  floor {:>6.2}x  (baseline {:.2}x)",
+                c.name, c.floor, c.baseline
+            ),
+            None => println!(
+                "  {verdict} {:<40} missing from {current_path} (baseline {:.2}x)",
+                c.name, c.baseline
+            ),
+        }
+    }
+    if !gate.passed() {
+        bail!(
+            "perf regression: {}/{} speedup records below the tolerance band",
+            gate.failed_count(),
+            gate.checks.len()
+        );
+    }
+    println!("perf gate passed ({} records)", gate.checks.len());
+    Ok(())
 }
 
 fn cmd_config() -> Result<()> {
@@ -392,24 +557,45 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     let max_batch = flags.usize("max-batch", 8)?;
     let queue_depth = flags.usize("queue-depth", 1024)?;
     let seed = flags.usize("seed", 7)? as u64;
+    let calib = flags.get("calib").map(str::to_string);
     match backend.as_str() {
-        "native" => serve_native(workers, requests, max_batch, queue_depth, seed),
-        "pjrt" => serve_pjrt(&flags.string("artifacts", "artifacts"), requests, max_batch),
-        other => bail!("unknown backend {other:?}; available: native pjrt"),
+        "native" => {
+            if flags.get("artifacts").is_some() {
+                bail!("--artifacts applies to the pjrt backend only");
+            }
+            serve_native(workers, requests, max_batch, queue_depth, seed, calib)
+        }
+        "pjrt" => {
+            // Flags the pjrt path cannot honor are errors, not silently
+            // dropped defaults (pjrt runs 1 worker over AOT artifacts).
+            for k in ["workers", "queue-depth", "seed", "calib"] {
+                if flags.get(k).is_some() {
+                    bail!("--{k} applies to the native backend only");
+                }
+            }
+            serve_pjrt(&flags.string("artifacts", "artifacts"), requests, max_batch)
+        }
+        other => bail!("unknown --backend {other:?}; valid backends: native, pjrt"),
     }
 }
 
 /// Hermetic serving demo: N pool workers, each owning a native quantized
 /// Vim executor built from the same seed, fed by 4 synthetic camera
-/// streams. Spot-checks serving-vs-direct invariance at the end.
+/// streams. An optional static calibration table (from `mamba-x
+/// calibrate`) is cloned into every worker so the quantized scan runs
+/// batch-fused. Spot-checks serving-vs-direct invariance at the end.
 fn serve_native(
     workers: usize,
     requests: usize,
     max_batch: usize,
     queue_depth: usize,
     seed: u64,
+    calib: Option<String>,
 ) -> Result<()> {
+    use std::sync::Arc;
+
     use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
+    use mamba_x::quant::CalibTable;
     use mamba_x::runtime::{native::synthetic_image, InferenceBackend, NativeBackend, Tensor};
     use mamba_x::vision::ForwardConfig;
 
@@ -418,11 +604,32 @@ fn serve_native(
         "serving {} ({} blocks, d={}) natively: {} workers, max_batch {}, queue depth {}",
         cfg.model.name, cfg.model.n_blocks, cfg.model.d_model, workers, max_batch, queue_depth
     );
+    let calib_table = match calib {
+        Some(path) => {
+            let t = CalibTable::load(&path)?;
+            t.validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())?;
+            println!(
+                "calibration table {path}: {} sites, {} samples, percentile {} — \
+                 quantized scan runs batch-fused (static scales)",
+                t.sites.len(),
+                t.samples,
+                t.percentile
+            );
+            Some(Arc::new(t))
+        }
+        None => None,
+    };
     let server =
         Server::new(BatchPolicy { max_batch, max_wait_us: 2000 }).queue_depth(queue_depth);
     let model_cfg = cfg.clone();
-    let (handle, join) =
-        server.spawn_pool(workers, move |_w| Ok(NativeBackend::new(&model_cfg, seed)));
+    let worker_calib = calib_table.clone();
+    let (handle, join) = server.spawn_pool(workers, move |_w| {
+        let backend = NativeBackend::new(&model_cfg, seed);
+        match &worker_calib {
+            Some(t) => backend.with_calib(Arc::clone(t)),
+            None => Ok(backend),
+        }
+    });
 
     let shape = cfg.input_shape();
     let n_elems = cfg.input_len();
@@ -458,8 +665,12 @@ fn serve_native(
     println!("{}", metrics.summary());
 
     // Serving-vs-direct invariance spot check (the full property lives in
-    // rust/tests/serving_props.rs): pool routing must be invisible.
+    // rust/tests/serving_props.rs, the calibrated variant in
+    // rust/tests/calib_props.rs): pool routing must be invisible.
     let mut direct = NativeBackend::new(&cfg, seed);
+    if let Some(t) = &calib_table {
+        direct = direct.with_calib(Arc::clone(t))?;
+    }
     let checks = responses.len().min(8);
     for resp in responses.iter().take(checks) {
         let img = Tensor::new(shape.clone(), synthetic_image(seed, resp.id, n_elems))?;

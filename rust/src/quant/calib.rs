@@ -1,0 +1,381 @@
+//! Static scan calibration (paper §4.4; eMamba's offline-PTQ recipe).
+//!
+//! The dynamic path ([`super::quantize_scan_inputs`]) re-derives the
+//! per-channel scan scales from every tensor it quantizes, which forces
+//! the INT8 scan back to per-item execution inside an otherwise batched
+//! forward pass: each item owns its own scales, so items cannot share one
+//! lane walk. This module calibrates those scales *offline* instead:
+//!
+//! 1. [`CalibBuilder`] rides a recording forward pass
+//!    ([`crate::vision::ScanExec::Record`]) and collects, per scan site
+//!    (one per encoder block and direction), every calibration item's
+//!    per-channel |dA| / |dBu| maxima.
+//! 2. [`CalibBuilder::finalize`] aggregates the per-item maxima into one
+//!    static range per channel — the max over items at `percentile = 1.0`,
+//!    or a percentile-clipped range below it (outliers then saturate in
+//!    the INT8 quantizer instead of inflating every scale).
+//! 3. The derived scales (pow2-rounded s_dA as a shift, plus s_Q) are
+//!    exactly the dynamic path's arithmetic applied to the aggregated
+//!    ranges, so a table built from a single item reproduces that item's
+//!    dynamic quantization bit-for-bit.
+//!
+//! [`CalibTable`] serializes to a small versioned JSON artifact
+//! (`mamba-x calibrate` writes it, `serve --calib` loads it). Float
+//! ranges are stored as IEEE-754 bit patterns so the round-trip is exact
+//! by construction — `rust/tests/calib_props.rs` pins it, and the loader
+//! re-derives every scale from the stored ranges and rejects tables whose
+//! recorded shifts disagree (corruption / version-drift guard).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+use super::scan_quant::derive_scan_scales;
+
+/// Artifact format tag (the `"format"` field of the JSON).
+pub const CALIB_FORMAT: &str = "mamba-x-calib";
+
+/// Current artifact format version; loaders reject anything else.
+pub const CALIB_VERSION: u32 = 1;
+
+/// Static per-channel scan scales of one scan site (one encoder block
+/// direction). Channel count is the model's inner dimension E.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteScales {
+    /// Encoder block index.
+    pub block: usize,
+    /// Direction within the block: 0 = forward, 1 = backward.
+    pub dir: usize,
+    /// Aggregated per-channel |dA| range the scales derive from.
+    pub da_max: Vec<f32>,
+    /// Aggregated per-channel |dBu| range.
+    pub dbu_max: Vec<f32>,
+    /// Per-channel SPE rescale shifts (pow2-approximated s_dA).
+    pub shift: Vec<i32>,
+    /// Per-channel pow2-rounded effective dA scales.
+    pub sa_eff: Vec<f32>,
+    /// Per-channel dBu scales (s_Q); also the state dequantization scale.
+    pub sq: Vec<f32>,
+}
+
+impl SiteScales {
+    /// Derive the static scales from aggregated channel ranges — the
+    /// exact arithmetic of the dynamic quantizer
+    /// ([`derive_scan_scales`]) applied to `da_max` / `dbu_max`.
+    pub fn from_ranges(block: usize, dir: usize, da_max: Vec<f32>, dbu_max: Vec<f32>) -> Self {
+        let (sa_eff, scales) = derive_scan_scales(&da_max, &dbu_max);
+        SiteScales { block, dir, da_max, dbu_max, shift: scales.shift, sa_eff, sq: scales.sq }
+    }
+
+    fn dir_name(&self) -> &'static str {
+        if self.dir == 0 {
+            "fwd"
+        } else {
+            "bwd"
+        }
+    }
+}
+
+/// A complete static calibration table: one [`SiteScales`] per scan site,
+/// ordered `(block 0 fwd, block 0 bwd, block 1 fwd, ...)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibTable {
+    /// Artifact format version ([`CALIB_VERSION`]).
+    pub version: u32,
+    /// Model name the table was calibrated for.
+    pub model: String,
+    /// Number of calibration items the ranges aggregate.
+    pub samples: usize,
+    /// Range percentile over per-item maxima (1.0 = plain max-abs).
+    pub percentile: f32,
+    pub sites: Vec<SiteScales>,
+}
+
+impl CalibTable {
+    /// The scales of flat site index `idx` (`2 * block + dir`).
+    pub fn site(&self, idx: usize) -> &SiteScales {
+        &self.sites[idx]
+    }
+
+    /// Check the table fits a model: name, site count (2 per encoder
+    /// block), and channel count (inner dimension E) must all match.
+    pub fn validate(&self, model: &str, n_blocks: usize, channels: usize) -> Result<()> {
+        if self.model != model {
+            bail!("calibration table is for model {:?}, backend runs {model:?}", self.model);
+        }
+        if self.sites.len() != 2 * n_blocks {
+            bail!(
+                "calibration table has {} scan sites; model {model:?} has {} (2 per block)",
+                self.sites.len(),
+                2 * n_blocks
+            );
+        }
+        for s in &self.sites {
+            if s.sq.len() != channels {
+                bail!(
+                    "site (block {}, {}) calibrates {} channels; model {model:?} has {channels}",
+                    s.block,
+                    s.dir_name(),
+                    s.sq.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let sites = self
+            .sites
+            .iter()
+            .map(|s| {
+                Json::obj_from(vec![
+                    ("block", Json::Num(s.block as f64)),
+                    ("dir", Json::Str(s.dir_name().to_string())),
+                    ("shift", Json::Arr(s.shift.iter().map(|&v| Json::Num(v as f64)).collect())),
+                    ("da_max_bits", bits_arr(&s.da_max)),
+                    ("dbu_max_bits", bits_arr(&s.dbu_max)),
+                ])
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("format", Json::Str(CALIB_FORMAT.to_string())),
+            ("version", Json::Num(self.version as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("percentile", Json::Num(self.percentile as f64)),
+            ("sites", Json::Arr(sites)),
+        ])
+    }
+
+    /// Parse a table, re-deriving every scale from the stored bit-exact
+    /// ranges. Rejects unknown formats/versions, out-of-order sites, and
+    /// tables whose recorded shifts disagree with the re-derivation.
+    pub fn from_json(j: &Json) -> Result<CalibTable> {
+        let format = j.get("format")?.str()?;
+        if format != CALIB_FORMAT {
+            bail!("not a calibration table (format {format:?}, expected {CALIB_FORMAT:?})");
+        }
+        let version = j.get("version")?.num()? as u32;
+        if version != CALIB_VERSION {
+            bail!(
+                "unsupported calibration table version {version} (this build reads \
+                 v{CALIB_VERSION}; re-run `mamba-x calibrate`)"
+            );
+        }
+        let model = j.get("model")?.str()?.to_string();
+        let samples = j.get("samples")?.usize()?;
+        let percentile = j.get("percentile")?.num()? as f32;
+        let mut sites = Vec::new();
+        for (idx, sj) in j.get("sites")?.arr()?.iter().enumerate() {
+            let block = sj.get("block")?.usize()?;
+            let dir = match sj.get("dir")?.str()? {
+                "fwd" => 0usize,
+                "bwd" => 1usize,
+                other => bail!("site {idx}: bad dir {other:?} (expected \"fwd\" or \"bwd\")"),
+            };
+            if idx != 2 * block + dir {
+                bail!("site {idx} out of order (block {block}, dir {dir})");
+            }
+            let shift: Vec<i32> = sj
+                .get("shift")?
+                .arr()?
+                .iter()
+                .map(|v| Ok(v.num()? as i32))
+                .collect::<Result<_>>()?;
+            let da_max = bits_vec(sj.get("da_max_bits")?)?;
+            let dbu_max = bits_vec(sj.get("dbu_max_bits")?)?;
+            if da_max.len() != shift.len() || dbu_max.len() != shift.len() {
+                bail!("site {idx}: channel counts disagree");
+            }
+            let derived = SiteScales::from_ranges(block, dir, da_max, dbu_max);
+            if derived.shift != shift {
+                bail!("site {idx}: stored shifts disagree with the ranges (corrupt table?)");
+            }
+            sites.push(derived);
+        }
+        Ok(CalibTable { version, model, samples, percentile, sites })
+    }
+
+    /// Write the artifact (creating parent directories as needed).
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating {}", parent.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<CalibTable> {
+        let path = path.as_ref();
+        let j = Json::load(path)?;
+        Self::from_json(&j).with_context(|| format!("loading calibration table {}", path.display()))
+    }
+}
+
+fn bits_arr(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x.to_bits() as f64)).collect())
+}
+
+fn bits_vec(j: &Json) -> Result<Vec<f32>> {
+    j.arr()?.iter().map(|v| Ok(f32::from_bits(v.num()? as u32))).collect()
+}
+
+/// Accumulates per-item channel ranges during a recording forward pass
+/// (one `record` call per scan site per calibration item).
+#[derive(Debug)]
+pub struct CalibBuilder {
+    channels: usize,
+    /// Per site: per-item vectors of per-channel maxima.
+    da: Vec<Vec<Vec<f32>>>,
+    dbu: Vec<Vec<Vec<f32>>>,
+}
+
+impl CalibBuilder {
+    pub fn new(n_sites: usize, channels: usize) -> Self {
+        CalibBuilder { channels, da: vec![Vec::new(); n_sites], dbu: vec![Vec::new(); n_sites] }
+    }
+
+    /// Record one calibration item's per-channel |dA| / |dBu| maxima for
+    /// flat site index `site`.
+    pub fn record(&mut self, site: usize, da_max: Vec<f32>, dbu_max: Vec<f32>) {
+        assert!(site < self.da.len(), "site {site} out of range ({} sites)", self.da.len());
+        assert_eq!(da_max.len(), self.channels, "da channel count");
+        assert_eq!(dbu_max.len(), self.channels, "dbu channel count");
+        self.da[site].push(da_max);
+        self.dbu[site].push(dbu_max);
+    }
+
+    /// Aggregate the recorded ranges into a static [`CalibTable`].
+    ///
+    /// `percentile` selects, per channel, the value at that quantile of
+    /// the per-item maxima (ascending): 1.0 is the plain max over items;
+    /// smaller values clip range outliers (they then saturate in the
+    /// quantizer instead of inflating the channel's scale).
+    pub fn finalize(&self, model: &str, percentile: f32) -> Result<CalibTable> {
+        if !(percentile > 0.0 && percentile <= 1.0) {
+            bail!("percentile must be in (0, 1], got {percentile}");
+        }
+        let samples = self.da.first().map_or(0, Vec::len);
+        if samples == 0 {
+            bail!("no calibration samples recorded");
+        }
+        let mut sites = Vec::with_capacity(self.da.len());
+        for (idx, (da, dbu)) in self.da.iter().zip(&self.dbu).enumerate() {
+            if da.len() != samples || dbu.len() != samples {
+                bail!("site {idx} recorded {} samples, expected {samples}", da.len());
+            }
+            let da_max = aggregate(da, self.channels, percentile);
+            let dbu_max = aggregate(dbu, self.channels, percentile);
+            sites.push(SiteScales::from_ranges(idx / 2, idx % 2, da_max, dbu_max));
+        }
+        Ok(CalibTable {
+            version: CALIB_VERSION,
+            model: model.to_string(),
+            samples,
+            percentile,
+            sites,
+        })
+    }
+}
+
+/// Per-channel percentile over per-item maxima: sort each channel's item
+/// values ascending and take the `ceil(p * count)`-th (1-based).
+fn aggregate(per_item: &[Vec<f32>], channels: usize, p: f32) -> Vec<f32> {
+    let mut out = Vec::with_capacity(channels);
+    let mut vals = Vec::with_capacity(per_item.len());
+    for ch in 0..channels {
+        vals.clear();
+        vals.extend(per_item.iter().map(|item| item[ch]));
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("finite calibration ranges"));
+        let k = ((p as f64) * vals.len() as f64).ceil() as usize;
+        out.push(vals[k.clamp(1, vals.len()) - 1]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_site_builder() -> CalibBuilder {
+        let mut b = CalibBuilder::new(2, 2);
+        for (da0, dbu0) in [(0.1f32, 1.0f32), (0.4, 1.0), (0.2, 1.0), (0.3, 100.0)] {
+            b.record(0, vec![da0, 0.5], vec![dbu0, 0.25]);
+            b.record(1, vec![2.0 * da0, 0.5], vec![dbu0, 0.25]);
+        }
+        b
+    }
+
+    #[test]
+    fn percentile_selects_expected_ranges() {
+        let b = two_site_builder();
+        // p = 1.0: plain max over items.
+        let t = b.finalize("unit", 1.0).unwrap();
+        assert_eq!(t.site(0).da_max, vec![0.4, 0.5]);
+        assert_eq!(t.site(0).dbu_max, vec![100.0, 0.25]);
+        assert_eq!(t.site(1).da_max, vec![0.8, 0.5]);
+        // p = 0.75 over 4 items: ceil(3) -> 3rd of the ascending sort,
+        // clipping the 100.0 outlier down to 1.0.
+        let t = b.finalize("unit", 0.75).unwrap();
+        assert_eq!(t.site(0).da_max, vec![0.3, 0.5]);
+        assert_eq!(t.site(0).dbu_max, vec![1.0, 0.25]);
+        // Site indices map to (block, dir).
+        assert_eq!((t.site(0).block, t.site(0).dir), (0, 0));
+        assert_eq!((t.site(1).block, t.site(1).dir), (0, 1));
+    }
+
+    #[test]
+    fn scales_match_dynamic_derivation() {
+        use crate::quant::{pow2_round, pow2_shift, scale_for};
+        let t = two_site_builder().finalize("unit", 1.0).unwrap();
+        let s = t.site(0);
+        for ch in 0..2 {
+            assert_eq!(s.sa_eff[ch], pow2_round(scale_for(s.da_max[ch], 8)));
+            assert_eq!(s.shift[ch], pow2_shift(scale_for(s.da_max[ch], 8)));
+            assert_eq!(s.sq[ch], scale_for(s.dbu_max[ch], 8));
+        }
+    }
+
+    #[test]
+    fn finalize_rejects_bad_inputs() {
+        assert!(CalibBuilder::new(2, 2).finalize("unit", 1.0).is_err()); // no samples
+        let b = two_site_builder();
+        assert!(b.finalize("unit", 0.0).is_err());
+        assert!(b.finalize("unit", 1.5).is_err());
+        // Inconsistent per-site sample counts.
+        let mut b = CalibBuilder::new(2, 1);
+        b.record(0, vec![1.0], vec![1.0]);
+        assert!(b.finalize("unit", 1.0).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let t = two_site_builder().finalize("unit", 0.75).unwrap();
+        let j = Json::parse(&t.to_json().dump()).unwrap();
+        assert_eq!(CalibTable::from_json(&j).unwrap(), t);
+    }
+
+    #[test]
+    fn loader_rejects_foreign_and_future_artifacts() {
+        let t = two_site_builder().finalize("unit", 1.0).unwrap();
+        let good = t.to_json().dump();
+        let future = good.replace("\"version\":1", "\"version\":99");
+        let e = CalibTable::from_json(&Json::parse(&future).unwrap()).unwrap_err();
+        assert!(e.to_string().contains("version 99"), "{e}");
+        let foreign = good.replace(CALIB_FORMAT, "something-else");
+        assert!(CalibTable::from_json(&Json::parse(&foreign).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_checks_model_geometry() {
+        let t = two_site_builder().finalize("unit", 1.0).unwrap();
+        assert!(t.validate("unit", 1, 2).is_ok());
+        assert!(t.validate("other", 1, 2).is_err());
+        assert!(t.validate("unit", 2, 2).is_err());
+        assert!(t.validate("unit", 1, 3).is_err());
+    }
+}

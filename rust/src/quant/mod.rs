@@ -8,15 +8,23 @@
 //!
 //! [`scan_quant`] layers channel-granularity (de)quantization of the scan
 //! streams on top, which is what the native inference backend
-//! ([`crate::runtime::NativeBackend`]) feeds the integer scan with.
+//! ([`crate::runtime::NativeBackend`]) feeds the integer scan with —
+//! dynamically (scales re-derived per invocation) or statically via an
+//! offline-calibrated [`CalibTable`] ([`calib`]), which additionally lets
+//! the scan fuse across batch items ([`spe_scan_int_batch_fused`]).
 
+mod calib;
 mod fixed;
 mod scan_quant;
 mod spe;
 
+pub use calib::{CalibBuilder, CalibTable, SiteScales, CALIB_FORMAT, CALIB_VERSION};
 pub use fixed::{pow2_round, pow2_shift, quantize, round_half_away, scale_for, QMAX};
-pub use scan_quant::{dequantize_states, quantize_scan_inputs, ScanScales};
+pub use scan_quant::{
+    channel_abs_max, dequantize_states, derive_scan_scales, quantize_scan_inputs,
+    quantize_scan_inputs_static, ScanScales,
+};
 pub use spe::{
-    rshift_round, spe_scan_int, spe_scan_int_seq, spe_scan_int_threaded, SpeDatapath, FRAC_BITS,
-    STATE_SAT,
+    rshift_round, spe_scan_int, spe_scan_int_batch_fused, spe_scan_int_seq,
+    spe_scan_int_threaded, SpeDatapath, FRAC_BITS, STATE_SAT,
 };

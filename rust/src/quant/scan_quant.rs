@@ -21,6 +21,37 @@ pub struct ScanScales {
     pub sq: Vec<f32>,
 }
 
+/// Per-H-channel abs-max of an (L, H, N) row-major stream — the channel
+/// range statistic (compile.quant.Calibration's convention for the `.dA`
+/// / `.dBu` taps) shared by the dynamic quantizer and the offline
+/// calibration recorder ([`super::CalibBuilder`]).
+pub fn channel_abs_max(x: &[f32], l: usize, h: usize, n: usize) -> Vec<f32> {
+    assert_eq!(x.len(), l * h * n, "stream length");
+    let mut m = vec![0f32; h];
+    for step in 0..l {
+        for ch in 0..h {
+            let base = (step * h + ch) * n;
+            for i in base..base + n {
+                m[ch] = m[ch].max(x[i].abs());
+            }
+        }
+    }
+    m
+}
+
+/// Derive the per-channel scan scales from channel ranges: the
+/// pow2-rounded effective dA scale (what P quantizes against), its SPE
+/// shift, and s_Q. The single source of that arithmetic — shared by the
+/// dynamic quantizer, the calibration recorder, and static
+/// [`super::CalibTable`] construction, so all three agree to the bit.
+pub fn derive_scan_scales(da_max: &[f32], dbu_max: &[f32]) -> (Vec<f32>, ScanScales) {
+    assert_eq!(da_max.len(), dbu_max.len(), "channel counts");
+    let sa_eff: Vec<f32> = da_max.iter().map(|&m| pow2_round(scale_for(m, 8))).collect();
+    let shift: Vec<i32> = da_max.iter().map(|&m| pow2_shift(scale_for(m, 8))).collect();
+    let sq: Vec<f32> = dbu_max.iter().map(|&m| scale_for(m, 8)).collect();
+    (sa_eff, ScanScales { shift, sq })
+}
+
 /// Quantize (L, H, N) row-major `da` / `dbu` streams to the SPE's INT8
 /// (P, Q) inputs with per-H channel scales (dA scales pow2-rounded so the
 /// SPE rescale is a shift).
@@ -34,34 +65,46 @@ pub fn quantize_scan_inputs(
     let total = l * h * n;
     assert_eq!(da.len(), total, "da length");
     assert_eq!(dbu.len(), total, "dbu length");
-    // Channel (H-axis) abs-max over (L, N) — compile.quant.Calibration's
-    // convention for `.dA` / `.dBu` taps.
-    let mut da_max = vec![0f32; h];
-    let mut dbu_max = vec![0f32; h];
-    for step in 0..l {
-        for ch in 0..h {
-            let base = (step * h + ch) * n;
-            for i in base..base + n {
-                da_max[ch] = da_max[ch].max(da[i].abs());
-                dbu_max[ch] = dbu_max[ch].max(dbu[i].abs());
-            }
-        }
-    }
-    let sa_eff: Vec<f32> = da_max.iter().map(|&m| pow2_round(scale_for(m, 8))).collect();
-    let shift: Vec<i32> = da_max.iter().map(|&m| pow2_shift(scale_for(m, 8))).collect();
-    let sq: Vec<f32> = dbu_max.iter().map(|&m| scale_for(m, 8)).collect();
+    let da_max = channel_abs_max(da, l, h, n);
+    let dbu_max = channel_abs_max(dbu, l, h, n);
+    let (sa_eff, scales) = derive_scan_scales(&da_max, &dbu_max);
+    let (p, q) = quantize_scan_inputs_static(da, dbu, l, h, n, &sa_eff, &scales.sq);
+    (p, q, scales)
+}
+
+/// Quantize (rows, H, N) row-major `da` / `dbu` streams with *fixed*
+/// per-H scales — no per-invocation range pass, so a whole (B·L)-row
+/// batch quantizes in one walk when a static [`super::CalibTable`] is
+/// loaded. Values beyond the calibrated range saturate at ±QMAX (the
+/// intended clipping of percentile-calibrated tables). With `sa_eff` /
+/// `sq` derived from this very invocation's ranges, the output is
+/// bit-identical to [`quantize_scan_inputs`].
+pub fn quantize_scan_inputs_static(
+    da: &[f32],
+    dbu: &[f32],
+    rows: usize,
+    h: usize,
+    n: usize,
+    sa_eff: &[f32],
+    sq: &[f32],
+) -> (Vec<i64>, Vec<i64>) {
+    let total = rows * h * n;
+    assert_eq!(da.len(), total, "da length");
+    assert_eq!(dbu.len(), total, "dbu length");
+    assert_eq!(sa_eff.len(), h, "sa_eff length");
+    assert_eq!(sq.len(), h, "sq length");
     let mut p = vec![0i64; total];
     let mut q = vec![0i64; total];
-    for step in 0..l {
+    for row in 0..rows {
         for ch in 0..h {
-            let base = (step * h + ch) * n;
+            let base = (row * h + ch) * n;
             for i in base..base + n {
                 p[i] = quantize(da[i], sa_eff[ch]) as i64;
                 q[i] = quantize(dbu[i], sq[ch]) as i64;
             }
         }
     }
-    (p, q, ScanScales { shift, sq })
+    (p, q)
 }
 
 /// Dequantize integer scan states back to f32: `state * s_Q / 2^FRAC_BITS`
@@ -120,6 +163,27 @@ mod tests {
             }
         }
         assert!(max_err / max_mag < 0.1, "rel err {}", max_err / max_mag);
+    }
+
+    #[test]
+    fn static_quantization_with_own_ranges_matches_dynamic() {
+        let (l, h, n) = (9usize, 4usize, 3usize);
+        let total = l * h * n;
+        let da: Vec<f32> = (0..total).map(|i| 0.9 * ((i * 31 % 89) as f32 / 89.0)).collect();
+        let dbu: Vec<f32> = (0..total).map(|i| ((i * 17 % 53) as f32 / 53.0) - 0.4).collect();
+        let (p, q, scales) = quantize_scan_inputs(&da, &dbu, l, h, n);
+        let da_max = channel_abs_max(&da, l, h, n);
+        let sa_eff: Vec<f32> =
+            da_max.iter().map(|&m| super::super::fixed::pow2_round(scale_for(m, 8))).collect();
+        let (ps, qs) = quantize_scan_inputs_static(&da, &dbu, l, h, n, &sa_eff, &scales.sq);
+        assert_eq!(ps, p);
+        assert_eq!(qs, q);
+        // Out-of-range values saturate instead of rescaling.
+        let hot = vec![1e6f32; 3];
+        let (pc, qc) =
+            quantize_scan_inputs_static(&hot, &hot, 1, 3, 1, &sa_eff[..3], &scales.sq[..3]);
+        assert!(pc.iter().all(|&v| v == 127));
+        assert!(qc.iter().all(|&v| v == 127));
     }
 
     #[test]

@@ -173,6 +173,62 @@ pub fn spe_scan_int_threaded(
     out
 }
 
+/// Batch-fused scan: `b` independent (L, H, N) streams stacked item-major,
+/// executed as ONE L-major threaded walk over B·H·N lanes.
+///
+/// A static calibration table gives every item the same per-H `shift`, so
+/// the items' lanes can interleave into a single register file: the walk
+/// transposes (B, L, H·N) -> (L, B·H·N), runs [`spe_scan_int`] with B·H
+/// rows — the threading threshold and band partition now see the whole
+/// batch instead of one below-threshold item — and transposes back to the
+/// item-major layout. Every lane is arithmetically independent, so the
+/// result is bit-identical to `b` separate [`spe_scan_int`] calls
+/// (`rust/tests/calib_props.rs` pins it). Dynamic per-item scales cannot
+/// take this path: their shifts differ per item.
+#[allow(clippy::too_many_arguments)]
+pub fn spe_scan_int_batch_fused(
+    p: &[i64],
+    q: &[i64],
+    shift: &[i32],
+    b: usize,
+    l: usize,
+    h: usize,
+    n: usize,
+) -> Vec<i64> {
+    let row = h * n;
+    let total = b * l * row;
+    assert_eq!(p.len(), total, "p length");
+    assert_eq!(q.len(), total, "q length");
+    assert_eq!(shift.len(), h, "shift length");
+    if b == 0 {
+        return Vec::new();
+    }
+    if b == 1 {
+        return spe_scan_int(p, q, shift, l, h, n);
+    }
+    let mut pt = vec![0i64; total];
+    let mut qt = vec![0i64; total];
+    for item in 0..b {
+        for step in 0..l {
+            let src = (item * l + step) * row;
+            let dst = (step * b + item) * row;
+            pt[dst..dst + row].copy_from_slice(&p[src..src + row]);
+            qt[dst..dst + row].copy_from_slice(&q[src..src + row]);
+        }
+    }
+    let shift_b: Vec<i32> = (0..b * h).map(|i| shift[i % h]).collect();
+    let states_t = spe_scan_int(&pt, &qt, &shift_b, l, b * h, n);
+    let mut out = vec![0i64; total];
+    for item in 0..b {
+        for step in 0..l {
+            let src = (step * b + item) * row;
+            let dst = (item * l + step) * row;
+            out[dst..dst + row].copy_from_slice(&states_t[src..src + row]);
+        }
+    }
+    out
+}
+
 /// Raw output pointer shared across the scoped scan workers. Sound because
 /// each worker writes a disjoint H band (see the SAFETY notes at spawn).
 #[derive(Clone, Copy)]
@@ -298,6 +354,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batch_fused_matches_per_item_scans() {
+        let (b, l, h, n) = (5usize, 19usize, 3usize, 4usize);
+        let per = l * h * n;
+        let (p, q, shift) = random_case(b * l, h, n, 0xFA5ED);
+        let fused = spe_scan_int_batch_fused(&p, &q, &shift, b, l, h, n);
+        assert_eq!(fused.len(), b * per);
+        for item in 0..b {
+            let span = item * per..(item + 1) * per;
+            let want = spe_scan_int(&p[span.clone()], &q[span.clone()], &shift, l, h, n);
+            assert_eq!(&fused[span], want.as_slice(), "item {item}");
+        }
+        // Degenerate batches.
+        assert!(spe_scan_int_batch_fused(&[], &[], &shift, 0, l, h, n).is_empty());
+        let one = spe_scan_int_batch_fused(&p[..per], &q[..per], &shift, 1, l, h, n);
+        assert_eq!(one, spe_scan_int(&p[..per], &q[..per], &shift, l, h, n));
     }
 
     #[test]

@@ -7,13 +7,20 @@
 //! the same seed are interchangeable — the invariance the serving
 //! property tests pin down. `infer_batch` executes a whole dynamic batch
 //! through one (B·L, K)x(K, N) GEMM pass, per-item bit-identical to
-//! `infer`, which is what the coordinator workers call.
+//! `infer`, which is what the coordinator workers call. An optional
+//! static scan calibration table ([`NativeBackend::with_calib`]) replaces
+//! the per-invocation scan scales with offline-calibrated ones, letting
+//! the INT8 scan fuse across the batch as well; without one, the dynamic
+//! per-item path (the oracle) runs.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::MambaXConfig;
+use crate::quant::CalibTable;
 use crate::sim::sfu::SfuTables;
-use crate::vision::{ForwardConfig, VimWeights};
+use crate::vision::{ForwardConfig, ScanExec, VimWeights};
 
 use super::{InferenceBackend, Tensor};
 
@@ -22,6 +29,8 @@ pub struct NativeBackend {
     weights: VimWeights,
     tables: SfuTables,
     scan_cfg: MambaXConfig,
+    /// Static scan calibration; `None` = dynamic per-invocation scales.
+    calib: Option<Arc<CalibTable>>,
 }
 
 impl NativeBackend {
@@ -31,6 +40,7 @@ impl NativeBackend {
             weights: VimWeights::init(cfg, seed),
             tables: SfuTables::fitted(),
             scan_cfg: MambaXConfig::default(),
+            calib: None,
         }
     }
 
@@ -53,6 +63,31 @@ impl NativeBackend {
     pub fn with_scan_cfg(mut self, scan_cfg: MambaXConfig) -> Self {
         self.scan_cfg = scan_cfg;
         self
+    }
+
+    /// Load a static scan calibration table: the quantized scan then
+    /// runs batch-fused across items instead of per item. Fails if the
+    /// table does not fit this backend's model (name, block count, or
+    /// channel count mismatch) — there is no silent dynamic fallback for
+    /// a table that was explicitly provided.
+    pub fn with_calib(mut self, table: Arc<CalibTable>) -> Result<Self> {
+        let m = &self.weights.cfg.model;
+        table.validate(m.name, m.n_blocks, m.d_inner())?;
+        self.calib = Some(table);
+        Ok(self)
+    }
+
+    /// The loaded calibration table, if any.
+    pub fn calib(&self) -> Option<&CalibTable> {
+        self.calib.as_deref()
+    }
+
+    /// The scan execution mode the loaded calibration state implies.
+    fn scan_exec(&self) -> ScanExec<'_> {
+        match &self.calib {
+            Some(table) => ScanExec::Static(&**table),
+            None => ScanExec::Dynamic,
+        }
     }
 }
 
@@ -79,14 +114,22 @@ impl InferenceBackend for NativeBackend {
 
     fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
         self.check_shape(image)?;
-        Ok(self.weights.forward(&self.tables, &self.scan_cfg, &image.data))
+        let mut exec = self.scan_exec();
+        Ok(self
+            .weights
+            .forward_batch_ex(&self.tables, &self.scan_cfg, &[image.data.as_slice()], &mut exec)
+            .pop()
+            .expect("batch of one yields one logits row"))
     }
 
     /// Real batched execution: every well-shaped image in the batch runs
     /// through one (B·L, K)x(K, N) GEMM pass
-    /// ([`VimWeights::forward_batch`]); malformed images fail only their
-    /// own slot. Per-item bit-identical to [`Self::infer`] — the serving
-    /// layer's batch-composition invariance rests on this.
+    /// ([`VimWeights::forward_batch`]) — and, with a static calibration
+    /// table loaded, the quantized scan additionally fuses across items
+    /// into one B·E·N-lane walk (no per-item scan loop); malformed images
+    /// fail only their own slot. Per-item bit-identical to [`Self::infer`]
+    /// under either scan mode — the serving layer's batch-composition
+    /// invariance rests on this.
     fn infer_batch(&mut self, images: &[&Tensor]) -> Vec<anyhow::Result<Vec<f32>>> {
         let mut results: Vec<anyhow::Result<Vec<f32>>> = Vec::with_capacity(images.len());
         let mut valid: Vec<&[f32]> = Vec::with_capacity(images.len());
@@ -101,7 +144,9 @@ impl InferenceBackend for NativeBackend {
                 Err(e) => results.push(Err(e)),
             }
         }
-        let logits = self.weights.forward_batch(&self.tables, &self.scan_cfg, &valid);
+        let mut exec = self.scan_exec();
+        let logits =
+            self.weights.forward_batch_ex(&self.tables, &self.scan_cfg, &valid, &mut exec);
         for (slot, row) in valid_slots.into_iter().zip(logits) {
             results[slot] = Ok(row);
         }

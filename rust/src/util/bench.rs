@@ -5,10 +5,11 @@
 //! trajectory every future PR is held against (regenerate with
 //! `cargo bench --bench hotpath`).
 
+use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::Json;
 
@@ -179,14 +180,94 @@ impl BenchReport {
     }
 
     /// Serialize to `path` (conventionally `BENCH_<suite>.json` at the
-    /// repo root).
+    /// repo root). Prints the absolute path of the written record so a
+    /// bench run always says where its machine-readable output went.
     pub fn write(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let path = path.as_ref();
         std::fs::write(path, self.to_json().dump())
             .with_context(|| format!("writing {}", path.display()))?;
-        println!("wrote {}", path.display());
+        let shown = std::fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf());
+        println!("wrote {}", shown.display());
         Ok(())
     }
+}
+
+// ---------------------------------------------------------------------------
+// Perf-regression gate: compare a fresh BENCH_<suite>.json against a
+// committed baseline (`mamba-x perfcheck`, run by CI after the smoke bench).
+// ---------------------------------------------------------------------------
+
+/// One baseline-vs-current speedup comparison.
+#[derive(Debug, Clone)]
+pub struct PerfCheck {
+    pub name: String,
+    /// Committed baseline speedup.
+    pub baseline: f64,
+    /// Minimum acceptable current speedup: `baseline * (1 - tolerance)`.
+    pub floor: f64,
+    /// The current record's speedup (None = missing from the bench run).
+    pub current: Option<f64>,
+    pub pass: bool,
+}
+
+/// The gate's verdict over every baselined speedup record.
+#[derive(Debug, Clone)]
+pub struct PerfGate {
+    pub tolerance: f64,
+    pub checks: Vec<PerfCheck>,
+}
+
+impl PerfGate {
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.pass)
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.checks.iter().filter(|c| !c.pass).count()
+    }
+}
+
+/// Compare the `speedups` of a bench record (the [`BenchReport`] JSON)
+/// against a committed baseline file of the form
+/// `{"tolerance": 0.5, "speedups": {"<name>": <speedup>, ...}}`.
+///
+/// A record fails when its current speedup drops below
+/// `baseline * (1 - tolerance)` or is missing from the bench run
+/// entirely (lost coverage is a regression too). Extra speedups in the
+/// current record are ignored — new benches get baselined when the
+/// baseline file is refreshed. Speedup pairs are measured in-process, so
+/// the ratios — unlike raw timings — are comparable across machines.
+pub fn check_speedups(
+    current: &Json,
+    baseline: &Json,
+    tolerance_override: Option<f64>,
+) -> Result<PerfGate> {
+    let tolerance = match tolerance_override {
+        Some(t) => t,
+        None => baseline.get("tolerance").context("baseline tolerance")?.num()?,
+    };
+    if !(0.0..1.0).contains(&tolerance) {
+        bail!("tolerance must be in [0, 1), got {tolerance}");
+    }
+    let mut cur: BTreeMap<String, f64> = BTreeMap::new();
+    for s in current.get("speedups").context("current speedups")?.arr()? {
+        cur.insert(s.get("name")?.str()?.to_string(), s.get("speedup")?.num()?);
+    }
+    let mut checks = Vec::new();
+    for (name, v) in baseline.get("speedups").context("baseline speedups")?.obj()? {
+        let base = v.num().with_context(|| format!("baseline speedup {name:?}"))?;
+        let floor = base * (1.0 - tolerance);
+        let current_v = cur.get(name).copied();
+        let pass = current_v.is_some_and(|c| c >= floor);
+        checks.push(PerfCheck {
+            name: name.clone(),
+            baseline: base,
+            floor,
+            current: current_v,
+            pass,
+        });
+    }
+    Ok(PerfGate { tolerance, checks })
 }
 
 /// Print one row of a paper-table reproduction.
@@ -220,6 +301,33 @@ mod tests {
         // Round-trips through the writer.
         let parsed = Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.get("records").unwrap().arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn perf_gate_flags_regressions_and_missing_records() {
+        let current = Json::parse(
+            r#"{"speedups":[{"name":"a","speedup":2.0},{"name":"b","speedup":0.4},
+                {"name":"extra","speedup":9.0}]}"#,
+        )
+        .unwrap();
+        let baseline =
+            Json::parse(r#"{"tolerance":0.5,"speedups":{"a":2.0,"b":2.0,"c":1.0}}"#).unwrap();
+        let gate = check_speedups(&current, &baseline, None).unwrap();
+        assert_eq!(gate.checks.len(), 3, "extra current records are not gated");
+        let by = |g: &PerfGate, n: &str| g.checks.iter().find(|c| c.name == n).unwrap().clone();
+        assert!(by(&gate, "a").pass); // 2.0 >= 2.0 * 0.5
+        assert!(!by(&gate, "b").pass); // 0.4 < 1.0
+        assert!(!by(&gate, "c").pass && by(&gate, "c").current.is_none()); // missing
+        assert!(!gate.passed());
+        assert_eq!(gate.failed_count(), 2);
+        // A looser override rescues the slow record but not the missing one.
+        let loose = check_speedups(&current, &baseline, Some(0.9)).unwrap();
+        assert!(by(&loose, "b").pass);
+        assert!(!loose.passed());
+        // Malformed inputs are errors, not silent passes.
+        assert!(check_speedups(&current, &Json::parse(r#"{"speedups":{}}"#).unwrap(), None)
+            .is_err());
+        assert!(check_speedups(&current, &baseline, Some(1.5)).is_err());
     }
 
     #[test]

@@ -20,14 +20,21 @@
 //! images through every projection as one (B·L, K)x(K, N) GEMM — patchify
 //! (B·patches rows), in/x/dt/out projections (B·L rows), classifier head
 //! (B rows) — so a serving batch pays for each weight matrix walk once.
-//! Only the depthwise causal conv and the quantized scan stay per-item:
-//! conv causality must not leak across images, and the scan's dynamic
-//! per-channel scales are calibrated per invocation, so batching them
-//! would change numerics. Everything row-wise is order-preserving, which
-//! makes `forward_batch` *bitwise identical* to per-item [`VimWeights::forward`]
-//! calls — the invariant serving batches lean on, pinned by
-//! `rust/tests/hotpath_props.rs` (and against the pre-optimization
-//! [`VimWeights::forward_ref`] path, which is also the benchmark baseline).
+//! The depthwise causal conv stays per-item (causality must not leak
+//! across images). The quantized scan's execution depends on [`ScanExec`]:
+//! on the *dynamic* default the per-channel scales are calibrated per
+//! invocation, so the scan also stays per-item (batching it would change
+//! numerics); with a *static* offline-calibrated
+//! [`CalibTable`](crate::quant::CalibTable) every item shares one set of
+//! scales and the scan fuses across the batch into a single L-major walk
+//! over B·E·N lanes ([`crate::quant::spe_scan_int_batch_fused`]) — the
+//! last per-item loop in the hot path disappears. Everything row-wise is
+//! order-preserving, which makes `forward_batch` *bitwise identical* to
+//! per-item [`VimWeights::forward`] calls under either mode — the
+//! invariant serving batches lean on, pinned by
+//! `rust/tests/hotpath_props.rs` and `rust/tests/calib_props.rs` (and
+//! against the pre-optimization [`VimWeights::forward_ref`] path, which
+//! is also the benchmark baseline).
 //!
 //! Weights are synthetic (seeded, Mamba-style initialization): the crate
 //! ships no trained checkpoint, so this backend demonstrates the *system*
@@ -36,14 +43,37 @@
 //! produce bit-identical logits, which is the property the serving tests
 //! lean on.
 
+use anyhow::Result;
+
 use crate::config::{MambaXConfig, VimModel};
-use crate::quant::{dequantize_states, quantize_scan_inputs};
+use crate::quant::{
+    channel_abs_max, dequantize_states, derive_scan_scales, quantize_scan_inputs,
+    quantize_scan_inputs_static, spe_scan_int_batch_fused, CalibBuilder, CalibTable,
+};
 use crate::sim::sfu::SfuTables;
 use crate::sim::{ssa_scan_chunked_ref, ssa_scan_functional};
 use crate::util::Pcg;
 
 use super::gemm::{matmul, matmul_ref};
 use super::ops::SfuFunc;
+
+/// How the quantized selective scan of a forward pass executes.
+///
+/// Each encoder block has two scan *sites* (forward and backward
+/// direction); flat site index `2 * block + dir` addresses them in
+/// [`CalibTable`] / [`CalibBuilder`].
+pub enum ScanExec<'a> {
+    /// Per-invocation dynamic scales, per-item scans — the default and
+    /// the bit-exactness oracle for the static path.
+    Dynamic,
+    /// Static offline-calibrated scales: the scan fuses across batch
+    /// items into one B·E·N-lane walk. The table must fit the model
+    /// (`CalibTable::validate`).
+    Static(&'a CalibTable),
+    /// The dynamic path, additionally recording every item's per-channel
+    /// scan ranges into a [`CalibBuilder`] (the offline calibration pass).
+    Record(&'a mut CalibBuilder),
+}
 
 /// Shape of one executable Vim instance: model config + input geometry.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -232,6 +262,20 @@ impl VimWeights {
         scan_cfg: &MambaXConfig,
         images: &[&[f32]],
     ) -> Vec<Vec<f32>> {
+        self.forward_batch_ex(tables, scan_cfg, images, &mut ScanExec::Dynamic)
+    }
+
+    /// [`Self::forward_batch`] with an explicit scan execution mode
+    /// ([`ScanExec`]): dynamic per-invocation scales (the default),
+    /// static calibrated scales (batch-fused quantized scan), or the
+    /// dynamic path with range recording (the offline calibration pass).
+    pub fn forward_batch_ex(
+        &self,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+        images: &[&[f32]],
+        exec: &mut ScanExec<'_>,
+    ) -> Vec<Vec<f32>> {
         let cfg = &self.cfg;
         let b = images.len();
         if b == 0 {
@@ -261,8 +305,8 @@ impl VimWeights {
                 *v += p;
             }
         }
-        for bw in &self.blocks {
-            self.block(bw, &mut x, b, tables, scan_cfg);
+        for (bi, bw) in self.blocks.iter().enumerate() {
+            self.block(bi, bw, &mut x, b, tables, scan_cfg, exec);
         }
         layer_norm(&mut x, d, &self.head_norm_g, &self.head_norm_b);
         // Gather every item's class-token row -> (B, D); one head GEMM.
@@ -273,6 +317,28 @@ impl VimWeights {
         }
         let logits = matmul(&cls_rows, &self.head_w, Some(&self.head_b), b, d, cfg.n_classes);
         logits.chunks_exact(cfg.n_classes).map(|row| row.to_vec()).collect()
+    }
+
+    /// Offline scan calibration (eMamba-style static PTQ): run the
+    /// dynamic-scale forward over `images`, recording every scan site's
+    /// per-item per-channel |dA| / |dBu| maxima, and aggregate them into
+    /// a static [`CalibTable`] at `percentile` (1.0 = plain max-abs;
+    /// lower values clip range outliers, which then saturate in the
+    /// quantizer). A table calibrated on a single image reproduces that
+    /// image's dynamic quantization bit-for-bit.
+    pub fn calibrate(
+        &self,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+        images: &[&[f32]],
+        percentile: f32,
+    ) -> Result<CalibTable> {
+        let mut builder = CalibBuilder::new(2 * self.blocks.len(), self.cfg.model.d_inner());
+        for chunk in images.chunks(8) {
+            let mut exec = ScanExec::Record(&mut builder);
+            self.forward_batch_ex(tables, scan_cfg, chunk, &mut exec);
+        }
+        builder.finalize(self.cfg.model.name, percentile)
     }
 
     /// (img, img, C) row-major -> (n_patches, patch*patch*C) appended to
@@ -294,14 +360,18 @@ impl VimWeights {
     }
 
     /// One bidirectional encoder block over the stacked (B·L, D) batch,
-    /// in place (paper Fig 3(a) 3-5).
+    /// in place (paper Fig 3(a) 3-5). `bi` is the block index (scan sites
+    /// `2 * bi` and `2 * bi + 1`).
+    #[allow(clippy::too_many_arguments)]
     fn block(
         &self,
+        bi: usize,
         bw: &BlockWeights,
         x: &mut [f32],
         b: usize,
         tables: &SfuTables,
         scan_cfg: &MambaXConfig,
+        exec: &mut ScanExec<'_>,
     ) {
         let (d, e) = (self.cfg.model.d_model, self.cfg.model.d_inner());
         let l = self.cfg.seq_len();
@@ -315,10 +385,11 @@ impl VimWeights {
             xi[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e..row * 2 * e + e]);
             z[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e + e..(row + 1) * 2 * e]);
         }
-        let y_f = self.ssm_path(&bw.fwd, &xi, &z, b, tables, scan_cfg);
+        let y_f = self.ssm_path(2 * bi, &bw.fwd, &xi, &z, b, tables, scan_cfg, exec);
         let xi_rev = reversed_rows_batched(&xi, b, l, e);
         let z_rev = reversed_rows_batched(&z, b, l, e);
-        let y_b_rev = self.ssm_path(&bw.bwd, &xi_rev, &z_rev, b, tables, scan_cfg);
+        let y_b_rev =
+            self.ssm_path(2 * bi + 1, &bw.bwd, &xi_rev, &z_rev, b, tables, scan_cfg, exec);
         let y_b = reversed_rows_batched(&y_b_rev, b, l, e);
         let sum: Vec<f32> = y_f.iter().zip(&y_b).map(|(a, b)| a + b).collect();
         let y = matmul(&sum, &bw.out_w, Some(&bw.out_b), rows, e, d);
@@ -331,15 +402,21 @@ impl VimWeights {
     /// -> softplus -> discretize (exp on the SFU) -> INT8 scan ->
     /// C-reduction -> gate (paper Fig 3(b) steps 1-4 as the
     /// VPU->SFU->SSA->PPU pipeline). Projections span all B·L rows; the
-    /// causal conv and the quantized scan run per item (see module docs).
+    /// causal conv always runs per item, and the quantized scan runs per
+    /// item on the dynamic path but fuses the whole batch into one
+    /// B·E·N-lane walk under a static calibration table (see module
+    /// docs). `site` is the flat scan-site index (`2 * block + dir`).
+    #[allow(clippy::too_many_arguments)]
     fn ssm_path(
         &self,
+        site: usize,
         dw: &DirWeights,
         x: &[f32],
         z: &[f32],
         b: usize,
         tables: &SfuTables,
         scan_cfg: &MambaXConfig,
+        exec: &mut ScanExec<'_>,
     ) -> Vec<f32> {
         let m = &self.cfg.model;
         let (e, n, r, k) = (m.d_inner(), m.d_state, m.dt_rank(), m.conv_k);
@@ -384,17 +461,48 @@ impl VimWeights {
                 }
             }
         }
-        // INT8 scan on the SSA+LISU functional datapath, per item: the
-        // dynamic per-channel scales are calibrated over one (L, N) image,
-        // so batch composition never shifts quantization.
-        let mut states = vec![0f32; rows * e * n];
-        for item in 0..b {
-            let span = item * l * e * n..(item + 1) * l * e * n;
-            let (p, q, scales) =
-                quantize_scan_inputs(&da[span.clone()], &dbu[span.clone()], l, e, n);
-            let states_q = ssa_scan_functional(scan_cfg, &p, &q, &scales.shift, l, e, n);
-            states[span].copy_from_slice(&dequantize_states(&states_q, &scales.sq, l, e, n));
-        }
+        // INT8 scan on the SSA+LISU functional datapath. With static
+        // calibrated scales the whole batch quantizes in one walk and the
+        // scan fuses into a single B·E·N-lane L-major pass; on the
+        // dynamic (and recording) path the per-channel scales are
+        // calibrated over one (L, N) image, so the scan stays per item
+        // and batch composition never shifts quantization.
+        let states = match exec {
+            ScanExec::Static(table) => {
+                let ss = table.site(site);
+                assert_eq!(ss.sq.len(), e, "calibration table channels");
+                let (p, q) =
+                    quantize_scan_inputs_static(&da, &dbu, rows, e, n, &ss.sa_eff, &ss.sq);
+                let states_q = spe_scan_int_batch_fused(&p, &q, &ss.shift, b, l, e, n);
+                dequantize_states(&states_q, &ss.sq, rows, e, n)
+            }
+            other => {
+                let mut states = vec![0f32; rows * e * n];
+                for item in 0..b {
+                    let span = item * l * e * n..(item + 1) * l * e * n;
+                    let (da_i, dbu_i) = (&da[span.clone()], &dbu[span.clone()]);
+                    let (p, q, scales) = if let ScanExec::Record(builder) = other {
+                        // One range pass, shared between quantization and
+                        // recording (the dynamic quantizer would recompute
+                        // the same maxima internally).
+                        let da_m = channel_abs_max(da_i, l, e, n);
+                        let dbu_m = channel_abs_max(dbu_i, l, e, n);
+                        let (sa_eff, scales) = derive_scan_scales(&da_m, &dbu_m);
+                        let (p, q) = quantize_scan_inputs_static(
+                            da_i, dbu_i, l, e, n, &sa_eff, &scales.sq,
+                        );
+                        builder.record(site, da_m, dbu_m);
+                        (p, q, scales)
+                    } else {
+                        quantize_scan_inputs(da_i, dbu_i, l, e, n)
+                    };
+                    let states_q = ssa_scan_functional(scan_cfg, &p, &q, &scales.shift, l, e, n);
+                    states[span]
+                        .copy_from_slice(&dequantize_states(&states_q, &scales.sq, l, e, n));
+                }
+                states
+            }
+        };
         // Output: y = <C, state> + D*u, gated by silu(z) (PPU).
         let mut y = vec![0f32; rows * e];
         for row in 0..rows {

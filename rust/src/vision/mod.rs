@@ -15,7 +15,7 @@ mod ops;
 mod vim;
 mod vit;
 
-pub use forward::{BlockWeights, DirWeights, ForwardConfig, VimWeights};
+pub use forward::{BlockWeights, DirWeights, ForwardConfig, ScanExec, VimWeights};
 pub use gemm::{matmul, matmul_ref};
 pub use ops::{Op, OpClass, SfuFunc};
 pub use vim::{vim_block_ops, vim_model_ops, vim_selective_ssm_ops};

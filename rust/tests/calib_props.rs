@@ -1,0 +1,317 @@
+//! Properties of the static scan calibration subsystem (hand-rolled
+//! harness: proptest is unavailable offline; `Pcg` provides deterministic
+//! shrink-free random cases).
+//!
+//! The contract under test:
+//!
+//! * the batch-fused scan is bitwise identical to per-item scans under
+//!   any shared (static) scales — fusion is pure layout, never numerics;
+//! * a table calibrated on exactly the inputs being quantized reproduces
+//!   the dynamic per-invocation path bit-for-bit (scales, INT8 streams,
+//!   scan states, logits) — the dynamic path is the oracle;
+//! * batch composition stays invisible under a static table, end to end
+//!   through `NativeBackend::infer_batch`;
+//! * the versioned `CalibTable` artifact round-trips exactly and the
+//!   loader rejects foreign/future formats and mismatched models.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mamba_x::config::{MambaXConfig, VimModel};
+use mamba_x::quant::{
+    channel_abs_max, quantize_scan_inputs, quantize_scan_inputs_static, scale_for, spe_scan_int,
+    spe_scan_int_batch_fused, CalibBuilder, CalibTable, CALIB_VERSION,
+};
+use mamba_x::runtime::native::synthetic_image;
+use mamba_x::runtime::{InferenceBackend, NativeBackend, Tensor};
+use mamba_x::sim::sfu::SfuTables;
+use mamba_x::util::Pcg;
+use mamba_x::vision::{ForwardConfig, ScanExec, VimWeights};
+
+/// PROPERTY: with one shared `shift` vector, the batch-fused scan equals
+/// per-item scans bit-for-bit across random (B, L, H, N) shapes —
+/// including shapes that cross the auto-threading threshold only when
+/// fused.
+#[test]
+fn prop_batch_fused_scan_matches_per_item() {
+    let mut rng = Pcg::new(0xCA11B);
+    for case in 0..40 {
+        let b = rng.usize_in(1, 7);
+        let l = rng.usize_in(1, 40);
+        let h = rng.usize_in(1, 10);
+        let n = rng.usize_in(1, 6);
+        let per = l * h * n;
+        let p: Vec<i64> = (0..b * per).map(|_| rng.int8()).collect();
+        let q: Vec<i64> = (0..b * per).map(|_| rng.int8()).collect();
+        let shift: Vec<i32> = (0..h).map(|_| rng.usize_in(0, 12) as i32).collect();
+        let fused = spe_scan_int_batch_fused(&p, &q, &shift, b, l, h, n);
+        for item in 0..b {
+            let span = item * per..(item + 1) * per;
+            let want = spe_scan_int(&p[span.clone()], &q[span.clone()], &shift, l, h, n);
+            assert_eq!(&fused[span], want.as_slice(), "case {case} item {item}");
+        }
+    }
+    // Large fused shape: 6 * 80 * 40 * 16 = 307k lanes-steps, well past
+    // the threading threshold while one item (51k) stays below it.
+    let (b, l, h, n) = (6usize, 80usize, 40usize, 16usize);
+    let per = l * h * n;
+    let p: Vec<i64> = (0..b * per).map(|_| rng.int8()).collect();
+    let q: Vec<i64> = (0..b * per).map(|_| rng.int8()).collect();
+    let shift: Vec<i32> = (0..h).map(|_| rng.usize_in(0, 12) as i32).collect();
+    let fused = spe_scan_int_batch_fused(&p, &q, &shift, b, l, h, n);
+    for item in 0..b {
+        let span = item * per..(item + 1) * per;
+        let want = spe_scan_int(&p[span.clone()], &q[span.clone()], &shift, l, h, n);
+        assert_eq!(&fused[span], want.as_slice(), "large case item {item}");
+    }
+}
+
+/// PROPERTY: a table built from exactly one scan invocation's streams
+/// (max-abs, percentile 1.0) reproduces the dynamic quantizer bit-for-bit
+/// at the kernel level: same scales, same INT8 (P, Q), same scan states.
+#[test]
+fn prop_table_from_own_inputs_matches_dynamic_quantization() {
+    let mut rng = Pcg::new(0x57A71C);
+    for case in 0..30 {
+        let l = rng.usize_in(1, 24);
+        let h = rng.usize_in(1, 8);
+        let n = rng.usize_in(1, 5);
+        let total = l * h * n;
+        let da: Vec<f32> = (0..total).map(|_| rng.f32_in(0.0, 1.0)).collect();
+        let dbu: Vec<f32> = (0..total).map(|_| rng.f32_in(-1.5, 1.5)).collect();
+        let (p, q, scales) = quantize_scan_inputs(&da, &dbu, l, h, n);
+        let mut builder = CalibBuilder::new(1, h);
+        builder.record(0, channel_abs_max(&da, l, h, n), channel_abs_max(&dbu, l, h, n));
+        let table = builder.finalize("kernel", 1.0).unwrap();
+        let site = table.site(0);
+        assert_eq!(site.shift, scales.shift, "case {case}: shifts");
+        assert_eq!(site.sq, scales.sq, "case {case}: sq scales");
+        let (ps, qs) = quantize_scan_inputs_static(&da, &dbu, l, h, n, &site.sa_eff, &site.sq);
+        assert_eq!(ps, p, "case {case}: P stream");
+        assert_eq!(qs, q, "case {case}: Q stream");
+        assert_eq!(
+            spe_scan_int_batch_fused(&ps, &qs, &site.shift, 1, l, h, n),
+            spe_scan_int(&p, &q, &scales.shift, l, h, n),
+            "case {case}: scan states"
+        );
+    }
+}
+
+/// Small-but-real model so forward-pass cases stay fast in debug builds
+/// (mirrors `rust/tests/hotpath_props.rs::prop_cfg`).
+fn prop_cfg() -> ForwardConfig {
+    ForwardConfig {
+        model: VimModel {
+            name: "prop",
+            d_model: 16,
+            n_blocks: 2,
+            d_state: 4,
+            expand: 2,
+            conv_k: 4,
+            patch: 4,
+        },
+        img: 8,
+        in_ch: 1,
+        n_classes: 6,
+    }
+}
+
+fn rand_image(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..len).map(|_| rng.f32_in(-1.0, 1.0)).collect()
+}
+
+/// Committed golden fixture, anchored to the manifest dir so the test
+/// binary runs from any cwd (same convention as `quant_golden.rs`).
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/calib_v1.json")
+}
+
+/// PROPERTY: a table calibrated on a single image makes the static
+/// (batch-fused) forward bitwise equal to the dynamic forward on that
+/// image — the whole pipeline, not just the kernel.
+#[test]
+fn prop_calibrated_single_image_forward_matches_dynamic_bitwise() {
+    let cfg = prop_cfg();
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    for case in 0..8u64 {
+        let weights = VimWeights::init(&cfg, 900 + case);
+        let img = rand_image(7000 + case, cfg.input_len());
+        let table = weights.calibrate(&tables, &scan, &[img.as_slice()], 1.0).unwrap();
+        table.validate("prop", cfg.model.n_blocks, cfg.model.d_inner()).unwrap();
+        assert_eq!(table.samples, 1);
+        let mut exec = ScanExec::Static(&table);
+        let calibrated = weights.forward_batch_ex(&tables, &scan, &[img.as_slice()], &mut exec);
+        let dynamic = weights.forward(&tables, &scan, &img);
+        assert_eq!(calibrated, vec![dynamic], "case {case}");
+    }
+}
+
+/// PROPERTY: under one static table, batch composition is invisible —
+/// the fused batched forward equals per-item static forwards bitwise,
+/// across random batch sizes, scan schedules and calibration sets.
+#[test]
+fn prop_static_table_batch_fusion_is_invisible() {
+    let cfg = prop_cfg();
+    let tables = SfuTables::fitted();
+    let mut rng = Pcg::new(0xBF5);
+    for case in 0..8u64 {
+        let weights = VimWeights::init(&cfg, 40 + case);
+        let scan = MambaXConfig {
+            chunk: 1usize << rng.usize_in(2, 6),
+            n_ssa: rng.usize_in(1, 8),
+            ..MambaXConfig::default()
+        };
+        let n_calib = rng.usize_in(1, 5);
+        let calib_imgs: Vec<Vec<f32>> =
+            (0..n_calib).map(|i| rand_image(case * 50 + i as u64, cfg.input_len())).collect();
+        let calib_refs: Vec<&[f32]> = calib_imgs.iter().map(|v| v.as_slice()).collect();
+        let table = weights.calibrate(&tables, &scan, &calib_refs, 1.0).unwrap();
+        // Serve a *different* stream than was calibrated on: out-of-range
+        // values saturate, but fusion must still be invisible.
+        let b = rng.usize_in(1, 6);
+        let imgs: Vec<Vec<f32>> =
+            (0..b).map(|i| rand_image(9000 + case * 10 + i as u64, cfg.input_len())).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut exec = ScanExec::Static(&table);
+        let batched = weights.forward_batch_ex(&tables, &scan, &refs, &mut exec);
+        assert_eq!(batched.len(), b);
+        for (i, img) in refs.iter().enumerate() {
+            let mut exec1 = ScanExec::Static(&table);
+            let single =
+                weights.forward_batch_ex(&tables, &scan, std::slice::from_ref(img), &mut exec1);
+            assert_eq!(batched[i], single[0], "case {case} img {i}: fusion leaked");
+        }
+    }
+}
+
+/// The end-to-end serving surface: `NativeBackend` with a loaded table
+/// fuses batches yet stays per-item bit-identical to `infer`, and a
+/// single-image calibration reproduces the uncalibrated backend exactly.
+#[test]
+fn native_backend_with_calib_is_batch_invariant() {
+    let cfg = ForwardConfig::micro();
+    let seed = 11u64;
+    let imgs: Vec<Vec<f32>> =
+        (0..5).map(|id| synthetic_image(seed, id, cfg.input_len())).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    // Same (cfg, seed) => NativeBackend and this VimWeights agree.
+    let weights = VimWeights::init(&cfg, seed);
+    let table = Arc::new(
+        weights.calibrate(&SfuTables::fitted(), &MambaXConfig::default(), &refs, 1.0).unwrap(),
+    );
+    let mut calibrated = NativeBackend::new(&cfg, seed).with_calib(Arc::clone(&table)).unwrap();
+    assert!(calibrated.calib().is_some());
+    let tensors: Vec<Tensor> = imgs
+        .iter()
+        .map(|v| Tensor::new(cfg.input_shape(), v.clone()).unwrap())
+        .collect();
+    let tensor_refs: Vec<&Tensor> = tensors.iter().collect();
+    let batch = calibrated.infer_batch(&tensor_refs);
+    assert_eq!(batch.len(), tensors.len());
+    for (i, t) in tensors.iter().enumerate() {
+        let single = calibrated.infer(t).unwrap();
+        assert_eq!(batch[i].as_ref().unwrap(), &single, "slot {i}: fusion leaked");
+    }
+    // Calibrating on exactly one image reproduces the dynamic backend on
+    // that image, bit for bit.
+    let one = Arc::new(
+        weights
+            .calibrate(&SfuTables::fitted(), &MambaXConfig::default(), &refs[..1], 1.0)
+            .unwrap(),
+    );
+    let mut static_one = NativeBackend::new(&cfg, seed).with_calib(one).unwrap();
+    let mut dynamic = NativeBackend::new(&cfg, seed);
+    assert_eq!(
+        static_one.infer(&tensors[0]).unwrap(),
+        dynamic.infer(&tensors[0]).unwrap(),
+        "single-image calibration must reproduce the dynamic path"
+    );
+    // A bad slot fails alone; the rest still fuse.
+    let bad = Tensor::zeros(vec![2, 2, 1]);
+    let mixed: Vec<&Tensor> = vec![&tensors[0], &bad, &tensors[1]];
+    let results = calibrated.infer_batch(&mixed);
+    assert!(results[0].is_ok() && results[1].is_err() && results[2].is_ok());
+}
+
+/// The table artifact must refuse models it was not calibrated for.
+#[test]
+fn native_backend_rejects_mismatched_table() {
+    let cfg = prop_cfg();
+    let weights = VimWeights::init(&cfg, 3);
+    let img = rand_image(1, cfg.input_len());
+    let table = weights
+        .calibrate(&SfuTables::fitted(), &MambaXConfig::default(), &[img.as_slice()], 1.0)
+        .unwrap();
+    // "prop" table vs the micro model: name (and geometry) mismatch.
+    assert!(NativeBackend::micro(1).with_calib(Arc::new(table)).is_err());
+}
+
+/// PROPERTY: `CalibTable` serialize -> deserialize round-trips exactly
+/// (f32 ranges are stored as IEEE-754 bit patterns).
+#[test]
+fn prop_calib_table_file_roundtrip_is_exact() {
+    let mut rng = Pcg::new(0x10AD);
+    for case in 0..10 {
+        let n_sites = 2 * rng.usize_in(1, 3);
+        let channels = rng.usize_in(1, 9);
+        let items = rng.usize_in(1, 6);
+        let mut builder = CalibBuilder::new(n_sites, channels);
+        for _ in 0..items {
+            for site in 0..n_sites {
+                let da: Vec<f32> = (0..channels).map(|_| rng.f32_in(1e-6, 4.0)).collect();
+                let dbu: Vec<f32> = (0..channels).map(|_| rng.f32_in(1e-6, 4.0)).collect();
+                builder.record(site, da, dbu);
+            }
+        }
+        let percentile = rng.f32_in(0.1, 1.0);
+        let table = builder.finalize("roundtrip", percentile).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("mamba_x_calib_props_{}_{case}.json", std::process::id()));
+        table.save(&path).unwrap();
+        let loaded = CalibTable::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(loaded, table, "case {case}: round-trip drifted");
+    }
+}
+
+/// Golden artifact: the committed v1 fixture parses, carries the version
+/// field, and re-derives the expected scales from its bit-exact ranges.
+#[test]
+fn golden_calib_artifact_v1() {
+    let table = CalibTable::load(golden_path()).unwrap();
+    assert_eq!(table.version, CALIB_VERSION);
+    assert_eq!(table.model, "golden");
+    assert_eq!(table.samples, 4);
+    assert_eq!(table.percentile, 1.0);
+    assert_eq!(table.sites.len(), 2);
+    let fwd = table.site(0);
+    assert_eq!((fwd.block, fwd.dir), (0, 0));
+    assert_eq!(fwd.da_max, vec![0.8, 1.6]);
+    assert_eq!(fwd.dbu_max, vec![0.5, 0.25]);
+    assert_eq!(fwd.shift, vec![7, 6]);
+    // pow2-rounded dA scales are exact powers of two.
+    assert_eq!(fwd.sa_eff, vec![0.0078125, 0.015625]);
+    // sq re-derives through the same f32 arithmetic as the quantizer.
+    assert_eq!(fwd.sq, vec![scale_for(0.5, 8), scale_for(0.25, 8)]);
+    let bwd = table.site(1);
+    assert_eq!((bwd.block, bwd.dir), (0, 1));
+    assert_eq!(bwd.shift, vec![8, 11]);
+    assert_eq!(bwd.sa_eff, vec![0.00390625, 0.00048828125]);
+}
+
+/// The loader is a format gate: future versions and foreign files fail
+/// with a clear error instead of being misread.
+#[test]
+fn calib_loader_rejects_future_versions() {
+    let good = std::fs::read_to_string(golden_path()).unwrap();
+    let future = good.replace("\"version\": 1", "\"version\": 99");
+    assert_ne!(good, future, "fixture must contain the version field");
+    let path = std::env::temp_dir()
+        .join(format!("mamba_x_calib_future_{}.json", std::process::id()));
+    std::fs::write(&path, future).unwrap();
+    let err = CalibTable::load(&path).unwrap_err();
+    std::fs::remove_file(&path).ok();
+    assert!(format!("{err}").contains("version 99"), "unhelpful error: {err}");
+}
