@@ -20,18 +20,22 @@
 //! cargo run --release --example edge_serving -- [n_requests] [workers]
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 use mamba_x::config::{GpuConfig, MambaXConfig, VimModel};
-use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
+use mamba_x::coordinator::{BatchPolicy, EngineBuilder, Request};
 use mamba_x::gpu::GpuModel;
-use mamba_x::runtime::{InferenceBackend, NativeBackend, Tensor};
+use mamba_x::runtime::{InferenceBackend, ModelSpec, NativeBackend, Tensor};
 use mamba_x::sim::Accelerator;
 use mamba_x::util::Pcg;
 use mamba_x::vision::{vim_model_ops, ForwardConfig};
 
 const SEED: u64 = 2024;
+
+/// The variant name this example registers with the engine.
+const MODEL: &str = "vim-micro@dynamic";
 
 /// Procedural shapes (ports of python/compile/data.py classes 0/1/4/5).
 /// Deterministic per (stream, index): the invariance check re-renders.
@@ -79,29 +83,33 @@ fn main() -> Result<()> {
         cfg.model.name, cfg.model.n_blocks, cfg.model.d_model, n_requests, workers
     );
 
-    let server = Server::new(BatchPolicy { max_batch: 8, max_wait_us: 2_000 });
+    // Engine API v1: register the variant by name, get a typed handle.
     let model_cfg = cfg.clone();
-    let (handle, join) =
-        server.spawn_pool(workers, move |w| {
-            println!("worker {w}: native backend ready");
-            Ok(NativeBackend::new(&model_cfg, SEED))
-        });
+    let (engine, join) = EngineBuilder::new()
+        .workers(workers)
+        .policy(BatchPolicy { max_batch: 8, max_wait_us: 2_000 })
+        .register(ModelSpec::new(
+            MODEL,
+            Arc::new(move |w| {
+                println!("worker {w}: native backend ready");
+                Ok(Box::new(NativeBackend::new(&model_cfg, SEED)) as Box<dyn InferenceBackend>)
+            }),
+        ))?
+        .build()?;
 
     let t0 = Instant::now();
     let per_stream = n_requests / 4;
     let mut streams = Vec::new();
     for s in 0..4usize {
-        let h = handle.clone();
+        let eng = engine.clone();
         let shape = cfg.input_shape();
         streams.push(std::thread::spawn(move || {
             let images = stream_images(s, per_stream, img_sz);
             let mut responses = Vec::new();
             for (i, img) in images.into_iter().enumerate() {
-                let req = InferenceRequest {
-                    id: (s * per_stream + i) as u64,
-                    image: Tensor::new(shape.clone(), img).unwrap(),
-                };
-                if let Ok(resp) = h.infer(req) {
+                let id = (s * per_stream + i) as u64;
+                let req = Request::new(MODEL, id, Tensor::new(shape.clone(), img).unwrap());
+                if let Ok(resp) = eng.infer(req) {
                     responses.push(resp);
                 }
             }
@@ -115,13 +123,13 @@ fn main() -> Result<()> {
         done += r.len();
         responses.push(r);
     }
-    drop(handle);
-    let metrics = join.join()?;
+    drop(engine);
+    let report = join.join()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n== serving results ==");
     println!("requests: {done} ok of {n_requests}");
-    println!("{}", metrics.summary());
+    println!("{}", report.summary());
     println!("wall time {wall:.2}s -> {:.1} req/s sustained", done as f64 / wall);
 
     // Serving invariance: every response equals direct inference.

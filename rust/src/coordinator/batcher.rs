@@ -68,6 +68,13 @@ impl<T> DynamicBatcher<T> {
         self.queue.front().map(|p| p.enqueued_us.saturating_add(self.policy.max_wait_us))
     }
 
+    /// How long the oldest pending item has waited as of `now_us`
+    /// (admission-control evidence: the engine reports it alongside the
+    /// projected wait when shedding). Saturating for out-of-order clocks.
+    pub fn oldest_wait_us(&self, now_us: u64) -> Option<u64> {
+        self.queue.front().map(|p| now_us.saturating_sub(p.enqueued_us))
+    }
+
     /// Whether a batch should be released at `now_us`.
     pub fn ready(&self, now_us: u64) -> bool {
         self.queue.len() >= self.policy.max_batch
@@ -181,6 +188,19 @@ mod tests {
         assert!(q.poll(10).is_none());
         assert_eq!(q.flush(), vec![1, 2]);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn oldest_wait_tracks_front_and_saturates() {
+        let mut q = b(8, 1000);
+        assert_eq!(q.oldest_wait_us(5), None);
+        q.push(1, 100);
+        q.push(2, 400);
+        assert_eq!(q.oldest_wait_us(450), Some(350));
+        // Clock behind the enqueue stamp: saturate to zero, don't panic.
+        assert_eq!(q.oldest_wait_us(50), Some(0));
+        q.poll(2000);
+        assert_eq!(q.oldest_wait_us(2000), None);
     }
 
     #[test]

@@ -1,0 +1,1223 @@
+//! Engine API v1: the typed, multi-model serving surface.
+//!
+//! One [`Engine`] process hosts every variant in a [`ModelRegistry`]
+//! (e.g. `vim-micro@dynamic` and `vim-micro@calib` side by side), each
+//! with its own per-model request queue, backend instances (one per
+//! worker, built on the worker thread via the variant's
+//! [`crate::runtime::BackendFactory`]), service-time estimate and
+//! metrics. Workers are shared across models: each scans the queues
+//! round-robin for a policy-released batch, so one hot variant cannot
+//! starve the others of workers, and a batch never mixes models.
+//!
+//! The client surface is typed end to end — [`Request`] /
+//! [`Response`] / [`EngineError`] — replacing the v0 `anyhow` plumbing
+//! ([`super::server::ServerHandle`] remains as a thin compatibility shim
+//! over this engine). Admission control goes beyond the v0 fixed queue
+//! bound:
+//!
+//! * **Bounded queue** — total pending at `queue_depth` refuses with
+//!   [`RejectReason::Full`] (exactly the v0 behavior).
+//! * **Per-priority shedding** — [`Priority::Low`] traffic is shed once
+//!   the backlog crosses half of `queue_depth`, [`Priority::Normal`] at
+//!   three quarters, [`Priority::High`] only when full; under rising
+//!   load, low priorities go first ([`RejectReason::Shed`]).
+//! * **SLO projection** — a request with a latency target (its
+//!   `deadline_us`, or the variant's configured `slo_us` default) is
+//!   shed when the projected queue wait — pending items × the observed
+//!   per-item service time EWMA, divided across workers — already
+//!   exceeds the target. Admitting it would waste a backend slot on an
+//!   answer the client no longer wants.
+//!
+//! Admission decides at submit time only: an accepted request is NEVER
+//! shed later (`rust/tests/pool_props.rs` pins this, plus the priority
+//! monotonicity of [`admission_check`]); multi-model bitwise invariance
+//! vs direct inference lives in `rust/tests/engine_props.rs`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use crate::quant::CalibTable;
+use crate::runtime::{BackendFactory, InferenceBackend, ModelRegistry, ModelSpec, Tensor};
+use crate::util::Json;
+use crate::vision::ForwardConfig;
+
+use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::metrics::Metrics;
+
+/// Default bound on queued (admitted, not yet executing) requests.
+pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
+
+/// How long an idle worker sleeps between shutdown/deadline re-checks.
+const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+// ---------------------------------------------------------------------------
+// Typed client surface
+// ---------------------------------------------------------------------------
+
+/// Request priority: under backlog pressure, lower priorities are shed
+/// first (`Low < Normal < High` — the derived order is the shed order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub const ALL: [Priority; 3] = [Priority::Low, Priority::Normal, Priority::High];
+
+    /// Backlog level (in pending requests) at which this priority is
+    /// shed, for a queue bounded at `queue_depth`. Monotone in priority:
+    /// `Low <= Normal <= High == queue_depth` for every depth, so a
+    /// higher-priority request is admitted whenever a lower one is.
+    pub fn shed_threshold(self, queue_depth: usize) -> usize {
+        match self {
+            Priority::High => queue_depth,
+            // d - d/4 == ceil(3d/4) without the overflow of 3*d.
+            Priority::Normal => (queue_depth - queue_depth / 4).max(1),
+            Priority::Low => queue_depth.div_ceil(2).max(1),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => bail!("unknown priority {other:?}; valid: low, normal, high"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// One typed inference request addressed to a registered model variant.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Registry name of the target variant (e.g. `vim-micro@calib`).
+    pub model: String,
+    /// Client correlation id, echoed back in the [`Response`].
+    pub id: u64,
+    pub priority: Priority,
+    /// Latency target in microseconds. `None` falls back to the
+    /// variant's configured `slo_us` (if any); admission sheds the
+    /// request when the projected queue wait already exceeds the target.
+    pub deadline_us: Option<u64>,
+    pub image: Tensor,
+}
+
+impl Request {
+    /// A `Normal`-priority request with no explicit deadline.
+    pub fn new(model: impl Into<String>, id: u64, image: Tensor) -> Self {
+        Request { model: model.into(), id, priority: Priority::Normal, deadline_us: None, image }
+    }
+
+    pub fn priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn deadline_us(mut self, deadline_us: u64) -> Self {
+        self.deadline_us = Some(deadline_us);
+        self
+    }
+}
+
+/// Typed response: logits plus the serving latency and the variant that
+/// produced them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    /// Registry name of the variant that served the request.
+    pub model: String,
+    pub logits: Vec<f32>,
+    pub latency_us: u64,
+}
+
+/// Why admission refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RejectReason {
+    /// The bounded queue is at `queue_depth` (v0 backpressure).
+    Full,
+    /// Load shedding: priority threshold crossed, or the projected wait
+    /// exceeds the request's deadline/SLO.
+    Shed,
+    /// The request names a variant this engine does not host.
+    UnknownModel,
+}
+
+impl RejectReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RejectReason::Full => "full",
+            RejectReason::Shed => "shed",
+            RejectReason::UnknownModel => "unknown_model",
+        }
+    }
+}
+
+/// Structured engine error — the entire client-facing failure surface.
+/// (`anyhow` remains on the server-side build/join paths only.)
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// Refused at admission; the request was never enqueued.
+    Rejected { model: String, reason: RejectReason, detail: String },
+    /// The backend failed (or died) while serving the request.
+    Backend(String),
+    /// The engine is shutting down (all handles dropped, or no live
+    /// workers remain); the request was not enqueued.
+    ShuttingDown,
+}
+
+impl EngineError {
+    /// The rejection reason, when this is an admission refusal.
+    pub fn reject_reason(&self) -> Option<RejectReason> {
+        match self {
+            EngineError::Rejected { reason, .. } => Some(*reason),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::Rejected { model, reason, detail } => {
+                write!(f, "request for {model:?} rejected ({}): {detail}", reason.as_str())
+            }
+            EngineError::Backend(msg) => write!(f, "backend error: {msg}"),
+            EngineError::ShuttingDown => write!(f, "engine is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Pending typed response.
+pub struct EngineWaiter {
+    rx: mpsc::Receiver<std::result::Result<Response, EngineError>>,
+}
+
+impl fmt::Debug for EngineWaiter {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("EngineWaiter")
+    }
+}
+
+impl EngineWaiter {
+    pub fn wait(self) -> std::result::Result<Response, EngineError> {
+        self.rx.recv().map_err(|_| {
+            EngineError::Backend("request dropped: worker exited mid-batch".to_string())
+        })?
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission policy (pure, property-tested)
+// ---------------------------------------------------------------------------
+
+/// Why [`admission_check`] refused — carries the evidence for the typed
+/// [`EngineError::Rejected`] detail string.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionDeny {
+    QueueFull { pending: usize, depth: usize },
+    PriorityShed { pending: usize, threshold: usize },
+    DeadlineShed { projected_us: u64, deadline_us: u64 },
+}
+
+impl AdmissionDeny {
+    pub fn reason(&self) -> RejectReason {
+        match self {
+            AdmissionDeny::QueueFull { .. } => RejectReason::Full,
+            AdmissionDeny::PriorityShed { .. } | AdmissionDeny::DeadlineShed { .. } => {
+                RejectReason::Shed
+            }
+        }
+    }
+
+    pub fn detail(&self) -> String {
+        match self {
+            AdmissionDeny::QueueFull { pending, depth } => {
+                format!("queue depth {depth} reached ({pending} pending)")
+            }
+            AdmissionDeny::PriorityShed { pending, threshold } => {
+                format!("priority shed: {pending} pending >= threshold {threshold}")
+            }
+            AdmissionDeny::DeadlineShed { projected_us, deadline_us } => {
+                format!("projected wait {projected_us}us exceeds deadline {deadline_us}us")
+            }
+        }
+    }
+}
+
+/// The pure admission decision, in check order:
+///
+/// 1. bounded queue — `pending >= queue_depth` refuses `Full`;
+/// 2. priority shed — `pending >= priority.shed_threshold(queue_depth)`
+///    refuses `Shed` (lower priorities first; `High`'s threshold equals
+///    the depth, so for `High` this is subsumed by check 1);
+/// 3. SLO projection — with a deadline, `projected_wait_us > deadline`
+///    refuses `Shed`.
+///
+/// Monotone in priority and in deadline (property-tested in
+/// `rust/tests/pool_props.rs`): raising either never turns an admit into
+/// a refusal at the same queue state. Pure so the policy is testable
+/// without clocks or threads; the engine evaluates it under the state
+/// lock with a live backlog snapshot.
+pub fn admission_check(
+    pending: usize,
+    queue_depth: usize,
+    priority: Priority,
+    deadline_us: Option<u64>,
+    projected_wait_us: u64,
+) -> std::result::Result<(), AdmissionDeny> {
+    if pending >= queue_depth {
+        return Err(AdmissionDeny::QueueFull { pending, depth: queue_depth });
+    }
+    let threshold = priority.shed_threshold(queue_depth);
+    if pending >= threshold {
+        return Err(AdmissionDeny::PriorityShed { pending, threshold });
+    }
+    if let Some(deadline) = deadline_us {
+        if projected_wait_us > deadline {
+            return Err(AdmissionDeny::DeadlineShed {
+                projected_us: projected_wait_us,
+                deadline_us: deadline,
+            });
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Declarative config (JSON file -> EngineBuilder)
+// ---------------------------------------------------------------------------
+
+/// Resolve a config-file `arch` string to a servable native model
+/// configuration.
+pub fn arch_forward_config(arch: &str) -> Result<ForwardConfig> {
+    match arch {
+        "micro" => Ok(ForwardConfig::micro()),
+        other => bail!("unknown arch {other:?}; servable archs: micro"),
+    }
+}
+
+/// One model variant in a declarative engine config file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelVariantConfig {
+    /// Registry name (`<model>@<variant>` by convention).
+    pub name: String,
+    /// Architecture key for [`arch_forward_config`] (currently `micro`).
+    pub arch: String,
+    /// Weight seed (native synthetic weights are a pure function of it).
+    pub seed: u64,
+    /// Optional static scan calibration table path (`mamba-x calibrate`);
+    /// loading validates it against the arch — no silent fallback.
+    pub calib: Option<String>,
+    /// Default latency target for requests without an explicit deadline.
+    pub slo_us: Option<u64>,
+    /// Initial per-item service-time estimate (microseconds, 0 = none).
+    pub service_hint_us: u64,
+}
+
+impl ModelVariantConfig {
+    pub fn new(name: impl Into<String>, arch: impl Into<String>, seed: u64) -> Self {
+        ModelVariantConfig {
+            name: name.into(),
+            arch: arch.into(),
+            seed,
+            calib: None,
+            slo_us: None,
+            service_hint_us: 0,
+        }
+    }
+
+    pub fn forward_config(&self) -> Result<ForwardConfig> {
+        arch_forward_config(&self.arch)
+    }
+
+    /// Build this variant's backend factory: resolve the arch, load and
+    /// validate the calibration table (if any), bake both plus the seed
+    /// into a [`crate::runtime::NativeBackend`] constructor.
+    pub fn build_factory(&self) -> Result<BackendFactory> {
+        let cfg = self.forward_config().with_context(|| format!("model {:?}", self.name))?;
+        let calib = match &self.calib {
+            Some(path) => {
+                let table = CalibTable::load(path)
+                    .with_context(|| format!("model {:?} calibration", self.name))?;
+                table
+                    .validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())
+                    .with_context(|| format!("model {:?} calibration {path:?}", self.name))?;
+                Some(Arc::new(table))
+            }
+            None => None,
+        };
+        Ok(crate::runtime::NativeBackend::factory(cfg, self.seed, calib))
+    }
+
+    /// Resolve into a registrable [`ModelSpec`] (factory + SLO knobs).
+    pub fn to_spec(&self) -> Result<ModelSpec> {
+        let mut spec = ModelSpec::new(self.name.clone(), self.build_factory()?)
+            .service_hint_us(self.service_hint_us);
+        if let Some(slo) = self.slo_us {
+            spec = spec.slo_us(slo);
+        }
+        Ok(spec)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.obj()?;
+        for key in obj.keys() {
+            if !["name", "arch", "seed", "calib", "slo_us", "service_hint_us"]
+                .contains(&key.as_str())
+            {
+                bail!("unknown model key {key:?} in engine config");
+            }
+        }
+        let mut v = ModelVariantConfig::new(
+            j.get("name")?.str()?.to_string(),
+            j.get("arch")?.str()?.to_string(),
+            j.get("seed")?.u64_exact()?,
+        );
+        if let Some(c) = j.opt("calib") {
+            v.calib = Some(c.str()?.to_string());
+        }
+        if let Some(s) = j.opt("slo_us") {
+            v.slo_us = Some(s.u64_exact()?);
+        }
+        if let Some(h) = j.opt("service_hint_us") {
+            v.service_hint_us = h.u64_exact()?;
+        }
+        Ok(v)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("arch", Json::Str(self.arch.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+        ];
+        if let Some(c) = &self.calib {
+            pairs.push(("calib", Json::Str(c.clone())));
+        }
+        if let Some(s) = self.slo_us {
+            pairs.push(("slo_us", Json::Num(s as f64)));
+        }
+        if self.service_hint_us > 0 {
+            pairs.push(("service_hint_us", Json::Num(self.service_hint_us as f64)));
+        }
+        Json::obj_from(pairs)
+    }
+}
+
+/// Declarative engine configuration (`serve --engine engine.json`): the
+/// pool geometry plus every hosted model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    pub workers: usize,
+    pub policy: BatchPolicy,
+    pub queue_depth: usize,
+    pub models: Vec<ModelVariantConfig>,
+}
+
+impl EngineConfig {
+    pub fn new(models: Vec<ModelVariantConfig>) -> Self {
+        EngineConfig {
+            workers: 4,
+            policy: BatchPolicy::default(),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            models,
+        }
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        Self::from_json(&Json::load(path)?)
+            .with_context(|| format!("engine config {}", path.display()))
+    }
+
+    /// Parse, rejecting unknown keys (a typo'd knob silently falling
+    /// back to its default is worse than an error — same philosophy as
+    /// the CLI flag parser).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.obj()?;
+        for key in obj.keys() {
+            if !["workers", "max_batch", "max_wait_us", "queue_depth", "models"]
+                .contains(&key.as_str())
+            {
+                bail!("unknown engine config key {key:?}");
+            }
+        }
+        let models: Vec<ModelVariantConfig> = j
+            .get("models")?
+            .arr()?
+            .iter()
+            .map(ModelVariantConfig::from_json)
+            .collect::<Result<_>>()?;
+        if models.is_empty() {
+            bail!("engine config must list at least one model");
+        }
+        // Catch duplicate names at parse time — `models --engine` promises
+        // a blessed config also builds, and the registry would refuse it.
+        for (i, m) in models.iter().enumerate() {
+            if models[..i].iter().any(|other| other.name == m.name) {
+                bail!("duplicate model name {:?} in engine config", m.name);
+            }
+        }
+        let mut cfg = EngineConfig::new(models);
+        if let Some(w) = j.opt("workers") {
+            cfg.workers = w.usize()?.max(1);
+        }
+        if let Some(b) = j.opt("max_batch") {
+            cfg.policy.max_batch = b.usize()?.max(1);
+        }
+        if let Some(w) = j.opt("max_wait_us") {
+            cfg.policy.max_wait_us = w.u64_exact()?;
+        }
+        if let Some(d) = j.opt("queue_depth") {
+            cfg.queue_depth = d.usize()?.max(1);
+        }
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("workers", Json::Num(self.workers as f64)),
+            ("max_batch", Json::Num(self.policy.max_batch as f64)),
+            ("max_wait_us", Json::Num(self.policy.max_wait_us as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine internals
+// ---------------------------------------------------------------------------
+
+struct Job {
+    id: u64,
+    image: Tensor,
+    reply: mpsc::Sender<std::result::Result<Response, EngineError>>,
+    t0: Instant,
+    // No priority/deadline here: admission decides at submit time only,
+    // so an accepted request carries no further shed surface.
+}
+
+/// Per-model counters updated lock-free (admission + workers).
+struct ModelStats {
+    rejected_full: AtomicU64,
+    rejected_shed: AtomicU64,
+    /// EWMA of observed per-item service time (microseconds; 0 = no
+    /// observation yet). Seeded from the variant's `service_hint_us`.
+    service_ewma_us: AtomicU64,
+}
+
+struct ModelEntry {
+    name: String,
+    factory: BackendFactory,
+    slo_us: Option<u64>,
+    stats: ModelStats,
+}
+
+struct EngineState {
+    /// One FIFO batcher per registered model, index-aligned with
+    /// `EngineShared::models`; a released batch never mixes models.
+    queues: Vec<DynamicBatcher<Job>>,
+    /// All client handles dropped: drain and stop.
+    closed: bool,
+    /// Workers still running (including ones still in their factories).
+    workers_alive: usize,
+}
+
+struct EngineShared {
+    state: Mutex<EngineState>,
+    work_cv: Condvar,
+    start: Instant,
+    policy: BatchPolicy,
+    queue_depth: usize,
+    workers: usize,
+    models: Vec<ModelEntry>,
+    /// Live `Engine` handle clones; the last drop closes the queues.
+    handles: AtomicUsize,
+    rejected_unknown: AtomicU64,
+}
+
+impl EngineShared {
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Projected wait for a newly admitted request: every pending item,
+    /// weighted by its model's observed per-item service time, divided
+    /// across the pool. Models with no observation yet project zero —
+    /// admission stays open until evidence of slowness exists.
+    fn projected_wait_us(&self, st: &EngineState) -> u64 {
+        let total = st
+            .queues
+            .iter()
+            .zip(&self.models)
+            .map(|(q, m)| {
+                (q.len() as u64).saturating_mul(m.stats.service_ewma_us.load(Ordering::Relaxed))
+            })
+            .fold(0u64, u64::saturating_add);
+        total / self.workers.max(1) as u64
+    }
+}
+
+/// Client handle to a running engine. Cloneable and `Send`; the engine
+/// drains and shuts down once every handle is dropped.
+pub struct Engine {
+    shared: Arc<EngineShared>,
+}
+
+impl Clone for Engine {
+    fn clone(&self) -> Self {
+        self.shared.handles.fetch_add(1, Ordering::Relaxed);
+        Engine { shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if self.shared.handles.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+            st.closed = true;
+            drop(st);
+            self.shared.work_cv.notify_all();
+        }
+    }
+}
+
+impl Engine {
+    /// Names of the hosted model variants, in registration order.
+    pub fn models(&self) -> Vec<String> {
+        self.shared.models.iter().map(|m| m.name.clone()).collect()
+    }
+
+    /// Admit and enqueue a request, returning a waiter for its response.
+    /// Fails immediately — typed, without enqueueing — when the target
+    /// model is unknown, the engine is shutting down, or admission
+    /// refuses ([`RejectReason`]).
+    pub fn submit(&self, req: Request) -> std::result::Result<EngineWaiter, EngineError> {
+        let Request { model, id, priority, deadline_us, image } = req;
+        let Some(midx) = self.shared.models.iter().position(|m| m.name == model) else {
+            self.shared.rejected_unknown.fetch_add(1, Ordering::Relaxed);
+            let hosted =
+                self.shared.models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(", ");
+            return Err(EngineError::Rejected {
+                model,
+                reason: RejectReason::UnknownModel,
+                detail: format!("hosted models: {hosted}"),
+            });
+        };
+        let entry = &self.shared.models[midx];
+        let deadline = deadline_us.or(entry.slo_us);
+        let (reply, rx) = mpsc::channel();
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed || st.workers_alive == 0 {
+            return Err(EngineError::ShuttingDown);
+        }
+        let pending: usize = st.queues.iter().map(|q| q.len()).sum();
+        let projected = self.shared.projected_wait_us(&st);
+        let now = self.shared.now_us();
+        if let Err(deny) =
+            admission_check(pending, self.shared.queue_depth, priority, deadline, projected)
+        {
+            let detail = match (&deny, st.queues[midx].oldest_wait_us(now)) {
+                (AdmissionDeny::DeadlineShed { .. }, Some(wait)) => {
+                    format!("{}; oldest queued for {wait}us", deny.detail())
+                }
+                _ => deny.detail(),
+            };
+            drop(st);
+            let counter = match deny.reason() {
+                RejectReason::Full => &entry.stats.rejected_full,
+                _ => &entry.stats.rejected_shed,
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            return Err(EngineError::Rejected { model, reason: deny.reason(), detail });
+        }
+        st.queues[midx].push(Job { id, image, reply, t0: Instant::now() }, now);
+        drop(st);
+        self.shared.work_cv.notify_one();
+        Ok(EngineWaiter { rx })
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, req: Request) -> std::result::Result<Response, EngineError> {
+        self.submit(req)?.wait()
+    }
+}
+
+/// Builds an [`Engine`] from a registry plus pool geometry — the
+/// programmatic twin of [`EngineConfig`].
+pub struct EngineBuilder {
+    registry: ModelRegistry,
+    workers: usize,
+    policy: BatchPolicy,
+    queue_depth: usize,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            registry: ModelRegistry::new(),
+            workers: 1,
+            policy: BatchPolicy::default(),
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve a declarative config into a ready-to-build engine
+    /// (factories constructed, calibration tables loaded and validated).
+    pub fn from_config(cfg: &EngineConfig) -> Result<Self> {
+        let mut b = EngineBuilder::new()
+            .workers(cfg.workers)
+            .policy(cfg.policy)
+            .queue_depth(cfg.queue_depth);
+        for variant in &cfg.models {
+            b = b.register(variant.to_spec()?)?;
+        }
+        Ok(b)
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    pub fn policy(mut self, mut policy: BatchPolicy) -> Self {
+        // Clamp like workers/queue_depth: max_batch 0 would otherwise
+        // trip the batcher's constructor assert at build time.
+        policy.max_batch = policy.max_batch.max(1);
+        self.policy = policy;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Host a model variant; duplicate names are an error.
+    pub fn register(mut self, spec: ModelSpec) -> Result<Self> {
+        self.registry.register(spec)?;
+        Ok(self)
+    }
+
+    /// Spawn the worker pool (each worker builds one backend per hosted
+    /// variant, on its own thread) and return the client handle plus the
+    /// join handle that resolves to the per-model [`EngineReport`].
+    pub fn build(self) -> Result<(Engine, EngineJoin)> {
+        if self.registry.is_empty() {
+            bail!("engine has no registered models");
+        }
+        let models: Vec<ModelEntry> = self
+            .registry
+            .specs()
+            .iter()
+            .map(|s| ModelEntry {
+                name: s.name.clone(),
+                factory: Arc::clone(&s.factory),
+                slo_us: s.slo_us,
+                stats: ModelStats {
+                    rejected_full: AtomicU64::new(0),
+                    rejected_shed: AtomicU64::new(0),
+                    service_ewma_us: AtomicU64::new(s.service_hint_us),
+                },
+            })
+            .collect();
+        let n_models = models.len();
+        let shared = Arc::new(EngineShared {
+            state: Mutex::new(EngineState {
+                queues: (0..n_models).map(|_| DynamicBatcher::new(self.policy)).collect(),
+                closed: false,
+                workers_alive: self.workers,
+            }),
+            work_cv: Condvar::new(),
+            start: Instant::now(),
+            policy: self.policy,
+            queue_depth: self.queue_depth,
+            workers: self.workers,
+            models,
+            handles: AtomicUsize::new(1),
+            rejected_unknown: AtomicU64::new(0),
+        });
+        let threads = (0..self.workers)
+            .map(|w| {
+                let worker_shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_entry(&worker_shared, w))
+            })
+            .collect();
+        let engine = Engine { shared: Arc::clone(&shared) };
+        Ok((engine, EngineJoin { threads, shared }))
+    }
+}
+
+/// Per-model serving outcome, merged across the pool at join time.
+#[derive(Debug, Clone)]
+pub struct ModelReport {
+    pub name: String,
+    pub metrics: Metrics,
+}
+
+/// Final engine accounting: one [`Metrics`] per hosted variant (latency
+/// union + per-reason rejection counters) plus the engine-level
+/// unknown-model rejection count.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub models: Vec<ModelReport>,
+    pub rejected_unknown_model: u64,
+}
+
+impl EngineReport {
+    pub fn model(&self, name: &str) -> Option<&ModelReport> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    /// Union of every model's metrics (the v0 single-model view).
+    pub fn merged(&self) -> Metrics {
+        let mut merged = Metrics::default();
+        for m in &self.models {
+            merged.merge(&m.metrics);
+        }
+        merged
+    }
+
+    /// Total completed requests across models.
+    pub fn completed(&self) -> usize {
+        self.models.iter().map(|m| m.metrics.count()).sum()
+    }
+
+    /// Multi-line, per-model summary with per-reason rejection counters.
+    pub fn summary(&self) -> String {
+        let width = self.models.iter().map(|m| m.name.len()).max().unwrap_or(0);
+        let mut out = String::new();
+        for m in &self.models {
+            out.push_str(&format!("model {:width$}  {}\n", m.name, m.metrics.summary()));
+        }
+        out.push_str(&format!("rejected_unknown_model={}", self.rejected_unknown_model));
+        out
+    }
+}
+
+/// Join handle over the engine's worker pool.
+pub struct EngineJoin {
+    threads: Vec<std::thread::JoinHandle<Result<Vec<Metrics>>>>,
+    shared: Arc<EngineShared>,
+}
+
+impl EngineJoin {
+    /// Wait for every worker and merge their per-model metrics, folding
+    /// in the admission rejection counters. Errors only if a worker
+    /// panicked or *no* worker ever became ready; individual factory
+    /// failures in a partially-healthy pool are tolerated.
+    pub fn join(self) -> Result<EngineReport> {
+        let EngineJoin { threads, shared } = self;
+        let mut per_model: Vec<Metrics> = vec![Metrics::default(); shared.models.len()];
+        let mut ok = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for t in threads {
+            match t.join() {
+                Ok(Ok(worker_metrics)) => {
+                    for (agg, m) in per_model.iter_mut().zip(&worker_metrics) {
+                        agg.merge(m);
+                    }
+                    ok += 1;
+                }
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => return Err(anyhow!("worker thread panicked")),
+            }
+        }
+        if ok == 0 {
+            return Err(first_err.unwrap_or_else(|| anyhow!("engine had no workers")));
+        }
+        let models = shared
+            .models
+            .iter()
+            .zip(per_model)
+            .map(|(entry, mut metrics)| {
+                metrics.rejected_full += entry.stats.rejected_full.load(Ordering::Relaxed);
+                metrics.rejected_shed += entry.stats.rejected_shed.load(Ordering::Relaxed);
+                ModelReport { name: entry.name.clone(), metrics }
+            })
+            .collect();
+        Ok(EngineReport {
+            models,
+            rejected_unknown_model: shared.rejected_unknown.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// Decrements `workers_alive` on EVERY exit path — normal shutdown,
+/// factory failure, or a panic unwinding out of a backend — and, when
+/// the last worker leaves, error-fails whatever is still queued (typed)
+/// so no client blocks forever on a reply that will never come.
+struct WorkerExit<'a> {
+    shared: &'a EngineShared,
+    error: EngineError,
+}
+
+impl Drop for WorkerExit<'_> {
+    fn drop(&mut self) {
+        // A panic inside a backend happens with the state lock released,
+        // but recover from poisoning anyway: this guard must run.
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.workers_alive -= 1;
+        if st.workers_alive == 0 {
+            for q in st.queues.iter_mut() {
+                for job in q.flush() {
+                    let _ = job.reply.send(Err(self.error.clone()));
+                }
+            }
+        }
+        drop(st);
+        self.shared.work_cv.notify_all();
+    }
+}
+
+fn worker_entry(shared: &EngineShared, worker: usize) -> Result<Vec<Metrics>> {
+    let mut exit = WorkerExit {
+        shared,
+        error: EngineError::Backend("worker panicked; request not served".to_string()),
+    };
+    // One backend instance per hosted variant, all owned by this thread.
+    let mut backends: Vec<Box<dyn InferenceBackend>> = Vec::with_capacity(shared.models.len());
+    for entry in &shared.models {
+        match (entry.factory)(worker) {
+            Ok(b) => backends.push(b),
+            Err(e) => {
+                exit.error =
+                    EngineError::Backend(format!("backend init for {:?} failed: {e}", entry.name));
+                return Err(anyhow!("worker {worker}: backend init for {:?}: {e}", entry.name));
+            }
+        }
+    }
+    let metrics = worker_loop(shared, &mut backends);
+    exit.error = EngineError::ShuttingDown;
+    Ok(metrics)
+}
+
+fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]) -> Vec<Metrics> {
+    let n_models = backends.len();
+    let mut metrics: Vec<Metrics> = vec![Metrics::default(); n_models];
+    // One reusable batch buffer per worker (allocation-free hot loop).
+    let mut batch: Vec<Job> = Vec::new();
+    // Round-robin scan start so one busy model cannot starve the rest.
+    let mut rr = 0usize;
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        let now = shared.now_us();
+        if st.closed && st.queues.iter().all(|q| q.is_empty()) {
+            break;
+        }
+        // Pick the next model (round-robin from rr) with a released batch.
+        let mut picked: Option<usize> = None;
+        for k in 0..n_models {
+            let m = (rr + k) % n_models;
+            if st.queues[m].poll_into(now, &mut batch) {
+                picked = Some(m);
+                rr = (m + 1) % n_models;
+                break;
+            }
+        }
+        if picked.is_none() {
+            if st.closed {
+                // Shutdown drain, in policy-sized single-model chunks
+                // shared across workers so every pending request is
+                // answered exactly once.
+                for k in 0..n_models {
+                    let m = (rr + k) % n_models;
+                    if !st.queues[m].is_empty() {
+                        st.queues[m].drain_up_to_into(shared.policy.max_batch, &mut batch);
+                        picked = Some(m);
+                        rr = (m + 1) % n_models;
+                        break;
+                    }
+                }
+                if picked.is_none() {
+                    // Lost the drain race; the loop header re-checks exit.
+                    continue;
+                }
+            } else {
+                // Wait for work or the earliest queue deadline.
+                let wait = st
+                    .queues
+                    .iter()
+                    .filter_map(|q| q.deadline_us())
+                    .min()
+                    .map(|d| Duration::from_micros(d.saturating_sub(now)).min(IDLE_WAIT))
+                    .unwrap_or(IDLE_WAIT);
+                let (guard, _timeout) = shared.work_cv.wait_timeout(st, wait).unwrap();
+                st = guard;
+                continue;
+            }
+        }
+        let m = picked.expect("picked set on every non-wait path");
+        drop(st);
+        if batch.is_empty() {
+            // Lost a shutdown-drain race to another worker.
+            st = shared.state.lock().unwrap();
+            continue;
+        }
+        metrics[m].record_batch(batch.len());
+        // One batched backend call for the whole released batch; results
+        // are per-item, so one malformed request fails only its own slot.
+        let exec_t0 = Instant::now();
+        let results = {
+            let images: Vec<&Tensor> = batch.iter().map(|j| &j.image).collect();
+            backends[m].infer_batch(&images)
+        };
+        // Fold the measured per-item service time into the model's EWMA
+        // (the admission layer's SLO projection reads it lock-free). CAS
+        // loop: a plain load/store pair would let concurrent workers
+        // overwrite each other's observations on a hot model.
+        let per_item_us = (exec_t0.elapsed().as_micros() as u64 / batch.len() as u64).max(1);
+        let _ = shared.models[m].stats.service_ewma_us.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |old| {
+                Some(if old == 0 {
+                    per_item_us
+                } else {
+                    old.saturating_mul(3).saturating_add(per_item_us) / 4
+                })
+            },
+        );
+        if results.len() == batch.len() {
+            let name = &shared.models[m].name;
+            for (job, result) in batch.drain(..).zip(results) {
+                let latency_us = job.t0.elapsed().as_micros() as u64;
+                let res = match result {
+                    Ok(logits) => {
+                        metrics[m].record_request(latency_us, shared.now_us());
+                        Ok(Response { id: job.id, model: name.clone(), logits, latency_us })
+                    }
+                    Err(e) => Err(EngineError::Backend(format!("{e}"))),
+                };
+                let _ = job.reply.send(res);
+            }
+        } else {
+            // A broken backend contract must not strand clients.
+            let msg = format!(
+                "backend {} returned {} results for a batch of {}",
+                backends[m].name(),
+                results.len(),
+                batch.len()
+            );
+            for job in batch.drain(..) {
+                let _ = job.reply.send(Err(EngineError::Backend(msg.clone())));
+            }
+        }
+        st = shared.state.lock().unwrap();
+    }
+    // Exit bookkeeping (workers_alive, failing leftovers) lives in the
+    // caller's WorkerExit guard so it also runs on unwind.
+    drop(st);
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic test backend: logits = [k * sum(image)].
+    struct Scale {
+        k: f32,
+    }
+
+    impl InferenceBackend for Scale {
+        fn name(&self) -> &'static str {
+            "scale"
+        }
+
+        fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+            Ok(vec![self.k * image.data.iter().sum::<f32>()])
+        }
+    }
+
+    fn scale_factory(k: f32) -> BackendFactory {
+        Arc::new(move |_w| Ok(Box::new(Scale { k }) as Box<dyn InferenceBackend>))
+    }
+
+    #[test]
+    fn priority_thresholds_monotone_and_degenerate() {
+        for depth in [1usize, 2, 3, 4, 7, 8, 100] {
+            let low = Priority::Low.shed_threshold(depth);
+            let normal = Priority::Normal.shed_threshold(depth);
+            let high = Priority::High.shed_threshold(depth);
+            assert!(low <= normal && normal <= high, "depth {depth}");
+            assert_eq!(high, depth);
+            assert!(low >= 1);
+        }
+        assert_eq!(Priority::Low.shed_threshold(8), 4);
+        assert_eq!(Priority::Normal.shed_threshold(8), 6);
+    }
+
+    #[test]
+    fn admission_check_order_and_evidence() {
+        // Full wins over everything at depth.
+        assert_eq!(
+            admission_check(8, 8, Priority::High, Some(0), u64::MAX),
+            Err(AdmissionDeny::QueueFull { pending: 8, depth: 8 })
+        );
+        // Low priority sheds at half depth; High rides to the top.
+        assert_eq!(
+            admission_check(4, 8, Priority::Low, None, 0),
+            Err(AdmissionDeny::PriorityShed { pending: 4, threshold: 4 })
+        );
+        assert!(admission_check(4, 8, Priority::Normal, None, 0).is_ok());
+        assert!(admission_check(7, 8, Priority::High, None, 0).is_ok());
+        // SLO: strictly-over sheds, at-deadline admits.
+        assert_eq!(
+            admission_check(1, 8, Priority::High, Some(100), 101),
+            Err(AdmissionDeny::DeadlineShed { projected_us: 101, deadline_us: 100 })
+        );
+        assert!(admission_check(1, 8, Priority::High, Some(100), 100).is_ok());
+        assert!(admission_check(1, 8, Priority::High, None, u64::MAX).is_ok());
+        // Depth 1 degenerates to the v0 bounded queue for any priority.
+        assert!(admission_check(0, 1, Priority::Low, None, 0).is_ok());
+        assert_eq!(
+            admission_check(1, 1, Priority::Low, None, 0),
+            Err(AdmissionDeny::QueueFull { pending: 1, depth: 1 })
+        );
+    }
+
+    #[test]
+    fn priority_parse_round_trip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.as_str()).unwrap(), p);
+        }
+        assert!(Priority::parse("urgent").is_err());
+        assert!(Priority::Low < Priority::Normal && Priority::Normal < Priority::High);
+    }
+
+    #[test]
+    fn engine_error_display_is_actionable() {
+        let e = EngineError::Rejected {
+            model: "m@a".to_string(),
+            reason: RejectReason::Shed,
+            detail: "projected wait 900us exceeds deadline 100us".to_string(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("m@a") && s.contains("shed") && s.contains("900us"), "{s}");
+        assert_eq!(e.reject_reason(), Some(RejectReason::Shed));
+        assert_eq!(EngineError::ShuttingDown.reject_reason(), None);
+    }
+
+    #[test]
+    fn engine_routes_by_model_and_counts_unknown() {
+        let (engine, join) = EngineBuilder::new()
+            .workers(2)
+            .policy(BatchPolicy { max_batch: 2, max_wait_us: 100 })
+            .register(ModelSpec::new("m@pos", scale_factory(1.0)))
+            .unwrap()
+            .register(ModelSpec::new("m@neg", scale_factory(-1.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        assert_eq!(engine.models(), vec!["m@pos", "m@neg"]);
+        for id in 0..10u64 {
+            let img = Tensor::new(vec![2], vec![id as f32, 1.0]).unwrap();
+            let pos = engine.infer(Request::new("m@pos", id, img.clone())).unwrap();
+            assert_eq!((pos.id, pos.model.as_str()), (id, "m@pos"));
+            assert_eq!(pos.logits, vec![id as f32 + 1.0]);
+            let neg = engine.infer(Request::new("m@neg", id, img)).unwrap();
+            assert_eq!(neg.logits, vec![-(id as f32 + 1.0)]);
+        }
+        let err = engine.infer(Request::new("m@zzz", 0, Tensor::zeros(vec![2]))).unwrap_err();
+        assert_eq!(err.reject_reason(), Some(RejectReason::UnknownModel));
+        assert!(err.to_string().contains("m@pos"), "detail lists hosted models: {err}");
+        drop(engine);
+        let report = join.join().unwrap();
+        assert_eq!(report.rejected_unknown_model, 1);
+        assert_eq!(report.model("m@pos").unwrap().metrics.count(), 10);
+        assert_eq!(report.model("m@neg").unwrap().metrics.count(), 10);
+        assert_eq!(report.completed(), 20);
+        assert_eq!(report.merged().count(), 20);
+        assert!(report.summary().contains("rejected_unknown_model=1"));
+    }
+
+    #[test]
+    fn failed_factory_turns_into_typed_shutdown() {
+        let bad: BackendFactory = Arc::new(|_w| Err(anyhow!("no device")));
+        let (engine, join) =
+            EngineBuilder::new().register(ModelSpec::new("m", bad)).unwrap().build().unwrap();
+        // The worker dies in its factory; depending on timing a submit is
+        // either refused typed (ShuttingDown) or accepted and then failed
+        // by the exit flush. Never a hang, never an untyped error.
+        let mut saw_shutdown = false;
+        for _ in 0..400 {
+            match engine.submit(Request::new("m", 0, Tensor::zeros(vec![1]))) {
+                Err(EngineError::ShuttingDown) => {
+                    saw_shutdown = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+                Ok(w) => assert!(w.wait().is_err(), "must fail, not hang"),
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(saw_shutdown, "engine must report ShuttingDown once the pool is dead");
+        drop(engine);
+        assert!(join.join().is_err(), "all-dead pool surfaces the init error at join");
+    }
+
+    #[test]
+    fn engine_config_json_round_trip_and_unknown_keys() {
+        let text = r#"{
+            "workers": 2, "max_batch": 4, "max_wait_us": 500, "queue_depth": 32,
+            "models": [
+                {"name": "vim-micro@dynamic", "arch": "micro", "seed": 7},
+                {"name": "vim-micro@calib", "arch": "micro", "seed": 7,
+                 "calib": "artifacts/calib_micro.json",
+                 "slo_us": 40000, "service_hint_us": 900}
+            ]
+        }"#;
+        let cfg = EngineConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.policy, BatchPolicy { max_batch: 4, max_wait_us: 500 });
+        assert_eq!(cfg.queue_depth, 32);
+        assert_eq!(cfg.models.len(), 2);
+        assert_eq!(cfg.models[0].slo_us, None);
+        assert_eq!(cfg.models[1].calib.as_deref(), Some("artifacts/calib_micro.json"));
+        assert_eq!(cfg.models[1].slo_us, Some(40_000));
+        assert_eq!(cfg.models[1].service_hint_us, 900);
+        let round = EngineConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(cfg, round);
+
+        // Typo'd keys and empty registries are errors, not defaults.
+        assert!(EngineConfig::from_json(&Json::parse(r#"{"modles": []}"#).unwrap()).is_err());
+        assert!(EngineConfig::from_json(&Json::parse(r#"{"models": []}"#).unwrap()).is_err());
+        let bad = r#"{"models": [{"name": "x", "arch": "micro", "seed": 1, "sloo_us": 5}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+        let dup = r#"{"models": [{"name": "x", "arch": "micro", "seed": 1},
+                                 {"name": "x", "arch": "micro", "seed": 2}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(dup).unwrap()).is_err());
+        let neg = r#"{"models": [{"name": "x", "arch": "micro", "seed": -3}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(neg).unwrap()).is_err());
+        assert!(arch_forward_config("giga").is_err());
+    }
+}

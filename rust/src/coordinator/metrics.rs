@@ -9,11 +9,20 @@ pub struct Metrics {
     pub batch_items: u64,
     pub first_us: Option<u64>,
     pub last_us: u64,
-    /// Requests refused at admission (bounded-queue backpressure).
-    pub rejected: u64,
+    /// Requests refused at admission because the queue was at depth
+    /// (bounded-queue backpressure; [`crate::coordinator::RejectReason::Full`]).
+    pub rejected_full: u64,
+    /// Requests shed at admission by priority or SLO-projection policy
+    /// ([`crate::coordinator::RejectReason::Shed`]).
+    pub rejected_shed: u64,
 }
 
 impl Metrics {
+    /// Total requests refused at admission, any reason.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_full + self.rejected_shed
+    }
+
     /// Fold another worker's metrics into this one (pool shutdown path).
     /// Percentiles of the merged recorder are percentiles over the union
     /// of all samples, not averages of per-worker percentiles.
@@ -26,7 +35,8 @@ impl Metrics {
             (a, b) => a.or(b),
         };
         self.last_us = self.last_us.max(other.last_us);
-        self.rejected += other.rejected;
+        self.rejected_full += other.rejected_full;
+        self.rejected_shed += other.rejected_shed;
     }
     pub fn record_request(&mut self, latency_us: u64, completed_at_us: u64) {
         self.latencies_us.push(latency_us);
@@ -83,10 +93,12 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "n={} rejected={} mean={:.1}ms p50={:.1}ms p95={:.1}ms p99={:.1}ms \
-             batch_avg={:.2} throughput={:.1} req/s",
+            "n={} rejected={} (full {}, shed {}) mean={:.1}ms p50={:.1}ms p95={:.1}ms \
+             p99={:.1}ms batch_avg={:.2} throughput={:.1} req/s",
             self.count(),
-            self.rejected,
+            self.rejected(),
+            self.rejected_full,
+            self.rejected_shed,
             self.mean_us() / 1e3,
             self.percentile_us(50.0) as f64 / 1e3,
             self.percentile_us(95.0) as f64 / 1e3,
@@ -137,14 +149,16 @@ mod tests {
         }
         a.record_batch(10);
         b.record_batch(5);
-        b.rejected = 3;
+        b.rejected_full = 2;
+        b.rejected_shed = 1;
         a.merge(&b);
         assert_eq!(a.count(), 20);
         assert_eq!(a.batches, 2);
         assert_eq!(a.batch_items, 15);
         assert_eq!(a.first_us, Some(1));
         assert_eq!(a.last_us, 110);
-        assert_eq!(a.rejected, 3);
+        assert_eq!(a.rejected(), 3);
+        assert_eq!((a.rejected_full, a.rejected_shed), (2, 1));
         // Union percentiles: p50 over {100..1000, 1000..10000} samples.
         assert_eq!(a.percentile_us(50.0), 1000);
     }

@@ -2,25 +2,37 @@
 //!
 //! Mamba-X's system contribution is the accelerator; its deployment story
 //! is an *edge vision service* (paper §1: autonomous vehicles, smart
-//! surveillance, AR). This module is that service: a request router +
-//! shared dynamic batcher in front of an N-worker pool of
-//! [`crate::runtime::InferenceBackend`]s (the vLLM-router shape, scaled
-//! to edge):
+//! surveillance, AR). This module is that service — since API v1, a
+//! multi-model **engine**: a typed request router + per-model dynamic
+//! batchers in front of an N-worker pool where every worker owns one
+//! backend instance per hosted [`crate::runtime::ModelSpec`] (the
+//! vLLM-router shape, scaled to edge):
 //!
+//! * [`engine`] — the v1 surface: [`EngineBuilder`] / [`EngineConfig`]
+//!   construct the pool declaratively, [`Request`] / [`Response`] /
+//!   [`EngineError`] type the client path end to end, and admission is
+//!   latency-target-aware (bounded queue, per-priority shedding, SLO
+//!   projection from observed service times);
 //! * [`batcher`] — pure batching policy (max batch / max wait), FIFO per
-//!   stream, property-tested invariants (`rust/tests/sim_props.rs`);
-//! * [`server`] — worker pool: shared bounded ingress queue, per-worker
-//!   backend ownership, shutdown drain with exactly-once replies;
-//! * [`metrics`] — latency/throughput percentiles, merged across the
-//!   pool at join time.
+//!   model queue, property-tested invariants (`rust/tests/sim_props.rs`);
+//! * [`server`] — the v0 single-model `ServerHandle` surface, kept as a
+//!   thin shim over the engine (README.md §Serving API has the
+//!   migration table);
+//! * [`metrics`] — latency/throughput percentiles plus per-reason
+//!   rejection counters, merged per model across the pool at join time.
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use engine::{
+    admission_check, arch_forward_config, AdmissionDeny, Engine, EngineBuilder, EngineConfig,
+    EngineError, EngineJoin, EngineReport, EngineWaiter, ModelReport, ModelVariantConfig,
+    Priority, RejectReason, Request, Response, DEFAULT_QUEUE_DEPTH,
+};
 pub use metrics::Metrics;
 pub use server::{
     InferenceRequest, InferenceResponse, PoolJoin, ResponseWaiter, Server, ServerHandle,
-    DEFAULT_QUEUE_DEPTH,
 };

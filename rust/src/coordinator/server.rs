@@ -1,46 +1,32 @@
-//! Serving loop: shared ingress queue -> dynamic batcher -> N worker
-//! threads, with bounded-queue backpressure.
+//! v0 serving surface, reimplemented as a thin shim over the v1
+//! [`Engine`](super::engine::Engine).
 //!
-//! Clients submit through a [`ServerHandle`] into one shared
-//! [`DynamicBatcher`] guarded by a mutex + condvar; workers pull
-//! policy-released batches and execute them on their own
-//! [`InferenceBackend`] instance (std threads — the offline build has no
-//! async runtime, and device-bound workers want thread affinity anyway).
-//! Backends are constructed *on the worker thread* via the factory passed
-//! to [`Server::spawn`] / [`Server::spawn_pool`]: PJRT handles are not
-//! `Send`, and per-worker ownership means no locking on the hot path.
-//! Backend-wide configuration rides the factory the same way — e.g.
-//! `serve --calib` clones one `Arc<CalibTable>` into every worker's
-//! native backend so each released batch runs the batch-fused quantized
-//! scan; the queue, batcher and handles stay calibration-agnostic.
+//! [`ServerHandle::submit`] / [`Server::spawn_pool`] keep their original
+//! (single anonymous model, `anyhow`-erroring) signatures, but every
+//! request now flows through the engine: the handle targets one variant
+//! registered as `"default"`, submitted at [`Priority::High`] with no
+//! deadline — which reduces v1 admission exactly to the v0 bounded-queue
+//! check (`High`'s shed threshold equals the queue depth, and without a
+//! deadline no SLO projection applies). New code should use the typed
+//! engine API directly; this module exists so the v0 call sites and
+//! their invariants (`rust/tests/serving_props.rs`,
+//! `rust/tests/pool_props.rs`) carry over unchanged.
 //!
-//! Invariants the property tests (`rust/tests/pool_props.rs`,
-//! `rust/tests/serving_props.rs`) enforce:
-//!
-//! * every accepted request is answered exactly once, including across a
-//!   shutdown drain (conservation);
-//! * admission beyond `queue_depth` pending requests is refused
-//!   immediately (bounded queue, counted in [`Metrics::rejected`]);
-//! * responses are independent of worker count, batch composition and
-//!   client interleaving (backends are deterministic pure functions);
-//! * the final [`Metrics`] are the merge of every worker's recorder.
+//! Migration table (v0 -> v1) lives in README.md §Serving API.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
+use anyhow::{anyhow, Result};
+use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Result};
+use crate::runtime::{InferenceBackend, ModelSpec, Tensor};
 
-use crate::runtime::{InferenceBackend, Tensor};
-
-use super::batcher::{BatchPolicy, DynamicBatcher};
+use super::batcher::BatchPolicy;
+use super::engine::{
+    Engine, EngineBuilder, EngineJoin, EngineWaiter, Priority, Request, DEFAULT_QUEUE_DEPTH,
+};
 use super::metrics::Metrics;
 
-/// Default bound on queued (admitted, not yet executing) requests.
-pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
-
-/// How long an idle worker sleeps between shutdown/deadline re-checks.
-const IDLE_WAIT: Duration = Duration::from_millis(50);
+/// Registry name of the single anonymous v0 model.
+const V0_MODEL: &str = "default";
 
 /// One inference request: a flattened image.
 #[derive(Debug)]
@@ -57,59 +43,11 @@ pub struct InferenceResponse {
     pub latency_us: u64,
 }
 
-struct Job {
-    req: InferenceRequest,
-    reply: mpsc::Sender<Result<InferenceResponse>>,
-    t0: Instant,
-}
-
-struct QueueState {
-    batcher: DynamicBatcher<Job>,
-    /// All client handles dropped: drain and stop.
-    closed: bool,
-    /// Workers still running (including ones still in their factory).
-    workers_alive: usize,
-}
-
-struct Shared {
-    state: Mutex<QueueState>,
-    work_cv: Condvar,
-    start: Instant,
-    policy: BatchPolicy,
-    queue_depth: usize,
-    /// Live `ServerHandle` clones; the last drop closes the queue.
-    handles: AtomicUsize,
-    rejected: AtomicU64,
-}
-
-impl Shared {
-    fn now_us(&self) -> u64 {
-        self.start.elapsed().as_micros() as u64
-    }
-}
-
 /// Client handle: submit requests, await responses. Cloneable; the server
 /// drains and shuts down when every handle is dropped.
+#[derive(Clone)]
 pub struct ServerHandle {
-    shared: Arc<Shared>,
-}
-
-impl Clone for ServerHandle {
-    fn clone(&self) -> Self {
-        self.shared.handles.fetch_add(1, Ordering::Relaxed);
-        ServerHandle { shared: Arc::clone(&self.shared) }
-    }
-}
-
-impl Drop for ServerHandle {
-    fn drop(&mut self) {
-        if self.shared.handles.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let mut st = self.shared.state.lock().unwrap();
-            st.closed = true;
-            drop(st);
-            self.shared.work_cv.notify_all();
-        }
-    }
+    engine: Engine,
 }
 
 impl ServerHandle {
@@ -117,22 +55,17 @@ impl ServerHandle {
     /// immediately (without enqueueing) when the queue is at depth or no
     /// worker is alive.
     pub fn submit(&self, req: InferenceRequest) -> Result<ResponseWaiter> {
-        let (reply, rx) = mpsc::channel();
-        let job = Job { req, reply, t0: Instant::now() };
-        let mut st = self.shared.state.lock().unwrap();
-        if st.workers_alive == 0 {
-            bail!("server stopped: no live workers");
+        let typed = Request {
+            model: V0_MODEL.to_string(),
+            id: req.id,
+            priority: Priority::High,
+            deadline_us: None,
+            image: req.image,
+        };
+        match self.engine.submit(typed) {
+            Ok(waiter) => Ok(ResponseWaiter { inner: waiter }),
+            Err(e) => Err(anyhow::Error::from(e)),
         }
-        if st.batcher.len() >= self.shared.queue_depth {
-            drop(st);
-            self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-            bail!("server overloaded: queue depth {} reached", self.shared.queue_depth);
-        }
-        let now = self.shared.now_us();
-        st.batcher.push(job, now);
-        drop(st);
-        self.shared.work_cv.notify_one();
-        Ok(ResponseWaiter { rx })
     }
 
     /// Submit and block for the response.
@@ -143,12 +76,13 @@ impl ServerHandle {
 
 /// Pending response.
 pub struct ResponseWaiter {
-    rx: mpsc::Receiver<Result<InferenceResponse>>,
+    inner: EngineWaiter,
 }
 
 impl ResponseWaiter {
     pub fn wait(self) -> Result<InferenceResponse> {
-        self.rx.recv().map_err(|_| anyhow!("server dropped request"))?
+        let resp = self.inner.wait()?;
+        Ok(InferenceResponse { id: resp.id, logits: resp.logits, latency_us: resp.latency_us })
     }
 }
 
@@ -169,22 +103,16 @@ impl Server {
         self
     }
 
-    fn shared(&self, workers: usize) -> (Arc<Shared>, ServerHandle) {
-        let shared = Arc::new(Shared {
-            state: Mutex::new(QueueState {
-                batcher: DynamicBatcher::new(self.policy),
-                closed: false,
-                workers_alive: workers,
-            }),
-            work_cv: Condvar::new(),
-            start: Instant::now(),
-            policy: self.policy,
-            queue_depth: self.queue_depth,
-            handles: AtomicUsize::new(1),
-            rejected: AtomicU64::new(0),
-        });
-        let handle = ServerHandle { shared: Arc::clone(&shared) };
-        (shared, handle)
+    fn build(self, workers: usize, spec: ModelSpec) -> (ServerHandle, PoolJoin) {
+        let (engine, join) = EngineBuilder::new()
+            .workers(workers)
+            .policy(self.policy)
+            .queue_depth(self.queue_depth)
+            .register(spec)
+            .expect("v0 engine registers exactly one model")
+            .build()
+            .expect("v0 engine build cannot fail with one registered model");
+        (ServerHandle { engine }, PoolJoin { inner: join })
     }
 
     /// Spawn a single worker whose backend is built by a one-shot factory
@@ -192,13 +120,24 @@ impl Server {
     /// PJRT). Returns a client handle and the pool join handle.
     pub fn spawn<B, F>(self, factory: F) -> (ServerHandle, PoolJoin)
     where
-        B: InferenceBackend,
+        B: InferenceBackend + 'static,
         F: FnOnce() -> Result<B> + Send + 'static,
     {
-        let (shared, handle) = self.shared(1);
-        let worker_shared = Arc::clone(&shared);
-        let thread = std::thread::spawn(move || worker_entry(&worker_shared, factory));
-        (handle, PoolJoin { threads: vec![thread], shared })
+        // Adapt the one-shot factory to the registry's reusable shape:
+        // with exactly one worker it is taken exactly once.
+        let cell = Mutex::new(Some(factory));
+        let spec = ModelSpec::new(
+            V0_MODEL,
+            std::sync::Arc::new(move |_w| {
+                let f = cell
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .ok_or_else(|| anyhow!("single-worker factory already consumed"))?;
+                f().map(|b| Box::new(b) as Box<dyn InferenceBackend>)
+            }),
+        );
+        self.build(1, spec)
     }
 
     /// Spawn `workers` threads sharing the ingress queue and batcher;
@@ -207,179 +146,33 @@ impl Server {
     /// (same seed/config) so routing stays invisible to clients.
     pub fn spawn_pool<B, F>(self, workers: usize, factory: F) -> (ServerHandle, PoolJoin)
     where
-        B: InferenceBackend,
+        B: InferenceBackend + 'static,
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
     {
-        let workers = workers.max(1);
-        let (shared, handle) = self.shared(workers);
-        let factory = Arc::new(factory);
-        let threads = (0..workers)
-            .map(|w| {
-                let worker_shared = Arc::clone(&shared);
-                let factory = Arc::clone(&factory);
-                std::thread::spawn(move || worker_entry(&worker_shared, move || (*factory)(w)))
-            })
-            .collect();
-        (handle, PoolJoin { threads, shared })
+        let spec = ModelSpec::new(
+            V0_MODEL,
+            std::sync::Arc::new(move |w| {
+                factory(w).map(|b| Box::new(b) as Box<dyn InferenceBackend>)
+            }),
+        );
+        self.build(workers.max(1), spec)
     }
 }
 
 /// Join handle over the worker pool; resolves to the merged [`Metrics`].
 pub struct PoolJoin {
-    threads: Vec<std::thread::JoinHandle<Result<Metrics>>>,
-    shared: Arc<Shared>,
+    inner: EngineJoin,
 }
 
 impl PoolJoin {
     /// Wait for every worker and merge their metrics (union of latency
     /// samples, summed batch counters, widened completion window, plus
-    /// the admission-rejection count). Errors only if a worker panicked
-    /// or *no* worker ever became ready; individual factory failures in a
-    /// partially-healthy pool are tolerated.
+    /// the admission-rejection counters). Errors only if a worker
+    /// panicked or *no* worker ever became ready; individual factory
+    /// failures in a partially-healthy pool are tolerated.
     pub fn join(self) -> Result<Metrics> {
-        let PoolJoin { threads, shared } = self;
-        let mut merged = Metrics::default();
-        let mut ok = 0usize;
-        let mut first_err: Option<anyhow::Error> = None;
-        for t in threads {
-            match t.join() {
-                Ok(Ok(m)) => {
-                    merged.merge(&m);
-                    ok += 1;
-                }
-                Ok(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                Err(_) => {
-                    return Err(anyhow!("worker thread panicked"));
-                }
-            }
-        }
-        if ok == 0 {
-            return Err(first_err.unwrap_or_else(|| anyhow!("pool had no workers")));
-        }
-        merged.rejected += shared.rejected.load(Ordering::Relaxed);
-        Ok(merged)
+        Ok(self.inner.join()?.merged())
     }
-}
-
-/// Decrements `workers_alive` on EVERY exit path — normal shutdown,
-/// factory failure, or a panic unwinding out of the backend — and, when
-/// the last worker leaves, error-fails whatever is still queued so no
-/// client blocks forever on a reply that will never come.
-struct WorkerExit<'a> {
-    shared: &'a Shared,
-    message: String,
-}
-
-impl Drop for WorkerExit<'_> {
-    fn drop(&mut self) {
-        // A panic inside `infer` happens with the state lock released,
-        // but recover from poisoning anyway: this guard must run.
-        let mut st = self.shared.state.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
-        st.workers_alive -= 1;
-        if st.workers_alive == 0 {
-            for job in st.batcher.flush() {
-                let _ = job.reply.send(Err(anyhow!("{}", self.message)));
-            }
-        }
-        drop(st);
-        self.shared.work_cv.notify_all();
-    }
-}
-
-fn worker_entry<B, F>(shared: &Shared, factory: F) -> Result<Metrics>
-where
-    B: InferenceBackend,
-    F: FnOnce() -> Result<B>,
-{
-    let mut exit =
-        WorkerExit { shared, message: "worker panicked; request not served".to_string() };
-    match factory() {
-        Ok(mut backend) => {
-            let metrics = worker_loop(shared, &mut backend);
-            exit.message = "server stopped before the request ran".to_string();
-            Ok(metrics)
-        }
-        Err(e) => {
-            exit.message = format!("backend init failed: {e}");
-            Err(e)
-        }
-    }
-}
-
-fn worker_loop<B: InferenceBackend>(shared: &Shared, backend: &mut B) -> Metrics {
-    let mut metrics = Metrics::default();
-    // One reusable batch buffer per worker: `poll_into` drains into it
-    // without allocating on the serve hot path.
-    let mut batch: Vec<Job> = Vec::new();
-    let mut st = shared.state.lock().unwrap();
-    loop {
-        let now = shared.now_us();
-        if st.closed && st.batcher.is_empty() {
-            break;
-        }
-        if !st.batcher.poll_into(now, &mut batch) {
-            if st.closed {
-                // Shutdown drain, in policy-sized chunks shared across
-                // workers so every pending request is answered exactly once.
-                st.batcher.drain_up_to_into(shared.policy.max_batch, &mut batch);
-            } else {
-                // Wait for work or for the oldest request's deadline.
-                let wait = match st.batcher.deadline_us() {
-                    Some(d) => Duration::from_micros(d.saturating_sub(now)).min(IDLE_WAIT),
-                    None => IDLE_WAIT,
-                };
-                let (guard, _timeout) = shared.work_cv.wait_timeout(st, wait).unwrap();
-                st = guard;
-                continue;
-            }
-        }
-        drop(st);
-        metrics.record_batch(batch.len());
-        if batch.is_empty() {
-            // Lost the shutdown-drain race to another worker.
-            st = shared.state.lock().unwrap();
-            continue;
-        }
-        // One batched backend call for the whole released batch: backends
-        // with a real batch path (native) amortize every weight walk over
-        // the batch; others fall back to a per-item loop. Results are
-        // per-item, so one malformed request fails only its own slot.
-        let results = {
-            let images: Vec<&Tensor> = batch.iter().map(|j| &j.req.image).collect();
-            backend.infer_batch(&images)
-        };
-        if results.len() == batch.len() {
-            for (job, result) in batch.drain(..).zip(results) {
-                let latency_us = job.t0.elapsed().as_micros() as u64;
-                let res =
-                    result.map(|logits| InferenceResponse { id: job.req.id, logits, latency_us });
-                if res.is_ok() {
-                    metrics.record_request(latency_us, shared.now_us());
-                }
-                let _ = job.reply.send(res);
-            }
-        } else {
-            // A broken backend contract must not strand clients.
-            let msg = format!(
-                "backend {} returned {} results for a batch of {}",
-                backend.name(),
-                results.len(),
-                batch.len()
-            );
-            for job in batch.drain(..) {
-                let _ = job.reply.send(Err(anyhow!("{msg}")));
-            }
-        }
-        st = shared.state.lock().unwrap();
-    }
-    // Exit bookkeeping (workers_alive, failing leftovers) lives in the
-    // caller's WorkerExit guard so it also runs on unwind.
-    drop(st);
-    metrics
 }
 
 #[cfg(test)]
@@ -439,7 +232,7 @@ mod tests {
         let metrics = join.join().unwrap();
         assert_eq!(served, 32);
         assert_eq!(metrics.count(), 32);
-        assert_eq!(metrics.rejected, 0);
+        assert_eq!(metrics.rejected(), 0);
         assert!(metrics.batches >= 1);
     }
 

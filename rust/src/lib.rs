@@ -21,12 +21,17 @@
 //! * [`runtime`] — pluggable inference backends behind
 //!   [`runtime::InferenceBackend`]: the pure-rust
 //!   [`runtime::NativeBackend`] executing the quantized Vim forward pass
-//!   ([`vision::forward`]) hermetically, and the feature-gated
+//!   ([`vision::forward`]) hermetically, the feature-gated
 //!   [`runtime::pjrt`] path (`pjrt` cargo feature) that loads AOT
-//!   artifacts (`artifacts/*.hlo.txt`);
-//! * [`coordinator`] — the edge-serving coordinator: shared dynamic
-//!   batcher feeding an N-worker backend pool with bounded-queue
-//!   admission control and merged latency metrics.
+//!   artifacts (`artifacts/*.hlo.txt`), and the [`runtime::ModelRegistry`]
+//!   naming the variants one engine process hosts;
+//! * [`coordinator`] — the edge-serving engine (API v1): a typed
+//!   multi-model surface ([`coordinator::Request`] /
+//!   [`coordinator::Response`] / [`coordinator::EngineError`]) over
+//!   per-model dynamic batchers and an N-worker backend pool, with
+//!   latency-target-aware admission control (bounded queue, per-priority
+//!   shedding, SLO projection) and per-model merged metrics; the v0
+//!   [`coordinator::ServerHandle`] remains as a shim.
 //!
 //! The default build is fully hermetic: no Python, no XLA, no artifacts —
 //! `cargo build --release && cargo test -q` on a fresh checkout exercises

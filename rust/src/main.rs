@@ -22,6 +22,11 @@ COMMANDS:
   sim      [--model tiny] [--img 224] [--ssas 8]
                                   simulate one inference vs the edge GPU
   figures  --fig N                print a paper figure (1, 4, 7, 8, 17, 18)
+  models   [--engine engine.json] without --engine: the Vim model family
+                                  (Table 3). With --engine: validate an
+                                  engine config file and list the model
+                                  variants it hosts (factories resolved,
+                                  calibration tables loaded + checked)
   calibrate [--samples 64] [--seed 7] [--percentile 1.0]
             [--out artifacts/calib_micro.json]
                                   offline static scan calibration: run
@@ -32,13 +37,18 @@ COMMANDS:
                                   write a versioned CalibTable artifact
                                   for `serve --calib`. Use the same
                                   --seed you will serve with.
-  serve    [--backend native|pjrt] [--workers 4] [--requests 64]
-           [--max-batch 8] [--queue-depth 1024] [--seed 7]
+  serve    [--engine engine.json] [--backend native|pjrt] [--workers 4]
+           [--requests 64] [--max-batch 8] [--queue-depth 1024] [--seed 7]
            [--calib table.json] [--artifacts artifacts]
-                                  serve inference E2E through the
-                                  coordinator pool. `native` (default)
-                                  is hermetic: the pure-rust quantized
-                                  Vim executor, no artifacts needed.
+                                  serve inference E2E through the engine.
+                                  `--engine` loads a declarative config
+                                  hosting any number of model variants in
+                                  one process (README.md §Serving API has
+                                  the format) and conflicts with the
+                                  single-model flags. Without it, the
+                                  flags describe one variant: `native`
+                                  (default) is hermetic — the pure-rust
+                                  quantized Vim executor, no artifacts.
                                   `--calib` loads a static calibration
                                   table so the INT8 scan runs batch-fused
                                   across items (omit it for dynamic
@@ -147,6 +157,10 @@ fn main() -> Result<()> {
             flags.expect_keys("figures", &["fig"])?;
             cmd_figures(flags.usize("fig", 0)? as u32)
         }
+        "models" => {
+            flags.expect_keys("models", &["engine"])?;
+            cmd_models(flags.get("engine"))
+        }
         "calibrate" => {
             flags.expect_keys("calibrate", &["samples", "seed", "percentile", "out"])?;
             cmd_calibrate(&flags)
@@ -155,6 +169,7 @@ fn main() -> Result<()> {
             flags.expect_keys(
                 "serve",
                 &[
+                    "engine",
                     "backend",
                     "workers",
                     "requests",
@@ -550,10 +565,72 @@ pub mod figures {
     }
 }
 
+/// `models`: without `--engine`, the Vim model family; with it, validate
+/// and list the variants an engine config hosts (resolving every factory
+/// — including calibration-table load + model check — so a broken config
+/// fails here, not at serve time).
+fn cmd_models(engine: Option<&str>) -> Result<()> {
+    use mamba_x::coordinator::EngineConfig;
+
+    match engine {
+        Some(path) => {
+            let cfg = EngineConfig::load(path)?;
+            println!(
+                "engine config {path}: {} workers, max_batch {}, max_wait {}us, queue depth {}",
+                cfg.workers, cfg.policy.max_batch, cfg.policy.max_wait_us, cfg.queue_depth
+            );
+            println!(
+                "{:<24} {:>6} {:>6} {:>10} {:>8}  calib",
+                "name", "arch", "seed", "slo_us", "hint_us"
+            );
+            for v in &cfg.models {
+                v.to_spec()?; // resolve the factory: any config error surfaces here
+                println!(
+                    "{:<24} {:>6} {:>6} {:>10} {:>8}  {}",
+                    v.name,
+                    v.arch,
+                    v.seed,
+                    v.slo_us.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string()),
+                    v.service_hint_us,
+                    v.calib.as_deref().unwrap_or("-")
+                );
+            }
+            println!("{} variants resolved ok", cfg.models.len());
+        }
+        None => {
+            println!("== Vim model family (Table 3 + the micro serving model) ==");
+            println!(
+                "{:>7} {:>8} {:>8} {:>8} {:>6} {:>10}",
+                "name", "d_model", "blocks", "d_state", "patch", "params"
+            );
+            for name in ["micro", "tiny", "small", "base"] {
+                let m = VimModel::by_name(name).expect("known model");
+                println!(
+                    "{:>7} {:>8} {:>8} {:>8} {:>6} {:>10}",
+                    name, m.d_model, m.n_blocks, m.d_state, m.patch, m.param_count()
+                );
+            }
+            println!("\nservable natively: micro (`serve`, `models --engine <config>`)");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_serve(flags: &Flags) -> Result<()> {
+    let requests = flags.usize("requests", 64)?;
+    if let Some(engine_path) = flags.get("engine") {
+        // The config file owns the pool geometry and the model list;
+        // per-variant flags alongside it would silently fight it.
+        for k in ["backend", "workers", "max-batch", "queue-depth", "seed", "calib", "artifacts"] {
+            if flags.get(k).is_some() {
+                bail!("--{k} conflicts with --engine (the config file decides it)");
+            }
+        }
+        let cfg = mamba_x::coordinator::EngineConfig::load(engine_path)?;
+        return run_engine(cfg, requests);
+    }
     let backend = flags.string("backend", "native");
     let workers = flags.usize("workers", 4)?;
-    let requests = flags.usize("requests", 64)?;
     let max_batch = flags.usize("max-batch", 8)?;
     let queue_depth = flags.usize("queue-depth", 1024)?;
     let seed = flags.usize("seed", 7)? as u64;
@@ -579,11 +656,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
 }
 
-/// Hermetic serving demo: N pool workers, each owning a native quantized
-/// Vim executor built from the same seed, fed by 4 synthetic camera
-/// streams. An optional static calibration table (from `mamba-x
-/// calibrate`) is cloned into every worker so the quantized scan runs
-/// batch-fused. Spot-checks serving-vs-direct invariance at the end.
+/// Hermetic single-variant serving: desugars the legacy flags into a
+/// one-model [`mamba_x::coordinator::EngineConfig`] and runs the same
+/// engine driver as `serve --engine`, so the flag path and the config
+/// path exercise identical machinery.
 fn serve_native(
     workers: usize,
     requests: usize,
@@ -592,94 +668,131 @@ fn serve_native(
     seed: u64,
     calib: Option<String>,
 ) -> Result<()> {
-    use std::sync::Arc;
+    use mamba_x::coordinator::{BatchPolicy, EngineConfig, ModelVariantConfig};
 
-    use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
-    use mamba_x::quant::CalibTable;
-    use mamba_x::runtime::{native::synthetic_image, InferenceBackend, NativeBackend, Tensor};
-    use mamba_x::vision::ForwardConfig;
+    let name = if calib.is_some() { "vim-micro@calib" } else { "vim-micro@dynamic" };
+    let mut variant = ModelVariantConfig::new(name, "micro", seed);
+    variant.calib = calib;
+    let mut cfg = EngineConfig::new(vec![variant]);
+    cfg.workers = workers.max(1);
+    cfg.policy = BatchPolicy { max_batch: max_batch.max(1), max_wait_us: 2000 };
+    cfg.queue_depth = queue_depth.max(1);
+    run_engine(cfg, requests)
+}
 
-    let cfg = ForwardConfig::micro();
+/// Engine serving demo: host every configured variant in one process,
+/// drive one synthetic camera stream per variant, print the per-model /
+/// per-rejection-reason report, and spot-check each variant bitwise
+/// against direct single-backend inference.
+fn run_engine(cfg: mamba_x::coordinator::EngineConfig, requests: usize) -> Result<()> {
+    use mamba_x::coordinator::{EngineBuilder, Request, Response};
+    use mamba_x::runtime::{native::synthetic_image, InferenceBackend as _, Tensor};
+
     println!(
-        "serving {} ({} blocks, d={}) natively: {} workers, max_batch {}, queue depth {}",
-        cfg.model.name, cfg.model.n_blocks, cfg.model.d_model, workers, max_batch, queue_depth
+        "engine: {} workers, max_batch {}, max_wait {}us, queue depth {}",
+        cfg.workers, cfg.policy.max_batch, cfg.policy.max_wait_us, cfg.queue_depth
     );
-    let calib_table = match calib {
-        Some(path) => {
-            let t = CalibTable::load(&path)?;
-            t.validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())?;
-            println!(
-                "calibration table {path}: {} sites, {} samples, percentile {} — \
-                 quantized scan runs batch-fused (static scales)",
-                t.sites.len(),
-                t.samples,
-                t.percentile
-            );
-            Some(Arc::new(t))
-        }
-        None => None,
-    };
-    let server =
-        Server::new(BatchPolicy { max_batch, max_wait_us: 2000 }).queue_depth(queue_depth);
-    let model_cfg = cfg.clone();
-    let worker_calib = calib_table.clone();
-    let (handle, join) = server.spawn_pool(workers, move |_w| {
-        let backend = NativeBackend::new(&model_cfg, seed);
-        match &worker_calib {
-            Some(t) => backend.with_calib(Arc::clone(t)),
-            None => Ok(backend),
-        }
-    });
+    for v in &cfg.models {
+        let calib = match v.calib.as_deref() {
+            Some(path) => {
+                format!("{path} (static scales — quantized scan runs batch-fused)")
+            }
+            None => "none (dynamic scan scales)".to_string(),
+        };
+        println!(
+            "  hosting {:?}: arch {}, seed {}, calib {calib}, slo {}",
+            v.name,
+            v.arch,
+            v.seed,
+            v.slo_us.map(|s| format!("{s}us")).unwrap_or_else(|| "none".to_string())
+        );
+    }
+    // Resolve every variant's factory exactly once — shared (Arc) between
+    // the engine registration and the end-of-run spot check, so
+    // calibration tables are loaded and validated a single time.
+    let mut builder = EngineBuilder::new()
+        .workers(cfg.workers)
+        .policy(cfg.policy)
+        .queue_depth(cfg.queue_depth);
+    let mut factories = Vec::with_capacity(cfg.models.len());
+    for v in &cfg.models {
+        let spec = v.to_spec()?;
+        factories.push(std::sync::Arc::clone(&spec.factory));
+        builder = builder.register(spec)?;
+    }
+    let (engine, join) = builder.build()?;
 
-    let shape = cfg.input_shape();
-    let n_elems = cfg.input_len();
-    let streams = 4usize;
-    let per_stream = requests.div_ceil(streams);
+    // Four concurrent synthetic camera streams per variant (the v0 demo
+    // shape), so multi-worker batching is actually exercised.
+    let streams_per_model = 4usize;
+    let per_stream = requests.div_ceil(cfg.models.len() * streams_per_model).max(1);
+    let per_model = per_stream * streams_per_model;
     let t0 = std::time::Instant::now();
     let mut clients = Vec::new();
-    for s in 0..streams {
-        let h = handle.clone();
-        let shape = shape.clone();
-        clients.push(std::thread::spawn(move || {
-            let mut served = Vec::new();
-            for r in 0..per_stream {
-                let id = (s * per_stream + r) as u64;
-                let data = synthetic_image(seed, id, n_elems);
-                let req =
-                    InferenceRequest { id, image: Tensor::new(shape.clone(), data).unwrap() };
-                if let Ok(resp) = h.infer(req) {
-                    served.push(resp);
+    for v in &cfg.models {
+        let fcfg = v.forward_config()?;
+        for s in 0..streams_per_model {
+            let eng = engine.clone();
+            let name = v.name.clone();
+            let seed = v.seed;
+            let fcfg = fcfg.clone();
+            clients.push(std::thread::spawn(move || {
+                let mut served = Vec::new();
+                let mut rejected = 0usize;
+                for r in 0..per_stream {
+                    let id = (s * per_stream + r) as u64;
+                    let data = synthetic_image(seed, id, fcfg.input_len());
+                    let image = Tensor::new(fcfg.input_shape(), data).unwrap();
+                    match eng.infer(Request::new(name.clone(), id, image)) {
+                        Ok(resp) => served.push(resp),
+                        Err(_) => rejected += 1,
+                    }
                 }
-            }
-            served
-        }));
-    }
-    let mut responses = Vec::new();
-    for c in clients {
-        responses.extend(c.join().unwrap());
-    }
-    drop(handle);
-    let metrics = join.join()?;
-    let wall = t0.elapsed().as_secs_f64();
-    println!("served {}/{} requests in {wall:.2}s", responses.len(), per_stream * streams);
-    println!("{}", metrics.summary());
-
-    // Serving-vs-direct invariance spot check (the full property lives in
-    // rust/tests/serving_props.rs, the calibrated variant in
-    // rust/tests/calib_props.rs): pool routing must be invisible.
-    let mut direct = NativeBackend::new(&cfg, seed);
-    if let Some(t) = &calib_table {
-        direct = direct.with_calib(Arc::clone(t))?;
-    }
-    let checks = responses.len().min(8);
-    for resp in responses.iter().take(checks) {
-        let img = Tensor::new(shape.clone(), synthetic_image(seed, resp.id, n_elems))?;
-        let want = direct.infer(&img)?;
-        if resp.logits != want {
-            bail!("response {} diverged from direct inference", resp.id);
+                (name, served, rejected)
+            }));
         }
     }
-    println!("serving == direct inference (bitwise) on {checks} sampled requests");
+    // Merge the per-stream results back per variant (names are unique).
+    let mut streams: Vec<(String, Vec<Response>, usize)> =
+        cfg.models.iter().map(|v| (v.name.clone(), Vec::new(), 0usize)).collect();
+    for c in clients {
+        let (name, served, rejected) = c.join().unwrap();
+        let slot = streams.iter_mut().find(|(n, _, _)| *n == name).expect("known variant");
+        slot.1.extend(served);
+        slot.2 += rejected;
+    }
+    drop(engine);
+    let report = join.join()?;
+    let wall = t0.elapsed().as_secs_f64();
+    let completed: usize = streams.iter().map(|(_, served, _)| served.len()).sum();
+    let refused: usize = streams.iter().map(|(_, _, refused)| *refused).sum();
+    println!(
+        "served {completed}/{} requests in {wall:.2}s ({refused} refused at submit)",
+        per_model * cfg.models.len()
+    );
+    println!("{}", report.summary());
+
+    // Per-variant serving-vs-direct invariance spot check (the full
+    // property lives in rust/tests/engine_props.rs): pool routing,
+    // batching and co-hosted variants must be invisible bitwise.
+    for (v, factory) in cfg.models.iter().zip(&factories) {
+        let mut direct = factory(0)?;
+        let fcfg = v.forward_config()?;
+        let (_, served, _) =
+            streams.iter().find(|(name, _, _)| *name == v.name).expect("one slot per variant");
+        let checks = served.len().min(4);
+        for resp in served.iter().take(checks) {
+            let data = synthetic_image(v.seed, resp.id, fcfg.input_len());
+            let want = direct.infer(&Tensor::new(fcfg.input_shape(), data)?)?;
+            if resp.logits != want {
+                bail!("{}: response {} diverged from direct inference", v.name, resp.id);
+            }
+        }
+        println!(
+            "{}: serving == direct inference (bitwise) on {checks} sampled requests",
+            v.name
+        );
+    }
     Ok(())
 }
 

@@ -12,9 +12,12 @@
 //!   and executes trained models. Compiles against the `vendor/xla` stub
 //!   by default; patch in the real `xla` crate to run it.
 //!
-//! Backends are constructed *on the worker thread* via the factory passed
-//! to [`crate::coordinator::Server::spawn`] — PJRT handles are not `Send`,
-//! and the native backend is happiest owning its scratch state per worker.
+//! Backends are constructed *on the worker thread* via a
+//! [`BackendFactory`] — PJRT handles are not `Send`, and the native
+//! backend is happiest owning its scratch state per worker. A
+//! [`ModelRegistry`] names multiple variants ([`ModelSpec`]) so one
+//! engine process ([`crate::coordinator::Engine`]) serves them all,
+//! each with its own factory, calibration table, and SLO knobs.
 
 mod manifest;
 pub mod native;
@@ -26,6 +29,8 @@ pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, Runtime};
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 /// A host-side f32 tensor (row-major).
@@ -36,16 +41,30 @@ pub struct Tensor {
 }
 
 impl Tensor {
+    /// Element count implied by `shape`, with *checked* multiplication:
+    /// an adversarial shape like `[usize::MAX, 2]` errors instead of
+    /// wrapping silently in release builds (where `iter().product()`
+    /// would alias a tiny buffer onto a huge logical shape).
+    pub fn element_count(shape: &[usize]) -> Result<usize> {
+        shape.iter().try_fold(1usize, |n, &d| {
+            n.checked_mul(d)
+                .ok_or_else(|| anyhow!("shape {shape:?}: element count overflows usize"))
+        })
+    }
+
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
-        let n: usize = shape.iter().product();
+        let n = Self::element_count(&shape)?;
         if n != data.len() {
             return Err(anyhow!("shape {:?} != data len {}", shape, data.len()));
         }
         Ok(Self { shape, data })
     }
 
+    /// Infallible zero-filled constructor for shapes the caller controls.
+    /// Panics (with the shape in the message) on element-count overflow —
+    /// untrusted shapes should go through [`Tensor::new`] instead.
     pub fn zeros(shape: Vec<usize>) -> Self {
-        let n = shape.iter().product();
+        let n = Self::element_count(&shape).expect("Tensor::zeros shape overflows usize");
         Self { shape, data: vec![0.0; n] }
     }
 }
@@ -80,6 +99,95 @@ pub trait InferenceBackend {
     }
 }
 
+/// Constructs one backend instance per pool worker (argument: worker
+/// index). The factory itself must be `Send + Sync` — it is shared across
+/// worker threads — but the backends it returns need not be: each is
+/// built and consumed on its worker's thread.
+pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn InferenceBackend>> + Send + Sync>;
+
+/// One named model variant the engine can serve: a backend factory plus
+/// the admission knobs that apply to requests targeting it. Variants of
+/// the same architecture differ by what the factory bakes in — seed,
+/// calibration table, scan schedule — e.g. `vim-micro@dynamic` vs
+/// `vim-micro@calib`.
+pub struct ModelSpec {
+    /// Registry key clients address requests to (convention:
+    /// `<model>@<variant>`). Must be unique within a registry.
+    pub name: String,
+    pub factory: BackendFactory,
+    /// Default latency target (microseconds) applied to requests that
+    /// carry no explicit deadline; `None` = no SLO-based shedding.
+    pub slo_us: Option<u64>,
+    /// Seed for the observed per-item service-time estimate before the
+    /// first batch completes (microseconds; 0 = start unknown, admission
+    /// projects zero wait until a real measurement lands).
+    pub service_hint_us: u64,
+}
+
+impl ModelSpec {
+    pub fn new(name: impl Into<String>, factory: BackendFactory) -> Self {
+        ModelSpec { name: name.into(), factory, slo_us: None, service_hint_us: 0 }
+    }
+
+    pub fn slo_us(mut self, slo_us: u64) -> Self {
+        self.slo_us = Some(slo_us);
+        self
+    }
+
+    pub fn service_hint_us(mut self, hint_us: u64) -> Self {
+        self.service_hint_us = hint_us;
+        self
+    }
+}
+
+/// Named model variants hosted by one engine process. Index-stable:
+/// variants keep their registration order, which the coordinator uses as
+/// the per-model queue index.
+#[derive(Default)]
+pub struct ModelRegistry {
+    specs: Vec<ModelSpec>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a variant; duplicate names are an error (a silently
+    /// shadowed variant would serve the wrong weights).
+    pub fn register(&mut self, spec: ModelSpec) -> Result<()> {
+        if self.index_of(&spec.name).is_some() {
+            return Err(anyhow!("model {:?} is already registered", spec.name));
+        }
+        self.specs.push(spec);
+        Ok(())
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.specs.iter().position(|s| s.name == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelSpec> {
+        self.index_of(name).map(|i| &self.specs[i])
+    }
+
+    pub fn specs(&self) -> &[ModelSpec] {
+        &self.specs
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +197,38 @@ mod tests {
         assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
         assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
         assert_eq!(Tensor::zeros(vec![4, 4]).data.len(), 16);
+    }
+
+    #[test]
+    fn tensor_element_count_checked() {
+        // Adversarial shapes must error, not wrap: usize::MAX * 2 == MAX-1
+        // under wrapping, which "matches" a data length it never could.
+        assert!(Tensor::new(vec![usize::MAX, 2], vec![0.0; 2]).is_err());
+        assert!(Tensor::element_count(&[usize::MAX, usize::MAX]).is_err());
+        assert_eq!(Tensor::element_count(&[]).unwrap(), 1);
+        assert_eq!(Tensor::element_count(&[3, 0, 5]).unwrap(), 0);
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_resolves_names() {
+        struct Nop;
+        impl InferenceBackend for Nop {
+            fn name(&self) -> &'static str {
+                "nop"
+            }
+            fn infer(&mut self, _image: &Tensor) -> Result<Vec<f32>> {
+                Ok(vec![])
+            }
+        }
+        let f: BackendFactory = Arc::new(|_w| Ok(Box::new(Nop) as Box<dyn InferenceBackend>));
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::new("m@a", Arc::clone(&f))).unwrap();
+        reg.register(ModelSpec::new("m@b", Arc::clone(&f)).slo_us(500)).unwrap();
+        assert!(reg.register(ModelSpec::new("m@a", f)).is_err());
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.index_of("m@b"), Some(1));
+        assert_eq!(reg.get("m@b").unwrap().slo_us, Some(500));
+        assert!(reg.index_of("m@c").is_none());
+        assert_eq!(reg.names(), vec!["m@a", "m@b"]);
     }
 }

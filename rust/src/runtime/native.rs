@@ -22,7 +22,7 @@ use crate::quant::CalibTable;
 use crate::sim::sfu::SfuTables;
 use crate::vision::{ForwardConfig, ScanExec, VimWeights};
 
-use super::{InferenceBackend, Tensor};
+use super::{BackendFactory, InferenceBackend, Tensor};
 
 /// Native executor of one Vim model instance.
 pub struct NativeBackend {
@@ -47,6 +47,26 @@ impl NativeBackend {
     /// The micro serving model (32x32x1 -> 10 classes).
     pub fn micro(seed: u64) -> Self {
         Self::new(&ForwardConfig::micro(), seed)
+    }
+
+    /// A pool-worker [`BackendFactory`] closing over everything one model
+    /// variant bakes in: the model config, the weight seed, and (for
+    /// `@calib`-style variants) a validated static calibration table.
+    /// Every worker the engine builds from it is bit-identical — the
+    /// multi-model serving invariance rests on that.
+    pub fn factory(
+        cfg: ForwardConfig,
+        seed: u64,
+        calib: Option<Arc<CalibTable>>,
+    ) -> BackendFactory {
+        Arc::new(move |_worker| {
+            let backend = NativeBackend::new(&cfg, seed);
+            let backend = match &calib {
+                Some(table) => backend.with_calib(Arc::clone(table))?,
+                None => backend,
+            };
+            Ok(Box::new(backend) as Box<dyn InferenceBackend>)
+        })
     }
 
     pub fn config(&self) -> &ForwardConfig {
@@ -209,6 +229,17 @@ mod tests {
             let want = b.infer(img).unwrap();
             assert_eq!(results[slot].as_ref().unwrap(), &want, "slot {slot}");
         }
+    }
+
+    #[test]
+    fn factory_built_workers_are_interchangeable() {
+        let cfg = ForwardConfig::micro();
+        let factory = NativeBackend::factory(cfg.clone(), 11, None);
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(2, 9, cfg.input_len())).unwrap();
+        let mut w0 = factory(0).unwrap();
+        let mut w1 = factory(1).unwrap();
+        assert_eq!(w0.infer(&img).unwrap(), w1.infer(&img).unwrap());
+        assert_eq!(w0.name(), "native");
     }
 
     #[test]

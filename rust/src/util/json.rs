@@ -70,6 +70,18 @@ impl Json {
         Ok(self.num()? as usize)
     }
 
+    /// Strict unsigned integer: rejects negatives, fractions, and values
+    /// at or above 2^53. Beyond 2^53, f64 cannot represent every integer,
+    /// so e.g. the text `9007199254740993` (2^53+1) already parsed to
+    /// 2^53 — a config knob silently rounding is worse than an error.
+    pub fn u64_exact(&self) -> Result<u64> {
+        let n = self.num()?;
+        if n < 0.0 || n.fract() != 0.0 || n >= (1u64 << 53) as f64 {
+            bail!("not an exactly-representable unsigned integer: {n}");
+        }
+        Ok(n as u64)
+    }
+
     pub fn arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -376,6 +388,19 @@ mod tests {
         let j = Json::parse("[1, 2, 3]").unwrap();
         assert_eq!(j.i64_vec().unwrap(), vec![1, 2, 3]);
         assert_eq!(j.f32_vec().unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn u64_exact_strictness() {
+        assert_eq!(Json::parse("42").unwrap().u64_exact().unwrap(), 42);
+        assert_eq!(
+            Json::parse("9007199254740991").unwrap().u64_exact().unwrap(),
+            (1u64 << 53) - 1
+        );
+        assert!(Json::parse("-1").unwrap().u64_exact().is_err());
+        assert!(Json::parse("1.5").unwrap().u64_exact().is_err());
+        // 2^53+1 aliases to 2^53 during f64 parse: must error, not round.
+        assert!(Json::parse("9007199254740993").unwrap().u64_exact().is_err());
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Engine API v1 properties (the acceptance gate for the multi-model
+//! redesign):
+//!
+//! * one process hosting TWO registered variants of the same model — a
+//!   dynamic-scale one and a statically calibrated one — returns
+//!   per-request logits *bit-identical* to direct single-model inference
+//!   on the matching variant, under interleaved clients and shared
+//!   workers;
+//! * an over-SLO burst is refused with typed `Rejected { Shed }` errors
+//!   while in-SLO traffic on the same engine completes, and an accepted
+//!   request is never shed later;
+//! * unknown model names are refused typed (`Rejected { UnknownModel }`)
+//!   and counted in the final report.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+use mamba_x::config::{MambaXConfig, VimModel};
+use mamba_x::coordinator::{
+    BatchPolicy, EngineBuilder, EngineError, Priority, RejectReason, Request,
+};
+use mamba_x::quant::CalibTable;
+use mamba_x::runtime::{
+    native::synthetic_image, InferenceBackend, ModelSpec, NativeBackend, Tensor,
+};
+use mamba_x::sim::sfu::SfuTables;
+use mamba_x::util::Pcg;
+use mamba_x::vision::{ForwardConfig, VimWeights};
+
+/// Small-but-real model (same as `serving_props.rs`): every datapath
+/// stage of the micro model, an order of magnitude fewer multiplies.
+fn prop_cfg() -> ForwardConfig {
+    ForwardConfig {
+        model: VimModel {
+            name: "prop",
+            d_model: 16,
+            n_blocks: 2,
+            d_state: 4,
+            expand: 2,
+            conv_k: 4,
+            patch: 4,
+        },
+        img: 8,
+        in_ch: 1,
+        n_classes: 6,
+    }
+}
+
+/// Offline-calibrate the prop model exactly as `mamba-x calibrate` does,
+/// over a handful of synthetic samples.
+fn prop_calib(cfg: &ForwardConfig, weight_seed: u64, image_seed: u64) -> Arc<CalibTable> {
+    let weights = VimWeights::init(cfg, weight_seed);
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    let imgs: Vec<Vec<f32>> =
+        (0..6).map(|id| synthetic_image(image_seed, id, cfg.input_len())).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    Arc::new(weights.calibrate(&tables, &scan, &refs, 1.0).expect("calibration succeeds"))
+}
+
+/// ACCEPTANCE: two variants (`prop@dynamic`, `prop@calib`) served from
+/// one engine are bitwise identical to direct per-variant inference, for
+/// randomized pool geometries and interleaved clients.
+#[test]
+fn prop_two_variants_bitwise_equal_direct() {
+    let cfg = prop_cfg();
+    let n_elems = cfg.input_len();
+    let weight_seed = 42u64;
+    let calib = prop_calib(&cfg, weight_seed, 7);
+    let mut rng = Pcg::new(0xE6E1);
+    for case in 0..12u64 {
+        let workers = rng.usize_in(1, 3);
+        let max_batch = rng.usize_in(1, 6);
+        let max_wait_us = rng.usize_in(0, 1000) as u64;
+        let per_client = rng.usize_in(2, 5);
+        let image_seed = 100 + case;
+
+        let (engine, join) = EngineBuilder::new()
+            .workers(workers)
+            .policy(BatchPolicy { max_batch, max_wait_us })
+            .queue_depth(64)
+            .register(ModelSpec::new(
+                "prop@dynamic",
+                NativeBackend::factory(cfg.clone(), weight_seed, None),
+            ))
+            .unwrap()
+            .register(ModelSpec::new(
+                "prop@calib",
+                NativeBackend::factory(cfg.clone(), weight_seed, Some(Arc::clone(&calib))),
+            ))
+            .unwrap()
+            .build()
+            .unwrap();
+
+        // Two clients, each alternating between the variants, so batches
+        // of both models interleave on the shared workers.
+        let mut clients = Vec::new();
+        for c in 0..2usize {
+            let eng = engine.clone();
+            let shape = cfg.input_shape();
+            clients.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for i in 0..per_client {
+                    let id = (c * per_client + i) as u64;
+                    let model =
+                        if (c + i) % 2 == 0 { "prop@dynamic" } else { "prop@calib" };
+                    let data = synthetic_image(image_seed, id, shape.iter().product());
+                    let req =
+                        Request::new(model, id, Tensor::new(shape.clone(), data).unwrap());
+                    let resp = eng.infer(req).expect("queue depth 64 never rejects here");
+                    assert_eq!(resp.model, model, "response names the serving variant");
+                    got.push((model, resp.id, resp.logits));
+                }
+                got
+            }));
+        }
+        let mut responses = Vec::new();
+        for c in clients {
+            responses.extend(c.join().unwrap());
+        }
+        drop(engine);
+        let report = join.join().expect("engine joins cleanly");
+        assert_eq!(responses.len(), 2 * per_client, "case {case}");
+        assert_eq!(report.completed(), responses.len(), "case {case}");
+        assert_eq!(report.merged().rejected(), 0, "case {case}");
+
+        // Direct per-variant oracles: bit-identical logits per request.
+        let mut dynamic = NativeBackend::new(&cfg, weight_seed);
+        let mut calibrated = NativeBackend::new(&cfg, weight_seed)
+            .with_calib(Arc::clone(&calib))
+            .expect("table fits the prop model");
+        for (model, id, logits) in responses {
+            let img =
+                Tensor::new(cfg.input_shape(), synthetic_image(image_seed, id, n_elems)).unwrap();
+            let want = match model {
+                "prop@dynamic" => dynamic.infer(&img).unwrap(),
+                _ => calibrated.infer(&img).unwrap(),
+            };
+            assert_eq!(
+                logits, want,
+                "case {case} req {id} via {model}: served logits diverge \
+                 (workers={workers} max_batch={max_batch} wait={max_wait_us})"
+            );
+        }
+    }
+}
+
+/// Backend that blocks every inference until the shared gate opens —
+/// makes queue occupancy deterministic for admission tests.
+struct Gated {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl InferenceBackend for Gated {
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+
+    fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        Ok(vec![image.data[0]])
+    }
+}
+
+fn gated_spec(name: &str, gate: &Arc<(Mutex<bool>, Condvar)>) -> ModelSpec {
+    let gate = Arc::clone(gate);
+    ModelSpec::new(
+        name,
+        Arc::new(move |_w| {
+            Ok(Box::new(Gated { gate: Arc::clone(&gate) }) as Box<dyn InferenceBackend>)
+        }),
+    )
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (lock, cv) = &**gate;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+}
+
+/// ACCEPTANCE: with a seeded service-time estimate and a deterministic
+/// backlog (backend gated shut), a request whose deadline is already
+/// below the projected wait is refused `Rejected { Shed }`, while in-SLO
+/// traffic on the same engine is admitted — and every admitted request
+/// completes once the gate opens (accepted is never shed later).
+#[test]
+fn over_slo_burst_sheds_typed_while_in_slo_completes() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let hint_us = 10_000u64;
+    let (engine, join) = EngineBuilder::new()
+        .workers(1)
+        .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+        .queue_depth(64)
+        .register(gated_spec("gated", &gate).service_hint_us(hint_us))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    let img = || Tensor::new(vec![1], vec![5.0]).unwrap();
+    // Build a backlog the single blocked worker cannot drain: at most one
+    // request leaves the queue (max_batch 1), so >= 3 stay pending.
+    let mut accepted = Vec::new();
+    for id in 0..4u64 {
+        let req = Request::new("gated", id, img()).priority(Priority::High);
+        accepted.push(engine.submit(req).expect("no deadline, depth 64: admitted"));
+    }
+    // In-SLO request: deadline far above any projection (<= 4 * hint).
+    let in_slo_req =
+        Request::new("gated", 100, img()).priority(Priority::High).deadline_us(40 * hint_us);
+    let in_slo = engine.submit(in_slo_req).expect("in-SLO request is admitted");
+    // Over-SLO burst: projected wait >= 3 * hint dwarfs a 1us deadline.
+    let err = engine
+        .submit(Request::new("gated", 200, img()).priority(Priority::High).deadline_us(1))
+        .expect_err("over-SLO request is shed at admission");
+    assert_eq!(err.reject_reason(), Some(RejectReason::Shed));
+    assert!(
+        matches!(
+            err,
+            EngineError::Rejected { ref model, reason: RejectReason::Shed, .. } if model == "gated"
+        ),
+        "typed shed: {err}"
+    );
+    assert!(err.to_string().contains("projected wait"), "evidence in detail: {err}");
+
+    open_gate(&gate);
+    for w in accepted {
+        assert_eq!(w.wait().expect("accepted requests complete").logits, vec![5.0]);
+    }
+    assert_eq!(in_slo.wait().expect("accepted in-SLO request completes").id, 100);
+    drop(engine);
+    let report = join.join().unwrap();
+    let m = report.model("gated").expect("hosted model reported");
+    assert_eq!(m.metrics.count(), 5, "4 backlog + 1 in-SLO completed");
+    assert_eq!(m.metrics.rejected_shed, 1);
+    assert_eq!(m.metrics.rejected_full, 0);
+}
+
+/// Priority shedding order, deterministically: with the backend gated
+/// shut and the backlog at the Low threshold, a Low request is shed
+/// typed while a High request at the same instant is admitted (and then
+/// completes).
+#[test]
+fn low_priority_sheds_before_high_at_same_backlog() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let (engine, join) = EngineBuilder::new()
+        .workers(1)
+        .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+        .queue_depth(4) // Low sheds at 2, Normal at 3, High at 4
+        .register(gated_spec("gated", &gate))
+        .unwrap()
+        .build()
+        .unwrap();
+    let img = || Tensor::new(vec![1], vec![1.0]).unwrap();
+    let mut accepted = Vec::new();
+    for id in 0..3u64 {
+        accepted.push(
+            engine
+                .submit(Request::new("gated", id, img()).priority(Priority::High))
+                .expect("below depth 4"),
+        );
+    }
+    // Backlog is now 2 or 3 pending (the blocked worker holds at most
+    // one): at or above Low's threshold of 2, below High's of 4.
+    let err = engine
+        .submit(Request::new("gated", 10, img()).priority(Priority::Low))
+        .expect_err("low priority sheds under backlog");
+    assert_eq!(err.reject_reason(), Some(RejectReason::Shed));
+    accepted.push(
+        engine
+            .submit(Request::new("gated", 11, img()).priority(Priority::High))
+            .expect("high priority still admitted at the same backlog"),
+    );
+    open_gate(&gate);
+    for w in accepted {
+        w.wait().expect("accepted requests complete");
+    }
+    drop(engine);
+    let report = join.join().unwrap();
+    assert_eq!(report.model("gated").unwrap().metrics.rejected_shed, 1);
+    assert_eq!(report.completed(), 4);
+}
+
+/// Unknown model names are refused typed, counted, and never enqueued.
+#[test]
+fn unknown_model_rejected_typed_and_counted() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    open_gate(&gate); // backend never blocks in this test
+    let (engine, join) = EngineBuilder::new()
+        .workers(1)
+        .policy(BatchPolicy { max_batch: 2, max_wait_us: 100 })
+        .register(gated_spec("prop@dynamic", &gate))
+        .unwrap()
+        .build()
+        .unwrap();
+    let err = engine
+        .infer(Request::new("prop@nope", 1, Tensor::new(vec![1], vec![0.0]).unwrap()))
+        .unwrap_err();
+    assert_eq!(err.reject_reason(), Some(RejectReason::UnknownModel));
+    assert!(err.to_string().contains("prop@dynamic"), "detail lists hosted models: {err}");
+    let ok = engine
+        .infer(Request::new("prop@dynamic", 2, Tensor::new(vec![1], vec![3.0]).unwrap()))
+        .unwrap();
+    assert_eq!(ok.logits, vec![3.0]);
+    drop(engine);
+    let report = join.join().unwrap();
+    assert_eq!(report.rejected_unknown_model, 1);
+    assert_eq!(report.completed(), 1);
+}

@@ -1,15 +1,20 @@
 //! Worker-pool properties: request-count conservation across the
 //! shutdown drain (every accepted request answered exactly once),
-//! percentile monotonicity of merged metrics, and bounded-queue
-//! rejection behavior.
+//! percentile monotonicity of merged metrics, bounded-queue rejection
+//! behavior, and the v1 admission policy — shed decisions respect
+//! priority order, are monotone in the deadline, and an accepted
+//! request is never shed later, even under deadline churn.
 //!
 //! Hand-rolled Pcg harness, 100+ randomized cases where cheap.
 
 use std::time::Duration;
 
 use anyhow::Result;
-use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Metrics, Server};
-use mamba_x::runtime::{InferenceBackend, Tensor};
+use mamba_x::coordinator::{
+    admission_check, AdmissionDeny, BatchPolicy, EngineBuilder, EngineError, InferenceRequest,
+    Metrics, Priority, Request, Server,
+};
+use mamba_x::runtime::{InferenceBackend, ModelSpec, Tensor};
 use mamba_x::util::Pcg;
 
 /// Deterministic synthetic backend with a configurable service time.
@@ -66,7 +71,7 @@ fn prop_shutdown_drain_conserves_requests() {
         assert_eq!(ids, want, "case {case}: each request answered exactly once");
         let metrics = join.join().unwrap();
         assert_eq!(metrics.count(), n_requests, "case {case}");
-        assert_eq!(metrics.rejected, 0, "case {case}");
+        assert_eq!(metrics.rejected(), 0, "case {case}");
         assert!(metrics.batch_items as usize == n_requests, "case {case}");
     }
 }
@@ -155,7 +160,10 @@ fn bounded_queue_rejects_and_conserves() {
     drop(handle);
     let metrics = join.join().unwrap();
     assert_eq!(metrics.count(), accepted);
-    assert_eq!(metrics.rejected as usize, rejected);
+    assert_eq!(metrics.rejected() as usize, rejected);
+    // v0 handles submit at High priority with no deadline: every
+    // rejection is bounded-queue backpressure, never load shedding.
+    assert_eq!(metrics.rejected_shed, 0);
     // max_batch == 1: one request per batch, conservation again.
     assert_eq!(metrics.batches as usize, accepted);
 }
@@ -169,4 +177,143 @@ fn queue_depth_floor_still_serves() {
     assert_eq!(resp.id, 1);
     drop(handle);
     assert!(join.join().unwrap().count() >= 1);
+}
+
+/// PROPERTY: the pure admission decision respects priority order and is
+/// monotone in the deadline — at an identical queue state, raising the
+/// priority or loosening the deadline never turns an admit into a
+/// refusal; and the refusal reason is Full exactly when the queue is at
+/// depth.
+#[test]
+fn prop_admission_monotone_in_priority_and_deadline() {
+    let mut rng = Pcg::new(0xAD15);
+    for case in 0..300 {
+        let depth = rng.usize_in(1, 64);
+        let pending = rng.usize_in(0, depth + 8);
+        let projected = rng.usize_in(0, 5_000) as u64;
+        let deadline = match rng.usize_in(0, 2) {
+            0 => None,
+            _ => Some(rng.usize_in(0, 5_000) as u64),
+        };
+        let verdicts: Vec<_> = Priority::ALL
+            .iter()
+            .map(|&p| admission_check(pending, depth, p, deadline, projected))
+            .collect();
+        // Priority order: once a priority is admitted, every higher one is.
+        for pair in verdicts.windows(2) {
+            assert!(
+                !(pair[0].is_ok() && pair[1].is_err()),
+                "case {case}: admitted at lower priority but shed at higher \
+                 (pending={pending} depth={depth} deadline={deadline:?} projected={projected})"
+            );
+        }
+        for (p, verdict) in Priority::ALL.iter().zip(&verdicts) {
+            match verdict {
+                Err(AdmissionDeny::QueueFull { .. }) => {
+                    assert!(pending >= depth, "case {case}: Full only at depth")
+                }
+                Err(_) => assert!(pending < depth, "case {case}: shed implies not full"),
+                Ok(()) => {
+                    // Deadline monotonicity: any looser deadline (or none)
+                    // is admitted at the same state.
+                    if let Some(d) = deadline {
+                        for extra in [1u64, 1000] {
+                            assert!(
+                                admission_check(
+                                    pending,
+                                    depth,
+                                    *p,
+                                    Some(d.saturating_add(extra)),
+                                    projected
+                                )
+                                .is_ok(),
+                                "case {case}: loosening the deadline revoked admission"
+                            );
+                        }
+                    }
+                    assert!(
+                        admission_check(pending, depth, *p, None, projected).is_ok(),
+                        "case {case}: dropping the deadline revoked admission"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// PROPERTY: under deadline churn — random priorities, deadlines and a
+/// live backlog — every ACCEPTED request completes exactly once (an
+/// accepted request is never shed later), every refusal is typed, and
+/// the books balance: completed + rejected == submitted, with the
+/// per-reason report counters matching what clients observed.
+#[test]
+fn prop_accepted_never_shed_under_deadline_churn() {
+    let mut rng = Pcg::new(0xC0F3);
+    for case in 0..20 {
+        let workers = rng.usize_in(1, 3);
+        let max_batch = rng.usize_in(1, 4);
+        let depth = rng.usize_in(2, 10);
+        let hint_us = rng.usize_in(0, 4_000) as u64;
+        let delay = Duration::from_micros(rng.usize_in(0, 600) as u64);
+        let n_requests = rng.usize_in(10, 40);
+        let spec = ModelSpec::new(
+            "echo",
+            std::sync::Arc::new(move |_w| {
+                Ok(Box::new(Echo { delay }) as Box<dyn InferenceBackend>)
+            }),
+        )
+        .service_hint_us(hint_us);
+        let (engine, join) = EngineBuilder::new()
+            .workers(workers)
+            .policy(BatchPolicy { max_batch, max_wait_us: rng.usize_in(0, 400) as u64 })
+            .queue_depth(depth)
+            .register(spec)
+            .unwrap()
+            .build()
+            .unwrap();
+        let mut waiters = Vec::new();
+        let (mut seen_full, mut seen_shed) = (0u64, 0u64);
+        for id in 0..n_requests as u64 {
+            let mut request = Request::new("echo", id, req(id).image)
+                .priority(Priority::ALL[rng.usize_in(0, 2)]);
+            if rng.usize_in(0, 2) > 0 {
+                request = request.deadline_us(rng.usize_in(0, 3_000) as u64);
+            }
+            match engine.submit(request) {
+                Ok(w) => waiters.push((id, w)),
+                Err(EngineError::Rejected { reason, .. }) => match reason {
+                    mamba_x::coordinator::RejectReason::Full => seen_full += 1,
+                    mamba_x::coordinator::RejectReason::Shed => seen_shed += 1,
+                    mamba_x::coordinator::RejectReason::UnknownModel => {
+                        panic!("case {case}: model is registered")
+                    }
+                },
+                Err(e) => panic!("case {case}: untyped refusal {e}"),
+            }
+        }
+        let accepted = waiters.len();
+        let mut ids: Vec<u64> = waiters
+            .into_iter()
+            .map(|(id, w)| {
+                let resp = w.wait().expect("accepted request must complete, never shed later");
+                assert_eq!(resp.id, id, "case {case}");
+                resp.id
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), accepted, "case {case}: exactly-once");
+        drop(engine);
+        let report = join.join().unwrap();
+        let m = &report.model("echo").expect("registered model reported").metrics;
+        assert_eq!(m.count(), accepted, "case {case}");
+        assert_eq!(
+            accepted as u64 + seen_full + seen_shed,
+            n_requests as u64,
+            "case {case}: conservation"
+        );
+        assert_eq!(m.rejected_full, seen_full, "case {case}");
+        assert_eq!(m.rejected_shed, seen_shed, "case {case}");
+        assert_eq!(report.rejected_unknown_model, 0, "case {case}");
+    }
 }

@@ -4,12 +4,20 @@
 //! interleaving — must return per-request logits *bit-identical* to a
 //! direct `NativeBackend` call on the same image.
 //!
+//! Since API v1 the `ServerHandle` used here is a shim over the
+//! multi-model `Engine`, so these properties transitively pin the engine
+//! hot path too (the multi-variant cases live in
+//! `rust/tests/engine_props.rs`); `v0_shim_and_engine_agree_bitwise`
+//! pins the shim itself against the typed surface.
+//!
 //! Hand-rolled harness (proptest is unavailable offline): `Pcg` provides
 //! deterministic shrink-free random cases, 100+ per property.
 
 use mamba_x::config::VimModel;
-use mamba_x::coordinator::{BatchPolicy, InferenceRequest, Server};
-use mamba_x::runtime::{native::synthetic_image, InferenceBackend, NativeBackend, Tensor};
+use mamba_x::coordinator::{BatchPolicy, EngineBuilder, InferenceRequest, Request, Server};
+use mamba_x::runtime::{
+    native::synthetic_image, InferenceBackend, ModelSpec, NativeBackend, Tensor,
+};
 use mamba_x::util::Pcg;
 use mamba_x::vision::ForwardConfig;
 
@@ -114,4 +122,46 @@ fn prop_response_ids_match_requests() {
     join.join().unwrap();
     logits_seen.dedup();
     assert!(logits_seen.len() > 1, "distinct images must yield distinct logits");
+}
+
+/// The v0 shim and the typed v1 engine must serve bit-identical logits
+/// for the same backend/seed — the migration is a pure surface change.
+#[test]
+fn v0_shim_and_engine_agree_bitwise() {
+    let cfg = prop_cfg();
+    let n_elems = cfg.input_len();
+    let seed = 77u64;
+
+    let server = Server::new(BatchPolicy { max_batch: 4, max_wait_us: 200 });
+    let v0_cfg = cfg.clone();
+    let (handle, v0_join) =
+        server.spawn_pool(2, move |_w| Ok(NativeBackend::new(&v0_cfg, seed)));
+
+    let v1_cfg = cfg.clone();
+    let (engine, v1_join) = EngineBuilder::new()
+        .workers(2)
+        .policy(BatchPolicy { max_batch: 4, max_wait_us: 200 })
+        .register(ModelSpec::new("prop@dynamic", NativeBackend::factory(v1_cfg, seed, None)))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    for id in 0..12u64 {
+        let data = synthetic_image(3, id, n_elems);
+        let v0 = handle
+            .infer(InferenceRequest {
+                id,
+                image: Tensor::new(cfg.input_shape(), data.clone()).unwrap(),
+            })
+            .unwrap();
+        let v1 = engine
+            .infer(Request::new("prop@dynamic", id, Tensor::new(cfg.input_shape(), data).unwrap()))
+            .unwrap();
+        assert_eq!(v0.logits, v1.logits, "request {id}: v0 and v1 diverge");
+        assert_eq!(v1.model, "prop@dynamic");
+    }
+    drop(handle);
+    drop(engine);
+    assert_eq!(v0_join.join().unwrap().count(), 12);
+    assert_eq!(v1_join.join().unwrap().completed(), 12);
 }
