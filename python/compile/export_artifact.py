@@ -1,0 +1,277 @@
+#!/usr/bin/env python3
+"""VimArtifact v1 exporter: package a micro-family Vision Mamba model as
+the versioned binary artifact the rust serving stack loads
+(`rust/src/runtime/artifact.rs` — magic, manifest JSON, raw little-endian
+f32 tensor blob, optional embedded CalibTable JSON, FNV-1a checksum).
+
+Pure python + numpy — no JAX — so it runs anywhere:
+
+* with a trained checkpoint (`artifacts/<model>_params.npz`, the flat
+  dotted-path tree `compile.train.flatten_params` writes), the real
+  trained weights are exported: `A_log`/`D` fold into the serving-side
+  `a = -exp(A_log)` / `d` parameters, everything else maps 1:1;
+* without one, a deterministic numpy fallback initialization is exported
+  (seeded; reproducible across runs and platforms) so the end-to-end
+  pipeline — export -> inspect -> serve — works in any environment.
+
+The rust loader is the validator: geometry, tensor schema, per-tensor
+absmax integrity and the whole-file checksum are all re-checked at load,
+so a drift between this mirror and the rust side fails loudly there.
+
+Usage:
+  python3 python/compile/export_artifact.py --model micro --seed 7 \
+      --out artifacts/vim_micro.mxa [--params artifacts/micro_params.npz] \
+      [--calib artifacts/calib_micro.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+
+import numpy as np
+
+F32 = np.float32
+
+MAGIC = b"MAMBAXAR"
+VERSION = 1
+FORMAT = "mamba-x-artifact"
+
+# Geometry mirror of compile.model.CONFIGS / rust VimModel::by_name for
+# the natively servable family (kept here so the exporter needs no jax
+# import; rust rejects any drift at load time).
+CONFIGS = {
+    "micro": dict(d_model=64, n_blocks=4, d_state=8, expand=2, conv_k=4,
+                  patch=4, img=32, in_ch=1, n_classes=10),
+    "micro_s": dict(d_model=48, n_blocks=3, d_state=8, expand=2, conv_k=4,
+                    patch=4, img=32, in_ch=1, n_classes=10),
+    "micro_l": dict(d_model=96, n_blocks=6, d_state=8, expand=2, conv_k=4,
+                    patch=4, img=32, in_ch=1, n_classes=10),
+}
+
+
+def d_inner(g):
+    return g["expand"] * g["d_model"]
+
+
+def dt_rank(g):
+    return max(1, g["d_model"] // 16)
+
+
+def seq_len(g):
+    return (g["img"] // g["patch"]) ** 2 + 1
+
+
+def patch_dim(g):
+    return g["patch"] * g["patch"] * g["in_ch"]
+
+
+def tensor_schema(g):
+    """(name, shape) of every tensor, in serialization order — the exact
+    mirror of rust `vision::vim::vim_tensor_schema`."""
+    d, e, n, r, k = g["d_model"], d_inner(g), g["d_state"], dt_rank(g), g["conv_k"]
+    out = [
+        ("patch_w", [patch_dim(g), d]),
+        ("patch_b", [d]),
+        ("cls", [d]),
+        ("pos", [seq_len(g), d]),
+    ]
+    for b in range(g["n_blocks"]):
+        out += [
+            (f"blocks.{b}.norm_g", [d]),
+            (f"blocks.{b}.norm_b", [d]),
+            (f"blocks.{b}.in_w", [d, 2 * e]),
+            (f"blocks.{b}.in_b", [2 * e]),
+            (f"blocks.{b}.out_w", [e, d]),
+            (f"blocks.{b}.out_b", [d]),
+        ]
+        for dr in ("fwd", "bwd"):
+            out += [
+                (f"blocks.{b}.{dr}.conv_w", [e, k]),
+                (f"blocks.{b}.{dr}.conv_b", [e]),
+                (f"blocks.{b}.{dr}.xproj_w", [e, r + 2 * n]),
+                (f"blocks.{b}.{dr}.dt_w", [r, e]),
+                (f"blocks.{b}.{dr}.dt_b", [e]),
+                (f"blocks.{b}.{dr}.a", [e, n]),
+                (f"blocks.{b}.{dr}.d", [e]),
+            ]
+    out += [
+        ("head_norm_g", [d]),
+        ("head_norm_b", [d]),
+        ("head_w", [d, g["n_classes"]]),
+        ("head_b", [g["n_classes"]]),
+    ]
+    return out
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def absmax_bits(arr: np.ndarray) -> int:
+    """Bit pattern of the f32 |max| — abs and max are exact f32 ops, so
+    this equals rust `runtime::tensor_absmax` bitwise."""
+    a = F32(0.0) if arr.size == 0 else np.max(np.abs(arr.astype(F32)))
+    return int(np.asarray(a, F32).view(np.uint32))
+
+
+def build_manifest(arch: str, g: dict, tensors: dict, tool: str, detail: str) -> dict:
+    for name, _ in tensor_schema(g):
+        if not np.isfinite(tensors[name]).all():
+            # The rust loader would reject this artifact anyway (non-finite
+            # absmax integrity record); fail at export with a better error.
+            raise ValueError(f"tensor {name!r} contains non-finite values")
+    return {
+        "format": FORMAT,
+        "version": VERSION,
+        "arch": arch,
+        "geometry": {k: g[k] for k in ("d_model", "n_blocks", "d_state", "expand",
+                                       "conv_k", "patch", "img", "in_ch", "n_classes")},
+        "provenance": {"tool": tool, "detail": detail},
+        "tensors": [
+            {"name": name, "shape": shape, "absmax_bits": absmax_bits(tensors[name])}
+            for name, shape in tensor_schema(g)
+        ],
+    }
+
+
+def encode(manifest: dict, g: dict, tensors: dict, calib_bytes: bytes = b"") -> bytes:
+    mj = json.dumps(manifest, separators=(",", ":")).encode()
+    blob = b"".join(
+        np.ascontiguousarray(tensors[name], dtype="<f4").tobytes()
+        for name, _ in tensor_schema(g)
+    )
+    buf = bytearray()
+    buf += MAGIC
+    buf += VERSION.to_bytes(4, "little")
+    buf += len(mj).to_bytes(4, "little")
+    buf += mj
+    buf += len(blob).to_bytes(8, "little")
+    buf += blob
+    buf += len(calib_bytes).to_bytes(4, "little")
+    buf += calib_bytes
+    buf += fnv1a64(bytes(buf)).to_bytes(8, "little")
+    return bytes(buf)
+
+
+def checkpoint_tensors(npz_path: pathlib.Path, g: dict) -> dict:
+    """Map the flat dotted-path npz checkpoint onto the artifact schema,
+    folding the training-side parameterization into the serving one."""
+    flat = dict(np.load(npz_path))
+    out = {}
+    for name, shape in tensor_schema(g):
+        if name.endswith(".a"):
+            src = flat[name[:-2] + ".A_log"]
+            arr = -np.exp(src.astype(np.float64)).astype(F32)
+        elif name.endswith(".d"):
+            arr = flat[name[:-2] + ".D"].astype(F32)
+        else:
+            arr = flat[name].astype(F32)
+        arr = np.asarray(arr, F32)
+        # Shapes must MATCH, not merely reshape: a transposed or re-laid-out
+        # checkpoint tensor would survive reshape() with scrambled weights
+        # and then pass every rust-side integrity gate. Only 1-D targets
+        # (e.g. cls stored as (1, D)) may flatten, size-preserving.
+        if len(shape) == 1 and arr.size == shape[0]:
+            arr = arr.reshape(shape)
+        elif list(arr.shape) != list(shape):
+            raise ValueError(
+                f"checkpoint tensor {name!r} has shape {list(arr.shape)}, "
+                f"schema expects {shape}")
+        out[name] = arr
+    return out
+
+
+def fallback_tensors(g: dict, seed: int) -> dict:
+    """Deterministic numpy initialization (no checkpoint available):
+    same parameterization family as `compile.model.init_params`, seeded
+    through one RandomState so the export is reproducible."""
+    rs = np.random.RandomState(seed)
+    d, e, n, r, k = g["d_model"], d_inner(g), g["d_state"], dt_rank(g), g["conv_k"]
+
+    def dense(fan_in, shape):
+        return (rs.standard_normal(shape) / math.sqrt(max(1, fan_in))).astype(F32)
+
+    out = {
+        "patch_w": dense(patch_dim(g), (patch_dim(g), d)),
+        "patch_b": np.zeros(d, F32),
+        "cls": (rs.standard_normal(d) * 0.02).astype(F32),
+        "pos": (rs.standard_normal((seq_len(g), d)) * 0.02).astype(F32),
+        "head_norm_g": np.ones(d, F32),
+        "head_norm_b": np.zeros(d, F32),
+        "head_w": dense(d, (d, g["n_classes"])),
+        "head_b": np.zeros(g["n_classes"], F32),
+    }
+    for b in range(g["n_blocks"]):
+        out[f"blocks.{b}.norm_g"] = np.ones(d, F32)
+        out[f"blocks.{b}.norm_b"] = np.zeros(d, F32)
+        out[f"blocks.{b}.in_w"] = dense(d, (d, 2 * e))
+        out[f"blocks.{b}.in_b"] = np.zeros(2 * e, F32)
+        out[f"blocks.{b}.out_w"] = dense(e, (e, d))
+        out[f"blocks.{b}.out_b"] = np.zeros(d, F32)
+        for dr in ("fwd", "bwd"):
+            p = f"blocks.{b}.{dr}"
+            # dt bias per Mamba: softplus^-1 of dt log-uniform in
+            # [1e-3, 1e-1], keeping the initial timestep stable.
+            dt = np.exp(rs.uniform(size=e) * (math.log(0.1) - math.log(1e-3))
+                        + math.log(1e-3))
+            out[f"{p}.conv_w"] = dense(k, (e, k))
+            out[f"{p}.conv_b"] = np.zeros(e, F32)
+            out[f"{p}.xproj_w"] = dense(e, (e, r + 2 * n))
+            out[f"{p}.dt_w"] = dense(r, (r, e))
+            out[f"{p}.dt_b"] = np.log(np.expm1(dt)).astype(F32)
+            out[f"{p}.a"] = -np.tile(np.arange(1, n + 1, dtype=F32), (e, 1))
+            out[f"{p}.d"] = np.ones((e,), F32)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="micro", choices=sorted(CONFIGS))
+    ap.add_argument("--seed", type=int, default=7,
+                    help="fallback-init seed (ignored with a checkpoint)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default artifacts/vim_<model>.mxa)")
+    ap.add_argument("--params", default=None,
+                    help="trained checkpoint npz (default "
+                         "artifacts/<model>_params.npz; falls back to "
+                         "deterministic init when absent)")
+    ap.add_argument("--calib", default=None,
+                    help="CalibTable JSON (`mamba-x calibrate` output) to "
+                         "embed verbatim")
+    args = ap.parse_args()
+
+    g = CONFIGS[args.model]
+    out = pathlib.Path(args.out or f"artifacts/vim_{args.model}.mxa")
+    npz = pathlib.Path(args.params or f"artifacts/{args.model}_params.npz")
+    if npz.exists():
+        tensors = checkpoint_tensors(npz, g)
+        detail = f"trained checkpoint {npz}"
+        print(f"exporting trained weights from {npz}")
+    else:
+        tensors = fallback_tensors(g, args.seed)
+        detail = f"numpy fallback init, seed={args.seed} (no checkpoint at {npz})"
+        print(f"no checkpoint at {npz}; exporting deterministic fallback init "
+              f"(seed {args.seed})")
+
+    calib_bytes = b""
+    if args.calib:
+        calib_bytes = pathlib.Path(args.calib).read_bytes()
+        print(f"embedding calibration table {args.calib} ({len(calib_bytes)} bytes)")
+
+    manifest = build_manifest(args.model, g, tensors, "export_artifact.py", detail)
+    data = encode(manifest, g, tensors, calib_bytes)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_bytes(data)
+    params = sum(int(np.prod(s)) for _, s in tensor_schema(g))
+    print(f"wrote {out}: arch {args.model}, {params} params, {len(data)} bytes")
+    print(f"verify it: cargo run --release -- inspect --artifact {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Generate the committed `VimArtifact` v1 golden fixture
+(`rust/tests/data/artifact_v1.bin`) that pins the byte layout across
+languages (replayed by `rust/tests/artifact_props.rs`).
+
+Pure python + numpy, reusing the byte-layout mirror in
+`export_artifact.py`. Every value is reproducible exactly:
+
+* weights follow an integer formula — tensor `t`, element `k` ->
+  `((t*1009 + k*31) % 2001 - 1000) / 8192` — whose arithmetic (integer
+  ops, then one division by a power of two) is exact in f32, so the rust
+  test recomputes it bit-for-bit;
+* the embedded calibration table uses |dA| ranges of the form
+  `0.8 * 2^-j` (power-of-two scaling of one mantissa, so the pow2-shift
+  derivation is identical in numpy and rust f32 — the log2 fraction sits
+  ~0.19 from the rounding boundary, far beyond any libm ulp drift) and
+  |dBu| ranges that are exact multiples of 0.25.
+
+Geometry: arch `micro_s` at 8x8x1 -> 3 classes (the smallest registered
+arch; instance geometry is free per the format).
+
+Usage:  python3 python/compile/make_artifact_golden.py [out_path]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+import export_artifact as X  # noqa: E402
+
+F32 = np.float32
+
+GOLDEN_GEOMETRY = dict(X.CONFIGS["micro_s"], img=8, in_ch=1, n_classes=3)
+
+
+def formula_tensors(g: dict) -> dict:
+    """Tensor `t`, element `k` -> ((t*1009 + k*31) % 2001 - 1000) / 8192."""
+    out = {}
+    for t, (name, shape) in enumerate(X.tensor_schema(g)):
+        n = int(np.prod(shape))
+        k = np.arange(n, dtype=np.int64)
+        m = (t * 1009 + k * 31) % 2001
+        out[name] = ((m - 1000).astype(F32) / F32(8192.0)).reshape(shape)
+    return out
+
+
+# -- CalibTable JSON mirror (rust quant::calib::CalibTable::to_json) --------
+
+def round_half_away(x):
+    x = np.asarray(x, F32)
+    return (np.sign(x) * np.floor(np.abs(x) + F32(0.5))).astype(F32)
+
+
+def scale_for(m):
+    """rust quant::scale_for(m, 8) in f32: max(m, 1e-12) / 127."""
+    return F32(np.maximum(F32(m), F32(1e-12))) / F32(127.0)
+
+
+def pow2_shift(s):
+    """rust quant::pow2_shift: -round_half_away(log2(max(s, 1e-30)))."""
+    return int(-round_half_away(np.log2(np.maximum(F32(s), F32(1e-30)))))
+
+
+def bits(v) -> int:
+    return int(np.asarray(v, F32).view(np.uint32))
+
+
+def golden_calib(g: dict) -> bytes:
+    e = X.d_inner(g)
+    sites = []
+    for s in range(2 * g["n_blocks"]):
+        da = [np.ldexp(F32(0.8), -((s + c) % 4)) for c in range(e)]
+        dbu = [F32((s * 5 + c) % 7 + 1) * F32(0.25) for c in range(e)]
+        sites.append({
+            "block": s // 2,
+            "dir": "fwd" if s % 2 == 0 else "bwd",
+            "shift": [pow2_shift(scale_for(m)) for m in da],
+            "da_max_bits": [bits(m) for m in da],
+            "dbu_max_bits": [bits(m) for m in dbu],
+        })
+    table = {
+        "format": "mamba-x-calib",
+        "version": 1,
+        "model": "micro_s",
+        "samples": 4,
+        "percentile": 1.0,
+        "sites": sites,
+    }
+    return json.dumps(table, separators=(",", ":")).encode()
+
+
+def main():
+    out = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                       else "rust/tests/data/artifact_v1.bin")
+    g = GOLDEN_GEOMETRY
+    tensors = formula_tensors(g)
+    manifest = X.build_manifest(
+        "micro_s", g, tensors, "make_artifact_golden.py",
+        "format v1 golden fixture (formula weights, see script)")
+    data = X.encode(manifest, g, tensors, golden_calib(g))
+
+    # Self-checks the rust side also asserts.
+    assert data[:8] == X.MAGIC
+    params = sum(int(np.prod(s)) for _, s in X.tensor_schema(g))
+    shift0 = [pow2_shift(scale_for(np.ldexp(F32(0.8), -(c % 4)))) for c in range(4)]
+    assert shift0 == [7, 8, 9, 10], f"shift derivation drifted: {shift0}"
+    stored = int.from_bytes(data[-8:], "little")
+    assert stored == X.fnv1a64(data[:-8])
+
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_bytes(data)
+    print(f"wrote {out}: micro_s@8x8x1->3, {params} params, {len(data)} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,15 @@ impl VimModel {
     pub const fn micro() -> Self {
         Self { name: "micro", d_model: 64, n_blocks: 4, d_state: 8, expand: 2, conv_k: 4, patch: 4 }
     }
+    /// Smaller sibling of `micro` (python `CONFIGS["micro_s"]`) — the
+    /// Tiny analog of the paper's Table 5 scaled-down family.
+    pub const fn micro_s() -> Self {
+        Self { name: "micro_s", d_model: 48, n_blocks: 3, d_state: 8, expand: 2, conv_k: 4, patch: 4 }
+    }
+    /// Larger sibling of `micro` (python `CONFIGS["micro_l"]`).
+    pub const fn micro_l() -> Self {
+        Self { name: "micro_l", d_model: 96, n_blocks: 6, d_state: 8, expand: 2, conv_k: 4, patch: 4 }
+    }
 
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
@@ -44,6 +53,8 @@ impl VimModel {
             "small" => Some(Self::small()),
             "base" => Some(Self::base()),
             "micro" => Some(Self::micro()),
+            "micro_s" => Some(Self::micro_s()),
+            "micro_l" => Some(Self::micro_l()),
             _ => None,
         }
     }
@@ -170,5 +181,14 @@ mod tests {
     fn lookup_by_name() {
         assert_eq!(VimModel::by_name("tiny"), Some(VimModel::tiny()));
         assert_eq!(VimModel::by_name("nope"), None);
+        // The micro family mirrors python/compile/model.py::CONFIGS.
+        for (m, d, b) in [
+            (VimModel::micro(), 64, 4),
+            (VimModel::micro_s(), 48, 3),
+            (VimModel::micro_l(), 96, 6),
+        ] {
+            assert_eq!((m.d_model, m.n_blocks, m.d_state, m.patch), (d, b, 8, 4));
+            assert_eq!(VimModel::by_name(m.name), Some(m.clone()));
+        }
     }
 }

@@ -41,7 +41,10 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::quant::CalibTable;
-use crate::runtime::{BackendFactory, InferenceBackend, ModelRegistry, ModelSpec, Tensor};
+use crate::runtime::{
+    fnv1a64, ArtifactStore, BackendFactory, InferenceBackend, ModelRegistry, ModelSource,
+    ModelSpec, Tensor,
+};
 use crate::util::Json;
 use crate::vision::ForwardConfig;
 
@@ -309,7 +312,84 @@ pub fn admission_check(
 pub fn arch_forward_config(arch: &str) -> Result<ForwardConfig> {
     match arch {
         "micro" => Ok(ForwardConfig::micro()),
-        other => bail!("unknown arch {other:?}; servable archs: micro"),
+        "micro_s" => Ok(ForwardConfig::micro_s()),
+        "micro_l" => Ok(ForwardConfig::micro_l()),
+        other => bail!("unknown arch {other:?}; servable archs: micro, micro_s, micro_l"),
+    }
+}
+
+/// Where a configured variant's weights come from — the config-file twin
+/// of [`ModelSource`] (schema v2's `"source"` object).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSourceConfig {
+    /// `{"artifact": "path/to/model.mxa"}` — a versioned `VimArtifact`
+    /// file; arch, geometry and (optionally) calibration all ride inside.
+    Artifact { path: String },
+    /// `{"random_init": {"arch": "micro", "seed": 7}}` — hermetic seeded
+    /// weights (also what v1 configs' `arch` + `seed` keys desugar to).
+    RandomInit { arch: String, seed: u64 },
+}
+
+impl ModelSourceConfig {
+    /// Resolve into the runtime [`ModelSource`] (arch strings validated).
+    pub fn to_source(&self) -> Result<ModelSource> {
+        match self {
+            ModelSourceConfig::Artifact { path } => Ok(ModelSource::Artifact(path.into())),
+            ModelSourceConfig::RandomInit { arch, seed } => Ok(ModelSource::RandomInit {
+                config: arch_forward_config(arch)?,
+                seed: *seed,
+            }),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.obj()?;
+        for key in obj.keys() {
+            if !["artifact", "random_init"].contains(&key.as_str()) {
+                bail!("unknown source key {key:?} in engine config");
+            }
+        }
+        match (j.opt("artifact"), j.opt("random_init")) {
+            (Some(p), None) => Ok(ModelSourceConfig::Artifact { path: p.str()?.to_string() }),
+            (None, Some(r)) => {
+                for key in r.obj()?.keys() {
+                    if !["arch", "seed"].contains(&key.as_str()) {
+                        bail!("unknown random_init key {key:?} in engine config");
+                    }
+                }
+                Ok(ModelSourceConfig::RandomInit {
+                    arch: r.get("arch")?.str()?.to_string(),
+                    seed: r.get("seed")?.u64_exact()?,
+                })
+            }
+            _ => bail!(
+                "source must be exactly one of {{\"artifact\": \"path\"}} or \
+                 {{\"random_init\": {{\"arch\": ..., \"seed\": ...}}}}"
+            ),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ModelSourceConfig::Artifact { path } => {
+                Json::obj_from(vec![("artifact", Json::Str(path.clone()))])
+            }
+            ModelSourceConfig::RandomInit { arch, seed } => Json::obj_from(vec![(
+                "random_init",
+                Json::obj_from(vec![
+                    ("arch", Json::Str(arch.clone())),
+                    ("seed", Json::Num(*seed as f64)),
+                ]),
+            )]),
+        }
+    }
+
+    /// Short human-readable description for listings.
+    pub fn describe(&self) -> String {
+        match self {
+            ModelSourceConfig::Artifact { path } => format!("artifact:{path}"),
+            ModelSourceConfig::RandomInit { arch, seed } => format!("random:{arch}#{seed}"),
+        }
     }
 }
 
@@ -318,12 +398,13 @@ pub fn arch_forward_config(arch: &str) -> Result<ForwardConfig> {
 pub struct ModelVariantConfig {
     /// Registry name (`<model>@<variant>` by convention).
     pub name: String,
-    /// Architecture key for [`arch_forward_config`] (currently `micro`).
-    pub arch: String,
-    /// Weight seed (native synthetic weights are a pure function of it).
-    pub seed: u64,
-    /// Optional static scan calibration table path (`mamba-x calibrate`);
-    /// loading validates it against the arch — no silent fallback.
+    /// Weight source (schema v2 `"source"`; v1 `arch`+`seed` desugar to
+    /// [`ModelSourceConfig::RandomInit`]).
+    pub source: ModelSourceConfig,
+    /// Static scan calibration *override* path (`mamba-x calibrate`
+    /// output). An artifact's embedded table is the default; this key
+    /// replaces it. Validated against the model at build — no silent
+    /// fallback.
     pub calib: Option<String>,
     /// Default latency target for requests without an explicit deadline.
     pub slo_us: Option<u64>,
@@ -332,38 +413,68 @@ pub struct ModelVariantConfig {
 }
 
 impl ModelVariantConfig {
-    pub fn new(name: impl Into<String>, arch: impl Into<String>, seed: u64) -> Self {
+    /// A random-init variant (the v1 constructor shape).
+    pub fn random(name: impl Into<String>, arch: impl Into<String>, seed: u64) -> Self {
         ModelVariantConfig {
             name: name.into(),
-            arch: arch.into(),
-            seed,
+            source: ModelSourceConfig::RandomInit { arch: arch.into(), seed },
             calib: None,
             slo_us: None,
             service_hint_us: 0,
         }
     }
 
-    pub fn forward_config(&self) -> Result<ForwardConfig> {
-        arch_forward_config(&self.arch)
+    /// An artifact-sourced variant.
+    pub fn artifact(name: impl Into<String>, path: impl Into<String>) -> Self {
+        ModelVariantConfig {
+            name: name.into(),
+            source: ModelSourceConfig::Artifact { path: path.into() },
+            calib: None,
+            slo_us: None,
+            service_hint_us: 0,
+        }
     }
 
-    /// Build this variant's backend factory: resolve the arch, load and
-    /// validate the calibration table (if any), bake both plus the seed
-    /// into a [`crate::runtime::NativeBackend`] constructor.
-    pub fn build_factory(&self) -> Result<BackendFactory> {
-        let cfg = self.forward_config().with_context(|| format!("model {:?}", self.name))?;
-        let calib = match &self.calib {
-            Some(path) => {
-                let table = CalibTable::load(path)
-                    .with_context(|| format!("model {:?} calibration", self.name))?;
-                table
-                    .validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())
-                    .with_context(|| format!("model {:?} calibration {path:?}", self.name))?;
-                Some(Arc::new(table))
+    /// The model geometry this variant serves. For artifact sources this
+    /// opens the file's manifest (structure + schema validated, tensor
+    /// blob untouched).
+    pub fn forward_config(&self) -> Result<ForwardConfig> {
+        match &self.source {
+            ModelSourceConfig::RandomInit { arch, .. } => arch_forward_config(arch),
+            ModelSourceConfig::Artifact { path } => {
+                let summary = ArtifactStore::inspect(path)
+                    .with_context(|| format!("model {:?}", self.name))?;
+                Ok(summary.manifest.forward_config()?)
             }
+        }
+    }
+
+    /// Deterministic seed for this variant's synthetic demo/check stream
+    /// (NOT the weight seed): random-init variants reuse their weight
+    /// seed (v1 behavior), artifact variants hash the path.
+    pub fn stream_seed(&self) -> u64 {
+        match &self.source {
+            ModelSourceConfig::RandomInit { seed, .. } => *seed,
+            ModelSourceConfig::Artifact { path } => fnv1a64(path.as_bytes()),
+        }
+    }
+
+    /// Build this variant's backend factory: resolve the source (opening
+    /// and fully verifying an artifact), load the calibration override
+    /// (if any), bake both into a [`crate::runtime::NativeBackend`]
+    /// constructor.
+    pub fn build_factory(&self) -> Result<BackendFactory> {
+        let source =
+            self.source.to_source().with_context(|| format!("model {:?}", self.name))?;
+        let calib = match &self.calib {
+            Some(path) => Some(Arc::new(
+                CalibTable::load(path)
+                    .with_context(|| format!("model {:?} calibration override", self.name))?,
+            )),
             None => None,
         };
-        Ok(crate::runtime::NativeBackend::factory(cfg, self.seed, calib))
+        crate::runtime::NativeBackend::factory(source, calib)
+            .with_context(|| format!("model {:?}", self.name))
     }
 
     /// Resolve into a registrable [`ModelSpec`] (factory + SLO knobs).
@@ -379,17 +490,31 @@ impl ModelVariantConfig {
     fn from_json(j: &Json) -> Result<Self> {
         let obj = j.obj()?;
         for key in obj.keys() {
-            if !["name", "arch", "seed", "calib", "slo_us", "service_hint_us"]
+            if !["name", "source", "arch", "seed", "calib", "slo_us", "service_hint_us"]
                 .contains(&key.as_str())
             {
                 bail!("unknown model key {key:?} in engine config");
             }
         }
-        let mut v = ModelVariantConfig::new(
-            j.get("name")?.str()?.to_string(),
-            j.get("arch")?.str()?.to_string(),
-            j.get("seed")?.u64_exact()?,
-        );
+        let name = j.get("name")?.str()?.to_string();
+        let legacy = j.opt("arch").is_some() || j.opt("seed").is_some();
+        let source = match (j.opt("source"), legacy) {
+            (Some(_), true) => bail!(
+                "model {name:?} mixes the v2 \"source\" key with v1 \"arch\"/\"seed\" \
+                 keys; use one or the other"
+            ),
+            (Some(s), false) => ModelSourceConfig::from_json(s)
+                .with_context(|| format!("model {name:?} source"))?,
+            (None, true) => ModelSourceConfig::RandomInit {
+                arch: j.get("arch")?.str()?.to_string(),
+                seed: j.get("seed")?.u64_exact()?,
+            },
+            (None, false) => bail!(
+                "model {name:?} needs a \"source\" (v2) or \"arch\" + \"seed\" (v1)"
+            ),
+        };
+        let mut v =
+            ModelVariantConfig { name, source, calib: None, slo_us: None, service_hint_us: 0 };
         if let Some(c) = j.opt("calib") {
             v.calib = Some(c.str()?.to_string());
         }
@@ -405,8 +530,7 @@ impl ModelVariantConfig {
     fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("name", Json::Str(self.name.clone())),
-            ("arch", Json::Str(self.arch.clone())),
-            ("seed", Json::Num(self.seed as f64)),
+            ("source", self.source.to_json()),
         ];
         if let Some(c) = &self.calib {
             pairs.push(("calib", Json::Str(c.clone())));
@@ -420,6 +544,11 @@ impl ModelVariantConfig {
         Json::obj_from(pairs)
     }
 }
+
+/// Current engine config schema version. v1 (no `version` key, models
+/// declared with `arch` + `seed`) still parses — it desugars to v2
+/// random-init sources; `to_json` always writes v2.
+pub const ENGINE_CONFIG_VERSION: u64 = 2;
 
 /// Declarative engine configuration (`serve --engine engine.json`): the
 /// pool geometry plus every hosted model variant.
@@ -453,10 +582,19 @@ impl EngineConfig {
     pub fn from_json(j: &Json) -> Result<Self> {
         let obj = j.obj()?;
         for key in obj.keys() {
-            if !["workers", "max_batch", "max_wait_us", "queue_depth", "models"]
+            if !["version", "workers", "max_batch", "max_wait_us", "queue_depth", "models"]
                 .contains(&key.as_str())
             {
                 bail!("unknown engine config key {key:?}");
+            }
+        }
+        if let Some(v) = j.opt("version") {
+            let v = v.u64_exact()?;
+            if v == 0 || v > ENGINE_CONFIG_VERSION {
+                bail!(
+                    "unsupported engine config version {v} (this build reads v1 and \
+                     v{ENGINE_CONFIG_VERSION})"
+                );
             }
         }
         let models: Vec<ModelVariantConfig> = j
@@ -493,6 +631,7 @@ impl EngineConfig {
 
     pub fn to_json(&self) -> Json {
         Json::obj_from(vec![
+            ("version", Json::Num(ENGINE_CONFIG_VERSION as f64)),
             ("workers", Json::Num(self.workers as f64)),
             ("max_batch", Json::Num(self.policy.max_batch as f64)),
             ("max_wait_us", Json::Num(self.policy.max_wait_us as f64)),
@@ -772,6 +911,12 @@ impl EngineBuilder {
     }
 }
 
+/// Format tag of the `--report-json` artifact.
+pub const ENGINE_REPORT_FORMAT: &str = "mamba-x-engine-report";
+
+/// Version of the `--report-json` schema.
+pub const ENGINE_REPORT_VERSION: u32 = 1;
+
 /// Per-model serving outcome, merged across the pool at join time.
 #[derive(Debug, Clone)]
 pub struct ModelReport {
@@ -805,6 +950,35 @@ impl EngineReport {
     /// Total completed requests across models.
     pub fn completed(&self) -> usize {
         self.models.iter().map(|m| m.metrics.count()).sum()
+    }
+
+    /// Machine-readable report (`serve --report-json`): one object per
+    /// hosted variant with the full [`Metrics`] counter set, plus the
+    /// engine-level unknown-model rejection count.
+    pub fn to_json(&self) -> Json {
+        let models = self
+            .models
+            .iter()
+            .map(|m| {
+                let mut obj = match m.metrics.to_json() {
+                    Json::Obj(obj) => obj,
+                    _ => unreachable!("Metrics::to_json returns an object"),
+                };
+                obj.insert("name".to_string(), Json::Str(m.name.clone()));
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("format", Json::Str(ENGINE_REPORT_FORMAT.to_string())),
+            ("version", Json::Num(ENGINE_REPORT_VERSION as f64)),
+            ("models", Json::Arr(models)),
+            ("rejected_unknown_model", Json::Num(self.rejected_unknown_model as f64)),
+        ])
+    }
+
+    /// Write the JSON report (creating parent directories as needed).
+    pub fn save_json(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::util::write_creating_dirs(path, self.to_json().dump().as_bytes())
     }
 
     /// Multi-line, per-model summary with per-reason rejection counters.
@@ -1219,5 +1393,86 @@ mod tests {
         let neg = r#"{"models": [{"name": "x", "arch": "micro", "seed": -3}]}"#;
         assert!(EngineConfig::from_json(&Json::parse(neg).unwrap()).is_err());
         assert!(arch_forward_config("giga").is_err());
+        assert!(arch_forward_config("micro_s").is_ok());
+    }
+
+    #[test]
+    fn engine_config_v2_sources_parse_and_round_trip() {
+        let text = r#"{
+            "version": 2, "workers": 2,
+            "models": [
+                {"name": "vim-micro@artifact",
+                 "source": {"artifact": "artifacts/vim_micro.mxa"}},
+                {"name": "vim-micro@dynamic",
+                 "source": {"random_init": {"arch": "micro", "seed": 7}},
+                 "calib": "artifacts/calib_micro.json"}
+            ]
+        }"#;
+        let cfg = EngineConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(
+            cfg.models[0].source,
+            ModelSourceConfig::Artifact { path: "artifacts/vim_micro.mxa".to_string() }
+        );
+        assert_eq!(
+            cfg.models[1].source,
+            ModelSourceConfig::RandomInit { arch: "micro".to_string(), seed: 7 }
+        );
+        assert_eq!(cfg.models[1].calib.as_deref(), Some("artifacts/calib_micro.json"));
+        assert_eq!(cfg.models[1].stream_seed(), 7);
+        // Artifact stream seeds are deterministic path hashes.
+        assert_eq!(
+            cfg.models[0].stream_seed(),
+            fnv1a64("artifacts/vim_micro.mxa".as_bytes())
+        );
+        let round = EngineConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(cfg, round);
+
+        // v1 sugar and v2 sources may not mix within one model entry.
+        let mixed = r#"{"models": [{"name": "x", "arch": "micro", "seed": 1,
+                                    "source": {"artifact": "a.mxa"}}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(mixed).unwrap()).is_err());
+        // A model entry with neither form is an error, not a default.
+        let none = r#"{"models": [{"name": "x"}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(none).unwrap()).is_err());
+        // Two source forms at once are rejected.
+        let both = r#"{"models": [{"name": "x", "source": {
+            "artifact": "a.mxa", "random_init": {"arch": "micro", "seed": 1}}}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(both).unwrap()).is_err());
+        // Future config versions are refused.
+        let future = r#"{"version": 3, "models": [{"name": "x", "arch": "micro", "seed": 1}]}"#;
+        let err = EngineConfig::from_json(&Json::parse(future).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("version 3"), "{err}");
+        // A missing artifact path fails at resolution time, typed.
+        let missing = ModelVariantConfig::artifact("m@a", "/no/such/artifact.mxa");
+        assert!(missing.forward_config().is_err());
+        assert!(missing.build_factory().is_err());
+    }
+
+    #[test]
+    fn engine_report_json_counts_match() {
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 2, max_wait_us: 100 })
+            .register(ModelSpec::new("m@a", scale_factory(2.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        for id in 0..3u64 {
+            let img = Tensor::new(vec![1], vec![1.0]).unwrap();
+            engine.infer(Request::new("m@a", id, img)).unwrap();
+        }
+        let _ = engine.infer(Request::new("m@zzz", 9, Tensor::zeros(vec![1]))).unwrap_err();
+        drop(engine);
+        let report = join.join().unwrap();
+        let j = report.to_json();
+        assert_eq!(j.get("format").unwrap().str().unwrap(), ENGINE_REPORT_FORMAT);
+        assert_eq!(j.get("version").unwrap().usize().unwrap(), ENGINE_REPORT_VERSION as usize);
+        assert_eq!(j.get("rejected_unknown_model").unwrap().usize().unwrap(), 1);
+        let models = j.get("models").unwrap().arr().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("name").unwrap().str().unwrap(), "m@a");
+        assert_eq!(models[0].get("completed").unwrap().usize().unwrap(), 3);
+        // The artifact is valid JSON end to end.
+        assert!(Json::parse(&j.dump()).is_ok());
     }
 }

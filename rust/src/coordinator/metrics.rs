@@ -1,5 +1,7 @@
 //! Serving metrics: latency histogram + throughput accounting.
 
+use crate::util::Json;
+
 /// Simple reservoir-free latency recorder (exact percentiles; the request
 /// volumes of an edge service are small enough to keep all samples).
 #[derive(Debug, Clone, Default)]
@@ -91,6 +93,25 @@ impl Metrics {
         }
     }
 
+    /// Machine-readable form of [`Self::summary`] — the per-model body of
+    /// the engine's `--report-json` artifact (same spirit as
+    /// `BENCH_hotpath.json`: exact counters, derived stats precomputed).
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("completed", Json::Num(self.count() as f64)),
+            ("rejected_full", Json::Num(self.rejected_full as f64)),
+            ("rejected_shed", Json::Num(self.rejected_shed as f64)),
+            ("mean_us", Json::Num(self.mean_us())),
+            ("p50_us", Json::Num(self.percentile_us(50.0) as f64)),
+            ("p95_us", Json::Num(self.percentile_us(95.0) as f64)),
+            ("p99_us", Json::Num(self.percentile_us(99.0) as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batch_items", Json::Num(self.batch_items as f64)),
+            ("mean_batch", Json::Num(self.mean_batch_size())),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+        ])
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "n={} rejected={} (full {}, shed {}) mean={:.1}ms p50={:.1}ms p95={:.1}ms \
@@ -161,6 +182,25 @@ mod tests {
         assert_eq!((a.rejected_full, a.rejected_shed), (2, 1));
         // Union percentiles: p50 over {100..1000, 1000..10000} samples.
         assert_eq!(a.percentile_us(50.0), 1000);
+    }
+
+    #[test]
+    fn to_json_carries_the_counters() {
+        let mut m = Metrics::default();
+        for i in 1..=4u64 {
+            m.record_request(i * 1000, i * 10);
+        }
+        m.record_batch(4);
+        m.rejected_full = 2;
+        m.rejected_shed = 3;
+        let j = m.to_json();
+        assert_eq!(j.get("completed").unwrap().usize().unwrap(), 4);
+        assert_eq!(j.get("rejected_full").unwrap().usize().unwrap(), 2);
+        assert_eq!(j.get("rejected_shed").unwrap().usize().unwrap(), 3);
+        assert_eq!(j.get("p50_us").unwrap().usize().unwrap(), 2000);
+        assert_eq!(j.get("mean_batch").unwrap().num().unwrap(), 4.0);
+        // Round-trips through the writer.
+        assert!(Json::parse(&j.dump()).is_ok());
     }
 
     #[test]

@@ -29,8 +29,9 @@ pub mod server;
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use engine::{
     admission_check, arch_forward_config, AdmissionDeny, Engine, EngineBuilder, EngineConfig,
-    EngineError, EngineJoin, EngineReport, EngineWaiter, ModelReport, ModelVariantConfig,
-    Priority, RejectReason, Request, Response, DEFAULT_QUEUE_DEPTH,
+    EngineError, EngineJoin, EngineReport, EngineWaiter, ModelReport, ModelSourceConfig,
+    ModelVariantConfig, Priority, RejectReason, Request, Response, DEFAULT_QUEUE_DEPTH,
+    ENGINE_CONFIG_VERSION, ENGINE_REPORT_FORMAT, ENGINE_REPORT_VERSION,
 };
 pub use metrics::Metrics;
 pub use server::{

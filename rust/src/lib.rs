@@ -21,9 +21,12 @@
 //! * [`runtime`] — pluggable inference backends behind
 //!   [`runtime::InferenceBackend`]: the pure-rust
 //!   [`runtime::NativeBackend`] executing the quantized Vim forward pass
-//!   ([`vision::forward`]) hermetically, the feature-gated
-//!   [`runtime::pjrt`] path (`pjrt` cargo feature) that loads AOT
-//!   artifacts (`artifacts/*.hlo.txt`), and the [`runtime::ModelRegistry`]
+//!   ([`vision::forward`]) hermetically, the versioned `VimArtifact` v1
+//!   binary model format + [`runtime::ArtifactStore`] loading surface
+//!   ([`runtime::artifact`]; weights flow in through a
+//!   [`runtime::ModelSource`]), the feature-gated [`runtime::pjrt`] path
+//!   (`pjrt` cargo feature) that loads AOT artifacts
+//!   (`artifacts/*.hlo.txt`), and the [`runtime::ModelRegistry`]
 //!   naming the variants one engine process hosts;
 //! * [`coordinator`] — the edge-serving engine (API v1): a typed
 //!   multi-model surface ([`coordinator::Request`] /

@@ -26,7 +26,24 @@ COMMANDS:
                                   (Table 3). With --engine: validate an
                                   engine config file and list the model
                                   variants it hosts (factories resolved,
-                                  calibration tables loaded + checked)
+                                  calibration tables loaded + checked,
+                                  every referenced artifact opened and
+                                  its manifest summarized — a bad path
+                                  fails here, not on the first request)
+  export   [--arch micro] [--seed 7] [--out artifacts/vim_micro.mxa]
+           [--calib table.json | --calib-samples N [--percentile 1.0]]
+                                  package a model as a versioned
+                                  VimArtifact v1 binary: weights (seeded
+                                  random-init), geometry, provenance and
+                                  (optionally) a static scan calibration
+                                  table — either an existing file or one
+                                  calibrated on the spot — in ONE file
+                                  that `serve --engine` configs point at
+  inspect  --artifact model.mxa   print an artifact's manifest (arch,
+                                  geometry, provenance, tensor table,
+                                  embedded calibration) and then fully
+                                  verify it (checksum + per-tensor
+                                  integrity + schema)
   calibrate [--samples 64] [--seed 7] [--percentile 1.0]
             [--out artifacts/calib_micro.json]
                                   offline static scan calibration: run
@@ -40,7 +57,11 @@ COMMANDS:
   serve    [--engine engine.json] [--backend native|pjrt] [--workers 4]
            [--requests 64] [--max-batch 8] [--queue-depth 1024] [--seed 7]
            [--calib table.json] [--artifacts artifacts]
+           [--report-json report.json]
                                   serve inference E2E through the engine.
+                                  `--report-json` writes the final
+                                  EngineReport (per-model metrics incl.
+                                  rejected_full/shed/unknown) as JSON.
                                   `--engine` loads a declarative config
                                   hosting any number of model variants in
                                   one process (README.md §Serving API has
@@ -165,6 +186,17 @@ fn main() -> Result<()> {
             flags.expect_keys("calibrate", &["samples", "seed", "percentile", "out"])?;
             cmd_calibrate(&flags)
         }
+        "export" => {
+            flags.expect_keys(
+                "export",
+                &["arch", "seed", "out", "calib", "calib-samples", "percentile"],
+            )?;
+            cmd_export(&flags)
+        }
+        "inspect" => {
+            flags.expect_keys("inspect", &["artifact"])?;
+            cmd_inspect(&flags)
+        }
         "serve" => {
             flags.expect_keys(
                 "serve",
@@ -178,6 +210,7 @@ fn main() -> Result<()> {
                     "seed",
                     "calib",
                     "artifacts",
+                    "report-json",
                 ],
             )?;
             cmd_serve(&flags)
@@ -227,6 +260,124 @@ fn cmd_calibrate(flags: &Flags) -> Result<()> {
     table.save(&out)?;
     println!("wrote calibration table to {out} (format v{})", table.version);
     println!("serve with it: mamba-x serve --backend native --seed {seed} --calib {out}");
+    Ok(())
+}
+
+/// Package a model as a versioned `VimArtifact` v1 binary: random-init
+/// weights for the arch + seed, optionally with a static scan calibration
+/// table embedded (an existing file, or one calibrated on the spot over
+/// the synthetic serve stream).
+fn cmd_export(flags: &Flags) -> Result<()> {
+    use mamba_x::coordinator::arch_forward_config;
+    use mamba_x::quant::CalibTable;
+    use mamba_x::runtime::native::synthetic_image;
+    use mamba_x::runtime::{ArtifactStore, Provenance, VimArtifact};
+    use mamba_x::sim::sfu::SfuTables;
+    use mamba_x::vision::VimWeights;
+
+    let arch = flags.string("arch", "micro");
+    let seed = flags.usize("seed", 7)? as u64;
+    let out = flags.string("out", &format!("artifacts/vim_{arch}.mxa"));
+    let calib_samples = flags.usize("calib-samples", 0)?;
+    let percentile = flags.f64("percentile", 1.0)? as f32;
+    if flags.get("calib").is_some() && calib_samples > 0 {
+        bail!("--calib and --calib-samples are mutually exclusive");
+    }
+    if flags.get("percentile").is_some() && calib_samples == 0 {
+        bail!("--percentile only applies with --calib-samples");
+    }
+
+    let cfg = arch_forward_config(&arch)?;
+    let weights = VimWeights::init(&cfg, seed);
+    let calib = match flags.get("calib") {
+        Some(path) => {
+            let table = CalibTable::load(path)?;
+            println!("embedding calibration table {path} ({} sites)", table.sites.len());
+            Some(table)
+        }
+        None if calib_samples > 0 => {
+            let imgs: Vec<Vec<f32>> = (0..calib_samples)
+                .map(|id| synthetic_image(seed, id as u64, cfg.input_len()))
+                .collect();
+            let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            let table = weights.calibrate(
+                &SfuTables::fitted(),
+                &mamba_x::config::MambaXConfig::default(),
+                &refs,
+                percentile,
+            )?;
+            println!(
+                "calibrated {} scan sites over {calib_samples} samples (percentile {percentile})",
+                table.sites.len()
+            );
+            Some(table)
+        }
+        None => None,
+    };
+    let has_calib = calib.is_some();
+    let artifact = VimArtifact::from_weights(
+        weights,
+        calib,
+        Provenance {
+            tool: "mamba-x export".to_string(),
+            detail: format!("arch={arch} seed={seed} random-init"),
+        },
+    )?;
+    let params = artifact.manifest.total_elements()?;
+    ArtifactStore::save(&out, &artifact)?;
+    println!(
+        "wrote {out}: arch {arch}, {} blocks, {params} params, calib {}",
+        cfg.model.n_blocks,
+        if has_calib { "embedded" } else { "none" }
+    );
+    println!("inspect it:     mamba-x inspect --artifact {out}");
+    println!(
+        "serve it:       engine config {{\"models\": [{{\"name\": \"vim-{arch}@v1\", \
+         \"source\": {{\"artifact\": \"{out}\"}}}}]}}"
+    );
+    Ok(())
+}
+
+/// Print an artifact's manifest, then fully verify the file (checksum +
+/// per-tensor integrity + schema) by loading it.
+fn cmd_inspect(flags: &Flags) -> Result<()> {
+    use mamba_x::runtime::ArtifactStore;
+
+    let Some(path) = flags.get("artifact") else {
+        bail!("inspect needs --artifact <path>");
+    };
+    let summary = ArtifactStore::inspect(path)?;
+    let m = &summary.manifest;
+    println!("artifact {path} (format v{}, {} bytes)", m.version, summary.file_bytes);
+    println!(
+        "  arch {} | d_model {} blocks {} d_state {} expand {} conv_k {} patch {}",
+        m.arch, m.d_model, m.n_blocks, m.d_state, m.expand, m.conv_k, m.patch
+    );
+    println!(
+        "  input {}x{}x{} -> {} classes | {} params ({} weight bytes)",
+        m.img, m.img, m.in_ch, m.n_classes, summary.params, summary.weight_bytes
+    );
+    println!("  provenance: {} ({})", m.provenance.tool, m.provenance.detail);
+    match &summary.calib {
+        Some(t) => println!(
+            "  calib: embedded ({} sites, {} samples, percentile {})",
+            t.sites.len(),
+            t.samples,
+            t.percentile
+        ),
+        None => println!("  calib: none (dynamic scan scales)"),
+    }
+    println!("  {} tensors:", m.tensors.len());
+    for t in &m.tensors {
+        println!("    {:<24} {:?}", t.name, t.shape);
+    }
+    // Full verification: checksum, blob decode, per-tensor integrity,
+    // embedded-calibration fit.
+    let artifact = ArtifactStore::open(path)?;
+    println!(
+        "verified: checksum ok, {} tensors decoded and integrity-checked",
+        artifact.manifest.tensors.len()
+    );
     Ok(())
 }
 
@@ -567,10 +718,12 @@ pub mod figures {
 
 /// `models`: without `--engine`, the Vim model family; with it, validate
 /// and list the variants an engine config hosts (resolving every factory
-/// — including calibration-table load + model check — so a broken config
-/// fails here, not at serve time).
+/// — including artifact opening and calibration-table load + model check
+/// — so a broken config or bad artifact path fails here, not on the
+/// first request).
 fn cmd_models(engine: Option<&str>) -> Result<()> {
-    use mamba_x::coordinator::EngineConfig;
+    use mamba_x::coordinator::{EngineConfig, ModelSourceConfig};
+    use mamba_x::runtime::ArtifactStore;
 
     match engine {
         Some(path) => {
@@ -580,37 +733,57 @@ fn cmd_models(engine: Option<&str>) -> Result<()> {
                 cfg.workers, cfg.policy.max_batch, cfg.policy.max_wait_us, cfg.queue_depth
             );
             println!(
-                "{:<24} {:>6} {:>6} {:>10} {:>8}  calib",
-                "name", "arch", "seed", "slo_us", "hint_us"
+                "{:<24} {:<32} {:>10} {:>8}  calib",
+                "name", "source", "slo_us", "hint_us"
             );
             for v in &cfg.models {
                 v.to_spec()?; // resolve the factory: any config error surfaces here
                 println!(
-                    "{:<24} {:>6} {:>6} {:>10} {:>8}  {}",
+                    "{:<24} {:<32} {:>10} {:>8}  {}",
                     v.name,
-                    v.arch,
-                    v.seed,
+                    v.source.describe(),
                     v.slo_us.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string()),
                     v.service_hint_us,
                     v.calib.as_deref().unwrap_or("-")
                 );
             }
+            // Per-artifact manifest summaries: what each referenced file
+            // actually contains, validated at config time.
+            for v in &cfg.models {
+                if let ModelSourceConfig::Artifact { path } = &v.source {
+                    let s = ArtifactStore::inspect(path)?;
+                    let m = &s.manifest;
+                    println!(
+                        "  {}: arch {} | {} blocks | {} channels | {} params | calib {} | by {}",
+                        path,
+                        m.arch,
+                        m.n_blocks,
+                        m.d_model * m.expand,
+                        s.params,
+                        if s.calib.is_some() { "y" } else { "n" },
+                        m.provenance.tool
+                    );
+                }
+            }
             println!("{} variants resolved ok", cfg.models.len());
         }
         None => {
-            println!("== Vim model family (Table 3 + the micro serving model) ==");
+            println!("== Vim model family (Table 3 + the micro serving family) ==");
             println!(
-                "{:>7} {:>8} {:>8} {:>8} {:>6} {:>10}",
+                "{:>8} {:>8} {:>8} {:>8} {:>6} {:>10}",
                 "name", "d_model", "blocks", "d_state", "patch", "params"
             );
-            for name in ["micro", "tiny", "small", "base"] {
+            for name in ["micro_s", "micro", "micro_l", "tiny", "small", "base"] {
                 let m = VimModel::by_name(name).expect("known model");
                 println!(
-                    "{:>7} {:>8} {:>8} {:>8} {:>6} {:>10}",
+                    "{:>8} {:>8} {:>8} {:>8} {:>6} {:>10}",
                     name, m.d_model, m.n_blocks, m.d_state, m.patch, m.param_count()
                 );
             }
-            println!("\nservable natively: micro (`serve`, `models --engine <config>`)");
+            println!(
+                "\nservable natively: micro, micro_s, micro_l (`serve`, `export`, \
+                 `models --engine <config>`)"
+            );
         }
     }
     Ok(())
@@ -618,6 +791,7 @@ fn cmd_models(engine: Option<&str>) -> Result<()> {
 
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let requests = flags.usize("requests", 64)?;
+    let report_json = flags.get("report-json").map(str::to_string);
     if let Some(engine_path) = flags.get("engine") {
         // The config file owns the pool geometry and the model list;
         // per-variant flags alongside it would silently fight it.
@@ -627,7 +801,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             }
         }
         let cfg = mamba_x::coordinator::EngineConfig::load(engine_path)?;
-        return run_engine(cfg, requests);
+        return run_engine(cfg, requests, report_json.as_deref());
     }
     let backend = flags.string("backend", "native");
     let workers = flags.usize("workers", 4)?;
@@ -640,12 +814,20 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             if flags.get("artifacts").is_some() {
                 bail!("--artifacts applies to the pjrt backend only");
             }
-            serve_native(workers, requests, max_batch, queue_depth, seed, calib)
+            serve_native(
+                workers,
+                requests,
+                max_batch,
+                queue_depth,
+                seed,
+                calib,
+                report_json.as_deref(),
+            )
         }
         "pjrt" => {
             // Flags the pjrt path cannot honor are errors, not silently
             // dropped defaults (pjrt runs 1 worker over AOT artifacts).
-            for k in ["workers", "queue-depth", "seed", "calib"] {
+            for k in ["workers", "queue-depth", "seed", "calib", "report-json"] {
                 if flags.get(k).is_some() {
                     bail!("--{k} applies to the native backend only");
                 }
@@ -657,9 +839,10 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
 }
 
 /// Hermetic single-variant serving: desugars the legacy flags into a
-/// one-model [`mamba_x::coordinator::EngineConfig`] and runs the same
-/// engine driver as `serve --engine`, so the flag path and the config
-/// path exercise identical machinery.
+/// one-model [`mamba_x::coordinator::EngineConfig`] (a v2 random-init
+/// source) and runs the same engine driver as `serve --engine`, so the
+/// flag path and the config path exercise identical machinery.
+#[allow(clippy::too_many_arguments)]
 fn serve_native(
     workers: usize,
     requests: usize,
@@ -667,24 +850,29 @@ fn serve_native(
     queue_depth: usize,
     seed: u64,
     calib: Option<String>,
+    report_json: Option<&str>,
 ) -> Result<()> {
     use mamba_x::coordinator::{BatchPolicy, EngineConfig, ModelVariantConfig};
 
     let name = if calib.is_some() { "vim-micro@calib" } else { "vim-micro@dynamic" };
-    let mut variant = ModelVariantConfig::new(name, "micro", seed);
+    let mut variant = ModelVariantConfig::random(name, "micro", seed);
     variant.calib = calib;
     let mut cfg = EngineConfig::new(vec![variant]);
     cfg.workers = workers.max(1);
     cfg.policy = BatchPolicy { max_batch: max_batch.max(1), max_wait_us: 2000 };
     cfg.queue_depth = queue_depth.max(1);
-    run_engine(cfg, requests)
+    run_engine(cfg, requests, report_json)
 }
 
 /// Engine serving demo: host every configured variant in one process,
 /// drive one synthetic camera stream per variant, print the per-model /
 /// per-rejection-reason report, and spot-check each variant bitwise
 /// against direct single-backend inference.
-fn run_engine(cfg: mamba_x::coordinator::EngineConfig, requests: usize) -> Result<()> {
+fn run_engine(
+    cfg: mamba_x::coordinator::EngineConfig,
+    requests: usize,
+    report_json: Option<&str>,
+) -> Result<()> {
     use mamba_x::coordinator::{EngineBuilder, Request, Response};
     use mamba_x::runtime::{native::synthetic_image, InferenceBackend as _, Tensor};
 
@@ -695,15 +883,14 @@ fn run_engine(cfg: mamba_x::coordinator::EngineConfig, requests: usize) -> Resul
     for v in &cfg.models {
         let calib = match v.calib.as_deref() {
             Some(path) => {
-                format!("{path} (static scales — quantized scan runs batch-fused)")
+                format!("override {path} (static scales — quantized scan runs batch-fused)")
             }
-            None => "none (dynamic scan scales)".to_string(),
+            None => "from source (artifact-embedded, or dynamic scan scales)".to_string(),
         };
         println!(
-            "  hosting {:?}: arch {}, seed {}, calib {calib}, slo {}",
+            "  hosting {:?}: source {}, calib {calib}, slo {}",
             v.name,
-            v.arch,
-            v.seed,
+            v.source.describe(),
             v.slo_us.map(|s| format!("{s}us")).unwrap_or_else(|| "none".to_string())
         );
     }
@@ -722,6 +909,13 @@ fn run_engine(cfg: mamba_x::coordinator::EngineConfig, requests: usize) -> Resul
     }
     let (engine, join) = builder.build()?;
 
+    // Resolve each variant's geometry once for the client streams and
+    // the spot check. (Artifact weights themselves were already fully
+    // loaded + verified once, in to_spec above; this is only the cheap
+    // manifest probe, once per variant.)
+    let fcfgs: Vec<mamba_x::vision::ForwardConfig> =
+        cfg.models.iter().map(|v| v.forward_config()).collect::<Result<_>>()?;
+
     // Four concurrent synthetic camera streams per variant (the v0 demo
     // shape), so multi-worker batching is actually exercised.
     let streams_per_model = 4usize;
@@ -729,12 +923,11 @@ fn run_engine(cfg: mamba_x::coordinator::EngineConfig, requests: usize) -> Resul
     let per_model = per_stream * streams_per_model;
     let t0 = std::time::Instant::now();
     let mut clients = Vec::new();
-    for v in &cfg.models {
-        let fcfg = v.forward_config()?;
+    for (v, fcfg) in cfg.models.iter().zip(&fcfgs) {
         for s in 0..streams_per_model {
             let eng = engine.clone();
             let name = v.name.clone();
-            let seed = v.seed;
+            let seed = v.stream_seed();
             let fcfg = fcfg.clone();
             clients.push(std::thread::spawn(move || {
                 let mut served = Vec::new();
@@ -771,18 +964,22 @@ fn run_engine(cfg: mamba_x::coordinator::EngineConfig, requests: usize) -> Resul
         per_model * cfg.models.len()
     );
     println!("{}", report.summary());
+    if let Some(path) = report_json {
+        report.save_json(path)?;
+        let abs = std::fs::canonicalize(path).unwrap_or_else(|_| path.into());
+        println!("wrote engine report to {}", abs.display());
+    }
 
     // Per-variant serving-vs-direct invariance spot check (the full
     // property lives in rust/tests/engine_props.rs): pool routing,
     // batching and co-hosted variants must be invisible bitwise.
-    for (v, factory) in cfg.models.iter().zip(&factories) {
+    for ((v, factory), fcfg) in cfg.models.iter().zip(&factories).zip(&fcfgs) {
         let mut direct = factory(0)?;
-        let fcfg = v.forward_config()?;
         let (_, served, _) =
             streams.iter().find(|(name, _, _)| *name == v.name).expect("one slot per variant");
         let checks = served.len().min(4);
         for resp in served.iter().take(checks) {
-            let data = synthetic_image(v.seed, resp.id, fcfg.input_len());
+            let data = synthetic_image(v.stream_seed(), resp.id, fcfg.input_len());
             let want = direct.infer(&Tensor::new(fcfg.input_shape(), data)?)?;
             if resp.logits != want {
                 bail!("{}: response {} diverged from direct inference", v.name, resp.id);

@@ -21,13 +21,16 @@
 //!
 //! [`CalibTable`] serializes to a small versioned JSON artifact
 //! (`mamba-x calibrate` writes it, `serve --calib` loads it). Float
-//! ranges are stored as IEEE-754 bit patterns so the round-trip is exact
+//! ranges are stored as IEEE-754 bit patterns (the shared
+//! [`crate::util::json::f32_bits_arr`] convention, also used by the model
+//! artifact manifest) so the round-trip is exact
 //! by construction — `rust/tests/calib_props.rs` pins it, and the loader
 //! re-derives every scale from the stored ranges and rejects tables whose
 //! recorded shifts disagree (corruption / version-drift guard).
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::json::f32_bits_arr;
 use crate::util::Json;
 
 use super::scan_quant::derive_scan_scales;
@@ -132,8 +135,8 @@ impl CalibTable {
                     ("block", Json::Num(s.block as f64)),
                     ("dir", Json::Str(s.dir_name().to_string())),
                     ("shift", Json::Arr(s.shift.iter().map(|&v| Json::Num(v as f64)).collect())),
-                    ("da_max_bits", bits_arr(&s.da_max)),
-                    ("dbu_max_bits", bits_arr(&s.dbu_max)),
+                    ("da_max_bits", f32_bits_arr(&s.da_max)),
+                    ("dbu_max_bits", f32_bits_arr(&s.dbu_max)),
                 ])
             })
             .collect();
@@ -182,8 +185,8 @@ impl CalibTable {
                 .iter()
                 .map(|v| Ok(v.num()? as i32))
                 .collect::<Result<_>>()?;
-            let da_max = bits_vec(sj.get("da_max_bits")?)?;
-            let dbu_max = bits_vec(sj.get("dbu_max_bits")?)?;
+            let da_max = sj.get("da_max_bits")?.f32_bits_vec()?;
+            let dbu_max = sj.get("dbu_max_bits")?.f32_bits_vec()?;
             if da_max.len() != shift.len() || dbu_max.len() != shift.len() {
                 bail!("site {idx}: channel counts disagree");
             }
@@ -198,15 +201,7 @@ impl CalibTable {
 
     /// Write the artifact (creating parent directories as needed).
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)
-                    .with_context(|| format!("creating {}", parent.display()))?;
-            }
-        }
-        std::fs::write(path, self.to_json().dump())
-            .with_context(|| format!("writing {}", path.display()))
+        crate::util::write_creating_dirs(path, self.to_json().dump().as_bytes())
     }
 
     pub fn load(path: impl AsRef<std::path::Path>) -> Result<CalibTable> {
@@ -214,14 +209,6 @@ impl CalibTable {
         let j = Json::load(path)?;
         Self::from_json(&j).with_context(|| format!("loading calibration table {}", path.display()))
     }
-}
-
-fn bits_arr(v: &[f32]) -> Json {
-    Json::Arr(v.iter().map(|&x| Json::Num(x.to_bits() as f64)).collect())
-}
-
-fn bits_vec(j: &Json) -> Result<Vec<f32>> {
-    j.arr()?.iter().map(|v| Ok(f32::from_bits(v.num()? as u32))).collect()
 }
 
 /// Accumulates per-item channel ranges during a recording forward pass

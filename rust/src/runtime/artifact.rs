@@ -1,0 +1,607 @@
+//! `VimArtifact` v1 — the versioned binary model-artifact format and its
+//! loading surface ([`ArtifactStore`]).
+//!
+//! One file names "a model you can serve": weights, geometry, provenance
+//! and (optionally) the static scan calibration ride together, so the
+//! engine config points at a single path instead of scattering
+//! `(arch, seed, --calib)` across flags. Layout (all integers
+//! little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"MAMBAXAR"
+//! 8       4     u32 format version (currently 1)
+//! 12      4     u32 manifest length M
+//! 16      M     manifest JSON (ArtifactManifest: arch, geometry,
+//!               provenance, per-tensor name/shape/absmax-bits)
+//! 16+M    8     u64 tensor blob length B (= 4 x total elements)
+//! ..      B     raw f32 tensor data, manifest order (vim_tensor_schema)
+//! ..      4     u32 calibration section length C (0 = none)
+//! ..      C     embedded CalibTable JSON (same format as `--calib` files)
+//! ..      8     u64 FNV-1a checksum of every preceding byte
+//! ```
+//!
+//! The loader is a hard gate, never a silent fallback: foreign magic,
+//! future versions, truncation, checksum/per-tensor-absmax corruption,
+//! unknown archs, geometry-vs-arch disagreement, schema shape drift and
+//! ill-fitting embedded calibration all fail with a typed
+//! [`ArtifactError`]. `rust/tests/artifact_props.rs` pins save -> load ->
+//! forward bitwise equality plus every rejection path, against a
+//! committed golden fixture (`rust/tests/data/artifact_v1.bin`) written
+//! by the python exporter mirror (`python/compile/make_artifact_golden.py`).
+
+use std::fmt;
+use std::fs;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use crate::quant::CalibTable;
+use crate::util::Json;
+use crate::vision::VimWeights;
+
+use super::manifest::{tensor_absmax, ArtifactManifest, Provenance};
+
+/// File magic: the first 8 bytes of every artifact.
+pub const ARTIFACT_MAGIC: [u8; 8] = *b"MAMBAXAR";
+
+/// Current artifact format version; loaders reject anything else.
+pub const ARTIFACT_VERSION: u32 = 1;
+
+/// Typed artifact rejection — the entire loading failure surface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArtifactError {
+    /// Filesystem-level failure (open/read/write/create-dir).
+    Io { path: PathBuf, detail: String },
+    /// The file does not start with [`ARTIFACT_MAGIC`].
+    ForeignMagic { found: [u8; 8] },
+    /// Header declares a version this build cannot read.
+    FutureVersion { found: u32 },
+    /// A declared section extends past (or stops short of) the file.
+    Truncated { detail: String },
+    /// Bytes remain after the trailing checksum.
+    TrailingBytes { extra: u64 },
+    /// Whole-file FNV-1a checksum disagreement (bit rot / tampering).
+    Checksum { stored: u64, computed: u64 },
+    /// Manifest JSON is malformed or violates the manifest schema.
+    Manifest(String),
+    /// The manifest names an arch this build does not know.
+    ArchUnknown { arch: String },
+    /// Manifest geometry disagrees with its declared arch (or itself).
+    ConfigMismatch { detail: String },
+    /// A tensor's declared shape drifts from the arch's schema.
+    ShapeMismatch { name: String, want: Vec<usize>, got: Vec<usize> },
+    /// Tensor data disagrees with its manifest integrity record.
+    TensorCorrupt { name: String, detail: String },
+    /// The embedded calibration table is malformed or does not fit.
+    Calib(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io { path, detail } => {
+                write!(f, "artifact {}: {detail}", path.display())
+            }
+            ArtifactError::ForeignMagic { found } => write!(
+                f,
+                "not a mamba-x model artifact (magic {found:?}, expected {ARTIFACT_MAGIC:?})"
+            ),
+            ArtifactError::FutureVersion { found } => write!(
+                f,
+                "unsupported artifact version {found} (this build reads \
+                 v{ARTIFACT_VERSION}; re-export the model)"
+            ),
+            ArtifactError::Truncated { detail } => write!(f, "truncated artifact: {detail}"),
+            ArtifactError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after the artifact checksum")
+            }
+            ArtifactError::Checksum { stored, computed } => write!(
+                f,
+                "artifact checksum mismatch: stored {stored:#018x}, computed \
+                 {computed:#018x} (corrupt file?)"
+            ),
+            ArtifactError::Manifest(msg) => write!(f, "invalid artifact manifest: {msg}"),
+            ArtifactError::ArchUnknown { arch } => write!(
+                f,
+                "artifact is for unknown arch {arch:?} (known: micro, micro_s, \
+                 micro_l, tiny, small, base)"
+            ),
+            ArtifactError::ConfigMismatch { detail } => {
+                write!(f, "artifact geometry mismatch: {detail}")
+            }
+            ArtifactError::ShapeMismatch { name, want, got } => write!(
+                f,
+                "tensor {name:?}: declared shape {got:?} does not match the schema \
+                 shape {want:?}"
+            ),
+            ArtifactError::TensorCorrupt { name, detail } => {
+                write!(f, "tensor {name:?} corrupt: {detail}")
+            }
+            ArtifactError::Calib(msg) => write!(f, "embedded calibration table: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {}
+
+/// 64-bit FNV-1a over a byte stream — the artifact's whole-file checksum
+/// (mirrored by the python exporter).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// One fully-loaded model artifact: manifest + weights + optional
+/// embedded static scan calibration.
+#[derive(Debug, Clone)]
+pub struct VimArtifact {
+    pub manifest: ArtifactManifest,
+    pub weights: VimWeights,
+    pub calib: Option<CalibTable>,
+}
+
+impl VimArtifact {
+    /// Package in-memory weights (and optionally their calibration
+    /// table) into a saveable artifact. Fails when the weights' arch is
+    /// not a registered [`crate::config::VimModel`] or the table does not
+    /// fit — an artifact that could never load back is refused at build.
+    pub fn from_weights(
+        weights: VimWeights,
+        calib: Option<CalibTable>,
+        provenance: Provenance,
+    ) -> Result<Self, ArtifactError> {
+        let manifest = ArtifactManifest::for_weights(&weights, provenance);
+        let cfg = manifest.forward_config()?;
+        if let Some(table) = &calib {
+            table
+                .validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())
+                .map_err(|e| ArtifactError::Calib(e.to_string()))?;
+        }
+        Ok(VimArtifact { manifest, weights, calib })
+    }
+
+    pub fn config(&self) -> &crate::vision::ForwardConfig {
+        &self.weights.cfg
+    }
+}
+
+/// Header + manifest view of an artifact file, produced without decoding
+/// (or integrity-checking) the tensor blob — what `models --engine` and
+/// the `inspect` subcommand print. Full verification is [`ArtifactStore::open`].
+#[derive(Debug, Clone)]
+pub struct ArtifactSummary {
+    pub manifest: ArtifactManifest,
+    /// Tensor blob size in bytes (4 x `params`).
+    pub weight_bytes: u64,
+    /// Total parameter count across all tensors.
+    pub params: u64,
+    /// Embedded calibration table, parsed and validated against the arch.
+    pub calib: Option<CalibTable>,
+    pub file_bytes: u64,
+}
+
+/// The artifact load/save/inspect surface — an mmap-free sequential
+/// reader/writer over the v1 layout.
+pub struct ArtifactStore;
+
+/// Sequential cursor over an in-memory artifact image.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], ArtifactError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "{what} needs {n} bytes at offset {}, file has {} left",
+                    self.pos,
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, ArtifactError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, ArtifactError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+}
+
+impl ArtifactStore {
+    /// Serialize an artifact to its byte image (the inverse of
+    /// [`ArtifactStore::decode`], exact by construction).
+    pub fn encode(artifact: &VimArtifact) -> Result<Vec<u8>, ArtifactError> {
+        let cfg = artifact.manifest.forward_config()?;
+        if &cfg != artifact.config() {
+            return Err(ArtifactError::ConfigMismatch {
+                detail: format!(
+                    "manifest resolves to {:?} but the weights were built for {:?}",
+                    cfg, artifact.weights.cfg
+                ),
+            });
+        }
+        if let Some(table) = &artifact.calib {
+            table
+                .validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())
+                .map_err(|e| ArtifactError::Calib(e.to_string()))?;
+        }
+        let manifest_json = artifact.manifest.to_json().dump().into_bytes();
+        let total = artifact.manifest.total_elements()?;
+        let blob_len = total.checked_mul(4).ok_or_else(|| {
+            ArtifactError::Manifest(format!("tensor blob of {total} elements overflows u64"))
+        })?;
+        let calib_json = match &artifact.calib {
+            Some(table) => table.to_json().dump().into_bytes(),
+            None => Vec::new(),
+        };
+        let mut buf =
+            Vec::with_capacity(16 + manifest_json.len() + 8 + blob_len as usize + 4 + 8);
+        buf.extend_from_slice(&ARTIFACT_MAGIC);
+        buf.extend_from_slice(&ARTIFACT_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(manifest_json.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&manifest_json);
+        buf.extend_from_slice(&blob_len.to_le_bytes());
+        for (_, data) in artifact.weights.named_tensors() {
+            for &v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        buf.extend_from_slice(&(calib_json.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&calib_json);
+        let checksum = fnv1a64(&buf);
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        Ok(buf)
+    }
+
+    /// Write an artifact file (creating parent directories as needed).
+    pub fn save(path: impl AsRef<Path>, artifact: &VimArtifact) -> Result<(), ArtifactError> {
+        let path = path.as_ref();
+        let bytes = Self::encode(artifact)?;
+        crate::util::write_creating_dirs(path, &bytes).map_err(|e| ArtifactError::Io {
+            path: path.to_path_buf(),
+            detail: e.to_string(),
+        })
+    }
+
+    /// Load and fully verify an artifact: every structural, checksum,
+    /// schema and calibration gate runs; on success the returned weights
+    /// are bitwise what [`ArtifactStore::save`] was given.
+    pub fn open(path: impl AsRef<Path>) -> Result<VimArtifact, ArtifactError> {
+        let path = path.as_ref();
+        let bytes = fs::read(path).map_err(|e| ArtifactError::Io {
+            path: path.to_path_buf(),
+            detail: e.to_string(),
+        })?;
+        Self::decode(&bytes)
+    }
+
+    /// [`ArtifactStore::open`] over an in-memory byte image.
+    pub fn decode(bytes: &[u8]) -> Result<VimArtifact, ArtifactError> {
+        let mut r = Reader { buf: bytes, pos: 0 };
+        let magic = r.take(8, "magic")?;
+        if magic != ARTIFACT_MAGIC {
+            return Err(ArtifactError::ForeignMagic {
+                found: magic.try_into().expect("8 bytes"),
+            });
+        }
+        let version = r.u32("version")?;
+        if version != ARTIFACT_VERSION {
+            return Err(ArtifactError::FutureVersion { found: version });
+        }
+        let manifest_len = r.u32("manifest length")? as usize;
+        let manifest_bytes = r.take(manifest_len, "manifest")?;
+        let blob_len = r.u64("tensor blob length")?;
+        let blob_usize = usize::try_from(blob_len).map_err(|_| ArtifactError::Truncated {
+            detail: format!("tensor blob length {blob_len} exceeds the address space"),
+        })?;
+        let blob = r.take(blob_usize, "tensor blob")?;
+        let calib_len = r.u32("calibration section length")? as usize;
+        let calib_bytes = r.take(calib_len, "embedded calibration table")?;
+        let stored = r.u64("checksum")?;
+        if r.pos != bytes.len() {
+            return Err(ArtifactError::TrailingBytes { extra: (bytes.len() - r.pos) as u64 });
+        }
+        let computed = fnv1a64(&bytes[..bytes.len() - 8]);
+        if stored != computed {
+            return Err(ArtifactError::Checksum { stored, computed });
+        }
+
+        let manifest = parse_manifest(manifest_bytes, version)?;
+        let cfg = manifest.forward_config()?;
+        let total = manifest.total_elements()?;
+        if blob_len != total.checked_mul(4).unwrap_or(u64::MAX) {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "tensor blob is {blob_len} bytes; manifest declares {total} f32 \
+                     elements ({} bytes)",
+                    total.saturating_mul(4)
+                ),
+            });
+        }
+
+        let mut weights = VimWeights::zeros(&cfg);
+        let mut off = 0usize;
+        for (meta, (_, dst)) in manifest.tensors.iter().zip(weights.named_tensors_mut()) {
+            let span = &blob[off..off + 4 * dst.len()];
+            for (chunk, slot) in span.chunks_exact(4).zip(dst.iter_mut()) {
+                *slot = f32::from_le_bytes(chunk.try_into().expect("4 bytes"));
+            }
+            off += 4 * dst.len();
+            let absmax = tensor_absmax(dst);
+            if absmax.to_bits() != meta.absmax.to_bits() {
+                return Err(ArtifactError::TensorCorrupt {
+                    name: meta.name.clone(),
+                    detail: format!(
+                        "data |max| {absmax:e} disagrees with the manifest record {:e}",
+                        meta.absmax
+                    ),
+                });
+            }
+        }
+
+        let calib = if calib_bytes.is_empty() {
+            None
+        } else {
+            let table = parse_calib(calib_bytes)?;
+            table
+                .validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())
+                .map_err(|e| ArtifactError::Calib(e.to_string()))?;
+            Some(table)
+        };
+        Ok(VimArtifact { manifest, weights, calib })
+    }
+
+    /// Read header + manifest + embedded calibration without decoding the
+    /// tensor blob (it is seeked over, not read). Validates structure,
+    /// section accounting, arch/geometry/schema and calibration fit — but
+    /// NOT the checksum or tensor data; use [`ArtifactStore::open`] for
+    /// full verification.
+    pub fn inspect(path: impl AsRef<Path>) -> Result<ArtifactSummary, ArtifactError> {
+        let path = path.as_ref();
+        let io = |e: std::io::Error| ArtifactError::Io {
+            path: path.to_path_buf(),
+            detail: e.to_string(),
+        };
+        let mut f = fs::File::open(path).map_err(io)?;
+        let file_bytes = f.metadata().map_err(io)?.len();
+        let mut head = [0u8; 16];
+        read_exact_section(&mut f, &mut head, "header", path)?;
+        if head[..8] != ARTIFACT_MAGIC {
+            return Err(ArtifactError::ForeignMagic {
+                found: head[..8].try_into().expect("8 bytes"),
+            });
+        }
+        let version = u32::from_le_bytes(head[8..12].try_into().expect("4 bytes"));
+        if version != ARTIFACT_VERSION {
+            return Err(ArtifactError::FutureVersion { found: version });
+        }
+        let manifest_len = u32::from_le_bytes(head[12..16].try_into().expect("4 bytes")) as u64;
+        // Bound the declared manifest length against the file size BEFORE
+        // allocating for it — a corrupt 4 GiB length field must fail
+        // typed, not OOM an edge device.
+        let fixed = 16 + manifest_len + 8 + 4 + 8;
+        if fixed > file_bytes {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "manifest declares {manifest_len} bytes; file is only {file_bytes}"
+                ),
+            });
+        }
+        let mut manifest_bytes = vec![0u8; manifest_len as usize];
+        read_exact_section(&mut f, &mut manifest_bytes, "manifest", path)?;
+        let mut len8 = [0u8; 8];
+        read_exact_section(&mut f, &mut len8, "tensor blob length", path)?;
+        let blob_len = u64::from_le_bytes(len8);
+        // Structural accounting before the seek: the declared sections
+        // plus the trailing lengths must fit the file exactly.
+        let declared = fixed.checked_add(blob_len).unwrap_or(u64::MAX);
+        if declared > file_bytes {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "sections declare at least {declared} bytes; file is {file_bytes}"
+                ),
+            });
+        }
+        f.seek(SeekFrom::Current(blob_len as i64)).map_err(io)?;
+        let mut len4 = [0u8; 4];
+        read_exact_section(&mut f, &mut len4, "calibration section length", path)?;
+        let calib_len = u32::from_le_bytes(len4) as u64;
+        let total = declared.checked_add(calib_len).unwrap_or(u64::MAX);
+        match total.cmp(&file_bytes) {
+            std::cmp::Ordering::Greater => {
+                return Err(ArtifactError::Truncated {
+                    detail: format!("sections declare {total} bytes; file is {file_bytes}"),
+                })
+            }
+            std::cmp::Ordering::Less => {
+                return Err(ArtifactError::TrailingBytes { extra: file_bytes - total })
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        let mut calib_bytes = vec![0u8; calib_len as usize];
+        read_exact_section(&mut f, &mut calib_bytes, "embedded calibration table", path)?;
+
+        let manifest = parse_manifest(&manifest_bytes, version)?;
+        let cfg = manifest.forward_config()?;
+        let params = manifest.total_elements()?;
+        if blob_len != params.checked_mul(4).unwrap_or(u64::MAX) {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "tensor blob is {blob_len} bytes; manifest declares {params} f32 elements"
+                ),
+            });
+        }
+        let calib = if calib_bytes.is_empty() {
+            None
+        } else {
+            let table = parse_calib(&calib_bytes)?;
+            table
+                .validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())
+                .map_err(|e| ArtifactError::Calib(e.to_string()))?;
+            Some(table)
+        };
+        Ok(ArtifactSummary { manifest, weight_bytes: blob_len, params, calib, file_bytes })
+    }
+}
+
+fn read_exact_section(
+    f: &mut fs::File,
+    buf: &mut [u8],
+    what: &str,
+    path: &Path,
+) -> Result<(), ArtifactError> {
+    f.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            ArtifactError::Truncated { detail: format!("{what}: unexpected end of file") }
+        } else {
+            ArtifactError::Io { path: path.to_path_buf(), detail: e.to_string() }
+        }
+    })
+}
+
+fn parse_manifest(bytes: &[u8], header_version: u32) -> Result<ArtifactManifest, ArtifactError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| ArtifactError::Manifest("manifest is not UTF-8".to_string()))?;
+    let j = Json::parse(text).map_err(|e| ArtifactError::Manifest(e.to_string()))?;
+    let manifest = ArtifactManifest::from_json(&j)?;
+    if manifest.version != header_version {
+        return Err(ArtifactError::Manifest(format!(
+            "manifest declares version {}, header says {header_version}",
+            manifest.version
+        )));
+    }
+    Ok(manifest)
+}
+
+fn parse_calib(bytes: &[u8]) -> Result<CalibTable, ArtifactError> {
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| ArtifactError::Calib("not UTF-8".to_string()))?;
+    let j = Json::parse(text).map_err(|e| ArtifactError::Calib(e.to_string()))?;
+    CalibTable::from_json(&j).map_err(|e| ArtifactError::Calib(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        // Published FNV-1a 64 test vectors; the python exporter mirrors
+        // this exact function.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+        // Single-bit sensitivity.
+        assert_ne!(fnv1a64(b"foobar"), fnv1a64(b"foobas"));
+    }
+
+    #[test]
+    fn encode_decode_round_trip_micro_s() {
+        let cfg = crate::vision::ForwardConfig::micro_s();
+        let weights = VimWeights::init(&cfg, 5);
+        let art = VimArtifact::from_weights(
+            weights.clone(),
+            None,
+            Provenance { tool: "unit".into(), detail: "round trip".into() },
+        )
+        .unwrap();
+        let bytes = ArtifactStore::encode(&art).unwrap();
+        let back = ArtifactStore::decode(&bytes).unwrap();
+        assert_eq!(back.manifest, art.manifest);
+        assert!(back.calib.is_none());
+        for ((name, a), (_, b)) in
+            weights.named_tensors().iter().zip(back.weights.named_tensors())
+        {
+            assert_eq!(*a, b, "{name}");
+        }
+    }
+
+    #[test]
+    fn from_weights_rejects_unregistered_arch() {
+        let cfg = crate::vision::ForwardConfig {
+            model: crate::config::VimModel {
+                name: "not-a-real-arch",
+                d_model: 16,
+                n_blocks: 1,
+                d_state: 4,
+                expand: 2,
+                conv_k: 4,
+                patch: 4,
+            },
+            img: 8,
+            in_ch: 1,
+            n_classes: 2,
+        };
+        let err = VimArtifact::from_weights(
+            VimWeights::init(&cfg, 1),
+            None,
+            Provenance { tool: "unit".into(), detail: String::new() },
+        )
+        .unwrap_err();
+        assert!(matches!(err, ArtifactError::ArchUnknown { .. }), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_foreign_and_future() {
+        let cfg = crate::vision::ForwardConfig::micro_s();
+        let art = VimArtifact::from_weights(
+            VimWeights::init(&cfg, 1),
+            None,
+            Provenance { tool: "unit".into(), detail: String::new() },
+        )
+        .unwrap();
+        let good = ArtifactStore::encode(&art).unwrap();
+
+        let mut foreign = good.clone();
+        foreign[0] = b'X';
+        assert!(matches!(
+            ArtifactStore::decode(&foreign),
+            Err(ArtifactError::ForeignMagic { .. })
+        ));
+
+        let mut future = good.clone();
+        future[8..12].copy_from_slice(&99u32.to_le_bytes());
+        // Version lives before the checksum; rewrite it so the version
+        // gate (not the checksum) is what rejects.
+        let n = future.len();
+        let c = fnv1a64(&future[..n - 8]);
+        future[n - 8..].copy_from_slice(&c.to_le_bytes());
+        assert!(matches!(
+            ArtifactStore::decode(&future),
+            Err(ArtifactError::FutureVersion { found: 99 })
+        ));
+
+        // Truncation at an arbitrary point.
+        assert!(matches!(
+            ArtifactStore::decode(&good[..good.len() / 2]),
+            Err(ArtifactError::Truncated { .. })
+        ));
+        // A flipped blob bit trips the checksum.
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        assert!(matches!(
+            ArtifactStore::decode(&flipped),
+            Err(ArtifactError::Checksum { .. })
+        ));
+        // Trailing garbage after the checksum is refused.
+        let mut trailing = good;
+        trailing.push(0);
+        assert!(matches!(
+            ArtifactStore::decode(&trailing),
+            Err(ArtifactError::TrailingBytes { extra: 1 })
+        ));
+    }
+}

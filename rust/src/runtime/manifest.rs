@@ -1,11 +1,24 @@
-//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+//! Manifest schemas of the two artifact families:
+//!
+//! * [`Manifest`] — the AOT `artifacts/manifest.json` written by
+//!   `python/compile/aot.py` for the PJRT path (HLO-text executables);
+//! * [`ArtifactManifest`] — the JSON section embedded in a binary
+//!   `VimArtifact` v1 model file ([`super::artifact`]): arch + geometry +
+//!   provenance + the per-tensor name/shape/integrity records the loader
+//!   validates against the canonical
+//!   [`crate::vision::vim_tensor_schema`].
 
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
+use crate::config::VimModel;
+use crate::util::json::f32_bits;
 use crate::util::Json;
+use crate::vision::{vim_tensor_schema, ForwardConfig, VimWeights};
+
+use super::artifact::{ArtifactError, ARTIFACT_VERSION};
 
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
@@ -80,6 +93,308 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// VimArtifact v1 manifest
+// ---------------------------------------------------------------------------
+
+/// Format tag of the artifact manifest's `"format"` field.
+pub const ARTIFACT_FORMAT: &str = "mamba-x-artifact";
+
+/// Where an artifact came from — free-form, but always present so
+/// `inspect` can answer "what wrote this file".
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Producing tool (`"mamba-x export"`, `"export_artifact.py"`, ...).
+    pub tool: String,
+    /// Tool-specific detail (seed, checkpoint path, training run, ...).
+    pub detail: String,
+}
+
+/// One tensor's manifest record: dotted-path name, row-major shape, and
+/// the bit-exact |max| of its data (a per-tensor integrity check the
+/// loader recomputes, stored via the shared IEEE-754-bits convention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub absmax: f32,
+}
+
+/// Bit-exact |max| over a tensor — the integrity statistic recorded per
+/// tensor in the manifest (abs and max are exact f32 ops, so the python
+/// exporter computes the identical value for finite data). Any
+/// non-finite element yields NaN — unlike a plain `f32::max` fold, which
+/// silently drops NaNs — so degenerate weights are refused by the
+/// manifest's non-finite-absmax gate instead of shipping.
+pub fn tensor_absmax(data: &[f32]) -> f32 {
+    let mut m = 0f32;
+    for &v in data {
+        if !v.is_finite() {
+            return f32::NAN;
+        }
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// The manifest section of a `VimArtifact` v1 file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    /// Format version (must agree with the binary header).
+    pub version: u32,
+    /// Arch key; must resolve via [`VimModel::by_name`].
+    pub arch: String,
+    // Geometry — the arch-derived fields must match the resolved
+    // `VimModel` exactly; `img`/`in_ch`/`n_classes` are free (they are
+    // instance geometry, not architecture).
+    pub d_model: usize,
+    pub n_blocks: usize,
+    pub d_state: usize,
+    pub expand: usize,
+    pub conv_k: usize,
+    pub patch: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub n_classes: usize,
+    pub provenance: Provenance,
+    /// Per-tensor records, in [`vim_tensor_schema`] order — also the
+    /// serialization order of the tensor blob.
+    pub tensors: Vec<TensorMeta>,
+}
+
+impl ArtifactManifest {
+    /// Build the manifest describing `weights` exactly (schema order,
+    /// shapes, per-tensor absmax).
+    pub fn for_weights(weights: &VimWeights, provenance: Provenance) -> Self {
+        let cfg = &weights.cfg;
+        let m = &cfg.model;
+        let tensors = vim_tensor_schema(cfg)
+            .into_iter()
+            .zip(weights.named_tensors())
+            .map(|((name, shape), (_, data))| TensorMeta {
+                name,
+                shape,
+                absmax: tensor_absmax(data),
+            })
+            .collect();
+        ArtifactManifest {
+            version: ARTIFACT_VERSION,
+            arch: m.name.to_string(),
+            d_model: m.d_model,
+            n_blocks: m.n_blocks,
+            d_state: m.d_state,
+            expand: m.expand,
+            conv_k: m.conv_k,
+            patch: m.patch,
+            img: cfg.img,
+            in_ch: cfg.in_ch,
+            n_classes: cfg.n_classes,
+            provenance,
+            tensors,
+        }
+    }
+
+    /// Validate the manifest end to end and resolve it into the
+    /// [`ForwardConfig`] it serves: the arch must be known, the declared
+    /// geometry must match it, and every tensor record must agree with
+    /// the canonical schema (names, order, shapes, finite absmax).
+    pub fn forward_config(&self) -> std::result::Result<ForwardConfig, ArtifactError> {
+        let Some(model) = VimModel::by_name(&self.arch) else {
+            return Err(ArtifactError::ArchUnknown { arch: self.arch.clone() });
+        };
+        for (what, want, got) in [
+            ("d_model", model.d_model, self.d_model),
+            ("n_blocks", model.n_blocks, self.n_blocks),
+            ("d_state", model.d_state, self.d_state),
+            ("expand", model.expand, self.expand),
+            ("conv_k", model.conv_k, self.conv_k),
+            ("patch", model.patch, self.patch),
+        ] {
+            if want != got {
+                return Err(ArtifactError::ConfigMismatch {
+                    detail: format!(
+                        "{what}: arch {:?} has {want}, manifest declares {got}",
+                        self.arch
+                    ),
+                });
+            }
+        }
+        if self.img == 0 || self.img % model.patch != 0 || self.in_ch == 0 || self.n_classes == 0
+        {
+            return Err(ArtifactError::ConfigMismatch {
+                detail: format!(
+                    "instance geometry img={} in_ch={} n_classes={} is not servable \
+                     (img must be a positive multiple of patch {})",
+                    self.img, self.in_ch, self.n_classes, model.patch
+                ),
+            });
+        }
+        let cfg = ForwardConfig {
+            model,
+            img: self.img,
+            in_ch: self.in_ch,
+            n_classes: self.n_classes,
+        };
+        let schema = vim_tensor_schema(&cfg);
+        if schema.len() != self.tensors.len() {
+            return Err(ArtifactError::ConfigMismatch {
+                detail: format!(
+                    "{} tensors declared; the {:?} schema has {}",
+                    self.tensors.len(),
+                    self.arch,
+                    schema.len()
+                ),
+            });
+        }
+        for (i, ((name, shape), meta)) in schema.iter().zip(&self.tensors).enumerate() {
+            if &meta.name != name {
+                return Err(ArtifactError::ConfigMismatch {
+                    detail: format!(
+                        "tensor #{i} is {:?} where the schema expects {name:?}",
+                        meta.name
+                    ),
+                });
+            }
+            if &meta.shape != shape {
+                return Err(ArtifactError::ShapeMismatch {
+                    name: meta.name.clone(),
+                    want: shape.clone(),
+                    got: meta.shape.clone(),
+                });
+            }
+            if !meta.absmax.is_finite() {
+                return Err(ArtifactError::TensorCorrupt {
+                    name: meta.name.clone(),
+                    detail: format!("non-finite absmax record {}", meta.absmax),
+                });
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Total element count across all tensors (checked arithmetic).
+    pub fn total_elements(&self) -> std::result::Result<u64, ArtifactError> {
+        let overflow = |name: &str| {
+            ArtifactError::Manifest(format!("tensor {name:?}: element count overflows"))
+        };
+        let mut total = 0u64;
+        for t in &self.tensors {
+            let mut n = 1u64;
+            for &d in &t.shape {
+                n = n.checked_mul(d as u64).ok_or_else(|| overflow(&t.name))?;
+            }
+            total = total.checked_add(n).ok_or_else(|| overflow(&t.name))?;
+        }
+        Ok(total)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|t| {
+                Json::obj_from(vec![
+                    ("name", Json::Str(t.name.clone())),
+                    (
+                        "shape",
+                        Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+                    ),
+                    ("absmax_bits", f32_bits(t.absmax)),
+                ])
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("format", Json::Str(ARTIFACT_FORMAT.to_string())),
+            ("version", Json::Num(self.version as f64)),
+            ("arch", Json::Str(self.arch.clone())),
+            (
+                "geometry",
+                Json::obj_from(vec![
+                    ("d_model", Json::Num(self.d_model as f64)),
+                    ("n_blocks", Json::Num(self.n_blocks as f64)),
+                    ("d_state", Json::Num(self.d_state as f64)),
+                    ("expand", Json::Num(self.expand as f64)),
+                    ("conv_k", Json::Num(self.conv_k as f64)),
+                    ("patch", Json::Num(self.patch as f64)),
+                    ("img", Json::Num(self.img as f64)),
+                    ("in_ch", Json::Num(self.in_ch as f64)),
+                    ("n_classes", Json::Num(self.n_classes as f64)),
+                ]),
+            ),
+            (
+                "provenance",
+                Json::obj_from(vec![
+                    ("tool", Json::Str(self.provenance.tool.clone())),
+                    ("detail", Json::Str(self.provenance.detail.clone())),
+                ]),
+            ),
+            ("tensors", Json::Arr(tensors)),
+        ])
+    }
+
+    /// Parse a manifest, wrapping every schema violation as a typed
+    /// [`ArtifactError::Manifest`]. Unknown keys are rejected at every
+    /// level — a typo'd field silently ignored is worse than an error.
+    pub fn from_json(j: &Json) -> std::result::Result<Self, ArtifactError> {
+        Self::parse(j).map_err(|e| ArtifactError::Manifest(e.to_string()))
+    }
+
+    fn parse(j: &Json) -> Result<Self> {
+        expect_keys(j, &["format", "version", "arch", "geometry", "provenance", "tensors"])?;
+        let format = j.get("format")?.str()?;
+        if format != ARTIFACT_FORMAT {
+            bail!("format {format:?}, expected {ARTIFACT_FORMAT:?}");
+        }
+        let version = u32::try_from(j.get("version")?.u64_exact()?)
+            .map_err(|_| anyhow::anyhow!("version field out of range"))?;
+        let g = j.get("geometry")?;
+        const GEOMETRY_KEYS: [&str; 9] = [
+            "d_model", "n_blocks", "d_state", "expand", "conv_k", "patch", "img", "in_ch",
+            "n_classes",
+        ];
+        expect_keys(g, &GEOMETRY_KEYS)?;
+        let p = j.get("provenance")?;
+        expect_keys(p, &["tool", "detail"])?;
+        let mut tensors = Vec::new();
+        for (i, t) in j.get("tensors")?.arr()?.iter().enumerate() {
+            expect_keys(t, &["name", "shape", "absmax_bits"])
+                .with_context(|| format!("tensor #{i}"))?;
+            tensors.push(TensorMeta {
+                name: t.get("name")?.str()?.to_string(),
+                shape: t.get("shape")?.usize_vec()?,
+                absmax: t.get("absmax_bits")?.f32_from_bits()?,
+            });
+        }
+        Ok(ArtifactManifest {
+            version,
+            arch: j.get("arch")?.str()?.to_string(),
+            d_model: g.get("d_model")?.usize()?,
+            n_blocks: g.get("n_blocks")?.usize()?,
+            d_state: g.get("d_state")?.usize()?,
+            expand: g.get("expand")?.usize()?,
+            conv_k: g.get("conv_k")?.usize()?,
+            patch: g.get("patch")?.usize()?,
+            img: g.get("img")?.usize()?,
+            in_ch: g.get("in_ch")?.usize()?,
+            n_classes: g.get("n_classes")?.usize()?,
+            provenance: Provenance {
+                tool: p.get("tool")?.str()?.to_string(),
+                detail: p.get("detail")?.str()?.to_string(),
+            },
+            tensors,
+        })
+    }
+}
+
+fn expect_keys(j: &Json, allowed: &[&str]) -> Result<()> {
+    for key in j.obj()?.keys() {
+        if !allowed.contains(&key.as_str()) {
+            bail!("unknown key {key:?}");
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +422,103 @@ mod tests {
     fn missing_key_is_error() {
         let j = Json::parse(r#"{"format": "hlo-text"}"#).unwrap();
         assert!(Manifest::from_json(&j).is_err());
+    }
+
+    fn unit_provenance() -> Provenance {
+        Provenance { tool: "unit".to_string(), detail: "test".to_string() }
+    }
+
+    #[test]
+    fn artifact_manifest_round_trips_and_resolves() {
+        let cfg = ForwardConfig::micro_s();
+        let weights = VimWeights::init(&cfg, 3);
+        let m = ArtifactManifest::for_weights(&weights, unit_provenance());
+        assert_eq!(m.arch, "micro_s");
+        assert_eq!(m.tensors.len(), vim_tensor_schema(&cfg).len());
+        let parsed =
+            ArtifactManifest::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(parsed, m);
+        assert_eq!(parsed.forward_config().unwrap(), cfg);
+        let per_tensor: u64 =
+            m.tensors.iter().map(|t| t.shape.iter().product::<usize>() as u64).sum();
+        assert_eq!(m.total_elements().unwrap(), per_tensor);
+    }
+
+    #[test]
+    fn artifact_manifest_rejects_drift() {
+        let cfg = ForwardConfig::micro_s();
+        let weights = VimWeights::init(&cfg, 3);
+        let m = ArtifactManifest::for_weights(&weights, unit_provenance());
+
+        let mut unknown_arch = m.clone();
+        unknown_arch.arch = "nope".to_string();
+        assert!(matches!(
+            unknown_arch.forward_config(),
+            Err(ArtifactError::ArchUnknown { .. })
+        ));
+
+        let mut wrong_geom = m.clone();
+        wrong_geom.d_model = 49;
+        assert!(matches!(
+            wrong_geom.forward_config(),
+            Err(ArtifactError::ConfigMismatch { .. })
+        ));
+
+        let mut bad_img = m.clone();
+        bad_img.img = 10; // not a multiple of patch 4
+        assert!(matches!(bad_img.forward_config(), Err(ArtifactError::ConfigMismatch { .. })));
+
+        let mut bad_shape = m.clone();
+        bad_shape.tensors[0].shape.reverse();
+        assert!(matches!(
+            bad_shape.forward_config(),
+            Err(ArtifactError::ShapeMismatch { .. })
+        ));
+
+        let mut bad_name = m.clone();
+        bad_name.tensors[1].name = "patch_bb".to_string();
+        assert!(matches!(
+            bad_name.forward_config(),
+            Err(ArtifactError::ConfigMismatch { .. })
+        ));
+
+        let mut nan_absmax = m.clone();
+        nan_absmax.tensors[0].absmax = f32::NAN;
+        assert!(matches!(
+            nan_absmax.forward_config(),
+            Err(ArtifactError::TensorCorrupt { .. })
+        ));
+
+        // Unknown manifest keys are typed Manifest errors.
+        let mut j = match m.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        j.insert("extra".to_string(), Json::Null);
+        assert!(matches!(
+            ArtifactManifest::from_json(&Json::Obj(j)),
+            Err(ArtifactError::Manifest(_))
+        ));
+    }
+
+    #[test]
+    fn tensor_absmax_is_exact_selection() {
+        assert_eq!(tensor_absmax(&[0.25, -0.75, 0.5]), 0.75);
+        assert_eq!(tensor_absmax(&[]), 0.0);
+        assert_eq!(tensor_absmax(&[-0.0]), 0.0);
+        // Non-finite data must surface (a plain max fold would drop NaN),
+        // so the manifest gate refuses degenerate weights at export.
+        assert!(tensor_absmax(&[0.5, f32::NAN, 0.25]).is_nan());
+        assert!(tensor_absmax(&[f32::INFINITY]).is_nan());
+        assert!(tensor_absmax(&[1.0, f32::NEG_INFINITY]).is_nan());
+    }
+
+    #[test]
+    fn for_weights_with_nan_is_refused_at_validation() {
+        let cfg = ForwardConfig::micro_s();
+        let mut weights = VimWeights::init(&cfg, 1);
+        weights.patch_w[3] = f32::NAN;
+        let m = ArtifactManifest::for_weights(&weights, unit_provenance());
+        assert!(matches!(m.forward_config(), Err(ArtifactError::TensorCorrupt { .. })));
     }
 }

@@ -18,20 +18,40 @@
 //! [`ModelRegistry`] names multiple variants ([`ModelSpec`]) so one
 //! engine process ([`crate::coordinator::Engine`]) serves them all,
 //! each with its own factory, calibration table, and SLO knobs.
+//!
+//! Weights flow in through a [`ModelSource`]: either a versioned binary
+//! `VimArtifact` v1 file ([`artifact`] — weights + geometry + provenance
+//! + optional embedded calibration, loaded and fully verified by
+//! [`ArtifactStore`]) or hermetic seeded [`ModelSource::RandomInit`].
+//! A source resolves once per process ([`ModelSource::resolve`]); pool
+//! workers share the resulting `Arc<VimWeights>` instead of re-reading
+//! the file per worker.
 
+pub mod artifact;
 mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use manifest::{Manifest, ModelMeta, ScanMeta};
+pub use artifact::{
+    fnv1a64, ArtifactError, ArtifactStore, ArtifactSummary, VimArtifact, ARTIFACT_MAGIC,
+    ARTIFACT_VERSION,
+};
+pub use manifest::{
+    tensor_absmax, ArtifactManifest, Manifest, ModelMeta, Provenance, ScanMeta, TensorMeta,
+    ARTIFACT_FORMAT,
+};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, Runtime};
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
+
+use crate::quant::CalibTable;
+use crate::vision::{ForwardConfig, VimWeights};
 
 /// A host-side f32 tensor (row-major).
 #[derive(Debug, Clone, PartialEq)]
@@ -104,6 +124,68 @@ pub trait InferenceBackend {
 /// worker threads — but the backends it returns need not be: each is
 /// built and consumed on its worker's thread.
 pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn InferenceBackend>> + Send + Sync>;
+
+/// Where a servable model's weights come from — the single loading
+/// abstraction every backend construction path goes through.
+#[derive(Debug, Clone)]
+pub enum ModelSource {
+    /// A versioned `VimArtifact` v1 file ([`ArtifactStore`]): weights,
+    /// geometry, provenance and (optionally) the static scan calibration
+    /// in one file. Loading validates everything; corrupt/foreign/
+    /// mismatched artifacts fail typed ([`ArtifactError`]), never fall
+    /// back.
+    Artifact(PathBuf),
+    /// Synthetic seeded initialization — the hermetic default: weights
+    /// are a pure function of `(config, seed)`, bit-identical on every
+    /// platform.
+    RandomInit { config: ForwardConfig, seed: u64 },
+}
+
+/// A resolved [`ModelSource`]: shared weights (one copy per process, not
+/// per worker), the calibration that rode along, and a human-readable
+/// origin for logs.
+#[derive(Debug, Clone)]
+pub struct ResolvedModel {
+    pub weights: Arc<VimWeights>,
+    /// Calibration embedded in the source (artifact section); `None` for
+    /// random-init sources and calibration-free artifacts.
+    pub calib: Option<Arc<CalibTable>>,
+    pub origin: String,
+}
+
+impl ResolvedModel {
+    pub fn config(&self) -> &ForwardConfig {
+        &self.weights.cfg
+    }
+}
+
+impl ModelSource {
+    /// Load the source once. Artifact loading is fully verified
+    /// (checksum, schema, calibration fit); the typed [`ArtifactError`]
+    /// is preserved as the error source.
+    pub fn resolve(&self) -> Result<ResolvedModel> {
+        match self {
+            ModelSource::Artifact(path) => {
+                let art = ArtifactStore::open(path)?;
+                Ok(ResolvedModel {
+                    origin: format!(
+                        "artifact {} ({}, {})",
+                        path.display(),
+                        art.manifest.provenance.tool,
+                        art.manifest.provenance.detail
+                    ),
+                    weights: Arc::new(art.weights),
+                    calib: art.calib.map(Arc::new),
+                })
+            }
+            ModelSource::RandomInit { config, seed } => Ok(ResolvedModel {
+                weights: Arc::new(VimWeights::init(config, *seed)),
+                calib: None,
+                origin: format!("random-init seed {seed}"),
+            }),
+        }
+    }
+}
 
 /// One named model variant the engine can serve: a backend factory plus
 /// the admission knobs that apply to requests targeting it. Variants of

@@ -1,10 +1,11 @@
 //! Pure-Rust inference backend: the quantized Vision Mamba forward pass
-//! executed for real, with no Python / XLA / artifact dependencies.
+//! executed for real, with no Python / XLA dependencies.
 //!
-//! Each backend instance owns a full set of synthetic (seeded) weights
-//! plus the SFU's fitted LUT tables; `infer` is a deterministic pure
-//! function of (seed, image), so any number of pool workers built from
-//! the same seed are interchangeable — the invariance the serving
+//! Each backend instance shares one in-memory weight set (loaded from a
+//! [`ModelSource`] — a `VimArtifact` file or seeded random init) plus
+//! the SFU's fitted LUT tables; `infer` is a deterministic pure function
+//! of (weights, image), so any number of pool workers built from the
+//! same resolved source are interchangeable — the invariance the serving
 //! property tests pin down. `infer_batch` executes a whole dynamic batch
 //! through one (B·L, K)x(K, N) GEMM pass, per-item bit-identical to
 //! `infer`, which is what the coordinator workers call. An optional
@@ -15,18 +16,21 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context as _, Result};
 
 use crate::config::MambaXConfig;
 use crate::quant::CalibTable;
 use crate::sim::sfu::SfuTables;
 use crate::vision::{ForwardConfig, ScanExec, VimWeights};
 
-use super::{BackendFactory, InferenceBackend, Tensor};
+use super::{BackendFactory, InferenceBackend, ModelSource, Tensor};
 
-/// Native executor of one Vim model instance.
+/// Native executor of one Vim model instance. Weights are shared
+/// (`Arc`): every backend built from the same resolved [`ModelSource`]
+/// reads one in-memory copy — artifact files are opened once per
+/// process, not once per pool worker.
 pub struct NativeBackend {
-    weights: VimWeights,
+    weights: Arc<VimWeights>,
     tables: SfuTables,
     scan_cfg: MambaXConfig,
     /// Static scan calibration; `None` = dynamic per-invocation scales.
@@ -34,14 +38,20 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Build a backend for `cfg` with synthetic weights from `seed`.
-    pub fn new(cfg: &ForwardConfig, seed: u64) -> Self {
+    /// Wrap already-loaded weights (the common constructor every source
+    /// path funnels through).
+    pub fn from_weights(weights: Arc<VimWeights>) -> Self {
         NativeBackend {
-            weights: VimWeights::init(cfg, seed),
+            weights,
             tables: SfuTables::fitted(),
             scan_cfg: MambaXConfig::default(),
             calib: None,
         }
+    }
+
+    /// Build a backend for `cfg` with synthetic weights from `seed`.
+    pub fn new(cfg: &ForwardConfig, seed: u64) -> Self {
+        Self::from_weights(Arc::new(VimWeights::init(cfg, seed)))
     }
 
     /// The micro serving model (32x32x1 -> 10 classes).
@@ -49,24 +59,54 @@ impl NativeBackend {
         Self::new(&ForwardConfig::micro(), seed)
     }
 
+    /// Build a backend straight from a [`ModelSource`]. An artifact's
+    /// embedded calibration table (if any) is applied, so serving an
+    /// artifact needs no side-channel `--calib` flag.
+    pub fn from_source(source: &ModelSource) -> Result<Self> {
+        let resolved = source.resolve()?;
+        let backend = Self::from_weights(resolved.weights);
+        match resolved.calib {
+            Some(table) => backend.with_calib(table),
+            None => Ok(backend),
+        }
+    }
+
     /// A pool-worker [`BackendFactory`] closing over everything one model
-    /// variant bakes in: the model config, the weight seed, and (for
-    /// `@calib`-style variants) a validated static calibration table.
-    /// Every worker the engine builds from it is bit-identical — the
-    /// multi-model serving invariance rests on that.
+    /// variant bakes in: the resolved weight source and the static
+    /// calibration that applies to it. The source is resolved (and an
+    /// artifact fully verified) HERE, once — worker construction then
+    /// only clones `Arc`s, and every worker is bit-identical, which the
+    /// multi-model serving invariance rests on.
+    ///
+    /// `calib_override` replaces the source's embedded table (the
+    /// `--calib` flag semantics); `None` keeps the embedded one, or
+    /// dynamic scales when the source carries none. The override is
+    /// validated against the resolved model eagerly, so a misfit fails at
+    /// build time, not on the first worker thread.
     pub fn factory(
-        cfg: ForwardConfig,
-        seed: u64,
-        calib: Option<Arc<CalibTable>>,
-    ) -> BackendFactory {
-        Arc::new(move |_worker| {
-            let backend = NativeBackend::new(&cfg, seed);
+        source: ModelSource,
+        calib_override: Option<Arc<CalibTable>>,
+    ) -> Result<BackendFactory> {
+        let resolved = source.resolve()?;
+        let calib = match calib_override {
+            Some(table) => {
+                let m = &resolved.config().model;
+                table
+                    .validate(m.name, m.n_blocks, m.d_inner())
+                    .with_context(|| format!("calibration override for {}", resolved.origin))?;
+                Some(table)
+            }
+            None => resolved.calib.clone(),
+        };
+        let weights = resolved.weights;
+        Ok(Arc::new(move |_worker| {
+            let backend = NativeBackend::from_weights(Arc::clone(&weights));
             let backend = match &calib {
                 Some(table) => backend.with_calib(Arc::clone(table))?,
                 None => backend,
             };
             Ok(Box::new(backend) as Box<dyn InferenceBackend>)
-        })
+        }))
     }
 
     pub fn config(&self) -> &ForwardConfig {
@@ -234,12 +274,37 @@ mod tests {
     #[test]
     fn factory_built_workers_are_interchangeable() {
         let cfg = ForwardConfig::micro();
-        let factory = NativeBackend::factory(cfg.clone(), 11, None);
+        let source = ModelSource::RandomInit { config: cfg.clone(), seed: 11 };
+        let factory = NativeBackend::factory(source, None).unwrap();
         let img = Tensor::new(cfg.input_shape(), synthetic_image(2, 9, cfg.input_len())).unwrap();
         let mut w0 = factory(0).unwrap();
         let mut w1 = factory(1).unwrap();
         assert_eq!(w0.infer(&img).unwrap(), w1.infer(&img).unwrap());
         assert_eq!(w0.name(), "native");
+    }
+
+    #[test]
+    fn random_init_source_matches_direct_construction() {
+        let cfg = ForwardConfig::micro();
+        let source = ModelSource::RandomInit { config: cfg.clone(), seed: 4 };
+        let mut from_source = NativeBackend::from_source(&source).unwrap();
+        let mut direct = NativeBackend::new(&cfg, 4);
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(1, 0, cfg.input_len())).unwrap();
+        assert_eq!(from_source.infer(&img).unwrap(), direct.infer(&img).unwrap());
+        assert!(from_source.calib().is_none());
+    }
+
+    #[test]
+    fn factory_rejects_misfit_calib_override_eagerly() {
+        // A table calibrated for micro_s cannot override a micro source.
+        let small = ForwardConfig::micro_s();
+        let weights = VimWeights::init(&small, 1);
+        let img = synthetic_image(1, 0, small.input_len());
+        let table = weights
+            .calibrate(&SfuTables::fitted(), &MambaXConfig::default(), &[img.as_slice()], 1.0)
+            .unwrap();
+        let source = ModelSource::RandomInit { config: ForwardConfig::micro(), seed: 1 };
+        assert!(NativeBackend::factory(source, Some(Arc::new(table))).is_err());
     }
 
     #[test]

@@ -100,6 +100,23 @@ impl Json {
         self.arr()?.iter().map(|v| Ok(v.num()? as f32)).collect()
     }
 
+    /// Decode an f32 stored as its IEEE-754 bit pattern (the convention
+    /// of [`f32_bits`]): strict — the number must be an exact integer in
+    /// `[0, 2^32)`, so a corrupted or hand-edited bits field errors
+    /// instead of silently rounding onto some other float.
+    pub fn f32_from_bits(&self) -> Result<f32> {
+        let n = self.num()?;
+        if !(n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64) {
+            bail!("not an IEEE-754 f32 bit pattern: {n}");
+        }
+        Ok(f32::from_bits(n as u32))
+    }
+
+    /// Decode an array written by [`f32_bits_arr`].
+    pub fn f32_bits_vec(&self) -> Result<Vec<f32>> {
+        self.arr()?.iter().map(|v| v.f32_from_bits()).collect()
+    }
+
     pub fn i64_vec(&self) -> Result<Vec<i64>> {
         self.arr()?.iter().map(|v| Ok(v.num()? as i64)).collect()
     }
@@ -345,6 +362,21 @@ impl Json {
     }
 }
 
+/// Encode an f32 as its IEEE-754 bit pattern (a JSON integer in
+/// `[0, 2^32)`, exactly representable in f64). The single convention for
+/// bit-exact float round-trips in JSON artifacts — calibration-table
+/// ranges ([`crate::quant::CalibTable`]) and model-artifact manifest
+/// floats share this implementation, and [`Json::f32_from_bits`] /
+/// [`Json::f32_bits_vec`] are the strict inverses.
+pub fn f32_bits(v: f32) -> Json {
+    Json::Num(v.to_bits() as f64)
+}
+
+/// Encode a slice of f32s as an array of IEEE-754 bit patterns.
+pub fn f32_bits_arr(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| f32_bits(x)).collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +433,23 @@ mod tests {
         assert!(Json::parse("1.5").unwrap().u64_exact().is_err());
         // 2^53+1 aliases to 2^53 during f64 parse: must error, not round.
         assert!(Json::parse("9007199254740993").unwrap().u64_exact().is_err());
+    }
+
+    #[test]
+    fn f32_bits_round_trip_is_exact() {
+        // Values with no short decimal form survive bit-for-bit, through
+        // an actual serialize -> parse cycle.
+        let vals = [0.1f32, 1e-12, f32::MIN_POSITIVE, 3.14159265, -0.0, 1234.5678e-3];
+        let j = Json::parse(&f32_bits_arr(&vals).dump()).unwrap();
+        let back = j.f32_bits_vec().unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Strictness: negatives, fractions, and out-of-range u32 reject.
+        assert!(Json::parse("-1").unwrap().f32_from_bits().is_err());
+        assert!(Json::parse("1.5").unwrap().f32_from_bits().is_err());
+        assert!(Json::parse("4294967296").unwrap().f32_from_bits().is_err());
+        assert_eq!(Json::parse("4294967295").unwrap().f32_from_bits().unwrap().to_bits(), u32::MAX);
     }
 
     #[test]

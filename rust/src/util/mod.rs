@@ -7,3 +7,21 @@ pub mod rng;
 
 pub use json::Json;
 pub use rng::Pcg;
+
+/// Write a file, creating parent directories as needed — the one
+/// implementation behind every artifact writer (calibration tables,
+/// model artifacts, engine reports).
+pub fn write_creating_dirs(
+    path: impl AsRef<std::path::Path>,
+    bytes: &[u8],
+) -> anyhow::Result<()> {
+    use anyhow::Context as _;
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}

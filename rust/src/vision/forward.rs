@@ -92,6 +92,16 @@ impl ForwardConfig {
         Self { model: VimModel::micro(), img: 32, in_ch: 1, n_classes: 10 }
     }
 
+    /// The smaller micro sibling (`CONFIGS["micro_s"]`, 32x32x1 -> 10).
+    pub fn micro_s() -> Self {
+        Self { model: VimModel::micro_s(), img: 32, in_ch: 1, n_classes: 10 }
+    }
+
+    /// The larger micro sibling (`CONFIGS["micro_l"]`, 32x32x1 -> 10).
+    pub fn micro_l() -> Self {
+        Self { model: VimModel::micro_l(), img: 32, in_ch: 1, n_classes: 10 }
+    }
+
     pub fn seq_len(&self) -> usize {
         self.model.seq_len(self.img)
     }

@@ -18,5 +18,5 @@ mod vit;
 pub use forward::{BlockWeights, DirWeights, ForwardConfig, ScanExec, VimWeights};
 pub use gemm::{matmul, matmul_ref};
 pub use ops::{Op, OpClass, SfuFunc};
-pub use vim::{vim_block_ops, vim_model_ops, vim_selective_ssm_ops};
+pub use vim::{vim_block_ops, vim_model_ops, vim_selective_ssm_ops, vim_tensor_schema};
 pub use vit::{vit_block_ops, vit_model_ops, vit_score_matrix_bytes};

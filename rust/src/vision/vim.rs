@@ -1,7 +1,10 @@
-//! Vision Mamba workload builder (paper Fig 3).
+//! Vision Mamba workload builder (paper Fig 3) and the canonical
+//! named-tensor schema of an executable Vim instance — the weights ⇄
+//! artifact bridge used by the [`crate::runtime`] model-artifact format.
 
 use crate::config::VimModel;
 
+use super::forward::{BlockWeights, DirWeights, ForwardConfig, VimWeights};
 use super::ops::{Op, SfuFunc};
 
 /// The ops of the selective-SSM block for ONE direction (paper Fig 3(b)).
@@ -71,6 +74,201 @@ pub fn vim_model_ops(m: &VimModel, img: usize) -> Vec<Op> {
     ops
 }
 
+// ---------------------------------------------------------------------------
+// Named-tensor schema: the single definition of "which tensors a Vim
+// instance has, in what order, with what shapes". The model-artifact
+// format ([`crate::runtime::ArtifactStore`]) serializes tensors in
+// exactly this order; the python exporter mirrors it (names match the
+// JAX checkpoint's dotted paths, with `A_log`/`D` already folded into
+// the serving-side `a = -exp(A_log)` / `d` parameters).
+// ---------------------------------------------------------------------------
+
+/// Per-direction tensor fields: (field, shape) in serialization order.
+fn dir_fields(m: &VimModel) -> [(&'static str, Vec<usize>); 7] {
+    let (e, n, r, k) = (m.d_inner(), m.d_state, m.dt_rank(), m.conv_k);
+    [
+        ("conv_w", vec![e, k]),
+        ("conv_b", vec![e]),
+        ("xproj_w", vec![e, r + 2 * n]),
+        ("dt_w", vec![r, e]),
+        ("dt_b", vec![e]),
+        ("a", vec![e, n]),
+        ("d", vec![e]),
+    ]
+}
+
+/// The canonical `(name, shape)` schema of every tensor of one Vim
+/// instance, in artifact serialization order. Names are dotted paths
+/// (`blocks.2.fwd.conv_w`); shapes are row-major.
+pub fn vim_tensor_schema(cfg: &ForwardConfig) -> Vec<(String, Vec<usize>)> {
+    let m = &cfg.model;
+    let (d, e) = (m.d_model, m.d_inner());
+    let mut out: Vec<(String, Vec<usize>)> = vec![
+        ("patch_w".to_string(), vec![cfg.patch_dim(), d]),
+        ("patch_b".to_string(), vec![d]),
+        ("cls".to_string(), vec![d]),
+        ("pos".to_string(), vec![cfg.seq_len(), d]),
+    ];
+    for b in 0..m.n_blocks {
+        for (f, shape) in [
+            ("norm_g", vec![d]),
+            ("norm_b", vec![d]),
+            ("in_w", vec![d, 2 * e]),
+            ("in_b", vec![2 * e]),
+            ("out_w", vec![e, d]),
+            ("out_b", vec![d]),
+        ] {
+            out.push((format!("blocks.{b}.{f}"), shape));
+        }
+        for dir in ["fwd", "bwd"] {
+            for (f, shape) in dir_fields(m) {
+                out.push((format!("blocks.{b}.{dir}.{f}"), shape));
+            }
+        }
+    }
+    out.push(("head_norm_g".to_string(), vec![d]));
+    out.push(("head_norm_b".to_string(), vec![d]));
+    out.push(("head_w".to_string(), vec![d, cfg.n_classes]));
+    out.push(("head_b".to_string(), vec![cfg.n_classes]));
+    out
+}
+
+fn dir_tensors<'a>(prefix: &str, dw: &'a DirWeights, out: &mut Vec<(String, &'a [f32])>) {
+    out.push((format!("{prefix}.conv_w"), dw.conv_w.as_slice()));
+    out.push((format!("{prefix}.conv_b"), dw.conv_b.as_slice()));
+    out.push((format!("{prefix}.xproj_w"), dw.xproj_w.as_slice()));
+    out.push((format!("{prefix}.dt_w"), dw.dt_w.as_slice()));
+    out.push((format!("{prefix}.dt_b"), dw.dt_b.as_slice()));
+    out.push((format!("{prefix}.a"), dw.a.as_slice()));
+    out.push((format!("{prefix}.d"), dw.d.as_slice()));
+}
+
+fn dir_tensors_mut<'a>(
+    prefix: &str,
+    dw: &'a mut DirWeights,
+    out: &mut Vec<(String, &'a mut Vec<f32>)>,
+) {
+    out.push((format!("{prefix}.conv_w"), &mut dw.conv_w));
+    out.push((format!("{prefix}.conv_b"), &mut dw.conv_b));
+    out.push((format!("{prefix}.xproj_w"), &mut dw.xproj_w));
+    out.push((format!("{prefix}.dt_w"), &mut dw.dt_w));
+    out.push((format!("{prefix}.dt_b"), &mut dw.dt_b));
+    out.push((format!("{prefix}.a"), &mut dw.a));
+    out.push((format!("{prefix}.d"), &mut dw.d));
+}
+
+impl VimWeights {
+    /// Every tensor as `(name, data)`, in [`vim_tensor_schema`] order.
+    pub fn named_tensors(&self) -> Vec<(String, &[f32])> {
+        let mut out: Vec<(String, &[f32])> = vec![
+            ("patch_w".to_string(), self.patch_w.as_slice()),
+            ("patch_b".to_string(), self.patch_b.as_slice()),
+            ("cls".to_string(), self.cls.as_slice()),
+            ("pos".to_string(), self.pos.as_slice()),
+        ];
+        for (b, bw) in self.blocks.iter().enumerate() {
+            out.push((format!("blocks.{b}.norm_g"), bw.norm_g.as_slice()));
+            out.push((format!("blocks.{b}.norm_b"), bw.norm_b.as_slice()));
+            out.push((format!("blocks.{b}.in_w"), bw.in_w.as_slice()));
+            out.push((format!("blocks.{b}.in_b"), bw.in_b.as_slice()));
+            out.push((format!("blocks.{b}.out_w"), bw.out_w.as_slice()));
+            out.push((format!("blocks.{b}.out_b"), bw.out_b.as_slice()));
+            dir_tensors(&format!("blocks.{b}.fwd"), &bw.fwd, &mut out);
+            dir_tensors(&format!("blocks.{b}.bwd"), &bw.bwd, &mut out);
+        }
+        out.push(("head_norm_g".to_string(), self.head_norm_g.as_slice()));
+        out.push(("head_norm_b".to_string(), self.head_norm_b.as_slice()));
+        out.push(("head_w".to_string(), self.head_w.as_slice()));
+        out.push(("head_b".to_string(), self.head_b.as_slice()));
+        out
+    }
+
+    /// Mutable variant of [`Self::named_tensors`], same order — the
+    /// artifact loader fills a [`VimWeights::zeros`] instance through it.
+    pub fn named_tensors_mut(&mut self) -> Vec<(String, &mut Vec<f32>)> {
+        let mut out: Vec<(String, &mut Vec<f32>)> = vec![
+            ("patch_w".to_string(), &mut self.patch_w),
+            ("patch_b".to_string(), &mut self.patch_b),
+            ("cls".to_string(), &mut self.cls),
+            ("pos".to_string(), &mut self.pos),
+        ];
+        for (b, bw) in self.blocks.iter_mut().enumerate() {
+            out.push((format!("blocks.{b}.norm_g"), &mut bw.norm_g));
+            out.push((format!("blocks.{b}.norm_b"), &mut bw.norm_b));
+            out.push((format!("blocks.{b}.in_w"), &mut bw.in_w));
+            out.push((format!("blocks.{b}.in_b"), &mut bw.in_b));
+            out.push((format!("blocks.{b}.out_w"), &mut bw.out_w));
+            out.push((format!("blocks.{b}.out_b"), &mut bw.out_b));
+            dir_tensors_mut(&format!("blocks.{b}.fwd"), &mut bw.fwd, &mut out);
+            dir_tensors_mut(&format!("blocks.{b}.bwd"), &mut bw.bwd, &mut out);
+        }
+        out.push(("head_norm_g".to_string(), &mut self.head_norm_g));
+        out.push(("head_norm_b".to_string(), &mut self.head_norm_b));
+        out.push(("head_w".to_string(), &mut self.head_w));
+        out.push(("head_b".to_string(), &mut self.head_b));
+        out
+    }
+
+    /// An all-zero weight set with every tensor at its schema shape —
+    /// the blank the artifact loader deserializes into.
+    pub fn zeros(cfg: &ForwardConfig) -> Self {
+        let m = &cfg.model;
+        let (d, e) = (m.d_model, m.d_inner());
+        let dir = || {
+            let mut dw = DirWeights {
+                conv_w: Vec::new(),
+                conv_b: Vec::new(),
+                xproj_w: Vec::new(),
+                dt_w: Vec::new(),
+                dt_b: Vec::new(),
+                a: Vec::new(),
+                d: Vec::new(),
+            };
+            for (field, tensor) in dir_fields(m).iter().zip(dir_tensors_order(&mut dw)) {
+                *tensor = vec![0.0; field.1.iter().product()];
+            }
+            dw
+        };
+        VimWeights {
+            cfg: cfg.clone(),
+            patch_w: vec![0.0; cfg.patch_dim() * d],
+            patch_b: vec![0.0; d],
+            cls: vec![0.0; d],
+            pos: vec![0.0; cfg.seq_len() * d],
+            blocks: (0..m.n_blocks)
+                .map(|_| BlockWeights {
+                    norm_g: vec![0.0; d],
+                    norm_b: vec![0.0; d],
+                    in_w: vec![0.0; d * 2 * e],
+                    in_b: vec![0.0; 2 * e],
+                    out_w: vec![0.0; e * d],
+                    out_b: vec![0.0; d],
+                    fwd: dir(),
+                    bwd: dir(),
+                })
+                .collect(),
+            head_norm_g: vec![0.0; d],
+            head_norm_b: vec![0.0; d],
+            head_w: vec![0.0; d * cfg.n_classes],
+            head_b: vec![0.0; cfg.n_classes],
+        }
+    }
+}
+
+/// The [`DirWeights`] fields in [`dir_fields`] order, mutably — keeps
+/// [`VimWeights::zeros`] structurally tied to the schema.
+fn dir_tensors_order(dw: &mut DirWeights) -> [&mut Vec<f32>; 7] {
+    [
+        &mut dw.conv_w,
+        &mut dw.conv_b,
+        &mut dw.xproj_w,
+        &mut dw.dt_w,
+        &mut dw.dt_b,
+        &mut dw.a,
+        &mut dw.d,
+    ]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +293,60 @@ mod tests {
         let ratio = f448 / f224;
         let l_ratio = m.seq_len(448) as f64 / m.seq_len(224) as f64;
         assert!((ratio / l_ratio - 1.0).abs() < 0.05, "ratio {ratio} vs L ratio {l_ratio}");
+    }
+
+    fn schema_cfg() -> ForwardConfig {
+        ForwardConfig {
+            model: VimModel {
+                name: "schema-test",
+                d_model: 16,
+                n_blocks: 2,
+                d_state: 4,
+                expand: 2,
+                conv_k: 4,
+                patch: 4,
+            },
+            img: 8,
+            in_ch: 1,
+            n_classes: 6,
+        }
+    }
+
+    #[test]
+    fn tensor_schema_matches_initialized_weights() {
+        let cfg = schema_cfg();
+        let w = VimWeights::init(&cfg, 3);
+        let schema = vim_tensor_schema(&cfg);
+        let tensors = w.named_tensors();
+        assert_eq!(schema.len(), tensors.len());
+        for ((sname, shape), (tname, data)) in schema.iter().zip(&tensors) {
+            assert_eq!(sname, tname);
+            assert_eq!(shape.iter().product::<usize>(), data.len(), "{sname}");
+        }
+        // Spot-check the dotted-path naming convention.
+        assert!(schema.iter().any(|(n, _)| n == "blocks.1.bwd.xproj_w"));
+        assert!(schema.iter().any(|(n, s)| n == "pos" && s == &vec![cfg.seq_len(), 16]));
+    }
+
+    #[test]
+    fn zeros_has_schema_shapes_and_fills_round_trip() {
+        let cfg = schema_cfg();
+        let src = VimWeights::init(&cfg, 9);
+        let mut dst = VimWeights::zeros(&cfg);
+        {
+            let from = src.named_tensors();
+            let to = dst.named_tensors_mut();
+            assert_eq!(from.len(), to.len());
+            for ((fname, data), (tname, slot)) in from.iter().zip(to) {
+                assert_eq!(fname, &tname);
+                assert_eq!(data.len(), slot.len(), "{fname}: zeros shape");
+                slot.copy_from_slice(data);
+            }
+        }
+        // The copy is total: every tensor now matches the source bitwise.
+        for ((_, a), (n, b)) in src.named_tensors().iter().zip(dst.named_tensors()) {
+            assert_eq!(*a, b, "{n}");
+        }
     }
 
     #[test]

@@ -1,0 +1,421 @@
+//! Properties of the `VimArtifact` v1 model-artifact subsystem
+//! (hand-rolled harness: proptest is unavailable offline; `Pcg` provides
+//! deterministic shrink-free random cases).
+//!
+//! The contract under test:
+//!
+//! * save -> load -> forward is bitwise identical to the in-memory
+//!   weights it was saved from, across random geometries (arch family x
+//!   image size x channel count x class count), with and without an
+//!   embedded calibration table;
+//! * an artifact's embedded calibration is indistinguishable from the
+//!   same table side-loaded via `--calib` (`with_calib`) — one file
+//!   replaces the two-file flow bit-for-bit;
+//! * corruption in any section — magic, version, lengths, manifest
+//!   geometry/arch/shapes, tensor bytes, integrity records, embedded
+//!   calibration — is rejected with the *typed* [`ArtifactError`]
+//!   variant naming the failure, never a silent fallback;
+//! * the committed golden fixture (`rust/tests/data/artifact_v1.bin`,
+//!   written by `python/compile/make_artifact_golden.py`) decodes to the
+//!   exact formula weights and calibration it encodes — pinning the byte
+//!   layout across languages.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mamba_x::config::MambaXConfig;
+use mamba_x::quant::CalibTable;
+use mamba_x::runtime::{
+    fnv1a64, ArtifactError, ArtifactStore, InferenceBackend, ModelSource, NativeBackend,
+    Provenance, VimArtifact, ARTIFACT_VERSION,
+};
+use mamba_x::sim::sfu::SfuTables;
+use mamba_x::util::Pcg;
+use mamba_x::vision::{vim_tensor_schema, ForwardConfig, ScanExec, VimWeights};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/artifact_v1.bin")
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mamba_x_artifact_props_{}_{tag}", std::process::id()))
+}
+
+fn rand_image(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..len).map(|_| rng.f32_in(-1.0, 1.0)).collect()
+}
+
+fn prov(detail: &str) -> Provenance {
+    Provenance { tool: "artifact_props".to_string(), detail: detail.to_string() }
+}
+
+/// PROPERTY: save -> load -> forward ≡ in-memory, over random geometries.
+/// Half the cases embed a calibration table; for those the loaded backend
+/// must also equal the in-memory weights with the same table side-loaded.
+#[test]
+fn prop_save_load_forward_bitwise_over_geometries() {
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    let mut rng = Pcg::new(0xA27_1FAC);
+    for case in 0..6u64 {
+        let arch = ["micro_s", "micro", "micro_l"][rng.usize_in(0, 2)];
+        let model = mamba_x::config::VimModel::by_name(arch).unwrap();
+        let cfg = ForwardConfig {
+            model,
+            img: 4 * rng.usize_in(2, 3), // 8 or 12, multiple of patch 4
+            in_ch: rng.usize_in(1, 2),
+            n_classes: rng.usize_in(2, 8),
+        };
+        let seed = 1000 + case;
+        let weights = VimWeights::init(&cfg, seed);
+        let embed_calib = case % 2 == 0;
+        let calib = if embed_calib {
+            let imgs: Vec<Vec<f32>> = (0..rng.usize_in(1, 2))
+                .map(|i| rand_image(case * 31 + i as u64, cfg.input_len()))
+                .collect();
+            let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            Some(weights.calibrate(&tables, &scan, &refs, 1.0).unwrap())
+        } else {
+            None
+        };
+        let artifact =
+            VimArtifact::from_weights(weights.clone(), calib.clone(), prov("prop")).unwrap();
+        let path = temp_path(&format!("prop_{case}.mxa"));
+        ArtifactStore::save(&path, &artifact).unwrap();
+
+        let loaded = ArtifactStore::open(&path).unwrap();
+        assert_eq!(loaded.manifest, artifact.manifest, "case {case} ({arch})");
+        assert_eq!(loaded.calib, calib, "case {case}: calibration round-trip");
+        for ((name, a), (_, b)) in
+            weights.named_tensors().iter().zip(loaded.weights.named_tensors())
+        {
+            assert_eq!(*a, b, "case {case}: tensor {name} drifted");
+        }
+
+        // End to end through the backend surface: the artifact source
+        // serves bitwise what the in-memory construction serves.
+        let mut from_artifact =
+            NativeBackend::from_source(&ModelSource::Artifact(path.clone())).unwrap();
+        assert_eq!(from_artifact.calib().is_some(), embed_calib);
+        let mut in_memory = {
+            let b = NativeBackend::new(&cfg, seed);
+            match &calib {
+                Some(t) => b.with_calib(Arc::new(t.clone())).unwrap(),
+                None => b,
+            }
+        };
+        for img_seed in 0..3u64 {
+            let img = mamba_x::runtime::Tensor::new(
+                cfg.input_shape(),
+                rand_image(9000 + case * 10 + img_seed, cfg.input_len()),
+            )
+            .unwrap();
+            assert_eq!(
+                from_artifact.infer(&img).unwrap(),
+                in_memory.infer(&img).unwrap(),
+                "case {case} ({arch}) image {img_seed}: artifact serving diverged"
+            );
+        }
+
+        // inspect() sees the same manifest without decoding the blob.
+        let summary = ArtifactStore::inspect(&path).unwrap();
+        assert_eq!(summary.manifest, artifact.manifest);
+        assert_eq!(summary.params * 4, summary.weight_bytes);
+        assert_eq!(summary.calib.is_some(), embed_calib);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Embedded calibration ≡ `--calib` side-load: one artifact file must be
+/// bit-equivalent to the weights + separate table JSON it replaces, both
+/// directly and through the factory override path.
+#[test]
+fn embedded_calib_equals_side_loaded_table() {
+    let cfg = ForwardConfig::micro_s();
+    let seed = 21u64;
+    let weights = VimWeights::init(&cfg, seed);
+    let imgs: Vec<Vec<f32>> = (0..4).map(|i| rand_image(40 + i, cfg.input_len())).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let table = weights
+        .calibrate(&SfuTables::fitted(), &MambaXConfig::default(), &refs, 1.0)
+        .unwrap();
+
+    // One file: weights + embedded table.
+    let embedded_path = temp_path("embedded.mxa");
+    ArtifactStore::save(
+        &embedded_path,
+        &VimArtifact::from_weights(weights.clone(), Some(table.clone()), prov("embed")).unwrap(),
+    )
+    .unwrap();
+    // Two files: calib-free artifact + side-channel table JSON.
+    let bare_path = temp_path("bare.mxa");
+    ArtifactStore::save(
+        &bare_path,
+        &VimArtifact::from_weights(weights.clone(), None, prov("bare")).unwrap(),
+    )
+    .unwrap();
+    let table_path = temp_path("table.json");
+    table.save(&table_path).unwrap();
+    let side_loaded = Arc::new(CalibTable::load(&table_path).unwrap());
+
+    let mut embedded =
+        NativeBackend::from_source(&ModelSource::Artifact(embedded_path.clone())).unwrap();
+    assert!(embedded.calib().is_some());
+    let factory_override = NativeBackend::factory(
+        ModelSource::Artifact(bare_path.clone()),
+        Some(Arc::clone(&side_loaded)),
+    )
+    .unwrap();
+    let mut overridden = factory_override(0).unwrap();
+    let mut in_memory = NativeBackend::new(&cfg, seed).with_calib(side_loaded).unwrap();
+
+    for (i, img) in imgs.iter().enumerate() {
+        let t = mamba_x::runtime::Tensor::new(cfg.input_shape(), img.clone()).unwrap();
+        let want = in_memory.infer(&t).unwrap();
+        assert_eq!(embedded.infer(&t).unwrap(), want, "image {i}: embedded != side-load");
+        assert_eq!(overridden.infer(&t).unwrap(), want, "image {i}: override != side-load");
+    }
+    for p in [&embedded_path, &bare_path, &table_path] {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Corruption / rejection matrix
+// ---------------------------------------------------------------------------
+
+/// Replace one occurrence of `find` with the same-length `replace`
+/// (first or last match) and re-stamp the trailing checksum, so the
+/// targeted gate — not the checksum — is what rejects.
+fn patched(bytes: &[u8], find: &[u8], replace: &[u8], last: bool) -> Vec<u8> {
+    assert_eq!(find.len(), replace.len(), "surgery must preserve lengths");
+    let positions: Vec<usize> =
+        (0..=bytes.len() - find.len()).filter(|&i| &bytes[i..i + find.len()] == find).collect();
+    assert!(!positions.is_empty(), "pattern not found: {:?}", String::from_utf8_lossy(find));
+    let pos = if last { *positions.last().unwrap() } else { positions[0] };
+    let mut out = bytes.to_vec();
+    out[pos..pos + find.len()].copy_from_slice(replace);
+    let n = out.len();
+    let c = fnv1a64(&out[..n - 8]);
+    out[n - 8..].copy_from_slice(&c.to_le_bytes());
+    out
+}
+
+fn reference_bytes(with_calib: bool) -> Vec<u8> {
+    let cfg = ForwardConfig::micro_s();
+    let weights = VimWeights::init(&cfg, 5);
+    let calib = with_calib.then(|| {
+        let img = rand_image(1, cfg.input_len());
+        weights
+            .calibrate(&SfuTables::fitted(), &MambaXConfig::default(), &[img.as_slice()], 1.0)
+            .unwrap()
+    });
+    ArtifactStore::encode(&VimArtifact::from_weights(weights, calib, prov("matrix")).unwrap())
+        .unwrap()
+}
+
+#[test]
+fn corrupt_artifacts_rejected_typed() {
+    let good = reference_bytes(true);
+    assert!(ArtifactStore::decode(&good).is_ok(), "reference must decode");
+
+    // Manifest geometry drifting from its arch: micro_s has d_model 48.
+    let wrong_geom = patched(&good, b"\"d_model\":48", b"\"d_model\":49", false);
+    assert!(
+        matches!(ArtifactStore::decode(&wrong_geom), Err(ArtifactError::ConfigMismatch { .. })),
+        "geometry gate"
+    );
+
+    // Unknown arch (same length, different name).
+    let unknown_arch = patched(&good, b"\"arch\":\"micro_s\"", b"\"arch\":\"nicro_s\"", false);
+    match ArtifactStore::decode(&unknown_arch) {
+        Err(ArtifactError::ArchUnknown { arch }) => assert_eq!(arch, "nicro_s"),
+        other => panic!("arch gate: {other:?}"),
+    }
+
+    // Tensor shape drift: patch_w is (patch_dim=16, d=48) for micro_s.
+    let wrong_shape = patched(&good, b"\"shape\":[16,48]", b"\"shape\":[48,16]", false);
+    assert!(
+        matches!(ArtifactStore::decode(&wrong_shape), Err(ArtifactError::ShapeMismatch { .. })),
+        "shape gate"
+    );
+
+    // Embedded calibration for a different model (the calib JSON is the
+    // only section containing a "model" key).
+    let wrong_calib = patched(&good, b"\"model\":\"micro_s\"", b"\"model\":\"micro_x\"", true);
+    assert!(
+        matches!(ArtifactStore::decode(&wrong_calib), Err(ArtifactError::Calib(_))),
+        "calibration gate"
+    );
+
+    // A lying per-tensor integrity record survives the checksum (it is
+    // re-stamped) but not the absmax re-computation.
+    let cfg = ForwardConfig::micro_s();
+    let weights = VimWeights::init(&cfg, 5);
+    let mut lying = VimArtifact::from_weights(weights, None, prov("lying")).unwrap();
+    lying.manifest.tensors[0].absmax += 1.0;
+    let lying_bytes = ArtifactStore::encode(&lying).unwrap();
+    assert!(
+        matches!(ArtifactStore::decode(&lying_bytes), Err(ArtifactError::TensorCorrupt { .. })),
+        "integrity gate"
+    );
+
+    // Random single-bit flips anywhere must be rejected (checksum or a
+    // structural gate — typed either way, never a silent load).
+    let mut rng = Pcg::new(0xB17F11);
+    for _ in 0..16 {
+        let mut flipped = good.clone();
+        let pos = rng.usize_in(0, flipped.len() - 1);
+        flipped[pos] ^= 1 << rng.usize_in(0, 7);
+        if flipped == good {
+            continue;
+        }
+        assert!(ArtifactStore::decode(&flipped).is_err(), "bit flip at {pos} accepted");
+    }
+
+    // Truncation at every section boundary and a few interior points.
+    for cut in [0usize, 4, 8, 15, 16, 40, good.len() / 2, good.len() - 9, good.len() - 1] {
+        let err = ArtifactStore::decode(&good[..cut]).unwrap_err();
+        assert!(
+            matches!(err, ArtifactError::Truncated { .. } | ArtifactError::Checksum { .. }),
+            "cut at {cut}: {err}"
+        );
+    }
+}
+
+/// The same gates fire through the file-based path (`open` / `inspect`),
+/// and `inspect` structurally validates without reading the blob.
+#[test]
+fn file_level_rejections_are_typed() {
+    let good = reference_bytes(false);
+    let write = |tag: &str, bytes: &[u8]| -> PathBuf {
+        let p = temp_path(tag);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    };
+
+    let missing = temp_path("missing.mxa");
+    assert!(matches!(ArtifactStore::open(&missing), Err(ArtifactError::Io { .. })));
+    assert!(matches!(ArtifactStore::inspect(&missing), Err(ArtifactError::Io { .. })));
+
+    let mut future = good.clone();
+    future[8..12].copy_from_slice(&7u32.to_le_bytes());
+    let n = future.len();
+    let c = fnv1a64(&future[..n - 8]);
+    future[n - 8..].copy_from_slice(&c.to_le_bytes());
+    let p = write("future.mxa", &future);
+    assert!(matches!(
+        ArtifactStore::open(&p),
+        Err(ArtifactError::FutureVersion { found: 7 })
+    ));
+    assert!(matches!(
+        ArtifactStore::inspect(&p),
+        Err(ArtifactError::FutureVersion { found: 7 })
+    ));
+    std::fs::remove_file(&p).ok();
+
+    let mut foreign = good.clone();
+    foreign[..8].copy_from_slice(b"NOTMAMBA");
+    let p = write("foreign.mxa", &foreign);
+    assert!(matches!(ArtifactStore::open(&p), Err(ArtifactError::ForeignMagic { .. })));
+    assert!(matches!(ArtifactStore::inspect(&p), Err(ArtifactError::ForeignMagic { .. })));
+    std::fs::remove_file(&p).ok();
+
+    // Truncated mid-blob: inspect's section accounting catches it even
+    // though it never reads the tensor bytes.
+    let p = write("truncated.mxa", &good[..good.len() - 20]);
+    assert!(matches!(ArtifactStore::open(&p), Err(ArtifactError::Truncated { .. })));
+    assert!(matches!(ArtifactStore::inspect(&p), Err(ArtifactError::Truncated { .. })));
+    std::fs::remove_file(&p).ok();
+
+    // Trailing bytes after the checksum.
+    let mut trailing = good.clone();
+    trailing.extend_from_slice(b"junk");
+    let p = write("trailing.mxa", &trailing);
+    assert!(matches!(ArtifactStore::open(&p), Err(ArtifactError::TrailingBytes { extra: 4 })));
+    assert!(matches!(
+        ArtifactStore::inspect(&p),
+        Err(ArtifactError::TrailingBytes { extra: 4 })
+    ));
+    std::fs::remove_file(&p).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Golden fixture: the byte layout, pinned across languages
+// ---------------------------------------------------------------------------
+
+/// The committed fixture's weight formula (mirrored from
+/// `make_artifact_golden.py`): tensor `t`, element `k` ->
+/// `((t*1009 + k*31) % 2001 - 1000) / 8192`, exact in f32.
+fn golden_value(t: usize, k: usize) -> f32 {
+    (((t * 1009 + k * 31) % 2001) as f32 - 1000.0) / 8192.0
+}
+
+#[test]
+fn golden_artifact_v1_decodes_bitwise() {
+    let artifact = ArtifactStore::open(golden_path()).unwrap();
+    let m = &artifact.manifest;
+    assert_eq!(m.version, ARTIFACT_VERSION);
+    assert_eq!(m.arch, "micro_s");
+    assert_eq!((m.img, m.in_ch, m.n_classes), (8, 1, 3));
+    assert_eq!(m.provenance.tool, "make_artifact_golden.py");
+
+    let cfg = m.forward_config().unwrap();
+    assert_eq!(cfg.model.d_model, 48);
+    assert_eq!(vim_tensor_schema(&cfg).len(), m.tensors.len());
+
+    // Every tensor matches the generation formula bit-for-bit.
+    for (t, (name, data)) in artifact.weights.named_tensors().iter().enumerate() {
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!(
+                v.to_bits(),
+                golden_value(t, k).to_bits(),
+                "tensor {t} ({name}) element {k}"
+            );
+        }
+    }
+
+    // The embedded calibration follows its range formulas; the loader
+    // already re-derived and cross-checked the stored shifts.
+    let table = artifact.calib.as_ref().expect("golden embeds a calibration table");
+    assert_eq!(table.model, "micro_s");
+    assert_eq!(table.sites.len(), 2 * cfg.model.n_blocks);
+    assert_eq!((table.samples, table.percentile), (4, 1.0));
+    for (s, site) in table.sites.iter().enumerate() {
+        assert_eq!((site.block, site.dir), (s / 2, s % 2));
+        assert_eq!(site.sq.len(), cfg.model.d_inner());
+        for c in 0..site.sq.len() {
+            let j = (s + c) % 4;
+            assert_eq!(
+                site.da_max[c].to_bits(),
+                (0.8f32 * (2f32).powi(-(j as i32))).to_bits(),
+                "site {s} channel {c} da_max"
+            );
+            assert_eq!(site.shift[c], 7 + j as i32, "site {s} channel {c} shift");
+            assert_eq!(
+                site.dbu_max[c].to_bits(),
+                (((s * 5 + c) % 7 + 1) as f32 * 0.25).to_bits(),
+                "site {s} channel {c} dbu_max"
+            );
+        }
+    }
+
+    // The fixture serves: finite logits, identical through the backend
+    // and the raw weights (static scan via the embedded table).
+    let img = rand_image(77, cfg.input_len());
+    let mut backend = NativeBackend::from_source(&ModelSource::Artifact(golden_path())).unwrap();
+    let served = backend
+        .infer(&mamba_x::runtime::Tensor::new(cfg.input_shape(), img.clone()).unwrap())
+        .unwrap();
+    assert_eq!(served.len(), 3);
+    assert!(served.iter().all(|v| v.is_finite()));
+    let mut exec = ScanExec::Static(table);
+    let direct = artifact.weights.forward_batch_ex(
+        &SfuTables::fitted(),
+        &MambaXConfig::default(),
+        &[img.as_slice()],
+        &mut exec,
+    );
+    assert_eq!(served, direct[0], "backend and raw-weights forward diverge");
+}

@@ -21,7 +21,7 @@ use mamba_x::coordinator::{
 };
 use mamba_x::quant::CalibTable;
 use mamba_x::runtime::{
-    native::synthetic_image, InferenceBackend, ModelSpec, NativeBackend, Tensor,
+    native::synthetic_image, InferenceBackend, ModelSource, ModelSpec, NativeBackend, Tensor,
 };
 use mamba_x::sim::sfu::SfuTables;
 use mamba_x::util::Pcg;
@@ -75,18 +75,19 @@ fn prop_two_variants_bitwise_equal_direct() {
         let per_client = rng.usize_in(2, 5);
         let image_seed = 100 + case;
 
+        let source = ModelSource::RandomInit { config: cfg.clone(), seed: weight_seed };
         let (engine, join) = EngineBuilder::new()
             .workers(workers)
             .policy(BatchPolicy { max_batch, max_wait_us })
             .queue_depth(64)
             .register(ModelSpec::new(
                 "prop@dynamic",
-                NativeBackend::factory(cfg.clone(), weight_seed, None),
+                NativeBackend::factory(source.clone(), None).unwrap(),
             ))
             .unwrap()
             .register(ModelSpec::new(
                 "prop@calib",
-                NativeBackend::factory(cfg.clone(), weight_seed, Some(Arc::clone(&calib))),
+                NativeBackend::factory(source, Some(Arc::clone(&calib))).unwrap(),
             ))
             .unwrap()
             .build()

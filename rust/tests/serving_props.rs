@@ -141,7 +141,14 @@ fn v0_shim_and_engine_agree_bitwise() {
     let (engine, v1_join) = EngineBuilder::new()
         .workers(2)
         .policy(BatchPolicy { max_batch: 4, max_wait_us: 200 })
-        .register(ModelSpec::new("prop@dynamic", NativeBackend::factory(v1_cfg, seed, None)))
+        .register(ModelSpec::new(
+            "prop@dynamic",
+            NativeBackend::factory(
+                mamba_x::runtime::ModelSource::RandomInit { config: v1_cfg, seed },
+                None,
+            )
+            .unwrap(),
+        ))
         .unwrap()
         .build()
         .unwrap();
