@@ -20,7 +20,15 @@
 //! * **Per-priority shedding** — [`Priority::Low`] traffic is shed once
 //!   the backlog crosses half of `queue_depth`, [`Priority::Normal`] at
 //!   three quarters, [`Priority::High`] only when full; under rising
-//!   load, low priorities go first ([`RejectReason::Shed`]).
+//!   load, low priorities go first ([`RejectReason::Shed`]). Tiering is
+//!   strict at every `queue_depth >= 3` (thresholds clamp one slot
+//!   below the next tier); see [`Priority::shed_threshold`] for the
+//!   documented depth-1/-2 collapse.
+//! * **Per-client quotas** — with a configured `client_quota`, a request
+//!   carrying a client label is refused ([`RejectReason::ClientQuota`])
+//!   while that client already has `client_quota` admitted-but-unanswered
+//!   requests, so one hot client cannot occupy the whole queue
+//!   (unlabeled requests bypass the quota; 0 disables it).
 //! * **SLO projection** — a request with a latency target (its
 //!   `deadline_us`, or the variant's configured `slo_us` default) is
 //!   shed when the projected queue wait — pending items × the observed
@@ -78,12 +86,26 @@ impl Priority {
     /// shed, for a queue bounded at `queue_depth`. Monotone in priority:
     /// `Low <= Normal <= High == queue_depth` for every depth, so a
     /// higher-priority request is admitted whenever a lower one is.
+    ///
+    /// Tiering is *strict* (`Low < Normal < High`) for every
+    /// `queue_depth >= 3`: the nominal half / three-quarter marks are
+    /// clamped one slot below the next tier so "low goes first" holds at
+    /// small depths too. `queue_depth == 2` cannot fit three distinct
+    /// thresholds with a nonzero Low tier, so Low and Normal collapse to
+    /// 1 (< High == 2); `queue_depth == 1` degenerates to the pure
+    /// bounded queue (all thresholds 1).
     pub fn shed_threshold(self, queue_depth: usize) -> usize {
+        let d = queue_depth;
         match self {
-            Priority::High => queue_depth,
-            // d - d/4 == ceil(3d/4) without the overflow of 3*d.
-            Priority::Normal => (queue_depth - queue_depth / 4).max(1),
-            Priority::Low => queue_depth.div_ceil(2).max(1),
+            Priority::High => d,
+            // d - d/4 == ceil(3d/4) without the overflow of 3*d; clamped
+            // strictly below High's threshold whenever d >= 2.
+            Priority::Normal => (d - d / 4).clamp(1, (d - 1).max(1)),
+            Priority::Low => {
+                let normal = Priority::Normal.shed_threshold(d);
+                // ceil(d/2), clamped strictly below Normal when possible.
+                d.div_ceil(2).clamp(1, (normal - 1).max(1))
+            }
         }
     }
 
@@ -117,13 +139,23 @@ pub struct Request {
     /// variant's configured `slo_us` (if any); admission sheds the
     /// request when the projected queue wait already exceeds the target.
     pub deadline_us: Option<u64>,
+    /// Fairness label for per-client quotas. `None` (the default)
+    /// bypasses quota accounting entirely.
+    pub client: Option<String>,
     pub image: Tensor,
 }
 
 impl Request {
-    /// A `Normal`-priority request with no explicit deadline.
+    /// A `Normal`-priority request with no explicit deadline or client.
     pub fn new(model: impl Into<String>, id: u64, image: Tensor) -> Self {
-        Request { model: model.into(), id, priority: Priority::Normal, deadline_us: None, image }
+        Request {
+            model: model.into(),
+            id,
+            priority: Priority::Normal,
+            deadline_us: None,
+            client: None,
+            image,
+        }
     }
 
     pub fn priority(mut self, priority: Priority) -> Self {
@@ -133,6 +165,11 @@ impl Request {
 
     pub fn deadline_us(mut self, deadline_us: u64) -> Self {
         self.deadline_us = Some(deadline_us);
+        self
+    }
+
+    pub fn client(mut self, client: impl Into<String>) -> Self {
+        self.client = Some(client.into());
         self
     }
 }
@@ -158,6 +195,10 @@ pub enum RejectReason {
     Shed,
     /// The request names a variant this engine does not host.
     UnknownModel,
+    /// The request's client label is already at its in-flight quota
+    /// (per-client fairness; only possible with a configured
+    /// `client_quota` and a labeled request).
+    ClientQuota,
 }
 
 impl RejectReason {
@@ -166,6 +207,7 @@ impl RejectReason {
             RejectReason::Full => "full",
             RejectReason::Shed => "shed",
             RejectReason::UnknownModel => "unknown_model",
+            RejectReason::ClientQuota => "client_quota",
         }
     }
 }
@@ -557,6 +599,9 @@ pub struct EngineConfig {
     pub workers: usize,
     pub policy: BatchPolicy,
     pub queue_depth: usize,
+    /// Max admitted-but-unanswered requests per client label
+    /// (0 = quotas disabled).
+    pub client_quota: usize,
     pub models: Vec<ModelVariantConfig>,
 }
 
@@ -566,6 +611,7 @@ impl EngineConfig {
             workers: 4,
             policy: BatchPolicy::default(),
             queue_depth: DEFAULT_QUEUE_DEPTH,
+            client_quota: 0,
             models,
         }
     }
@@ -582,8 +628,16 @@ impl EngineConfig {
     pub fn from_json(j: &Json) -> Result<Self> {
         let obj = j.obj()?;
         for key in obj.keys() {
-            if !["version", "workers", "max_batch", "max_wait_us", "queue_depth", "models"]
-                .contains(&key.as_str())
+            if ![
+                "version",
+                "workers",
+                "max_batch",
+                "max_wait_us",
+                "queue_depth",
+                "client_quota",
+                "models",
+            ]
+            .contains(&key.as_str())
             {
                 bail!("unknown engine config key {key:?}");
             }
@@ -626,18 +680,25 @@ impl EngineConfig {
         if let Some(d) = j.opt("queue_depth") {
             cfg.queue_depth = d.usize()?.max(1);
         }
+        if let Some(q) = j.opt("client_quota") {
+            cfg.client_quota = q.usize()?;
+        }
         Ok(cfg)
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj_from(vec![
+        let mut pairs = vec![
             ("version", Json::Num(ENGINE_CONFIG_VERSION as f64)),
             ("workers", Json::Num(self.workers as f64)),
             ("max_batch", Json::Num(self.policy.max_batch as f64)),
             ("max_wait_us", Json::Num(self.policy.max_wait_us as f64)),
             ("queue_depth", Json::Num(self.queue_depth as f64)),
-            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
-        ])
+        ];
+        if self.client_quota > 0 {
+            pairs.push(("client_quota", Json::Num(self.client_quota as f64)));
+        }
+        pairs.push(("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())));
+        Json::obj_from(pairs)
     }
 }
 
@@ -650,6 +711,9 @@ struct Job {
     image: Tensor,
     reply: mpsc::Sender<std::result::Result<Response, EngineError>>,
     t0: Instant,
+    /// Quota label carried so the client's in-flight count is released
+    /// exactly once, on whichever path delivers the reply.
+    client: Option<String>,
     // No priority/deadline here: admission decides at submit time only,
     // so an accepted request carries no further shed surface.
 }
@@ -658,6 +722,7 @@ struct Job {
 struct ModelStats {
     rejected_full: AtomicU64,
     rejected_shed: AtomicU64,
+    rejected_quota: AtomicU64,
     /// EWMA of observed per-item service time (microseconds; 0 = no
     /// observation yet). Seeded from the variant's `service_hint_us`.
     service_ewma_us: AtomicU64,
@@ -674,10 +739,29 @@ struct EngineState {
     /// One FIFO batcher per registered model, index-aligned with
     /// `EngineShared::models`; a released batch never mixes models.
     queues: Vec<DynamicBatcher<Job>>,
+    /// Admitted-but-unanswered requests per client label (quota
+    /// accounting; entries are removed when they reach zero). Lives
+    /// under the state lock so admission sees an exact count.
+    client_inflight: std::collections::HashMap<String, usize>,
     /// All client handles dropped: drain and stop.
     closed: bool,
     /// Workers still running (including ones still in their factories).
     workers_alive: usize,
+}
+
+impl EngineState {
+    /// Release one in-flight slot for `client`, exactly once per
+    /// answered job (worker reply paths and the worker-exit flush).
+    fn release_client(&mut self, client: &Option<String>) {
+        if let Some(c) = client {
+            if let Some(n) = self.client_inflight.get_mut(c) {
+                *n -= 1;
+                if *n == 0 {
+                    self.client_inflight.remove(c);
+                }
+            }
+        }
+    }
 }
 
 struct EngineShared {
@@ -687,6 +771,8 @@ struct EngineShared {
     policy: BatchPolicy,
     queue_depth: usize,
     workers: usize,
+    /// Per-client in-flight quota (0 = unlimited, no accounting).
+    client_quota: usize,
     models: Vec<ModelEntry>,
     /// Live `Engine` handle clones; the last drop closes the queues.
     handles: AtomicUsize,
@@ -750,7 +836,7 @@ impl Engine {
     /// model is unknown, the engine is shutting down, or admission
     /// refuses ([`RejectReason`]).
     pub fn submit(&self, req: Request) -> std::result::Result<EngineWaiter, EngineError> {
-        let Request { model, id, priority, deadline_us, image } = req;
+        let Request { model, id, priority, deadline_us, client, image } = req;
         let Some(midx) = self.shared.models.iter().position(|m| m.name == model) else {
             self.shared.rejected_unknown.fetch_add(1, Ordering::Relaxed);
             let hosted =
@@ -767,6 +853,25 @@ impl Engine {
         let mut st = self.shared.state.lock().unwrap();
         if st.closed || st.workers_alive == 0 {
             return Err(EngineError::ShuttingDown);
+        }
+        // Per-client quota, checked before the shared-backlog policy so a
+        // hot client is told "you, specifically" rather than "we're full".
+        if self.shared.client_quota > 0 {
+            if let Some(c) = &client {
+                let inflight = st.client_inflight.get(c).copied().unwrap_or(0);
+                if inflight >= self.shared.client_quota {
+                    drop(st);
+                    entry.stats.rejected_quota.fetch_add(1, Ordering::Relaxed);
+                    return Err(EngineError::Rejected {
+                        model,
+                        reason: RejectReason::ClientQuota,
+                        detail: format!(
+                            "client {c:?} at in-flight quota {} ({inflight} unanswered)",
+                            self.shared.client_quota
+                        ),
+                    });
+                }
+            }
         }
         let pending: usize = st.queues.iter().map(|q| q.len()).sum();
         let projected = self.shared.projected_wait_us(&st);
@@ -788,7 +893,12 @@ impl Engine {
             counter.fetch_add(1, Ordering::Relaxed);
             return Err(EngineError::Rejected { model, reason: deny.reason(), detail });
         }
-        st.queues[midx].push(Job { id, image, reply, t0: Instant::now() }, now);
+        if self.shared.client_quota > 0 {
+            if let Some(c) = &client {
+                *st.client_inflight.entry(c.clone()).or_insert(0) += 1;
+            }
+        }
+        st.queues[midx].push(Job { id, image, reply, t0: Instant::now(), client }, now);
         drop(st);
         self.shared.work_cv.notify_one();
         Ok(EngineWaiter { rx })
@@ -807,6 +917,7 @@ pub struct EngineBuilder {
     workers: usize,
     policy: BatchPolicy,
     queue_depth: usize,
+    client_quota: usize,
 }
 
 impl Default for EngineBuilder {
@@ -816,6 +927,7 @@ impl Default for EngineBuilder {
             workers: 1,
             policy: BatchPolicy::default(),
             queue_depth: DEFAULT_QUEUE_DEPTH,
+            client_quota: 0,
         }
     }
 }
@@ -831,7 +943,8 @@ impl EngineBuilder {
         let mut b = EngineBuilder::new()
             .workers(cfg.workers)
             .policy(cfg.policy)
-            .queue_depth(cfg.queue_depth);
+            .queue_depth(cfg.queue_depth)
+            .client_quota(cfg.client_quota);
         for variant in &cfg.models {
             b = b.register(variant.to_spec()?)?;
         }
@@ -853,6 +966,12 @@ impl EngineBuilder {
 
     pub fn queue_depth(mut self, depth: usize) -> Self {
         self.queue_depth = depth.max(1);
+        self
+    }
+
+    /// Per-client in-flight quota (0, the default, disables quotas).
+    pub fn client_quota(mut self, quota: usize) -> Self {
+        self.client_quota = quota;
         self
     }
 
@@ -880,6 +999,7 @@ impl EngineBuilder {
                 stats: ModelStats {
                     rejected_full: AtomicU64::new(0),
                     rejected_shed: AtomicU64::new(0),
+                    rejected_quota: AtomicU64::new(0),
                     service_ewma_us: AtomicU64::new(s.service_hint_us),
                 },
             })
@@ -888,6 +1008,7 @@ impl EngineBuilder {
         let shared = Arc::new(EngineShared {
             state: Mutex::new(EngineState {
                 queues: (0..n_models).map(|_| DynamicBatcher::new(self.policy)).collect(),
+                client_inflight: std::collections::HashMap::new(),
                 closed: false,
                 workers_alive: self.workers,
             }),
@@ -896,6 +1017,7 @@ impl EngineBuilder {
             policy: self.policy,
             queue_depth: self.queue_depth,
             workers: self.workers,
+            client_quota: self.client_quota,
             models,
             handles: AtomicUsize::new(1),
             rejected_unknown: AtomicU64::new(0),
@@ -1035,6 +1157,7 @@ impl EngineJoin {
             .map(|(entry, mut metrics)| {
                 metrics.rejected_full += entry.stats.rejected_full.load(Ordering::Relaxed);
                 metrics.rejected_shed += entry.stats.rejected_shed.load(Ordering::Relaxed);
+                metrics.rejected_quota += entry.stats.rejected_quota.load(Ordering::Relaxed);
                 ModelReport { name: entry.name.clone(), metrics }
             })
             .collect();
@@ -1061,8 +1184,9 @@ impl Drop for WorkerExit<'_> {
         let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
         st.workers_alive -= 1;
         if st.workers_alive == 0 {
-            for q in st.queues.iter_mut() {
-                for job in q.flush() {
+            for qi in 0..st.queues.len() {
+                for job in st.queues[qi].flush() {
+                    st.release_client(&job.client);
                     let _ = job.reply.send(Err(self.error.clone()));
                 }
             }
@@ -1180,6 +1304,15 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
                 })
             },
         );
+        // Release quota slots BEFORE delivering replies, so a client that
+        // has seen its response can immediately submit again without a
+        // spurious ClientQuota refusal.
+        if shared.client_quota > 0 {
+            let mut guard = shared.state.lock().unwrap();
+            for job in &batch {
+                guard.release_client(&job.client);
+            }
+        }
         if results.len() == batch.len() {
             let name = &shared.models[m].name;
             for (job, result) in batch.drain(..).zip(results) {
@@ -1248,6 +1381,37 @@ mod tests {
         }
         assert_eq!(Priority::Low.shed_threshold(8), 4);
         assert_eq!(Priority::Normal.shed_threshold(8), 6);
+    }
+
+    // Regression (ISSUE 6): at depths 2 and 3, Normal's threshold used to
+    // equal High's (and Low's used to equal Normal's at depth 2), so the
+    // "low goes first" ordering silently vanished on tiny queues.
+    #[test]
+    fn priority_thresholds_strict_at_small_depths() {
+        // Strict tiering everywhere it can exist.
+        for depth in 3..=64usize {
+            let low = Priority::Low.shed_threshold(depth);
+            let normal = Priority::Normal.shed_threshold(depth);
+            let high = Priority::High.shed_threshold(depth);
+            assert!(low < normal && normal < high, "depth {depth}: {low} {normal} {high}");
+        }
+        // Pinned small-depth values (pre-fix: depth 3 was (2, 3, 3) and
+        // depth 2 was (1, 2, 2)).
+        assert_eq!(Priority::Normal.shed_threshold(3), 2);
+        assert_eq!(Priority::Low.shed_threshold(3), 1);
+        assert_eq!(Priority::Normal.shed_threshold(2), 1);
+        // Documented collapses: depth 2 cannot fit three distinct
+        // nonzero tiers; depth 1 is the pure bounded queue.
+        assert_eq!(
+            (Priority::Low.shed_threshold(2), Priority::High.shed_threshold(2)),
+            (1, 2)
+        );
+        for p in Priority::ALL {
+            assert_eq!(p.shed_threshold(1), 1);
+        }
+        // Large depths keep the nominal half / three-quarter marks.
+        assert_eq!(Priority::Low.shed_threshold(1024), 512);
+        assert_eq!(Priority::Normal.shed_threshold(1024), 768);
     }
 
     #[test]
@@ -1332,6 +1496,107 @@ mod tests {
         assert_eq!(report.completed(), 20);
         assert_eq!(report.merged().count(), 20);
         assert!(report.summary().contains("rejected_unknown_model=1"));
+    }
+
+    // Deterministic quota behavior: with a huge batching window nothing
+    // executes, so admitted requests stay unanswered and the per-client
+    // in-flight count is exact.
+    #[test]
+    fn client_quota_caps_inflight_per_client() {
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 64, max_wait_us: 10_000_000 })
+            .queue_depth(16)
+            .client_quota(1)
+            .register(ModelSpec::new("m", scale_factory(1.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let img = || Tensor::new(vec![1], vec![1.0]).unwrap();
+        let w1 = engine.submit(Request::new("m", 1, img()).client("a")).unwrap();
+        // Same client, quota held -> typed ClientQuota with evidence.
+        let err = engine.submit(Request::new("m", 2, img()).client("a")).unwrap_err();
+        assert_eq!(err.reject_reason(), Some(RejectReason::ClientQuota));
+        assert!(err.to_string().contains("client_quota"), "{err}");
+        assert!(err.to_string().contains("\"a\""), "{err}");
+        // A different client — and an unlabeled request — still get in.
+        let w3 = engine.submit(Request::new("m", 3, img()).client("b")).unwrap();
+        let w4 = engine.submit(Request::new("m", 4, img())).unwrap();
+        // Shutdown drain answers every admitted request.
+        drop(engine);
+        assert_eq!(w1.wait().unwrap().id, 1);
+        assert_eq!(w3.wait().unwrap().id, 3);
+        assert_eq!(w4.wait().unwrap().id, 4);
+        let report = join.join().unwrap();
+        let m = &report.model("m").unwrap().metrics;
+        assert_eq!(m.count(), 3);
+        assert_eq!(m.rejected_quota, 1);
+        assert_eq!(m.rejected(), 1);
+        let j = report.to_json();
+        let models = j.get("models").unwrap().arr().unwrap();
+        assert_eq!(models[0].get("rejected_quota").unwrap().usize().unwrap(), 1);
+    }
+
+    // The quota slot is released when the reply is delivered: a client
+    // running a closed loop at quota 1 never sees a refusal.
+    #[test]
+    fn client_quota_releases_on_completion() {
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .client_quota(1)
+            .register(ModelSpec::new("m", scale_factory(1.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        for id in 0..5u64 {
+            let img = Tensor::new(vec![1], vec![2.0]).unwrap();
+            let resp = engine.infer(Request::new("m", id, img).client("loop")).unwrap();
+            assert_eq!(resp.id, id);
+        }
+        drop(engine);
+        let report = join.join().unwrap();
+        let m = &report.model("m").unwrap().metrics;
+        assert_eq!((m.count(), m.rejected_quota), (5, 0));
+    }
+
+    #[test]
+    fn client_quota_zero_disables_accounting() {
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 64, max_wait_us: 10_000_000 })
+            .register(ModelSpec::new("m", scale_factory(1.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let waiters: Vec<_> = (0..4u64)
+            .map(|id| {
+                let img = Tensor::new(vec![1], vec![1.0]).unwrap();
+                engine.submit(Request::new("m", id, img).client("hot")).unwrap()
+            })
+            .collect();
+        drop(engine);
+        for w in waiters {
+            assert!(w.wait().is_ok());
+        }
+        let report = join.join().unwrap();
+        assert_eq!(report.model("m").unwrap().metrics.rejected_quota, 0);
+    }
+
+    #[test]
+    fn engine_config_client_quota_round_trip() {
+        let text = r#"{"client_quota": 3,
+            "models": [{"name": "x", "arch": "micro", "seed": 1}]}"#;
+        let cfg = EngineConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.client_quota, 3);
+        let round = EngineConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(cfg, round);
+        // Default (0) is omitted from the serialized form and round-trips.
+        let cfg0 = EngineConfig::new(vec![ModelVariantConfig::random("x", "micro", 1)]);
+        assert!(cfg0.to_json().opt("client_quota").is_none());
+        let round0 =
+            EngineConfig::from_json(&Json::parse(&cfg0.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(round0.client_quota, 0);
     }
 
     #[test]

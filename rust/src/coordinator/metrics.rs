@@ -17,12 +17,16 @@ pub struct Metrics {
     /// Requests shed at admission by priority or SLO-projection policy
     /// ([`crate::coordinator::RejectReason::Shed`]).
     pub rejected_shed: u64,
+    /// Requests refused at admission because the client already held its
+    /// full per-client in-flight quota
+    /// ([`crate::coordinator::RejectReason::ClientQuota`]).
+    pub rejected_quota: u64,
 }
 
 impl Metrics {
     /// Total requests refused at admission, any reason.
     pub fn rejected(&self) -> u64 {
-        self.rejected_full + self.rejected_shed
+        self.rejected_full + self.rejected_shed + self.rejected_quota
     }
 
     /// Fold another worker's metrics into this one (pool shutdown path).
@@ -39,6 +43,7 @@ impl Metrics {
         self.last_us = self.last_us.max(other.last_us);
         self.rejected_full += other.rejected_full;
         self.rejected_shed += other.rejected_shed;
+        self.rejected_quota += other.rejected_quota;
     }
     pub fn record_request(&mut self, latency_us: u64, completed_at_us: u64) {
         self.latencies_us.push(latency_us);
@@ -57,15 +62,20 @@ impl Metrics {
         self.latencies_us.len()
     }
 
+    /// Sort the samples once and answer any number of percentile queries
+    /// against the sorted snapshot. `to_json`/`summary` route through
+    /// this, so one report costs one sort instead of one per statistic.
+    pub fn latency_snapshot(&self) -> LatencySnapshot {
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        LatencySnapshot { sorted }
+    }
+
+    /// Convenience single-query percentile; identical result to
+    /// [`LatencySnapshot::percentile_us`] (one sort per call — prefer a
+    /// snapshot when asking for several percentiles).
     pub fn percentile_us(&self, p: f64) -> u64 {
-        if self.latencies_us.is_empty() {
-            return 0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        // Nearest-rank: smallest value with at least p% of samples <= it.
-        let idx = ((p / 100.0) * v.len() as f64).ceil() as usize;
-        v[idx.saturating_sub(1).min(v.len() - 1)]
+        self.latency_snapshot().percentile_us(p)
     }
 
     pub fn mean_us(&self) -> f64 {
@@ -83,13 +93,20 @@ impl Metrics {
     }
 
     /// Requests per second over the observed completion window.
+    ///
+    /// Count-based semantic: `completed / window_seconds`, where the
+    /// window spans first to last completion stamp and is floored at
+    /// 1 µs (the stamp resolution), so a single completion — or N
+    /// completions landing on the same microsecond — reports a finite,
+    /// non-zero rate instead of 0.0. Returns 0.0 only when no request
+    /// completed.
     pub fn throughput_rps(&self) -> f64 {
         match self.first_us {
-            Some(first) if self.last_us > first => {
-                (self.count() as f64 - 1.0).max(1.0)
-                    / ((self.last_us - first) as f64 / 1e6)
+            Some(first) => {
+                let window_us = self.last_us.saturating_sub(first).max(1);
+                self.count() as f64 / (window_us as f64 / 1e6)
             }
-            _ => 0.0,
+            None => 0.0,
         }
     }
 
@@ -97,14 +114,16 @@ impl Metrics {
     /// the engine's `--report-json` artifact (same spirit as
     /// `BENCH_hotpath.json`: exact counters, derived stats precomputed).
     pub fn to_json(&self) -> Json {
+        let snap = self.latency_snapshot();
         Json::obj_from(vec![
             ("completed", Json::Num(self.count() as f64)),
             ("rejected_full", Json::Num(self.rejected_full as f64)),
             ("rejected_shed", Json::Num(self.rejected_shed as f64)),
+            ("rejected_quota", Json::Num(self.rejected_quota as f64)),
             ("mean_us", Json::Num(self.mean_us())),
-            ("p50_us", Json::Num(self.percentile_us(50.0) as f64)),
-            ("p95_us", Json::Num(self.percentile_us(95.0) as f64)),
-            ("p99_us", Json::Num(self.percentile_us(99.0) as f64)),
+            ("p50_us", Json::Num(snap.percentile_us(50.0) as f64)),
+            ("p95_us", Json::Num(snap.percentile_us(95.0) as f64)),
+            ("p99_us", Json::Num(snap.percentile_us(99.0) as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("batch_items", Json::Num(self.batch_items as f64)),
             ("mean_batch", Json::Num(self.mean_batch_size())),
@@ -113,20 +132,67 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        let snap = self.latency_snapshot();
         format!(
-            "n={} rejected={} (full {}, shed {}) mean={:.1}ms p50={:.1}ms p95={:.1}ms \
-             p99={:.1}ms batch_avg={:.2} throughput={:.1} req/s",
+            "n={} rejected={} (full {}, shed {}, quota {}) mean={:.1}ms p50={:.1}ms \
+             p95={:.1}ms p99={:.1}ms batch_avg={:.2} throughput={:.1} req/s",
             self.count(),
             self.rejected(),
             self.rejected_full,
             self.rejected_shed,
+            self.rejected_quota,
             self.mean_us() / 1e3,
-            self.percentile_us(50.0) as f64 / 1e3,
-            self.percentile_us(95.0) as f64 / 1e3,
-            self.percentile_us(99.0) as f64 / 1e3,
+            snap.percentile_us(50.0) as f64 / 1e3,
+            snap.percentile_us(95.0) as f64 / 1e3,
+            snap.percentile_us(99.0) as f64 / 1e3,
             self.mean_batch_size(),
             self.throughput_rps(),
         )
+    }
+}
+
+/// Sorted view over a [`Metrics`] sample set: sort once, query many.
+#[derive(Debug, Clone)]
+pub struct LatencySnapshot {
+    sorted: Vec<u64>,
+}
+
+impl LatencySnapshot {
+    /// Build a snapshot from raw samples (one sort), so external
+    /// recorders — e.g. the loadgen's client-side latencies — reuse the
+    /// same percentile math the serving metrics report with.
+    pub fn from_samples(mut samples: Vec<u64>) -> Self {
+        samples.sort_unstable();
+        LatencySnapshot { sorted: samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Nearest-rank percentile: the smallest sample with at least p% of
+    /// samples <= it. Empty snapshot reports 0.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.sorted.is_empty() {
+            return 0;
+        }
+        let idx = ((p / 100.0) * self.sorted.len() as f64).ceil() as usize;
+        self.sorted[idx.saturating_sub(1).min(self.sorted.len() - 1)]
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.sorted.last().copied().unwrap_or(0)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        self.sorted.iter().sum::<u64>() as f64 / self.sorted.len() as f64
     }
 }
 
@@ -201,6 +267,82 @@ mod tests {
         assert_eq!(j.get("mean_batch").unwrap().num().unwrap(), 4.0);
         // Round-trips through the writer.
         assert!(Json::parse(&j.dump()).is_ok());
+    }
+
+    // Regression (ISSUE 6): a single completion used to report 0.0 rps
+    // because the window collapsed to zero width.
+    #[test]
+    fn throughput_single_completion_is_nonzero() {
+        let mut m = Metrics::default();
+        m.record_request(500, 1234);
+        // Window floored at 1 µs -> 1 req / 1e-6 s.
+        assert_eq!(m.throughput_rps(), 1e6);
+    }
+
+    // Regression (ISSUE 6): N completions stamped on the same microsecond
+    // used to report 0.0 rps.
+    #[test]
+    fn throughput_same_microsecond_window() {
+        let mut m = Metrics::default();
+        for _ in 0..5 {
+            m.record_request(100, 777);
+        }
+        assert_eq!(m.throughput_rps(), 5e6);
+    }
+
+    // Regression (ISSUE 6): the old `(n-1).max(1)` hybrid reported
+    // 2 completions over 1 s as 1.0 rps. Count-based semantic: 2.0.
+    #[test]
+    fn throughput_is_count_based() {
+        let mut m = Metrics::default();
+        m.record_request(10, 0);
+        m.record_request(10, 1_000_000);
+        assert_eq!(m.throughput_rps(), 2.0);
+        // 10 completions over 2 s -> 5.0 rps, not 4.5.
+        let mut m = Metrics::default();
+        for i in 0..10u64 {
+            m.record_request(10, i * 222_222); // last at 1_999_998 ~ 2 s
+        }
+        let rps = m.throughput_rps();
+        assert!((rps - 10.0 / 1.999_998).abs() < 1e-9, "rps {rps}");
+    }
+
+    // Regression (ISSUE 6): snapshot-derived percentiles must be bitwise
+    // equal to per-call percentiles for every p the reports use.
+    #[test]
+    fn snapshot_matches_per_call_percentiles() {
+        let mut m = Metrics::default();
+        let mut r = crate::util::Pcg::new(99);
+        for _ in 0..257 {
+            m.record_request(r.below(1_000_000), 1);
+        }
+        let snap = m.latency_snapshot();
+        for p in [0.0, 1.0, 50.0, 90.0, 95.0, 99.0, 99.9, 100.0] {
+            assert_eq!(snap.percentile_us(p), m.percentile_us(p), "p{p}");
+        }
+        assert_eq!(snap.mean_us().to_bits(), m.mean_us().to_bits());
+        assert_eq!(snap.len(), m.count());
+        // And the JSON report is built from one snapshot with identical
+        // values to per-call queries.
+        let j = m.to_json();
+        assert_eq!(
+            j.get("p99_us").unwrap().num().unwrap(),
+            m.percentile_us(99.0) as f64
+        );
+    }
+
+    #[test]
+    fn quota_counter_in_totals_and_json() {
+        let mut a = Metrics::default();
+        a.rejected_quota = 4;
+        let mut b = Metrics::default();
+        b.rejected_quota = 2;
+        b.rejected_full = 1;
+        a.merge(&b);
+        assert_eq!(a.rejected_quota, 6);
+        assert_eq!(a.rejected(), 7);
+        assert_eq!(a.to_json().get("rejected_quota").unwrap().usize().unwrap(), 6);
+        assert!(a.summary().contains("quota 6"));
     }
 
     #[test]

@@ -12,7 +12,8 @@
 //!   construct the pool declaratively, [`Request`] / [`Response`] /
 //!   [`EngineError`] type the client path end to end, and admission is
 //!   latency-target-aware (bounded queue, per-priority shedding, SLO
-//!   projection from observed service times);
+//!   projection from observed service times, per-client in-flight
+//!   quotas);
 //! * [`batcher`] — pure batching policy (max batch / max wait), FIFO per
 //!   model queue, property-tested invariants (`rust/tests/sim_props.rs`);
 //! * [`server`] — the v0 single-model `ServerHandle` surface, kept as a
@@ -33,7 +34,7 @@ pub use engine::{
     ModelVariantConfig, Priority, RejectReason, Request, Response, DEFAULT_QUEUE_DEPTH,
     ENGINE_CONFIG_VERSION, ENGINE_REPORT_FORMAT, ENGINE_REPORT_VERSION,
 };
-pub use metrics::Metrics;
+pub use metrics::{LatencySnapshot, Metrics};
 pub use server::{
     InferenceRequest, InferenceResponse, PoolJoin, ResponseWaiter, Server, ServerHandle,
 };

@@ -60,6 +60,7 @@ impl ServerHandle {
             id: req.id,
             priority: Priority::High,
             deadline_us: None,
+            client: None,
             image: req.image,
         };
         match self.engine.submit(typed) {

@@ -33,8 +33,13 @@
 //!   [`coordinator::Response`] / [`coordinator::EngineError`]) over
 //!   per-model dynamic batchers and an N-worker backend pool, with
 //!   latency-target-aware admission control (bounded queue, per-priority
-//!   shedding, SLO projection) and per-model merged metrics; the v0
-//!   [`coordinator::ServerHandle`] remains as a shim.
+//!   shedding, SLO projection, per-client quotas) and per-model merged
+//!   metrics; the v0 [`coordinator::ServerHandle`] remains as a shim;
+//! * [`net`] — the HTTP serving front-end over the engine
+//!   ([`net::BoundServer`]): hermetic `std::net` + hand-rolled
+//!   HTTP/1.1 Content-Length framing ([`net::http`]), typed
+//!   engine-error -> status mapping, graceful drain, plus the seeded
+//!   [`net::loadgen`] harness emitting `BENCH_serving.json`.
 //!
 //! The default build is fully hermetic: no Python, no XLA, no artifacts —
 //! `cargo build --release && cargo test -q` on a fresh checkout exercises
@@ -45,6 +50,7 @@ pub mod config;
 pub mod coordinator;
 pub mod energy;
 pub mod gpu;
+pub mod net;
 pub mod quant;
 pub mod runtime;
 pub mod sim;

@@ -57,7 +57,8 @@ COMMANDS:
   serve    [--engine engine.json] [--backend native|pjrt] [--workers 4]
            [--requests 64] [--max-batch 8] [--queue-depth 1024] [--seed 7]
            [--calib table.json] [--artifacts artifacts]
-           [--report-json report.json]
+           [--report-json report.json] [--listen host:port]
+           [--conn-workers 8] [--conn-backlog 64] [--client-quota N]
                                   serve inference E2E through the engine.
                                   `--report-json` writes the final
                                   EngineReport (per-model metrics incl.
@@ -77,7 +78,30 @@ COMMANDS:
                                   artifacts (requires the `pjrt` cargo
                                   feature + a real xla crate; single
                                   worker, and native-only flags like
-                                  --workers/--seed/--calib are rejected)
+                                  --workers/--seed/--calib are rejected).
+                                  `--listen` serves over HTTP instead of
+                                  the in-process synthetic demo streams
+                                  (README.md §Network serving): POST
+                                  /v1/infer, GET /healthz, POST
+                                  /admin/shutdown; graceful drain on
+                                  shutdown; `--client-quota` caps each
+                                  labeled client's in-flight requests
+  loadgen  --url host:port [--requests 64] [--clients 4]
+           [--mode closed|open] [--rate 100] [--dist uniform|bursty]
+           [--seed 0] [--priorities high=1,normal=2,low=1]
+           [--deadline-us N] [--model name] [--out BENCH_serving.json]
+           [--shutdown true|false]
+                                  seeded load harness against a live
+                                  `serve --listen` endpoint: closed-loop
+                                  (one in-flight request per client) or
+                                  open-loop (seeded uniform/bursty
+                                  arrival schedule at --rate req/s),
+                                  weighted priority mix, optional
+                                  deadlines. Writes a BENCH_serving.json
+                                  artifact (p50/p95/p99, goodput,
+                                  per-priority shed rates) that
+                                  `perfcheck` gates; `--shutdown true`
+                                  drains the server afterwards
   perfcheck [--current BENCH_hotpath.json] [--baseline BENCH_baseline.json]
             [--tolerance 0.5]     CI perf-regression gate: compare the
                                   bench record's speedup pairs against
@@ -211,9 +235,33 @@ fn main() -> Result<()> {
                     "calib",
                     "artifacts",
                     "report-json",
+                    "listen",
+                    "conn-workers",
+                    "conn-backlog",
+                    "client-quota",
                 ],
             )?;
             cmd_serve(&flags)
+        }
+        "loadgen" => {
+            flags.expect_keys(
+                "loadgen",
+                &[
+                    "url",
+                    "requests",
+                    "clients",
+                    "mode",
+                    "rate",
+                    "dist",
+                    "seed",
+                    "priorities",
+                    "deadline-us",
+                    "model",
+                    "out",
+                    "shutdown",
+                ],
+            )?;
+            cmd_loadgen(&flags)
         }
         "perfcheck" => {
             flags.expect_keys("perfcheck", &["current", "baseline", "tolerance"])?;
@@ -792,16 +840,45 @@ fn cmd_models(engine: Option<&str>) -> Result<()> {
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let requests = flags.usize("requests", 64)?;
     let report_json = flags.get("report-json").map(str::to_string);
+    let listen = flags.get("listen").map(str::to_string);
+    if listen.is_none() {
+        for k in ["conn-workers", "conn-backlog", "client-quota"] {
+            if flags.get(k).is_some() {
+                bail!("--{k} applies to socket serving only (add --listen host:port)");
+            }
+        }
+    } else if flags.get("requests").is_some() {
+        bail!(
+            "--requests conflicts with --listen (remote clients drive the \
+             workload; see `mamba-x loadgen`)"
+        );
+    }
+    let conn_workers = flags.usize("conn-workers", 8)?;
+    let conn_backlog = flags.usize("conn-backlog", 64)?;
     if let Some(engine_path) = flags.get("engine") {
         // The config file owns the pool geometry and the model list;
         // per-variant flags alongside it would silently fight it.
-        for k in ["backend", "workers", "max-batch", "queue-depth", "seed", "calib", "artifacts"] {
+        for k in [
+            "backend",
+            "workers",
+            "max-batch",
+            "queue-depth",
+            "seed",
+            "calib",
+            "artifacts",
+            "client-quota",
+        ] {
             if flags.get(k).is_some() {
                 bail!("--{k} conflicts with --engine (the config file decides it)");
             }
         }
         let cfg = mamba_x::coordinator::EngineConfig::load(engine_path)?;
-        return run_engine(cfg, requests, report_json.as_deref());
+        return match listen {
+            Some(addr) => {
+                serve_listen(cfg, &addr, conn_workers, conn_backlog, report_json.as_deref())
+            }
+            None => run_engine(cfg, requests, report_json.as_deref()),
+        };
     }
     let backend = flags.string("backend", "native");
     let workers = flags.usize("workers", 4)?;
@@ -814,19 +891,27 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             if flags.get("artifacts").is_some() {
                 bail!("--artifacts applies to the pjrt backend only");
             }
-            serve_native(
+            let cfg = native_engine_config(
                 workers,
-                requests,
                 max_batch,
                 queue_depth,
                 seed,
                 calib,
-                report_json.as_deref(),
-            )
+                flags.usize("client-quota", 0)?,
+            );
+            match listen {
+                Some(addr) => {
+                    serve_listen(cfg, &addr, conn_workers, conn_backlog, report_json.as_deref())
+                }
+                None => run_engine(cfg, requests, report_json.as_deref()),
+            }
         }
         "pjrt" => {
             // Flags the pjrt path cannot honor are errors, not silently
             // dropped defaults (pjrt runs 1 worker over AOT artifacts).
+            if listen.is_some() {
+                bail!("--listen supports the native backend only");
+            }
             for k in ["workers", "queue-depth", "seed", "calib", "report-json"] {
                 if flags.get(k).is_some() {
                     bail!("--{k} applies to the native backend only");
@@ -838,20 +923,18 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
 }
 
-/// Hermetic single-variant serving: desugars the legacy flags into a
-/// one-model [`mamba_x::coordinator::EngineConfig`] (a v2 random-init
-/// source) and runs the same engine driver as `serve --engine`, so the
-/// flag path and the config path exercise identical machinery.
-#[allow(clippy::too_many_arguments)]
-fn serve_native(
+/// Desugar the legacy single-variant flags into a one-model
+/// [`mamba_x::coordinator::EngineConfig`] (a v2 random-init source), so
+/// the flag path and the `--engine` config path exercise identical
+/// machinery.
+fn native_engine_config(
     workers: usize,
-    requests: usize,
     max_batch: usize,
     queue_depth: usize,
     seed: u64,
     calib: Option<String>,
-    report_json: Option<&str>,
-) -> Result<()> {
+    client_quota: usize,
+) -> mamba_x::coordinator::EngineConfig {
     use mamba_x::coordinator::{BatchPolicy, EngineConfig, ModelVariantConfig};
 
     let name = if calib.is_some() { "vim-micro@calib" } else { "vim-micro@dynamic" };
@@ -861,7 +944,157 @@ fn serve_native(
     cfg.workers = workers.max(1);
     cfg.policy = BatchPolicy { max_batch: max_batch.max(1), max_wait_us: 2000 };
     cfg.queue_depth = queue_depth.max(1);
-    run_engine(cfg, requests, report_json)
+    cfg.client_quota = client_quota;
+    cfg
+}
+
+/// Socket serving: put the engine behind the HTTP front-end and block
+/// until a graceful drain (`POST /admin/shutdown`) completes, then merge
+/// the front-end counters into the engine report under a `"net"` key.
+fn serve_listen(
+    cfg: mamba_x::coordinator::EngineConfig,
+    addr: &str,
+    conn_workers: usize,
+    conn_backlog: usize,
+    report_json: Option<&str>,
+) -> Result<()> {
+    use mamba_x::coordinator::EngineBuilder;
+    use mamba_x::net::{BoundServer, ModelMeta, NetConfig};
+    use mamba_x::util::Json;
+
+    println!(
+        "engine: {} workers, max_batch {}, max_wait {}us, queue depth {}, client quota {}",
+        cfg.workers,
+        cfg.policy.max_batch,
+        cfg.policy.max_wait_us,
+        cfg.queue_depth,
+        if cfg.client_quota == 0 { "off".to_string() } else { cfg.client_quota.to_string() },
+    );
+    let metas: Vec<ModelMeta> = cfg
+        .models
+        .iter()
+        .map(|v| {
+            let fcfg = v.forward_config()?;
+            println!("  hosting {:?}: source {}", v.name, v.source.describe());
+            Ok(ModelMeta { name: v.name.clone(), input_shape: fcfg.input_shape() })
+        })
+        .collect::<Result<_>>()?;
+    let (engine, join) = EngineBuilder::from_config(&cfg)?.build()?;
+
+    let mut ncfg = NetConfig::new(addr);
+    ncfg.conn_workers = conn_workers.max(1);
+    ncfg.conn_backlog = conn_backlog.max(1);
+    let bound = BoundServer::bind(ncfg)?;
+    println!("listening on http://{}", bound.local_addr()?);
+    println!("endpoints: POST /v1/infer, GET /healthz, POST /admin/shutdown");
+    let net = bound.serve(engine, metas)?;
+    // `serve` consumed the last engine clone besides ours-in-join; the
+    // pool drains and the report merges every worker's metrics.
+    let report = join.join()?;
+    println!("drained; final engine report:");
+    println!("{}", report.summary());
+    println!(
+        "net: {} conns, {} ok, {} bad_request, {} not_found, 429 full/shed/quota {}/{}/{}, \
+         {} unknown_model, {} shutting_down, {} backend_error, {} busy",
+        net.conns,
+        net.ok,
+        net.bad_request,
+        net.not_found,
+        net.rejected_full,
+        net.rejected_shed,
+        net.rejected_quota,
+        net.unknown_model,
+        net.shutting_down,
+        net.backend_error,
+        net.conn_busy,
+    );
+    if let Some(path) = report_json {
+        let mut json = match report.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!("EngineReport::to_json returns an object"),
+        };
+        json.insert("net".to_string(), net.to_json());
+        mamba_x::util::write_creating_dirs(path, Json::Obj(json).dump().as_bytes())?;
+        let abs = std::fs::canonicalize(path).unwrap_or_else(|_| path.into());
+        println!("wrote engine report to {}", abs.display());
+    }
+    Ok(())
+}
+
+/// `mamba-x loadgen`: drive a live `serve --listen` endpoint and write
+/// the `BENCH_serving.json` artifact.
+fn cmd_loadgen(flags: &Flags) -> Result<()> {
+    use mamba_x::net::loadgen::{self, ArrivalMode, Dist, LoadgenConfig};
+
+    let url = flags
+        .get("url")
+        .ok_or_else(|| anyhow::anyhow!("--url host:port is required (a live `serve --listen`)"))?;
+    let mut cfg = LoadgenConfig::new(url);
+    cfg.requests = flags.usize("requests", 64)?;
+    cfg.clients = flags.usize("clients", 4)?;
+    cfg.seed = flags.usize("seed", 0)? as u64;
+    cfg.mode = match flags.string("mode", "closed").as_str() {
+        "closed" => {
+            for k in ["rate", "dist"] {
+                if flags.get(k).is_some() {
+                    bail!("--{k} applies to --mode open");
+                }
+            }
+            ArrivalMode::Closed
+        }
+        "open" => ArrivalMode::Open {
+            rate_rps: flags.f64("rate", 100.0)?,
+            dist: Dist::parse(&flags.string("dist", "uniform"))?,
+        },
+        other => bail!("unknown --mode {other:?}; valid modes: closed, open"),
+    };
+    if let Some(mix) = flags.get("priorities") {
+        cfg.priorities = loadgen::parse_priority_mix(mix)?;
+    }
+    if let Some(d) = flags.get("deadline-us") {
+        cfg.deadline_us = Some(d.parse()?);
+    }
+    cfg.model = flags.get("model").map(str::to_string);
+    cfg.shutdown = match flags.string("shutdown", "false").as_str() {
+        "true" => true,
+        "false" => false,
+        other => bail!("--shutdown takes true or false, got {other:?}"),
+    };
+    let out = flags.string("out", "BENCH_serving.json");
+
+    let artifact = loadgen::run(&cfg)?;
+    let n = |key: &str| artifact.get(key).and_then(|v| v.usize()).unwrap_or(0);
+    println!(
+        "loadgen: {} sent, {} completed, goodput {:.1} req/s over {:.2}s",
+        n("sent"),
+        n("completed"),
+        artifact.get("goodput_rps").and_then(|v| v.num()).unwrap_or(0.0),
+        artifact.get("wall_s").and_then(|v| v.num()).unwrap_or(0.0),
+    );
+    let lat = artifact.get("latency_us")?;
+    println!(
+        "latency_us: p50 {} p95 {} p99 {} max {}",
+        lat.get("p50")?.usize()?,
+        lat.get("p95")?.usize()?,
+        lat.get("p99")?.usize()?,
+        lat.get("max")?.usize()?,
+    );
+    println!(
+        "refusals: full {} shed {} quota {} unknown_model {} bad_request {} \
+         shutting_down {} backend_error {} transport {}",
+        n("rejected_full"),
+        n("rejected_shed"),
+        n("rejected_quota"),
+        n("unknown_model"),
+        n("bad_request"),
+        n("shutting_down"),
+        n("backend_error"),
+        n("transport_errors"),
+    );
+    mamba_x::util::write_creating_dirs(&out, artifact.dump().as_bytes())?;
+    let abs = std::fs::canonicalize(&out).unwrap_or_else(|_| out.clone().into());
+    println!("wrote serving bench to {}", abs.display());
+    Ok(())
 }
 
 /// Engine serving demo: host every configured variant in one process,
@@ -900,7 +1133,8 @@ fn run_engine(
     let mut builder = EngineBuilder::new()
         .workers(cfg.workers)
         .policy(cfg.policy)
-        .queue_depth(cfg.queue_depth);
+        .queue_depth(cfg.queue_depth)
+        .client_quota(cfg.client_quota);
     let mut factories = Vec::with_capacity(cfg.models.len());
     for v in &cfg.models {
         let spec = v.to_spec()?;

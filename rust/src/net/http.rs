@@ -1,0 +1,490 @@
+//! Minimal HTTP/1.1 framing over `std::io` — request/response messages
+//! delimited by `Content-Length` (no chunked transfer, no registry
+//! deps). The parser is *resumable*: [`HttpConn`] accumulates bytes in
+//! an internal buffer and only consumes a message once it is complete,
+//! so read timeouts surface as [`FrameError::TimedOut`] without losing
+//! partial input, and pipelined requests (several messages in one TCP
+//! segment) are handed out one at a time.
+//!
+//! Every malformed input maps to a typed [`FrameError`] — the serving
+//! front-end turns those into 4xx responses or a silent close
+//! ([`FrameError::status`]); a parser panic is a bug
+//! (`rust/tests/net_props.rs` fuzzes this surface).
+
+use std::io::{Read, Write};
+
+/// Cap on the request/status line + headers (bytes up to the blank line).
+pub const DEFAULT_MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Cap on a message body. Large enough for any inline `micro_l` image
+/// payload, small enough that one connection cannot balloon memory.
+pub const DEFAULT_MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Framing limits enforced while reading a message.
+#[derive(Debug, Clone, Copy)]
+pub struct HttpLimits {
+    pub max_head_bytes: usize,
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_head_bytes: DEFAULT_MAX_HEAD_BYTES,
+            max_body_bytes: DEFAULT_MAX_BODY_BYTES,
+        }
+    }
+}
+
+/// A parsed request, framing-level only (no routing semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RawRequest {
+    pub method: String,
+    pub target: String,
+    /// `HTTP/1.0` or `HTTP/1.1`.
+    pub version: String,
+    /// Header (name, value) pairs; names lower-cased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// The peer asked for (or implies) connection close after this
+    /// exchange (`Connection: close`, or HTTP/1.0 without keep-alive).
+    pub close: bool,
+}
+
+impl RawRequest {
+    /// First header value by lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A parsed response (client side of the same framing).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RawResponse {
+    pub status: u16,
+    pub reason: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    pub close: bool,
+}
+
+impl RawResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Why a message could not be framed. Connection-level conditions
+/// (`Eof`, `Truncated`, `TimedOut`, `Io`) carry no HTTP status — the
+/// peer is gone or still thinking; protocol violations map to 4xx/501.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameError {
+    /// Clean close between messages — not an error, just "no more".
+    Eof,
+    /// The peer disconnected mid-message (head or body incomplete).
+    Truncated,
+    /// The underlying read timed out; buffered partial input is kept and
+    /// the next call resumes where this one stopped.
+    TimedOut,
+    BadRequestLine(String),
+    BadStatusLine(String),
+    BadHeader(String),
+    HeadTooLarge { limit: usize },
+    BodyTooLarge { length: usize, limit: usize },
+    BadContentLength(String),
+    /// `Transfer-Encoding` is not supported; bodies are Content-Length
+    /// delimited only.
+    UnsupportedTransferEncoding,
+    Io(String),
+}
+
+impl FrameError {
+    /// The HTTP status a server should answer with, when one applies
+    /// (None: connection-level condition — close without a response).
+    pub fn status(&self) -> Option<(u16, &'static str)> {
+        match self {
+            FrameError::Eof | FrameError::Truncated | FrameError::TimedOut | FrameError::Io(_) => {
+                None
+            }
+            FrameError::HeadTooLarge { .. } => Some((431, "Request Header Fields Too Large")),
+            FrameError::BodyTooLarge { .. } => Some((413, "Payload Too Large")),
+            FrameError::UnsupportedTransferEncoding => Some((501, "Not Implemented")),
+            _ => Some((400, "Bad Request")),
+        }
+    }
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Eof => write!(f, "connection closed"),
+            FrameError::Truncated => write!(f, "connection closed mid-message"),
+            FrameError::TimedOut => write!(f, "read timed out"),
+            FrameError::BadRequestLine(l) => write!(f, "bad request line {l:?}"),
+            FrameError::BadStatusLine(l) => write!(f, "bad status line {l:?}"),
+            FrameError::BadHeader(l) => write!(f, "bad header {l:?}"),
+            FrameError::HeadTooLarge { limit } => write!(f, "headers exceed {limit} bytes"),
+            FrameError::BodyTooLarge { length, limit } => {
+                write!(f, "content-length {length} exceeds limit {limit}")
+            }
+            FrameError::BadContentLength(v) => write!(f, "bad content-length {v:?}"),
+            FrameError::UnsupportedTransferEncoding => {
+                write!(f, "transfer-encoding is not supported (content-length only)")
+            }
+            FrameError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// One side of an HTTP/1.1 connection: buffered, resumable message
+/// reader over any `Read` (a `TcpStream` in production, an in-memory
+/// fragmenting reader in the property tests).
+pub struct HttpConn<S> {
+    stream: S,
+    /// Received-but-unconsumed bytes (partial message, or pipelined
+    /// follow-up messages).
+    buf: Vec<u8>,
+    limits: HttpLimits,
+}
+
+impl<S> HttpConn<S> {
+    pub fn new(stream: S, limits: HttpLimits) -> Self {
+        HttpConn { stream, buf: Vec::new(), limits }
+    }
+
+    /// The underlying stream (for writing responses on the same socket).
+    pub fn stream_mut(&mut self) -> &mut S {
+        &mut self.stream
+    }
+
+    /// Unconsumed buffered bytes (pipelined input waiting to be parsed).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Find the end of the head: index just past the `\r\n\r\n` separator.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+impl<S: Read> HttpConn<S> {
+    /// Pull more bytes from the stream into the buffer. Ok(true) = got
+    /// some, Ok(false) = clean EOF.
+    fn fill(&mut self) -> Result<bool, FrameError> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Ok(false),
+                Ok(n) => {
+                    self.buf.extend_from_slice(&chunk[..n]);
+                    return Ok(true);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(FrameError::TimedOut)
+                }
+                Err(e) => return Err(FrameError::Io(e.to_string())),
+            }
+        }
+    }
+
+    /// Read until the buffer holds a complete head; returns its end
+    /// index. Does not consume anything.
+    fn read_head(&mut self) -> Result<usize, FrameError> {
+        loop {
+            if let Some(end) = head_end(&self.buf) {
+                if end > self.limits.max_head_bytes {
+                    return Err(FrameError::HeadTooLarge { limit: self.limits.max_head_bytes });
+                }
+                return Ok(end);
+            }
+            if self.buf.len() > self.limits.max_head_bytes {
+                return Err(FrameError::HeadTooLarge { limit: self.limits.max_head_bytes });
+            }
+            if !self.fill()? {
+                return if self.buf.is_empty() {
+                    Err(FrameError::Eof)
+                } else {
+                    Err(FrameError::Truncated)
+                };
+            }
+        }
+    }
+
+    /// Read one complete message: head via [`Self::read_head`], then the
+    /// `Content-Length` body. Consumes exactly the message; pipelined
+    /// bytes after it stay buffered. Returns (first line, headers, body).
+    fn read_message(
+        &mut self,
+    ) -> Result<(String, Vec<(String, String)>, Vec<u8>), FrameError> {
+        let head_len = self.read_head()?;
+        // Parse the head before committing to a body read, so a bogus
+        // Content-Length can be refused without waiting on bytes that
+        // will never come.
+        let head = std::str::from_utf8(&self.buf[..head_len - 4])
+            .map_err(|_| FrameError::BadHeader("non-utf8 header bytes".to_string()))?;
+        let mut lines = head.split("\r\n");
+        let first = lines.next().unwrap_or("").to_string();
+        let mut headers = Vec::new();
+        for line in lines {
+            let Some((name, value)) = line.split_once(':') else {
+                return Err(FrameError::BadHeader(line.to_string()));
+            };
+            if name.is_empty() || name.contains(' ') || name.contains('\t') {
+                return Err(FrameError::BadHeader(line.to_string()));
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        if headers.iter().any(|(n, _)| n == "transfer-encoding") {
+            return Err(FrameError::UnsupportedTransferEncoding);
+        }
+        let mut body_len = 0usize;
+        let mut seen_cl: Option<&str> = None;
+        for (n, v) in &headers {
+            if n == "content-length" {
+                if let Some(prev) = seen_cl {
+                    if prev != v {
+                        return Err(FrameError::BadContentLength(format!("{prev} vs {v}")));
+                    }
+                }
+                seen_cl = Some(v);
+                body_len = v
+                    .parse::<usize>()
+                    .map_err(|_| FrameError::BadContentLength(v.clone()))?;
+            }
+        }
+        if body_len > self.limits.max_body_bytes {
+            return Err(FrameError::BodyTooLarge {
+                length: body_len,
+                limit: self.limits.max_body_bytes,
+            });
+        }
+        let total = head_len + body_len;
+        while self.buf.len() < total {
+            if !self.fill()? {
+                return Err(FrameError::Truncated);
+            }
+        }
+        // Consume [0, total), keep the pipelined remainder.
+        let rest = self.buf.split_off(total);
+        let message = std::mem::replace(&mut self.buf, rest);
+        let body = message[head_len..].to_vec();
+        Ok((first, headers, body))
+    }
+
+    /// Server side: read one request.
+    pub fn read_request(&mut self) -> Result<RawRequest, FrameError> {
+        let (line, headers, body) = self.read_message()?;
+        let mut parts = line.split(' ');
+        let (method, target, version) =
+            match (parts.next(), parts.next(), parts.next(), parts.next()) {
+                (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => {
+                    (m.to_string(), t.to_string(), v.to_string())
+                }
+                _ => return Err(FrameError::BadRequestLine(line)),
+            };
+        if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+            return Err(FrameError::BadRequestLine(line));
+        }
+        if !target.starts_with('/') {
+            return Err(FrameError::BadRequestLine(line));
+        }
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return Err(FrameError::BadRequestLine(line));
+        }
+        let connection = headers
+            .iter()
+            .find(|(n, _)| n == "connection")
+            .map(|(_, v)| v.to_ascii_lowercase());
+        let close = match connection.as_deref() {
+            Some(v) => v.split(',').any(|t| t.trim() == "close"),
+            None => version == "HTTP/1.0",
+        };
+        Ok(RawRequest { method, target, version, headers, body, close })
+    }
+
+    /// Client side: read one response.
+    pub fn read_response(&mut self) -> Result<RawResponse, FrameError> {
+        let (line, headers, body) = self.read_message()?;
+        let mut parts = line.splitn(3, ' ');
+        let (version, status, reason) = (
+            parts.next().unwrap_or(""),
+            parts.next().unwrap_or(""),
+            parts.next().unwrap_or("").to_string(),
+        );
+        if !version.starts_with("HTTP/1.") {
+            return Err(FrameError::BadStatusLine(line));
+        }
+        let status: u16 =
+            status.parse().map_err(|_| FrameError::BadStatusLine(line.clone()))?;
+        let close = headers
+            .iter()
+            .find(|(n, _)| n == "connection")
+            .is_some_and(|(_, v)| v.to_ascii_lowercase().split(',').any(|t| t.trim() == "close"));
+        Ok(RawResponse { status, reason, headers, body, close })
+    }
+}
+
+/// Write one response message (always with an explicit Content-Length).
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    close: bool,
+) -> std::io::Result<()> {
+    let mut head = format!("HTTP/1.1 {status} {reason}\r\ncontent-length: {}\r\n", body.len());
+    for (n, v) in extra_headers {
+        head.push_str(&format!("{n}: {v}\r\n"));
+    }
+    if close {
+        head.push_str("connection: close\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write one request message (client side; always Content-Length framed).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head =
+        format!("{method} {target} HTTP/1.1\r\ncontent-length: {}\r\n", body.len());
+    for (n, v) in extra_headers {
+        head.push_str(&format!("{n}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conn_over(bytes: &[u8]) -> HttpConn<std::io::Cursor<Vec<u8>>> {
+        HttpConn::new(std::io::Cursor::new(bytes.to_vec()), HttpLimits::default())
+    }
+
+    #[test]
+    fn parses_request_with_body_and_keepalive_default() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nContent-Length: 5\r\nHost: x\r\n\r\nhello";
+        let req = conn_over(raw).read_request().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/infer");
+        assert_eq!(req.version, "HTTP/1.1");
+        assert_eq!(req.body, b"hello");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(!req.close, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn pipelined_requests_come_out_one_at_a_time() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\nconnection: close\r\n\r\n";
+        let mut c = conn_over(raw);
+        let a = c.read_request().unwrap();
+        assert_eq!((a.target.as_str(), a.close), ("/a", false));
+        assert!(c.buffered() > 0, "second request stays buffered");
+        let b = c.read_request().unwrap();
+        assert_eq!((b.target.as_str(), b.close), ("/b", true));
+        assert_eq!(c.read_request().unwrap_err(), FrameError::Eof);
+    }
+
+    #[test]
+    fn truncated_body_is_typed_not_a_panic() {
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nshort";
+        assert_eq!(conn_over(raw).read_request().unwrap_err(), FrameError::Truncated);
+        let raw = b"POST / HTTP/1.1\r\ncontent-len"; // truncated head
+        assert_eq!(conn_over(raw).read_request().unwrap_err(), FrameError::Truncated);
+    }
+
+    #[test]
+    fn oversize_and_malformed_content_length_are_typed() {
+        let limits = HttpLimits { max_head_bytes: 1024, max_body_bytes: 16 };
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 17\r\n\r\n";
+        let err = HttpConn::new(std::io::Cursor::new(raw.to_vec()), limits)
+            .read_request()
+            .unwrap_err();
+        assert_eq!(err, FrameError::BodyTooLarge { length: 17, limit: 16 });
+        assert_eq!(err.status(), Some((413, "Payload Too Large")));
+        for bad in ["-1", "abc", "1e3", "18446744073709551616"] {
+            let raw = format!("POST / HTTP/1.1\r\ncontent-length: {bad}\r\n\r\n");
+            let err = conn_over(raw.as_bytes()).read_request().unwrap_err();
+            assert!(matches!(err, FrameError::BadContentLength(_)), "{bad}: {err:?}");
+            assert_eq!(err.status(), Some((400, "Bad Request")));
+        }
+        // Two conflicting Content-Length headers: refused, not guessed.
+        let raw = b"POST / HTTP/1.1\r\ncontent-length: 1\r\ncontent-length: 2\r\n\r\nxx";
+        assert!(matches!(
+            conn_over(raw).read_request().unwrap_err(),
+            FrameError::BadContentLength(_)
+        ));
+    }
+
+    #[test]
+    fn bad_request_lines_are_typed() {
+        for bad in [
+            "GET\r\n\r\n",
+            "GET / HTTP/1.1 extra\r\n\r\n",
+            "get / HTTP/1.1\r\n\r\n",
+            "GET noslash HTTP/1.1\r\n\r\n",
+            "GET / SPDY/9\r\n\r\n",
+            " / HTTP/1.1\r\n\r\n",
+        ] {
+            let err = conn_over(bad.as_bytes()).read_request().unwrap_err();
+            assert!(matches!(err, FrameError::BadRequestLine(_)), "{bad:?}: {err:?}");
+        }
+        let err = conn_over(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n")
+            .read_request()
+            .unwrap_err();
+        assert!(matches!(err, FrameError::BadHeader(_)));
+    }
+
+    #[test]
+    fn head_limit_and_transfer_encoding_are_refused() {
+        let limits = HttpLimits { max_head_bytes: 64, max_body_bytes: 1024 };
+        let raw = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "y".repeat(128));
+        let err = HttpConn::new(std::io::Cursor::new(raw.into_bytes()), limits)
+            .read_request()
+            .unwrap_err();
+        assert_eq!(err, FrameError::HeadTooLarge { limit: 64 });
+        assert_eq!(err.status(), Some((431, "Request Header Fields Too Large")));
+        let raw = b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n";
+        let err = conn_over(raw).read_request().unwrap_err();
+        assert_eq!(err, FrameError::UnsupportedTransferEncoding);
+        assert_eq!(err.status(), Some((501, "Not Implemented")));
+    }
+
+    #[test]
+    fn response_round_trip_through_writer_and_parser() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, "Too Many Requests", &[("retry-after", "1")], b"{}", true)
+            .unwrap();
+        let resp = conn_over(&wire).read_response().unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.reason, "Too Many Requests");
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.body, b"{}");
+        assert!(resp.close);
+
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/v1/infer", &[("host", "h")], b"abc").unwrap();
+        let req = conn_over(&wire).read_request().unwrap();
+        assert_eq!((req.method.as_str(), req.target.as_str()), ("POST", "/v1/infer"));
+        assert_eq!(req.body, b"abc");
+    }
+}

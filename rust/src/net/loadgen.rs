@@ -1,0 +1,645 @@
+//! Seeded load harness for the HTTP serving front-end.
+//!
+//! `mamba-x loadgen` drives a live `serve --listen` endpoint with a
+//! reproducible workload and writes a `BENCH_serving.json` artifact the
+//! perfcheck gate understands. Two arrival modes:
+//!
+//! * **closed-loop** — each client keeps exactly one request in flight
+//!   (send, wait, repeat). Offered load adapts to service capacity, so
+//!   every request should complete; CI reconciles the counts against the
+//!   engine's own `--report-json`.
+//! * **open-loop** — each client follows a *pre-seeded arrival
+//!   schedule* (uniform-jittered or bursty gaps) independent of response
+//!   times. Note the harness is *partly* open: a client blocks on its
+//!   in-flight response and sends the next request late if the schedule
+//!   has already passed, rather than growing unbounded in-flight state.
+//!
+//! Everything random — arrival gaps, priority mix sampling — derives
+//! from `seed` via per-client [`Pcg`] streams, so a given config replays
+//! the identical request sequence (ids, priorities, payload seeds) on
+//! every run.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{LatencySnapshot, Priority};
+use crate::util::{bench::named_speedups, Json, Pcg};
+
+use super::http::{write_request, FrameError, HttpConn, HttpLimits, RawResponse};
+
+/// Format tag of the `BENCH_serving.json` artifact.
+pub const SERVING_BENCH_FORMAT: &str = "mamba-x-serving-bench";
+
+/// Schema version of the artifact.
+pub const SERVING_BENCH_VERSION: u32 = 1;
+
+/// Stream-splitting constant (golden-ratio multiplier), matching the
+/// `synthetic_image` convention so client streams are decorrelated.
+const STREAM_SPLIT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Open-loop inter-arrival distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dist {
+    /// Gaps jittered uniformly in `[0.5, 1.5] x` the mean gap.
+    Uniform,
+    /// Seeded bursts of 1-8 back-to-back requests, separated by
+    /// compensating gaps (same long-run rate, spikier instantaneous).
+    Bursty,
+}
+
+impl Dist {
+    pub fn parse(s: &str) -> Result<Dist> {
+        match s {
+            "uniform" => Ok(Dist::Uniform),
+            "bursty" => Ok(Dist::Bursty),
+            other => bail!("unknown arrival dist {other:?}; valid: uniform, bursty"),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dist::Uniform => "uniform",
+            Dist::Bursty => "bursty",
+        }
+    }
+}
+
+/// Arrival mode (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalMode {
+    Closed,
+    Open { rate_rps: f64, dist: Dist },
+}
+
+/// Full harness configuration; `to_json` is echoed into the artifact so
+/// a benchmark number can always be traced back to its workload.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// `host:port` of a live `serve --listen` endpoint.
+    pub addr: String,
+    /// Total requests across all clients.
+    pub requests: usize,
+    /// Concurrent client connections, each its own seeded stream.
+    pub clients: usize,
+    pub mode: ArrivalMode,
+    pub seed: u64,
+    /// Weighted priority mix, e.g. `[(High,1),(Normal,2),(Low,1)]`.
+    pub priorities: Vec<(Priority, u32)>,
+    pub deadline_us: Option<u64>,
+    /// Target model; `None` round-robins over the server's `/healthz`
+    /// model list.
+    pub model: Option<String>,
+    /// Send `POST /admin/shutdown` after the run (drains the server so
+    /// a scripted caller can collect the engine report).
+    pub shutdown: bool,
+}
+
+impl LoadgenConfig {
+    pub fn new(addr: impl Into<String>) -> Self {
+        LoadgenConfig {
+            addr: addr.into(),
+            requests: 64,
+            clients: 4,
+            mode: ArrivalMode::Closed,
+            seed: 0,
+            priorities: vec![(Priority::Normal, 1)],
+            deadline_us: None,
+            model: None,
+            shutdown: false,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let (mode, rate, dist) = match self.mode {
+            ArrivalMode::Closed => ("closed", Json::Null, Json::Null),
+            ArrivalMode::Open { rate_rps, dist } => {
+                ("open", Json::Num(rate_rps), Json::Str(dist.as_str().to_string()))
+            }
+        };
+        let mix = self
+            .priorities
+            .iter()
+            .map(|(p, w)| {
+                Json::obj_from(vec![
+                    ("priority", Json::Str(p.as_str().to_string())),
+                    ("weight", Json::Num(*w as f64)),
+                ])
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("addr", Json::Str(self.addr.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("clients", Json::Num(self.clients as f64)),
+            ("mode", Json::Str(mode.to_string())),
+            ("rate_rps", rate),
+            ("dist", dist),
+            ("seed", Json::Num(self.seed as f64)),
+            ("priorities", Json::Arr(mix)),
+            (
+                "deadline_us",
+                self.deadline_us.map_or(Json::Null, |d| Json::Num(d as f64)),
+            ),
+            ("model", self.model.clone().map_or(Json::Null, Json::Str)),
+            ("shutdown", Json::Bool(self.shutdown)),
+        ])
+    }
+}
+
+/// Parse a `high=1,normal=2,low=1` priority-mix flag.
+pub fn parse_priority_mix(s: &str) -> Result<Vec<(Priority, u32)>> {
+    let mut mix = Vec::new();
+    for part in s.split(',') {
+        let (name, weight) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow!("bad priority mix entry {part:?}; want name=weight"))?;
+        let weight: u32 =
+            weight.parse().with_context(|| format!("bad weight in {part:?}"))?;
+        mix.push((Priority::parse(name)?, weight));
+    }
+    if mix.iter().all(|(_, w)| *w == 0) {
+        bail!("priority mix {s:?} has zero total weight");
+    }
+    Ok(mix)
+}
+
+/// Per-class outcome tally (one overall + one per priority tier).
+#[derive(Debug, Default, Clone)]
+struct Tally {
+    sent: u64,
+    completed: u64,
+    rejected_full: u64,
+    rejected_shed: u64,
+    rejected_quota: u64,
+    unknown_model: u64,
+    bad_request: u64,
+    shutting_down: u64,
+    backend_error: u64,
+    transport_errors: u64,
+    /// Client-side wall latency of completed requests.
+    latencies_us: Vec<u64>,
+}
+
+impl Tally {
+    fn merge(&mut self, other: &Tally) {
+        self.sent += other.sent;
+        self.completed += other.completed;
+        self.rejected_full += other.rejected_full;
+        self.rejected_shed += other.rejected_shed;
+        self.rejected_quota += other.rejected_quota;
+        self.unknown_model += other.unknown_model;
+        self.bad_request += other.bad_request;
+        self.shutting_down += other.shutting_down;
+        self.backend_error += other.backend_error;
+        self.transport_errors += other.transport_errors;
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+    }
+
+    /// Classify one response. 429s disambiguate full/shed/quota via the
+    /// `"error"` code in the body (the front-end always sends one).
+    fn classify(&mut self, resp: &RawResponse, latency_us: u64) {
+        match resp.status {
+            200 => {
+                self.completed += 1;
+                self.latencies_us.push(latency_us);
+            }
+            429 => {
+                let code = std::str::from_utf8(&resp.body)
+                    .ok()
+                    .and_then(|t| Json::parse(t).ok())
+                    .and_then(|j| j.get("error").ok().map(|v| v.str().unwrap_or("").to_string()));
+                match code.as_deref() {
+                    Some("full") => self.rejected_full += 1,
+                    Some("client_quota") => self.rejected_quota += 1,
+                    _ => self.rejected_shed += 1,
+                }
+            }
+            404 => self.unknown_model += 1,
+            503 => self.shutting_down += 1,
+            500 => self.backend_error += 1,
+            _ => self.bad_request += 1,
+        }
+    }
+
+    fn latency_json(&self) -> Json {
+        let snap = LatencySnapshot::from_samples(self.latencies_us.clone());
+        Json::obj_from(vec![
+            ("mean", Json::Num(snap.mean_us())),
+            ("p50", Json::Num(snap.percentile_us(50.0) as f64)),
+            ("p95", Json::Num(snap.percentile_us(95.0) as f64)),
+            ("p99", Json::Num(snap.percentile_us(99.0) as f64)),
+            ("max", Json::Num(snap.max_us() as f64)),
+        ])
+    }
+
+    fn to_json(&self) -> Json {
+        let shed_rate = if self.sent == 0 {
+            0.0
+        } else {
+            (self.rejected_full + self.rejected_shed + self.rejected_quota) as f64
+                / self.sent as f64
+        };
+        Json::obj_from(vec![
+            ("sent", Json::Num(self.sent as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected_full", Json::Num(self.rejected_full as f64)),
+            ("rejected_shed", Json::Num(self.rejected_shed as f64)),
+            ("rejected_quota", Json::Num(self.rejected_quota as f64)),
+            ("unknown_model", Json::Num(self.unknown_model as f64)),
+            ("bad_request", Json::Num(self.bad_request as f64)),
+            ("shutting_down", Json::Num(self.shutting_down as f64)),
+            ("backend_error", Json::Num(self.backend_error as f64)),
+            ("transport_errors", Json::Num(self.transport_errors as f64)),
+            ("shed_rate", Json::Num(shed_rate)),
+            ("latency_us", self.latency_json()),
+        ])
+    }
+}
+
+/// One client's full result: overall tally + per-priority breakdown
+/// (indexed in [`Priority::ALL`] order).
+#[derive(Debug, Default, Clone)]
+struct ClientStats {
+    overall: Tally,
+    per_priority: [Tally; 3],
+}
+
+fn pidx(p: Priority) -> usize {
+    Priority::ALL.iter().position(|&q| q == p).expect("Priority::ALL is exhaustive")
+}
+
+impl ClientStats {
+    fn merge(&mut self, other: &ClientStats) {
+        self.overall.merge(&other.overall);
+        for (mine, theirs) in self.per_priority.iter_mut().zip(&other.per_priority) {
+            mine.merge(theirs);
+        }
+    }
+}
+
+fn connect(addr: &str) -> std::io::Result<HttpConn<TcpStream>> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    Ok(HttpConn::new(stream, HttpLimits::default()))
+}
+
+/// One request/response exchange on a kept-alive connection.
+fn exchange(
+    conn: &mut HttpConn<TcpStream>,
+    target: &str,
+    body: &[u8],
+) -> std::result::Result<RawResponse, FrameError> {
+    write_request(conn.stream_mut(), "POST", target, &[], body)
+        .map_err(|e| FrameError::Io(e.to_string()))?;
+    conn.read_response()
+}
+
+/// Weighted priority draw from the seeded stream.
+fn sample_priority(mix: &[(Priority, u32)], rng: &mut Pcg) -> Priority {
+    let total: u64 = mix.iter().map(|(_, w)| *w as u64).sum();
+    if total == 0 {
+        return Priority::Normal;
+    }
+    let mut pick = rng.below(total);
+    for (p, w) in mix {
+        if pick < *w as u64 {
+            return *p;
+        }
+        pick -= *w as u64;
+    }
+    mix.last().expect("non-empty mix").0
+}
+
+/// Pre-seeded arrival offsets (µs from stream start) for one open-loop
+/// client. Pure function of (rng stream, n, gap) — replayable.
+fn arrival_schedule_us(rng: &mut Pcg, n: usize, mean_gap_us: f64, dist: Dist) -> Vec<u64> {
+    let mut at = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    let mut burst_left = 0usize;
+    for _ in 0..n {
+        match dist {
+            Dist::Uniform => {
+                at += mean_gap_us * (0.5 + rng.f64());
+            }
+            Dist::Bursty => {
+                if burst_left == 0 {
+                    let burst = rng.usize_in(1, 8);
+                    burst_left = burst;
+                    // One compensating gap buys the whole burst: the
+                    // long-run rate matches Uniform's.
+                    at += mean_gap_us * burst as f64 * (0.5 + rng.f64());
+                }
+                burst_left -= 1;
+            }
+        }
+        out.push(at as u64);
+    }
+    out
+}
+
+/// The request ids a client stream uses: unique across clients so the
+/// engine-side trace can attribute every request.
+fn request_id(client: usize, k: usize) -> u64 {
+    client as u64 * 1_000_000 + k as u64
+}
+
+fn infer_body(
+    model: &str,
+    id: u64,
+    priority: Priority,
+    deadline_us: Option<u64>,
+    client: usize,
+    seed: u64,
+) -> Vec<u8> {
+    let mut pairs = vec![
+        ("model", Json::Str(model.to_string())),
+        ("id", Json::Num(id as f64)),
+        ("priority", Json::Str(priority.as_str().to_string())),
+        ("client", Json::Str(format!("c{client}"))),
+        ("image_seed", Json::Num(seed as f64)),
+    ];
+    if let Some(d) = deadline_us {
+        pairs.push(("deadline_us", Json::Num(d as f64)));
+    }
+    Json::obj_from(pairs).dump().into_bytes()
+}
+
+/// One client thread: run its share of the workload against a kept-alive
+/// connection, reconnecting once per transport error.
+fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> ClientStats {
+    let mut stats = ClientStats::default();
+    let mut rng = Pcg::new(cfg.seed ^ (ci as u64).wrapping_mul(STREAM_SPLIT));
+    let schedule = match cfg.mode {
+        ArrivalMode::Closed => Vec::new(),
+        ArrivalMode::Open { rate_rps, dist } => {
+            let per_client = (rate_rps / cfg.clients.max(1) as f64).max(1e-3);
+            arrival_schedule_us(&mut rng, n, 1e6 / per_client, dist)
+        }
+    };
+    let Ok(mut conn) = connect(&cfg.addr) else {
+        stats.overall.transport_errors += 1;
+        return stats;
+    };
+    let start = Instant::now();
+    for k in 0..n {
+        if let Some(&at_us) = schedule.get(k) {
+            let target = Duration::from_micros(at_us);
+            let elapsed = start.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+        }
+        let priority = sample_priority(&cfg.priorities, &mut rng);
+        let model = &models[(ci + k) % models.len()];
+        let id = request_id(ci, k);
+        let body = infer_body(model, id, priority, cfg.deadline_us, ci, cfg.seed);
+        stats.overall.sent += 1;
+        stats.per_priority[pidx(priority)].sent += 1;
+        let t0 = Instant::now();
+        match exchange(&mut conn, "/v1/infer", &body) {
+            Ok(resp) => {
+                let latency_us = t0.elapsed().as_micros() as u64;
+                stats.overall.classify(&resp, latency_us);
+                stats.per_priority[pidx(priority)].classify(&resp, latency_us);
+                if resp.close {
+                    match connect(&cfg.addr) {
+                        Ok(c) => conn = c,
+                        Err(_) => break,
+                    }
+                }
+            }
+            Err(_) => {
+                stats.overall.transport_errors += 1;
+                stats.per_priority[pidx(priority)].transport_errors += 1;
+                match connect(&cfg.addr) {
+                    Ok(c) => conn = c,
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+    stats
+}
+
+/// Poll `/healthz` until the server answers (or `timeout` expires);
+/// returns the hosted model names.
+pub fn probe_models(addr: &str, timeout: Duration) -> Result<Vec<String>> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match try_healthz(addr) {
+            Ok(models) => return Ok(models),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e.context(format!("no healthy server at {addr:?}")));
+                }
+                std::thread::sleep(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+fn try_healthz(addr: &str) -> Result<Vec<String>> {
+    let mut conn = connect(addr)?;
+    write_request(conn.stream_mut(), "GET", "/healthz", &[], b"")?;
+    let resp = conn.read_response().map_err(|e| anyhow!("healthz: {e}"))?;
+    if resp.status != 200 {
+        bail!("healthz returned {}", resp.status);
+    }
+    let json = Json::parse(std::str::from_utf8(&resp.body)?)?;
+    json.get("models")?
+        .arr()?
+        .iter()
+        .map(|m| Ok(m.get("name")?.str()?.to_string()))
+        .collect()
+}
+
+/// Ask the server to drain (`POST /admin/shutdown`).
+pub fn send_shutdown(addr: &str) -> Result<()> {
+    let mut conn = connect(addr)?;
+    write_request(conn.stream_mut(), "POST", "/admin/shutdown", &[], b"")?;
+    let resp = conn.read_response().map_err(|e| anyhow!("shutdown: {e}"))?;
+    if resp.status != 200 {
+        bail!("shutdown returned {}", resp.status);
+    }
+    Ok(())
+}
+
+/// Run the configured workload and build the `BENCH_serving.json`
+/// artifact. The `speedups` entry feeds the perfcheck gate:
+/// `serving_goodput_ratio` = completed / sent (1.0 when nothing was
+/// refused or lost).
+pub fn run(cfg: &LoadgenConfig) -> Result<Json> {
+    if cfg.requests == 0 || cfg.clients == 0 {
+        bail!("loadgen needs requests >= 1 and clients >= 1");
+    }
+    let models = match &cfg.model {
+        Some(m) => vec![m.clone()],
+        None => probe_models(&cfg.addr, Duration::from_secs(10))?,
+    };
+    if models.is_empty() {
+        bail!("server at {:?} hosts no models", cfg.addr);
+    }
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for ci in 0..cfg.clients {
+        let n = cfg.requests / cfg.clients + usize::from(ci < cfg.requests % cfg.clients);
+        if n == 0 {
+            continue;
+        }
+        let cfg = cfg.clone();
+        let models = models.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("loadgen-c{ci}"))
+                .spawn(move || client_loop(&cfg, ci, n, &models))
+                .context("spawning loadgen client")?,
+        );
+    }
+    let mut total = ClientStats::default();
+    for h in handles {
+        let stats = h.join().map_err(|_| anyhow!("loadgen client panicked"))?;
+        total.merge(&stats);
+    }
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    if cfg.shutdown {
+        send_shutdown(&cfg.addr)?;
+    }
+
+    let per_priority = Priority::ALL
+        .iter()
+        .map(|&p| (p.as_str(), total.per_priority[pidx(p)].to_json()))
+        .collect::<Vec<_>>();
+    let goodput_ratio = if total.overall.sent == 0 {
+        0.0
+    } else {
+        total.overall.completed as f64 / total.overall.sent as f64
+    };
+    // Start from the overall tally's counters, then layer the artifact
+    // envelope on top (flat keys: the CI reconciliation step reads
+    // `completed`, `rejected_*` straight off the root object).
+    let mut map = match total.overall.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("Tally::to_json returns an object"),
+    };
+    map.insert("format".to_string(), Json::Str(SERVING_BENCH_FORMAT.to_string()));
+    map.insert("version".to_string(), Json::Num(SERVING_BENCH_VERSION as f64));
+    map.insert("config".to_string(), cfg.to_json());
+    map.insert("models".to_string(), Json::Arr(models.into_iter().map(Json::Str).collect()));
+    map.insert("wall_s".to_string(), Json::Num(wall_s));
+    map.insert(
+        "goodput_rps".to_string(),
+        Json::Num(total.overall.completed as f64 / wall_s),
+    );
+    map.insert("per_priority".to_string(), Json::obj_from(per_priority));
+    map.insert(
+        "speedups".to_string(),
+        named_speedups(&[("serving_goodput_ratio", goodput_ratio)]),
+    );
+    Ok(Json::Obj(map))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_mix_parses_and_rejects() {
+        let mix = parse_priority_mix("high=1,normal=2,low=1").unwrap();
+        assert_eq!(
+            mix,
+            vec![(Priority::High, 1), (Priority::Normal, 2), (Priority::Low, 1)]
+        );
+        assert!(parse_priority_mix("urgent=1").is_err());
+        assert!(parse_priority_mix("high").is_err());
+        assert!(parse_priority_mix("high=x").is_err());
+        assert!(parse_priority_mix("high=0,low=0").is_err(), "zero total weight");
+    }
+
+    #[test]
+    fn priority_sampling_is_seeded_and_weighted() {
+        let mix = parse_priority_mix("high=1,normal=2,low=1").unwrap();
+        let draw = |seed: u64| {
+            let mut rng = Pcg::new(seed);
+            (0..400).map(|_| sample_priority(&mix, &mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(7), draw(7), "same seed, same sequence");
+        let counts = draw(7).iter().fold([0usize; 3], |mut acc, &p| {
+            acc[pidx(p)] += 1;
+            acc
+        });
+        // All three tiers appear; Normal (weight 2) dominates either
+        // single-weight tier over 400 draws.
+        assert!(counts.iter().all(|&c| c > 0), "{counts:?}");
+        assert!(counts[pidx(Priority::Normal)] > counts[pidx(Priority::High)], "{counts:?}");
+        assert!(counts[pidx(Priority::Normal)] > counts[pidx(Priority::Low)], "{counts:?}");
+    }
+
+    #[test]
+    fn arrival_schedules_are_seeded_monotone_and_rate_matched() {
+        for dist in [Dist::Uniform, Dist::Bursty] {
+            let gen = |seed: u64| {
+                let mut rng = Pcg::new(seed);
+                arrival_schedule_us(&mut rng, 256, 1000.0, dist)
+            };
+            let a = gen(3);
+            assert_eq!(a, gen(3), "{dist:?}: same seed, same schedule");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{dist:?}: non-decreasing");
+            // Long-run rate ~ 1/mean_gap for both distributions: total
+            // span within [0.5, 1.5] x n*gap (the jitter envelope).
+            let span = *a.last().unwrap() as f64;
+            assert!(
+                (0.5..=1.5).contains(&(span / (256.0 * 1000.0))),
+                "{dist:?}: span {span}"
+            );
+        }
+        // Bursty really bursts: some zero gaps.
+        let mut rng = Pcg::new(11);
+        let b = arrival_schedule_us(&mut rng, 64, 1000.0, Dist::Bursty);
+        assert!(b.windows(2).any(|w| w[0] == w[1]), "expected back-to-back arrivals");
+    }
+
+    #[test]
+    fn classification_maps_statuses_to_tallies() {
+        let resp = |status: u16, body: &str| RawResponse {
+            status,
+            reason: String::new(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+            close: false,
+        };
+        let mut t = Tally::default();
+        t.classify(&resp(200, "{}"), 120);
+        t.classify(&resp(429, r#"{"error":"full","detail":""}"#), 0);
+        t.classify(&resp(429, r#"{"error":"shed","detail":""}"#), 0);
+        t.classify(&resp(429, r#"{"error":"client_quota","detail":""}"#), 0);
+        t.classify(&resp(404, r#"{"error":"unknown_model"}"#), 0);
+        t.classify(&resp(503, "{}"), 0);
+        t.classify(&resp(500, "{}"), 0);
+        t.classify(&resp(400, "{}"), 0);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.latencies_us, vec![120]);
+        assert_eq!(t.rejected_full, 1);
+        assert_eq!(t.rejected_shed, 1);
+        assert_eq!(t.rejected_quota, 1);
+        assert_eq!(t.unknown_model, 1);
+        assert_eq!(t.shutting_down, 1);
+        assert_eq!(t.backend_error, 1);
+        assert_eq!(t.bad_request, 1);
+        let j = t.to_json();
+        assert_eq!(j.get("completed").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("latency_us").unwrap().get("p50").unwrap().usize().unwrap(), 120);
+    }
+
+    #[test]
+    fn request_split_covers_every_request_exactly_once() {
+        for (requests, clients) in [(64, 4), (7, 3), (1, 8), (100, 1)] {
+            let total: usize = (0..clients)
+                .map(|ci| requests / clients + usize::from(ci < requests % clients))
+                .sum();
+            assert_eq!(total, requests, "{requests}/{clients}");
+        }
+        // Ids never collide across clients.
+        assert_ne!(request_id(0, 1), request_id(1, 0));
+    }
+}

@@ -1,0 +1,31 @@
+//! Network serving layer (Layer 4): an HTTP/1.1 front-end and load
+//! harness over the coordinator engine.
+//!
+//! Mamba-X's deployment story is an edge vision *service*; this module
+//! puts the engine on a socket without pulling in an async runtime or
+//! any HTTP crate — `std::net` + hand-rolled Content-Length framing,
+//! matching the repo's hermetic-build rule:
+//!
+//! * [`http`] — resumable HTTP/1.1 message framing ([`HttpConn`]) with a
+//!   typed error surface ([`FrameError`]); fuzzed by
+//!   `rust/tests/net_props.rs` (malformed input must map to 4xx or a
+//!   clean close, never a panic);
+//! * [`server`] — the front-end proper: bounded accept loop + connection
+//!   workers, engine-error -> status mapping, graceful drain
+//!   ([`BoundServer`]);
+//! * [`loadgen`] — seeded closed/open-loop workload driver emitting the
+//!   `BENCH_serving.json` artifact for the perfcheck gate.
+//!
+//! Wire format (see README.md §Network serving): `POST /v1/infer` with a
+//! JSON body, `GET /healthz`, `POST /admin/shutdown`.
+
+pub mod http;
+pub mod loadgen;
+pub mod server;
+
+pub use http::{FrameError, HttpConn, HttpLimits, RawRequest, RawResponse};
+pub use loadgen::{
+    parse_priority_mix, ArrivalMode, Dist, LoadgenConfig, SERVING_BENCH_FORMAT,
+    SERVING_BENCH_VERSION,
+};
+pub use server::{BoundServer, ModelMeta, NetConfig, NetReport};

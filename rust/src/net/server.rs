@@ -1,0 +1,735 @@
+//! HTTP serving front-end over the coordinator
+//! [`Engine`](crate::coordinator::Engine).
+//!
+//! Hermetic by construction: `std::net::TcpListener` + the
+//! [`super::http`] framing layer, no async runtime. The topology is a
+//! bounded accept loop feeding a fixed pool of connection workers:
+//!
+//! ```text
+//! accept loop ── sync_channel(conn_backlog) ──> conn worker × N
+//!                (try_send; Full => direct 503)   │ read_request loop
+//!                                                │ route -> engine.submit
+//!                                                │ waiter.wait -> response
+//! ```
+//!
+//! Status mapping is one-to-one with the typed engine failure surface —
+//! the HTTP layer adds **no** admission policy of its own (except the
+//! connection backlog): `Full`/`Shed`/`ClientQuota` -> 429 (with
+//! `retry-after`), `UnknownModel` -> 404, `ShuttingDown` -> 503,
+//! `Backend` -> 500, and framing/validation errors -> 4xx via
+//! [`FrameError::status`]. Unknown *models* are deliberately routed
+//! through `engine.submit` (with a placeholder tensor) so the engine
+//! report stays the single accounting point for `rejected_unknown_model`
+//! and the CI reconciliation check can compare loadgen-side and
+//! engine-side counts exactly.
+//!
+//! Graceful drain: `POST /admin/shutdown` flips a flag; the accept loop
+//! answers new connections with 503 and existing keep-alive connections
+//! get 503 on their next request, while every already-admitted request
+//! is answered. `serve` returns once the last in-flight connection
+//! finishes; the caller then drops its engine handle and joins for the
+//! engine report.
+
+use anyhow::{anyhow, Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{Engine, EngineError, Priority, RejectReason, Request};
+use crate::runtime::{native::synthetic_image, Tensor};
+use crate::util::Json;
+
+use super::http::{write_response, FrameError, HttpConn, HttpLimits, RawRequest};
+
+/// How long a connection worker blocks in `read` before re-checking the
+/// drain flag (keep-alive connections poll at this cadence).
+const READ_TICK: Duration = Duration::from_millis(100);
+
+/// Accept-loop poll interval while the listener has nothing pending.
+const ACCEPT_TICK: Duration = Duration::from_millis(5);
+
+/// Routing metadata for one hosted variant: the engine itself validates
+/// names, but only the front-end knows the wire-level payload contract.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Expected image tensor shape; inline payloads must match its
+    /// element count exactly.
+    pub input_shape: Vec<usize>,
+}
+
+impl ModelMeta {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// Front-end configuration (everything engine-side lives in
+/// [`crate::coordinator::EngineConfig`]).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks a free port).
+    pub listen: String,
+    /// Connection-handler threads (each serves one connection at a time).
+    pub conn_workers: usize,
+    /// Accepted-but-unclaimed connection bound; beyond it new
+    /// connections get an immediate 503.
+    pub conn_backlog: usize,
+    pub limits: HttpLimits,
+}
+
+impl NetConfig {
+    pub fn new(listen: impl Into<String>) -> Self {
+        NetConfig {
+            listen: listen.into(),
+            conn_workers: 8,
+            conn_backlog: 64,
+            limits: HttpLimits::default(),
+        }
+    }
+}
+
+/// Front-end counters, all incremented exactly once per request (or per
+/// connection for `conns`/`conn_busy`). The engine-rejection mirror
+/// counters (`rejected_*`, `unknown_model`) must reconcile with the
+/// engine report — CI asserts this over a live socket.
+#[derive(Default)]
+struct NetCounters {
+    conns: AtomicU64,
+    conn_busy: AtomicU64,
+    ok: AtomicU64,
+    bad_request: AtomicU64,
+    not_found: AtomicU64,
+    rejected_full: AtomicU64,
+    rejected_shed: AtomicU64,
+    rejected_quota: AtomicU64,
+    unknown_model: AtomicU64,
+    shutting_down: AtomicU64,
+    backend_error: AtomicU64,
+}
+
+/// Final front-end accounting, returned by [`BoundServer::serve`] and
+/// embedded under the `"net"` key of the `--report-json` artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetReport {
+    pub conns: u64,
+    pub conn_busy: u64,
+    pub ok: u64,
+    pub bad_request: u64,
+    pub not_found: u64,
+    pub rejected_full: u64,
+    pub rejected_shed: u64,
+    pub rejected_quota: u64,
+    pub unknown_model: u64,
+    pub shutting_down: u64,
+    pub backend_error: u64,
+}
+
+impl NetReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("conns", Json::Num(self.conns as f64)),
+            ("conn_busy", Json::Num(self.conn_busy as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("bad_request", Json::Num(self.bad_request as f64)),
+            ("not_found", Json::Num(self.not_found as f64)),
+            ("rejected_full", Json::Num(self.rejected_full as f64)),
+            ("rejected_shed", Json::Num(self.rejected_shed as f64)),
+            ("rejected_quota", Json::Num(self.rejected_quota as f64)),
+            ("unknown_model", Json::Num(self.unknown_model as f64)),
+            ("shutting_down", Json::Num(self.shutting_down as f64)),
+            ("backend_error", Json::Num(self.backend_error as f64)),
+        ])
+    }
+}
+
+impl NetCounters {
+    fn snapshot(&self) -> NetReport {
+        NetReport {
+            conns: self.conns.load(Ordering::Relaxed),
+            conn_busy: self.conn_busy.load(Ordering::Relaxed),
+            ok: self.ok.load(Ordering::Relaxed),
+            bad_request: self.bad_request.load(Ordering::Relaxed),
+            not_found: self.not_found.load(Ordering::Relaxed),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            rejected_shed: self.rejected_shed.load(Ordering::Relaxed),
+            rejected_quota: self.rejected_quota.load(Ordering::Relaxed),
+            unknown_model: self.unknown_model.load(Ordering::Relaxed),
+            shutting_down: self.shutting_down.load(Ordering::Relaxed),
+            backend_error: self.backend_error.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shared state between the accept loop and the connection workers.
+struct Ctx {
+    engine: Engine,
+    models: Vec<ModelMeta>,
+    limits: HttpLimits,
+    counters: NetCounters,
+    draining: AtomicBool,
+    /// Connections accepted (or queued) and not yet finished.
+    active: AtomicUsize,
+}
+
+/// A listener that is bound but not yet serving — split from
+/// [`BoundServer::serve`] so callers (and tests) can learn the real
+/// port of a `:0` bind before traffic starts.
+pub struct BoundServer {
+    listener: TcpListener,
+    cfg: NetConfig,
+}
+
+impl BoundServer {
+    pub fn bind(cfg: NetConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {:?}", cfg.listen))?;
+        Ok(BoundServer { listener, cfg })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Run the accept loop on the calling thread until a graceful drain
+    /// completes (`POST /admin/shutdown` + last in-flight connection
+    /// finished). Consumes its engine handle before returning, so the
+    /// caller's own handle is the last one and `EngineJoin::join`
+    /// afterwards observes a clean shutdown.
+    pub fn serve(self, engine: Engine, models: Vec<ModelMeta>) -> Result<NetReport> {
+        let BoundServer { listener, cfg } = self;
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        let ctx = Arc::new(Ctx {
+            engine,
+            models,
+            limits: cfg.limits,
+            counters: NetCounters::default(),
+            draining: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::new();
+        for w in 0..cfg.conn_workers.max(1) {
+            let ctx = Arc::clone(&ctx);
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("net-conn-{w}"))
+                    .spawn(move || conn_worker(ctx, rx))
+                    .context("spawning connection worker")?,
+            );
+        }
+
+        let tx: SyncSender<TcpStream> = tx;
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    if ctx.draining.load(Ordering::SeqCst) {
+                        ctx.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
+                        refuse(stream, 503, "Service Unavailable", "shutting_down", "draining");
+                        continue;
+                    }
+                    ctx.active.fetch_add(1, Ordering::SeqCst);
+                    match tx.try_send(stream) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(stream)) => {
+                            ctx.active.fetch_sub(1, Ordering::SeqCst);
+                            ctx.counters.conn_busy.fetch_add(1, Ordering::Relaxed);
+                            refuse(
+                                stream,
+                                503,
+                                "Service Unavailable",
+                                "busy",
+                                "connection backlog full",
+                            );
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            return Err(anyhow!("all connection workers exited"));
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if ctx.draining.load(Ordering::SeqCst)
+                        && ctx.active.load(Ordering::SeqCst) == 0
+                    {
+                        break;
+                    }
+                    std::thread::sleep(ACCEPT_TICK);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(anyhow!("accept failed: {e}")),
+            }
+        }
+        drop(tx); // workers drain the queue, then see Disconnected
+        for w in workers {
+            w.join().map_err(|_| anyhow!("connection worker panicked"))?;
+        }
+        let report = ctx.counters.snapshot();
+        // `ctx` (and with it the engine handle) drops here.
+        Ok(report)
+    }
+}
+
+/// Best-effort one-shot refusal on a connection we will not serve.
+fn refuse(mut stream: TcpStream, status: u16, reason: &str, code: &str, detail: &str) {
+    let body = error_body(code, detail);
+    let _ = write_response(
+        &mut stream,
+        status,
+        reason,
+        &[("content-type", "application/json")],
+        &body,
+        true,
+    );
+}
+
+fn error_body(code: &str, detail: &str) -> Vec<u8> {
+    Json::obj_from(vec![
+        ("error", Json::Str(code.to_string())),
+        ("detail", Json::Str(detail.to_string())),
+    ])
+    .dump()
+    .into_bytes()
+}
+
+fn conn_worker(ctx: Arc<Ctx>, rx: Arc<Mutex<Receiver<TcpStream>>>) {
+    loop {
+        // Hold the receiver lock only for the claim, never while serving.
+        let claimed = {
+            let guard = rx.lock().unwrap();
+            guard.recv_timeout(Duration::from_millis(50))
+        };
+        match claimed {
+            Ok(stream) => {
+                ctx.counters.conns.fetch_add(1, Ordering::Relaxed);
+                handle_conn(&ctx, stream);
+                ctx.active.fetch_sub(1, Ordering::SeqCst);
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Serve one connection: keep-alive request loop until the peer closes,
+/// asks to close, a framing error forces a close, or a drain begins.
+fn handle_conn(ctx: &Ctx, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_TICK));
+    let _ = stream.set_nodelay(true);
+    let mut conn = HttpConn::new(stream, ctx.limits);
+    loop {
+        match conn.read_request() {
+            Ok(req) => {
+                let close = req.close;
+                let served = route(ctx, &mut conn, req);
+                if close || !served {
+                    return;
+                }
+            }
+            Err(FrameError::TimedOut) => {
+                // Idle tick: a draining server closes keep-alive
+                // connections instead of holding them open forever.
+                if ctx.draining.load(Ordering::SeqCst) {
+                    ctx.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
+                    let _ = write_response(
+                        conn.stream_mut(),
+                        503,
+                        "Service Unavailable",
+                        &[("content-type", "application/json")],
+                        &error_body("shutting_down", "draining"),
+                        true,
+                    );
+                    return;
+                }
+            }
+            Err(err) => {
+                // Protocol violations get a typed 4xx/5xx then close;
+                // connection-level conditions (EOF, truncation, IO)
+                // just close. Never a panic (tests/net_props.rs).
+                if let Some((status, reason)) = err.status() {
+                    ctx.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+                    let _ = write_response(
+                        conn.stream_mut(),
+                        status,
+                        reason,
+                        &[("content-type", "application/json")],
+                        &error_body("bad_request", &err.to_string()),
+                        true,
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Dispatch one framed request. Returns `false` when the connection must
+/// close afterwards.
+fn route(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, req: RawRequest) -> bool {
+    match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/healthz") => {
+            let status = if ctx.draining.load(Ordering::SeqCst) { "draining" } else { "ok" };
+            let models = ctx
+                .models
+                .iter()
+                .map(|m| {
+                    Json::obj_from(vec![
+                        ("name", Json::Str(m.name.clone())),
+                        ("input_len", Json::Num(m.input_len() as f64)),
+                    ])
+                })
+                .collect();
+            let body = Json::obj_from(vec![
+                ("status", Json::Str(status.to_string())),
+                ("models", Json::Arr(models)),
+            ])
+            .dump()
+            .into_bytes();
+            reply(conn, 200, "OK", &[], &body, false)
+        }
+        ("POST", "/admin/shutdown") => {
+            ctx.draining.store(true, Ordering::SeqCst);
+            let body = Json::obj_from(vec![("status", Json::Str("draining".to_string()))])
+                .dump()
+                .into_bytes();
+            reply(conn, 200, "OK", &[], &body, false)
+        }
+        ("POST", "/v1/infer") => {
+            if ctx.draining.load(Ordering::SeqCst) {
+                ctx.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
+                // close=true makes reply return false: connection ends.
+                return reply(
+                    conn,
+                    503,
+                    "Service Unavailable",
+                    &[],
+                    &error_body("shutting_down", "draining"),
+                    true,
+                );
+            }
+            serve_infer(ctx, conn, &req.body)
+        }
+        _ => {
+            ctx.counters.not_found.fetch_add(1, Ordering::Relaxed);
+            let detail = format!("{} {} is not an endpoint", req.method, req.target);
+            reply(conn, 404, "Not Found", &[], &error_body("not_found", &detail), false)
+        }
+    }
+}
+
+/// Write a response on the connection; `false` (= close) on write error
+/// or when `close` was requested.
+fn reply(
+    conn: &mut HttpConn<TcpStream>,
+    status: u16,
+    reason: &str,
+    extra: &[(&str, &str)],
+    body: &[u8],
+    close: bool,
+) -> bool {
+    let mut headers = vec![("content-type", "application/json")];
+    headers.extend_from_slice(extra);
+    write_response(conn.stream_mut(), status, reason, &headers, body, close).is_ok() && !close
+}
+
+/// Everything `POST /v1/infer` accepts, parsed and validated before any
+/// engine interaction.
+#[derive(Debug, PartialEq)]
+pub(crate) struct InferBody {
+    pub model: String,
+    pub id: u64,
+    pub priority: Priority,
+    pub deadline_us: Option<u64>,
+    pub client: Option<String>,
+    pub payload: Payload,
+}
+
+/// Image payload: inline floats, or a seed expanded server-side with
+/// [`synthetic_image`] (loadgen's cheap path — no megabyte bodies).
+#[derive(Debug, PartialEq)]
+pub(crate) enum Payload {
+    Inline(Vec<f32>),
+    Seed(u64),
+}
+
+/// Parse the infer body. Unknown keys are refused (the config-parser
+/// convention everywhere in this repo: typos must not be silently
+/// ignored). Errors are client-facing 400 details.
+pub(crate) fn parse_infer_body(body: &[u8]) -> std::result::Result<InferBody, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("body is not valid json: {e}"))?;
+    let obj = json.obj().map_err(|_| "body must be a json object".to_string())?;
+    const ALLOWED: [&str; 7] =
+        ["model", "id", "priority", "deadline_us", "client", "image", "image_seed"];
+    for key in obj.keys() {
+        if !ALLOWED.contains(&key.as_str()) {
+            return Err(format!("unknown key {key:?}; allowed: {}", ALLOWED.join(", ")));
+        }
+    }
+    let model = obj
+        .get("model")
+        .ok_or_else(|| "missing required key \"model\"".to_string())?
+        .str()
+        .map_err(|_| "\"model\" must be a string".to_string())?
+        .to_string();
+    let id = match obj.get("id") {
+        Some(v) => v.num().map_err(|_| "\"id\" must be a number".to_string())? as u64,
+        None => 0,
+    };
+    let priority = match obj.get("priority") {
+        Some(v) => {
+            let s = v.str().map_err(|_| "\"priority\" must be a string".to_string())?;
+            Priority::parse(s).map_err(|e| e.to_string())?
+        }
+        None => Priority::Normal,
+    };
+    let deadline_us = match obj.get("deadline_us") {
+        Some(v) => {
+            Some(v.num().map_err(|_| "\"deadline_us\" must be a number".to_string())? as u64)
+        }
+        None => None,
+    };
+    let client = match obj.get("client") {
+        Some(v) => {
+            Some(v.str().map_err(|_| "\"client\" must be a string".to_string())?.to_string())
+        }
+        None => None,
+    };
+    let payload = match (obj.get("image"), obj.get("image_seed")) {
+        (Some(_), Some(_)) => {
+            return Err("\"image\" and \"image_seed\" are mutually exclusive".to_string())
+        }
+        (None, None) => {
+            return Err("exactly one of \"image\" or \"image_seed\" is required".to_string())
+        }
+        (Some(arr), None) => {
+            let vals = arr.arr().map_err(|_| "\"image\" must be an array".to_string())?;
+            let mut data = Vec::with_capacity(vals.len());
+            for v in vals {
+                data.push(
+                    v.num().map_err(|_| "\"image\" must contain only numbers".to_string())?
+                        as f32,
+                );
+            }
+            Payload::Inline(data)
+        }
+        (None, Some(seed)) => Payload::Seed(
+            seed.num().map_err(|_| "\"image_seed\" must be a number".to_string())? as u64,
+        ),
+    };
+    Ok(InferBody { model, id, priority, deadline_us, client, payload })
+}
+
+/// Handle one `/v1/infer`: parse, build the tensor, submit, wait, map
+/// the typed outcome onto a status line. Returns `false` on forced close.
+fn serve_infer(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, body: &[u8]) -> bool {
+    let parsed = match parse_infer_body(body) {
+        Ok(p) => p,
+        Err(detail) => {
+            ctx.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+            return reply(conn, 400, "Bad Request", &[], &error_body("bad_request", &detail), false);
+        }
+    };
+    let meta = ctx.models.iter().find(|m| m.name == parsed.model);
+    let image = match (&meta, parsed.payload) {
+        (Some(meta), Payload::Inline(data)) => {
+            if data.len() != meta.input_len() {
+                ctx.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+                let detail = format!(
+                    "\"image\" has {} elements; model {:?} expects {}",
+                    data.len(),
+                    meta.name,
+                    meta.input_len()
+                );
+                return reply(
+                    conn,
+                    400,
+                    "Bad Request",
+                    &[],
+                    &error_body("bad_request", &detail),
+                    false,
+                );
+            }
+            match Tensor::new(meta.input_shape.clone(), data) {
+                Ok(t) => t,
+                Err(e) => {
+                    ctx.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+                    return reply(
+                        conn,
+                        400,
+                        "Bad Request",
+                        &[],
+                        &error_body("bad_request", &e.to_string()),
+                        false,
+                    );
+                }
+            }
+        }
+        (Some(meta), Payload::Seed(seed)) => {
+            let data = synthetic_image(seed, parsed.id, meta.input_len());
+            match Tensor::new(meta.input_shape.clone(), data) {
+                Ok(t) => t,
+                Err(e) => {
+                    ctx.counters.backend_error.fetch_add(1, Ordering::Relaxed);
+                    return reply(
+                        conn,
+                        500,
+                        "Internal Server Error",
+                        &[],
+                        &error_body("internal", &e.to_string()),
+                        false,
+                    );
+                }
+            }
+        }
+        // Unknown model: submit a placeholder so the *engine* counts the
+        // rejection — one accounting point for reconciliation.
+        (None, _) => Tensor::zeros(vec![1]),
+    };
+    let mut request = Request::new(parsed.model, parsed.id, image).priority(parsed.priority);
+    if let Some(d) = parsed.deadline_us {
+        request = request.deadline_us(d);
+    }
+    if let Some(c) = parsed.client {
+        request = request.client(c);
+    }
+    match ctx.engine.submit(request) {
+        Ok(waiter) => match waiter.wait() {
+            Ok(resp) => {
+                ctx.counters.ok.fetch_add(1, Ordering::Relaxed);
+                let logits =
+                    resp.logits.iter().map(|&x| Json::Num(x as f64)).collect::<Vec<_>>();
+                let body = Json::obj_from(vec![
+                    ("id", Json::Num(resp.id as f64)),
+                    ("model", Json::Str(resp.model)),
+                    ("latency_us", Json::Num(resp.latency_us as f64)),
+                    ("logits", Json::Arr(logits)),
+                ])
+                .dump()
+                .into_bytes();
+                reply(conn, 200, "OK", &[], &body, false)
+            }
+            Err(e) => engine_error_reply(ctx, conn, e),
+        },
+        Err(e) => engine_error_reply(ctx, conn, e),
+    }
+}
+
+/// Map a typed engine error onto the wire, mirroring the engine's own
+/// per-reason accounting in the front-end counters.
+fn engine_error_reply(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, err: EngineError) -> bool {
+    match err {
+        EngineError::Rejected { reason, detail, .. } => {
+            let (counter, status, reason_text, retry): (_, u16, _, bool) = match reason {
+                RejectReason::Full => {
+                    (&ctx.counters.rejected_full, 429, "Too Many Requests", true)
+                }
+                RejectReason::Shed => {
+                    (&ctx.counters.rejected_shed, 429, "Too Many Requests", true)
+                }
+                RejectReason::ClientQuota => {
+                    (&ctx.counters.rejected_quota, 429, "Too Many Requests", true)
+                }
+                RejectReason::UnknownModel => {
+                    (&ctx.counters.unknown_model, 404, "Not Found", false)
+                }
+            };
+            counter.fetch_add(1, Ordering::Relaxed);
+            let body = error_body(reason.as_str(), &detail);
+            let extra: &[(&str, &str)] =
+                if retry { &[("retry-after", "1")] } else { &[] };
+            reply(conn, status, reason_text, extra, &body, false)
+        }
+        EngineError::ShuttingDown => {
+            ctx.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
+            reply(
+                conn,
+                503,
+                "Service Unavailable",
+                &[],
+                &error_body("shutting_down", "engine is shutting down"),
+                true,
+            )
+        }
+        EngineError::Backend(msg) => {
+            ctx.counters.backend_error.fetch_add(1, Ordering::Relaxed);
+            reply(conn, 500, "Internal Server Error", &[], &error_body("backend", &msg), false)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_body_parses_full_and_minimal_forms() {
+        let full = br#"{"model":"micro","id":7,"priority":"high","deadline_us":5000,
+                        "client":"c1","image":[1.0,2.0]}"#;
+        let b = parse_infer_body(full).unwrap();
+        assert_eq!(b.model, "micro");
+        assert_eq!(b.id, 7);
+        assert_eq!(b.priority, Priority::High);
+        assert_eq!(b.deadline_us, Some(5000));
+        assert_eq!(b.client.as_deref(), Some("c1"));
+        assert_eq!(b.payload, Payload::Inline(vec![1.0, 2.0]));
+
+        let minimal = br#"{"model":"micro","image_seed":42}"#;
+        let b = parse_infer_body(minimal).unwrap();
+        assert_eq!(b.id, 0);
+        assert_eq!(b.priority, Priority::Normal);
+        assert_eq!(b.deadline_us, None);
+        assert_eq!(b.client, None);
+        assert_eq!(b.payload, Payload::Seed(42));
+    }
+
+    #[test]
+    fn infer_body_refuses_malformed_inputs() {
+        for (body, needle) in [
+            (&b"not json"[..], "not valid json"),
+            (br#"[1,2]"#, "must be a json object"),
+            (br#"{"image_seed":1}"#, "missing required key"),
+            (br#"{"model":"m"}"#, "exactly one of"),
+            (br#"{"model":"m","image":[1],"image_seed":2}"#, "mutually exclusive"),
+            (br#"{"model":"m","image_seed":1,"typo_key":3}"#, "unknown key"),
+            (br#"{"model":"m","image":[1,"x"]}"#, "only numbers"),
+            (br#"{"model":"m","image_seed":1,"priority":"urgent"}"#, "unknown priority"),
+            (br#"{"model":3,"image_seed":1}"#, "must be a string"),
+        ] {
+            let err = parse_infer_body(body).unwrap_err();
+            assert!(
+                err.contains(needle),
+                "body {:?}: expected {needle:?} in {err:?}",
+                String::from_utf8_lossy(body)
+            );
+        }
+    }
+
+    #[test]
+    fn net_report_json_has_every_counter() {
+        let c = NetCounters::default();
+        c.ok.fetch_add(3, Ordering::Relaxed);
+        c.rejected_full.fetch_add(2, Ordering::Relaxed);
+        let j = c.snapshot().to_json();
+        for key in [
+            "conns",
+            "conn_busy",
+            "ok",
+            "bad_request",
+            "not_found",
+            "rejected_full",
+            "rejected_shed",
+            "rejected_quota",
+            "unknown_model",
+            "shutting_down",
+            "backend_error",
+        ] {
+            assert!(j.get(key).is_ok(), "missing {key}");
+        }
+        assert_eq!(j.get("ok").unwrap().usize().unwrap(), 3);
+        assert_eq!(j.get("rejected_full").unwrap().usize().unwrap(), 2);
+    }
+}

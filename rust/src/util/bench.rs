@@ -270,6 +270,25 @@ pub fn check_speedups(
     Ok(PerfGate { tolerance, checks })
 }
 
+/// Build a `"speedups"` array from already-computed named ratios, in the
+/// exact shape [`check_speedups`] reads on the current side. For
+/// artifacts whose gated numbers are not baseline/optimized timing pairs
+/// — e.g. the loadgen's goodput ratio in `BENCH_serving.json` — but that
+/// still go through the same perfcheck gate.
+pub fn named_speedups(ratios: &[(&str, f64)]) -> Json {
+    Json::Arr(
+        ratios
+            .iter()
+            .map(|(name, s)| {
+                Json::obj_from(vec![
+                    ("name", Json::Str(name.to_string())),
+                    ("speedup", Json::Num(*s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Print one row of a paper-table reproduction.
 pub fn row(cols: &[String]) {
     println!("{}", cols.join(" | "));
@@ -328,6 +347,23 @@ mod tests {
         assert!(check_speedups(&current, &Json::parse(r#"{"speedups":{}}"#).unwrap(), None)
             .is_err());
         assert!(check_speedups(&current, &baseline, Some(1.5)).is_err());
+    }
+
+    #[test]
+    fn named_speedups_feed_the_gate() {
+        let current = Json::obj_from(vec![(
+            "speedups",
+            named_speedups(&[("serving_goodput_ratio", 1.0), ("other", 0.25)]),
+        )]);
+        let baseline =
+            Json::parse(r#"{"tolerance":0.2,"speedups":{"serving_goodput_ratio":1.0}}"#)
+                .unwrap();
+        let gate = check_speedups(&current, &baseline, None).unwrap();
+        assert!(gate.passed(), "{:?}", gate.checks);
+        // Round-trips through dump/parse like a real artifact.
+        let reparsed = Json::parse(&current.dump()).unwrap();
+        let gate = check_speedups(&reparsed, &baseline, None).unwrap();
+        assert!(gate.passed());
     }
 
     #[test]

@@ -1,0 +1,632 @@
+//! Network-layer properties (the acceptance gate for the HTTP serving
+//! front-end):
+//!
+//! * the HTTP/1.1 framing layer never panics: arbitrarily fragmented,
+//!   truncated, or garbage input maps to a typed [`FrameError`] (or a
+//!   valid message), and pipelined messages parse identically however
+//!   the bytes are chunked;
+//! * over a real socket, the status mapping is one-to-one with the
+//!   typed engine surface: 200 bitwise-correct logits, 404 unknown
+//!   model, 400 malformed bodies, 429 Full / ClientQuota with a
+//!   `retry-after`, 503 + answered in-flight requests on graceful
+//!   drain;
+//! * front-end counters reconcile exactly with the engine's own report
+//!   (one accounting point per refusal class);
+//! * the seeded closed-loop loadgen completes every request against a
+//!   live server and its artifact reconciles with both reports.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use mamba_x::coordinator::{BatchPolicy, Engine, EngineBuilder, EngineJoin, EngineReport};
+use mamba_x::net::http::{write_request, write_response};
+use mamba_x::net::{
+    loadgen, ArrivalMode, BoundServer, FrameError, HttpConn, HttpLimits, LoadgenConfig,
+    ModelMeta, NetConfig, NetReport,
+};
+use mamba_x::runtime::{native::synthetic_image, InferenceBackend, ModelSpec, Tensor};
+use mamba_x::util::{Json, Pcg};
+
+// ---------------------------------------------------------------------------
+// Framing properties (in-memory, seeded fragmentation)
+// ---------------------------------------------------------------------------
+
+/// Reader that hands out the wire bytes in random 1..=7 byte fragments,
+/// so every parser code path that resumes across `read` boundaries is
+/// exercised.
+struct FragmentReader {
+    data: Vec<u8>,
+    pos: usize,
+    rng: Pcg,
+}
+
+impl FragmentReader {
+    fn new(data: Vec<u8>, seed: u64) -> Self {
+        FragmentReader { data, pos: 0, rng: Pcg::new(seed) }
+    }
+}
+
+impl Read for FragmentReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        let n = self.rng.usize_in(1, 7).min(buf.len()).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+/// Build a random-but-valid request wire image from the seeded stream.
+fn random_request_wire(rng: &mut Pcg) -> (Vec<u8>, usize) {
+    let n = rng.usize_in(1, 4);
+    let mut wire = Vec::new();
+    for k in 0..n {
+        let body: Vec<u8> =
+            (0..rng.usize_in(0, 50)).map(|_| rng.below(256) as u8).collect();
+        let method = ["GET", "POST", "PUT"][rng.usize_in(0, 2)];
+        let target = format!("/path/{k}");
+        let extra = format!("v{}", rng.below(1000));
+        write_request(&mut wire, method, &target, &[("x-extra", extra.as_str())], &body)
+            .unwrap();
+    }
+    (wire, n)
+}
+
+#[test]
+fn prop_fragmentation_is_invisible_to_the_parser() {
+    let mut rng = Pcg::new(0xF00D);
+    for case in 0..50u64 {
+        let (wire, n) = random_request_wire(&mut rng);
+        // Parse once over whole-buffer reads, once over fragments.
+        let mut whole = HttpConn::new(std::io::Cursor::new(wire.clone()), HttpLimits::default());
+        let mut frag =
+            HttpConn::new(FragmentReader::new(wire, 1000 + case), HttpLimits::default());
+        for i in 0..n {
+            let a = whole.read_request().unwrap();
+            let b = frag.read_request().unwrap();
+            assert_eq!(a, b, "case {case} message {i}");
+        }
+        assert_eq!(whole.read_request().unwrap_err(), FrameError::Eof);
+        assert_eq!(frag.read_request().unwrap_err(), FrameError::Eof);
+    }
+}
+
+#[test]
+fn prop_truncation_anywhere_is_typed_never_a_panic() {
+    let mut rng = Pcg::new(0xBEEF);
+    for case in 0..30u64 {
+        let (wire, _) = random_request_wire(&mut rng);
+        for _ in 0..20 {
+            let cut = rng.usize_in(0, wire.len() - 1);
+            let mut conn = HttpConn::new(
+                FragmentReader::new(wire[..cut].to_vec(), 7 + case),
+                HttpLimits::default(),
+            );
+            // Complete prefixes parse; the first incomplete message is a
+            // clean Eof (between messages) or Truncated (mid-message).
+            loop {
+                match conn.read_request() {
+                    Ok(_) => continue,
+                    Err(FrameError::Eof) | Err(FrameError::Truncated) => break,
+                    Err(other) => panic!("case {case} cut {cut}: unexpected {other:?}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_garbage_bytes_never_panic() {
+    let mut rng = Pcg::new(0xDEAD);
+    for _ in 0..200 {
+        let junk: Vec<u8> = (0..rng.usize_in(0, 300)).map(|_| rng.below(256) as u8).collect();
+        let mut conn = HttpConn::new(std::io::Cursor::new(junk), HttpLimits::default());
+        // Any outcome is fine as long as it is a value, not a panic.
+        let _ = conn.read_request();
+    }
+}
+
+#[test]
+fn prop_content_length_abuse_is_refused_before_reading_bodies() {
+    let mut rng = Pcg::new(0x5EED);
+    let limits = HttpLimits { max_head_bytes: 4096, max_body_bytes: 1 << 20 };
+    for _ in 0..50 {
+        // Oversize lengths are refused from the head alone — no body
+        // bytes follow and none are needed.
+        let over = (1u64 << 20) + 1 + rng.below(1 << 40);
+        let wire = format!("POST /v1/infer HTTP/1.1\r\ncontent-length: {over}\r\n\r\n");
+        let err = HttpConn::new(std::io::Cursor::new(wire.into_bytes()), limits)
+            .read_request()
+            .unwrap_err();
+        assert!(
+            matches!(err, FrameError::BodyTooLarge { .. }),
+            "content-length {over}: {err:?}"
+        );
+        assert_eq!(err.status().unwrap().0, 413);
+        // Non-numeric lengths are typed 400s.
+        let bad = format!("{}x{}", rng.below(100), rng.below(100));
+        let wire = format!("POST / HTTP/1.1\r\ncontent-length: {bad}\r\n\r\n");
+        let err = HttpConn::new(std::io::Cursor::new(wire.into_bytes()), limits)
+            .read_request()
+            .unwrap_err();
+        assert!(matches!(err, FrameError::BadContentLength(_)), "{bad}: {err:?}");
+        assert_eq!(err.status().unwrap().0, 400);
+    }
+}
+
+#[test]
+fn prop_response_writer_round_trips_through_fragmentation() {
+    let mut rng = Pcg::new(0xCAFE);
+    for case in 0..30u64 {
+        let mut wire = Vec::new();
+        let mut sent = Vec::new();
+        for _ in 0..rng.usize_in(1, 3) {
+            let status = [200u16, 400, 404, 429, 503][rng.usize_in(0, 4)];
+            let body: Vec<u8> =
+                (0..rng.usize_in(0, 40)).map(|_| rng.below(256) as u8).collect();
+            write_response(&mut wire, status, "Reason", &[("x-t", "1")], &body, false).unwrap();
+            sent.push((status, body));
+        }
+        let mut conn =
+            HttpConn::new(FragmentReader::new(wire, 40 + case), HttpLimits::default());
+        for (status, body) in &sent {
+            let resp = conn.read_response().unwrap();
+            assert_eq!(resp.status, *status);
+            assert_eq!(&resp.body, body);
+            assert_eq!(resp.header("x-t"), Some("1"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Socket end-to-end: engine semantics over the wire
+// ---------------------------------------------------------------------------
+
+/// Deterministic test backend: logits = [sum, count] of the image, with
+/// an optional per-inference service delay to hold requests in flight.
+struct Summing {
+    delay: Duration,
+}
+
+impl InferenceBackend for Summing {
+    fn name(&self) -> &'static str {
+        "summing"
+    }
+
+    fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        Ok(vec![image.data.iter().sum::<f32>(), image.data.len() as f32])
+    }
+}
+
+/// Engine hosting one 2-element "sum" model with the given pool shape.
+fn sum_engine(
+    workers: usize,
+    max_batch: usize,
+    max_wait_us: u64,
+    queue_depth: usize,
+    client_quota: usize,
+    delay_ms: u64,
+) -> (Engine, EngineJoin, Vec<ModelMeta>) {
+    let spec = ModelSpec::new(
+        "sum",
+        Arc::new(move |_w| {
+            Ok(Box::new(Summing { delay: Duration::from_millis(delay_ms) })
+                as Box<dyn InferenceBackend>)
+        }),
+    );
+    let (engine, join) = EngineBuilder::new()
+        .workers(workers)
+        .policy(BatchPolicy { max_batch, max_wait_us })
+        .queue_depth(queue_depth)
+        .client_quota(client_quota)
+        .register(spec)
+        .unwrap()
+        .build()
+        .unwrap();
+    let metas = vec![ModelMeta { name: "sum".to_string(), input_shape: vec![2] }];
+    (engine, join, metas)
+}
+
+/// Bind on an ephemeral port and serve on a background thread.
+fn spawn_http(
+    engine: Engine,
+    metas: Vec<ModelMeta>,
+) -> (SocketAddr, std::thread::JoinHandle<Result<NetReport>>) {
+    let bound = BoundServer::bind(NetConfig::new("127.0.0.1:0")).unwrap();
+    let addr = bound.local_addr().unwrap();
+    let handle = std::thread::spawn(move || bound.serve(engine, metas));
+    (addr, handle)
+}
+
+fn connect(addr: SocketAddr) -> HttpConn<TcpStream> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    HttpConn::new(stream, HttpLimits::default())
+}
+
+/// One-shot POST on a fresh connection.
+fn post(addr: SocketAddr, target: &str, body: &[u8]) -> mamba_x::net::RawResponse {
+    let mut conn = connect(addr);
+    write_request(conn.stream_mut(), "POST", target, &[], body).unwrap();
+    conn.read_response().unwrap()
+}
+
+fn shutdown(addr: SocketAddr) {
+    let resp = post(addr, "/admin/shutdown", b"");
+    assert_eq!(resp.status, 200);
+}
+
+fn body_json(resp: &mamba_x::net::RawResponse) -> Json {
+    Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+}
+
+fn error_code(resp: &mamba_x::net::RawResponse) -> String {
+    body_json(resp).get("error").unwrap().str().unwrap().to_string()
+}
+
+/// ACCEPTANCE: inference over HTTP is bitwise identical to the backend,
+/// for both inline payloads and server-side seeded images; unknown
+/// models and malformed bodies get typed statuses; and every counter
+/// reconciles between the front-end report and the engine report.
+#[test]
+fn http_round_trip_is_bitwise_and_reports_reconcile() {
+    let (engine, join, metas) = sum_engine(2, 4, 1000, 64, 0, 0);
+    let (addr, server) = spawn_http(engine, metas);
+
+    // healthz advertises the hosted model and its payload contract.
+    let mut conn = connect(addr);
+    write_request(conn.stream_mut(), "GET", "/healthz", &[], b"").unwrap();
+    let health = conn.read_response().unwrap();
+    assert_eq!(health.status, 200);
+    let hj = body_json(&health);
+    assert_eq!(hj.get("status").unwrap().str().unwrap(), "ok");
+    assert_eq!(hj.get("models").unwrap().arr().unwrap().len(), 1);
+    let m0 = &hj.get("models").unwrap().arr().unwrap()[0];
+    assert_eq!(m0.get("name").unwrap().str().unwrap(), "sum");
+    assert_eq!(m0.get("input_len").unwrap().usize().unwrap(), 2);
+
+    // Inline payload: logits bitwise = [1+2, 2].
+    let ok = post(addr, "/v1/infer", br#"{"model":"sum","id":9,"image":[1.0,2.0]}"#);
+    assert_eq!(ok.status, 200, "{:?}", String::from_utf8_lossy(&ok.body));
+    let oj = body_json(&ok);
+    assert_eq!(oj.get("id").unwrap().usize().unwrap(), 9);
+    assert_eq!(oj.get("model").unwrap().str().unwrap(), "sum");
+    let logits: Vec<f64> =
+        oj.get("logits").unwrap().arr().unwrap().iter().map(|v| v.num().unwrap()).collect();
+    assert_eq!(logits, [3.0, 2.0]);
+
+    // Seeded payload: the server expands synthetic_image(seed, id, 2)
+    // itself; expected sum computed from the same deterministic stream.
+    let seeded = post(addr, "/v1/infer", br#"{"model":"sum","id":4,"image_seed":11}"#);
+    assert_eq!(seeded.status, 200);
+    let want: f32 = synthetic_image(11, 4, 2).iter().sum();
+    let got = body_json(&seeded).get("logits").unwrap().arr().unwrap()[0].num().unwrap();
+    assert_eq!(got as f32, want, "seeded inference must be bitwise reproducible");
+
+    // Unknown model: 404, counted by the ENGINE (single accounting
+    // point), with the hosted list in the detail.
+    let nf = post(addr, "/v1/infer", br#"{"model":"nope","image":[1.0]}"#);
+    assert_eq!(nf.status, 404);
+    assert_eq!(error_code(&nf), "unknown_model");
+
+    // Malformed bodies: typed 400s, never accepted, never a panic.
+    for bad in [
+        &b"not json at all"[..],
+        br#"{"model":"sum"}"#,
+        br#"{"model":"sum","image":[1.0,2.0],"image_seed":3}"#,
+        br#"{"model":"sum","image":[1.0,2.0,3.0]}"#,
+        br#"{"model":"sum","image_seed":1,"typo":true}"#,
+        br#"{"model":"sum","image_seed":1,"priority":"urgent"}"#,
+    ] {
+        let resp = post(addr, "/v1/infer", bad);
+        assert_eq!(resp.status, 400, "{:?}", String::from_utf8_lossy(bad));
+        assert_eq!(error_code(&resp), "bad_request");
+    }
+
+    // Unknown route: 404 with a distinct code (not engine-accounted).
+    let nr = post(addr, "/v1/nope", b"{}");
+    assert_eq!(nr.status, 404);
+    assert_eq!(error_code(&nr), "not_found");
+
+    // Malformed request line over the raw socket: typed 400, then close.
+    let mut raw = TcpStream::connect(addr).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    raw.write_all(b"BOGUS\r\n\r\n").unwrap();
+    let mut rconn = HttpConn::new(raw, HttpLimits::default());
+    let resp = rconn.read_response().unwrap();
+    assert_eq!(resp.status, 400);
+    assert!(resp.close);
+
+    shutdown(addr);
+    let net = server.join().unwrap().unwrap();
+    let report: EngineReport = join.join().unwrap();
+
+    // Reconciliation: the two OK inferences are the engine's only
+    // completions; the unknown-model 404 is the engine's count; the
+    // front-end 400s never reached the engine.
+    assert_eq!(net.ok, 2);
+    assert_eq!(report.merged().count(), 2);
+    assert_eq!(net.unknown_model, 1);
+    assert_eq!(report.rejected_unknown_model, 1);
+    assert_eq!(net.bad_request, 7, "6 bad bodies + 1 bad request line");
+    assert_eq!(net.not_found, 1);
+    assert_eq!(report.merged().rejected(), 0, "no admission rejections in this test");
+}
+
+/// Pipelined requests on one connection are answered in order.
+#[test]
+fn http_pipelining_answers_in_order() {
+    let (engine, join, metas) = sum_engine(1, 4, 500, 64, 0, 0);
+    let (addr, server) = spawn_http(engine, metas);
+
+    let mut wire = Vec::new();
+    let one = br#"{"model":"sum","id":1,"image":[1.0,1.0]}"#;
+    let two = br#"{"model":"sum","id":2,"image":[2.0,2.0]}"#;
+    write_request(&mut wire, "POST", "/v1/infer", &[], one).unwrap();
+    write_request(&mut wire, "POST", "/v1/infer", &[], two).unwrap();
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut conn = HttpConn::new(stream, HttpLimits::default());
+    conn.stream_mut().write_all(&wire).unwrap();
+    for (want_id, want_sum) in [(1u64, 2.0), (2, 4.0)] {
+        let resp = conn.read_response().unwrap();
+        assert_eq!(resp.status, 200);
+        let j = body_json(&resp);
+        assert_eq!(j.get("id").unwrap().usize().unwrap() as u64, want_id);
+        assert_eq!(j.get("logits").unwrap().arr().unwrap()[0].num().unwrap(), want_sum);
+    }
+
+    shutdown(addr);
+    server.join().unwrap().unwrap();
+    assert_eq!(join.join().unwrap().merged().count(), 2);
+}
+
+/// A full queue surfaces as 429 + retry-after with the engine's "full"
+/// reason on the wire.
+#[test]
+fn http_backpressure_maps_to_429_full() {
+    // depth 1, slow batch formation (300ms max_wait, max_batch 2): the
+    // first request stays pending long enough for the second to hit a
+    // full queue deterministically.
+    let (engine, join, metas) = sum_engine(1, 2, 300_000, 1, 0, 0);
+    let (addr, server) = spawn_http(engine, metas);
+
+    let first = std::thread::spawn(move || {
+        post(addr, "/v1/infer", br#"{"model":"sum","id":1,"priority":"high","image":[1.0,2.0]}"#)
+    });
+    std::thread::sleep(Duration::from_millis(80));
+    let refused =
+        post(addr, "/v1/infer", br#"{"model":"sum","id":2,"priority":"high","image":[3.0,4.0]}"#);
+    assert_eq!(refused.status, 429);
+    assert_eq!(error_code(&refused), "full");
+    assert_eq!(refused.header("retry-after"), Some("1"));
+
+    let ok = first.join().unwrap();
+    assert_eq!(ok.status, 200, "the accepted request completes (accepted-never-shed)");
+
+    shutdown(addr);
+    let net = server.join().unwrap().unwrap();
+    let report = join.join().unwrap();
+    assert_eq!(net.ok, 1);
+    assert_eq!(net.rejected_full, 1);
+    assert_eq!(report.merged().rejected_full, 1, "front-end and engine agree");
+}
+
+/// Per-client quotas refuse the over-quota client specifically while
+/// other clients proceed; counters reconcile end to end.
+#[test]
+fn http_client_quota_is_per_client_and_reconciles() {
+    let (engine, join, metas) = sum_engine(1, 1, 0, 16, 1, 150);
+    let (addr, server) = spawn_http(engine, metas);
+
+    // Client "x" holds its one slot for ~150ms.
+    let slow = std::thread::spawn(move || {
+        post(addr, "/v1/infer", br#"{"model":"sum","id":1,"client":"x","image":[1.0,2.0]}"#)
+    });
+    std::thread::sleep(Duration::from_millis(40));
+    // Same client, second in-flight request: refused as quota, not full.
+    let refused =
+        post(addr, "/v1/infer", br#"{"model":"sum","id":2,"client":"x","image":[1.0,2.0]}"#);
+    assert_eq!(refused.status, 429);
+    assert_eq!(error_code(&refused), "client_quota");
+    // A different client is admitted (the queue has room).
+    let other =
+        post(addr, "/v1/infer", br#"{"model":"sum","id":3,"client":"y","image":[5.0,6.0]}"#);
+    assert_eq!(other.status, 200);
+    assert_eq!(slow.join().unwrap().status, 200);
+
+    shutdown(addr);
+    let net = server.join().unwrap().unwrap();
+    let report = join.join().unwrap();
+    assert_eq!(net.ok, 2);
+    assert_eq!(net.rejected_quota, 1);
+    assert_eq!(report.merged().rejected_quota, 1);
+    assert_eq!(report.merged().count(), 2);
+}
+
+/// ACCEPTANCE: graceful drain — after /admin/shutdown the in-flight
+/// request is answered, new connections get 503, and `serve` returns.
+#[test]
+fn http_graceful_drain_answers_in_flight_and_refuses_new() {
+    let (engine, join, metas) = sum_engine(1, 1, 0, 16, 0, 200);
+    let (addr, server) = spawn_http(engine, metas);
+
+    // In-flight request held ~200ms by the backend.
+    let inflight = std::thread::spawn(move || {
+        post(addr, "/v1/infer", br#"{"model":"sum","id":1,"image":[1.0,2.0]}"#)
+    });
+    std::thread::sleep(Duration::from_millis(50));
+    shutdown(addr);
+
+    // A connection arriving after the drain began is refused with 503.
+    let late = post(addr, "/v1/infer", br#"{"model":"sum","id":2,"image":[1.0,2.0]}"#);
+    assert_eq!(late.status, 503);
+    assert_eq!(error_code(&late), "shutting_down");
+
+    // The in-flight request still completes with real results.
+    let resp = inflight.join().unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(body_json(&resp).get("logits").unwrap().arr().unwrap()[0].num().unwrap(), 3.0);
+
+    // serve() returns on its own — the drain finished.
+    let net = server.join().unwrap().unwrap();
+    let report = join.join().unwrap();
+    assert_eq!(net.ok, 1);
+    assert!(net.shutting_down >= 1);
+    assert_eq!(report.merged().count(), 1);
+}
+
+/// ACCEPTANCE: the seeded closed-loop loadgen completes every request
+/// against a live server and all three reports (loadgen artifact,
+/// front-end counters, engine report) agree exactly.
+#[test]
+fn loadgen_closed_loop_reconciles_exactly() {
+    let (engine, join, metas) = sum_engine(2, 4, 1000, 64, 0, 0);
+    let (addr, server) = spawn_http(engine, metas);
+
+    let mut cfg = LoadgenConfig::new(addr.to_string());
+    cfg.requests = 24;
+    cfg.clients = 3;
+    cfg.mode = ArrivalMode::Closed;
+    cfg.seed = 5;
+    cfg.priorities = loadgen::parse_priority_mix("high=1,normal=1").unwrap();
+    cfg.shutdown = true; // drain the server when done
+    let artifact = loadgen::run(&cfg).unwrap();
+
+    let n = |key: &str| artifact.get(key).unwrap().usize().unwrap();
+    assert_eq!(artifact.get("format").unwrap().str().unwrap(), "mamba-x-serving-bench");
+    assert_eq!(n("sent"), 24);
+    assert_eq!(n("completed"), 24, "closed-loop against an idle server loses nothing");
+    assert_eq!(n("transport_errors"), 0);
+    let sp = artifact.get("speedups").unwrap().arr().unwrap();
+    assert_eq!(sp[0].get("name").unwrap().str().unwrap(), "serving_goodput_ratio");
+    assert_eq!(sp[0].get("speedup").unwrap().num().unwrap(), 1.0);
+    assert!(artifact.get("goodput_rps").unwrap().num().unwrap() > 0.0);
+    // Per-priority splits sum to the whole.
+    let pp = artifact.get("per_priority").unwrap();
+    let sent_by_tier: usize = ["low", "normal", "high"]
+        .iter()
+        .map(|t| pp.get(t).unwrap().get("sent").unwrap().usize().unwrap())
+        .sum();
+    assert_eq!(sent_by_tier, 24);
+    assert_eq!(pp.get("low").unwrap().get("sent").unwrap().usize().unwrap(), 0);
+
+    let net = server.join().unwrap().unwrap();
+    let report = join.join().unwrap();
+    assert_eq!(net.ok, 24, "front-end agrees with the loadgen");
+    assert_eq!(report.merged().count(), 24, "engine agrees with the loadgen");
+    assert_eq!(report.merged().rejected(), 0);
+    assert_eq!(report.rejected_unknown_model, 0);
+}
+
+/// Open-loop mode drives the same reconciliation: every request is
+/// accounted for in exactly one outcome class (none lost, none double-
+/// counted), even when admission control sheds some of the burst.
+#[test]
+fn loadgen_open_loop_accounts_for_every_request() {
+    // Small queue + priority mix so bursty arrivals can actually shed.
+    let (engine, join, metas) = sum_engine(1, 2, 500, 4, 0, 2);
+    let (addr, server) = spawn_http(engine, metas);
+
+    let mut cfg = LoadgenConfig::new(addr.to_string());
+    cfg.requests = 40;
+    cfg.clients = 4;
+    cfg.mode = ArrivalMode::Open { rate_rps: 2000.0, dist: loadgen::Dist::Bursty };
+    cfg.seed = 9;
+    cfg.priorities = loadgen::parse_priority_mix("high=1,normal=1,low=1").unwrap();
+    cfg.shutdown = true;
+    let artifact = loadgen::run(&cfg).unwrap();
+
+    let n = |key: &str| artifact.get(key).unwrap().usize().unwrap() as u64;
+    assert_eq!(n("sent"), 40);
+    let accounted = n("completed")
+        + n("rejected_full")
+        + n("rejected_shed")
+        + n("rejected_quota")
+        + n("unknown_model")
+        + n("bad_request")
+        + n("shutting_down")
+        + n("backend_error")
+        + n("transport_errors");
+    assert_eq!(accounted, 40, "every request lands in exactly one class");
+
+    let net = server.join().unwrap().unwrap();
+    let report = join.join().unwrap();
+    assert_eq!(net.ok, n("completed"));
+    assert_eq!(report.merged().count(), n("completed") as usize);
+    assert_eq!(net.rejected_full + net.rejected_shed, n("rejected_full") + n("rejected_shed"));
+    assert_eq!(
+        report.merged().rejected_full + report.merged().rejected_shed,
+        n("rejected_full") + n("rejected_shed"),
+        "engine-side refusal accounting matches the wire"
+    );
+}
+
+/// Priority is not dead config: under the same overloaded shape, low
+/// tiers shed strictly before high (uses the fixed strict tiering).
+#[test]
+fn loadgen_priority_mix_reaches_the_engine() {
+    let (engine, join, metas) = sum_engine(1, 1, 0, 4, 0, 1);
+    let (addr, server) = spawn_http(engine, metas);
+
+    let mut cfg = LoadgenConfig::new(addr.to_string());
+    cfg.requests = 60;
+    cfg.clients = 6;
+    cfg.mode = ArrivalMode::Open { rate_rps: 3000.0, dist: loadgen::Dist::Uniform };
+    cfg.seed = 13;
+    cfg.priorities = loadgen::parse_priority_mix("high=1,low=1").unwrap();
+    cfg.shutdown = true;
+    let artifact = loadgen::run(&cfg).unwrap();
+
+    let pp = artifact.get("per_priority").unwrap();
+    let tier = |t: &str, k: &str| pp.get(t).unwrap().get(k).unwrap().num().unwrap();
+    // Both tiers saw traffic (the mix sampler is seeded, so this is
+    // deterministic), and the per-tier split covers every request.
+    assert!(tier("high", "sent") > 0.0 && tier("low", "sent") > 0.0);
+    assert_eq!(tier("high", "sent") + tier("low", "sent") + tier("normal", "sent"), 60.0);
+    // High is never *priority*-shed: its threshold equals the queue
+    // depth, and the bounded-queue check fires first — so any high
+    // refusal is "full", never "shed", whatever the timing.
+    assert_eq!(tier("high", "rejected_shed"), 0.0, "high must only ever see 429 full");
+    // Tier refusals sum to the overall refusal counters.
+    let sum_tiers = |k: &str| tier("low", k) + tier("normal", k) + tier("high", k);
+    for k in ["completed", "rejected_full", "rejected_shed", "transport_errors"] {
+        assert_eq!(sum_tiers(k), artifact.get(k).unwrap().num().unwrap(), "{k}");
+    }
+
+    server.join().unwrap().unwrap();
+    join.join().unwrap();
+}
+
+#[test]
+fn priority_tag_round_trips_to_engine_rejections() {
+    // Depth 3 with strict tiering: low sheds at 1 pending, high only at
+    // 3. Submit a held request, then a low one -> "shed" on the wire.
+    let (engine, join, metas) = sum_engine(1, 2, 300_000, 3, 0, 0);
+    let (addr, server) = spawn_http(engine, metas);
+
+    let first = std::thread::spawn(move || {
+        post(addr, "/v1/infer", br#"{"model":"sum","id":1,"priority":"high","image":[1.0,2.0]}"#)
+    });
+    std::thread::sleep(Duration::from_millis(80));
+    let low =
+        post(addr, "/v1/infer", br#"{"model":"sum","id":2,"priority":"low","image":[1.0,2.0]}"#);
+    assert_eq!(low.status, 429);
+    assert_eq!(error_code(&low), "shed");
+    assert_eq!(first.join().unwrap().status, 200);
+
+    shutdown(addr);
+    let net = server.join().unwrap().unwrap();
+    let report = join.join().unwrap();
+    assert_eq!(net.rejected_shed, 1);
+    assert_eq!(report.merged().rejected_shed, 1);
+}

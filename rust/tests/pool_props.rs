@@ -187,9 +187,19 @@ fn queue_depth_floor_still_serves() {
 #[test]
 fn prop_admission_monotone_in_priority_and_deadline() {
     let mut rng = Pcg::new(0xAD15);
-    for case in 0..300 {
+    // Random geometry for breadth, PLUS every depth in 1..=8 exhaustively
+    // (ISSUE 6: the small depths are where tier collapse used to hide).
+    let mut geometries: Vec<(usize, usize)> = Vec::new();
+    for depth in 1..=8usize {
+        for pending in 0..=depth + 2 {
+            geometries.push((depth, pending));
+        }
+    }
+    for _ in 0..300 {
         let depth = rng.usize_in(1, 64);
-        let pending = rng.usize_in(0, depth + 8);
+        geometries.push((depth, rng.usize_in(0, depth + 8)));
+    }
+    for (case, &(depth, pending)) in geometries.iter().enumerate() {
         let projected = rng.usize_in(0, 5_000) as u64;
         let deadline = match rng.usize_in(0, 2) {
             0 => None,
@@ -239,6 +249,23 @@ fn prop_admission_monotone_in_priority_and_deadline() {
             }
         }
     }
+    // Strict-tiering consequence at every small depth >= 3 (regression,
+    // ISSUE 6): some backlog admits Normal while shedding Low, and some
+    // backlog admits High while shedding Normal.
+    for depth in 3..=8usize {
+        let low_t = Priority::Low.shed_threshold(depth);
+        let normal_t = Priority::Normal.shed_threshold(depth);
+        assert!(admission_check(low_t, depth, Priority::Low, None, 0).is_err(), "depth {depth}");
+        assert!(admission_check(low_t, depth, Priority::Normal, None, 0).is_ok(), "depth {depth}");
+        assert!(
+            admission_check(normal_t, depth, Priority::Normal, None, 0).is_err(),
+            "depth {depth}"
+        );
+        assert!(
+            admission_check(normal_t, depth, Priority::High, None, 0).is_ok(),
+            "depth {depth}"
+        );
+    }
 }
 
 /// PROPERTY: under deadline churn — random priorities, deadlines and a
@@ -286,6 +313,9 @@ fn prop_accepted_never_shed_under_deadline_churn() {
                     mamba_x::coordinator::RejectReason::Shed => seen_shed += 1,
                     mamba_x::coordinator::RejectReason::UnknownModel => {
                         panic!("case {case}: model is registered")
+                    }
+                    mamba_x::coordinator::RejectReason::ClientQuota => {
+                        panic!("case {case}: no quota configured")
                     }
                 },
                 Err(e) => panic!("case {case}: untyped refusal {e}"),
