@@ -36,13 +36,34 @@
 //!   exceeds the target. Admitting it would waste a backend slot on an
 //!   answer the client no longer wants.
 //!
-//! Admission decides at submit time only: an accepted request is NEVER
-//! shed later (`rust/tests/pool_props.rs` pins this, plus the priority
-//! monotonicity of [`admission_check`]); multi-model bitwise invariance
-//! vs direct inference lives in `rust/tests/engine_props.rs`.
+//! * **Circuit breaker** — per model, `breaker_threshold` consecutive
+//!   backend failures open a breaker that fast-fails new submissions
+//!   typed ([`RejectReason::BreakerOpen`]) instead of queueing work a
+//!   sick backend will burn; after `breaker_cooldown_ms` one half-open
+//!   probe request is admitted, and its outcome closes or re-opens the
+//!   breaker.
+//!
+//! Admission decides *shedding* at submit time only: an accepted
+//! request is never shed by later load (`rust/tests/pool_props.rs`
+//! pins this, plus the priority monotonicity of [`admission_check`]).
+//! Every admitted request is answered exactly once, but not always
+//! with logits — a request whose deadline expired while queued is
+//! failed typed at dequeue time ([`EngineError::DeadlineExceeded`],
+//! no batch slot burned), and backend failures surface as typed
+//! [`EngineError::Backend`] replies. The books always balance:
+//! admitted == completed + deadline_exceeded + backend_failed.
+//!
+//! The pool is **supervised**: a worker that dies (backend panic or
+//! factory failure) is respawned into its slot with exponential
+//! backoff, up to a pool-wide `restart_budget`; fault-plan ordinals
+//! persist across respawns ([`crate::runtime::fault`]), restarts are
+//! counted in the [`EngineReport`] and surfaced by [`Engine::health`],
+//! and `rust/tests/chaos_props.rs` drives the whole story under seeded
+//! fault injection. Multi-model bitwise invariance vs direct inference
+//! lives in `rust/tests/engine_props.rs`.
 
 use std::fmt;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -50,8 +71,8 @@ use anyhow::{anyhow, bail, Context as _, Result};
 
 use crate::quant::CalibTable;
 use crate::runtime::{
-    fnv1a64, ArtifactStore, BackendFactory, InferenceBackend, ModelRegistry, ModelSource,
-    ModelSpec, Tensor,
+    fnv1a64, ArtifactStore, BackendFactory, FaultPlan, InferenceBackend, ModelRegistry,
+    ModelSource, ModelSpec, Tensor,
 };
 use crate::util::Json;
 use crate::vision::ForwardConfig;
@@ -64,6 +85,28 @@ pub const DEFAULT_QUEUE_DEPTH: usize = 1024;
 
 /// How long an idle worker sleeps between shutdown/deadline re-checks.
 const IDLE_WAIT: Duration = Duration::from_millis(50);
+
+/// How often the supervisor re-checks for shutdown while idle.
+const SUPERVISOR_POLL: Duration = Duration::from_millis(10);
+
+/// Default pool-wide bound on supervised worker respawns (0 disables
+/// supervision entirely — a dead worker stays dead, the v1 behavior).
+pub const DEFAULT_RESTART_BUDGET: u32 = 8;
+
+/// Default base delay before respawning a dead worker; doubles per
+/// attempt on the same slot, capped at [`MAX_RESTART_BACKOFF_MS`].
+pub const DEFAULT_RESTART_BACKOFF_MS: u64 = 10;
+
+/// Hard cap on the exponential restart backoff.
+const MAX_RESTART_BACKOFF_MS: u64 = 1_000;
+
+/// Default consecutive backend failures that open a model's circuit
+/// breaker (0 disables the breaker).
+pub const DEFAULT_BREAKER_THRESHOLD: u32 = 32;
+
+/// Default cooldown an open breaker fast-fails for before admitting a
+/// half-open probe request.
+pub const DEFAULT_BREAKER_COOLDOWN_MS: u64 = 250;
 
 // ---------------------------------------------------------------------------
 // Typed client surface
@@ -199,6 +242,9 @@ pub enum RejectReason {
     /// (per-client fairness; only possible with a configured
     /// `client_quota` and a labeled request).
     ClientQuota,
+    /// The target model's circuit breaker is open after consecutive
+    /// backend failures: fast-fail now, retry after the cooldown.
+    BreakerOpen,
 }
 
 impl RejectReason {
@@ -208,6 +254,7 @@ impl RejectReason {
             RejectReason::Shed => "shed",
             RejectReason::UnknownModel => "unknown_model",
             RejectReason::ClientQuota => "client_quota",
+            RejectReason::BreakerOpen => "breaker_open",
         }
     }
 }
@@ -220,8 +267,12 @@ pub enum EngineError {
     Rejected { model: String, reason: RejectReason, detail: String },
     /// The backend failed (or died) while serving the request.
     Backend(String),
+    /// The request was admitted but its deadline expired while queued;
+    /// it was failed typed at dequeue time without burning a batch slot.
+    DeadlineExceeded { model: String, deadline_us: u64, waited_us: u64 },
     /// The engine is shutting down (all handles dropped, or no live
-    /// workers remain); the request was not enqueued.
+    /// workers remain and no respawns are pending); the request was not
+    /// enqueued.
     ShuttingDown,
 }
 
@@ -242,6 +293,11 @@ impl fmt::Display for EngineError {
                 write!(f, "request for {model:?} rejected ({}): {detail}", reason.as_str())
             }
             EngineError::Backend(msg) => write!(f, "backend error: {msg}"),
+            EngineError::DeadlineExceeded { model, deadline_us, waited_us } => write!(
+                f,
+                "request for {model:?} exceeded its {deadline_us}us deadline in queue \
+                 (waited {waited_us}us)"
+            ),
             EngineError::ShuttingDown => write!(f, "engine is shutting down"),
         }
     }
@@ -602,6 +658,18 @@ pub struct EngineConfig {
     /// Max admitted-but-unanswered requests per client label
     /// (0 = quotas disabled).
     pub client_quota: usize,
+    /// Pool-wide cap on supervised worker respawns (0 = supervision off).
+    pub restart_budget: u32,
+    /// Base respawn backoff in milliseconds (doubles per slot attempt).
+    pub restart_backoff_ms: u64,
+    /// Consecutive backend failures that open a model's circuit breaker
+    /// (0 = breaker disabled).
+    pub breaker_threshold: u32,
+    /// Cooldown before an open breaker admits a half-open probe.
+    pub breaker_cooldown_ms: u64,
+    /// Seeded fault injection wrapped around every model's backend
+    /// factory (chaos testing; `None` serves faults-free).
+    pub fault_plan: Option<FaultPlan>,
     pub models: Vec<ModelVariantConfig>,
 }
 
@@ -612,6 +680,11 @@ impl EngineConfig {
             policy: BatchPolicy::default(),
             queue_depth: DEFAULT_QUEUE_DEPTH,
             client_quota: 0,
+            restart_budget: DEFAULT_RESTART_BUDGET,
+            restart_backoff_ms: DEFAULT_RESTART_BACKOFF_MS,
+            breaker_threshold: DEFAULT_BREAKER_THRESHOLD,
+            breaker_cooldown_ms: DEFAULT_BREAKER_COOLDOWN_MS,
+            fault_plan: None,
             models,
         }
     }
@@ -635,6 +708,11 @@ impl EngineConfig {
                 "max_wait_us",
                 "queue_depth",
                 "client_quota",
+                "restart_budget",
+                "restart_backoff_ms",
+                "breaker_threshold",
+                "breaker_cooldown_ms",
+                "fault_plan",
                 "models",
             ]
             .contains(&key.as_str())
@@ -683,6 +761,23 @@ impl EngineConfig {
         if let Some(q) = j.opt("client_quota") {
             cfg.client_quota = q.usize()?;
         }
+        if let Some(r) = j.opt("restart_budget") {
+            cfg.restart_budget =
+                u32::try_from(r.u64_exact()?).context("restart_budget out of range")?;
+        }
+        if let Some(r) = j.opt("restart_backoff_ms") {
+            cfg.restart_backoff_ms = r.u64_exact()?;
+        }
+        if let Some(t) = j.opt("breaker_threshold") {
+            cfg.breaker_threshold =
+                u32::try_from(t.u64_exact()?).context("breaker_threshold out of range")?;
+        }
+        if let Some(c) = j.opt("breaker_cooldown_ms") {
+            cfg.breaker_cooldown_ms = c.u64_exact()?;
+        }
+        if let Some(p) = j.opt("fault_plan") {
+            cfg.fault_plan = Some(FaultPlan::from_json(p).context("engine config fault_plan")?);
+        }
         Ok(cfg)
     }
 
@@ -696,6 +791,23 @@ impl EngineConfig {
         ];
         if self.client_quota > 0 {
             pairs.push(("client_quota", Json::Num(self.client_quota as f64)));
+        }
+        // Fault-tolerance knobs serialize only when off-default, so v1/v2
+        // config files round-trip byte-identically.
+        if self.restart_budget != DEFAULT_RESTART_BUDGET {
+            pairs.push(("restart_budget", Json::Num(self.restart_budget as f64)));
+        }
+        if self.restart_backoff_ms != DEFAULT_RESTART_BACKOFF_MS {
+            pairs.push(("restart_backoff_ms", Json::Num(self.restart_backoff_ms as f64)));
+        }
+        if self.breaker_threshold != DEFAULT_BREAKER_THRESHOLD {
+            pairs.push(("breaker_threshold", Json::Num(self.breaker_threshold as f64)));
+        }
+        if self.breaker_cooldown_ms != DEFAULT_BREAKER_COOLDOWN_MS {
+            pairs.push(("breaker_cooldown_ms", Json::Num(self.breaker_cooldown_ms as f64)));
+        }
+        if let Some(plan) = &self.fault_plan {
+            pairs.push(("fault_plan", plan.to_json()));
         }
         pairs.push(("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())));
         Json::obj_from(pairs)
@@ -714,8 +826,13 @@ struct Job {
     /// Quota label carried so the client's in-flight count is released
     /// exactly once, on whichever path delivers the reply.
     client: Option<String>,
-    // No priority/deadline here: admission decides at submit time only,
-    // so an accepted request carries no further shed surface.
+    /// Engine-relative admit timestamp, for dequeue-time deadline checks.
+    enqueued_at_us: u64,
+    /// Effective latency target (explicit deadline or the variant's
+    /// `slo_us`). Admission already shed on *projected* wait; this is
+    /// the *actual* wait bound, enforced typed at dequeue — no priority
+    /// here, so an accepted request carries no further *shed* surface.
+    deadline_us: Option<u64>,
 }
 
 /// Per-model counters updated lock-free (admission + workers).
@@ -723,9 +840,117 @@ struct ModelStats {
     rejected_full: AtomicU64,
     rejected_shed: AtomicU64,
     rejected_quota: AtomicU64,
+    rejected_breaker: AtomicU64,
+    /// Admitted requests failed typed at dequeue (deadline expired).
+    deadline_exceeded: AtomicU64,
+    /// Admitted requests failed by the backend (typed error, panic
+    /// fence, contract violation, or pool death).
+    backend_failed: AtomicU64,
     /// EWMA of observed per-item service time (microseconds; 0 = no
     /// observation yet). Seeded from the variant's `service_hint_us`.
     service_ewma_us: AtomicU64,
+}
+
+const BREAKER_CLOSED: u8 = 0;
+const BREAKER_OPEN: u8 = 1;
+const BREAKER_HALF_OPEN: u8 = 2;
+
+/// Per-model circuit breaker: workers record batch outcomes lock-free,
+/// admission fast-fails while open. `threshold` consecutive failures
+/// open it; after the cooldown one probe request per window is admitted
+/// half-open, and its outcome closes or re-opens the breaker.
+struct Breaker {
+    state: AtomicU8,
+    /// Consecutive backend failures since the last success.
+    consecutive: AtomicU32,
+    /// Engine-relative time the breaker last opened (or last released a
+    /// half-open probe, so probing is bounded to one per cooldown).
+    opened_at_us: AtomicU64,
+}
+
+impl Breaker {
+    fn new() -> Self {
+        Breaker {
+            state: AtomicU8::new(BREAKER_CLOSED),
+            consecutive: AtomicU32::new(0),
+            opened_at_us: AtomicU64::new(0),
+        }
+    }
+
+    fn state_str(&self) -> &'static str {
+        match self.state.load(Ordering::Relaxed) {
+            BREAKER_OPEN => "open",
+            BREAKER_HALF_OPEN => "half_open",
+            _ => "closed",
+        }
+    }
+
+    /// One backend failure. A closed breaker opens at `threshold`
+    /// consecutive failures; a failed half-open probe re-opens with a
+    /// fresh cooldown. `threshold == 0` disables the breaker.
+    fn record_failure(&self, threshold: u32, now_us: u64) {
+        if threshold == 0 {
+            return;
+        }
+        let state = self.state.load(Ordering::Relaxed);
+        if state == BREAKER_HALF_OPEN {
+            self.opened_at_us.store(now_us, Ordering::Relaxed);
+            self.state.store(BREAKER_OPEN, Ordering::Relaxed);
+            return;
+        }
+        let n = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if state == BREAKER_CLOSED && n >= threshold {
+            self.opened_at_us.store(now_us, Ordering::Relaxed);
+            self.state.store(BREAKER_OPEN, Ordering::Relaxed);
+        }
+    }
+
+    /// One backend success: close and reset (a queued request succeeding
+    /// while the breaker is open is direct evidence of recovery).
+    fn record_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        self.state.store(BREAKER_CLOSED, Ordering::Relaxed);
+    }
+
+    /// Admission check: closed admits everything; open admits nothing
+    /// until `cooldown_us` has elapsed, then exactly one probe per
+    /// cooldown window (the CAS loser — or a probe inside the window —
+    /// stays fast-failed).
+    fn admit(&self, cooldown_us: u64, now_us: u64) -> bool {
+        match self.state.load(Ordering::Relaxed) {
+            BREAKER_OPEN => {
+                let opened = self.opened_at_us.load(Ordering::Relaxed);
+                if now_us.saturating_sub(opened) < cooldown_us {
+                    return false;
+                }
+                let won = self
+                    .state
+                    .compare_exchange(
+                        BREAKER_OPEN,
+                        BREAKER_HALF_OPEN,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok();
+                if won {
+                    self.opened_at_us.store(now_us, Ordering::Relaxed);
+                }
+                won
+            }
+            BREAKER_HALF_OPEN => {
+                // A probe is already in flight; admit another only once
+                // a full cooldown has passed with no verdict (covers a
+                // probe lost to deadline expiry or engine shutdown).
+                let probed = self.opened_at_us.load(Ordering::Relaxed);
+                now_us.saturating_sub(probed) >= cooldown_us
+                    && self
+                        .opened_at_us
+                        .compare_exchange(probed, now_us, Ordering::Relaxed, Ordering::Relaxed)
+                        .is_ok()
+            }
+            _ => true,
+        }
+    }
 }
 
 struct ModelEntry {
@@ -733,6 +958,7 @@ struct ModelEntry {
     factory: BackendFactory,
     slo_us: Option<u64>,
     stats: ModelStats,
+    breaker: Breaker,
 }
 
 struct EngineState {
@@ -747,6 +973,26 @@ struct EngineState {
     closed: bool,
     /// Workers still running (including ones still in their factories).
     workers_alive: usize,
+    /// Dead workers the supervisor has committed to respawn but has not
+    /// yet brought back up. While nonzero the engine is degraded, not
+    /// shutting down: submits stay open even at `workers_alive == 0`.
+    respawns_pending: usize,
+    /// Restart-budget reservations (made under this lock by the dying
+    /// worker's exit guard, so concurrent deaths cannot double-spend).
+    restarts_used: u32,
+    /// Per-slot respawn attempts, for exponential backoff.
+    slot_attempts: Vec<u32>,
+    /// Worker exits after a clean drain vs deaths (factory error/panic).
+    clean_exits: usize,
+    failed_exits: usize,
+    /// First worker death message, surfaced at join when no worker ever
+    /// exited cleanly.
+    first_failure: Option<String>,
+    /// Per-model serving metrics (index-aligned with
+    /// `EngineShared::models`). Under the lock — workers fold a batch in
+    /// at the loop-bottom relock — so they survive worker respawns,
+    /// which detached per-thread metrics would not.
+    metrics: Vec<Metrics>,
 }
 
 impl EngineState {
@@ -777,6 +1023,17 @@ struct EngineShared {
     /// Live `Engine` handle clones; the last drop closes the queues.
     handles: AtomicUsize,
     rejected_unknown: AtomicU64,
+    /// Pool-wide cap on supervised respawns (0 = supervision off).
+    restart_budget: u32,
+    /// Base respawn backoff; doubles per attempt on the same slot.
+    backoff_base_ms: u64,
+    /// Consecutive failures that open a model's breaker (0 = off).
+    breaker_threshold: u32,
+    breaker_cooldown_us: u64,
+    /// Dead worker slots, sent by the exit guard to the supervisor.
+    deaths: mpsc::Sender<usize>,
+    /// Respawns actually performed (reported and in `/healthz`).
+    restarts: AtomicU64,
 }
 
 impl EngineShared {
@@ -850,9 +1107,27 @@ impl Engine {
         let entry = &self.shared.models[midx];
         let deadline = deadline_us.or(entry.slo_us);
         let (reply, rx) = mpsc::channel();
-        let mut st = self.shared.state.lock().unwrap();
-        if st.closed || st.workers_alive == 0 {
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        // A dead pool with respawns still pending is degraded, not
+        // shutting down: the queue keeps absorbing while the supervisor
+        // brings a worker back.
+        if st.closed || (st.workers_alive == 0 && st.respawns_pending == 0) {
             return Err(EngineError::ShuttingDown);
+        }
+        // Circuit breaker: a model whose backend keeps failing fast-fails
+        // typed instead of queueing work a sick backend will burn.
+        if !entry.breaker.admit(self.shared.breaker_cooldown_us, self.shared.now_us()) {
+            drop(st);
+            entry.stats.rejected_breaker.fetch_add(1, Ordering::Relaxed);
+            return Err(EngineError::Rejected {
+                model,
+                reason: RejectReason::BreakerOpen,
+                detail: format!(
+                    "circuit breaker open after consecutive backend failures; \
+                     retry after {}ms",
+                    self.shared.breaker_cooldown_us / 1_000
+                ),
+            });
         }
         // Per-client quota, checked before the shared-backlog policy so a
         // hot client is told "you, specifically" rather than "we're full".
@@ -898,7 +1173,18 @@ impl Engine {
                 *st.client_inflight.entry(c.clone()).or_insert(0) += 1;
             }
         }
-        st.queues[midx].push(Job { id, image, reply, t0: Instant::now(), client }, now);
+        st.queues[midx].push(
+            Job {
+                id,
+                image,
+                reply,
+                t0: Instant::now(),
+                client,
+                enqueued_at_us: now,
+                deadline_us: deadline,
+            },
+            now,
+        );
         drop(st);
         self.shared.work_cv.notify_one();
         Ok(EngineWaiter { rx })
@@ -907,6 +1193,57 @@ impl Engine {
     /// Submit and block for the response.
     pub fn infer(&self, req: Request) -> std::result::Result<Response, EngineError> {
         self.submit(req)?.wait()
+    }
+
+    /// Point-in-time degradation snapshot (the `/healthz` surface).
+    pub fn health(&self) -> EngineHealth {
+        let st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        EngineHealth {
+            workers_alive: st.workers_alive,
+            workers_total: self.shared.workers,
+            respawns_pending: st.respawns_pending,
+            restarts: self.shared.restarts.load(Ordering::Relaxed),
+            models: self
+                .shared
+                .models
+                .iter()
+                .map(|m| ModelHealth { name: m.name.clone(), breaker: m.breaker.state_str() })
+                .collect(),
+        }
+    }
+}
+
+/// Per-model slice of an [`EngineHealth`] snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelHealth {
+    pub name: String,
+    /// Circuit breaker state: `"closed"`, `"open"`, or `"half_open"`.
+    pub breaker: &'static str,
+}
+
+/// Live degradation snapshot from [`Engine::health`] — what `/healthz`
+/// serves while the engine runs (the [`EngineReport`] is the *final*
+/// accounting at join time).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineHealth {
+    /// Workers currently serving (dips below `workers_total` while a
+    /// death awaits its supervised respawn).
+    pub workers_alive: usize,
+    pub workers_total: usize,
+    /// Dead slots the supervisor has committed to respawn.
+    pub respawns_pending: usize,
+    /// Respawns performed so far.
+    pub restarts: u64,
+    pub models: Vec<ModelHealth>,
+}
+
+impl EngineHealth {
+    /// Serving capacity is reduced (dead/respawning workers) or some
+    /// model's breaker is not closed.
+    pub fn degraded(&self) -> bool {
+        self.workers_alive < self.workers_total
+            || self.respawns_pending > 0
+            || self.models.iter().any(|m| m.breaker != "closed")
     }
 }
 
@@ -918,6 +1255,11 @@ pub struct EngineBuilder {
     policy: BatchPolicy,
     queue_depth: usize,
     client_quota: usize,
+    restart_budget: u32,
+    restart_backoff_ms: u64,
+    breaker_threshold: u32,
+    breaker_cooldown_ms: u64,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl Default for EngineBuilder {
@@ -928,6 +1270,11 @@ impl Default for EngineBuilder {
             policy: BatchPolicy::default(),
             queue_depth: DEFAULT_QUEUE_DEPTH,
             client_quota: 0,
+            restart_budget: DEFAULT_RESTART_BUDGET,
+            restart_backoff_ms: DEFAULT_RESTART_BACKOFF_MS,
+            breaker_threshold: DEFAULT_BREAKER_THRESHOLD,
+            breaker_cooldown_ms: DEFAULT_BREAKER_COOLDOWN_MS,
+            fault_plan: None,
         }
     }
 }
@@ -944,7 +1291,14 @@ impl EngineBuilder {
             .workers(cfg.workers)
             .policy(cfg.policy)
             .queue_depth(cfg.queue_depth)
-            .client_quota(cfg.client_quota);
+            .client_quota(cfg.client_quota)
+            .restart_budget(cfg.restart_budget)
+            .restart_backoff_ms(cfg.restart_backoff_ms)
+            .breaker_threshold(cfg.breaker_threshold)
+            .breaker_cooldown_ms(cfg.breaker_cooldown_ms);
+        if let Some(plan) = &cfg.fault_plan {
+            b = b.fault_plan(plan.clone());
+        }
         for variant in &cfg.models {
             b = b.register(variant.to_spec()?)?;
         }
@@ -975,6 +1329,42 @@ impl EngineBuilder {
         self
     }
 
+    /// Pool-wide cap on supervised worker respawns. 0 disables
+    /// supervision: a dead worker stays dead (the pre-supervision
+    /// behavior).
+    pub fn restart_budget(mut self, budget: u32) -> Self {
+        self.restart_budget = budget;
+        self
+    }
+
+    /// Base delay before a supervised respawn; doubles per attempt on
+    /// the same slot, capped at 1 s.
+    pub fn restart_backoff_ms(mut self, ms: u64) -> Self {
+        self.restart_backoff_ms = ms;
+        self
+    }
+
+    /// Consecutive backend failures that open a model's circuit breaker
+    /// (0 disables the breaker).
+    pub fn breaker_threshold(mut self, threshold: u32) -> Self {
+        self.breaker_threshold = threshold;
+        self
+    }
+
+    /// How long an open breaker fast-fails before admitting a half-open
+    /// probe request.
+    pub fn breaker_cooldown_ms(mut self, ms: u64) -> Self {
+        self.breaker_cooldown_ms = ms;
+        self
+    }
+
+    /// Wrap every registered backend factory in seeded fault injection
+    /// ([`crate::runtime::fault`]) — reproducible chaos testing.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Host a model variant; duplicate names are an error.
     pub fn register(mut self, spec: ModelSpec) -> Result<Self> {
         self.registry.register(spec)?;
@@ -982,35 +1372,51 @@ impl EngineBuilder {
     }
 
     /// Spawn the worker pool (each worker builds one backend per hosted
-    /// variant, on its own thread) and return the client handle plus the
-    /// join handle that resolves to the per-model [`EngineReport`].
+    /// variant, on its own thread) plus the supervisor that respawns
+    /// dead workers, and return the client handle and the join handle
+    /// that resolves to the per-model [`EngineReport`].
     pub fn build(self) -> Result<(Engine, EngineJoin)> {
         if self.registry.is_empty() {
             bail!("engine has no registered models");
         }
+        let fault = self.fault_plan.unwrap_or_default();
         let models: Vec<ModelEntry> = self
             .registry
             .specs()
             .iter()
             .map(|s| ModelEntry {
                 name: s.name.clone(),
-                factory: Arc::clone(&s.factory),
+                // An empty/unmatched fault plan wraps to the identity, so
+                // the faults-free path pays nothing.
+                factory: fault.wrap(&s.name, Arc::clone(&s.factory)),
                 slo_us: s.slo_us,
                 stats: ModelStats {
                     rejected_full: AtomicU64::new(0),
                     rejected_shed: AtomicU64::new(0),
                     rejected_quota: AtomicU64::new(0),
+                    rejected_breaker: AtomicU64::new(0),
+                    deadline_exceeded: AtomicU64::new(0),
+                    backend_failed: AtomicU64::new(0),
                     service_ewma_us: AtomicU64::new(s.service_hint_us),
                 },
+                breaker: Breaker::new(),
             })
             .collect();
         let n_models = models.len();
+        let (deaths_tx, deaths_rx) = mpsc::channel();
         let shared = Arc::new(EngineShared {
             state: Mutex::new(EngineState {
                 queues: (0..n_models).map(|_| DynamicBatcher::new(self.policy)).collect(),
                 client_inflight: std::collections::HashMap::new(),
                 closed: false,
                 workers_alive: self.workers,
+                respawns_pending: 0,
+                restarts_used: 0,
+                slot_attempts: vec![0; self.workers],
+                clean_exits: 0,
+                failed_exits: 0,
+                first_failure: None,
+                metrics: vec![Metrics::default(); n_models],
             }),
             work_cv: Condvar::new(),
             start: Instant::now(),
@@ -1021,23 +1427,35 @@ impl EngineBuilder {
             models,
             handles: AtomicUsize::new(1),
             rejected_unknown: AtomicU64::new(0),
+            restart_budget: self.restart_budget,
+            backoff_base_ms: self.restart_backoff_ms,
+            breaker_threshold: self.breaker_threshold,
+            breaker_cooldown_us: self.breaker_cooldown_ms.saturating_mul(1_000),
+            deaths: deaths_tx,
+            restarts: AtomicU64::new(0),
         });
-        let threads = (0..self.workers)
-            .map(|w| {
-                let worker_shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_entry(&worker_shared, w))
-            })
-            .collect();
+        // Workers are detached: their lifecycle (exit accounting, metric
+        // folds, respawns) runs through the shared state and the
+        // supervisor, so a respawned worker is indistinguishable from an
+        // original one.
+        for slot in 0..self.workers {
+            let worker_shared = Arc::clone(&shared);
+            std::thread::spawn(move || worker_entry(&worker_shared, slot));
+        }
+        let sup_shared = Arc::clone(&shared);
+        let supervisor = std::thread::spawn(move || supervisor_loop(&sup_shared, &deaths_rx));
         let engine = Engine { shared: Arc::clone(&shared) };
-        Ok((engine, EngineJoin { threads, shared }))
+        Ok((engine, EngineJoin { supervisor, shared }))
     }
 }
 
 /// Format tag of the `--report-json` artifact.
 pub const ENGINE_REPORT_FORMAT: &str = "mamba-x-engine-report";
 
-/// Version of the `--report-json` schema.
-pub const ENGINE_REPORT_VERSION: u32 = 1;
+/// Version of the `--report-json` schema. v2 adds the fault-tolerance
+/// counters: per-model `rejected_breaker` / `deadline_exceeded` /
+/// `backend_failed`, plus top-level `workers` and `restarts`.
+pub const ENGINE_REPORT_VERSION: u32 = 2;
 
 /// Per-model serving outcome, merged across the pool at join time.
 #[derive(Debug, Clone)]
@@ -1053,6 +1471,10 @@ pub struct ModelReport {
 pub struct EngineReport {
     pub models: Vec<ModelReport>,
     pub rejected_unknown_model: u64,
+    /// Configured pool size (slots, not survivors).
+    pub workers: usize,
+    /// Supervised worker respawns performed over the engine's lifetime.
+    pub restarts: u64,
 }
 
 impl EngineReport {
@@ -1093,6 +1515,8 @@ impl EngineReport {
         Json::obj_from(vec![
             ("format", Json::Str(ENGINE_REPORT_FORMAT.to_string())),
             ("version", Json::Num(ENGINE_REPORT_VERSION as f64)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("restarts", Json::Num(self.restarts as f64)),
             ("models", Json::Arr(models)),
             ("rejected_unknown_model", Json::Num(self.rejected_unknown_model as f64)),
         ])
@@ -1110,70 +1534,93 @@ impl EngineReport {
         for m in &self.models {
             out.push_str(&format!("model {:width$}  {}\n", m.name, m.metrics.summary()));
         }
-        out.push_str(&format!("rejected_unknown_model={}", self.rejected_unknown_model));
+        out.push_str(&format!(
+            "rejected_unknown_model={} workers={} restarts={}",
+            self.rejected_unknown_model, self.workers, self.restarts
+        ));
         out
     }
 }
 
-/// Join handle over the engine's worker pool.
+/// Join handle over the engine's supervisor (which in turn outlives
+/// every worker, original or respawned).
 pub struct EngineJoin {
-    threads: Vec<std::thread::JoinHandle<Result<Vec<Metrics>>>>,
+    supervisor: std::thread::JoinHandle<()>,
     shared: Arc<EngineShared>,
 }
 
 impl EngineJoin {
-    /// Wait for every worker and merge their per-model metrics, folding
-    /// in the admission rejection counters. Errors only if a worker
-    /// panicked or *no* worker ever became ready; individual factory
-    /// failures in a partially-healthy pool are tolerated.
+    /// Wait for the supervisor — it exits once the engine is closed,
+    /// every worker has left, and no respawn is pending — then assemble
+    /// the final report from the shared per-model metrics plus the
+    /// admission/failure counters. Errors only if the supervisor
+    /// panicked or *no* worker incarnation ever drained cleanly while at
+    /// least one died; worker deaths in a pool that recovered (or that
+    /// stayed partially healthy) are reported, not fatal.
     pub fn join(self) -> Result<EngineReport> {
-        let EngineJoin { threads, shared } = self;
-        let mut per_model: Vec<Metrics> = vec![Metrics::default(); shared.models.len()];
-        let mut ok = 0usize;
-        let mut first_err: Option<anyhow::Error> = None;
-        for t in threads {
-            match t.join() {
-                Ok(Ok(worker_metrics)) => {
-                    for (agg, m) in per_model.iter_mut().zip(&worker_metrics) {
-                        agg.merge(m);
-                    }
-                    ok += 1;
-                }
-                Ok(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                Err(_) => return Err(anyhow!("worker thread panicked")),
-            }
+        let EngineJoin { supervisor, shared } = self;
+        if supervisor.join().is_err() {
+            return Err(anyhow!("engine supervisor panicked"));
         }
-        if ok == 0 {
-            return Err(first_err.unwrap_or_else(|| anyhow!("engine had no workers")));
+        let st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        if st.clean_exits == 0 && st.failed_exits > 0 {
+            let msg = st
+                .first_failure
+                .clone()
+                .unwrap_or_else(|| "worker pool died without a recorded cause".to_string());
+            return Err(anyhow!("{msg}"));
         }
         let models = shared
             .models
             .iter()
-            .zip(per_model)
-            .map(|(entry, mut metrics)| {
+            .zip(&st.metrics)
+            .map(|(entry, metrics)| {
+                let mut metrics = metrics.clone();
                 metrics.rejected_full += entry.stats.rejected_full.load(Ordering::Relaxed);
                 metrics.rejected_shed += entry.stats.rejected_shed.load(Ordering::Relaxed);
                 metrics.rejected_quota += entry.stats.rejected_quota.load(Ordering::Relaxed);
+                metrics.rejected_breaker += entry.stats.rejected_breaker.load(Ordering::Relaxed);
+                metrics.deadline_exceeded +=
+                    entry.stats.deadline_exceeded.load(Ordering::Relaxed);
+                metrics.backend_failed += entry.stats.backend_failed.load(Ordering::Relaxed);
                 ModelReport { name: entry.name.clone(), metrics }
             })
             .collect();
         Ok(EngineReport {
             models,
             rejected_unknown_model: shared.rejected_unknown.load(Ordering::Relaxed),
+            workers: shared.workers,
+            restarts: shared.restarts.load(Ordering::Relaxed),
         })
     }
 }
 
-/// Decrements `workers_alive` on EVERY exit path — normal shutdown,
-/// factory failure, or a panic unwinding out of a backend — and, when
-/// the last worker leaves, error-fails whatever is still queued (typed)
-/// so no client blocks forever on a reply that will never come.
+/// Fail every still-queued job, typed, releasing its quota slot and
+/// charging `backend_failed` — the pool is dead (or shutting down with
+/// leftovers), so no reply will ever come otherwise. Callers hold the
+/// state lock and have already established `workers_alive == 0 &&
+/// respawns_pending == 0`.
+fn fail_leftovers(shared: &EngineShared, st: &mut EngineState, error: &EngineError) {
+    for qi in 0..st.queues.len() {
+        for job in st.queues[qi].flush() {
+            st.release_client(&job.client);
+            shared.models[qi].stats.backend_failed.fetch_add(1, Ordering::Relaxed);
+            let _ = job.reply.send(Err(error.clone()));
+        }
+    }
+}
+
+/// Runs (via `Drop`) on EVERY worker exit path — clean drain, factory
+/// failure, or a panic unwinding out of a backend. Updates the exit
+/// accounting, reserves a supervised respawn when one is due (under the
+/// state lock, so two simultaneous deaths cannot double-spend the last
+/// budget slot), and fails whatever is still queued once the pool is
+/// dead with nothing pending, so no client blocks forever.
 struct WorkerExit<'a> {
     shared: &'a EngineShared,
+    slot: usize,
+    /// Set after a clean drain; suppresses respawn + failure accounting.
+    clean: bool,
     error: EngineError,
 }
 
@@ -1183,49 +1630,146 @@ impl Drop for WorkerExit<'_> {
         // but recover from poisoning anyway: this guard must run.
         let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
         st.workers_alive -= 1;
-        if st.workers_alive == 0 {
-            for qi in 0..st.queues.len() {
-                for job in st.queues[qi].flush() {
-                    st.release_client(&job.client);
-                    let _ = job.reply.send(Err(self.error.clone()));
-                }
+        if self.clean {
+            st.clean_exits += 1;
+        } else {
+            st.failed_exits += 1;
+            if st.first_failure.is_none() {
+                st.first_failure = Some(match &self.error {
+                    EngineError::Backend(msg) => msg.clone(),
+                    other => other.to_string(),
+                });
             }
+            if !st.closed && st.restarts_used < self.shared.restart_budget {
+                st.restarts_used += 1;
+                st.slot_attempts[self.slot] += 1;
+                st.respawns_pending += 1;
+                let _ = self.shared.deaths.send(self.slot);
+            }
+        }
+        if st.workers_alive == 0 && st.respawns_pending == 0 {
+            fail_leftovers(self.shared, &mut st, &self.error);
         }
         drop(st);
         self.shared.work_cv.notify_all();
     }
 }
 
-fn worker_entry(shared: &EngineShared, worker: usize) -> Result<Vec<Metrics>> {
+/// Exponential restart backoff: `base * 2^(attempt-1)` ms, capped.
+fn restart_backoff_ms(base_ms: u64, attempt: u32) -> u64 {
+    (base_ms << attempt.saturating_sub(1).min(6)).min(MAX_RESTART_BACKOFF_MS)
+}
+
+/// Supervision loop: respawn dead workers into their slot (the budget
+/// was already reserved by the dying worker's exit guard — this loop
+/// only paces and spawns), exit once the engine is closed and the pool
+/// fully drained.
+fn supervisor_loop(shared: &Arc<EngineShared>, deaths: &mpsc::Receiver<usize>) {
+    loop {
+        match deaths.recv_timeout(SUPERVISOR_POLL) {
+            Ok(slot) => {
+                let attempt = {
+                    let st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+                    st.slot_attempts[slot]
+                };
+                std::thread::sleep(Duration::from_millis(restart_backoff_ms(
+                    shared.backoff_base_ms,
+                    attempt,
+                )));
+                let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+                st.respawns_pending -= 1;
+                if st.closed {
+                    // Shutdown raced the respawn: don't bring capacity
+                    // back up, just make sure nothing queued is stranded.
+                    if st.workers_alive == 0 && st.respawns_pending == 0 {
+                        fail_leftovers(shared, &mut st, &EngineError::ShuttingDown);
+                    }
+                    drop(st);
+                    shared.work_cv.notify_all();
+                    continue;
+                }
+                st.workers_alive += 1;
+                drop(st);
+                shared.restarts.fetch_add(1, Ordering::Relaxed);
+                let worker_shared = Arc::clone(shared);
+                std::thread::spawn(move || worker_entry(&worker_shared, slot));
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+                if st.closed && st.workers_alive == 0 && st.respawns_pending == 0 {
+                    break;
+                }
+            }
+            // Unreachable while `shared.deaths` exists, but never spin.
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+fn worker_entry(shared: &EngineShared, slot: usize) {
     let mut exit = WorkerExit {
         shared,
+        slot,
+        clean: false,
         error: EngineError::Backend("worker panicked; request not served".to_string()),
     };
     // One backend instance per hosted variant, all owned by this thread.
     let mut backends: Vec<Box<dyn InferenceBackend>> = Vec::with_capacity(shared.models.len());
     for entry in &shared.models {
-        match (entry.factory)(worker) {
+        match (entry.factory)(slot) {
             Ok(b) => backends.push(b),
             Err(e) => {
                 exit.error =
                     EngineError::Backend(format!("backend init for {:?} failed: {e}", entry.name));
-                return Err(anyhow!("worker {worker}: backend init for {:?}: {e}", entry.name));
+                return;
             }
         }
     }
-    let metrics = worker_loop(shared, &mut backends);
+    worker_loop(shared, &mut backends);
+    exit.clean = true;
     exit.error = EngineError::ShuttingDown;
-    Ok(metrics)
 }
 
-fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]) -> Vec<Metrics> {
+/// Panic fence around a backend call: while armed (non-empty `jobs`), a
+/// panic unwinding out of `infer_batch` fails every in-flight job typed,
+/// releases its quota slot, charges `backend_failed`, and gives the
+/// model's breaker one failure — so the dying worker strands no client
+/// and the supervised respawn starts from balanced books. Disarmed by
+/// taking the jobs back once the backend returns.
+struct BatchGuard<'a> {
+    shared: &'a EngineShared,
+    model: usize,
+    jobs: Vec<Job>,
+}
+
+impl Drop for BatchGuard<'_> {
+    fn drop(&mut self) {
+        if self.jobs.is_empty() {
+            return;
+        }
+        let entry = &self.shared.models[self.model];
+        entry.breaker.record_failure(self.shared.breaker_threshold, self.shared.now_us());
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        for job in self.jobs.drain(..) {
+            st.release_client(&job.client);
+            entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
+            let _ = job.reply.send(Err(EngineError::Backend(
+                "backend panicked mid-batch; request not served".to_string(),
+            )));
+        }
+    }
+}
+
+fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]) {
     let n_models = backends.len();
-    let mut metrics: Vec<Metrics> = vec![Metrics::default(); n_models];
     // One reusable batch buffer per worker (allocation-free hot loop).
     let mut batch: Vec<Job> = Vec::new();
+    // Completed (latency_us, completed_at_us) pairs, folded into the
+    // shared metrics at the loop-bottom relock.
+    let mut completed: Vec<(u64, u64)> = Vec::new();
     // Round-robin scan start so one busy model cannot starve the rest.
     let mut rr = 0usize;
-    let mut st = shared.state.lock().unwrap();
+    let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
     loop {
         let now = shared.now_us();
         if st.closed && st.queues.iter().all(|q| q.is_empty()) {
@@ -1268,26 +1812,54 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
                     .min()
                     .map(|d| Duration::from_micros(d.saturating_sub(now)).min(IDLE_WAIT))
                     .unwrap_or(IDLE_WAIT);
-                let (guard, _timeout) = shared.work_cv.wait_timeout(st, wait).unwrap();
+                let (guard, _timeout) =
+                    shared.work_cv.wait_timeout(st, wait).unwrap_or_else(|p| p.into_inner());
                 st = guard;
                 continue;
             }
         }
         let m = picked.expect("picked set on every non-wait path");
-        drop(st);
         if batch.is_empty() {
             // Lost a shutdown-drain race to another worker.
-            st = shared.state.lock().unwrap();
             continue;
         }
-        metrics[m].record_batch(batch.len());
+        // Deadline enforcement at dequeue, still under the lock: a
+        // request that already waited past its target is failed typed —
+        // no batch slot burned on an answer the client stopped wanting.
+        let dequeue_now = shared.now_us();
+        let entry = &shared.models[m];
+        batch.retain(|job| {
+            let Some(deadline_us) = job.deadline_us else { return true };
+            let waited_us = dequeue_now.saturating_sub(job.enqueued_at_us);
+            if waited_us <= deadline_us {
+                return true;
+            }
+            st.release_client(&job.client);
+            entry.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            let _ = job.reply.send(Err(EngineError::DeadlineExceeded {
+                model: entry.name.clone(),
+                deadline_us,
+                waited_us,
+            }));
+            false
+        });
+        if batch.is_empty() {
+            // The whole batch had expired; pick again.
+            continue;
+        }
+        let batch_n = batch.len();
+        drop(st);
         // One batched backend call for the whole released batch; results
         // are per-item, so one malformed request fails only its own slot.
         let exec_t0 = Instant::now();
+        let mut fence = BatchGuard { shared, model: m, jobs: std::mem::take(&mut batch) };
         let results = {
-            let images: Vec<&Tensor> = batch.iter().map(|j| &j.image).collect();
+            let images: Vec<&Tensor> = fence.jobs.iter().map(|j| &j.image).collect();
             backends[m].infer_batch(&images)
         };
+        // The backend returned: take the batch back (disarms the fence).
+        batch = std::mem::take(&mut fence.jobs);
+        drop(fence);
         // Fold the measured per-item service time into the model's EWMA
         // (the admission layer's SLO projection reads it lock-free). CAS
         // loop: a plain load/store pair would let concurrent workers
@@ -1308,21 +1880,26 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
         // has seen its response can immediately submit again without a
         // spurious ClientQuota refusal.
         if shared.client_quota > 0 {
-            let mut guard = shared.state.lock().unwrap();
+            let mut guard = shared.state.lock().unwrap_or_else(|p| p.into_inner());
             for job in &batch {
                 guard.release_client(&job.client);
             }
         }
+        let entry = &shared.models[m];
         if results.len() == batch.len() {
-            let name = &shared.models[m].name;
             for (job, result) in batch.drain(..).zip(results) {
                 let latency_us = job.t0.elapsed().as_micros() as u64;
                 let res = match result {
                     Ok(logits) => {
-                        metrics[m].record_request(latency_us, shared.now_us());
-                        Ok(Response { id: job.id, model: name.clone(), logits, latency_us })
+                        entry.breaker.record_success();
+                        completed.push((latency_us, shared.now_us()));
+                        Ok(Response { id: job.id, model: entry.name.clone(), logits, latency_us })
                     }
-                    Err(e) => Err(EngineError::Backend(format!("{e}"))),
+                    Err(e) => {
+                        entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
+                        entry.breaker.record_failure(shared.breaker_threshold, shared.now_us());
+                        Err(EngineError::Backend(format!("{e}")))
+                    }
                 };
                 let _ = job.reply.send(res);
             }
@@ -1334,16 +1911,22 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
                 results.len(),
                 batch.len()
             );
+            entry.breaker.record_failure(shared.breaker_threshold, shared.now_us());
             for job in batch.drain(..) {
+                entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
                 let _ = job.reply.send(Err(EngineError::Backend(msg.clone())));
             }
         }
-        st = shared.state.lock().unwrap();
+        st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.metrics[m].record_batch(batch_n);
+        for (latency_us, at_us) in completed.drain(..) {
+            st.metrics[m].record_request(latency_us, at_us);
+        }
     }
-    // Exit bookkeeping (workers_alive, failing leftovers) lives in the
-    // caller's WorkerExit guard so it also runs on unwind.
+    // Exit bookkeeping (workers_alive, respawn reservation, failing
+    // leftovers) lives in the caller's WorkerExit guard so it also runs
+    // on unwind.
     drop(st);
-    metrics
 }
 
 #[cfg(test)]
@@ -1602,8 +2185,14 @@ mod tests {
     #[test]
     fn failed_factory_turns_into_typed_shutdown() {
         let bad: BackendFactory = Arc::new(|_w| Err(anyhow!("no device")));
-        let (engine, join) =
-            EngineBuilder::new().register(ModelSpec::new("m", bad)).unwrap().build().unwrap();
+        // Supervision off: a factory that can never succeed should kill
+        // the pool immediately instead of burning the restart budget.
+        let (engine, join) = EngineBuilder::new()
+            .restart_budget(0)
+            .register(ModelSpec::new("m", bad))
+            .unwrap()
+            .build()
+            .unwrap();
         // The worker dies in its factory; depending on timing a submit is
         // either refused typed (ShuttingDown) or accepted and then failed
         // by the exit flush. Never a hang, never an untyped error.
@@ -1733,11 +2322,277 @@ mod tests {
         assert_eq!(j.get("format").unwrap().str().unwrap(), ENGINE_REPORT_FORMAT);
         assert_eq!(j.get("version").unwrap().usize().unwrap(), ENGINE_REPORT_VERSION as usize);
         assert_eq!(j.get("rejected_unknown_model").unwrap().usize().unwrap(), 1);
+        // v2: pool geometry and supervision counters ride in the report.
+        assert_eq!(j.get("workers").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("restarts").unwrap().usize().unwrap(), 0);
         let models = j.get("models").unwrap().arr().unwrap();
         assert_eq!(models.len(), 1);
         assert_eq!(models[0].get("name").unwrap().str().unwrap(), "m@a");
         assert_eq!(models[0].get("completed").unwrap().usize().unwrap(), 3);
+        assert_eq!(models[0].get("backend_failed").unwrap().usize().unwrap(), 0);
         // The artifact is valid JSON end to end.
         assert!(Json::parse(&j.dump()).is_ok());
+    }
+
+    use crate::runtime::ModelFaults;
+    use std::sync::atomic::AtomicBool;
+
+    /// Backend that fails (typed `Err`, no panic) while `ok` is false.
+    struct Flaky {
+        ok: Arc<AtomicBool>,
+    }
+
+    impl InferenceBackend for Flaky {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+
+        fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+            if self.ok.load(Ordering::Relaxed) {
+                Ok(vec![image.data.iter().sum::<f32>()])
+            } else {
+                Err(anyhow!("flaky: induced failure"))
+            }
+        }
+    }
+
+    fn flaky_factory(ok: &Arc<AtomicBool>) -> BackendFactory {
+        let ok = Arc::clone(ok);
+        Arc::new(move |_w| Ok(Box::new(Flaky { ok: Arc::clone(&ok) }) as Box<dyn InferenceBackend>))
+    }
+
+    #[test]
+    fn supervisor_respawns_after_backend_panic() {
+        let plan = FaultPlan {
+            seed: 7,
+            models: vec![ModelFaults { model: "m".into(), panic_on: vec![1], ..Default::default() }],
+        };
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .restart_backoff_ms(0)
+            .fault_plan(plan)
+            .register(ModelSpec::new("m", scale_factory(1.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let img = || Tensor::new(vec![1], vec![3.0]).unwrap();
+        // Call 1 panics mid-batch: the panic fence fails it typed.
+        let err = engine.infer(Request::new("m", 1, img())).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
+        // The respawned worker (same slot, ordinal continues at 2) serves
+        // bitwise-identically to a healthy backend.
+        let resp = engine.infer(Request::new("m", 2, img())).unwrap();
+        assert_eq!(resp.logits, vec![3.0]);
+        let health = engine.health();
+        assert_eq!((health.workers_alive, health.workers_total), (1, 1));
+        assert_eq!(health.restarts, 1);
+        assert!(!health.degraded(), "recovered pool is not degraded: {health:?}");
+        drop(engine);
+        let report = join.join().unwrap();
+        assert_eq!(report.restarts, 1);
+        let m = &report.model("m").unwrap().metrics;
+        // Books: admitted == completed + deadline_exceeded + backend_failed.
+        assert_eq!((m.count(), m.backend_failed, m.deadline_exceeded), (1, 1, 0));
+    }
+
+    #[test]
+    fn breaker_opens_fast_fails_and_recovers() {
+        // Long cooldown: the open breaker fast-fails typed.
+        let ok = Arc::new(AtomicBool::new(false));
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .breaker_threshold(2)
+            .breaker_cooldown_ms(600_000)
+            .register(ModelSpec::new("m", flaky_factory(&ok)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let img = || Tensor::new(vec![1], vec![1.0]).unwrap();
+        for id in 0..2u64 {
+            let err = engine.infer(Request::new("m", id, img())).unwrap_err();
+            assert!(matches!(err, EngineError::Backend(_)), "{err}");
+        }
+        let health = engine.health();
+        assert_eq!(health.models[0].breaker, "open");
+        assert!(health.degraded());
+        let err = engine.submit(Request::new("m", 9, img())).unwrap_err();
+        assert_eq!(err.reject_reason(), Some(RejectReason::BreakerOpen));
+        assert!(err.to_string().contains("breaker_open"), "{err}");
+        drop(engine);
+        let report = join.join().unwrap();
+        let m = &report.model("m").unwrap().metrics;
+        assert_eq!((m.backend_failed, m.rejected_breaker, m.count()), (2, 1, 0));
+        assert_eq!(m.rejected(), 1);
+
+        // Zero cooldown: the next submit is the half-open probe, and its
+        // success closes the breaker.
+        let ok = Arc::new(AtomicBool::new(false));
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .breaker_threshold(1)
+            .breaker_cooldown_ms(0)
+            .register(ModelSpec::new("m", flaky_factory(&ok)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let _ = engine.infer(Request::new("m", 0, img())).unwrap_err();
+        assert_eq!(engine.health().models[0].breaker, "open");
+        ok.store(true, Ordering::Relaxed);
+        let resp = engine.infer(Request::new("m", 1, img())).unwrap();
+        assert_eq!(resp.logits, vec![1.0]);
+        assert_eq!(engine.health().models[0].breaker, "closed");
+        assert!(!engine.health().degraded());
+        assert_eq!(engine.infer(Request::new("m", 2, img())).unwrap().logits, vec![1.0]);
+        drop(engine);
+        let report = join.join().unwrap();
+        let m = &report.model("m").unwrap().metrics;
+        assert_eq!((m.backend_failed, m.rejected_breaker, m.count()), (1, 0, 2));
+    }
+
+    #[test]
+    fn queued_deadline_expiry_fails_typed_at_dequeue() {
+        // Every call spikes 30 ms, so a queued request with a
+        // microsecond deadline is guaranteed to expire while the spike
+        // executes ahead of it.
+        let plan = FaultPlan {
+            seed: 3,
+            models: vec![ModelFaults {
+                model: "m".into(),
+                spike_us: 30_000,
+                spike_rate: 1.0,
+                ..Default::default()
+            }],
+        };
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .fault_plan(plan)
+            .register(ModelSpec::new("m", scale_factory(1.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let img = || Tensor::new(vec![1], vec![2.0]).unwrap();
+        let w1 = engine.submit(Request::new("m", 1, img())).unwrap();
+        let w2 = engine.submit(Request::new("m", 2, img()).deadline_us(1)).unwrap();
+        assert_eq!(w1.wait().unwrap().logits, vec![2.0]);
+        match w2.wait().unwrap_err() {
+            EngineError::DeadlineExceeded { model, deadline_us, waited_us } => {
+                assert_eq!((model.as_str(), deadline_us), ("m", 1));
+                assert!(waited_us > 1, "waited {waited_us}us");
+            }
+            other => panic!("expected DeadlineExceeded, got {other}"),
+        }
+        // An expired request burns no batch slot: the next one serves.
+        assert_eq!(engine.infer(Request::new("m", 3, img())).unwrap().logits, vec![2.0]);
+        drop(engine);
+        let report = join.join().unwrap();
+        let m = &report.model("m").unwrap().metrics;
+        assert_eq!((m.count(), m.deadline_exceeded, m.backend_failed), (2, 1, 0));
+        // Books: admitted == completed + deadline_exceeded + backend_failed.
+        assert_eq!(3, m.count() as u64 + m.deadline_exceeded + m.backend_failed);
+    }
+
+    #[test]
+    fn restart_budget_bounds_respawns_then_pool_dies_typed() {
+        // Panics on calls 1..=3 with budget 2: the third death is final.
+        let plan = FaultPlan {
+            seed: 11,
+            models: vec![ModelFaults {
+                model: "m".into(),
+                panic_on: vec![1, 2, 3],
+                ..Default::default()
+            }],
+        };
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .restart_budget(2)
+            .restart_backoff_ms(0)
+            .fault_plan(plan)
+            .register(ModelSpec::new("m", scale_factory(1.0)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let img = || Tensor::new(vec![1], vec![1.0]).unwrap();
+        for id in 0..3u64 {
+            let err = engine.infer(Request::new("m", id, img())).unwrap_err();
+            assert!(matches!(err, EngineError::Backend(_)), "call {id}: {err}");
+        }
+        // Budget spent, pool dead: submits turn ShuttingDown (typed).
+        let mut saw_shutdown = false;
+        for _ in 0..400 {
+            match engine.submit(Request::new("m", 9, img())) {
+                Err(EngineError::ShuttingDown) => {
+                    saw_shutdown = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+                Ok(w) => assert!(w.wait().is_err(), "must fail, not hang"),
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(saw_shutdown, "exhausted budget must surface as ShuttingDown");
+        let health = engine.health();
+        assert_eq!(health.restarts, 2, "exactly budget respawns: {health:?}");
+        assert!(health.degraded());
+        drop(engine);
+        // No worker incarnation ever drained cleanly: join reports it.
+        assert!(join.join().is_err());
+    }
+
+    #[test]
+    fn engine_config_fault_tolerance_round_trip() {
+        let text = r#"{
+            "workers": 2,
+            "restart_budget": 3, "restart_backoff_ms": 5,
+            "breaker_threshold": 4, "breaker_cooldown_ms": 100,
+            "fault_plan": {"version": 1, "seed": 9,
+                           "models": [{"model": "x", "panic_on": [2]}]},
+            "models": [{"name": "x", "arch": "micro", "seed": 1}]
+        }"#;
+        let cfg = EngineConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.restart_budget, 3);
+        assert_eq!(cfg.restart_backoff_ms, 5);
+        assert_eq!(cfg.breaker_threshold, 4);
+        assert_eq!(cfg.breaker_cooldown_ms, 100);
+        let plan = cfg.fault_plan.as_ref().unwrap();
+        assert_eq!(plan.seed, 9);
+        assert_eq!(plan.models[0].panic_on, vec![2]);
+        let round = EngineConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(cfg, round);
+        // Defaults are omitted from the serialized form.
+        let cfg0 = EngineConfig::new(vec![ModelVariantConfig::random("x", "micro", 1)]);
+        let j = cfg0.to_json();
+        for key in [
+            "restart_budget",
+            "restart_backoff_ms",
+            "breaker_threshold",
+            "breaker_cooldown_ms",
+            "fault_plan",
+        ] {
+            assert!(j.opt(key).is_none(), "{key} should be omitted at default");
+        }
+        // Typo'd knobs and malformed plans are errors, not defaults.
+        let typo =
+            r#"{"restart_budgett": 1, "models": [{"name": "x", "arch": "micro", "seed": 1}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(typo).unwrap()).is_err());
+        let bad_plan = r#"{"fault_plan": {"models": [{"model": "x", "error_rate": 2.0}]},
+                           "models": [{"name": "x", "arch": "micro", "seed": 1}]}"#;
+        assert!(EngineConfig::from_json(&Json::parse(bad_plan).unwrap()).is_err());
+    }
+
+    #[test]
+    fn restart_backoff_is_exponential_and_capped() {
+        assert_eq!(restart_backoff_ms(10, 0), 10);
+        assert_eq!(restart_backoff_ms(10, 1), 10);
+        assert_eq!(restart_backoff_ms(10, 2), 20);
+        assert_eq!(restart_backoff_ms(10, 4), 80);
+        assert_eq!(restart_backoff_ms(10, 100), 640);
+        assert_eq!(restart_backoff_ms(500, 3), MAX_RESTART_BACKOFF_MS);
+        assert_eq!(restart_backoff_ms(0, 5), 0);
     }
 }

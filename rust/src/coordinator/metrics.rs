@@ -21,12 +21,25 @@ pub struct Metrics {
     /// full per-client in-flight quota
     /// ([`crate::coordinator::RejectReason::ClientQuota`]).
     pub rejected_quota: u64,
+    /// Requests fast-failed at admission because the model's circuit
+    /// breaker was open
+    /// ([`crate::coordinator::RejectReason::BreakerOpen`]).
+    pub rejected_breaker: u64,
+    /// Admitted requests failed typed at dequeue time because their
+    /// deadline had already expired (no batch slot was burned on them).
+    pub deadline_exceeded: u64,
+    /// Admitted requests failed typed after admission: backend `Err`
+    /// results, a worker panicking mid-batch, or the final flush when
+    /// the whole pool died with work still queued. Together with
+    /// `completed` and `deadline_exceeded` this closes the books:
+    /// admitted == completed + deadline_exceeded + backend_failed.
+    pub backend_failed: u64,
 }
 
 impl Metrics {
     /// Total requests refused at admission, any reason.
     pub fn rejected(&self) -> u64 {
-        self.rejected_full + self.rejected_shed + self.rejected_quota
+        self.rejected_full + self.rejected_shed + self.rejected_quota + self.rejected_breaker
     }
 
     /// Fold another worker's metrics into this one (pool shutdown path).
@@ -44,6 +57,9 @@ impl Metrics {
         self.rejected_full += other.rejected_full;
         self.rejected_shed += other.rejected_shed;
         self.rejected_quota += other.rejected_quota;
+        self.rejected_breaker += other.rejected_breaker;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.backend_failed += other.backend_failed;
     }
     pub fn record_request(&mut self, latency_us: u64, completed_at_us: u64) {
         self.latencies_us.push(latency_us);
@@ -120,6 +136,9 @@ impl Metrics {
             ("rejected_full", Json::Num(self.rejected_full as f64)),
             ("rejected_shed", Json::Num(self.rejected_shed as f64)),
             ("rejected_quota", Json::Num(self.rejected_quota as f64)),
+            ("rejected_breaker", Json::Num(self.rejected_breaker as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
+            ("backend_failed", Json::Num(self.backend_failed as f64)),
             ("mean_us", Json::Num(self.mean_us())),
             ("p50_us", Json::Num(snap.percentile_us(50.0) as f64)),
             ("p95_us", Json::Num(snap.percentile_us(95.0) as f64)),
@@ -134,13 +153,18 @@ impl Metrics {
     pub fn summary(&self) -> String {
         let snap = self.latency_snapshot();
         format!(
-            "n={} rejected={} (full {}, shed {}, quota {}) mean={:.1}ms p50={:.1}ms \
+            "n={} rejected={} (full {}, shed {}, quota {}, breaker {}) failed={} \
+             (deadline {}, backend {}) mean={:.1}ms p50={:.1}ms \
              p95={:.1}ms p99={:.1}ms batch_avg={:.2} throughput={:.1} req/s",
             self.count(),
             self.rejected(),
             self.rejected_full,
             self.rejected_shed,
             self.rejected_quota,
+            self.rejected_breaker,
+            self.deadline_exceeded + self.backend_failed,
+            self.deadline_exceeded,
+            self.backend_failed,
             self.mean_us() / 1e3,
             snap.percentile_us(50.0) as f64 / 1e3,
             snap.percentile_us(95.0) as f64 / 1e3,
@@ -343,6 +367,29 @@ mod tests {
         assert_eq!(a.rejected(), 7);
         assert_eq!(a.to_json().get("rejected_quota").unwrap().usize().unwrap(), 6);
         assert!(a.summary().contains("quota 6"));
+    }
+
+    #[test]
+    fn fault_counters_in_totals_json_and_summary() {
+        let mut a = Metrics::default();
+        a.rejected_breaker = 2;
+        a.deadline_exceeded = 3;
+        let mut b = Metrics::default();
+        b.rejected_breaker = 1;
+        b.backend_failed = 4;
+        a.merge(&b);
+        assert_eq!(a.rejected_breaker, 3);
+        assert_eq!(a.deadline_exceeded, 3);
+        assert_eq!(a.backend_failed, 4);
+        // Breaker refusals are admission refusals; post-admission typed
+        // failures are not.
+        assert_eq!(a.rejected(), 3);
+        let j = a.to_json();
+        assert_eq!(j.get("rejected_breaker").unwrap().usize().unwrap(), 3);
+        assert_eq!(j.get("deadline_exceeded").unwrap().usize().unwrap(), 3);
+        assert_eq!(j.get("backend_failed").unwrap().usize().unwrap(), 4);
+        let s = a.summary();
+        assert!(s.contains("breaker 3") && s.contains("deadline 3") && s.contains("backend 4"), "{s}");
     }
 
     #[test]

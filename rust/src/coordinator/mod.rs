@@ -21,6 +21,13 @@
 //!   migration table);
 //! * [`metrics`] — latency/throughput percentiles plus per-reason
 //!   rejection counters, merged per model across the pool at join time.
+//!
+//! Non-test code in this module must not `.unwrap()`: lock poisoning is
+//! recovered via `unwrap_or_else(|p| p.into_inner())` (a poisoned mutex
+//! here only ever guards counters/queues whose invariants are restored
+//! by the supervision path), and every other fallible path returns a
+//! typed error.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod batcher;
 pub mod engine;
@@ -30,9 +37,11 @@ pub mod server;
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use engine::{
     admission_check, arch_forward_config, AdmissionDeny, Engine, EngineBuilder, EngineConfig,
-    EngineError, EngineJoin, EngineReport, EngineWaiter, ModelReport, ModelSourceConfig,
-    ModelVariantConfig, Priority, RejectReason, Request, Response, DEFAULT_QUEUE_DEPTH,
-    ENGINE_CONFIG_VERSION, ENGINE_REPORT_FORMAT, ENGINE_REPORT_VERSION,
+    EngineError, EngineHealth, EngineJoin, EngineReport, EngineWaiter, ModelHealth, ModelReport,
+    ModelSourceConfig, ModelVariantConfig, Priority, RejectReason, Request, Response,
+    DEFAULT_BREAKER_COOLDOWN_MS, DEFAULT_BREAKER_THRESHOLD, DEFAULT_QUEUE_DEPTH,
+    DEFAULT_RESTART_BACKOFF_MS, DEFAULT_RESTART_BUDGET, ENGINE_CONFIG_VERSION,
+    ENGINE_REPORT_FORMAT, ENGINE_REPORT_VERSION,
 };
 pub use metrics::{LatencySnapshot, Metrics};
 pub use server::{

@@ -132,7 +132,7 @@ impl Server {
             std::sync::Arc::new(move |_w| {
                 let f = cell
                     .lock()
-                    .unwrap()
+                    .unwrap_or_else(|p| p.into_inner())
                     .take()
                     .ok_or_else(|| anyhow!("single-worker factory already consumed"))?;
                 f().map(|b| Box::new(b) as Box<dyn InferenceBackend>)

@@ -26,14 +26,18 @@
 //!   ([`runtime::artifact`]; weights flow in through a
 //!   [`runtime::ModelSource`]), the feature-gated [`runtime::pjrt`] path
 //!   (`pjrt` cargo feature) that loads AOT artifacts
-//!   (`artifacts/*.hlo.txt`), and the [`runtime::ModelRegistry`]
-//!   naming the variants one engine process hosts;
+//!   (`artifacts/*.hlo.txt`), the [`runtime::ModelRegistry`]
+//!   naming the variants one engine process hosts, and the seeded
+//!   deterministic fault-injection layer ([`runtime::fault`]) wrapping
+//!   any backend for chaos testing;
 //! * [`coordinator`] — the edge-serving engine (API v1): a typed
 //!   multi-model surface ([`coordinator::Request`] /
 //!   [`coordinator::Response`] / [`coordinator::EngineError`]) over
 //!   per-model dynamic batchers and an N-worker backend pool, with
 //!   latency-target-aware admission control (bounded queue, per-priority
-//!   shedding, SLO projection, per-client quotas) and per-model merged
+//!   shedding, SLO projection, per-client quotas), worker supervision
+//!   (bounded-budget respawns with backoff), per-model circuit
+//!   breakers, dequeue-time deadline enforcement, and per-model merged
 //!   metrics; the v0 [`coordinator::ServerHandle`] remains as a shim;
 //! * [`net`] — the HTTP serving front-end over the engine
 //!   ([`net::BoundServer`]): hermetic `std::net` + hand-rolled

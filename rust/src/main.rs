@@ -59,6 +59,7 @@ COMMANDS:
            [--calib table.json] [--artifacts artifacts]
            [--report-json report.json] [--listen host:port]
            [--conn-workers 8] [--conn-backlog 64] [--client-quota N]
+           [--fault-plan plan.json]
                                   serve inference E2E through the engine.
                                   `--report-json` writes the final
                                   EngineReport (per-model metrics incl.
@@ -85,12 +86,20 @@ COMMANDS:
                                   /v1/infer, GET /healthz, POST
                                   /admin/shutdown; graceful drain on
                                   shutdown; `--client-quota` caps each
-                                  labeled client's in-flight requests
+                                  labeled client's in-flight requests.
+                                  `--fault-plan` loads a seeded chaos
+                                  plan (README.md §Fault tolerance) that
+                                  wraps every backend with deterministic
+                                  injected panics/errors/latency spikes;
+                                  supervision respawns dead workers
+                                  within the restart budget and /healthz
+                                  reports degraded state truthfully
   loadgen  --url host:port [--requests 64] [--clients 4]
            [--mode closed|open] [--rate 100] [--dist uniform|bursty]
            [--seed 0] [--priorities high=1,normal=2,low=1]
            [--deadline-us N] [--model name] [--out BENCH_serving.json]
-           [--shutdown true|false]
+           [--shutdown true|false] [--timeout-ms 30000]
+           [--retries 0] [--retry-base-ms 10]
                                   seeded load harness against a live
                                   `serve --listen` endpoint: closed-loop
                                   (one in-flight request per client) or
@@ -101,7 +110,13 @@ COMMANDS:
                                   artifact (p50/p95/p99, goodput,
                                   per-priority shed rates) that
                                   `perfcheck` gates; `--shutdown true`
-                                  drains the server afterwards
+                                  drains the server afterwards.
+                                  `--retries` bounds per-request retries
+                                  of retryable outcomes (429/500/503/504,
+                                  timeouts, transport errors) with
+                                  decorrelated-jitter backoff honoring
+                                  Retry-After; retries are ledgered
+                                  separately so goodput stays exact
   perfcheck [--current BENCH_hotpath.json] [--baseline BENCH_baseline.json]
             [--tolerance 0.5]     CI perf-regression gate: compare the
                                   bench record's speedup pairs against
@@ -239,6 +254,7 @@ fn main() -> Result<()> {
                     "conn-workers",
                     "conn-backlog",
                     "client-quota",
+                    "fault-plan",
                 ],
             )?;
             cmd_serve(&flags)
@@ -259,6 +275,9 @@ fn main() -> Result<()> {
                     "model",
                     "out",
                     "shutdown",
+                    "timeout-ms",
+                    "retries",
+                    "retry-base-ms",
                 ],
             )?;
             cmd_loadgen(&flags)
@@ -867,6 +886,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             "calib",
             "artifacts",
             "client-quota",
+            "fault-plan",
         ] {
             if flags.get(k).is_some() {
                 bail!("--{k} conflicts with --engine (the config file decides it)");
@@ -891,7 +911,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             if flags.get("artifacts").is_some() {
                 bail!("--artifacts applies to the pjrt backend only");
             }
-            let cfg = native_engine_config(
+            let mut cfg = native_engine_config(
                 workers,
                 max_batch,
                 queue_depth,
@@ -899,6 +919,15 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                 calib,
                 flags.usize("client-quota", 0)?,
             );
+            if let Some(path) = flags.get("fault-plan") {
+                let plan = mamba_x::runtime::FaultPlan::load(path)?;
+                println!(
+                    "fault plan {path}: seed {}, {} model(s) under injection",
+                    plan.seed,
+                    plan.models.len()
+                );
+                cfg.fault_plan = Some(plan);
+            }
             match listen {
                 Some(addr) => {
                     serve_listen(cfg, &addr, conn_workers, conn_backlog, report_json.as_deref())
@@ -912,7 +941,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
             if listen.is_some() {
                 bail!("--listen supports the native backend only");
             }
-            for k in ["workers", "queue-depth", "seed", "calib", "report-json"] {
+            for k in ["workers", "queue-depth", "seed", "calib", "report-json", "fault-plan"] {
                 if flags.get(k).is_some() {
                     bail!("--{k} applies to the native backend only");
                 }
@@ -995,7 +1024,8 @@ fn serve_listen(
     println!("{}", report.summary());
     println!(
         "net: {} conns, {} ok, {} bad_request, {} not_found, 429 full/shed/quota {}/{}/{}, \
-         {} unknown_model, {} shutting_down, {} backend_error, {} busy",
+         {} unknown_model, {} shutting_down, {} backend_error, {} deadline_exceeded, \
+         {} breaker_open, {} busy",
         net.conns,
         net.ok,
         net.bad_request,
@@ -1006,6 +1036,8 @@ fn serve_listen(
         net.unknown_model,
         net.shutting_down,
         net.backend_error,
+        net.deadline_exceeded,
+        net.breaker_open,
         net.conn_busy,
     );
     if let Some(path) = report_json {
@@ -1060,6 +1092,9 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
         "false" => false,
         other => bail!("--shutdown takes true or false, got {other:?}"),
     };
+    cfg.timeout_ms = (flags.usize("timeout-ms", 30_000)? as u64).max(1);
+    cfg.retries = u32::try_from(flags.usize("retries", 0)?)?;
+    cfg.retry_base_ms = (flags.usize("retry-base-ms", 10)? as u64).max(1);
     let out = flags.string("out", "BENCH_serving.json");
 
     let artifact = loadgen::run(&cfg)?;
@@ -1081,7 +1116,8 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     );
     println!(
         "refusals: full {} shed {} quota {} unknown_model {} bad_request {} \
-         shutting_down {} backend_error {} transport {}",
+         shutting_down {} backend_error {} deadline_exceeded {} breaker_open {} \
+         timeouts {} transport {} (retries {})",
         n("rejected_full"),
         n("rejected_shed"),
         n("rejected_quota"),
@@ -1089,7 +1125,11 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
         n("bad_request"),
         n("shutting_down"),
         n("backend_error"),
+        n("deadline_exceeded"),
+        n("breaker_open"),
+        n("timeouts"),
         n("transport_errors"),
+        n("retries"),
     );
     mamba_x::util::write_creating_dirs(&out, artifact.dump().as_bytes())?;
     let abs = std::fs::canonicalize(&out).unwrap_or_else(|_| out.clone().into());

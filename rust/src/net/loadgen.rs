@@ -38,6 +38,10 @@ pub const SERVING_BENCH_VERSION: u32 = 1;
 /// `synthetic_image` convention so client streams are decorrelated.
 const STREAM_SPLIT: u64 = 0x9E37_79B9_7F4A_7C15;
 
+/// Extra split for the per-client retry-backoff stream, so backoff draws
+/// never perturb the workload stream.
+const RETRY_SPLIT: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
 /// Open-loop inter-arrival distribution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dist {
@@ -93,6 +97,16 @@ pub struct LoadgenConfig {
     /// Send `POST /admin/shutdown` after the run (drains the server so
     /// a scripted caller can collect the engine report).
     pub shutdown: bool,
+    /// Per-response read timeout (ms); expiry counts as a typed
+    /// `timeouts` outcome, not a generic transport error.
+    pub timeout_ms: u64,
+    /// Bounded retry budget per logical request (0 = no retries).
+    /// Retryable outcomes: transport errors, timeouts, and HTTP
+    /// 429/500/503/504.
+    pub retries: u32,
+    /// Base delay (ms) for the decorrelated-jitter retry backoff; a
+    /// server-sent `Retry-After` overrides the jitter.
+    pub retry_base_ms: u64,
 }
 
 impl LoadgenConfig {
@@ -107,6 +121,9 @@ impl LoadgenConfig {
             deadline_us: None,
             model: None,
             shutdown: false,
+            timeout_ms: 30_000,
+            retries: 0,
+            retry_base_ms: 10,
         }
     }
 
@@ -142,6 +159,9 @@ impl LoadgenConfig {
             ),
             ("model", self.model.clone().map_or(Json::Null, Json::Str)),
             ("shutdown", Json::Bool(self.shutdown)),
+            ("timeout_ms", Json::Num(self.timeout_ms as f64)),
+            ("retries", Json::Num(self.retries as f64)),
+            ("retry_base_ms", Json::Num(self.retry_base_ms as f64)),
         ])
     }
 }
@@ -164,9 +184,18 @@ pub fn parse_priority_mix(s: &str) -> Result<Vec<(Priority, u32)>> {
 }
 
 /// Per-class outcome tally (one overall + one per priority tier).
+///
+/// Ledger identity: every *attempt* (original send or retry) lands in
+/// exactly one outcome class, so
+/// `completed + rejected_* + unknown_model + bad_request +
+/// shutting_down + backend_error + deadline_exceeded + breaker_open +
+/// timeouts + transport_errors == sent + retries`.
 #[derive(Debug, Default, Clone)]
 struct Tally {
     sent: u64,
+    /// Re-attempts beyond the first send (bounded by the retry budget);
+    /// counted separately so `completed / sent` goodput stays exact.
+    retries: u64,
     completed: u64,
     rejected_full: u64,
     rejected_shed: u64,
@@ -175,6 +204,11 @@ struct Tally {
     bad_request: u64,
     shutting_down: u64,
     backend_error: u64,
+    deadline_exceeded: u64,
+    breaker_open: u64,
+    /// Read timeouts (the `--timeout-ms` knob), typed apart from other
+    /// transport failures.
+    timeouts: u64,
     transport_errors: u64,
     /// Client-side wall latency of completed requests.
     latencies_us: Vec<u64>,
@@ -183,6 +217,7 @@ struct Tally {
 impl Tally {
     fn merge(&mut self, other: &Tally) {
         self.sent += other.sent;
+        self.retries += other.retries;
         self.completed += other.completed;
         self.rejected_full += other.rejected_full;
         self.rejected_shed += other.rejected_shed;
@@ -191,31 +226,33 @@ impl Tally {
         self.bad_request += other.bad_request;
         self.shutting_down += other.shutting_down;
         self.backend_error += other.backend_error;
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.breaker_open += other.breaker_open;
+        self.timeouts += other.timeouts;
         self.transport_errors += other.transport_errors;
         self.latencies_us.extend_from_slice(&other.latencies_us);
     }
 
-    /// Classify one response. 429s disambiguate full/shed/quota via the
-    /// `"error"` code in the body (the front-end always sends one).
+    /// Classify one response. 429s disambiguate full/shed/quota and
+    /// 503s disambiguate breaker_open/shutting_down via the `"error"`
+    /// code in the body (the front-end always sends one).
     fn classify(&mut self, resp: &RawResponse, latency_us: u64) {
         match resp.status {
             200 => {
                 self.completed += 1;
                 self.latencies_us.push(latency_us);
             }
-            429 => {
-                let code = std::str::from_utf8(&resp.body)
-                    .ok()
-                    .and_then(|t| Json::parse(t).ok())
-                    .and_then(|j| j.get("error").ok().map(|v| v.str().unwrap_or("").to_string()));
-                match code.as_deref() {
-                    Some("full") => self.rejected_full += 1,
-                    Some("client_quota") => self.rejected_quota += 1,
-                    _ => self.rejected_shed += 1,
-                }
-            }
+            429 => match body_error_code(resp).as_deref() {
+                Some("full") => self.rejected_full += 1,
+                Some("client_quota") => self.rejected_quota += 1,
+                _ => self.rejected_shed += 1,
+            },
             404 => self.unknown_model += 1,
-            503 => self.shutting_down += 1,
+            503 => match body_error_code(resp).as_deref() {
+                Some("breaker_open") => self.breaker_open += 1,
+                _ => self.shutting_down += 1,
+            },
+            504 => self.deadline_exceeded += 1,
             500 => self.backend_error += 1,
             _ => self.bad_request += 1,
         }
@@ -241,6 +278,7 @@ impl Tally {
         };
         Json::obj_from(vec![
             ("sent", Json::Num(self.sent as f64)),
+            ("retries", Json::Num(self.retries as f64)),
             ("completed", Json::Num(self.completed as f64)),
             ("rejected_full", Json::Num(self.rejected_full as f64)),
             ("rejected_shed", Json::Num(self.rejected_shed as f64)),
@@ -249,11 +287,22 @@ impl Tally {
             ("bad_request", Json::Num(self.bad_request as f64)),
             ("shutting_down", Json::Num(self.shutting_down as f64)),
             ("backend_error", Json::Num(self.backend_error as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
+            ("breaker_open", Json::Num(self.breaker_open as f64)),
+            ("timeouts", Json::Num(self.timeouts as f64)),
             ("transport_errors", Json::Num(self.transport_errors as f64)),
             ("shed_rate", Json::Num(shed_rate)),
             ("latency_us", self.latency_json()),
         ])
     }
+}
+
+/// Extract the machine-readable `"error"` code from a JSON error body.
+fn body_error_code(resp: &RawResponse) -> Option<String> {
+    std::str::from_utf8(&resp.body)
+        .ok()
+        .and_then(|t| Json::parse(t).ok())
+        .and_then(|j| j.get("error").ok().map(|v| v.str().unwrap_or("").to_string()))
 }
 
 /// One client's full result: overall tally + per-priority breakdown
@@ -277,10 +326,14 @@ impl ClientStats {
     }
 }
 
-fn connect(addr: &str) -> std::io::Result<HttpConn<TcpStream>> {
+/// Read timeout for control-plane calls (`/healthz`, `/admin/shutdown`);
+/// workload connections use the configurable `--timeout-ms` instead.
+const CONTROL_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn connect(addr: &str, read_timeout: Duration) -> std::io::Result<HttpConn<TcpStream>> {
     let stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true)?;
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_read_timeout(Some(read_timeout))?;
     Ok(HttpConn::new(stream, HttpLimits::default()))
 }
 
@@ -366,10 +419,15 @@ fn infer_body(
 }
 
 /// One client thread: run its share of the workload against a kept-alive
-/// connection, reconnecting once per transport error.
+/// connection, reconnecting once per transport error. Retries (bounded
+/// by `cfg.retries`) draw backoff jitter from a *separate* rng stream so
+/// the workload sequence (ids, priorities, payload seeds) stays
+/// bit-identical no matter which attempts fail.
 fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> ClientStats {
     let mut stats = ClientStats::default();
     let mut rng = Pcg::new(cfg.seed ^ (ci as u64).wrapping_mul(STREAM_SPLIT));
+    let mut backoff_rng =
+        Pcg::new(cfg.seed ^ (ci as u64).wrapping_mul(STREAM_SPLIT) ^ RETRY_SPLIT);
     let schedule = match cfg.mode {
         ArrivalMode::Closed => Vec::new(),
         ArrivalMode::Open { rate_rps, dist } => {
@@ -377,12 +435,13 @@ fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> C
             arrival_schedule_us(&mut rng, n, 1e6 / per_client, dist)
         }
     };
-    let Ok(mut conn) = connect(&cfg.addr) else {
+    let timeout = Duration::from_millis(cfg.timeout_ms.max(1));
+    let Ok(mut conn) = connect(&cfg.addr, timeout) else {
         stats.overall.transport_errors += 1;
         return stats;
     };
     let start = Instant::now();
-    for k in 0..n {
+    'requests: for k in 0..n {
         if let Some(&at_us) = schedule.get(k) {
             let target = Duration::from_micros(at_us);
             let elapsed = start.elapsed();
@@ -396,27 +455,69 @@ fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> C
         let body = infer_body(model, id, priority, cfg.deadline_us, ci, cfg.seed);
         stats.overall.sent += 1;
         stats.per_priority[pidx(priority)].sent += 1;
-        let t0 = Instant::now();
-        match exchange(&mut conn, "/v1/infer", &body) {
-            Ok(resp) => {
-                let latency_us = t0.elapsed().as_micros() as u64;
-                stats.overall.classify(&resp, latency_us);
-                stats.per_priority[pidx(priority)].classify(&resp, latency_us);
-                if resp.close {
-                    match connect(&cfg.addr) {
-                        Ok(c) => conn = c,
-                        Err(_) => break,
+        // Every attempt (original + retries) is classified at wire
+        // truth, so per-status counters still reconcile exactly with
+        // the front-end's; `retries` records the extra attempts.
+        let mut attempt = 0u32;
+        let mut delay_ms = cfg.retry_base_ms.max(1);
+        loop {
+            let t0 = Instant::now();
+            let mut retry_after_ms: Option<u64> = None;
+            let retryable = match exchange(&mut conn, "/v1/infer", &body) {
+                Ok(resp) => {
+                    let latency_us = t0.elapsed().as_micros() as u64;
+                    stats.overall.classify(&resp, latency_us);
+                    stats.per_priority[pidx(priority)].classify(&resp, latency_us);
+                    retry_after_ms = resp
+                        .header("retry-after")
+                        .and_then(|v| v.trim().parse::<u64>().ok())
+                        .map(|secs| secs.saturating_mul(1_000).min(2_000));
+                    let retryable = matches!(resp.status, 429 | 500 | 503 | 504);
+                    if resp.close {
+                        match connect(&cfg.addr, timeout) {
+                            Ok(c) => conn = c,
+                            Err(_) => break 'requests,
+                        }
                     }
+                    retryable
                 }
-            }
-            Err(_) => {
-                stats.overall.transport_errors += 1;
-                stats.per_priority[pidx(priority)].transport_errors += 1;
-                match connect(&cfg.addr) {
-                    Ok(c) => conn = c,
-                    Err(_) => break,
+                Err(err) => {
+                    if matches!(err, FrameError::TimedOut) {
+                        stats.overall.timeouts += 1;
+                        stats.per_priority[pidx(priority)].timeouts += 1;
+                    } else {
+                        stats.overall.transport_errors += 1;
+                        stats.per_priority[pidx(priority)].transport_errors += 1;
+                    }
+                    // Connection state is unknown after a transport
+                    // failure (a late response could desync the next
+                    // exchange): always reconnect.
+                    match connect(&cfg.addr, timeout) {
+                        Ok(c) => conn = c,
+                        Err(_) => break 'requests,
+                    }
+                    true
                 }
+            };
+            if !retryable || attempt >= cfg.retries {
+                break;
             }
+            attempt += 1;
+            stats.overall.retries += 1;
+            stats.per_priority[pidx(priority)].retries += 1;
+            // Honor a server-sent Retry-After (seconds, capped at 2 s);
+            // otherwise decorrelated jitter: sleep ~ U[base, 3 x last],
+            // capped at 1 s.
+            let sleep_ms = match retry_after_ms {
+                Some(ms) => ms,
+                None => {
+                    let base = cfg.retry_base_ms.max(1);
+                    let hi = delay_ms.saturating_mul(3).max(base + 1);
+                    delay_ms = base + backoff_rng.below(hi - base);
+                    delay_ms.min(1_000)
+                }
+            };
+            std::thread::sleep(Duration::from_millis(sleep_ms));
         }
     }
     stats
@@ -440,7 +541,7 @@ pub fn probe_models(addr: &str, timeout: Duration) -> Result<Vec<String>> {
 }
 
 fn try_healthz(addr: &str) -> Result<Vec<String>> {
-    let mut conn = connect(addr)?;
+    let mut conn = connect(addr, CONTROL_TIMEOUT)?;
     write_request(conn.stream_mut(), "GET", "/healthz", &[], b"")?;
     let resp = conn.read_response().map_err(|e| anyhow!("healthz: {e}"))?;
     if resp.status != 200 {
@@ -456,7 +557,7 @@ fn try_healthz(addr: &str) -> Result<Vec<String>> {
 
 /// Ask the server to drain (`POST /admin/shutdown`).
 pub fn send_shutdown(addr: &str) -> Result<()> {
-    let mut conn = connect(addr)?;
+    let mut conn = connect(addr, CONTROL_TIMEOUT)?;
     write_request(conn.stream_mut(), "POST", "/admin/shutdown", &[], b"")?;
     let resp = conn.read_response().map_err(|e| anyhow!("shutdown: {e}"))?;
     if resp.status != 200 {
@@ -615,6 +716,9 @@ mod tests {
         t.classify(&resp(429, r#"{"error":"client_quota","detail":""}"#), 0);
         t.classify(&resp(404, r#"{"error":"unknown_model"}"#), 0);
         t.classify(&resp(503, "{}"), 0);
+        t.classify(&resp(503, r#"{"error":"shutting_down","detail":""}"#), 0);
+        t.classify(&resp(503, r#"{"error":"breaker_open","detail":""}"#), 0);
+        t.classify(&resp(504, r#"{"error":"deadline_exceeded","detail":""}"#), 0);
         t.classify(&resp(500, "{}"), 0);
         t.classify(&resp(400, "{}"), 0);
         assert_eq!(t.completed, 1);
@@ -623,11 +727,17 @@ mod tests {
         assert_eq!(t.rejected_shed, 1);
         assert_eq!(t.rejected_quota, 1);
         assert_eq!(t.unknown_model, 1);
-        assert_eq!(t.shutting_down, 1);
+        assert_eq!(t.shutting_down, 2, "bodyless and explicit 503s both count");
+        assert_eq!(t.breaker_open, 1);
+        assert_eq!(t.deadline_exceeded, 1);
         assert_eq!(t.backend_error, 1);
         assert_eq!(t.bad_request, 1);
         let j = t.to_json();
         assert_eq!(j.get("completed").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("breaker_open").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("deadline_exceeded").unwrap().usize().unwrap(), 1);
+        assert_eq!(j.get("timeouts").unwrap().usize().unwrap(), 0);
+        assert_eq!(j.get("retries").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("latency_us").unwrap().get("p50").unwrap().usize().unwrap(), 120);
     }
 

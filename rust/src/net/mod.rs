@@ -18,6 +18,11 @@
 //!
 //! Wire format (see README.md §Network serving): `POST /v1/infer` with a
 //! JSON body, `GET /healthz`, `POST /admin/shutdown`.
+//!
+//! Non-test code in this module must not `.unwrap()`: lock poisoning is
+//! recovered via `unwrap_or_else(|p| p.into_inner())` and every other
+//! fallible path returns a typed error or maps to a wire status.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod http;
 pub mod loadgen;

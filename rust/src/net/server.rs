@@ -15,8 +15,10 @@
 //! Status mapping is one-to-one with the typed engine failure surface —
 //! the HTTP layer adds **no** admission policy of its own (except the
 //! connection backlog): `Full`/`Shed`/`ClientQuota` -> 429 (with
-//! `retry-after`), `UnknownModel` -> 404, `ShuttingDown` -> 503,
-//! `Backend` -> 500, and framing/validation errors -> 4xx via
+//! `retry-after`), `UnknownModel` -> 404, `BreakerOpen` -> 503 (with
+//! `retry-after`, connection kept open), `ShuttingDown` -> 503 (closes),
+//! `DeadlineExceeded` -> 504, `Backend` -> 500, and framing/validation
+//! errors -> 4xx via
 //! [`FrameError::status`]. Unknown *models* are deliberately routed
 //! through `engine.submit` (with a placeholder tensor) so the engine
 //! report stays the single accounting point for `rejected_unknown_model`
@@ -108,6 +110,8 @@ struct NetCounters {
     unknown_model: AtomicU64,
     shutting_down: AtomicU64,
     backend_error: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    breaker_open: AtomicU64,
 }
 
 /// Final front-end accounting, returned by [`BoundServer::serve`] and
@@ -125,6 +129,8 @@ pub struct NetReport {
     pub unknown_model: u64,
     pub shutting_down: u64,
     pub backend_error: u64,
+    pub deadline_exceeded: u64,
+    pub breaker_open: u64,
 }
 
 impl NetReport {
@@ -141,6 +147,8 @@ impl NetReport {
             ("unknown_model", Json::Num(self.unknown_model as f64)),
             ("shutting_down", Json::Num(self.shutting_down as f64)),
             ("backend_error", Json::Num(self.backend_error as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
+            ("breaker_open", Json::Num(self.breaker_open as f64)),
         ])
     }
 }
@@ -159,6 +167,8 @@ impl NetCounters {
             unknown_model: self.unknown_model.load(Ordering::Relaxed),
             shutting_down: self.shutting_down.load(Ordering::Relaxed),
             backend_error: self.backend_error.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            breaker_open: self.breaker_open.load(Ordering::Relaxed),
         }
     }
 }
@@ -264,8 +274,17 @@ impl BoundServer {
             }
         }
         drop(tx); // workers drain the queue, then see Disconnected
+        // Join *every* worker before reporting: an early `?` on the
+        // first panicked join would leak the remaining threads (and any
+        // counter updates they still owe). Aggregate instead.
+        let mut panicked = 0usize;
         for w in workers {
-            w.join().map_err(|_| anyhow!("connection worker panicked"))?;
+            if w.join().is_err() {
+                panicked += 1;
+            }
+        }
+        if panicked > 0 {
+            return Err(anyhow!("{panicked} connection worker(s) panicked"));
         }
         let report = ctx.counters.snapshot();
         // `ctx` (and with it the engine handle) drops here.
@@ -299,7 +318,9 @@ fn conn_worker(ctx: Arc<Ctx>, rx: Arc<Mutex<Receiver<TcpStream>>>) {
     loop {
         // Hold the receiver lock only for the claim, never while serving.
         let claimed = {
-            let guard = rx.lock().unwrap();
+            // A panicked peer can only have poisoned the lock between
+            // claim and release; the receiver itself is still valid.
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
             guard.recv_timeout(Duration::from_millis(50))
         };
         match claimed {
@@ -371,19 +392,39 @@ fn handle_conn(ctx: &Ctx, stream: TcpStream) {
 fn route(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, req: RawRequest) -> bool {
     match (req.method.as_str(), req.target.as_str()) {
         ("GET", "/healthz") => {
-            let status = if ctx.draining.load(Ordering::SeqCst) { "draining" } else { "ok" };
+            // Degradation-aware: "draining" wins (the server is going
+            // away), then "degraded" (dead/respawning workers or a
+            // non-closed breaker), else "ok". Breaker state comes from
+            // the engine so /healthz never disagrees with the report.
+            let health = ctx.engine.health();
+            let status = if ctx.draining.load(Ordering::SeqCst) {
+                "draining"
+            } else if health.degraded() {
+                "degraded"
+            } else {
+                "ok"
+            };
             let models = ctx
                 .models
                 .iter()
                 .map(|m| {
+                    let breaker = health
+                        .models
+                        .iter()
+                        .find(|h| h.name == m.name)
+                        .map_or("closed", |h| h.breaker);
                     Json::obj_from(vec![
                         ("name", Json::Str(m.name.clone())),
                         ("input_len", Json::Num(m.input_len() as f64)),
+                        ("breaker", Json::Str(breaker.to_string())),
                     ])
                 })
                 .collect();
             let body = Json::obj_from(vec![
                 ("status", Json::Str(status.to_string())),
+                ("workers_alive", Json::Num(health.workers_alive as f64)),
+                ("workers_total", Json::Num(health.workers_total as f64)),
+                ("restarts", Json::Num(health.restarts as f64)),
                 ("models", Json::Arr(models)),
             ])
             .dump()
@@ -636,6 +677,13 @@ fn engine_error_reply(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, err: EngineErro
                 RejectReason::UnknownModel => {
                     (&ctx.counters.unknown_model, 404, "Not Found", false)
                 }
+                // Fast-fail while the model's breaker is open: retryable
+                // (503 + retry-after) but — unlike ShuttingDown — the
+                // connection stays open; clients disambiguate by the
+                // body's "error" code.
+                RejectReason::BreakerOpen => {
+                    (&ctx.counters.breaker_open, 503, "Service Unavailable", true)
+                }
             };
             counter.fetch_add(1, Ordering::Relaxed);
             let body = error_body(reason.as_str(), &detail);
@@ -652,6 +700,17 @@ fn engine_error_reply(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, err: EngineErro
                 &[],
                 &error_body("shutting_down", "engine is shutting down"),
                 true,
+            )
+        }
+        EngineError::DeadlineExceeded { .. } => {
+            ctx.counters.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            reply(
+                conn,
+                504,
+                "Gateway Timeout",
+                &[],
+                &error_body("deadline_exceeded", &err.to_string()),
+                false,
             )
         }
         EngineError::Backend(msg) => {
@@ -726,6 +785,8 @@ mod tests {
             "unknown_model",
             "shutting_down",
             "backend_error",
+            "deadline_exceeded",
+            "breaker_open",
         ] {
             assert!(j.get(key).is_ok(), "missing {key}");
         }

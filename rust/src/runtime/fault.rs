@@ -1,0 +1,395 @@
+//! Seeded, deterministic fault injection for chaos testing
+//! (`serve --fault-plan`, engine config `"fault_plan"`).
+//!
+//! A [`FaultPlan`] describes, per hosted model, exactly which backend
+//! calls misbehave: panic on listed call ordinals, return a typed
+//! `Err` on listed ordinals or at a seeded random rate, or sleep an
+//! injected latency spike. [`FaultPlan::wrap`] decorates any
+//! [`InferenceBackend`] factory with a [`FaultyBackend`] that enacts
+//! the plan. Every decision is a pure function of
+//! `(plan seed, model name, worker slot, call ordinal)`, so a chaos
+//! run replays identically and `rust/tests/chaos_props.rs` can assert
+//! exact books against it.
+//!
+//! Call ordinals are 1-based and **persist across worker respawns**:
+//! the per-slot counters live behind the factory closure (shared by
+//! every backend built for that slot), so `"panic_on": [5]` kills the
+//! slot's 5th call exactly once and the respawned backend resumes at
+//! call 6 instead of crash-looping — which is what lets the engine's
+//! supervision layer prove it recovers within its restart budget.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context as _, Result};
+
+use crate::runtime::{fnv1a64, BackendFactory, InferenceBackend, Tensor};
+use crate::util::{Json, Pcg};
+
+/// Current fault-plan schema version.
+pub const FAULT_PLAN_VERSION: u64 = 1;
+
+/// Per-call stream decorrelation constant (same split used by the
+/// loadgen's per-client streams).
+const STREAM_SPLIT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// The faults one model's backends suffer. Ordinal lists are 1-based
+/// call numbers counted per `(model, worker slot)`; rates are seeded
+/// per-call Bernoulli draws in `[0, 1]`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelFaults {
+    /// Registry name of the model this entry applies to.
+    pub model: String,
+    /// Panic (killing the worker thread mid-batch) on these call
+    /// ordinals. Each fires once per slot — ordinals survive respawn.
+    pub panic_on: Vec<u64>,
+    /// Return a typed `Err` on these call ordinals.
+    pub error_on: Vec<u64>,
+    /// Additionally fail each call with this seeded probability.
+    pub error_rate: f64,
+    /// Latency spike to inject (microseconds; 0 disables spikes).
+    pub spike_us: u64,
+    /// Probability a call sleeps `spike_us` before executing.
+    pub spike_rate: f64,
+}
+
+impl ModelFaults {
+    fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.obj()?;
+        for key in obj.keys() {
+            if !["model", "panic_on", "error_on", "error_rate", "spike_us", "spike_rate"]
+                .contains(&key.as_str())
+            {
+                bail!("unknown fault-plan model key {key:?}");
+            }
+        }
+        let mut f = ModelFaults { model: j.get("model")?.str()?.to_string(), ..Default::default() };
+        if let Some(v) = j.opt("panic_on") {
+            f.panic_on = v.arr()?.iter().map(|n| n.u64_exact()).collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("error_on") {
+            f.error_on = v.arr()?.iter().map(|n| n.u64_exact()).collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.opt("error_rate") {
+            f.error_rate = v.num()?;
+        }
+        if let Some(v) = j.opt("spike_us") {
+            f.spike_us = v.u64_exact()?;
+        }
+        if let Some(v) = j.opt("spike_rate") {
+            f.spike_rate = v.num()?;
+        }
+        for (name, rate) in [("error_rate", f.error_rate), ("spike_rate", f.spike_rate)] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("fault-plan {name} {rate} for model {:?} not in [0, 1]", f.model);
+            }
+        }
+        if f.panic_on.iter().chain(&f.error_on).any(|&n| n == 0) {
+            bail!("fault-plan ordinals are 1-based; 0 never fires (model {:?})", f.model);
+        }
+        Ok(f)
+    }
+
+    fn to_json(&self) -> Json {
+        let ords = |v: &[u64]| Json::Arr(v.iter().map(|&n| Json::Num(n as f64)).collect());
+        let mut pairs = vec![("model", Json::Str(self.model.clone()))];
+        if !self.panic_on.is_empty() {
+            pairs.push(("panic_on", ords(&self.panic_on)));
+        }
+        if !self.error_on.is_empty() {
+            pairs.push(("error_on", ords(&self.error_on)));
+        }
+        if self.error_rate > 0.0 {
+            pairs.push(("error_rate", Json::Num(self.error_rate)));
+        }
+        if self.spike_us > 0 {
+            pairs.push(("spike_us", Json::Num(self.spike_us as f64)));
+        }
+        if self.spike_rate > 0.0 {
+            pairs.push(("spike_rate", Json::Num(self.spike_rate)));
+        }
+        Json::obj_from(pairs)
+    }
+}
+
+/// A reproducible chaos schedule: one seed plus per-model fault specs.
+/// Pure configuration (no runtime state) — cloneable, comparable, and
+/// round-trippable through JSON like every other config in the repo.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every random fault decision in the plan.
+    pub seed: u64,
+    pub models: Vec<ModelFaults>,
+}
+
+impl FaultPlan {
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let path = path.as_ref();
+        Self::from_json(&Json::load(path)?)
+            .with_context(|| format!("fault plan {}", path.display()))
+    }
+
+    /// Parse, rejecting unknown keys (same philosophy as the engine
+    /// config and CLI parsers: a typo'd chaos knob silently doing
+    /// nothing would fake a passing chaos run).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let obj = j.obj()?;
+        for key in obj.keys() {
+            if !["version", "seed", "models"].contains(&key.as_str()) {
+                bail!("unknown fault-plan key {key:?}");
+            }
+        }
+        if let Some(v) = j.opt("version") {
+            let v = v.u64_exact()?;
+            if v != FAULT_PLAN_VERSION {
+                bail!("unsupported fault-plan version {v} (this build reads v{FAULT_PLAN_VERSION})");
+            }
+        }
+        let mut plan = FaultPlan::default();
+        if let Some(s) = j.opt("seed") {
+            plan.seed = s.u64_exact()?;
+        }
+        plan.models = j
+            .get("models")?
+            .arr()?
+            .iter()
+            .map(ModelFaults::from_json)
+            .collect::<Result<_>>()?;
+        for (i, m) in plan.models.iter().enumerate() {
+            if plan.models[..i].iter().any(|other| other.model == m.model) {
+                bail!("duplicate model {:?} in fault plan", m.model);
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("version", Json::Num(FAULT_PLAN_VERSION as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("models", Json::Arr(self.models.iter().map(|m| m.to_json()).collect())),
+        ])
+    }
+
+    pub fn for_model(&self, model: &str) -> Option<&ModelFaults> {
+        self.models.iter().find(|m| m.model == model)
+    }
+
+    /// Decorate `inner` so every backend it builds for `model` enacts
+    /// this plan. Models the plan does not mention pass through
+    /// untouched. The returned factory owns the persistent per-slot
+    /// call counters (see module docs on ordinal persistence).
+    pub fn wrap(&self, model: &str, inner: BackendFactory) -> BackendFactory {
+        let Some(faults) = self.for_model(model) else {
+            return inner;
+        };
+        let faults = faults.clone();
+        let stream_base = self.seed ^ fnv1a64(model.as_bytes());
+        let slots: Arc<Mutex<HashMap<usize, Arc<AtomicU64>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        Arc::new(move |slot| {
+            let backend = inner(slot)?;
+            let calls = Arc::clone(
+                slots.lock().unwrap_or_else(|p| p.into_inner()).entry(slot).or_default(),
+            );
+            Ok(Box::new(FaultyBackend {
+                inner: backend,
+                faults: faults.clone(),
+                stream: stream_base ^ (slot as u64).wrapping_mul(STREAM_SPLIT),
+                calls,
+            }) as Box<dyn InferenceBackend>)
+        })
+    }
+}
+
+/// [`InferenceBackend`] decorator that enacts a [`FaultPlan`] entry.
+/// Successful calls forward to the inner backend untouched, so logits
+/// stay bitwise identical to an un-injected run — the chaos tests
+/// lean on that to prove survivors and respawned workers still serve
+/// correct results.
+pub struct FaultyBackend {
+    inner: Box<dyn InferenceBackend>,
+    faults: ModelFaults,
+    /// Per-(plan, model, slot) stream seed for the random faults.
+    stream: u64,
+    /// 1-based call counter, shared across respawns of this slot.
+    calls: Arc<AtomicU64>,
+}
+
+impl InferenceBackend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.faults.panic_on.contains(&n) {
+            panic!("injected fault: panic at call {n}");
+        }
+        // One rng per call keyed by the ordinal: the decision stream is
+        // independent of batching, interleaving, and respawn timing.
+        let mut rng = Pcg::new(self.stream ^ n.wrapping_mul(STREAM_SPLIT));
+        if self.faults.spike_us > 0
+            && self.faults.spike_rate > 0.0
+            && rng.f64() < self.faults.spike_rate
+        {
+            std::thread::sleep(Duration::from_micros(self.faults.spike_us));
+        }
+        if self.faults.error_on.contains(&n) {
+            return Err(anyhow!("injected fault: error at call {n}"));
+        }
+        if self.faults.error_rate > 0.0 && rng.f64() < self.faults.error_rate {
+            return Err(anyhow!("injected fault: random error at call {n}"));
+        }
+        self.inner.infer(image)
+    }
+
+    /// Per-item loop (not the inner batched path) so call ordinals map
+    /// 1:1 to requests whatever batch the engine formed. Chaos runs
+    /// trade the fused batch kernel for exact fault placement; per-item
+    /// results are bitwise identical either way — that equivalence is
+    /// exactly the backend contract `serving_props` pins.
+    fn infer_batch(&mut self, images: &[&Tensor]) -> Vec<Result<Vec<f32>>> {
+        images.iter().map(|img| self.infer(img)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Inner test backend: logits = [2 * sum(image)].
+    struct Double;
+    impl InferenceBackend for Double {
+        fn name(&self) -> &'static str {
+            "double"
+        }
+        fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+            Ok(vec![2.0 * image.data.iter().sum::<f32>()])
+        }
+    }
+
+    fn double_factory() -> BackendFactory {
+        Arc::new(|_slot| Ok(Box::new(Double) as Box<dyn InferenceBackend>))
+    }
+
+    fn img(v: f32) -> Tensor {
+        Tensor::new(vec![2], vec![v, 1.0]).unwrap()
+    }
+
+    #[test]
+    fn plan_json_round_trip_and_unknown_keys() {
+        let text = r#"{
+            "version": 1, "seed": 42,
+            "models": [
+                {"model": "m@a", "panic_on": [3], "error_on": [1, 5],
+                 "error_rate": 0.25, "spike_us": 700, "spike_rate": 0.5},
+                {"model": "m@b"}
+            ]
+        }"#;
+        let plan = FaultPlan::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.models.len(), 2);
+        let a = plan.for_model("m@a").unwrap();
+        assert_eq!(a.panic_on, vec![3]);
+        assert_eq!(a.error_on, vec![1, 5]);
+        assert_eq!(a.spike_us, 700);
+        assert!(plan.for_model("m@zzz").is_none());
+        let round = FaultPlan::from_json(&Json::parse(&plan.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(plan, round);
+
+        // Typos, bad rates, 0 ordinals, dup models, future versions: all
+        // refused, never defaulted.
+        for bad in [
+            r#"{"models": [{"model": "m", "panick_on": [1]}]}"#,
+            r#"{"models": [{"model": "m", "error_rate": 1.5}]}"#,
+            r#"{"models": [{"model": "m", "panic_on": [0]}]}"#,
+            r#"{"models": [{"model": "m"}, {"model": "m"}]}"#,
+            r#"{"version": 2, "models": []}"#,
+            r#"{"sede": 1, "models": []}"#,
+        ] {
+            assert!(FaultPlan::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unlisted_model_passes_through_untouched() {
+        let plan = FaultPlan {
+            seed: 1,
+            models: vec![ModelFaults { model: "other".into(), ..Default::default() }],
+        };
+        let wrapped = plan.wrap("mine", double_factory());
+        let mut b = wrapped(0).unwrap();
+        for k in 0..50 {
+            assert_eq!(b.infer(&img(k as f32)).unwrap(), vec![2.0 * (k as f32 + 1.0)]);
+        }
+    }
+
+    #[test]
+    fn ordinal_faults_fire_exactly_once_and_survive_respawn() {
+        let plan = FaultPlan {
+            seed: 9,
+            models: vec![ModelFaults {
+                model: "m".into(),
+                error_on: vec![2, 4],
+                ..Default::default()
+            }],
+        };
+        let wrapped = plan.wrap("m", double_factory());
+        let mut first = wrapped(0).unwrap();
+        assert!(first.infer(&img(0.0)).is_ok()); // call 1
+        assert!(first.infer(&img(0.0)).is_err()); // call 2: injected
+        drop(first);
+        // A "respawned" backend for the same slot resumes at call 3.
+        let mut second = wrapped(0).unwrap();
+        assert!(second.infer(&img(0.0)).is_ok()); // call 3
+        let e = second.infer(&img(0.0)).unwrap_err(); // call 4: injected
+        assert!(e.to_string().contains("injected fault"), "{e}");
+        assert!(second.infer(&img(0.0)).is_ok()); // call 5
+        // A different slot has its own counter starting at 1.
+        let mut other = wrapped(1).unwrap();
+        assert!(other.infer(&img(0.0)).is_ok());
+    }
+
+    #[test]
+    fn random_faults_are_deterministic_per_seed_and_slot() {
+        let plan = FaultPlan {
+            seed: 123,
+            models: vec![ModelFaults {
+                model: "m".into(),
+                error_rate: 0.5,
+                ..Default::default()
+            }],
+        };
+        let run = |slot: usize| -> Vec<bool> {
+            let mut b = plan.wrap("m", double_factory())(slot).unwrap();
+            (0..64).map(|k| b.infer(&img(k as f32)).is_ok()).collect()
+        };
+        let a = run(0);
+        assert_eq!(a, run(0), "same slot replays identically");
+        assert_ne!(a, run(1), "slots draw decorrelated streams");
+        assert!(a.iter().any(|&ok| ok) && a.iter().any(|&ok| !ok), "rate 0.5 mixes outcomes");
+    }
+
+    #[test]
+    fn panic_ordinal_panics_with_the_call_number() {
+        let plan = FaultPlan {
+            seed: 0,
+            models: vec![ModelFaults { model: "m".into(), panic_on: vec![1], ..Default::default() }],
+        };
+        let wrapped = plan.wrap("m", double_factory());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut b = wrapped(0).unwrap();
+            let _ = b.infer(&img(1.0));
+        }))
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("injected fault: panic at call 1"), "{msg}");
+        // The ordinal was consumed: the respawned slot serves call 2.
+        let mut b = wrapped(0).unwrap();
+        assert_eq!(b.infer(&img(1.0)).unwrap(), vec![4.0]);
+        assert_eq!(b.infer_batch(&[&img(1.0), &img(2.0)]).len(), 2);
+    }
+}

@@ -26,8 +26,13 @@
 //! A source resolves once per process ([`ModelSource::resolve`]); pool
 //! workers share the resulting `Arc<VimWeights>` instead of re-reading
 //! the file per worker.
+//!
+//! For chaos testing, [`fault`] wraps any factory in a seeded
+//! [`FaultyBackend`] decorator ([`FaultPlan::wrap`]) that panics,
+//! errors, or injects latency spikes on a deterministic schedule.
 
 pub mod artifact;
+pub mod fault;
 mod manifest;
 pub mod native;
 #[cfg(feature = "pjrt")]
@@ -37,6 +42,7 @@ pub use artifact::{
     fnv1a64, ArtifactError, ArtifactStore, ArtifactSummary, VimArtifact, ARTIFACT_MAGIC,
     ARTIFACT_VERSION,
 };
+pub use fault::{FaultPlan, FaultyBackend, ModelFaults, FAULT_PLAN_VERSION};
 pub use manifest::{
     tensor_absmax, ArtifactManifest, Manifest, ModelMeta, Provenance, ScanMeta, TensorMeta,
     ARTIFACT_FORMAT,

@@ -1,0 +1,430 @@
+//! Chaos properties: seeded fault plans (panic / typed-error / latency
+//! mixes) over random pool geometries. The invariants under injected
+//! failure are the same ones the fair-weather tests assert:
+//!
+//! * surviving + respawned workers serve **bitwise-identical** results
+//!   (fault injection and supervision must be invisible to a request
+//!   that completes);
+//! * exact counter reconciliation — every admitted request is answered
+//!   exactly once (served, `DeadlineExceeded`, or `Backend`), and the
+//!   engine report's books balance against what clients observed;
+//! * the restart budget is respected: k faults < budget keeps the pool
+//!   alive, sustained faults beyond it kill the pool with a typed
+//!   error, never a hang.
+//!
+//! Hand-rolled Pcg harness, same idiom as `pool_props.rs`.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use mamba_x::coordinator::{
+    BatchPolicy, EngineBuilder, EngineError, Priority, RejectReason, Request,
+};
+use mamba_x::runtime::{FaultPlan, InferenceBackend, ModelFaults, ModelSpec, Tensor};
+use mamba_x::util::Pcg;
+
+/// Deterministic backend: logits are a pure function of the image, so
+/// any two instances (original worker, respawned worker) must agree
+/// bitwise.
+struct Affine;
+
+impl InferenceBackend for Affine {
+    fn name(&self) -> &'static str {
+        "affine"
+    }
+
+    fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+        Ok(vec![image.data.iter().sum::<f32>(), image.data[0] * 2.0 + 1.0])
+    }
+}
+
+fn spec() -> ModelSpec {
+    ModelSpec::new(
+        "m",
+        Arc::new(|_w| Ok(Box::new(Affine) as Box<dyn InferenceBackend>)),
+    )
+}
+
+fn img(id: u64) -> Tensor {
+    let v = id as f32;
+    Tensor::new(vec![3], vec![v, v + 1.0, v + 2.0]).unwrap()
+}
+
+fn expected(id: u64) -> Vec<f32> {
+    let v = id as f32;
+    vec![v + (v + 1.0) + (v + 2.0), v * 2.0 + 1.0]
+}
+
+/// PROPERTY: with seeded panics at k ordinals < the restart budget,
+/// over random pool geometries, the engine answers every admitted
+/// request exactly once — completions bitwise-match direct inference,
+/// failures are typed `Backend` errors — and the report reconciles.
+#[test]
+fn prop_seeded_panics_respawn_and_serve_bitwise_identical() {
+    let mut rng = Pcg::new(0xC4A0);
+    for case in 0..8 {
+        let workers = rng.usize_in(1, 3);
+        let max_batch = rng.usize_in(1, 3);
+        let n = rng.usize_in(8, 24);
+        // 1-2 panic ordinals per worker slot (fault ordinals are
+        // per-slot and persist across respawns). Ordinal 1 is always
+        // in the plan so every case provably injects at least once.
+        let mut panic_on: Vec<u64> = vec![1];
+        if rng.below(2) == 0 {
+            panic_on.push(rng.usize_in(2, 6) as u64);
+        }
+        panic_on.sort_unstable();
+        panic_on.dedup();
+        let max_panics = (workers * panic_on.len()) as u32;
+        let plan = FaultPlan {
+            seed: case as u64,
+            models: vec![ModelFaults {
+                model: "m".into(),
+                panic_on: panic_on.clone(),
+                ..Default::default()
+            }],
+        };
+        let (engine, join) = EngineBuilder::new()
+            .workers(workers)
+            .policy(BatchPolicy { max_batch, max_wait_us: 0 })
+            .queue_depth(n)
+            .restart_budget(16)
+            .restart_backoff_ms(0)
+            .breaker_threshold(0) // isolate supervision from the breaker
+            .fault_plan(plan)
+            .register(spec())
+            .unwrap()
+            .build()
+            .unwrap();
+        assert!(max_panics < 16, "case {case}: plan must stay under the budget");
+        let (mut completed, mut failed) = (0u64, 0u64);
+        for id in 0..n as u64 {
+            match engine.infer(Request::new("m", id, img(id))) {
+                Ok(resp) => {
+                    assert_eq!(resp.id, id, "case {case}");
+                    assert_eq!(
+                        resp.logits,
+                        expected(id),
+                        "case {case}: respawned worker diverged bitwise"
+                    );
+                    completed += 1;
+                }
+                Err(EngineError::Backend(msg)) => {
+                    assert!(msg.contains("panicked"), "case {case}: {msg}");
+                    failed += 1;
+                }
+                Err(e) => panic!("case {case}: request {id} got unexpected failure {e}"),
+            }
+        }
+        assert!(failed >= 1, "case {case}: ordinal 1 must fire on the first-served slot");
+        let health = engine.health();
+        assert_eq!(health.workers_total, workers, "case {case}");
+        assert!(health.restarts <= u64::from(max_panics), "case {case}");
+        drop(engine);
+        let report = join
+            .join()
+            .unwrap_or_else(|e| panic!("case {case}: pool died despite budget headroom: {e}"));
+        assert_eq!(report.workers, workers, "case {case}");
+        // A respawn reserved by the final panic may complete between the
+        // health snapshot and join, so the report may run ahead — never
+        // behind, and never past what the plan could trigger.
+        assert!(report.restarts >= health.restarts, "case {case}");
+        assert!(report.restarts <= u64::from(max_panics), "case {case}");
+        let m = &report.model("m").expect("registered model reported").metrics;
+        assert_eq!(m.count() as u64, completed, "case {case}");
+        assert_eq!(m.backend_failed, failed, "case {case}");
+        assert_eq!(m.deadline_exceeded, 0, "case {case}");
+        assert_eq!(
+            completed + failed,
+            n as u64,
+            "case {case}: every admitted request answered exactly once"
+        );
+    }
+}
+
+/// PROPERTY: typed `Err` injection never kills a worker — zero
+/// restarts — and every injected failure surfaces as a typed `Backend`
+/// error carrying the injection marker, with exact books.
+#[test]
+fn prop_injected_errors_are_typed_and_conserved() {
+    let mut rng = Pcg::new(0xE220);
+    for case in 0..6 {
+        let workers = rng.usize_in(1, 3);
+        let n = rng.usize_in(8, 20);
+        // Ordinal 1 is always present so every case injects at least
+        // one error regardless of how calls spread across slots.
+        let mut error_on: Vec<u64> = vec![1];
+        for _ in 0..rng.usize_in(0, 2) {
+            error_on.push(rng.usize_in(2, 5) as u64);
+        }
+        error_on.sort_unstable();
+        error_on.dedup();
+        let plan = FaultPlan {
+            seed: 100 + case as u64,
+            models: vec![ModelFaults {
+                model: "m".into(),
+                error_on: error_on.clone(),
+                ..Default::default()
+            }],
+        };
+        let (engine, join) = EngineBuilder::new()
+            .workers(workers)
+            .policy(BatchPolicy { max_batch: rng.usize_in(1, 3), max_wait_us: 0 })
+            .queue_depth(n)
+            .restart_budget(0) // a typed Err must never need a respawn
+            .breaker_threshold(0)
+            .fault_plan(plan)
+            .register(spec())
+            .unwrap()
+            .build()
+            .unwrap();
+        let (mut completed, mut failed) = (0u64, 0u64);
+        for id in 0..n as u64 {
+            match engine.infer(Request::new("m", id, img(id))) {
+                Ok(resp) => {
+                    assert_eq!(resp.logits, expected(id), "case {case}");
+                    completed += 1;
+                }
+                Err(EngineError::Backend(msg)) => {
+                    assert!(msg.contains("injected fault"), "case {case}: {msg}");
+                    failed += 1;
+                }
+                Err(e) => panic!("case {case}: unexpected failure {e}"),
+            }
+        }
+        assert!(failed > 0, "case {case}: at least slot 0's first error ordinal fires");
+        let health = engine.health();
+        assert_eq!(health.restarts, 0, "case {case}: typed errors must not kill workers");
+        assert_eq!(health.workers_alive, workers, "case {case}");
+        assert!(!health.degraded(), "case {case}");
+        drop(engine);
+        let report = join.join().unwrap();
+        assert_eq!(report.restarts, 0, "case {case}");
+        let m = &report.model("m").expect("registered model reported").metrics;
+        assert_eq!(m.count() as u64, completed, "case {case}");
+        assert_eq!(m.backend_failed, failed, "case {case}");
+        assert_eq!(completed + failed, n as u64, "case {case}: conservation");
+    }
+}
+
+/// Breaker under chaos: consecutive injected failures trip the
+/// per-model breaker into typed fast-fail; a half-open probe after the
+/// cooldown closes it again once the fault plan runs dry.
+#[test]
+fn breaker_fast_fails_then_half_open_probe_recovers() {
+    // Slot 0 fails its first call only; threshold 1 opens the breaker
+    // on that failure, cooldown 0 admits the next request as a
+    // half-open probe, which succeeds and closes the breaker.
+    let plan = FaultPlan {
+        seed: 5,
+        models: vec![ModelFaults {
+            model: "m".into(),
+            error_on: vec![1],
+            ..Default::default()
+        }],
+    };
+    let (engine, join) = EngineBuilder::new()
+        .workers(1)
+        .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+        .breaker_threshold(1)
+        .breaker_cooldown_ms(0)
+        .fault_plan(plan)
+        .register(spec())
+        .unwrap()
+        .build()
+        .unwrap();
+    let err = engine.infer(Request::new("m", 1, img(1))).unwrap_err();
+    assert!(matches!(err, EngineError::Backend(_)), "{err}");
+    assert_eq!(engine.health().models[0].breaker, "open");
+    assert!(engine.health().degraded(), "open breaker must degrade health");
+    // Cooldown 0: admitted as the half-open probe, fault plan is dry,
+    // so it succeeds and the breaker closes.
+    let resp = engine.infer(Request::new("m", 2, img(2))).unwrap();
+    assert_eq!(resp.logits, expected(2));
+    assert_eq!(engine.health().models[0].breaker, "closed");
+    assert!(!engine.health().degraded());
+    let resp = engine.infer(Request::new("m", 3, img(3))).unwrap();
+    assert_eq!(resp.logits, expected(3));
+    drop(engine);
+    let report = join.join().unwrap();
+    let m = &report.model("m").expect("registered model reported").metrics;
+    assert_eq!(m.count(), 2);
+    assert_eq!(m.backend_failed, 1);
+    assert_eq!(m.rejected_breaker, 0, "no request arrived while open");
+}
+
+/// Breaker fast-fail is typed and counted: with a long cooldown, a
+/// request arriving after the breaker opened is refused with
+/// `RejectReason::BreakerOpen` without consuming a batch slot.
+#[test]
+fn open_breaker_rejects_typed_without_burning_slots() {
+    let plan = FaultPlan {
+        seed: 9,
+        models: vec![ModelFaults {
+            model: "m".into(),
+            error_on: vec![1, 2],
+            ..Default::default()
+        }],
+    };
+    let (engine, join) = EngineBuilder::new()
+        .workers(1)
+        .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+        .breaker_threshold(2)
+        .breaker_cooldown_ms(600_000) // no probe within this test
+        .fault_plan(plan)
+        .register(spec())
+        .unwrap()
+        .build()
+        .unwrap();
+    for id in 1..=2u64 {
+        let err = engine.infer(Request::new("m", id, img(id))).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "call {id}: {err}");
+    }
+    assert_eq!(engine.health().models[0].breaker, "open");
+    match engine.infer(Request::new("m", 3, img(3))) {
+        Err(EngineError::Rejected { reason: RejectReason::BreakerOpen, detail, .. }) => {
+            assert!(detail.contains("circuit breaker"), "{detail}");
+        }
+        other => panic!("expected BreakerOpen fast-fail, got {other:?}"),
+    }
+    drop(engine);
+    let report = join.join().unwrap();
+    let m = &report.model("m").expect("registered model reported").metrics;
+    assert_eq!(m.backend_failed, 2);
+    assert_eq!(m.rejected_breaker, 1);
+    assert_eq!(m.count(), 0);
+}
+
+/// PROPERTY: latency-spike injection plus per-request deadlines — every
+/// admitted request resolves exactly once as Ok or a typed
+/// `DeadlineExceeded` (deadlines are enforced at dequeue), and the
+/// books balance including submit-time sheds.
+#[test]
+fn prop_latency_spikes_with_deadlines_keep_exact_books() {
+    let mut rng = Pcg::new(0x51CE);
+    for case in 0..5 {
+        let n = rng.usize_in(6, 14);
+        let plan = FaultPlan {
+            seed: 200 + case as u64,
+            models: vec![ModelFaults {
+                model: "m".into(),
+                spike_us: 15_000,
+                spike_rate: 1.0,
+                ..Default::default()
+            }],
+        };
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .queue_depth(n)
+            .breaker_threshold(0)
+            .fault_plan(plan)
+            .register(spec())
+            .unwrap()
+            .build()
+            .unwrap();
+        // Submit everything up front (High priority: only Full or a
+        // deadline-aware shed can refuse, and the queue is deep
+        // enough): requests with microsecond deadlines expire in queue
+        // behind the 15 ms spikes.
+        let mut waiters = Vec::new();
+        let mut shed = 0u64;
+        for id in 0..n as u64 {
+            let mut request = Request::new("m", id, img(id)).priority(Priority::High);
+            if id % 2 == 1 {
+                request = request.deadline_us(rng.usize_in(1, 400) as u64);
+            }
+            match engine.submit(request) {
+                Ok(w) => waiters.push((id, w)),
+                Err(EngineError::Rejected { reason: RejectReason::Shed, .. }) => shed += 1,
+                Err(e) => panic!("case {case}: unexpected refusal {e}"),
+            }
+        }
+        let accepted = waiters.len() as u64;
+        let (mut completed, mut deadline_failed) = (0u64, 0u64);
+        for (id, w) in waiters {
+            match w.wait() {
+                Ok(resp) => {
+                    assert_eq!(resp.logits, expected(id), "case {case}");
+                    completed += 1;
+                }
+                Err(EngineError::DeadlineExceeded { model, deadline_us, waited_us }) => {
+                    assert_eq!(model, "m", "case {case}");
+                    assert!(waited_us > deadline_us, "case {case}");
+                    deadline_failed += 1;
+                }
+                Err(e) => panic!("case {case}: accepted request {id} got {e}"),
+            }
+        }
+        assert_eq!(
+            completed + deadline_failed,
+            accepted,
+            "case {case}: every accepted request answered"
+        );
+        assert!(deadline_failed + shed > 0, "case {case}: spikes must bite some deadline");
+        drop(engine);
+        let report = join.join().unwrap();
+        let m = &report.model("m").expect("registered model reported").metrics;
+        assert_eq!(m.count() as u64, completed, "case {case}");
+        assert_eq!(m.deadline_exceeded, deadline_failed, "case {case}");
+        assert_eq!(m.backend_failed, 0, "case {case}");
+        assert_eq!(m.rejected_shed, shed, "case {case}");
+        assert_eq!(accepted + shed, n as u64, "case {case}: conservation");
+    }
+}
+
+/// Sustained panics past the restart budget kill the pool with typed
+/// errors — exactly `budget` respawns, then `ShuttingDown` at submit
+/// and an error at join. Never a hang, never a lost request.
+#[test]
+fn restart_budget_exhaustion_dies_typed_not_hanging() {
+    let plan = FaultPlan {
+        seed: 17,
+        models: vec![ModelFaults {
+            model: "m".into(),
+            panic_on: vec![1, 2, 3],
+            ..Default::default()
+        }],
+    };
+    let (engine, join) = EngineBuilder::new()
+        .workers(1)
+        .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+        .restart_budget(2)
+        .restart_backoff_ms(0)
+        .breaker_threshold(0)
+        .fault_plan(plan)
+        .register(spec())
+        .unwrap()
+        .build()
+        .unwrap();
+    // Three panic ordinals, budget 2: calls 1-3 each die with a typed
+    // Backend error; the third exhausts the budget and the pool dies.
+    let mut backend_errs = 0u64;
+    let mut saw_shutdown = false;
+    for id in 0..400u64 {
+        match engine.infer(Request::new("m", id, img(id))) {
+            Ok(resp) => assert_eq!(resp.logits, expected(id), "{id}"),
+            Err(EngineError::Backend(_)) => backend_errs += 1,
+            Err(EngineError::ShuttingDown) => {
+                saw_shutdown = true;
+                break;
+            }
+            Err(e) => panic!("request {id}: unexpected failure {e}"),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(saw_shutdown, "pool must die after the budget is exhausted");
+    // Three panic ordinals fail three requests; one more submit can be
+    // admitted in the window before pool teardown completes, in which
+    // case it is flushed with a typed Backend error (never lost).
+    assert!(
+        (3..=4).contains(&backend_errs),
+        "each panic fails exactly one request (plus at most one flushed): {backend_errs}"
+    );
+    let health = engine.health();
+    assert_eq!(health.restarts, 2, "exactly the budget");
+    assert_eq!(health.workers_alive, 0);
+    assert!(health.degraded());
+    drop(engine);
+    assert!(join.join().is_err(), "pool death must surface at join");
+}

@@ -289,10 +289,15 @@ fn http_round_trip_is_bitwise_and_reports_reconcile() {
     assert_eq!(health.status, 200);
     let hj = body_json(&health);
     assert_eq!(hj.get("status").unwrap().str().unwrap(), "ok");
+    // Degradation surface: full worker pool, no respawns, breaker closed.
+    assert_eq!(hj.get("workers_alive").unwrap().usize().unwrap(), 2);
+    assert_eq!(hj.get("workers_total").unwrap().usize().unwrap(), 2);
+    assert_eq!(hj.get("restarts").unwrap().usize().unwrap(), 0);
     assert_eq!(hj.get("models").unwrap().arr().unwrap().len(), 1);
     let m0 = &hj.get("models").unwrap().arr().unwrap()[0];
     assert_eq!(m0.get("name").unwrap().str().unwrap(), "sum");
     assert_eq!(m0.get("input_len").unwrap().usize().unwrap(), 2);
+    assert_eq!(m0.get("breaker").unwrap().str().unwrap(), "closed");
 
     // Inline payload: logits bitwise = [1+2, 2].
     let ok = post(addr, "/v1/infer", br#"{"model":"sum","id":9,"image":[1.0,2.0]}"#);
@@ -548,6 +553,9 @@ fn loadgen_open_loop_accounts_for_every_request() {
 
     let n = |key: &str| artifact.get(key).unwrap().usize().unwrap() as u64;
     assert_eq!(n("sent"), 40);
+    // The full ledger identity: every attempt (original or retry) lands
+    // in exactly one outcome class. Retries are 0 here (default policy),
+    // so attempts == sent.
     let accounted = n("completed")
         + n("rejected_full")
         + n("rejected_shed")
@@ -556,8 +564,12 @@ fn loadgen_open_loop_accounts_for_every_request() {
         + n("bad_request")
         + n("shutting_down")
         + n("backend_error")
+        + n("deadline_exceeded")
+        + n("breaker_open")
+        + n("timeouts")
         + n("transport_errors");
-    assert_eq!(accounted, 40, "every request lands in exactly one class");
+    assert_eq!(accounted, 40 + n("retries"), "every attempt lands in exactly one class");
+    assert_eq!(n("retries"), 0, "retry policy is off by default");
 
     let net = server.join().unwrap().unwrap();
     let report = join.join().unwrap();

@@ -269,10 +269,13 @@ fn prop_admission_monotone_in_priority_and_deadline() {
 }
 
 /// PROPERTY: under deadline churn — random priorities, deadlines and a
-/// live backlog — every ACCEPTED request completes exactly once (an
-/// accepted request is never shed later), every refusal is typed, and
-/// the books balance: completed + rejected == submitted, with the
-/// per-reason report counters matching what clients observed.
+/// live backlog — every ACCEPTED request is ANSWERED exactly once:
+/// either it completes, or (since deadlines are enforced at dequeue) it
+/// fails with a typed `DeadlineExceeded` — never silently shed, never
+/// dropped, never a generic error. Every refusal is typed, and the
+/// books balance: completed + deadline_exceeded + rejected ==
+/// submitted, with the per-reason report counters matching what clients
+/// observed.
 #[test]
 fn prop_accepted_never_shed_under_deadline_churn() {
     let mut rng = Pcg::new(0xC0F3);
@@ -317,26 +320,44 @@ fn prop_accepted_never_shed_under_deadline_churn() {
                     mamba_x::coordinator::RejectReason::ClientQuota => {
                         panic!("case {case}: no quota configured")
                     }
+                    mamba_x::coordinator::RejectReason::BreakerOpen => {
+                        panic!("case {case}: no backend failures, breaker must stay closed")
+                    }
                 },
                 Err(e) => panic!("case {case}: untyped refusal {e}"),
             }
         }
         let accepted = waiters.len();
-        let mut ids: Vec<u64> = waiters
-            .into_iter()
-            .map(|(id, w)| {
-                let resp = w.wait().expect("accepted request must complete, never shed later");
-                assert_eq!(resp.id, id, "case {case}");
-                resp.id
-            })
-            .collect();
+        let mut seen_deadline = 0u64;
+        let mut ids: Vec<u64> = Vec::new();
+        for (id, w) in waiters {
+            match w.wait() {
+                Ok(resp) => {
+                    assert_eq!(resp.id, id, "case {case}");
+                    ids.push(resp.id);
+                }
+                Err(EngineError::DeadlineExceeded { model, .. }) => {
+                    assert_eq!(model, "echo", "case {case}");
+                    seen_deadline += 1;
+                }
+                Err(e) => panic!("case {case}: accepted request {id} got untyped failure {e}"),
+            }
+        }
+        let completed = ids.len();
         ids.sort_unstable();
         ids.dedup();
-        assert_eq!(ids.len(), accepted, "case {case}: exactly-once");
+        assert_eq!(ids.len(), completed, "case {case}: exactly-once");
+        assert_eq!(
+            completed as u64 + seen_deadline,
+            accepted as u64,
+            "case {case}: every accepted request answered"
+        );
         drop(engine);
         let report = join.join().unwrap();
         let m = &report.model("echo").expect("registered model reported").metrics;
-        assert_eq!(m.count(), accepted, "case {case}");
+        assert_eq!(m.count(), completed, "case {case}");
+        assert_eq!(m.deadline_exceeded, seen_deadline, "case {case}");
+        assert_eq!(m.backend_failed, 0, "case {case}");
         assert_eq!(
             accepted as u64 + seen_full + seen_shed,
             n_requests as u64,
