@@ -23,7 +23,8 @@ use mamba_x::sim::{scan_timing, ssa_scan_chunked_ref, Accelerator};
 use mamba_x::util::bench::{bench, report, BenchReport};
 use mamba_x::util::Pcg;
 use mamba_x::vision::{
-    matmul, matmul_ref, vim_model_ops, vim_selective_ssm_ops, ForwardConfig, ScanExec, VimWeights,
+    matmul, matmul_i8, matmul_ref, vim_model_ops, vim_selective_ssm_ops, ForwardConfig, ScanExec,
+    VimWeights,
 };
 
 /// Checked-in fallback for the SFU tables so the bench never skips.
@@ -118,6 +119,31 @@ fn main() {
     let s = bench(warm, iters, || matmul(&x, &w, Some(&bias), gm, gk, gn));
     rep.push("matmul(520x64x256)", &gshape, macs, s);
     rep.speedup("matmul_vs_ref", "matmul_ref(520x64x256)", "matmul(520x64x256)");
+
+    // 3b. INT8xINT8 GEMM vs the f32 tiled kernel at a weight-heavy shape
+    //     (the quantized-artifact hot path): same MAC count, i32
+    //     register-tile accumulation, 4x less weight traffic per operand.
+    //     The `gemm_i8_vs_f32` floor in BENCH_baseline.json keeps the
+    //     INT8 kernel from quietly losing to the f32 path it replaces.
+    let (qm, qk, qn) = (32usize, 512usize, 2048usize);
+    let qshape = format!("{qm}x{qk}x{qn}");
+    let qmacs = (qm * qk * qn) as f64;
+    let qx: Vec<i8> = (0..qm * qk).map(|_| rng.int8() as i8).collect();
+    let qw: Vec<i8> = (0..qk * qn).map(|_| rng.int8() as i8).collect();
+    let xsc: Vec<f32> = (0..qm).map(|_| rng.f32_in(0.005, 0.02)).collect();
+    let wsc: Vec<f32> = (0..qn).map(|_| rng.f32_in(0.005, 0.02)).collect();
+    let qbias: Vec<f32> = (0..qn).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    // The f32 contender multiplies the dequantized operands — what
+    // serving would run without weight quantization.
+    let fx: Vec<f32> = qx.iter().enumerate().map(|(i, &v)| v as f32 * xsc[i / qk]).collect();
+    let fw: Vec<f32> = qw.iter().enumerate().map(|(i, &v)| v as f32 * wsc[i % qn]).collect();
+    let s = bench(warm_big, iters_big, || matmul(&fx, &fw, Some(&qbias), qm, qk, qn));
+    rep.push("matmul_f32(32x512x2048)", &qshape, qmacs, s);
+    let s = bench(warm_big, iters_big, || {
+        matmul_i8(&qx, &xsc, &qw, &wsc, Some(&qbias), qm, qk, qn)
+    });
+    rep.push("matmul_i8(32x512x2048)", &qshape, qmacs, s);
+    rep.speedup("gemm_i8_vs_f32", "matmul_f32(32x512x2048)", "matmul_i8(32x512x2048)");
 
     // 4. SFU LUT evaluation: prefer fitted artifacts, fall back to the
     //    checked-in golden fixture so this bench always runs.

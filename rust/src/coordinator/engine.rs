@@ -41,7 +41,10 @@
 //!   typed ([`RejectReason::BreakerOpen`]) instead of queueing work a
 //!   sick backend will burn; after `breaker_cooldown_ms` one half-open
 //!   probe request is admitted, and its outcome closes or re-opens the
-//!   breaker.
+//!   breaker. Both knobs are engine-wide defaults that individual model
+//!   variants may override (`ModelVariantConfig::breaker_threshold` /
+//!   `breaker_cooldown_ms`) — a canary variant can trip at 1 while the
+//!   stable variant rides the default.
 //!
 //! Admission decides *shedding* at submit time only: an accepted
 //! request is never shed by later load (`rust/tests/pool_props.rs`
@@ -72,7 +75,7 @@ use anyhow::{anyhow, bail, Context as _, Result};
 use crate::quant::CalibTable;
 use crate::runtime::{
     fnv1a64, ArtifactStore, BackendFactory, FaultPlan, InferenceBackend, ModelRegistry,
-    ModelSource, ModelSpec, Tensor,
+    ModelSource, ModelSpec, Tensor, WeightQuantSpec,
 };
 use crate::util::Json;
 use crate::vision::ForwardConfig;
@@ -508,6 +511,17 @@ pub struct ModelVariantConfig {
     pub slo_us: Option<u64>,
     /// Initial per-item service-time estimate (microseconds, 0 = none).
     pub service_hint_us: u64,
+    /// Hybrid weight quantization: run the per-site INT8 precision
+    /// search on the resolved weights at build time
+    /// (`{"quantize": {"samples": N, "seed": S}}`). `None` serves the
+    /// source's weights as stored.
+    pub quantize: Option<WeightQuantSpec>,
+    /// Per-model circuit-breaker trip threshold; `None` = the
+    /// engine-wide `breaker_threshold`.
+    pub breaker_threshold: Option<u32>,
+    /// Per-model breaker cooldown (ms); `None` = the engine-wide
+    /// `breaker_cooldown_ms`.
+    pub breaker_cooldown_ms: Option<u64>,
 }
 
 impl ModelVariantConfig {
@@ -519,6 +533,9 @@ impl ModelVariantConfig {
             calib: None,
             slo_us: None,
             service_hint_us: 0,
+            quantize: None,
+            breaker_threshold: None,
+            breaker_cooldown_ms: None,
         }
     }
 
@@ -530,6 +547,9 @@ impl ModelVariantConfig {
             calib: None,
             slo_us: None,
             service_hint_us: 0,
+            quantize: None,
+            breaker_threshold: None,
+            breaker_cooldown_ms: None,
         }
     }
 
@@ -571,16 +591,23 @@ impl ModelVariantConfig {
             )),
             None => None,
         };
-        crate::runtime::NativeBackend::factory(source, calib)
+        crate::runtime::NativeBackend::factory(source, calib, self.quantize)
             .with_context(|| format!("model {:?}", self.name))
     }
 
-    /// Resolve into a registrable [`ModelSpec`] (factory + SLO knobs).
+    /// Resolve into a registrable [`ModelSpec`] (factory + SLO +
+    /// breaker knobs).
     pub fn to_spec(&self) -> Result<ModelSpec> {
         let mut spec = ModelSpec::new(self.name.clone(), self.build_factory()?)
             .service_hint_us(self.service_hint_us);
         if let Some(slo) = self.slo_us {
             spec = spec.slo_us(slo);
+        }
+        if let Some(t) = self.breaker_threshold {
+            spec = spec.breaker_threshold(t);
+        }
+        if let Some(c) = self.breaker_cooldown_ms {
+            spec = spec.breaker_cooldown_ms(c);
         }
         Ok(spec)
     }
@@ -588,8 +615,19 @@ impl ModelVariantConfig {
     fn from_json(j: &Json) -> Result<Self> {
         let obj = j.obj()?;
         for key in obj.keys() {
-            if !["name", "source", "arch", "seed", "calib", "slo_us", "service_hint_us"]
-                .contains(&key.as_str())
+            if ![
+                "name",
+                "source",
+                "arch",
+                "seed",
+                "calib",
+                "slo_us",
+                "service_hint_us",
+                "quantize",
+                "breaker_threshold",
+                "breaker_cooldown_ms",
+            ]
+            .contains(&key.as_str())
             {
                 bail!("unknown model key {key:?} in engine config");
             }
@@ -611,8 +649,16 @@ impl ModelVariantConfig {
                 "model {name:?} needs a \"source\" (v2) or \"arch\" + \"seed\" (v1)"
             ),
         };
-        let mut v =
-            ModelVariantConfig { name, source, calib: None, slo_us: None, service_hint_us: 0 };
+        let mut v = ModelVariantConfig {
+            name,
+            source,
+            calib: None,
+            slo_us: None,
+            service_hint_us: 0,
+            quantize: None,
+            breaker_threshold: None,
+            breaker_cooldown_ms: None,
+        };
         if let Some(c) = j.opt("calib") {
             v.calib = Some(c.str()?.to_string());
         }
@@ -621,6 +667,29 @@ impl ModelVariantConfig {
         }
         if let Some(h) = j.opt("service_hint_us") {
             v.service_hint_us = h.u64_exact()?;
+        }
+        if let Some(q) = j.opt("quantize") {
+            for key in q.obj()?.keys() {
+                if !["samples", "seed"].contains(&key.as_str()) {
+                    bail!("unknown quantize key {key:?} in model {:?}", v.name);
+                }
+            }
+            let samples = usize::try_from(q.get("samples")?.u64_exact()?)
+                .with_context(|| format!("model {:?} quantize samples", v.name))?;
+            if samples == 0 {
+                bail!("model {:?} quantize needs at least one calibration sample", v.name);
+            }
+            v.quantize =
+                Some(WeightQuantSpec { samples, seed: q.get("seed")?.u64_exact()? });
+        }
+        if let Some(t) = j.opt("breaker_threshold") {
+            v.breaker_threshold = Some(
+                u32::try_from(t.u64_exact()?)
+                    .with_context(|| format!("model {:?} breaker_threshold out of range", v.name))?,
+            );
+        }
+        if let Some(c) = j.opt("breaker_cooldown_ms") {
+            v.breaker_cooldown_ms = Some(c.u64_exact()?);
         }
         Ok(v)
     }
@@ -638,6 +707,21 @@ impl ModelVariantConfig {
         }
         if self.service_hint_us > 0 {
             pairs.push(("service_hint_us", Json::Num(self.service_hint_us as f64)));
+        }
+        if let Some(q) = &self.quantize {
+            pairs.push((
+                "quantize",
+                Json::obj_from(vec![
+                    ("samples", Json::Num(q.samples as f64)),
+                    ("seed", Json::Num(q.seed as f64)),
+                ]),
+            ));
+        }
+        if let Some(t) = self.breaker_threshold {
+            pairs.push(("breaker_threshold", Json::Num(t as f64)));
+        }
+        if let Some(c) = self.breaker_cooldown_ms {
+            pairs.push(("breaker_cooldown_ms", Json::Num(c as f64)));
         }
         Json::obj_from(pairs)
     }
@@ -959,6 +1043,11 @@ struct ModelEntry {
     slo_us: Option<u64>,
     stats: ModelStats,
     breaker: Breaker,
+    /// Resolved breaker trip threshold: the spec's override or the
+    /// engine-wide default (0 = breaker disabled for this model).
+    breaker_threshold: u32,
+    /// Resolved breaker cooldown (microseconds) before half-open probes.
+    breaker_cooldown_us: u64,
 }
 
 struct EngineState {
@@ -1027,9 +1116,6 @@ struct EngineShared {
     restart_budget: u32,
     /// Base respawn backoff; doubles per attempt on the same slot.
     backoff_base_ms: u64,
-    /// Consecutive failures that open a model's breaker (0 = off).
-    breaker_threshold: u32,
-    breaker_cooldown_us: u64,
     /// Dead worker slots, sent by the exit guard to the supervisor.
     deaths: mpsc::Sender<usize>,
     /// Respawns actually performed (reported and in `/healthz`).
@@ -1116,7 +1202,7 @@ impl Engine {
         }
         // Circuit breaker: a model whose backend keeps failing fast-fails
         // typed instead of queueing work a sick backend will burn.
-        if !entry.breaker.admit(self.shared.breaker_cooldown_us, self.shared.now_us()) {
+        if !entry.breaker.admit(entry.breaker_cooldown_us, self.shared.now_us()) {
             drop(st);
             entry.stats.rejected_breaker.fetch_add(1, Ordering::Relaxed);
             return Err(EngineError::Rejected {
@@ -1125,7 +1211,7 @@ impl Engine {
                 detail: format!(
                     "circuit breaker open after consecutive backend failures; \
                      retry after {}ms",
-                    self.shared.breaker_cooldown_us / 1_000
+                    entry.breaker_cooldown_us / 1_000
                 ),
             });
         }
@@ -1400,6 +1486,13 @@ impl EngineBuilder {
                     service_ewma_us: AtomicU64::new(s.service_hint_us),
                 },
                 breaker: Breaker::new(),
+                // Per-model overrides resolve against the engine-wide
+                // defaults ONCE, here — the hot paths read the entry.
+                breaker_threshold: s.breaker_threshold.unwrap_or(self.breaker_threshold),
+                breaker_cooldown_us: s
+                    .breaker_cooldown_ms
+                    .unwrap_or(self.breaker_cooldown_ms)
+                    .saturating_mul(1_000),
             })
             .collect();
         let n_models = models.len();
@@ -1429,8 +1522,6 @@ impl EngineBuilder {
             rejected_unknown: AtomicU64::new(0),
             restart_budget: self.restart_budget,
             backoff_base_ms: self.restart_backoff_ms,
-            breaker_threshold: self.breaker_threshold,
-            breaker_cooldown_us: self.breaker_cooldown_ms.saturating_mul(1_000),
             deaths: deaths_tx,
             restarts: AtomicU64::new(0),
         });
@@ -1748,7 +1839,7 @@ impl Drop for BatchGuard<'_> {
             return;
         }
         let entry = &self.shared.models[self.model];
-        entry.breaker.record_failure(self.shared.breaker_threshold, self.shared.now_us());
+        entry.breaker.record_failure(entry.breaker_threshold, self.shared.now_us());
         let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
         for job in self.jobs.drain(..) {
             st.release_client(&job.client);
@@ -1897,7 +1988,7 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
                     }
                     Err(e) => {
                         entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
-                        entry.breaker.record_failure(shared.breaker_threshold, shared.now_us());
+                        entry.breaker.record_failure(entry.breaker_threshold, shared.now_us());
                         Err(EngineError::Backend(format!("{e}")))
                     }
                 };
@@ -1911,7 +2002,7 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
                 results.len(),
                 batch.len()
             );
-            entry.breaker.record_failure(shared.breaker_threshold, shared.now_us());
+            entry.breaker.record_failure(entry.breaker_threshold, shared.now_us());
             for job in batch.drain(..) {
                 entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
                 let _ = job.reply.send(Err(EngineError::Backend(msg.clone())));
@@ -2583,6 +2674,83 @@ mod tests {
         let bad_plan = r#"{"fault_plan": {"models": [{"model": "x", "error_rate": 2.0}]},
                            "models": [{"name": "x", "arch": "micro", "seed": 1}]}"#;
         assert!(EngineConfig::from_json(&Json::parse(bad_plan).unwrap()).is_err());
+    }
+
+    #[test]
+    fn per_model_breaker_override_beats_engine_default() {
+        let ok = Arc::new(AtomicBool::new(false));
+        let (engine, join) = EngineBuilder::new()
+            .workers(1)
+            .policy(BatchPolicy { max_batch: 1, max_wait_us: 0 })
+            .breaker_threshold(0) // engine-wide: breaker disabled
+            .breaker_cooldown_ms(600_000)
+            .register(
+                ModelSpec::new("weak", flaky_factory(&ok))
+                    .breaker_threshold(1)
+                    .breaker_cooldown_ms(600_000),
+            )
+            .unwrap()
+            .register(ModelSpec::new("strong", flaky_factory(&ok)))
+            .unwrap()
+            .build()
+            .unwrap();
+        let img = || Tensor::new(vec![1], vec![1.0]).unwrap();
+        let _ = engine.infer(Request::new("weak", 0, img())).unwrap_err();
+        let _ = engine.infer(Request::new("strong", 1, img())).unwrap_err();
+        let health = engine.health();
+        assert_eq!(health.models[0].breaker, "open", "override threshold 1 trips");
+        assert_eq!(health.models[1].breaker, "closed", "engine default 0 never trips");
+        // The tripped model fast-fails typed; the breaker-disabled one
+        // keeps reaching its (still failing) backend.
+        let err = engine.submit(Request::new("weak", 2, img())).unwrap_err();
+        assert_eq!(err.reject_reason(), Some(RejectReason::BreakerOpen));
+        let err = engine.infer(Request::new("strong", 3, img())).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)), "{err}");
+        drop(engine);
+        let report = join.join().unwrap();
+        assert_eq!(report.model("weak").unwrap().metrics.rejected_breaker, 1);
+        assert_eq!(report.model("strong").unwrap().metrics.rejected_breaker, 0);
+    }
+
+    #[test]
+    fn variant_quantize_and_breaker_knobs_round_trip() {
+        let text = r#"{
+            "models": [{
+                "name": "q", "arch": "micro", "seed": 1,
+                "quantize": {"samples": 8, "seed": 5},
+                "breaker_threshold": 2, "breaker_cooldown_ms": 250
+            }]
+        }"#;
+        let cfg = EngineConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        let m = &cfg.models[0];
+        assert_eq!(m.quantize, Some(WeightQuantSpec { samples: 8, seed: 5 }));
+        assert_eq!(m.breaker_threshold, Some(2));
+        assert_eq!(m.breaker_cooldown_ms, Some(250));
+        let round = EngineConfig::from_json(&Json::parse(&cfg.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(cfg, round);
+        // Configs without the new keys parse to None — pre-quantization
+        // files are served byte-for-byte unchanged.
+        let plain = r#"{"models": [{"name": "q", "arch": "micro", "seed": 1}]}"#;
+        let parsed = EngineConfig::from_json(&Json::parse(plain).unwrap()).unwrap();
+        let m0 = &parsed.models[0];
+        assert_eq!(
+            (m0.quantize, m0.breaker_threshold, m0.breaker_cooldown_ms),
+            (None, None, None)
+        );
+        // Unknown sub-keys, zero samples, out-of-range thresholds and
+        // typo'd keys are errors, not defaults.
+        for bad in [
+            r#"{"models": [{"name": "q", "arch": "micro", "seed": 1,
+                "quantize": {"samples": 8, "seed": 5, "mode": "x"}}]}"#,
+            r#"{"models": [{"name": "q", "arch": "micro", "seed": 1,
+                "quantize": {"samples": 0, "seed": 5}}]}"#,
+            r#"{"models": [{"name": "q", "arch": "micro", "seed": 1,
+                "breaker_threshold": 4294967296}]}"#,
+            r#"{"models": [{"name": "q", "arch": "micro", "seed": 1,
+                "quantizee": {"samples": 1, "seed": 5}}]}"#,
+        ] {
+            assert!(EngineConfig::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -27,23 +27,39 @@ COMMANDS:
                                   engine config file and list the model
                                   variants it hosts (factories resolved,
                                   calibration tables loaded + checked,
-                                  every referenced artifact opened and
-                                  its manifest summarized — a bad path
-                                  fails here, not on the first request)
+                                  per-variant weight bytes reported as
+                                  stored vs f32-equivalent, every
+                                  referenced artifact opened and its
+                                  manifest summarized — a bad path fails
+                                  here, not on the first request)
   export   [--arch micro] [--seed 7] [--out artifacts/vim_micro.mxa]
+           [--quantize true [--quant-samples 12] [--quant-seed 7]]
            [--calib table.json | --calib-samples N [--percentile 1.0]]
                                   package a model as a versioned
-                                  VimArtifact v1 binary: weights (seeded
+                                  VimArtifact v2 binary: weights (seeded
                                   random-init), geometry, provenance and
                                   (optionally) a static scan calibration
                                   table — either an existing file or one
                                   calibrated on the spot — in ONE file
-                                  that `serve --engine` configs point at
-  inspect  --artifact model.mxa   print an artifact's manifest (arch,
-                                  geometry, provenance, tensor table,
+                                  that `serve --engine` configs point at.
+                                  `--quantize true` first runs the hybrid
+                                  INT8 weight-quantization search: GEMM
+                                  weights whose logit error fits the
+                                  budget are stored as INT8 codes +
+                                  per-column f32 scales (norms and
+                                  dt_proj always stay f32), so the
+                                  artifact ships pre-quantized
+  inspect  --artifact model.mxa [--json true]
+                                  print an artifact's manifest (arch,
+                                  geometry, provenance, per-tensor
+                                  dtype / bytes / compression table,
                                   embedded calibration) and then fully
                                   verify it (checksum + per-tensor
-                                  integrity + schema)
+                                  integrity + schema). `--json true`
+                                  emits one machine-readable JSON object
+                                  instead (manifest + stored vs
+                                  f32-equivalent weight bytes) for CI
+                                  assertions
   calibrate [--samples 64] [--seed 7] [--percentile 1.0]
             [--out artifacts/calib_micro.json]
                                   offline static scan calibration: run
@@ -228,12 +244,22 @@ fn main() -> Result<()> {
         "export" => {
             flags.expect_keys(
                 "export",
-                &["arch", "seed", "out", "calib", "calib-samples", "percentile"],
+                &[
+                    "arch",
+                    "seed",
+                    "out",
+                    "calib",
+                    "calib-samples",
+                    "percentile",
+                    "quantize",
+                    "quant-samples",
+                    "quant-seed",
+                ],
             )?;
             cmd_export(&flags)
         }
         "inspect" => {
-            flags.expect_keys("inspect", &["artifact"])?;
+            flags.expect_keys("inspect", &["artifact", "json"])?;
             cmd_inspect(&flags)
         }
         "serve" => {
@@ -330,15 +356,16 @@ fn cmd_calibrate(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// Package a model as a versioned `VimArtifact` v1 binary: random-init
-/// weights for the arch + seed, optionally with a static scan calibration
-/// table embedded (an existing file, or one calibrated on the spot over
-/// the synthetic serve stream).
+/// Package a model as a versioned `VimArtifact` v2 binary: random-init
+/// weights for the arch + seed — optionally hybrid-quantized to INT8
+/// first — and optionally with a static scan calibration table embedded
+/// (an existing file, or one calibrated on the spot over the synthetic
+/// serve stream, against the weights exactly as they will ship).
 fn cmd_export(flags: &Flags) -> Result<()> {
     use mamba_x::coordinator::arch_forward_config;
     use mamba_x::quant::CalibTable;
     use mamba_x::runtime::native::synthetic_image;
-    use mamba_x::runtime::{ArtifactStore, Provenance, VimArtifact};
+    use mamba_x::runtime::{ArtifactStore, NativeBackend, Provenance, VimArtifact, WeightQuantSpec};
     use mamba_x::sim::sfu::SfuTables;
     use mamba_x::vision::VimWeights;
 
@@ -353,9 +380,39 @@ fn cmd_export(flags: &Flags) -> Result<()> {
     if flags.get("percentile").is_some() && calib_samples == 0 {
         bail!("--percentile only applies with --calib-samples");
     }
+    let quantize = match flags.string("quantize", "false").as_str() {
+        "true" => true,
+        "false" => false,
+        other => bail!("--quantize takes true or false, got {other:?}"),
+    };
+    if !quantize {
+        for k in ["quant-samples", "quant-seed"] {
+            if flags.get(k).is_some() {
+                bail!("--{k} only applies with --quantize true");
+            }
+        }
+    }
 
     let cfg = arch_forward_config(&arch)?;
-    let weights = VimWeights::init(&cfg, seed);
+    let mut weights = VimWeights::init(&cfg, seed);
+    let mut provenance_detail = format!("arch={arch} seed={seed} random-init");
+    if quantize {
+        let spec = WeightQuantSpec {
+            samples: flags.usize("quant-samples", 12)?,
+            seed: flags.usize("quant-seed", seed as usize)? as u64,
+        };
+        weights = NativeBackend::quantize_weights(&weights, &spec)?;
+        let (f32_eq, stored) = weights.weight_bytes();
+        println!(
+            "quantized weights: {stored} stored bytes of {f32_eq} f32-equivalent ({:.1}%); \
+             samples {} seed {}",
+            100.0 * stored as f64 / f32_eq as f64,
+            spec.samples,
+            spec.seed
+        );
+        provenance_detail
+            .push_str(&format!(" quant=i8 samples={} qseed={}", spec.samples, spec.seed));
+    }
     let calib = match flags.get("calib") {
         Some(path) => {
             let table = CalibTable::load(path)?;
@@ -385,15 +442,14 @@ fn cmd_export(flags: &Flags) -> Result<()> {
     let artifact = VimArtifact::from_weights(
         weights,
         calib,
-        Provenance {
-            tool: "mamba-x export".to_string(),
-            detail: format!("arch={arch} seed={seed} random-init"),
-        },
+        Provenance { tool: "mamba-x export".to_string(), detail: provenance_detail },
     )?;
     let params = artifact.manifest.total_elements()?;
+    let (f32_eq, stored) = artifact.weights.weight_bytes();
     ArtifactStore::save(&out, &artifact)?;
     println!(
-        "wrote {out}: arch {arch}, {} blocks, {params} params, calib {}",
+        "wrote {out}: arch {arch}, {} blocks, {params} params, {stored} weight bytes \
+         ({f32_eq} f32-equivalent), calib {}",
         cfg.model.n_blocks,
         if has_calib { "embedded" } else { "none" }
     );
@@ -405,23 +461,58 @@ fn cmd_export(flags: &Flags) -> Result<()> {
     Ok(())
 }
 
-/// Print an artifact's manifest, then fully verify the file (checksum +
-/// per-tensor integrity + schema) by loading it.
+/// Print an artifact's manifest (with the per-tensor dtype / stored
+/// bytes / compression table), then fully verify the file (checksum +
+/// per-tensor integrity + schema) by loading it. `--json true` emits one
+/// machine-readable JSON object instead, after the same verification.
 fn cmd_inspect(flags: &Flags) -> Result<()> {
     use mamba_x::runtime::ArtifactStore;
+    use mamba_x::util::Json;
 
     let Some(path) = flags.get("artifact") else {
         bail!("inspect needs --artifact <path>");
     };
+    let json_mode = match flags.string("json", "false").as_str() {
+        "true" => true,
+        "false" => false,
+        other => bail!("--json takes true or false, got {other:?}"),
+    };
     let summary = ArtifactStore::inspect(path)?;
     let m = &summary.manifest;
+    let f32_eq = summary.params * 4;
+    // Full verification up front in both modes: checksum, blob decode,
+    // per-tensor integrity, embedded-calibration fit.
+    let artifact = ArtifactStore::open(path)?;
+    if json_mode {
+        let calib = match &summary.calib {
+            Some(t) => Json::obj_from(vec![
+                ("sites", Json::Num(t.sites.len() as f64)),
+                ("samples", Json::Num(t.samples as f64)),
+                ("percentile", Json::Num(t.percentile as f64)),
+            ]),
+            None => Json::Null,
+        };
+        let j = Json::obj_from(vec![
+            ("file", Json::Str(path.to_string())),
+            ("file_bytes", Json::Num(summary.file_bytes as f64)),
+            ("params", Json::Num(summary.params as f64)),
+            ("weight_bytes_f32", Json::Num(f32_eq as f64)),
+            ("weight_bytes_stored", Json::Num(summary.weight_bytes as f64)),
+            ("calib", calib),
+            ("verified", Json::Bool(true)),
+            ("manifest", m.to_json()),
+        ]);
+        println!("{}", j.dump());
+        return Ok(());
+    }
     println!("artifact {path} (format v{}, {} bytes)", m.version, summary.file_bytes);
     println!(
         "  arch {} | d_model {} blocks {} d_state {} expand {} conv_k {} patch {}",
         m.arch, m.d_model, m.n_blocks, m.d_state, m.expand, m.conv_k, m.patch
     );
     println!(
-        "  input {}x{}x{} -> {} classes | {} params ({} weight bytes)",
+        "  input {}x{}x{} -> {} classes | {} params | weight blob {} B stored \
+         ({f32_eq} B f32-equivalent)",
         m.img, m.img, m.in_ch, m.n_classes, summary.params, summary.weight_bytes
     );
     println!("  provenance: {} ({})", m.provenance.tool, m.provenance.detail);
@@ -435,12 +526,19 @@ fn cmd_inspect(flags: &Flags) -> Result<()> {
         None => println!("  calib: none (dynamic scan scales)"),
     }
     println!("  {} tensors:", m.tensors.len());
+    println!("    {:<24} {:<14} {:>5} {:>10} {:>7}", "name", "shape", "dtype", "bytes", "ratio");
     for t in &m.tensors {
-        println!("    {:<24} {:?}", t.name, t.shape);
+        let elems: u64 = t.shape.iter().map(|&d| d as u64).product();
+        let stored = t.stored_bytes();
+        println!(
+            "    {:<24} {:<14} {:>5} {:>10} {:>6.2}x",
+            t.name,
+            format!("{:?}", t.shape),
+            t.dtype.name(),
+            stored,
+            (4 * elems) as f64 / stored as f64
+        );
     }
-    // Full verification: checksum, blob decode, per-tensor integrity,
-    // embedded-calibration fit.
-    let artifact = ArtifactStore::open(path)?;
     println!(
         "verified: checksum ok, {} tensors decoded and integrity-checked",
         artifact.manifest.tensors.len()
@@ -800,17 +898,26 @@ fn cmd_models(engine: Option<&str>) -> Result<()> {
                 cfg.workers, cfg.policy.max_batch, cfg.policy.max_wait_us, cfg.queue_depth
             );
             println!(
-                "{:<24} {:<32} {:>10} {:>8}  calib",
-                "name", "source", "slo_us", "hint_us"
+                "{:<24} {:<32} {:>10} {:>8} {:>21}  calib",
+                "name", "source", "slo_us", "hint_us", "weight B stored/f32"
             );
             for v in &cfg.models {
-                v.to_spec()?; // resolve the factory: any config error surfaces here
+                // Resolve the factory (any config error — bad artifact
+                // path, misfit calib, failed quantization — surfaces
+                // here) and build one backend to read the variant's
+                // actual weight storage footprint.
+                let spec = v.to_spec()?;
+                let weights = match (spec.factory)(0)?.weight_bytes() {
+                    Some((f32_eq, stored)) => format!("{stored}/{f32_eq}"),
+                    None => "-".to_string(),
+                };
                 println!(
-                    "{:<24} {:<32} {:>10} {:>8}  {}",
+                    "{:<24} {:<32} {:>10} {:>8} {:>21}  {}",
                     v.name,
                     v.source.describe(),
                     v.slo_us.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string()),
                     v.service_hint_us,
+                    weights,
                     v.calib.as_deref().unwrap_or("-")
                 );
             }
@@ -821,12 +928,15 @@ fn cmd_models(engine: Option<&str>) -> Result<()> {
                     let s = ArtifactStore::inspect(path)?;
                     let m = &s.manifest;
                     println!(
-                        "  {}: arch {} | {} blocks | {} channels | {} params | calib {} | by {}",
+                        "  {}: v{} | arch {} | {} blocks | {} channels | {} params | \
+                         {} weight B stored | calib {} | by {}",
                         path,
+                        m.version,
                         m.arch,
                         m.n_blocks,
                         m.d_model * m.expand,
                         s.params,
+                        s.weight_bytes,
                         if s.calib.is_some() { "y" } else { "n" },
                         m.provenance.tool
                     );
@@ -1117,7 +1227,7 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     println!(
         "refusals: full {} shed {} quota {} unknown_model {} bad_request {} \
          shutting_down {} backend_error {} deadline_exceeded {} breaker_open {} \
-         timeouts {} transport {} (retries {})",
+         timeouts {} transport {} (retries {} reconnects {})",
         n("rejected_full"),
         n("rejected_shed"),
         n("rejected_quota"),
@@ -1130,6 +1240,7 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
         n("timeouts"),
         n("transport_errors"),
         n("retries"),
+        n("reconnects"),
     );
     mamba_x::util::write_creating_dirs(&out, artifact.dump().as_bytes())?;
     let abs = std::fs::canonicalize(&out).unwrap_or_else(|_| out.clone().into());

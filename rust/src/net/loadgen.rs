@@ -210,6 +210,12 @@ struct Tally {
     /// transport failures.
     timeouts: u64,
     transport_errors: u64,
+    /// Connections re-established after the initial one (server sent
+    /// `Connection: close`, or the client abandoned a desynced stream
+    /// after a transport failure). Connection-level, not part of the
+    /// per-attempt outcome ledger; a healthy keep-alive run reports 0,
+    /// which CI asserts to pin connection reuse.
+    reconnects: u64,
     /// Client-side wall latency of completed requests.
     latencies_us: Vec<u64>,
 }
@@ -230,6 +236,7 @@ impl Tally {
         self.breaker_open += other.breaker_open;
         self.timeouts += other.timeouts;
         self.transport_errors += other.transport_errors;
+        self.reconnects += other.reconnects;
         self.latencies_us.extend_from_slice(&other.latencies_us);
     }
 
@@ -291,6 +298,7 @@ impl Tally {
             ("breaker_open", Json::Num(self.breaker_open as f64)),
             ("timeouts", Json::Num(self.timeouts as f64)),
             ("transport_errors", Json::Num(self.transport_errors as f64)),
+            ("reconnects", Json::Num(self.reconnects as f64)),
             ("shed_rate", Json::Num(shed_rate)),
             ("latency_us", self.latency_json()),
         ])
@@ -419,7 +427,10 @@ fn infer_body(
 }
 
 /// One client thread: run its share of the workload against a kept-alive
-/// connection, reconnecting once per transport error. Retries (bounded
+/// connection, reconnecting once per transport error (every
+/// re-established connection is counted in `reconnects`, so a run that
+/// quietly fell back to connection-per-request would show up in the
+/// artifact instead of hiding in latency). Retries (bounded
 /// by `cfg.retries`) draw backoff jitter from a *separate* rng stream so
 /// the workload sequence (ids, priorities, payload seeds) stays
 /// bit-identical no matter which attempts fail.
@@ -474,6 +485,7 @@ fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> C
                         .map(|secs| secs.saturating_mul(1_000).min(2_000));
                     let retryable = matches!(resp.status, 429 | 500 | 503 | 504);
                     if resp.close {
+                        stats.overall.reconnects += 1;
                         match connect(&cfg.addr, timeout) {
                             Ok(c) => conn = c,
                             Err(_) => break 'requests,
@@ -492,6 +504,7 @@ fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> C
                     // Connection state is unknown after a transport
                     // failure (a late response could desync the next
                     // exchange): always reconnect.
+                    stats.overall.reconnects += 1;
                     match connect(&cfg.addr, timeout) {
                         Ok(c) => conn = c,
                         Err(_) => break 'requests,
@@ -738,6 +751,10 @@ mod tests {
         assert_eq!(j.get("deadline_exceeded").unwrap().usize().unwrap(), 1);
         assert_eq!(j.get("timeouts").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("retries").unwrap().usize().unwrap(), 0);
+        assert_eq!(j.get("reconnects").unwrap().usize().unwrap(), 0);
+        let other = Tally { reconnects: 2, ..Tally::default() };
+        t.merge(&other);
+        assert_eq!(t.reconnects, 2, "reconnects merge across clients");
         assert_eq!(j.get("latency_us").unwrap().get("p50").unwrap().usize().unwrap(), 120);
     }
 

@@ -284,6 +284,156 @@ fn aggregate(per_item: &[Vec<f32>], channels: usize, p: f32) -> Vec<f32> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Per-site weight precision search (paper H2's hybrid axis, weight side):
+// pick, per tensor, between INT8-at-some-clip-percentile and staying f32,
+// from calibration samples. The engine is generic over how error is
+// measured — callers supply closures that quantize candidate sites and
+// evaluate the model — so the greedy selection logic is unit-testable
+// without a forward pass.
+// ---------------------------------------------------------------------------
+
+/// Options of the weight precision search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightQuantOpts {
+    /// Calibration images the error closures evaluate over (callers
+    /// generate them; recorded here so plans are reproducible).
+    pub samples: usize,
+    /// Seed of the calibration image stream.
+    pub seed: u64,
+    /// Candidate clip percentiles, tried per site in order (1.0 = plain
+    /// absmax). Each must lie in (0, 1].
+    pub percentiles: Vec<f32>,
+    /// Max relative logit error a single quantized site may introduce;
+    /// sites above it stay f32.
+    pub site_budget: f32,
+    /// Max relative logit error of the *joint* plan; exceeded, the
+    /// worst-error sites are evicted back to f32 until it fits.
+    pub total_budget: f32,
+}
+
+impl Default for WeightQuantOpts {
+    fn default() -> Self {
+        WeightQuantOpts {
+            samples: 12,
+            seed: 0x5EED,
+            percentiles: vec![1.0, 0.999],
+            site_budget: 0.05,
+            total_budget: 0.10,
+        }
+    }
+}
+
+impl WeightQuantOpts {
+    pub fn validate(&self) -> Result<()> {
+        if self.samples == 0 {
+            bail!("weight-quant search needs at least one calibration sample");
+        }
+        if self.percentiles.is_empty() {
+            bail!("weight-quant search needs at least one candidate percentile");
+        }
+        for &p in &self.percentiles {
+            if !(p > 0.0 && p <= 1.0) {
+                bail!("clip percentile must be in (0, 1], got {p}");
+            }
+        }
+        if !(self.site_budget > 0.0 && self.site_budget.is_finite()) {
+            bail!("site_budget must be positive and finite");
+        }
+        if !(self.total_budget > 0.0 && self.total_budget.is_finite()) {
+            bail!("total_budget must be positive and finite");
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of [`plan_weight_precision`]: which tensors go INT8 (with
+/// their chosen clip percentile) and which stay f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightQuantPlan {
+    /// Accepted sites as `(tensor name, clip percentile)`, in candidate
+    /// order.
+    pub sites: Vec<(String, f32)>,
+    /// Candidates kept f32, with the error that disqualified them (the
+    /// best per-site error over the budget, or the site error at joint
+    /// eviction time).
+    pub rejected: Vec<(String, f32)>,
+}
+
+impl WeightQuantPlan {
+    /// A plan quantizing every listed site at plain absmax (percentile
+    /// 1.0) — the "force INT8 everywhere eligible" shortcut.
+    pub fn all_at_absmax(names: &[String]) -> Self {
+        WeightQuantPlan {
+            sites: names.iter().map(|n| (n.clone(), 1.0)).collect(),
+            rejected: Vec::new(),
+        }
+    }
+}
+
+/// Greedy per-site precision search. For each candidate tensor, evaluate
+/// `site_err(name, percentile)` (relative model error with ONLY that
+/// site quantized) for every candidate percentile and keep the best; a
+/// site within `site_budget` is accepted at that percentile, otherwise
+/// it stays f32. Then `joint_err` (relative error with the whole
+/// accepted set quantized) is checked against `total_budget`, evicting
+/// the worst-site-error member until the joint plan fits. Fully
+/// deterministic: candidate order, percentile order, and total-order f32
+/// comparisons decide every tie.
+pub fn plan_weight_precision(
+    candidates: &[String],
+    opts: &WeightQuantOpts,
+    mut site_err: impl FnMut(&str, f32) -> f32,
+    mut joint_err: impl FnMut(&[(String, f32)]) -> f32,
+) -> Result<WeightQuantPlan> {
+    opts.validate()?;
+    // (name, percentile, site error) of every accepted site.
+    let mut accepted: Vec<(String, f32, f32)> = Vec::new();
+    let mut rejected: Vec<(String, f32)> = Vec::new();
+    for name in candidates {
+        let mut best: Option<(f32, f32)> = None;
+        for &p in &opts.percentiles {
+            let e = site_err(name, p);
+            // Strict `<`: on ties the earlier-listed percentile wins.
+            let better = match best {
+                None => true,
+                Some((_, be)) => e.total_cmp(&be).is_lt(),
+            };
+            if better {
+                best = Some((p, e));
+            }
+        }
+        let (p, e) = best.expect("validate guarantees a percentile");
+        if e.is_finite() && e <= opts.site_budget {
+            accepted.push((name.clone(), p, e));
+        } else {
+            rejected.push((name.clone(), e));
+        }
+    }
+    // Joint check: per-site errors compose, so evict the biggest
+    // contributor first until the combined plan fits the total budget.
+    while !accepted.is_empty() {
+        let plan: Vec<(String, f32)> =
+            accepted.iter().map(|(n, p, _)| (n.clone(), *p)).collect();
+        let e = joint_err(&plan);
+        if e.is_finite() && e <= opts.total_budget {
+            break;
+        }
+        let worst = accepted
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .2.total_cmp(&b.1 .2))
+            .map(|(i, _)| i)
+            .expect("accepted is non-empty");
+        let (name, _, err) = accepted.remove(worst);
+        rejected.push((name, err));
+    }
+    Ok(WeightQuantPlan {
+        sites: accepted.into_iter().map(|(n, p, _)| (n, p)).collect(),
+        rejected,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -364,5 +514,93 @@ mod tests {
         assert!(t.validate("other", 1, 2).is_err());
         assert!(t.validate("unit", 2, 2).is_err());
         assert!(t.validate("unit", 1, 3).is_err());
+    }
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn precision_search_accepts_within_budget_and_picks_best_percentile() {
+        let opts = WeightQuantOpts {
+            percentiles: vec![1.0, 0.9],
+            site_budget: 0.05,
+            total_budget: 0.5,
+            ..WeightQuantOpts::default()
+        };
+        // "a" prefers the clipped percentile, "b" only fits at absmax,
+        // "c" misses the site budget at every percentile.
+        let plan = plan_weight_precision(
+            &names(&["a", "b", "c"]),
+            &opts,
+            |name, p| match (name, p == 1.0) {
+                ("a", true) => 0.04,
+                ("a", false) => 0.01,
+                ("b", true) => 0.03,
+                ("b", false) => 0.2,
+                (_, true) => 0.3,
+                (_, false) => 0.4,
+            },
+            |_| 0.0,
+        )
+        .unwrap();
+        assert_eq!(plan.sites, vec![("a".to_string(), 0.9), ("b".to_string(), 1.0)]);
+        assert_eq!(plan.rejected.len(), 1);
+        assert_eq!(plan.rejected[0].0, "c");
+    }
+
+    #[test]
+    fn precision_search_evicts_worst_site_until_joint_budget_fits() {
+        let opts = WeightQuantOpts {
+            percentiles: vec![1.0],
+            site_budget: 0.1,
+            total_budget: 0.1,
+            ..WeightQuantOpts::default()
+        };
+        // All three sites fit individually; jointly they only fit once
+        // the worst per-site contributor ("b") is evicted.
+        let plan = plan_weight_precision(
+            &names(&["a", "b", "c"]),
+            &opts,
+            |name, _| match name {
+                "a" => 0.02,
+                "b" => 0.09,
+                _ => 0.03,
+            },
+            |sites| if sites.iter().any(|(n, _)| n == "b") { 0.2 } else { 0.05 },
+        )
+        .unwrap();
+        assert_eq!(plan.sites, vec![("a".to_string(), 1.0), ("c".to_string(), 1.0)]);
+        assert_eq!(plan.rejected, vec![("b".to_string(), 0.09)]);
+    }
+
+    #[test]
+    fn precision_search_is_deterministic_and_rejects_bad_opts() {
+        let opts = WeightQuantOpts::default();
+        let run = || {
+            plan_weight_precision(
+                &names(&["x", "y"]),
+                &opts,
+                |n, p| n.len() as f32 * 0.001 + (1.0 - p),
+                |s| s.len() as f32 * 0.001,
+            )
+            .unwrap()
+        };
+        assert_eq!(run(), run(), "same inputs, same plan");
+
+        let bad_pct = WeightQuantOpts { percentiles: vec![0.0], ..WeightQuantOpts::default() };
+        assert!(plan_weight_precision(&[], &bad_pct, |_, _| 0.0, |_| 0.0).is_err());
+        let no_samples = WeightQuantOpts { samples: 0, ..WeightQuantOpts::default() };
+        assert!(no_samples.validate().is_err());
+        let bad_budget =
+            WeightQuantOpts { site_budget: 0.0, ..WeightQuantOpts::default() };
+        assert!(bad_budget.validate().is_err());
+    }
+
+    #[test]
+    fn all_at_absmax_covers_every_name() {
+        let plan = WeightQuantPlan::all_at_absmax(&names(&["p", "q"]));
+        assert_eq!(plan.sites, vec![("p".to_string(), 1.0), ("q".to_string(), 1.0)]);
+        assert!(plan.rejected.is_empty());
     }
 }

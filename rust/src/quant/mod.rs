@@ -17,8 +17,12 @@ mod calib;
 mod fixed;
 mod scan_quant;
 mod spe;
+mod wq;
 
-pub use calib::{CalibBuilder, CalibTable, SiteScales, CALIB_FORMAT, CALIB_VERSION};
+pub use calib::{
+    plan_weight_precision, CalibBuilder, CalibTable, SiteScales, WeightQuantOpts, WeightQuantPlan,
+    CALIB_FORMAT, CALIB_VERSION,
+};
 pub use fixed::{pow2_round, pow2_shift, quantize, round_half_away, scale_for, QMAX};
 pub use scan_quant::{
     channel_abs_max, dequantize_states, derive_scan_scales, quantize_scan_inputs,
@@ -27,4 +31,7 @@ pub use scan_quant::{
 pub use spe::{
     rshift_round, spe_scan_int, spe_scan_int_batch_fused, spe_scan_int_seq,
     spe_scan_int_threaded, SpeDatapath, FRAC_BITS, STATE_SAT,
+};
+pub use wq::{
+    quant_absmax, quantize_rows_i8, quantize_tensor, QuantTensor, TensorDtype, WEIGHT_QUANT_BITS,
 };

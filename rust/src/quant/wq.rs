@@ -1,0 +1,255 @@
+//! Weight-side quantization primitives (paper H2, the weight half of the
+//! "hybrid, hardware-friendly" axis): symmetric per-output-channel INT8
+//! with optional percentile clipping.
+//!
+//! A [`QuantTensor`] stores a row-major (rows, cols) matrix as `i8` codes
+//! plus one f32 scale per *column* — for the (K, N) GEMM weights that is
+//! per output channel, the granularity the paper quantizes weights at;
+//! 1-D tensors degenerate to a single per-tensor scale (`cols == 1`).
+//! Scales come from [`scale_for`] (clipped-absmax / 127, floored at a
+//! positive epsilon), so a scale is never zero and dequantization
+//! `q as f32 * scale` is total. Values beyond the clip point saturate to
+//! ±[`QMAX`] in [`quantize`] — the same convention as the scan quantizer.
+//!
+//! The serving kernel ([`crate::vision::matmul_q8`]) consumes the codes
+//! and scales directly; the artifact format ([`crate::runtime`]) persists
+//! them verbatim, which is what makes save → open → serve bitwise
+//! reproducible: nothing is ever re-quantized.
+
+use crate::quant::fixed::{quantize, scale_for, QMAX};
+
+/// Weight bitwidth of the INT8 tier (the search picks *between* this and
+/// keeping a tensor f32; sub-8-bit tiers would slot in here).
+pub const WEIGHT_QUANT_BITS: u32 = 8;
+
+/// Storage dtype of one named tensor, as recorded in the artifact
+/// manifest's per-tensor records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorDtype {
+    /// Plain little-endian f32 elements (the v1 format's only dtype).
+    F32,
+    /// INT8 codes + per-column f32 scales ([`QuantTensor`] layout).
+    I8,
+}
+
+impl TensorDtype {
+    /// Wire name used in manifests and `inspect` output.
+    pub fn name(self) -> &'static str {
+        match self {
+            TensorDtype::F32 => "f32",
+            TensorDtype::I8 => "i8",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(TensorDtype::F32),
+            "i8" => Some(TensorDtype::I8),
+            _ => None,
+        }
+    }
+}
+
+/// A symmetric per-column INT8 quantized matrix: `q` is row-major
+/// (rows, cols), `scales[j]` dequantizes column `j` as
+/// `q[i * cols + j] as f32 * scales[j]`. Every scale is finite and
+/// strictly positive ([`scale_for`] guarantees it at construction; the
+/// artifact decoder re-validates it on load).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+impl QuantTensor {
+    /// Dequantize into a dense f32 matrix, element order preserved.
+    pub fn dequant(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.q.len());
+        for row in self.q.chunks_exact(self.cols) {
+            for (qv, s) in row.iter().zip(&self.scales) {
+                out.push(*qv as f32 * *s);
+            }
+        }
+        out
+    }
+
+    /// Bytes this tensor occupies in the artifact blob: one byte per
+    /// code plus four per scale.
+    pub fn stored_bytes(&self) -> usize {
+        self.q.len() + 4 * self.scales.len()
+    }
+}
+
+/// Quantize a row-major (rows, cols) f32 matrix to symmetric per-column
+/// INT8, clipping each column at the `percentile` of its |value|
+/// distribution (1.0 = plain absmax, the lossless-range choice; lower
+/// values trade outlier saturation for a finer step). Panics on a length
+/// mismatch or a percentile outside (0, 1] — callers validate options
+/// before search.
+pub fn quantize_tensor(v: &[f32], rows: usize, cols: usize, percentile: f32) -> QuantTensor {
+    assert_eq!(v.len(), rows * cols, "quantize_tensor input length");
+    assert!(rows > 0 && cols > 0, "quantize_tensor empty shape");
+    assert!(
+        percentile > 0.0 && percentile <= 1.0,
+        "clip percentile must be in (0, 1], got {percentile}"
+    );
+    let mut scales = vec![0f32; cols];
+    let mut mags = vec![0f32; rows];
+    for (c, scale) in scales.iter_mut().enumerate() {
+        for (r, m) in mags.iter_mut().enumerate() {
+            *m = v[r * cols + c].abs();
+        }
+        // Same 1-based ceil(p * count) rank as the scan calibrator's
+        // percentile aggregation — one clipping idiom across the crate.
+        mags.sort_by(f32::total_cmp);
+        let idx = ((percentile as f64 * rows as f64).ceil() as usize).clamp(1, rows);
+        *scale = scale_for(mags[idx - 1], WEIGHT_QUANT_BITS);
+    }
+    let q = v
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| quantize(x, scales[i % cols]) as i8)
+        .collect();
+    QuantTensor { rows, cols, q, scales }
+}
+
+/// Absmax over the *dequantized* values of an INT8 tensor, with the same
+/// fold and NaN semantics as [`crate::runtime::tensor_absmax`] — the
+/// artifact encoder and decoder both call this on identical (codes,
+/// scales) inputs, so the integrity record round-trips bitwise.
+pub fn quant_absmax(q: &[i8], scales: &[f32], cols: usize) -> f32 {
+    let mut m = 0f32;
+    for (i, &qv) in q.iter().enumerate() {
+        let v = qv as f32 * scales[i % cols];
+        if !v.is_finite() {
+            return f32::NAN;
+        }
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Quantize a row-major (rows, cols) activation matrix to symmetric INT8
+/// at *per-row* granularity (absmax scales) — the activation side of the
+/// INT8×INT8 kernel [`crate::vision::matmul_i8`], where each GEMM row is
+/// one token's features.
+pub fn quantize_rows_i8(x: &[f32], rows: usize, cols: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(x.len(), rows * cols, "quantize_rows_i8 input length");
+    let mut q = Vec::with_capacity(x.len());
+    let mut scales = Vec::with_capacity(rows);
+    for row in x.chunks_exact(cols) {
+        let mut m = 0f32;
+        for &v in row {
+            m = m.max(v.abs());
+        }
+        let s = scale_for(m, WEIGHT_QUANT_BITS);
+        scales.push(s);
+        q.extend(row.iter().map(|&v| quantize(v, s) as i8));
+    }
+    (q, scales)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_names_round_trip() {
+        for d in [TensorDtype::F32, TensorDtype::I8] {
+            assert_eq!(TensorDtype::parse(d.name()), Some(d));
+        }
+        assert_eq!(TensorDtype::parse("f16"), None);
+    }
+
+    #[test]
+    fn absmax_quantization_bounds_per_element_error() {
+        // percentile 1.0: no saturation, so |x - dequant| <= scale / 2.
+        let (rows, cols) = (17, 5);
+        let v: Vec<f32> = (0..rows * cols)
+            .map(|i| ((i * 37 % 101) as f32 - 50.0) / 13.0)
+            .collect();
+        let qt = quantize_tensor(&v, rows, cols, 1.0);
+        assert_eq!((qt.rows, qt.cols), (rows, cols));
+        assert_eq!(qt.scales.len(), cols);
+        assert!(qt.scales.iter().all(|s| s.is_finite() && *s > 0.0));
+        let deq = qt.dequant();
+        for (i, (&x, &y)) in v.iter().zip(&deq).enumerate() {
+            let s = qt.scales[i % cols];
+            assert!((x - y).abs() <= s / 2.0 + s * 1e-5, "elem {i}: {x} vs {y} (scale {s})");
+        }
+    }
+
+    #[test]
+    fn percentile_clipping_saturates_outliers() {
+        // 99 small values and one huge outlier per column: clipping at
+        // 0.99 keys the scale off the small values, saturating the
+        // outlier to +-QMAX instead of wasting range on it.
+        let rows = 100;
+        let mut v = vec![0f32; rows];
+        for (i, x) in v.iter_mut().enumerate() {
+            *x = (i as f32 - 50.0) / 100.0; // |x| <= 0.5
+        }
+        v[7] = 1000.0;
+        let clipped = quantize_tensor(&v, rows, 1, 0.99);
+        assert_eq!(clipped.q[7] as i32, QMAX, "outlier saturates");
+        assert!(clipped.scales[0] < 1.0, "scale keyed to the bulk");
+        let full = quantize_tensor(&v, rows, 1, 1.0);
+        assert!(full.scales[0] > 1.0, "absmax scale keyed to the outlier");
+    }
+
+    #[test]
+    fn all_zero_column_quantizes_exactly() {
+        // scale_for's epsilon floor keeps the scale positive; codes are 0
+        // and dequantization reproduces exact zeros (zero-initialized
+        // biases survive quantization bitwise).
+        let qt = quantize_tensor(&[0.0; 12], 4, 3, 1.0);
+        assert!(qt.q.iter().all(|&q| q == 0));
+        assert!(qt.scales.iter().all(|s| *s > 0.0));
+        assert!(qt.dequant().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn columns_scale_independently() {
+        let v = [
+            1.0f32, 100.0, //
+            -1.0, -100.0, //
+            0.5, 50.0,
+        ];
+        let qt = quantize_tensor(&v, 3, 2, 1.0);
+        assert!(qt.scales[1] > qt.scales[0] * 50.0);
+        // Both extremes hit full range despite the 100x magnitude gap.
+        assert_eq!(qt.q[0] as i32, QMAX);
+        assert_eq!(qt.q[1] as i32, QMAX);
+    }
+
+    #[test]
+    fn quant_absmax_matches_dequant_fold() {
+        let v: Vec<f32> = (0..24).map(|i| (i as f32 - 11.0) / 7.0).collect();
+        let qt = quantize_tensor(&v, 6, 4, 1.0);
+        let deq = qt.dequant();
+        let want = deq.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        assert_eq!(quant_absmax(&qt.q, &qt.scales, qt.cols).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn stored_bytes_counts_codes_and_scales() {
+        let qt = quantize_tensor(&[0.25; 20], 4, 5, 1.0);
+        assert_eq!(qt.stored_bytes(), 20 + 4 * 5);
+    }
+
+    #[test]
+    fn row_quantization_is_per_row() {
+        let x = [
+            0.5f32, -1.0, 0.25, //
+            200.0, 100.0, -400.0,
+        ];
+        let (q, scales) = quantize_rows_i8(&x, 2, 3);
+        assert_eq!(scales.len(), 2);
+        assert_eq!(q[1] as i32, -QMAX, "row 0 absmax hits full range");
+        assert_eq!(q[5] as i32, -QMAX, "row 1 absmax hits full range");
+        assert!(scales[1] > scales[0] * 100.0);
+    }
+}

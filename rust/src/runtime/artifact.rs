@@ -1,4 +1,4 @@
-//! `VimArtifact` v1 — the versioned binary model-artifact format and its
+//! `VimArtifact` v2 — the versioned binary model-artifact format and its
 //! loading surface ([`ArtifactStore`]).
 //!
 //! One file names "a model you can serve": weights, geometry, provenance
@@ -10,42 +10,55 @@
 //! ```text
 //! offset  size  field
 //! 0       8     magic  b"MAMBAXAR"
-//! 8       4     u32 format version (currently 1)
+//! 8       4     u32 format version (currently 2; v1 still loads)
 //! 12      4     u32 manifest length M
 //! 16      M     manifest JSON (ArtifactManifest: arch, geometry,
-//!               provenance, per-tensor name/shape/absmax-bits)
-//! 16+M    8     u64 tensor blob length B (= 4 x total elements)
-//! ..      B     raw f32 tensor data, manifest order (vim_tensor_schema)
+//!               provenance, per-tensor name/shape/dtype/absmax-bits)
+//! 16+M    8     u64 tensor blob length B (sum of per-tensor stored
+//!               bytes: 4 x elems for "f32" records; elems i8 code bytes
+//!               followed by 4 x scale-count f32 scale bytes for "i8")
+//! ..      B     tensor data, manifest order (vim_tensor_schema)
 //! ..      4     u32 calibration section length C (0 = none)
 //! ..      C     embedded CalibTable JSON (same format as `--calib` files)
 //! ..      8     u64 FNV-1a checksum of every preceding byte
 //! ```
 //!
-//! The loader is a hard gate, never a silent fallback: foreign magic,
-//! future versions, truncation, checksum/per-tensor-absmax corruption,
+//! v1 is the same container with no per-tensor `dtype` field and an
+//! all-f32 blob (B = 4 x total elements); this build reads both and
+//! always writes v2. The loader is a hard gate, never a silent
+//! fallback: foreign magic, future versions, truncation,
+//! checksum/per-tensor-absmax corruption, non-positive or non-finite
+//! INT8 scales, quantized records on precision-sensitive tensors,
 //! unknown archs, geometry-vs-arch disagreement, schema shape drift and
 //! ill-fitting embedded calibration all fail with a typed
 //! [`ArtifactError`]. `rust/tests/artifact_props.rs` pins save -> load ->
 //! forward bitwise equality plus every rejection path, against a
 //! committed golden fixture (`rust/tests/data/artifact_v1.bin`) written
-//! by the python exporter mirror (`python/compile/make_artifact_golden.py`).
+//! by the python exporter mirror (`python/compile/make_artifact_golden.py`);
+//! `rust/tests/quant_weight_props.rs` does the same for quantized v2
+//! images.
 
 use std::fmt;
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 
-use crate::quant::CalibTable;
+use crate::quant::{quant_absmax, CalibTable, QuantTensor, TensorDtype};
 use crate::util::Json;
-use crate::vision::VimWeights;
+use crate::vision::{TensorSlotMut, TensorView, VimWeights, WeightMat};
 
 use super::manifest::{tensor_absmax, ArtifactManifest, Provenance};
 
 /// File magic: the first 8 bytes of every artifact.
 pub const ARTIFACT_MAGIC: [u8; 8] = *b"MAMBAXAR";
 
-/// Current artifact format version; loaders reject anything else.
-pub const ARTIFACT_VERSION: u32 = 1;
+/// Current artifact format version — what [`ArtifactStore::encode`]
+/// writes. Loaders accept [`ARTIFACT_MIN_VERSION`]..=this.
+pub const ARTIFACT_VERSION: u32 = 2;
+
+/// Oldest artifact format version this build still decodes (v1: no
+/// per-tensor dtype records, all-f32 blob).
+pub const ARTIFACT_MIN_VERSION: u32 = 1;
 
 /// Typed artifact rejection — the entire loading failure surface.
 #[derive(Debug, Clone, PartialEq)]
@@ -72,6 +85,10 @@ pub enum ArtifactError {
     ShapeMismatch { name: String, want: Vec<usize>, got: Vec<usize> },
     /// Tensor data disagrees with its manifest integrity record.
     TensorCorrupt { name: String, detail: String },
+    /// A precision-sensitive tensor (norms, `dt_proj`) carries a
+    /// quantized dtype record — never produced by this build's
+    /// precision search and refused on load.
+    DtypeForbidden { name: String },
     /// The embedded calibration table is malformed or does not fit.
     Calib(String),
 }
@@ -89,7 +106,7 @@ impl fmt::Display for ArtifactError {
             ArtifactError::FutureVersion { found } => write!(
                 f,
                 "unsupported artifact version {found} (this build reads \
-                 v{ARTIFACT_VERSION}; re-export the model)"
+                 v{ARTIFACT_MIN_VERSION}..=v{ARTIFACT_VERSION}; re-export the model)"
             ),
             ArtifactError::Truncated { detail } => write!(f, "truncated artifact: {detail}"),
             ArtifactError::TrailingBytes { extra } => {
@@ -117,6 +134,11 @@ impl fmt::Display for ArtifactError {
             ArtifactError::TensorCorrupt { name, detail } => {
                 write!(f, "tensor {name:?} corrupt: {detail}")
             }
+            ArtifactError::DtypeForbidden { name } => write!(
+                f,
+                "tensor {name:?} is precision-sensitive and cannot be quantized \
+                 (i8 dtype record refused)"
+            ),
             ArtifactError::Calib(msg) => write!(f, "embedded calibration table: {msg}"),
         }
     }
@@ -175,7 +197,8 @@ impl VimArtifact {
 #[derive(Debug, Clone)]
 pub struct ArtifactSummary {
     pub manifest: ArtifactManifest,
-    /// Tensor blob size in bytes (4 x `params`).
+    /// Stored tensor blob size in bytes — dtype-aware; 4 x `params` only
+    /// when every tensor is f32.
     pub weight_bytes: u64,
     /// Total parameter count across all tensors.
     pub params: u64,
@@ -185,7 +208,7 @@ pub struct ArtifactSummary {
 }
 
 /// The artifact load/save/inspect surface — an mmap-free sequential
-/// reader/writer over the v1 layout.
+/// reader/writer over the v2 layout (v1 files still decode).
 pub struct ArtifactStore;
 
 /// Sequential cursor over an in-memory artifact image.
@@ -238,10 +261,7 @@ impl ArtifactStore {
                 .map_err(|e| ArtifactError::Calib(e.to_string()))?;
         }
         let manifest_json = artifact.manifest.to_json().dump().into_bytes();
-        let total = artifact.manifest.total_elements()?;
-        let blob_len = total.checked_mul(4).ok_or_else(|| {
-            ArtifactError::Manifest(format!("tensor blob of {total} elements overflows u64"))
-        })?;
+        let blob_len = artifact.manifest.blob_bytes()?;
         let calib_json = match &artifact.calib {
             Some(table) => table.to_json().dump().into_bytes(),
             None => Vec::new(),
@@ -253,10 +273,32 @@ impl ArtifactStore {
         buf.extend_from_slice(&(manifest_json.len() as u32).to_le_bytes());
         buf.extend_from_slice(&manifest_json);
         buf.extend_from_slice(&blob_len.to_le_bytes());
-        for (_, data) in artifact.weights.named_tensors() {
-            for &v in data {
-                buf.extend_from_slice(&v.to_le_bytes());
+        let blob_start = buf.len();
+        for (_, view) in artifact.weights.named_tensors() {
+            match view {
+                TensorView::F32(data) => {
+                    for &v in data {
+                        buf.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                TensorView::I8 { q, scales } => {
+                    for &c in q {
+                        buf.push(c as u8);
+                    }
+                    for &s in scales {
+                        buf.extend_from_slice(&s.to_le_bytes());
+                    }
+                }
             }
+        }
+        let written = (buf.len() - blob_start) as u64;
+        if written != blob_len {
+            return Err(ArtifactError::ConfigMismatch {
+                detail: format!(
+                    "weights serialize to {written} blob bytes but the manifest \
+                     accounts for {blob_len} (dtype drift after from_weights?)"
+                ),
+            });
         }
         buf.extend_from_slice(&(calib_json.len() as u32).to_le_bytes());
         buf.extend_from_slice(&calib_json);
@@ -297,7 +339,7 @@ impl ArtifactStore {
             });
         }
         let version = r.u32("version")?;
-        if version != ARTIFACT_VERSION {
+        if !(ARTIFACT_MIN_VERSION..=ARTIFACT_VERSION).contains(&version) {
             return Err(ArtifactError::FutureVersion { found: version });
         }
         let manifest_len = r.u32("manifest length")? as usize;
@@ -320,36 +362,94 @@ impl ArtifactStore {
 
         let manifest = parse_manifest(manifest_bytes, version)?;
         let cfg = manifest.forward_config()?;
-        let total = manifest.total_elements()?;
-        if blob_len != total.checked_mul(4).unwrap_or(u64::MAX) {
+        let want_blob = manifest.blob_bytes()?;
+        if blob_len != want_blob {
             return Err(ArtifactError::Truncated {
                 detail: format!(
-                    "tensor blob is {blob_len} bytes; manifest declares {total} f32 \
-                     elements ({} bytes)",
-                    total.saturating_mul(4)
+                    "tensor blob is {blob_len} bytes; manifest dtype records \
+                     account for {want_blob}"
                 ),
             });
         }
 
         let mut weights = VimWeights::zeros(&cfg);
+        let mut pending: Vec<(String, QuantTensor)> = Vec::new();
         let mut off = 0usize;
-        for (meta, (_, dst)) in manifest.tensors.iter().zip(weights.named_tensors_mut()) {
-            let span = &blob[off..off + 4 * dst.len()];
-            for (chunk, slot) in span.chunks_exact(4).zip(dst.iter_mut()) {
-                *slot = f32::from_le_bytes(chunk.try_into().expect("4 bytes"));
-            }
-            off += 4 * dst.len();
-            let absmax = tensor_absmax(dst);
-            if absmax.to_bits() != meta.absmax.to_bits() {
-                return Err(ArtifactError::TensorCorrupt {
-                    name: meta.name.clone(),
-                    detail: format!(
-                        "data |max| {absmax:e} disagrees with the manifest record {:e}",
-                        meta.absmax
-                    ),
-                });
+        for (meta, (_, slot)) in manifest.tensors.iter().zip(weights.named_slots_mut()) {
+            let elems = match &slot {
+                TensorSlotMut::Plain(v) => v.len(),
+                TensorSlotMut::Gemm(w) => w.len(),
+            };
+            match meta.dtype {
+                TensorDtype::F32 => {
+                    let span = &blob[off..off + 4 * elems];
+                    off += 4 * elems;
+                    let dst: &mut [f32] = match slot {
+                        TensorSlotMut::Plain(v) => v,
+                        TensorSlotMut::Gemm(w) => {
+                            w.as_f32_mut().expect("zeros() slots start dense")
+                        }
+                    };
+                    for (chunk, s) in span.chunks_exact(4).zip(dst.iter_mut()) {
+                        *s = f32::from_le_bytes(chunk.try_into().expect("4 bytes"));
+                    }
+                    let absmax = tensor_absmax(dst);
+                    if absmax.to_bits() != meta.absmax.to_bits() {
+                        return Err(ArtifactError::TensorCorrupt {
+                            name: meta.name.clone(),
+                            detail: format!(
+                                "data |max| {absmax:e} disagrees with the manifest \
+                                 record {:e}",
+                                meta.absmax
+                            ),
+                        });
+                    }
+                }
+                TensorDtype::I8 => {
+                    let cols = meta.scale_count();
+                    let codes = &blob[off..off + elems];
+                    off += elems;
+                    let q: Vec<i8> = codes.iter().map(|&b| b as i8).collect();
+                    let sspan = &blob[off..off + 4 * cols];
+                    off += 4 * cols;
+                    let scales: Vec<f32> = sspan
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                        .collect();
+                    for (i, s) in scales.iter().enumerate() {
+                        if !s.is_finite() || *s <= 0.0 {
+                            return Err(ArtifactError::TensorCorrupt {
+                                name: meta.name.clone(),
+                                detail: format!(
+                                    "quantization scale #{i} is {s:e}; scales must \
+                                     be finite and positive"
+                                ),
+                            });
+                        }
+                    }
+                    let absmax = quant_absmax(&q, &scales, cols);
+                    if absmax.to_bits() != meta.absmax.to_bits() {
+                        return Err(ArtifactError::TensorCorrupt {
+                            name: meta.name.clone(),
+                            detail: format!(
+                                "dequantized |max| {absmax:e} disagrees with the \
+                                 manifest record {:e}",
+                                meta.absmax
+                            ),
+                        });
+                    }
+                    let qt = QuantTensor { rows: elems / cols, cols, q, scales };
+                    match slot {
+                        TensorSlotMut::Gemm(w) => *w = WeightMat::I8(qt),
+                        TensorSlotMut::Plain(v) => {
+                            *v = qt.dequant();
+                            pending.push((meta.name.clone(), qt));
+                        }
+                    }
+                }
             }
         }
+        weights.store_q.extend(pending);
 
         let calib = if calib_bytes.is_empty() {
             None
@@ -384,7 +484,7 @@ impl ArtifactStore {
             });
         }
         let version = u32::from_le_bytes(head[8..12].try_into().expect("4 bytes"));
-        if version != ARTIFACT_VERSION {
+        if !(ARTIFACT_MIN_VERSION..=ARTIFACT_VERSION).contains(&version) {
             return Err(ArtifactError::FutureVersion { found: version });
         }
         let manifest_len = u32::from_le_bytes(head[12..16].try_into().expect("4 bytes")) as u64;
@@ -436,10 +536,12 @@ impl ArtifactStore {
         let manifest = parse_manifest(&manifest_bytes, version)?;
         let cfg = manifest.forward_config()?;
         let params = manifest.total_elements()?;
-        if blob_len != params.checked_mul(4).unwrap_or(u64::MAX) {
+        let want_blob = manifest.blob_bytes()?;
+        if blob_len != want_blob {
             return Err(ArtifactError::Truncated {
                 detail: format!(
-                    "tensor blob is {blob_len} bytes; manifest declares {params} f32 elements"
+                    "tensor blob is {blob_len} bytes; manifest dtype records \
+                     account for {want_blob}"
                 ),
             });
         }
@@ -597,11 +699,51 @@ mod tests {
             Err(ArtifactError::Checksum { .. })
         ));
         // Trailing garbage after the checksum is refused.
-        let mut trailing = good;
+        let mut trailing = good.clone();
         trailing.push(0);
         assert!(matches!(
             ArtifactStore::decode(&trailing),
             Err(ArtifactError::TrailingBytes { extra: 1 })
         ));
+        // Version 0 predates the format and is rejected by the same gate.
+        let mut ancient = good;
+        ancient[8..12].copy_from_slice(&0u32.to_le_bytes());
+        let n = ancient.len();
+        let c = fnv1a64(&ancient[..n - 8]);
+        ancient[n - 8..].copy_from_slice(&c.to_le_bytes());
+        assert!(matches!(
+            ArtifactStore::decode(&ancient),
+            Err(ArtifactError::FutureVersion { found: 0 })
+        ));
+    }
+
+    #[test]
+    fn quantized_round_trip_is_bitwise_and_smaller() {
+        let cfg = crate::vision::ForwardConfig::micro_s();
+        let mut weights = VimWeights::init(&cfg, 9);
+        let plan = crate::quant::WeightQuantPlan::all_at_absmax(
+            &weights.weight_quant_candidates(),
+        );
+        weights.apply_weight_quant(&plan).unwrap();
+        let art = VimArtifact::from_weights(
+            weights.clone(),
+            None,
+            Provenance { tool: "unit".into(), detail: "quantized round trip".into() },
+        )
+        .unwrap();
+        let bytes = ArtifactStore::encode(&art).unwrap();
+        let back = ArtifactStore::decode(&bytes).unwrap();
+        assert_eq!(back.manifest, art.manifest);
+        for ((name, a), (_, b)) in
+            weights.named_tensors().iter().zip(back.weights.named_tensors())
+        {
+            assert_eq!(*a, b, "{name}");
+        }
+        // Storage-tier sidecar survives the trip (Plain-slot i8 records
+        // land back in store_q, not just the dense overlay).
+        assert_eq!(back.weights.store_q.len(), weights.store_q.len());
+        // The quantized blob is materially smaller than the f32 blob.
+        let (f32_eq, stored) = back.weights.weight_bytes();
+        assert!(stored * 10 < f32_eq * 4, "stored {stored} vs f32 {f32_eq}");
     }
 }

@@ -14,9 +14,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::config::VimModel;
+use crate::quant::{quant_absmax, TensorDtype};
 use crate::util::json::f32_bits;
 use crate::util::Json;
-use crate::vision::{vim_tensor_schema, ForwardConfig, VimWeights};
+use crate::vision::{quantizable_tensor, vim_tensor_schema, ForwardConfig, TensorView, VimWeights};
 
 use super::artifact::{ArtifactError, ARTIFACT_VERSION};
 
@@ -110,14 +111,41 @@ pub struct Provenance {
     pub detail: String,
 }
 
-/// One tensor's manifest record: dotted-path name, row-major shape, and
-/// the bit-exact |max| of its data (a per-tensor integrity check the
-/// loader recomputes, stored via the shared IEEE-754-bits convention).
+/// One tensor's manifest record: dotted-path name, row-major shape,
+/// storage dtype (v2; v1 manifests carry no dtype field and parse as
+/// f32), and the bit-exact |max| of its *stored representation* — dense
+/// data for f32 tensors, the dequantized codes for INT8 tensors — a
+/// per-tensor integrity check the loader recomputes, stored via the
+/// shared IEEE-754-bits convention.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorMeta {
     pub name: String,
     pub shape: Vec<usize>,
+    pub dtype: TensorDtype,
     pub absmax: f32,
+}
+
+impl TensorMeta {
+    /// Scale count of an INT8 record: one per column (per output channel
+    /// for the 2-D GEMM weights), one total for 1-D tensors. Derived
+    /// from the shape, never stored.
+    pub fn scale_count(&self) -> usize {
+        if self.shape.len() > 1 {
+            self.shape[1]
+        } else {
+            1
+        }
+    }
+
+    /// Bytes this tensor occupies in the artifact blob: 4 per element
+    /// for f32; one code byte per element plus 4 per scale for INT8.
+    pub fn stored_bytes(&self) -> u64 {
+        let elems: u64 = self.shape.iter().map(|&d| d as u64).product();
+        match self.dtype {
+            TensorDtype::F32 => 4 * elems,
+            TensorDtype::I8 => elems + 4 * self.scale_count() as u64,
+        }
+    }
 }
 
 /// Bit-exact |max| over a tensor — the integrity statistic recorded per
@@ -164,17 +192,24 @@ pub struct ArtifactManifest {
 
 impl ArtifactManifest {
     /// Build the manifest describing `weights` exactly (schema order,
-    /// shapes, per-tensor absmax).
+    /// shapes, per-tensor dtype and absmax). INT8 tensors record the
+    /// absmax of their *dequantized* codes — the decoder recomputes it
+    /// from the identical (codes, scales) it just read, so the integrity
+    /// check round-trips bitwise.
     pub fn for_weights(weights: &VimWeights, provenance: Provenance) -> Self {
         let cfg = &weights.cfg;
         let m = &cfg.model;
         let tensors = vim_tensor_schema(cfg)
             .into_iter()
             .zip(weights.named_tensors())
-            .map(|((name, shape), (_, data))| TensorMeta {
+            .map(|((name, shape), (_, view))| TensorMeta {
                 name,
                 shape,
-                absmax: tensor_absmax(data),
+                dtype: view.dtype(),
+                absmax: match view {
+                    TensorView::F32(data) => tensor_absmax(data),
+                    TensorView::I8 { q, scales } => quant_absmax(q, scales, scales.len()),
+                },
             })
             .collect();
         ArtifactManifest {
@@ -268,8 +303,36 @@ impl ArtifactManifest {
                     detail: format!("non-finite absmax record {}", meta.absmax),
                 });
             }
+            // Format-level hybrid-precision policy: sensitive tensors may
+            // never ship as INT8, no matter what wrote the file.
+            if meta.dtype == TensorDtype::I8 && !quantizable_tensor(&meta.name) {
+                return Err(ArtifactError::DtypeForbidden { name: meta.name.clone() });
+            }
         }
         Ok(cfg)
+    }
+
+    /// Total tensor-blob size in bytes across all records (checked
+    /// arithmetic) — what the decoder requires the file's blob section to
+    /// measure exactly.
+    pub fn blob_bytes(&self) -> std::result::Result<u64, ArtifactError> {
+        let overflow = |name: &str| {
+            ArtifactError::Manifest(format!("tensor {name:?}: blob size overflows"))
+        };
+        let mut total = 0u64;
+        for t in &self.tensors {
+            let mut elems = 1u64;
+            for &d in &t.shape {
+                elems = elems.checked_mul(d as u64).ok_or_else(|| overflow(&t.name))?;
+            }
+            let bytes = match t.dtype {
+                TensorDtype::F32 => elems.checked_mul(4),
+                TensorDtype::I8 => elems.checked_add(4 * t.scale_count() as u64),
+            }
+            .ok_or_else(|| overflow(&t.name))?;
+            total = total.checked_add(bytes).ok_or_else(|| overflow(&t.name))?;
+        }
+        Ok(total)
     }
 
     /// Total element count across all tensors (checked arithmetic).
@@ -299,6 +362,7 @@ impl ArtifactManifest {
                         "shape",
                         Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
                     ),
+                    ("dtype", Json::Str(t.dtype.name().to_string())),
                     ("absmax_bits", f32_bits(t.absmax)),
                 ])
             })
@@ -357,11 +421,23 @@ impl ArtifactManifest {
         expect_keys(p, &["tool", "detail"])?;
         let mut tensors = Vec::new();
         for (i, t) in j.get("tensors")?.arr()?.iter().enumerate() {
-            expect_keys(t, &["name", "shape", "absmax_bits"])
-                .with_context(|| format!("tensor #{i}"))?;
+            // v1 records have no dtype field (everything was f32); v2
+            // records require one. Neither accepts the other's key set.
+            let dtype = if version >= 2 {
+                expect_keys(t, &["name", "shape", "dtype", "absmax_bits"])
+                    .with_context(|| format!("tensor #{i}"))?;
+                let s = t.get("dtype")?.str()?;
+                TensorDtype::parse(s)
+                    .ok_or_else(|| anyhow::anyhow!("tensor #{i}: unknown dtype {s:?}"))?
+            } else {
+                expect_keys(t, &["name", "shape", "absmax_bits"])
+                    .with_context(|| format!("tensor #{i}"))?;
+                TensorDtype::F32
+            };
             tensors.push(TensorMeta {
                 name: t.get("name")?.str()?.to_string(),
                 shape: t.get("shape")?.usize_vec()?,
+                dtype,
                 absmax: t.get("absmax_bits")?.f32_from_bits()?,
             });
         }
@@ -517,8 +593,85 @@ mod tests {
     fn for_weights_with_nan_is_refused_at_validation() {
         let cfg = ForwardConfig::micro_s();
         let mut weights = VimWeights::init(&cfg, 1);
-        weights.patch_w[3] = f32::NAN;
+        weights.patch_w.as_f32_mut().expect("fresh init is dense")[3] = f32::NAN;
         let m = ArtifactManifest::for_weights(&weights, unit_provenance());
         assert!(matches!(m.forward_config(), Err(ArtifactError::TensorCorrupt { .. })));
+    }
+
+    #[test]
+    fn v2_manifest_records_dtypes_and_round_trips() {
+        let cfg = ForwardConfig::micro_s();
+        let mut weights = VimWeights::init(&cfg, 3);
+        let plan =
+            crate::quant::WeightQuantPlan::all_at_absmax(&weights.weight_quant_candidates());
+        weights.apply_weight_quant(&plan).unwrap();
+        let m = ArtifactManifest::for_weights(&weights, unit_provenance());
+        assert_eq!(m.version, ARTIFACT_VERSION);
+        assert!(m.tensors.iter().any(|t| t.dtype == TensorDtype::I8));
+        for t in &m.tensors {
+            if !quantizable_tensor(&t.name) {
+                assert_eq!(t.dtype, TensorDtype::F32, "{}: denylist stays dense", t.name);
+            }
+            assert!(t.absmax.is_finite(), "{}", t.name);
+        }
+        let parsed =
+            ArtifactManifest::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(parsed, m);
+        assert_eq!(parsed.forward_config().unwrap(), cfg);
+        // Blob accounting matches the per-view stored bytes exactly.
+        let stored: u64 =
+            weights.named_tensors().iter().map(|(_, v)| v.stored_bytes() as u64).sum();
+        assert_eq!(m.blob_bytes().unwrap(), stored);
+        assert!(m.blob_bytes().unwrap() < m.total_elements().unwrap() * 4);
+    }
+
+    #[test]
+    fn i8_dtype_on_denylisted_tensor_is_refused() {
+        let cfg = ForwardConfig::micro_s();
+        let weights = VimWeights::init(&cfg, 3);
+        let mut m = ArtifactManifest::for_weights(&weights, unit_provenance());
+        let idx = m
+            .tensors
+            .iter()
+            .position(|t| t.name.ends_with("dt_w"))
+            .expect("schema has a dt projection");
+        m.tensors[idx].dtype = TensorDtype::I8;
+        assert!(matches!(
+            m.forward_config(),
+            Err(ArtifactError::DtypeForbidden { ref name }) if name.ends_with("dt_w")
+        ));
+    }
+
+    #[test]
+    fn tensor_dtype_field_is_versioned() {
+        let cfg = ForwardConfig::micro_s();
+        let weights = VimWeights::init(&cfg, 3);
+        let m = ArtifactManifest::for_weights(&weights, unit_provenance());
+        // Rewrite the document to a given version, optionally stripping
+        // the (v2-only) per-tensor dtype fields.
+        let rewrite = |version: f64, drop_dtype: bool| -> Json {
+            let mut o = match m.to_json() {
+                Json::Obj(o) => o,
+                _ => unreachable!(),
+            };
+            o.insert("version".to_string(), Json::Num(version));
+            if drop_dtype {
+                if let Some(Json::Arr(ts)) = o.get_mut("tensors") {
+                    for t in ts.iter_mut() {
+                        if let Json::Obj(to) = t {
+                            to.remove("dtype");
+                        }
+                    }
+                }
+            }
+            Json::Obj(o)
+        };
+        // A v1 document has no dtype fields and parses as all-f32.
+        let parsed_v1 = ArtifactManifest::from_json(&rewrite(1.0, true)).unwrap();
+        assert_eq!(parsed_v1.version, 1);
+        assert!(parsed_v1.tensors.iter().all(|t| t.dtype == TensorDtype::F32));
+        // v1 records must NOT carry dtype; v2 records must.
+        assert!(ArtifactManifest::from_json(&rewrite(1.0, false)).is_err());
+        assert!(ArtifactManifest::from_json(&rewrite(2.0, true)).is_err());
     }
 }

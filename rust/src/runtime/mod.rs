@@ -20,9 +20,10 @@
 //! each with its own factory, calibration table, and SLO knobs.
 //!
 //! Weights flow in through a [`ModelSource`]: either a versioned binary
-//! `VimArtifact` v1 file ([`artifact`] — weights + geometry + provenance
-//! + optional embedded calibration, loaded and fully verified by
-//! [`ArtifactStore`]) or hermetic seeded [`ModelSource::RandomInit`].
+//! `VimArtifact` file ([`artifact`] — weights + geometry + provenance
+//! + optional embedded calibration, with per-tensor dtypes since v2,
+//! loaded and fully verified by [`ArtifactStore`]) or hermetic seeded
+//! [`ModelSource::RandomInit`].
 //! A source resolves once per process ([`ModelSource::resolve`]); pool
 //! workers share the resulting `Arc<VimWeights>` instead of re-reading
 //! the file per worker.
@@ -40,14 +41,14 @@ pub mod pjrt;
 
 pub use artifact::{
     fnv1a64, ArtifactError, ArtifactStore, ArtifactSummary, VimArtifact, ARTIFACT_MAGIC,
-    ARTIFACT_VERSION,
+    ARTIFACT_MIN_VERSION, ARTIFACT_VERSION,
 };
 pub use fault::{FaultPlan, FaultyBackend, ModelFaults, FAULT_PLAN_VERSION};
 pub use manifest::{
     tensor_absmax, ArtifactManifest, Manifest, ModelMeta, Provenance, ScanMeta, TensorMeta,
     ARTIFACT_FORMAT,
 };
-pub use native::NativeBackend;
+pub use native::{NativeBackend, WeightQuantSpec};
 #[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, Runtime};
 
@@ -123,6 +124,15 @@ pub trait InferenceBackend {
     fn infer_batch(&mut self, images: &[&Tensor]) -> Vec<Result<Vec<f32>>> {
         images.iter().map(|img| self.infer(img)).collect()
     }
+
+    /// Weight storage footprint as `(f32_equivalent_bytes, stored_bytes)`
+    /// — equal for dense f32 weights, `stored < f32_equivalent` once INT8
+    /// weight quantization is in play (`models --engine` reports both per
+    /// variant). `None` when the backend cannot see its weight storage
+    /// (e.g. an out-of-process executor).
+    fn weight_bytes(&self) -> Option<(usize, usize)> {
+        None
+    }
 }
 
 /// Constructs one backend instance per pool worker (argument: worker
@@ -135,7 +145,7 @@ pub type BackendFactory = Arc<dyn Fn(usize) -> Result<Box<dyn InferenceBackend>>
 /// abstraction every backend construction path goes through.
 #[derive(Debug, Clone)]
 pub enum ModelSource {
-    /// A versioned `VimArtifact` v1 file ([`ArtifactStore`]): weights,
+    /// A versioned `VimArtifact` file ([`ArtifactStore`]): weights,
     /// geometry, provenance and (optionally) the static scan calibration
     /// in one file. Loading validates everything; corrupt/foreign/
     /// mismatched artifacts fail typed ([`ArtifactError`]), never fall
@@ -210,11 +220,24 @@ pub struct ModelSpec {
     /// first batch completes (microseconds; 0 = start unknown, admission
     /// projects zero wait until a real measurement lands).
     pub service_hint_us: u64,
+    /// Per-model circuit-breaker trip threshold (consecutive worker-level
+    /// failures); `None` = the engine-wide default.
+    pub breaker_threshold: Option<u32>,
+    /// Per-model breaker cooldown before half-open probing (milliseconds);
+    /// `None` = the engine-wide default.
+    pub breaker_cooldown_ms: Option<u64>,
 }
 
 impl ModelSpec {
     pub fn new(name: impl Into<String>, factory: BackendFactory) -> Self {
-        ModelSpec { name: name.into(), factory, slo_us: None, service_hint_us: 0 }
+        ModelSpec {
+            name: name.into(),
+            factory,
+            slo_us: None,
+            service_hint_us: 0,
+            breaker_threshold: None,
+            breaker_cooldown_ms: None,
+        }
     }
 
     pub fn slo_us(mut self, slo_us: u64) -> Self {
@@ -224,6 +247,16 @@ impl ModelSpec {
 
     pub fn service_hint_us(mut self, hint_us: u64) -> Self {
         self.service_hint_us = hint_us;
+        self
+    }
+
+    pub fn breaker_threshold(mut self, threshold: u32) -> Self {
+        self.breaker_threshold = Some(threshold);
+        self
+    }
+
+    pub fn breaker_cooldown_ms(mut self, cooldown_ms: u64) -> Self {
+        self.breaker_cooldown_ms = Some(cooldown_ms);
         self
     }
 }

@@ -19,11 +19,29 @@ use std::sync::Arc;
 use anyhow::{bail, Context as _, Result};
 
 use crate::config::MambaXConfig;
-use crate::quant::CalibTable;
+use crate::quant::{CalibTable, WeightQuantOpts};
 use crate::sim::sfu::SfuTables;
 use crate::vision::{ForwardConfig, ScanExec, VimWeights};
 
 use super::{BackendFactory, InferenceBackend, ModelSource, Tensor};
+
+/// Per-variant weight-quantization request (the engine config's
+/// `"quantize"` spec): how many synthetic calibration images the
+/// per-site precision search evaluates over, and the seed of that image
+/// stream. Percentile candidates and error budgets come from
+/// [`WeightQuantOpts`] defaults, so the search is fully determined by
+/// (weights, samples, seed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WeightQuantSpec {
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl WeightQuantSpec {
+    fn opts(&self) -> WeightQuantOpts {
+        WeightQuantOpts { samples: self.samples, seed: self.seed, ..WeightQuantOpts::default() }
+    }
+}
 
 /// Native executor of one Vim model instance. Weights are shared
 /// (`Arc`): every backend built from the same resolved [`ModelSource`]
@@ -83,9 +101,16 @@ impl NativeBackend {
     /// dynamic scales when the source carries none. The override is
     /// validated against the resolved model eagerly, so a misfit fails at
     /// build time, not on the first worker thread.
+    ///
+    /// `quantize` runs the hybrid weight-quantization search
+    /// ([`Self::quantize_weights`]) on the resolved weights before any
+    /// worker is built — all workers then share one quantized copy.
+    /// `None` serves the source's weights as stored (which may already
+    /// be quantized, if the artifact was exported with `--quantize`).
     pub fn factory(
         source: ModelSource,
         calib_override: Option<Arc<CalibTable>>,
+        quantize: Option<WeightQuantSpec>,
     ) -> Result<BackendFactory> {
         let resolved = source.resolve()?;
         let calib = match calib_override {
@@ -98,7 +123,13 @@ impl NativeBackend {
             }
             None => resolved.calib.clone(),
         };
-        let weights = resolved.weights;
+        let weights = match quantize {
+            Some(spec) => Arc::new(
+                Self::quantize_weights(&resolved.weights, &spec)
+                    .with_context(|| format!("weight quantization for {}", resolved.origin))?,
+            ),
+            None => resolved.weights,
+        };
         Ok(Arc::new(move |_worker| {
             let backend = NativeBackend::from_weights(Arc::clone(&weights));
             let backend = match &calib {
@@ -107,6 +138,37 @@ impl NativeBackend {
             };
             Ok(Box::new(backend) as Box<dyn InferenceBackend>)
         }))
+    }
+
+    /// Hybrid weight quantization, end to end: run the per-site
+    /// precision search over a deterministic synthetic calibration
+    /// stream ([`synthetic_image`] under `spec.seed`) and apply the
+    /// winning plan. Sensitive tensors (norms, `dt_proj`) stay f32 by
+    /// construction; already-quantized weights are refused rather than
+    /// double-quantized.
+    pub fn quantize_weights(weights: &VimWeights, spec: &WeightQuantSpec) -> Result<VimWeights> {
+        let (f32_eq, stored) = weights.weight_bytes();
+        if stored != f32_eq {
+            bail!(
+                "weights are already quantized ({stored} stored of {f32_eq} f32-equivalent \
+                 bytes); refusing to quantize twice"
+            );
+        }
+        let opts = spec.opts();
+        opts.validate()?;
+        let len = weights.cfg.input_len();
+        let images: Vec<Vec<f32>> =
+            (0..opts.samples as u64).map(|id| synthetic_image(opts.seed, id, len)).collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let plan = weights.search_weight_quant(
+            &SfuTables::fitted(),
+            &MambaXConfig::default(),
+            &refs,
+            &opts,
+        )?;
+        let mut out = weights.clone();
+        out.apply_weight_quant(&plan)?;
+        Ok(out)
     }
 
     pub fn config(&self) -> &ForwardConfig {
@@ -170,6 +232,10 @@ impl NativeBackend {
 impl InferenceBackend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn weight_bytes(&self) -> Option<(usize, usize)> {
+        Some(self.weights.weight_bytes())
     }
 
     fn infer(&mut self, image: &Tensor) -> Result<Vec<f32>> {
@@ -275,7 +341,7 @@ mod tests {
     fn factory_built_workers_are_interchangeable() {
         let cfg = ForwardConfig::micro();
         let source = ModelSource::RandomInit { config: cfg.clone(), seed: 11 };
-        let factory = NativeBackend::factory(source, None).unwrap();
+        let factory = NativeBackend::factory(source, None, None).unwrap();
         let img = Tensor::new(cfg.input_shape(), synthetic_image(2, 9, cfg.input_len())).unwrap();
         let mut w0 = factory(0).unwrap();
         let mut w1 = factory(1).unwrap();
@@ -304,7 +370,39 @@ mod tests {
             .calibrate(&SfuTables::fitted(), &MambaXConfig::default(), &[img.as_slice()], 1.0)
             .unwrap();
         let source = ModelSource::RandomInit { config: ForwardConfig::micro(), seed: 1 };
-        assert!(NativeBackend::factory(source, Some(Arc::new(table))).is_err());
+        assert!(NativeBackend::factory(source, Some(Arc::new(table)), None).is_err());
+    }
+
+    #[test]
+    fn quantized_factory_workers_are_interchangeable_and_deterministic() {
+        let cfg = ForwardConfig::micro();
+        let spec = WeightQuantSpec { samples: 3, seed: 7 };
+        let source = ModelSource::RandomInit { config: cfg.clone(), seed: 11 };
+        let f0 = NativeBackend::factory(source.clone(), None, Some(spec)).unwrap();
+        let f1 = NativeBackend::factory(source, None, Some(spec)).unwrap();
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(2, 9, cfg.input_len())).unwrap();
+        let a = f0(0).unwrap().infer(&img).unwrap();
+        let b = f0(1).unwrap().infer(&img).unwrap();
+        let c = f1(0).unwrap().infer(&img).unwrap();
+        assert_eq!(a, b, "workers of one factory share the quantized weights");
+        assert_eq!(a, c, "same (source, spec) searches to the same plan");
+    }
+
+    #[test]
+    fn quantize_weights_shrinks_storage_and_refuses_double_quantization() {
+        let cfg = ForwardConfig::micro();
+        let weights = VimWeights::init(&cfg, 11);
+        let spec = WeightQuantSpec { samples: 2, seed: 3 };
+        let q = NativeBackend::quantize_weights(&weights, &spec).unwrap();
+        let (f32_eq, stored) = q.weight_bytes();
+        assert!(stored < f32_eq, "search accepted at least one site");
+        let err = NativeBackend::quantize_weights(&q, &spec).unwrap_err();
+        assert!(err.to_string().contains("already quantized"), "{err}");
+        assert!(NativeBackend::quantize_weights(
+            &weights,
+            &WeightQuantSpec { samples: 0, seed: 3 }
+        )
+        .is_err());
     }
 
     #[test]

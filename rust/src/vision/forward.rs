@@ -43,19 +43,22 @@
 //! produce bit-identical logits, which is the property the serving tests
 //! lean on.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{MambaXConfig, VimModel};
 use crate::quant::{
-    channel_abs_max, dequantize_states, derive_scan_scales, quantize_scan_inputs,
-    quantize_scan_inputs_static, spe_scan_int_batch_fused, CalibBuilder, CalibTable,
+    channel_abs_max, dequantize_states, derive_scan_scales, plan_weight_precision,
+    quantize_scan_inputs, quantize_scan_inputs_static, quantize_tensor,
+    spe_scan_int_batch_fused, CalibBuilder, CalibTable, QuantTensor, TensorDtype, WeightQuantOpts,
+    WeightQuantPlan,
 };
 use crate::sim::sfu::SfuTables;
 use crate::sim::{ssa_scan_chunked_ref, ssa_scan_functional};
 use crate::util::Pcg;
 
-use super::gemm::{matmul, matmul_ref};
+use super::gemm::{matmul, matmul_q8, matmul_ref};
 use super::ops::SfuFunc;
+use super::vim::{quantizable_tensor, vim_tensor_schema, TensorSlotMut};
 
 /// How the quantized selective scan of a forward pass executes.
 ///
@@ -124,6 +127,82 @@ impl ForwardConfig {
     }
 }
 
+/// Storage of one GEMM weight matrix: dense f32 (the default, and the
+/// only option in v1 artifacts) or per-output-channel INT8 codes +
+/// scales served straight through [`matmul_q8`] without materializing a
+/// dense copy. Bit-exactness contract: for any activations,
+/// `matmul_w(x, w, ..) == matmul(x, &w.to_f32(), ..)` — quantization
+/// changes the *values* once at [`VimWeights::apply_weight_quant`] time,
+/// never the arithmetic serving them.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WeightMat {
+    F32(Vec<f32>),
+    I8(QuantTensor),
+}
+
+impl WeightMat {
+    pub fn dtype(&self) -> TensorDtype {
+        match self {
+            WeightMat::F32(_) => TensorDtype::F32,
+            WeightMat::I8(_) => TensorDtype::I8,
+        }
+    }
+
+    /// Element count (codes and dense elements count the same).
+    pub fn len(&self) -> usize {
+        match self {
+            WeightMat::F32(v) => v.len(),
+            WeightMat::I8(qt) => qt.q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dense f32 view if (and only if) this weight is stored dense.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            WeightMat::F32(v) => Some(v),
+            WeightMat::I8(_) => None,
+        }
+    }
+
+    /// Mutable dense storage if stored dense (test/surgery hook).
+    pub fn as_f32_mut(&mut self) -> Option<&mut Vec<f32>> {
+        match self {
+            WeightMat::F32(v) => Some(v),
+            WeightMat::I8(_) => None,
+        }
+    }
+
+    /// Dense f32 copy: a clone when stored dense, the dequantization
+    /// when stored INT8 (the oracle-side representation).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            WeightMat::F32(v) => v.clone(),
+            WeightMat::I8(qt) => qt.dequant(),
+        }
+    }
+}
+
+/// GEMM dispatch over [`WeightMat`]: dense weights take the f32 tiled
+/// kernel, INT8 weights the dequantize-in-tile kernel — bitwise the same
+/// result as densifying first (see [`matmul_q8`]).
+fn matmul_w(
+    x: &[f32],
+    w: &WeightMat,
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    match w {
+        WeightMat::F32(v) => matmul(x, v, bias, m, k, n),
+        WeightMat::I8(qt) => matmul_q8(x, &qt.q, &qt.scales, bias, m, k, n),
+    }
+}
+
 /// One scan direction's parameters (row-major matrices).
 #[derive(Debug, Clone)]
 pub struct DirWeights {
@@ -131,8 +210,10 @@ pub struct DirWeights {
     pub conv_w: Vec<f32>,
     pub conv_b: Vec<f32>,
     /// x-proj E -> dt_rank + 2N, (E, R+2N).
-    pub xproj_w: Vec<f32>,
-    /// dt-proj dt_rank -> E, (R, E).
+    pub xproj_w: WeightMat,
+    /// dt-proj dt_rank -> E, (R, E). Always dense: `dt_proj` is on the
+    /// sensitive-tensor denylist ([`super::quantizable_tensor`]), so no
+    /// plan may quantize it.
     pub dt_w: Vec<f32>,
     pub dt_b: Vec<f32>,
     /// State matrix A = -exp(A_log), (E, N); negative real parts.
@@ -147,10 +228,10 @@ pub struct BlockWeights {
     pub norm_g: Vec<f32>,
     pub norm_b: Vec<f32>,
     /// in-proj D -> 2E (x and z), (D, 2E).
-    pub in_w: Vec<f32>,
+    pub in_w: WeightMat,
     pub in_b: Vec<f32>,
     /// out-proj E -> D, (E, D).
-    pub out_w: Vec<f32>,
+    pub out_w: WeightMat,
     pub out_b: Vec<f32>,
     pub fwd: DirWeights,
     pub bwd: DirWeights,
@@ -161,7 +242,7 @@ pub struct BlockWeights {
 pub struct VimWeights {
     pub cfg: ForwardConfig,
     /// Patch embedding, (patch_dim, D).
-    pub patch_w: Vec<f32>,
+    pub patch_w: WeightMat,
     pub patch_b: Vec<f32>,
     /// Class token, (D,).
     pub cls: Vec<f32>,
@@ -171,8 +252,15 @@ pub struct VimWeights {
     pub head_norm_g: Vec<f32>,
     pub head_norm_b: Vec<f32>,
     /// Classifier head, (D, n_classes).
-    pub head_w: Vec<f32>,
+    pub head_w: WeightMat,
     pub head_b: Vec<f32>,
+    /// Storage-tier quantization sidecar for tensors that are *not* GEMM
+    /// weights (embeddings, conv taps, A/D, biases): the named f32 field
+    /// holds exactly `store_q[name].dequant()` — the forward pass reads
+    /// the field, the artifact encoder persists the codes verbatim.
+    /// Invariant upheld by [`Self::apply_weight_quant`] and the artifact
+    /// decoder; empty means those tensors are stored dense.
+    pub store_q: std::collections::BTreeMap<String, QuantTensor>,
 }
 
 fn rand_mat(rng: &mut Pcg, fan_in: usize, len: usize) -> Vec<f32> {
@@ -198,7 +286,7 @@ fn init_dir(rng: &mut Pcg, m: &VimModel) -> DirWeights {
     DirWeights {
         conv_w: rand_mat(rng, k, e * k),
         conv_b: vec![0.0; e],
-        xproj_w: rand_mat(rng, e, e * (r + 2 * n)),
+        xproj_w: WeightMat::F32(rand_mat(rng, e, e * (r + 2 * n))),
         dt_w: rand_mat(rng, r, r * e),
         dt_b,
         a,
@@ -211,9 +299,9 @@ fn init_block(rng: &mut Pcg, m: &VimModel) -> BlockWeights {
     BlockWeights {
         norm_g: vec![1.0; d],
         norm_b: vec![0.0; d],
-        in_w: rand_mat(rng, d, d * 2 * e),
+        in_w: WeightMat::F32(rand_mat(rng, d, d * 2 * e)),
         in_b: vec![0.0; 2 * e],
-        out_w: rand_mat(rng, e, e * d),
+        out_w: WeightMat::F32(rand_mat(rng, e, e * d)),
         out_b: vec![0.0; d],
         fwd: init_dir(rng, m),
         bwd: init_dir(rng, m),
@@ -233,15 +321,16 @@ impl VimWeights {
         let blocks = (0..m.n_blocks).map(|_| init_block(&mut rng, m)).collect();
         VimWeights {
             cfg: cfg.clone(),
-            patch_w,
+            patch_w: WeightMat::F32(patch_w),
             patch_b: vec![0.0; d],
             cls,
             pos,
             blocks,
             head_norm_g: vec![1.0; d],
             head_norm_b: vec![0.0; d],
-            head_w: rand_mat(&mut rng, d, d * cfg.n_classes),
+            head_w: WeightMat::F32(rand_mat(&mut rng, d, d * cfg.n_classes)),
             head_b: vec![0.0; cfg.n_classes],
+            store_q: std::collections::BTreeMap::new(),
         }
     }
 
@@ -301,7 +390,7 @@ impl VimWeights {
         for img in images {
             self.patchify_into(img, &mut patches);
         }
-        let tok = matmul(&patches, &self.patch_w, Some(&self.patch_b), b * np, pd, d);
+        let tok = matmul_w(&patches, &self.patch_w, Some(&self.patch_b), b * np, pd, d);
         // Middle class token (paper Fig 3(a) step 2) + position embedding,
         // per item -> contiguous (B·L, D) activations.
         let mid = np / 2;
@@ -325,7 +414,7 @@ impl VimWeights {
             let base = (item * l + mid) * d;
             cls_rows.extend_from_slice(&x[base..base + d]);
         }
-        let logits = matmul(&cls_rows, &self.head_w, Some(&self.head_b), b, d, cfg.n_classes);
+        let logits = matmul_w(&cls_rows, &self.head_w, Some(&self.head_b), b, d, cfg.n_classes);
         logits.chunks_exact(cfg.n_classes).map(|row| row.to_vec()).collect()
     }
 
@@ -388,7 +477,7 @@ impl VimWeights {
         let rows = b * l;
         let mut h = x.to_vec();
         layer_norm(&mut h, d, &bw.norm_g, &bw.norm_b);
-        let xz = matmul(&h, &bw.in_w, Some(&bw.in_b), rows, d, 2 * e);
+        let xz = matmul_w(&h, &bw.in_w, Some(&bw.in_b), rows, d, 2 * e);
         let mut xi = vec![0f32; rows * e];
         let mut z = vec![0f32; rows * e];
         for row in 0..rows {
@@ -402,7 +491,7 @@ impl VimWeights {
             self.ssm_path(2 * bi + 1, &bw.bwd, &xi_rev, &z_rev, b, tables, scan_cfg, exec);
         let y_b = reversed_rows_batched(&y_b_rev, b, l, e);
         let sum: Vec<f32> = y_f.iter().zip(&y_b).map(|(a, b)| a + b).collect();
-        let y = matmul(&sum, &bw.out_w, Some(&bw.out_b), rows, e, d);
+        let y = matmul_w(&sum, &bw.out_w, Some(&bw.out_b), rows, e, d);
         for (xv, yv) in x.iter_mut().zip(&y) {
             *xv += yv;
         }
@@ -443,7 +532,7 @@ impl VimWeights {
         }
         // x-proj: split into (dt_raw, B, C) per step.
         let cols = r + 2 * n;
-        let xdbc = matmul(&u, &dw.xproj_w, None, rows, e, cols);
+        let xdbc = matmul_w(&u, &dw.xproj_w, None, rows, e, cols);
         let mut dt_raw = vec![0f32; rows * r];
         let mut b_mat = vec![0f32; rows * n];
         let mut c_mat = vec![0f32; rows * n];
@@ -531,6 +620,167 @@ impl VimWeights {
 }
 
 // ---------------------------------------------------------------------------
+// Hybrid weight quantization (paper H2): per-site precision selection and
+// in-place plan application. Two tiers — GEMM weights become
+// WeightMat::I8 and serve through the quantized kernel; every other
+// eligible tensor keeps its f32 field (overwritten with the exact
+// dequantization) and parks its codes in `store_q` so the artifact can
+// persist INT8 (storage tier). Sensitive tensors (dt_proj, norms) are
+// denylisted at the format level (`quantizable_tensor`).
+// ---------------------------------------------------------------------------
+
+impl VimWeights {
+    /// Names of every tensor the precision search may consider: all
+    /// schema tensors except the sensitive f32 denylist, in schema order
+    /// (which makes search results deterministic).
+    pub fn weight_quant_candidates(&self) -> Vec<String> {
+        vim_tensor_schema(&self.cfg)
+            .into_iter()
+            .map(|(n, _)| n)
+            .filter(|n| quantizable_tensor(n))
+            .collect()
+    }
+
+    /// Apply a precision plan in place: each accepted site is quantized
+    /// exactly once at its chosen clip percentile. Fails on unknown,
+    /// denylisted, duplicated, or already-quantized names and on an
+    /// out-of-range percentile; on error the weights may be partially
+    /// quantized, so treat them as spent.
+    pub fn apply_weight_quant(&mut self, plan: &WeightQuantPlan) -> Result<()> {
+        use std::collections::BTreeMap;
+        let mut want: BTreeMap<&str, f32> = BTreeMap::new();
+        for (name, pct) in &plan.sites {
+            if !(*pct > 0.0 && *pct <= 1.0) {
+                bail!("plan site {name:?} has clip percentile {pct} outside (0, 1]");
+            }
+            if !quantizable_tensor(name) {
+                bail!("tensor {name:?} is on the sensitive f32 denylist and cannot be quantized");
+            }
+            if want.insert(name.as_str(), *pct).is_some() {
+                bail!("plan lists tensor {name:?} twice");
+            }
+        }
+        let shapes: BTreeMap<String, (usize, usize)> = vim_tensor_schema(&self.cfg)
+            .into_iter()
+            .map(|(n, shape)| {
+                let rows = shape[0];
+                let cols = if shape.len() > 1 { shape[1] } else { 1 };
+                (n, (rows, cols))
+            })
+            .collect();
+        for name in want.keys() {
+            if !shapes.contains_key(*name) {
+                bail!("plan names unknown tensor {name:?}");
+            }
+            if self.store_q.contains_key(*name) {
+                bail!("tensor {name:?} is already quantized");
+            }
+        }
+        let mut pending: Vec<(String, QuantTensor)> = Vec::new();
+        let mut matched = 0usize;
+        for (name, slot) in self.named_slots_mut() {
+            let Some(&pct) = want.get(name.as_str()) else { continue };
+            matched += 1;
+            let (rows, cols) = shapes[&name];
+            match slot {
+                TensorSlotMut::Gemm(w) => {
+                    let dense = match w.as_f32() {
+                        Some(v) => v.to_vec(),
+                        None => bail!("tensor {name:?} is already quantized"),
+                    };
+                    *w = WeightMat::I8(quantize_tensor(&dense, rows, cols, pct));
+                }
+                TensorSlotMut::Plain(v) => {
+                    let qt = quantize_tensor(v, rows, cols, pct);
+                    *v = qt.dequant();
+                    pending.push((name, qt));
+                }
+            }
+        }
+        assert_eq!(matched, want.len(), "named slots must cover the schema");
+        self.store_q.extend(pending);
+        Ok(())
+    }
+
+    /// An all-f32 twin: INT8 GEMM weights densified to their exact
+    /// dequantization, the storage-tier sidecar dropped (its f32 fields
+    /// already hold the dequantized values). Forward passes of the twin
+    /// are bitwise identical to the quantized original's — the oracle
+    /// side of the artifact round-trip tests.
+    pub fn dequantized(&self) -> Self {
+        let mut out = self.clone();
+        out.store_q.clear();
+        for (_, slot) in out.named_slots_mut() {
+            if let TensorSlotMut::Gemm(w) = slot {
+                if let WeightMat::I8(qt) = w {
+                    *w = WeightMat::F32(qt.dequant());
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-site precision search (the paper's hybrid axis): quantize one
+    /// candidate tensor at a time, measure the relative logit error over
+    /// `images` against this model's f32 forward, and keep the sites that
+    /// fit the budgets ([`plan_weight_precision`] owns the policy). Pure
+    /// function of (weights, images, opts) — same inputs, same plan.
+    pub fn search_weight_quant(
+        &self,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+        images: &[&[f32]],
+        opts: &WeightQuantOpts,
+    ) -> Result<WeightQuantPlan> {
+        if images.is_empty() {
+            bail!("weight-quant search needs at least one calibration image");
+        }
+        let reference = self.forward_batch(tables, scan_cfg, images);
+        let candidates = self.weight_quant_candidates();
+        let try_plan = |sites: Vec<(String, f32)>| -> f32 {
+            let plan = WeightQuantPlan { sites, rejected: Vec::new() };
+            let mut w = self.clone();
+            if w.apply_weight_quant(&plan).is_err() {
+                return f32::INFINITY;
+            }
+            relative_logit_error(&reference, &w.forward_batch(tables, scan_cfg, images))
+        };
+        plan_weight_precision(
+            &candidates,
+            opts,
+            |name, pct| try_plan(vec![(name.to_string(), pct)]),
+            |sites| try_plan(sites.to_vec()),
+        )
+    }
+}
+
+/// Max over batch items of `||got - want||_2 / ||want||_2`; a
+/// zero-norm reference row scores 0 when reproduced exactly and
+/// infinity otherwise.
+fn relative_logit_error(want: &[Vec<f32>], got: &[Vec<f32>]) -> f32 {
+    let mut worst = 0f32;
+    for (w, g) in want.iter().zip(got) {
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (a, b) in w.iter().zip(g) {
+            num += (*b as f64 - *a as f64) * (*b as f64 - *a as f64);
+            den += *a as f64 * *a as f64;
+        }
+        let e = if den == 0.0 {
+            if num == 0.0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            (num / den).sqrt()
+        };
+        worst = worst.max(e as f32);
+    }
+    worst
+}
+
+// ---------------------------------------------------------------------------
 // Pre-optimization reference path: the seed's scalar single-item forward,
 // kept verbatim (naive GEMM, lane-major chunked scan, per-item execution).
 // It is both the bit-exactness oracle for the optimized pipeline
@@ -554,7 +804,11 @@ impl VimWeights {
         let (np, pd) = (cfg.n_patches(), cfg.patch_dim());
         let mut patches = Vec::with_capacity(np * pd);
         self.patchify_into(image, &mut patches);
-        let tok = matmul_ref(&patches, &self.patch_w, Some(&self.patch_b), np, pd, d);
+        // The reference path always multiplies dense f32: INT8 weights are
+        // dequantized up front, making forward_ref the
+        // dequantize-then-matmul oracle the quantized hot path is tested
+        // against.
+        let tok = matmul_ref(&patches, &self.patch_w.to_f32(), Some(&self.patch_b), np, pd, d);
         let mid = np / 2;
         let mut x = Vec::with_capacity(l * d);
         x.extend_from_slice(&tok[..mid * d]);
@@ -568,7 +822,7 @@ impl VimWeights {
         }
         layer_norm(&mut x, d, &self.head_norm_g, &self.head_norm_b);
         let cls_row = &x[mid * d..(mid + 1) * d];
-        matmul_ref(cls_row, &self.head_w, Some(&self.head_b), 1, d, cfg.n_classes)
+        matmul_ref(cls_row, &self.head_w.to_f32(), Some(&self.head_b), 1, d, cfg.n_classes)
     }
 
     fn block_ref(
@@ -582,7 +836,7 @@ impl VimWeights {
         let l = self.cfg.seq_len();
         let mut h = x.to_vec();
         layer_norm(&mut h, d, &bw.norm_g, &bw.norm_b);
-        let xz = matmul_ref(&h, &bw.in_w, Some(&bw.in_b), l, d, 2 * e);
+        let xz = matmul_ref(&h, &bw.in_w.to_f32(), Some(&bw.in_b), l, d, 2 * e);
         let mut xi = vec![0f32; l * e];
         let mut z = vec![0f32; l * e];
         for row in 0..l {
@@ -595,7 +849,7 @@ impl VimWeights {
         let y_b_rev = self.ssm_path_ref(&bw.bwd, &xi_rev, &z_rev, tables, scan_cfg);
         let y_b = reversed_rows_batched(&y_b_rev, 1, l, e);
         let sum: Vec<f32> = y_f.iter().zip(&y_b).map(|(a, b)| a + b).collect();
-        let y = matmul_ref(&sum, &bw.out_w, Some(&bw.out_b), l, e, d);
+        let y = matmul_ref(&sum, &bw.out_w.to_f32(), Some(&bw.out_b), l, e, d);
         for (xv, yv) in x.iter_mut().zip(&y) {
             *xv += yv;
         }
@@ -618,7 +872,7 @@ impl VimWeights {
             *v = tables.eval(SfuFunc::Silu, *v);
         }
         let cols = r + 2 * n;
-        let xdbc = matmul_ref(&u, &dw.xproj_w, None, l, e, cols);
+        let xdbc = matmul_ref(&u, &dw.xproj_w.to_f32(), None, l, e, cols);
         let mut dt_raw = vec![0f32; l * r];
         let mut b_mat = vec![0f32; l * n];
         let mut c_mat = vec![0f32; l * n];
@@ -828,6 +1082,83 @@ mod tests {
             assert_eq!(got, &w.forward(&tables, &scan, img), "batch composition leaked");
         }
         assert!(w.forward_batch(&tables, &scan, &[]).is_empty());
+    }
+
+    #[test]
+    fn quantized_weights_match_dequant_oracle_bitwise() {
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let mut w = VimWeights::init(&cfg, 21);
+        let plan = WeightQuantPlan::all_at_absmax(&w.weight_quant_candidates());
+        w.apply_weight_quant(&plan).unwrap();
+        assert_eq!(w.blocks[0].in_w.dtype(), TensorDtype::I8);
+        assert!(!w.store_q.is_empty(), "storage tier engaged");
+        let oracle = w.dequantized();
+        assert!(oracle.store_q.is_empty());
+        let img = image(3, cfg.input_len());
+        let got = w.forward(&tables, &scan, &img);
+        assert_eq!(got, oracle.forward(&tables, &scan, &img), "quantized kernel vs densified");
+        assert_eq!(got, w.forward_ref(&tables, &scan, &img), "hot path vs dequant+ref oracle");
+        assert_ne!(
+            got,
+            VimWeights::init(&cfg, 21).forward(&tables, &scan, &img),
+            "quantization must actually change the weights"
+        );
+    }
+
+    #[test]
+    fn apply_rejects_denylist_unknown_and_double_quant() {
+        let cfg = tiny_cfg();
+        let mut w = VimWeights::init(&cfg, 4);
+        for bad in ["blocks.0.fwd.dt_w", "blocks.1.norm_g", "head_norm_b"] {
+            let plan = WeightQuantPlan::all_at_absmax(&[bad.to_string()]);
+            assert!(w.apply_weight_quant(&plan).is_err(), "{bad} is denylisted");
+        }
+        let unknown = WeightQuantPlan::all_at_absmax(&["blocks.9.in_w".to_string()]);
+        assert!(w.apply_weight_quant(&unknown).is_err());
+        let ok =
+            WeightQuantPlan::all_at_absmax(&["pos".to_string(), "blocks.0.in_w".to_string()]);
+        w.apply_weight_quant(&ok).unwrap();
+        assert!(w.store_q.contains_key("pos"));
+        assert!(w.apply_weight_quant(&ok).is_err(), "re-quantizing is rejected");
+    }
+
+    #[test]
+    fn storage_tier_field_holds_exact_dequant() {
+        let cfg = tiny_cfg();
+        let mut w = VimWeights::init(&cfg, 8);
+        let before = w.pos.clone();
+        let plan = WeightQuantPlan::all_at_absmax(&["pos".to_string()]);
+        w.apply_weight_quant(&plan).unwrap();
+        let qt = &w.store_q["pos"];
+        assert_eq!(w.pos, qt.dequant(), "field is the exact dequantization");
+        assert_ne!(w.pos, before, "random pos cannot survive INT8 exactly");
+    }
+
+    #[test]
+    fn precision_search_is_deterministic_and_serves_within_budget() {
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let w = VimWeights::init(&cfg, 13);
+        let imgs: Vec<Vec<f32>> = (0..3).map(|s| image(50 + s, cfg.input_len())).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let opts = WeightQuantOpts { samples: 3, ..WeightQuantOpts::default() };
+        let plan = w.search_weight_quant(&tables, &scan, &refs, &opts).unwrap();
+        let again = w.search_weight_quant(&tables, &scan, &refs, &opts).unwrap();
+        assert_eq!(plan, again, "search is a pure function of (weights, images, opts)");
+        // Zero-initialized biases quantize exactly (error 0), so a fresh
+        // model always yields a non-empty plan.
+        assert!(!plan.sites.is_empty());
+        for (name, _) in &plan.sites {
+            assert!(quantizable_tensor(name), "{name} must be eligible");
+        }
+        let mut q = w.clone();
+        q.apply_weight_quant(&plan).unwrap();
+        let reference = w.forward_batch(&tables, &scan, &refs);
+        let got = q.forward_batch(&tables, &scan, &refs);
+        assert!(relative_logit_error(&reference, &got) <= opts.total_budget);
     }
 
     #[test]

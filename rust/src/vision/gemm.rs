@@ -142,6 +142,203 @@ fn tile_edge(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Quantized-weight kernels (paper H2, weight side). Two tiers:
+//
+// * [`matmul_q8`] — f32 activations x INT8 weights, dequantized on the
+//   fly inside the register tile. Each weight element contributes exactly
+//   `q as f32 * scale` — the same value a materialized dequantized matrix
+//   would hold — and the accumulation schedule is [`matmul`]'s, so the
+//   result is *bitwise identical* to `matmul(x, dequant(w), bias)` by
+//   construction. This is the serving kernel: 4x less weight traffic,
+//   zero numeric drift versus the dequantize-then-matmul oracle.
+// * [`matmul_i8`] — INT8 activations x INT8 weights accumulated in i32
+//   with an f32 epilogue (`(sx[i] * sw[j]) * acc + bias[j]`), the
+//   hardware-shaped INT8 MAC pipeline and the `gemm_i8` benchmark
+//   record. Its oracle is the same product computed over the *integer
+//   codes* in f32 (exact while `k * 127 * 127 < 2^24`) with an
+//   identical epilogue.
+// ---------------------------------------------------------------------------
+
+/// Row-major `(m, k) x (k, n)` GEMM of f32 activations against INT8
+/// weights with per-column scales (`wscales[j]` dequantizes column `j`).
+/// Bitwise identical to `matmul(x, &dequant(qw), bias, m, k, n)`.
+pub fn matmul_q8(
+    x: &[f32],
+    qw: &[i8],
+    wscales: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k, "matmul_q8 lhs");
+    assert_eq!(qw.len(), k * n, "matmul_q8 rhs");
+    assert_eq!(wscales.len(), n, "matmul_q8 scales");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "matmul_q8 bias");
+    }
+    let mut out = vec![0f32; m * n];
+    let mut i0 = 0;
+    while i0 < m {
+        let rows = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < n {
+            let cols = (n - j0).min(NR);
+            if rows == MR && cols == NR {
+                tile_full_q8(&mut out, x, qw, wscales, bias, k, n, i0, j0);
+            } else {
+                tile_edge_q8(&mut out, x, qw, wscales, bias, k, n, i0, rows, j0, cols);
+            }
+            j0 += cols;
+        }
+        i0 += rows;
+    }
+    out
+}
+
+/// Full MRxNR tile of [`matmul_q8`]: one NR-wide dequantized `w` row is
+/// materialized in registers per k step and reused across all MR rows —
+/// the dequant multiply amortizes to 1/MR extra flops per MAC.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_full_q8(
+    out: &mut [f32],
+    x: &[f32],
+    qw: &[i8],
+    wscales: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    i0: usize,
+    j0: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    if let Some(b) = bias {
+        let brow = &b[j0..j0 + NR];
+        for row in acc.iter_mut() {
+            row.copy_from_slice(brow);
+        }
+    }
+    let srow = &wscales[j0..j0 + NR];
+    for kk in 0..k {
+        let qrow = &qw[kk * n + j0..kk * n + j0 + NR];
+        let mut wv = [0f32; NR];
+        for ((v, q), s) in wv.iter_mut().zip(qrow).zip(srow) {
+            *v = *q as f32 * *s;
+        }
+        for (r, row) in acc.iter_mut().enumerate() {
+            let xv = x[(i0 + r) * k + kk];
+            for (a, w) in row.iter_mut().zip(&wv) {
+                *a += xv * w;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        out[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR].copy_from_slice(row);
+    }
+}
+
+/// Partial tile of [`matmul_q8`] at the m/n edges, same accumulation
+/// order as the full tile.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tile_edge_q8(
+    out: &mut [f32],
+    x: &[f32],
+    qw: &[i8],
+    wscales: &[f32],
+    bias: Option<&[f32]>,
+    k: usize,
+    n: usize,
+    i0: usize,
+    rows: usize,
+    j0: usize,
+    cols: usize,
+) {
+    let mut acc = [[0f32; NR]; MR];
+    if let Some(b) = bias {
+        for row in acc.iter_mut().take(rows) {
+            row[..cols].copy_from_slice(&b[j0..j0 + cols]);
+        }
+    }
+    let srow = &wscales[j0..j0 + cols];
+    for kk in 0..k {
+        let qrow = &qw[kk * n + j0..kk * n + j0 + cols];
+        let mut wv = [0f32; NR];
+        for ((v, q), s) in wv[..cols].iter_mut().zip(qrow).zip(srow) {
+            *v = *q as f32 * *s;
+        }
+        for (r, row) in acc.iter_mut().enumerate().take(rows) {
+            let xv = x[(i0 + r) * k + kk];
+            for (a, w) in row[..cols].iter_mut().zip(&wv[..cols]) {
+                *a += xv * w;
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate().take(rows) {
+        out[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols].copy_from_slice(&row[..cols]);
+    }
+}
+
+/// Row-major `(m, k) x (k, n)` GEMM over INT8 codes on both sides:
+/// per-row activation scales (`xscales[i]`), per-column weight scales
+/// (`wscales[j]`), i32 register-tile accumulation, f32 epilogue
+/// `out[i,j] = (xscales[i] * wscales[j]) * acc + bias[j]`. The integer
+/// accumulator is exact (no rounding until the epilogue), which is what
+/// the `rust/tests/quant_weight_props.rs` oracle leans on.
+pub fn matmul_i8(
+    qx: &[i8],
+    xscales: &[f32],
+    qw: &[i8],
+    wscales: &[f32],
+    bias: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(qx.len(), m * k, "matmul_i8 lhs");
+    assert_eq!(xscales.len(), m, "matmul_i8 lhs scales");
+    assert_eq!(qw.len(), k * n, "matmul_i8 rhs");
+    assert_eq!(wscales.len(), n, "matmul_i8 rhs scales");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "matmul_i8 bias");
+    }
+    let mut out = vec![0f32; m * n];
+    let mut i0 = 0;
+    while i0 < m {
+        let rows = (m - i0).min(MR);
+        let mut j0 = 0;
+        while j0 < n {
+            let cols = (n - j0).min(NR);
+            let mut acc = [[0i32; NR]; MR];
+            for kk in 0..k {
+                let qrow = &qw[kk * n + j0..kk * n + j0 + cols];
+                for (r, row) in acc.iter_mut().enumerate().take(rows) {
+                    let xv = qx[(i0 + r) * k + kk] as i32;
+                    for (a, q) in row[..cols].iter_mut().zip(qrow) {
+                        *a += xv * *q as i32;
+                    }
+                }
+            }
+            for (r, row) in acc.iter().enumerate().take(rows) {
+                let sx = xscales[i0 + r];
+                let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + cols];
+                for (jj, (o, a)) in orow.iter_mut().zip(&row[..cols]).enumerate() {
+                    let v = (sx * wscales[j0 + jj]) * *a as f32;
+                    *o = match bias {
+                        Some(b) => v + b[j0 + jj],
+                        None => v,
+                    };
+                }
+            }
+            j0 += cols;
+        }
+        i0 += rows;
+    }
+    out
+}
+
 /// The pre-optimization scalar GEMM: the oracle [`matmul`] is tested
 /// against and the "naive" side of the hot-path benchmark pairs. One
 /// output row is re-walked per k step — exactly what the register tile
@@ -216,6 +413,87 @@ mod tests {
         let mut out = vec![f32::NAN; m * n]; // stale garbage must be overwritten
         matmul_into(&mut out, &x, &w, None, m, k, n);
         assert_eq!(out, matmul_ref(&x, &w, None, m, k, n));
+    }
+
+    #[test]
+    fn q8_matches_dequant_oracle_bitwise() {
+        let mut rng = Pcg::new(29);
+        for (m, k, n) in [
+            (1usize, 1usize, 1usize),
+            (4, 8, 8),
+            (5, 3, 9),
+            (7, 16, 30),
+            (13, 21, 17),
+            (65, 64, 256),
+        ] {
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let b = rand_vec(&mut rng, n);
+            let qt = crate::quant::quantize_tensor(&w, k, n, 1.0);
+            let deq = qt.dequant();
+            let want_b = matmul(&x, &deq, Some(&b), m, k, n);
+            let got_b = matmul_q8(&x, &qt.q, &qt.scales, Some(&b), m, k, n);
+            assert_eq!(got_b, want_b, "biased {m}x{k}x{n}");
+            let want = matmul(&x, &deq, None, m, k, n);
+            let got = matmul_q8(&x, &qt.q, &qt.scales, None, m, k, n);
+            assert_eq!(got, want, "unbiased {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn i8_matches_integer_oracle_bitwise() {
+        // Oracle: run the integer codes through the f32 tiled GEMM (exact
+        // while k * 127 * 127 < 2^24, i.e. k <= 1040) and apply the same
+        // epilogue expression matmul_i8 uses.
+        let mut rng = Pcg::new(41);
+        for (m, k, n) in [
+            (1usize, 1usize, 1usize),
+            (4, 8, 8),
+            (5, 3, 9),
+            (7, 16, 30),
+            (13, 21, 17),
+            (33, 40, 70),
+        ] {
+            let xf = rand_vec(&mut rng, m * k);
+            let wf = rand_vec(&mut rng, k * n);
+            let b = rand_vec(&mut rng, n);
+            let (qx, xscales) = crate::quant::quantize_rows_i8(&xf, m, k);
+            let qt = crate::quant::quantize_tensor(&wf, k, n, 1.0);
+            let xi: Vec<f32> = qx.iter().map(|&q| q as f32).collect();
+            let wi: Vec<f32> = qt.q.iter().map(|&q| q as f32).collect();
+            let raw = matmul(&xi, &wi, None, m, k, n);
+            for (bias, label) in [(Some(&b), "biased"), (None, "unbiased")] {
+                let b = bias.map(|v| &v[..]);
+                let got = matmul_i8(&qx, &xscales, &qt.q, &qt.scales, b, m, k, n);
+                for i in 0..m {
+                    for j in 0..n {
+                        let v = (xscales[i] * qt.scales[j]) * raw[i * n + j];
+                        let want = match bias {
+                            Some(bv) => v + bv[j],
+                            None => v,
+                        };
+                        assert_eq!(
+                            got[i * n + j].to_bits(),
+                            want.to_bits(),
+                            "{label} {m}x{k}x{n} at ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_accumulator_is_exact_at_full_range() {
+        // Worst-case magnitudes: every code at +-127 over a long k. The
+        // i32 accumulator holds k * 127 * 127 exactly where a f32
+        // accumulator would have rounded.
+        let (m, k, n) = (2usize, 1000usize, 3usize);
+        let qx = vec![127i8; m * k];
+        let qw = vec![127i8; k * n];
+        let out = matmul_i8(&qx, &[1.0; 2], &qw, &[1.0; 3], None, m, k, n);
+        let exact = (k as i64 * 127 * 127) as f32;
+        assert!(out.iter().all(|&v| v == exact), "{out:?}");
     }
 
     #[test]

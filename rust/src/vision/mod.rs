@@ -15,8 +15,11 @@ mod ops;
 mod vim;
 mod vit;
 
-pub use forward::{BlockWeights, DirWeights, ForwardConfig, ScanExec, VimWeights};
-pub use gemm::{matmul, matmul_ref};
+pub use forward::{BlockWeights, DirWeights, ForwardConfig, ScanExec, VimWeights, WeightMat};
+pub use gemm::{matmul, matmul_i8, matmul_q8, matmul_ref};
 pub use ops::{Op, OpClass, SfuFunc};
-pub use vim::{vim_block_ops, vim_model_ops, vim_selective_ssm_ops, vim_tensor_schema};
+pub use vim::{
+    quantizable_tensor, vim_block_ops, vim_model_ops, vim_selective_ssm_ops, vim_tensor_schema,
+    TensorSlotMut, TensorView,
+};
 pub use vit::{vit_block_ops, vit_model_ops, vit_score_matrix_bytes};

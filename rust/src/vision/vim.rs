@@ -3,8 +3,9 @@
 //! artifact bridge used by the [`crate::runtime`] model-artifact format.
 
 use crate::config::VimModel;
+use crate::quant::TensorDtype;
 
-use super::forward::{BlockWeights, DirWeights, ForwardConfig, VimWeights};
+use super::forward::{BlockWeights, DirWeights, ForwardConfig, VimWeights, WeightMat};
 use super::ops::{Op, SfuFunc};
 
 /// The ops of the selective-SSM block for ONE direction (paper Fig 3(b)).
@@ -133,105 +134,216 @@ pub fn vim_tensor_schema(cfg: &ForwardConfig) -> Vec<(String, Vec<usize>)> {
     out
 }
 
-fn dir_tensors<'a>(prefix: &str, dw: &'a DirWeights, out: &mut Vec<(String, &'a [f32])>) {
-    out.push((format!("{prefix}.conv_w"), dw.conv_w.as_slice()));
-    out.push((format!("{prefix}.conv_b"), dw.conv_b.as_slice()));
-    out.push((format!("{prefix}.xproj_w"), dw.xproj_w.as_slice()));
-    out.push((format!("{prefix}.dt_w"), dw.dt_w.as_slice()));
-    out.push((format!("{prefix}.dt_b"), dw.dt_b.as_slice()));
-    out.push((format!("{prefix}.a"), dw.a.as_slice()));
-    out.push((format!("{prefix}.d"), dw.d.as_slice()));
+/// Read-only view of one named tensor in its *stored* representation:
+/// dense f32 or INT8 codes + per-column scales. What the artifact
+/// encoder serializes and `inspect` reports; the forward pass never goes
+/// through views (GEMM weights dispatch on [`WeightMat`] directly,
+/// storage-tier tensors read their dequantized f32 field).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TensorView<'a> {
+    F32(&'a [f32]),
+    I8 { q: &'a [i8], scales: &'a [f32] },
 }
 
-fn dir_tensors_mut<'a>(
+impl<'a> TensorView<'a> {
+    pub fn dtype(&self) -> TensorDtype {
+        match self {
+            TensorView::F32(_) => TensorDtype::F32,
+            TensorView::I8 { .. } => TensorDtype::I8,
+        }
+    }
+
+    /// Element count (codes and dense elements count the same).
+    pub fn len(&self) -> usize {
+        match self {
+            TensorView::F32(v) => v.len(),
+            TensorView::I8 { q, .. } => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dense f32 data if (and only if) stored dense.
+    pub fn as_f32(&self) -> Option<&'a [f32]> {
+        match self {
+            TensorView::F32(v) => Some(v),
+            TensorView::I8 { .. } => None,
+        }
+    }
+
+    /// Dense f32 copy (dequantizing INT8 per column).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            TensorView::F32(v) => v.to_vec(),
+            TensorView::I8 { q, scales } => q
+                .iter()
+                .enumerate()
+                .map(|(i, &qv)| qv as f32 * scales[i % scales.len()])
+                .collect(),
+        }
+    }
+
+    /// Bytes this tensor occupies in the artifact blob.
+    pub fn stored_bytes(&self) -> usize {
+        match self {
+            TensorView::F32(v) => 4 * v.len(),
+            TensorView::I8 { q, scales } => q.len() + 4 * scales.len(),
+        }
+    }
+}
+
+/// Mutable slot of one named tensor: plain f32 storage, or a GEMM weight
+/// whose representation ([`WeightMat`]) the writer may switch.
+#[derive(Debug)]
+pub enum TensorSlotMut<'a> {
+    Plain(&'a mut Vec<f32>),
+    Gemm(&'a mut WeightMat),
+}
+
+/// Format-level denylist of sensitive tensors that must stay f32: the
+/// dt-projection (tiny timestep values feed `exp` — quantization error
+/// compounds through the scan) and every layer-norm affine. Enforced at
+/// plan application AND at artifact decode, so no file can smuggle an
+/// INT8 `dt_w` past the search policy.
+pub fn quantizable_tensor(name: &str) -> bool {
+    !(name.ends_with("norm_g")
+        || name.ends_with("norm_b")
+        || name.ends_with("dt_w")
+        || name.ends_with("dt_b"))
+}
+
+impl WeightMat {
+    /// Storage-representation view of this GEMM weight.
+    pub fn view(&self) -> TensorView<'_> {
+        match self {
+            WeightMat::F32(v) => TensorView::F32(v),
+            WeightMat::I8(qt) => TensorView::I8 { q: &qt.q, scales: &qt.scales },
+        }
+    }
+}
+
+fn dir_tensors<'a>(prefix: &str, dw: &'a DirWeights, out: &mut Vec<(String, TensorView<'a>)>) {
+    out.push((format!("{prefix}.conv_w"), TensorView::F32(&dw.conv_w)));
+    out.push((format!("{prefix}.conv_b"), TensorView::F32(&dw.conv_b)));
+    out.push((format!("{prefix}.xproj_w"), dw.xproj_w.view()));
+    out.push((format!("{prefix}.dt_w"), TensorView::F32(&dw.dt_w)));
+    out.push((format!("{prefix}.dt_b"), TensorView::F32(&dw.dt_b)));
+    out.push((format!("{prefix}.a"), TensorView::F32(&dw.a)));
+    out.push((format!("{prefix}.d"), TensorView::F32(&dw.d)));
+}
+
+fn dir_slots_mut<'a>(
     prefix: &str,
     dw: &'a mut DirWeights,
-    out: &mut Vec<(String, &'a mut Vec<f32>)>,
+    out: &mut Vec<(String, TensorSlotMut<'a>)>,
 ) {
-    out.push((format!("{prefix}.conv_w"), &mut dw.conv_w));
-    out.push((format!("{prefix}.conv_b"), &mut dw.conv_b));
-    out.push((format!("{prefix}.xproj_w"), &mut dw.xproj_w));
-    out.push((format!("{prefix}.dt_w"), &mut dw.dt_w));
-    out.push((format!("{prefix}.dt_b"), &mut dw.dt_b));
-    out.push((format!("{prefix}.a"), &mut dw.a));
-    out.push((format!("{prefix}.d"), &mut dw.d));
+    out.push((format!("{prefix}.conv_w"), TensorSlotMut::Plain(&mut dw.conv_w)));
+    out.push((format!("{prefix}.conv_b"), TensorSlotMut::Plain(&mut dw.conv_b)));
+    out.push((format!("{prefix}.xproj_w"), TensorSlotMut::Gemm(&mut dw.xproj_w)));
+    out.push((format!("{prefix}.dt_w"), TensorSlotMut::Plain(&mut dw.dt_w)));
+    out.push((format!("{prefix}.dt_b"), TensorSlotMut::Plain(&mut dw.dt_b)));
+    out.push((format!("{prefix}.a"), TensorSlotMut::Plain(&mut dw.a)));
+    out.push((format!("{prefix}.d"), TensorSlotMut::Plain(&mut dw.d)));
 }
 
 impl VimWeights {
-    /// Every tensor as `(name, data)`, in [`vim_tensor_schema`] order.
-    pub fn named_tensors(&self) -> Vec<(String, &[f32])> {
-        let mut out: Vec<(String, &[f32])> = vec![
-            ("patch_w".to_string(), self.patch_w.as_slice()),
-            ("patch_b".to_string(), self.patch_b.as_slice()),
-            ("cls".to_string(), self.cls.as_slice()),
-            ("pos".to_string(), self.pos.as_slice()),
+    /// Every tensor as `(name, stored-representation view)`, in
+    /// [`vim_tensor_schema`] order. GEMM weights expose whatever their
+    /// [`WeightMat`] holds; storage-tier tensors with codes parked in
+    /// [`VimWeights::store_q`] present those codes (their f32 field is
+    /// the exact dequantization the forward pass reads).
+    pub fn named_tensors(&self) -> Vec<(String, TensorView<'_>)> {
+        let mut out: Vec<(String, TensorView<'_>)> = vec![
+            ("patch_w".to_string(), self.patch_w.view()),
+            ("patch_b".to_string(), TensorView::F32(&self.patch_b)),
+            ("cls".to_string(), TensorView::F32(&self.cls)),
+            ("pos".to_string(), TensorView::F32(&self.pos)),
         ];
         for (b, bw) in self.blocks.iter().enumerate() {
-            out.push((format!("blocks.{b}.norm_g"), bw.norm_g.as_slice()));
-            out.push((format!("blocks.{b}.norm_b"), bw.norm_b.as_slice()));
-            out.push((format!("blocks.{b}.in_w"), bw.in_w.as_slice()));
-            out.push((format!("blocks.{b}.in_b"), bw.in_b.as_slice()));
-            out.push((format!("blocks.{b}.out_w"), bw.out_w.as_slice()));
-            out.push((format!("blocks.{b}.out_b"), bw.out_b.as_slice()));
+            out.push((format!("blocks.{b}.norm_g"), TensorView::F32(&bw.norm_g)));
+            out.push((format!("blocks.{b}.norm_b"), TensorView::F32(&bw.norm_b)));
+            out.push((format!("blocks.{b}.in_w"), bw.in_w.view()));
+            out.push((format!("blocks.{b}.in_b"), TensorView::F32(&bw.in_b)));
+            out.push((format!("blocks.{b}.out_w"), bw.out_w.view()));
+            out.push((format!("blocks.{b}.out_b"), TensorView::F32(&bw.out_b)));
             dir_tensors(&format!("blocks.{b}.fwd"), &bw.fwd, &mut out);
             dir_tensors(&format!("blocks.{b}.bwd"), &bw.bwd, &mut out);
         }
-        out.push(("head_norm_g".to_string(), self.head_norm_g.as_slice()));
-        out.push(("head_norm_b".to_string(), self.head_norm_b.as_slice()));
-        out.push(("head_w".to_string(), self.head_w.as_slice()));
-        out.push(("head_b".to_string(), self.head_b.as_slice()));
+        out.push(("head_norm_g".to_string(), TensorView::F32(&self.head_norm_g)));
+        out.push(("head_norm_b".to_string(), TensorView::F32(&self.head_norm_b)));
+        out.push(("head_w".to_string(), self.head_w.view()));
+        out.push(("head_b".to_string(), TensorView::F32(&self.head_b)));
+        for (name, view) in out.iter_mut() {
+            if let Some(qt) = self.store_q.get(name) {
+                *view = TensorView::I8 { q: &qt.q, scales: &qt.scales };
+            }
+        }
         out
     }
 
-    /// Mutable variant of [`Self::named_tensors`], same order — the
-    /// artifact loader fills a [`VimWeights::zeros`] instance through it.
-    pub fn named_tensors_mut(&mut self) -> Vec<(String, &mut Vec<f32>)> {
-        let mut out: Vec<(String, &mut Vec<f32>)> = vec![
-            ("patch_w".to_string(), &mut self.patch_w),
-            ("patch_b".to_string(), &mut self.patch_b),
-            ("cls".to_string(), &mut self.cls),
-            ("pos".to_string(), &mut self.pos),
+    /// Mutable slots in [`Self::named_tensors`] order — the artifact
+    /// loader fills a [`VimWeights::zeros`] instance through them.
+    /// Storage-tier codes (`store_q`) are NOT reachable here; writers
+    /// that quantize storage-tier tensors update the sidecar separately
+    /// (the borrow on `self` ends when the returned slots drop).
+    pub fn named_slots_mut(&mut self) -> Vec<(String, TensorSlotMut<'_>)> {
+        let mut out: Vec<(String, TensorSlotMut<'_>)> = vec![
+            ("patch_w".to_string(), TensorSlotMut::Gemm(&mut self.patch_w)),
+            ("patch_b".to_string(), TensorSlotMut::Plain(&mut self.patch_b)),
+            ("cls".to_string(), TensorSlotMut::Plain(&mut self.cls)),
+            ("pos".to_string(), TensorSlotMut::Plain(&mut self.pos)),
         ];
         for (b, bw) in self.blocks.iter_mut().enumerate() {
-            out.push((format!("blocks.{b}.norm_g"), &mut bw.norm_g));
-            out.push((format!("blocks.{b}.norm_b"), &mut bw.norm_b));
-            out.push((format!("blocks.{b}.in_w"), &mut bw.in_w));
-            out.push((format!("blocks.{b}.in_b"), &mut bw.in_b));
-            out.push((format!("blocks.{b}.out_w"), &mut bw.out_w));
-            out.push((format!("blocks.{b}.out_b"), &mut bw.out_b));
-            dir_tensors_mut(&format!("blocks.{b}.fwd"), &mut bw.fwd, &mut out);
-            dir_tensors_mut(&format!("blocks.{b}.bwd"), &mut bw.bwd, &mut out);
+            out.push((format!("blocks.{b}.norm_g"), TensorSlotMut::Plain(&mut bw.norm_g)));
+            out.push((format!("blocks.{b}.norm_b"), TensorSlotMut::Plain(&mut bw.norm_b)));
+            out.push((format!("blocks.{b}.in_w"), TensorSlotMut::Gemm(&mut bw.in_w)));
+            out.push((format!("blocks.{b}.in_b"), TensorSlotMut::Plain(&mut bw.in_b)));
+            out.push((format!("blocks.{b}.out_w"), TensorSlotMut::Gemm(&mut bw.out_w)));
+            out.push((format!("blocks.{b}.out_b"), TensorSlotMut::Plain(&mut bw.out_b)));
+            dir_slots_mut(&format!("blocks.{b}.fwd"), &mut bw.fwd, &mut out);
+            dir_slots_mut(&format!("blocks.{b}.bwd"), &mut bw.bwd, &mut out);
         }
-        out.push(("head_norm_g".to_string(), &mut self.head_norm_g));
-        out.push(("head_norm_b".to_string(), &mut self.head_norm_b));
-        out.push(("head_w".to_string(), &mut self.head_w));
-        out.push(("head_b".to_string(), &mut self.head_b));
+        out.push(("head_norm_g".to_string(), TensorSlotMut::Plain(&mut self.head_norm_g)));
+        out.push(("head_norm_b".to_string(), TensorSlotMut::Plain(&mut self.head_norm_b)));
+        out.push(("head_w".to_string(), TensorSlotMut::Gemm(&mut self.head_w)));
+        out.push(("head_b".to_string(), TensorSlotMut::Plain(&mut self.head_b)));
         out
     }
 
-    /// An all-zero weight set with every tensor at its schema shape —
-    /// the blank the artifact loader deserializes into.
+    /// `(f32-equivalent bytes, stored bytes)` across every named tensor:
+    /// what the weights would cost dense versus what the artifact blob
+    /// actually stores (codes + scales for INT8 tensors). Reported by
+    /// `models --engine` and asserted by the quantized-artifact CI step.
+    pub fn weight_bytes(&self) -> (usize, usize) {
+        let mut f32_eq = 0usize;
+        let mut stored = 0usize;
+        for (_, view) in self.named_tensors() {
+            f32_eq += 4 * view.len();
+            stored += view.stored_bytes();
+        }
+        (f32_eq, stored)
+    }
+
+    /// An all-zero weight set with every tensor at its schema shape
+    /// (all dense f32) — the blank the artifact loader deserializes into.
     pub fn zeros(cfg: &ForwardConfig) -> Self {
         let m = &cfg.model;
         let (d, e) = (m.d_model, m.d_inner());
-        let dir = || {
-            let mut dw = DirWeights {
-                conv_w: Vec::new(),
-                conv_b: Vec::new(),
-                xproj_w: Vec::new(),
-                dt_w: Vec::new(),
-                dt_b: Vec::new(),
-                a: Vec::new(),
-                d: Vec::new(),
-            };
-            for (field, tensor) in dir_fields(m).iter().zip(dir_tensors_order(&mut dw)) {
-                *tensor = vec![0.0; field.1.iter().product()];
-            }
-            dw
+        let (n, r, k) = (m.d_state, m.dt_rank(), m.conv_k);
+        let dir = || DirWeights {
+            conv_w: vec![0.0; e * k],
+            conv_b: vec![0.0; e],
+            xproj_w: WeightMat::F32(vec![0.0; e * (r + 2 * n)]),
+            dt_w: vec![0.0; r * e],
+            dt_b: vec![0.0; e],
+            a: vec![0.0; e * n],
+            d: vec![0.0; e],
         };
         VimWeights {
             cfg: cfg.clone(),
-            patch_w: vec![0.0; cfg.patch_dim() * d],
+            patch_w: WeightMat::F32(vec![0.0; cfg.patch_dim() * d]),
             patch_b: vec![0.0; d],
             cls: vec![0.0; d],
             pos: vec![0.0; cfg.seq_len() * d],
@@ -239,9 +351,9 @@ impl VimWeights {
                 .map(|_| BlockWeights {
                     norm_g: vec![0.0; d],
                     norm_b: vec![0.0; d],
-                    in_w: vec![0.0; d * 2 * e],
+                    in_w: WeightMat::F32(vec![0.0; d * 2 * e]),
                     in_b: vec![0.0; 2 * e],
-                    out_w: vec![0.0; e * d],
+                    out_w: WeightMat::F32(vec![0.0; e * d]),
                     out_b: vec![0.0; d],
                     fwd: dir(),
                     bwd: dir(),
@@ -249,24 +361,11 @@ impl VimWeights {
                 .collect(),
             head_norm_g: vec![0.0; d],
             head_norm_b: vec![0.0; d],
-            head_w: vec![0.0; d * cfg.n_classes],
+            head_w: WeightMat::F32(vec![0.0; d * cfg.n_classes]),
             head_b: vec![0.0; cfg.n_classes],
+            store_q: std::collections::BTreeMap::new(),
         }
     }
-}
-
-/// The [`DirWeights`] fields in [`dir_fields`] order, mutably — keeps
-/// [`VimWeights::zeros`] structurally tied to the schema.
-fn dir_tensors_order(dw: &mut DirWeights) -> [&mut Vec<f32>; 7] {
-    [
-        &mut dw.conv_w,
-        &mut dw.conv_b,
-        &mut dw.xproj_w,
-        &mut dw.dt_w,
-        &mut dw.dt_b,
-        &mut dw.a,
-        &mut dw.d,
-    ]
 }
 
 #[cfg(test)]
@@ -319,9 +418,10 @@ mod tests {
         let schema = vim_tensor_schema(&cfg);
         let tensors = w.named_tensors();
         assert_eq!(schema.len(), tensors.len());
-        for ((sname, shape), (tname, data)) in schema.iter().zip(&tensors) {
+        for ((sname, shape), (tname, view)) in schema.iter().zip(&tensors) {
             assert_eq!(sname, tname);
-            assert_eq!(shape.iter().product::<usize>(), data.len(), "{sname}");
+            assert_eq!(shape.iter().product::<usize>(), view.len(), "{sname}");
+            assert_eq!(view.dtype(), TensorDtype::F32, "{sname}: fresh init is dense");
         }
         // Spot-check the dotted-path naming convention.
         assert!(schema.iter().any(|(n, _)| n == "blocks.1.bwd.xproj_w"));
@@ -335,18 +435,63 @@ mod tests {
         let mut dst = VimWeights::zeros(&cfg);
         {
             let from = src.named_tensors();
-            let to = dst.named_tensors_mut();
+            let to = dst.named_slots_mut();
             assert_eq!(from.len(), to.len());
-            for ((fname, data), (tname, slot)) in from.iter().zip(to) {
+            for ((fname, view), (tname, slot)) in from.iter().zip(to) {
                 assert_eq!(fname, &tname);
-                assert_eq!(data.len(), slot.len(), "{fname}: zeros shape");
-                slot.copy_from_slice(data);
+                let data = view.to_f32();
+                match slot {
+                    TensorSlotMut::Plain(v) => {
+                        assert_eq!(v.len(), data.len(), "{fname}: zeros shape");
+                        v.copy_from_slice(&data);
+                    }
+                    TensorSlotMut::Gemm(w) => {
+                        assert_eq!(w.len(), data.len(), "{fname}: zeros shape");
+                        *w = WeightMat::F32(data);
+                    }
+                }
             }
         }
         // The copy is total: every tensor now matches the source bitwise.
         for ((_, a), (n, b)) in src.named_tensors().iter().zip(dst.named_tensors()) {
-            assert_eq!(*a, b, "{n}");
+            assert_eq!(a.to_f32(), b.to_f32(), "{n}");
         }
+    }
+
+    #[test]
+    fn denylist_covers_sensitive_tensor_names() {
+        for deny in
+            ["blocks.0.norm_g", "blocks.3.norm_b", "head_norm_g", "head_norm_b",
+             "blocks.1.fwd.dt_w", "blocks.0.bwd.dt_b"]
+        {
+            assert!(!quantizable_tensor(deny), "{deny} must stay f32");
+        }
+        for ok in ["patch_w", "pos", "blocks.0.in_w", "blocks.1.bwd.xproj_w", "head_w",
+                   "blocks.0.fwd.conv_w", "blocks.0.fwd.a", "blocks.0.fwd.d"]
+        {
+            assert!(quantizable_tensor(ok), "{ok} is eligible");
+        }
+    }
+
+    #[test]
+    fn quantized_views_and_weight_bytes_track_the_plan() {
+        let cfg = schema_cfg();
+        let mut w = VimWeights::init(&cfg, 5);
+        let (f32_eq_before, stored_before) = w.weight_bytes();
+        assert_eq!(f32_eq_before, stored_before, "dense model stores at f32 parity");
+        let plan = crate::quant::WeightQuantPlan::all_at_absmax(&w.weight_quant_candidates());
+        w.apply_weight_quant(&plan).unwrap();
+        for (name, view) in w.named_tensors() {
+            let want =
+                if quantizable_tensor(&name) { TensorDtype::I8 } else { TensorDtype::F32 };
+            assert_eq!(view.dtype(), want, "{name}");
+        }
+        let (f32_eq, stored) = w.weight_bytes();
+        assert_eq!(f32_eq, f32_eq_before, "element count is representation-independent");
+        assert!(
+            stored * 10 < f32_eq * 4,
+            "full quantization must store under 40% of dense ({stored} vs {f32_eq})"
+        );
     }
 
     #[test]

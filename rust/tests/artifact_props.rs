@@ -1,4 +1,4 @@
-//! Properties of the `VimArtifact` v1 model-artifact subsystem
+//! Properties of the `VimArtifact` model-artifact subsystem
 //! (hand-rolled harness: proptest is unavailable offline; `Pcg` provides
 //! deterministic shrink-free random cases).
 //!
@@ -17,8 +17,10 @@
 //!   variant naming the failure, never a silent fallback;
 //! * the committed golden fixture (`rust/tests/data/artifact_v1.bin`,
 //!   written by `python/compile/make_artifact_golden.py`) decodes to the
-//!   exact formula weights and calibration it encodes — pinning the byte
-//!   layout across languages.
+//!   exact formula weights and calibration it encodes — pinning the v1
+//!   byte layout across languages even as the encoder writes v2
+//!   (quantized-artifact properties live in
+//!   `rust/tests/quant_weight_props.rs`).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -27,7 +29,7 @@ use mamba_x::config::MambaXConfig;
 use mamba_x::quant::CalibTable;
 use mamba_x::runtime::{
     fnv1a64, ArtifactError, ArtifactStore, InferenceBackend, ModelSource, NativeBackend,
-    Provenance, VimArtifact, ARTIFACT_VERSION,
+    Provenance, VimArtifact,
 };
 use mamba_x::sim::sfu::SfuTables;
 use mamba_x::util::Pcg;
@@ -165,6 +167,7 @@ fn embedded_calib_equals_side_loaded_table() {
     let factory_override = NativeBackend::factory(
         ModelSource::Artifact(bare_path.clone()),
         Some(Arc::clone(&side_loaded)),
+        None,
     )
     .unwrap();
     let mut overridden = factory_override(0).unwrap();
@@ -356,7 +359,9 @@ fn golden_value(t: usize, k: usize) -> f32 {
 fn golden_artifact_v1_decodes_bitwise() {
     let artifact = ArtifactStore::open(golden_path()).unwrap();
     let m = &artifact.manifest;
-    assert_eq!(m.version, ARTIFACT_VERSION);
+    // The fixture pins the v1 layout: it must keep decoding as v1 (not
+    // be silently rewritten) even though the encoder now writes v2.
+    assert_eq!(m.version, 1);
     assert_eq!(m.arch, "micro_s");
     assert_eq!((m.img, m.in_ch, m.n_classes), (8, 1, 3));
     assert_eq!(m.provenance.tool, "make_artifact_golden.py");
@@ -366,7 +371,8 @@ fn golden_artifact_v1_decodes_bitwise() {
     assert_eq!(vim_tensor_schema(&cfg).len(), m.tensors.len());
 
     // Every tensor matches the generation formula bit-for-bit.
-    for (t, (name, data)) in artifact.weights.named_tensors().iter().enumerate() {
+    for (t, (name, view)) in artifact.weights.named_tensors().iter().enumerate() {
+        let data = view.as_f32().expect("v1 artifacts decode to dense f32 tensors");
         for (k, &v) in data.iter().enumerate() {
             assert_eq!(
                 v.to_bits(),

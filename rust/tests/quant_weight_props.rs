@@ -1,0 +1,368 @@
+//! Properties of the hybrid weight-quantization path: INT8 artifact
+//! tensors (v2), the quantized GEMM kernels, and the per-site precision
+//! search (hand-rolled harness: proptest is unavailable offline; `Pcg`
+//! provides deterministic shrink-free random cases).
+//!
+//! The contract under test:
+//!
+//! * `matmul_q8` is *bitwise identical* to dequantize-then-`matmul`
+//!   (same accumulation schedule by construction), and `matmul_i8`
+//!   matches an exact f32-over-integer-codes oracle with the identical
+//!   epilogue, over random shapes;
+//! * a quantized-weight artifact (v2, mixed f32/i8 tensors) saves,
+//!   reopens, and serves bitwise what the in-memory quantized weights
+//!   compute — which itself equals the dequantized f32 oracle;
+//! * full INT8 on `micro_s` lands at <= 30% of the f32 blob;
+//! * the committed v1 golden fixture migrates: quantize -> save writes a
+//!   v2 artifact whose forward is bitwise the quantized in-memory model;
+//! * corrupt dtype/scale records are rejected with the *typed*
+//!   [`ArtifactError`] variant naming the failure (forbidden i8 on a
+//!   sensitive tensor, manifest/weights dtype drift, non-positive /
+//!   non-finite / drifted scales, header-vs-manifest version mismatch);
+//! * the precision search is deterministic and only ever quantizes
+//!   eligible tensors.
+
+use std::path::PathBuf;
+
+use mamba_x::config::MambaXConfig;
+use mamba_x::quant::{
+    quantize_rows_i8, quantize_tensor, QuantTensor, TensorDtype, WeightQuantOpts, WeightQuantPlan,
+};
+use mamba_x::runtime::{
+    fnv1a64, ArtifactError, ArtifactStore, InferenceBackend, ModelSource, NativeBackend,
+    Provenance, VimArtifact, WeightQuantSpec, ARTIFACT_VERSION,
+};
+use mamba_x::sim::sfu::SfuTables;
+use mamba_x::util::Pcg;
+use mamba_x::vision::{
+    matmul, matmul_i8, matmul_q8, quantizable_tensor, ForwardConfig, VimWeights, WeightMat,
+};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/artifact_v1.bin")
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mamba_x_quant_props_{}_{tag}", std::process::id()))
+}
+
+fn rand_image(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..len).map(|_| rng.f32_in(-1.0, 1.0)).collect()
+}
+
+fn prov(detail: &str) -> Provenance {
+    Provenance { tool: "quant_weight_props".to_string(), detail: detail.to_string() }
+}
+
+/// `micro_s` weights with every eligible tensor forced to INT8 at plain
+/// absmax — the deterministic "maximally quantized" model the artifact
+/// and corruption tests build on (no search in the loop).
+fn fully_quantized_micro_s(seed: u64) -> (ForwardConfig, VimWeights) {
+    let cfg = ForwardConfig::micro_s();
+    let mut weights = VimWeights::init(&cfg, seed);
+    let plan = WeightQuantPlan::all_at_absmax(&weights.weight_quant_candidates());
+    assert!(!plan.sites.is_empty(), "micro_s must expose quantizable sites");
+    weights.apply_weight_quant(&plan).unwrap();
+    (cfg, weights)
+}
+
+// ---------------------------------------------------------------------------
+// Kernel <-> oracle equivalence
+// ---------------------------------------------------------------------------
+
+/// PROPERTY: over random shapes, `matmul_q8(x, q, s)` is bitwise
+/// `matmul(x, dequant(q, s))`, and `matmul_i8` is bitwise the same
+/// product computed over the integer codes in f32 with an identical
+/// `(sx * sw) * acc + bias` epilogue. The f32-over-codes oracle is
+/// exact because every partial sum stays below 2^24 (k <= 96 here,
+/// k * 127 * 127 < 2^24 holds up to k = 1040).
+#[test]
+fn prop_quantized_gemms_match_their_oracles_bitwise() {
+    let mut rng = Pcg::new(0x0817_5CA1E);
+    for case in 0..10u64 {
+        let m = rng.usize_in(1, 33); // crosses the MR tile edge
+        let k = rng.usize_in(1, 96);
+        let n = rng.usize_in(1, 70); // crosses the NR tile edge
+        let x: Vec<f32> = (0..m * k).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.f32_in(-0.5, 0.5)).collect();
+        let b = (case % 2 == 0).then_some(bias.as_slice());
+        let tag = format!("case {case}: {m}x{k}x{n} bias={}", b.is_some());
+
+        let qt = quantize_tensor(&w, k, n, 1.0);
+        let oracle = matmul(&x, &qt.dequant(), b, m, k, n);
+        let got = matmul_q8(&x, &qt.q, &qt.scales, b, m, k, n);
+        assert_eq!(got.len(), oracle.len(), "{tag}");
+        for (i, (g, o)) in got.iter().zip(&oracle).enumerate() {
+            assert_eq!(g.to_bits(), o.to_bits(), "{tag}: matmul_q8 element {i}");
+        }
+
+        let (qx, xscales) = quantize_rows_i8(&x, m, k);
+        let got = matmul_i8(&qx, &xscales, &qt.q, &qt.scales, b, m, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32; // exact: integer-valued partial sums < 2^24
+                for kk in 0..k {
+                    acc += qx[i * k + kk] as f32 * qt.q[kk * n + j] as f32;
+                }
+                let v = (xscales[i] * qt.scales[j]) * acc;
+                let want = match b {
+                    Some(bb) => v + bb[j],
+                    None => v,
+                };
+                assert_eq!(
+                    got[i * n + j].to_bits(),
+                    want.to_bits(),
+                    "{tag}: matmul_i8 element ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quantized artifact v2: round trip, serving, size
+// ---------------------------------------------------------------------------
+
+/// A mixed f32/i8 artifact saves -> opens -> serves bitwise what the
+/// in-memory quantized weights compute, which in turn equals the
+/// dequantized f32 oracle; every tensor view survives unchanged, the
+/// manifest records i8 only on eligible tensors, and full INT8 puts
+/// `micro_s` at <= 30% of its f32 blob.
+#[test]
+fn quantized_artifact_round_trips_and_serves_bitwise() {
+    let (cfg, weights) = fully_quantized_micro_s(33);
+    let (f32_eq, stored) = weights.weight_bytes();
+    assert!(
+        (stored as f64) <= 0.30 * f32_eq as f64,
+        "full INT8 micro_s stores {stored} of {f32_eq} f32-equivalent bytes \
+         ({:.1}%), expected <= 30%",
+        100.0 * stored as f64 / f32_eq as f64
+    );
+
+    let artifact = VimArtifact::from_weights(weights.clone(), None, prov("v2")).unwrap();
+    assert_eq!(artifact.manifest.version, ARTIFACT_VERSION);
+    let mut i8_tensors = 0usize;
+    for t in &artifact.manifest.tensors {
+        match t.dtype {
+            TensorDtype::I8 => {
+                assert!(quantizable_tensor(&t.name), "{}: i8 on a sensitive tensor", t.name);
+                i8_tensors += 1;
+            }
+            TensorDtype::F32 => {}
+        }
+    }
+    assert!(i8_tensors > 0, "full plan must produce i8 tensor records");
+    let meta_stored: u64 = artifact.manifest.tensors.iter().map(|t| t.stored_bytes()).sum();
+    assert_eq!(meta_stored, stored as u64, "manifest byte accounting");
+
+    let path = temp_path("v2_roundtrip.mxa");
+    ArtifactStore::save(&path, &artifact).unwrap();
+    let summary = ArtifactStore::inspect(&path).unwrap();
+    assert_eq!(summary.manifest, artifact.manifest);
+    assert_eq!(summary.weight_bytes, stored as u64);
+    assert_eq!(summary.params * 4, f32_eq as u64);
+
+    let loaded = ArtifactStore::open(&path).unwrap();
+    assert_eq!(loaded.manifest, artifact.manifest);
+    for ((name, a), (_, b)) in weights.named_tensors().iter().zip(loaded.weights.named_tensors()) {
+        assert_eq!(*a, b, "tensor {name} drifted through the v2 blob");
+    }
+
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    let dequant = weights.dequantized();
+    let mut backend = NativeBackend::from_source(&ModelSource::Artifact(path.clone())).unwrap();
+    for s in 0..3u64 {
+        let img = rand_image(500 + s, cfg.input_len());
+        let want = weights.forward_batch(&tables, &scan, &[img.as_slice()]);
+        let oracle = dequant.forward_batch(&tables, &scan, &[img.as_slice()]);
+        assert_eq!(want, oracle, "image {s}: quantized forward != dequantized f32 oracle");
+        let t = mamba_x::runtime::Tensor::new(cfg.input_shape(), img).unwrap();
+        assert_eq!(backend.infer(&t).unwrap(), want[0], "image {s}: artifact serving diverged");
+    }
+    let reported = backend.weight_bytes().expect("native backend reports weight bytes");
+    assert_eq!(reported, (f32_eq, stored));
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// v1 -> v2 migration
+// ---------------------------------------------------------------------------
+
+/// The typed migration path: open the committed v1 fixture (pure f32),
+/// run the precision search over it, and save — the result is a v2
+/// artifact that reopens and forwards bitwise as the quantized
+/// in-memory model, with the v1 calibration table carried along.
+#[test]
+fn golden_v1_migrates_to_quantized_v2_bitwise() {
+    let v1 = ArtifactStore::open(golden_path()).unwrap();
+    assert_eq!(v1.manifest.version, 1);
+    assert!(v1.manifest.tensors.iter().all(|t| t.dtype == TensorDtype::F32));
+    let cfg = v1.manifest.forward_config().unwrap();
+
+    let spec = WeightQuantSpec { samples: 2, seed: 11 };
+    let quantized = NativeBackend::quantize_weights(&v1.weights, &spec).unwrap();
+    let migrated =
+        VimArtifact::from_weights(quantized.clone(), v1.calib.clone(), prov("migrate")).unwrap();
+    assert_eq!(migrated.manifest.version, ARTIFACT_VERSION);
+    assert_eq!(migrated.calib, v1.calib, "migration must carry the calibration table");
+
+    let path = temp_path("migrated_v2.mxa");
+    ArtifactStore::save(&path, &migrated).unwrap();
+    let back = ArtifactStore::open(&path).unwrap();
+    assert_eq!(back.manifest, migrated.manifest);
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    let img = rand_image(7, cfg.input_len());
+    assert_eq!(
+        back.weights.forward_batch(&tables, &scan, &[img.as_slice()]),
+        quantized.forward_batch(&tables, &scan, &[img.as_slice()]),
+        "migrated artifact forward != in-memory quantized forward"
+    );
+
+    // Quantizing twice is refused with a message naming the state.
+    let err = NativeBackend::quantize_weights(&quantized, &spec);
+    match err {
+        Ok(_) => panic!("double quantization must be refused"),
+        Err(e) => assert!(
+            e.to_string().contains("already quantized"),
+            "unexpected double-quantize error: {e}"
+        ),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Corruption / rejection matrix for dtype and scale records
+// ---------------------------------------------------------------------------
+
+/// Mutate the `patch_w` INT8 storage of a fully quantized artifact and
+/// re-encode (the checksum is legitimately re-stamped, the manifest
+/// keeps the original records), returning the decode-side rejection.
+fn scale_corruption(artifact: &VimArtifact, mutate: &dyn Fn(&mut QuantTensor)) -> ArtifactError {
+    let mut bad = artifact.clone();
+    match &mut bad.weights.patch_w {
+        WeightMat::I8(qt) => mutate(qt),
+        WeightMat::F32(_) => panic!("patch_w is quantized under the full plan"),
+    }
+    let bytes = ArtifactStore::encode(&bad).unwrap();
+    ArtifactStore::decode(&bytes).unwrap_err()
+}
+
+#[test]
+fn corrupt_dtype_and_scale_records_rejected_typed() {
+    let (_, weights) = fully_quantized_micro_s(5);
+    let artifact = VimArtifact::from_weights(weights, None, prov("matrix")).unwrap();
+    let good = ArtifactStore::encode(&artifact).unwrap();
+    assert!(ArtifactStore::decode(&good).is_ok(), "reference must decode");
+
+    // An i8 dtype record on a precision-sensitive tensor is refused at
+    // the manifest gate, before any blob bytes are interpreted.
+    let mut hostile = artifact.manifest.clone();
+    let idx = hostile
+        .tensors
+        .iter()
+        .position(|t| !quantizable_tensor(&t.name))
+        .expect("schema has sensitive tensors");
+    hostile.tensors[idx].dtype = TensorDtype::I8;
+    match hostile.forward_config() {
+        Err(ArtifactError::DtypeForbidden { name }) => {
+            assert_eq!(name, hostile.tensors[idx].name);
+        }
+        other => panic!("dtype denylist gate: {other:?}"),
+    }
+
+    // Manifest/weights dtype drift: the manifest claims f32 for a tensor
+    // stored as i8 — the encoder's byte accounting refuses to write it.
+    let mut drifted = artifact.clone();
+    let qidx = drifted
+        .manifest
+        .tensors
+        .iter()
+        .position(|t| t.dtype == TensorDtype::I8)
+        .expect("reference has i8 records");
+    drifted.manifest.tensors[qidx].dtype = TensorDtype::F32;
+    assert!(
+        matches!(ArtifactStore::encode(&drifted), Err(ArtifactError::ConfigMismatch { .. })),
+        "dtype drift gate"
+    );
+
+    // Scale records: non-positive and non-finite scales fail the decode
+    // validity check; a drifted (but valid-looking) scale fails the
+    // absmax integrity re-computation. Quadrupling the *largest* scale
+    // provably moves the dequantized absmax: at percentile 1.0 every
+    // nonzero column holds a +/-127 code, so absmax = 127 * max(scales).
+    let e = scale_corruption(&artifact, &|qt| qt.scales[0] = -qt.scales[0]);
+    assert!(matches!(e, ArtifactError::TensorCorrupt { .. }), "negative scale: {e}");
+    let e = scale_corruption(&artifact, &|qt| qt.scales[0] = f32::NAN);
+    assert!(matches!(e, ArtifactError::TensorCorrupt { .. }), "non-finite scale: {e}");
+    let e = scale_corruption(&artifact, &|qt| {
+        let j = (0..qt.scales.len()).max_by(|&a, &b| qt.scales[a].total_cmp(&qt.scales[b]));
+        qt.scales[j.unwrap()] *= 4.0;
+    });
+    assert!(matches!(e, ArtifactError::TensorCorrupt { .. }), "drifted scale: {e}");
+
+    // A v2 file whose header is patched down to v1 (checksum re-stamped)
+    // is caught by the manifest/header version cross-check — dtype
+    // records must never load under a version that predates them.
+    let mut masquerade = good.clone();
+    masquerade[8..12].copy_from_slice(&1u32.to_le_bytes());
+    let n = masquerade.len();
+    let c = fnv1a64(&masquerade[..n - 8]);
+    masquerade[n - 8..].copy_from_slice(&c.to_le_bytes());
+    match ArtifactStore::decode(&masquerade) {
+        Err(ArtifactError::Manifest(detail)) => {
+            assert!(detail.contains("header says 1"), "version cross-check detail: {detail}");
+        }
+        other => panic!("header/manifest version gate: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Precision search determinism
+// ---------------------------------------------------------------------------
+
+/// Same weights, images, and options -> identical plans (accepted sites
+/// with their percentiles AND rejections), and every accepted site is an
+/// eligible tensor. The search is the only heuristic stage of the
+/// pipeline; everything downstream being bitwise makes its determinism
+/// the whole reproducibility story.
+#[test]
+fn weight_precision_search_is_deterministic() {
+    let cfg = ForwardConfig::micro_s();
+    let weights = VimWeights::init(&cfg, 12);
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    let imgs: Vec<Vec<f32>> = (0..3).map(|i| rand_image(70 + i, cfg.input_len())).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let opts = WeightQuantOpts { samples: refs.len(), ..WeightQuantOpts::default() };
+
+    let p1 = weights.search_weight_quant(&tables, &scan, &refs, &opts).unwrap();
+    let p2 = weights.search_weight_quant(&tables, &scan, &refs, &opts).unwrap();
+    assert_eq!(p1, p2, "search must be run-to-run deterministic");
+
+    let candidates = weights.weight_quant_candidates();
+    assert_eq!(
+        p1.sites.len() + p1.rejected.len(),
+        candidates.len(),
+        "every candidate is either accepted or rejected"
+    );
+    for (name, pct) in &p1.sites {
+        assert!(quantizable_tensor(name), "accepted site {name} is not eligible");
+        assert!(*pct > 0.0 && *pct <= 1.0, "site {name}: percentile {pct} out of range");
+    }
+    for (name, _) in &p1.rejected {
+        assert!(candidates.contains(name), "rejected site {name} is not a candidate");
+    }
+
+    // Applying the plan is itself deterministic: two applications yield
+    // byte-identical artifacts.
+    let apply = || {
+        let mut w = weights.clone();
+        w.apply_weight_quant(&p1).unwrap();
+        ArtifactStore::encode(&VimArtifact::from_weights(w, None, prov("det")).unwrap()).unwrap()
+    };
+    assert_eq!(apply(), apply(), "plan application must be byte-deterministic");
+}
