@@ -243,6 +243,42 @@ fn main() {
         "native_forward_batch8_calib(micro)",
     );
 
+    // 6c. Model-zoo cold start: eager `ArtifactStore::open` (full tensor
+    //     decode + per-tensor integrity checks) vs `open_lazy` (header +
+    //     manifest + streamed whole-file checksum; tensor verification
+    //     deferred to first touch) on a saved micro_l artifact — the
+    //     serving engine's `"verify": "lazy"` path. The `zoo_cold_start`
+    //     floor in BENCH_baseline.json keeps lazy open meaningfully
+    //     cheaper than the eager open it defers.
+    let zoo_speedup = {
+        use mamba_x::runtime::{ArtifactStore, Provenance, VimArtifact};
+        let zcfg = ForwardConfig::micro_l();
+        let art = VimArtifact::from_weights(
+            VimWeights::init(&zcfg, 11),
+            None,
+            Provenance { tool: "hotpath-bench".into(), detail: "zoo cold-start fixture".into() },
+        )
+        .expect("micro_l packages as an artifact");
+        let path = std::env::temp_dir()
+            .join(format!("mamba_x_zoo_cold_start_{}.mxa", std::process::id()));
+        ArtifactStore::save(&path, &art).expect("save cold-start bench artifact");
+        let s = bench(warm_big, iters_big, || {
+            ArtifactStore::open(&path).expect("eager open").manifest.n_blocks
+        });
+        rep.push("artifact_open_eager(micro_l)", "micro_l", 1.0, s);
+        let s = bench(warm_big, iters_big, || {
+            ArtifactStore::open_lazy(&path).expect("lazy open").manifest().n_blocks
+        });
+        rep.push("artifact_open_lazy(micro_l)", "micro_l", 1.0, s);
+        let zoo = rep.speedup(
+            "zoo_cold_start",
+            "artifact_open_eager(micro_l)",
+            "artifact_open_lazy(micro_l)",
+        );
+        let _ = std::fs::remove_file(&path);
+        zoo
+    };
+
     // 7. Device models end-to-end (timing models, unchanged).
     let gpu = GpuModel::new(GpuConfig::xavier());
     let ops = vim_model_ops(&VimModel::base(), 1024);
@@ -262,6 +298,9 @@ fn main() {
     }
     if let Some(c) = calib_speedup {
         println!("calibrated batch8 forward vs dynamic: {c:.2}x (static scales, fused scan)");
+    }
+    if let Some(z) = zoo_speedup {
+        println!("zoo cold start: lazy artifact open {z:.2}x vs eager (micro_l)");
     }
     println!("gate these records in CI with: mamba-x perfcheck (vs BENCH_baseline.json)");
 }

@@ -64,9 +64,23 @@
 //! and `rust/tests/chaos_props.rs` drives the whole story under seeded
 //! fault injection. Multi-model bitwise invariance vs direct inference
 //! lives in `rust/tests/engine_props.rs`.
+//!
+//! The registry is **live**: [`Engine::add_model`], [`Engine::remove_model`]
+//! and [`Engine::swap_model`] mutate the hosted set while traffic flows.
+//! Every admitted job is stamped with its model's weight *epoch*; a swap
+//! installs the new factory under the state lock and bumps the epoch, so
+//! jobs admitted before the swap still execute on the old weights (the
+//! previous factory is retained until the next swap) while jobs admitted
+//! after run on the new — workers split a drained batch into contiguous
+//! same-epoch groups and (re)build their cached backend per epoch.
+//! Removal retires the entry: queued jobs drain normally, new submissions
+//! are refused [`RejectReason::UnknownModel`], and the retired books stay
+//! in the final report. The invariant `admitted == completed +
+//! deadline_exceeded + backend_failed` holds across every transition
+//! (`rust/tests/zoo_props.rs`).
 
 use std::fmt;
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -75,7 +89,7 @@ use anyhow::{anyhow, bail, Context as _, Result};
 use crate::quant::CalibTable;
 use crate::runtime::{
     fnv1a64, ArtifactStore, BackendFactory, FaultPlan, InferenceBackend, ModelRegistry,
-    ModelSource, ModelSpec, Tensor, WeightQuantSpec,
+    ModelSource, ModelSpec, Tensor, VerifyMode, WeightQuantSpec,
 };
 use crate::util::Json;
 use crate::vision::ForwardConfig;
@@ -522,6 +536,12 @@ pub struct ModelVariantConfig {
     /// Per-model breaker cooldown (ms); `None` = the engine-wide
     /// `breaker_cooldown_ms`.
     pub breaker_cooldown_ms: Option<u64>,
+    /// Artifact verify mode (`"verify": "eager" | "lazy"`). Eager (the
+    /// default) fully decodes and verifies the artifact when the factory
+    /// is built; lazy runs the structural + checksum phase at build and
+    /// defers per-tensor verification to first worker construction.
+    /// Ignored for random-init sources.
+    pub verify: VerifyMode,
 }
 
 impl ModelVariantConfig {
@@ -536,6 +556,7 @@ impl ModelVariantConfig {
             quantize: None,
             breaker_threshold: None,
             breaker_cooldown_ms: None,
+            verify: VerifyMode::Eager,
         }
     }
 
@@ -550,6 +571,7 @@ impl ModelVariantConfig {
             quantize: None,
             breaker_threshold: None,
             breaker_cooldown_ms: None,
+            verify: VerifyMode::Eager,
         }
     }
 
@@ -578,9 +600,10 @@ impl ModelVariantConfig {
     }
 
     /// Build this variant's backend factory: resolve the source (opening
-    /// and fully verifying an artifact), load the calibration override
-    /// (if any), bake both into a [`crate::runtime::NativeBackend`]
-    /// constructor.
+    /// and — under eager verify — fully decoding an artifact), load the
+    /// calibration override (if any), bake both into a
+    /// [`crate::runtime::NativeBackend`] constructor. Lazy verify defers
+    /// per-tensor decode + verification to first worker construction.
     pub fn build_factory(&self) -> Result<BackendFactory> {
         let source =
             self.source.to_source().with_context(|| format!("model {:?}", self.name))?;
@@ -591,7 +614,7 @@ impl ModelVariantConfig {
             )),
             None => None,
         };
-        crate::runtime::NativeBackend::factory(source, calib, self.quantize)
+        crate::runtime::NativeBackend::factory_ex(source, calib, self.quantize, self.verify)
             .with_context(|| format!("model {:?}", self.name))
     }
 
@@ -612,7 +635,10 @@ impl ModelVariantConfig {
         Ok(spec)
     }
 
-    fn from_json(j: &Json) -> Result<Self> {
+    /// Parse one variant from its JSON object form — the engine-config
+    /// `models` entry shape, also accepted verbatim by the runtime
+    /// admin endpoints (`POST /admin/models/{add,swap}`).
+    pub fn from_json(j: &Json) -> Result<Self> {
         let obj = j.obj()?;
         for key in obj.keys() {
             if ![
@@ -626,6 +652,7 @@ impl ModelVariantConfig {
                 "quantize",
                 "breaker_threshold",
                 "breaker_cooldown_ms",
+                "verify",
             ]
             .contains(&key.as_str())
             {
@@ -658,6 +685,7 @@ impl ModelVariantConfig {
             quantize: None,
             breaker_threshold: None,
             breaker_cooldown_ms: None,
+            verify: VerifyMode::Eager,
         };
         if let Some(c) = j.opt("calib") {
             v.calib = Some(c.str()?.to_string());
@@ -691,10 +719,16 @@ impl ModelVariantConfig {
         if let Some(c) = j.opt("breaker_cooldown_ms") {
             v.breaker_cooldown_ms = Some(c.u64_exact()?);
         }
+        if let Some(m) = j.opt("verify") {
+            v.verify = VerifyMode::parse(m.str()?)
+                .map_err(|e| anyhow!("model {:?}: {e}", v.name))?;
+        }
         Ok(v)
     }
 
-    fn to_json(&self) -> Json {
+    /// Serialize back to the engine-config entry shape (round-trips
+    /// through [`ModelVariantConfig::from_json`]; defaults are omitted).
+    pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("name", Json::Str(self.name.clone())),
             ("source", self.source.to_json()),
@@ -722,6 +756,9 @@ impl ModelVariantConfig {
         }
         if let Some(c) = self.breaker_cooldown_ms {
             pairs.push(("breaker_cooldown_ms", Json::Num(c as f64)));
+        }
+        if self.verify != VerifyMode::Eager {
+            pairs.push(("verify", Json::Str(self.verify.name().to_string())));
         }
         Json::obj_from(pairs)
     }
@@ -917,6 +954,11 @@ struct Job {
     /// the *actual* wait bound, enforced typed at dequeue — no priority
     /// here, so an accepted request carries no further *shed* surface.
     deadline_us: Option<u64>,
+    /// Weight epoch of the target model at admission (stamped under the
+    /// state lock, so queued epochs are non-decreasing): the job
+    /// executes on exactly these weights even if the model is
+    /// hot-swapped while it waits.
+    epoch: u64,
 }
 
 /// Per-model counters updated lock-free (admission + workers).
@@ -950,6 +992,13 @@ struct Breaker {
     /// Engine-relative time the breaker last opened (or last released a
     /// half-open probe, so probing is bounded to one per cooldown).
     opened_at_us: AtomicU64,
+    /// Actual state changes (closed/open/half_open), as structured
+    /// events for the report and `/healthz` — steady-state successes and
+    /// sub-threshold failures do not count.
+    transitions: AtomicU64,
+    /// Engine-relative time of the last state change (`transitions == 0`
+    /// means never).
+    last_transition_us: AtomicU64,
 }
 
 impl Breaker {
@@ -958,6 +1007,8 @@ impl Breaker {
             state: AtomicU8::new(BREAKER_CLOSED),
             consecutive: AtomicU32::new(0),
             opened_at_us: AtomicU64::new(0),
+            transitions: AtomicU64::new(0),
+            last_transition_us: AtomicU64::new(0),
         }
     }
 
@@ -967,6 +1018,11 @@ impl Breaker {
             BREAKER_HALF_OPEN => "half_open",
             _ => "closed",
         }
+    }
+
+    fn note_transition(&self, now_us: u64) {
+        self.transitions.fetch_add(1, Ordering::Relaxed);
+        self.last_transition_us.store(now_us, Ordering::Relaxed);
     }
 
     /// One backend failure. A closed breaker opens at `threshold`
@@ -980,20 +1036,25 @@ impl Breaker {
         if state == BREAKER_HALF_OPEN {
             self.opened_at_us.store(now_us, Ordering::Relaxed);
             self.state.store(BREAKER_OPEN, Ordering::Relaxed);
+            self.note_transition(now_us);
             return;
         }
         let n = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
         if state == BREAKER_CLOSED && n >= threshold {
             self.opened_at_us.store(now_us, Ordering::Relaxed);
             self.state.store(BREAKER_OPEN, Ordering::Relaxed);
+            self.note_transition(now_us);
         }
     }
 
     /// One backend success: close and reset (a queued request succeeding
-    /// while the breaker is open is direct evidence of recovery).
-    fn record_success(&self) {
+    /// while the breaker is open is direct evidence of recovery). Also
+    /// the hot-swap reset — fresh weights get a fresh verdict.
+    fn record_success(&self, now_us: u64) {
         self.consecutive.store(0, Ordering::Relaxed);
-        self.state.store(BREAKER_CLOSED, Ordering::Relaxed);
+        if self.state.swap(BREAKER_CLOSED, Ordering::Relaxed) != BREAKER_CLOSED {
+            self.note_transition(now_us);
+        }
     }
 
     /// Admission check: closed admits everything; open admits nothing
@@ -1018,6 +1079,7 @@ impl Breaker {
                     .is_ok();
                 if won {
                     self.opened_at_us.store(now_us, Ordering::Relaxed);
+                    self.note_transition(now_us);
                 }
                 won
             }
@@ -1037,22 +1099,136 @@ impl Breaker {
     }
 }
 
+/// The model's epoch-stamped backend factories. `current` builds the
+/// weights every job admitted *now* will run on; `prev` is retained
+/// until the next swap so jobs admitted before a swap can still build
+/// their epoch's weights on a worker that never had them cached. At most
+/// two weight generations are reachable per model at any time.
+struct FactorySet {
+    current: (u64, BackendFactory),
+    prev: Option<(u64, BackendFactory)>,
+}
+
 struct ModelEntry {
     name: String,
-    factory: BackendFactory,
-    slo_us: Option<u64>,
+    factories: Mutex<FactorySet>,
+    /// Mirror of `factories.current.0`, so submit can stamp jobs and
+    /// `/healthz` can report without taking the factory lock.
+    epoch: AtomicU64,
+    /// Tombstone: a removed model stops admitting (UnknownModel) but its
+    /// queue drains normally and its books survive into the report.
+    retired: AtomicBool,
+    /// Default latency target in microseconds (0 = none); atomic so a
+    /// hot swap can update it.
+    slo_us: AtomicU64,
     stats: ModelStats,
     breaker: Breaker,
     /// Resolved breaker trip threshold: the spec's override or the
     /// engine-wide default (0 = breaker disabled for this model).
-    breaker_threshold: u32,
+    breaker_threshold: AtomicU32,
     /// Resolved breaker cooldown (microseconds) before half-open probes.
-    breaker_cooldown_us: u64,
+    breaker_cooldown_us: AtomicU64,
+    /// Hot swaps performed on this entry (re-adding a retired name also
+    /// counts — it installs fresh weights the same way).
+    swaps: AtomicU64,
+    /// Engine-relative time of the last swap (`swaps == 0` = never).
+    last_swap_us: AtomicU64,
+}
+
+impl ModelEntry {
+    /// Resolve a spec into a fresh entry at epoch 0 (build-time
+    /// registration and runtime `add_model` share this).
+    fn from_spec(spec: &ModelSpec, fault: &FaultPlan, defaults: (u32, u64)) -> ModelEntry {
+        ModelEntry {
+            name: spec.name.clone(),
+            // An empty/unmatched fault plan wraps to the identity, so
+            // the faults-free path pays nothing.
+            factories: Mutex::new(FactorySet {
+                current: (0, fault.wrap(&spec.name, Arc::clone(&spec.factory))),
+                prev: None,
+            }),
+            epoch: AtomicU64::new(0),
+            retired: AtomicBool::new(false),
+            slo_us: AtomicU64::new(spec.slo_us.unwrap_or(0)),
+            stats: ModelStats {
+                rejected_full: AtomicU64::new(0),
+                rejected_shed: AtomicU64::new(0),
+                rejected_quota: AtomicU64::new(0),
+                rejected_breaker: AtomicU64::new(0),
+                deadline_exceeded: AtomicU64::new(0),
+                backend_failed: AtomicU64::new(0),
+                service_ewma_us: AtomicU64::new(spec.service_hint_us),
+            },
+            breaker: Breaker::new(),
+            // Per-model overrides resolve against the engine-wide
+            // defaults ONCE, here — the hot paths read the entry.
+            breaker_threshold: AtomicU32::new(spec.breaker_threshold.unwrap_or(defaults.0)),
+            breaker_cooldown_us: AtomicU64::new(
+                spec.breaker_cooldown_ms.unwrap_or(defaults.1).saturating_mul(1_000),
+            ),
+            swaps: AtomicU64::new(0),
+            last_swap_us: AtomicU64::new(0),
+        }
+    }
+
+    fn live(&self) -> bool {
+        !self.retired.load(Ordering::Acquire)
+    }
+
+    fn slo(&self) -> Option<u64> {
+        match self.slo_us.load(Ordering::Relaxed) {
+            0 => None,
+            v => Some(v),
+        }
+    }
+
+    /// The factory for a job epoch: the live one, the retained pre-swap
+    /// one, or `None` when two swaps outran the queue (the job's weights
+    /// are gone; it fails typed, never silently on the wrong weights).
+    fn factory_for(&self, epoch: u64) -> Option<BackendFactory> {
+        let f = self.factories.lock().unwrap_or_else(|p| p.into_inner());
+        if f.current.0 == epoch {
+            return Some(Arc::clone(&f.current.1));
+        }
+        f.prev.as_ref().filter(|(e, _)| *e == epoch).map(|(_, fac)| Arc::clone(fac))
+    }
+
+    /// Hot-swap: install `spec`'s factory as the next epoch (retaining
+    /// the current one for in-flight jobs), refresh the serving knobs,
+    /// and reset the breaker — fresh weights get a fresh verdict.
+    fn swap_in(&self, spec: &ModelSpec, fault: &FaultPlan, defaults: (u32, u64), now_us: u64) {
+        let factory = fault.wrap(&spec.name, Arc::clone(&spec.factory));
+        {
+            let mut f = self.factories.lock().unwrap_or_else(|p| p.into_inner());
+            let next = f.current.0 + 1;
+            f.prev = Some(std::mem::replace(&mut f.current, (next, factory)));
+            self.epoch.store(next, Ordering::Release);
+        }
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.last_swap_us.store(now_us, Ordering::Relaxed);
+        self.slo_us.store(spec.slo_us.unwrap_or(0), Ordering::Relaxed);
+        if spec.service_hint_us > 0 {
+            self.stats.service_ewma_us.store(spec.service_hint_us, Ordering::Relaxed);
+        }
+        self.breaker_threshold
+            .store(spec.breaker_threshold.unwrap_or(defaults.0), Ordering::Relaxed);
+        self.breaker_cooldown_us.store(
+            spec.breaker_cooldown_ms.unwrap_or(defaults.1).saturating_mul(1_000),
+            Ordering::Relaxed,
+        );
+        self.breaker.record_success(now_us);
+    }
 }
 
 struct EngineState {
+    /// The hosted models. Under the state lock so the registry can grow
+    /// at runtime (`Engine::add_model`); entries are `Arc` so admission
+    /// and workers clone one out and use its lock-free counters without
+    /// holding the lock. Never shrinks — removal retires in place, so
+    /// `queues`/`metrics` indices stay aligned for the engine's life.
+    models: Vec<Arc<ModelEntry>>,
     /// One FIFO batcher per registered model, index-aligned with
-    /// `EngineShared::models`; a released batch never mixes models.
+    /// `models`; a released batch never mixes models.
     queues: Vec<DynamicBatcher<Job>>,
     /// Admitted-but-unanswered requests per client label (quota
     /// accounting; entries are removed when they reach zero). Lives
@@ -1077,10 +1253,10 @@ struct EngineState {
     /// First worker death message, surfaced at join when no worker ever
     /// exited cleanly.
     first_failure: Option<String>,
-    /// Per-model serving metrics (index-aligned with
-    /// `EngineShared::models`). Under the lock — workers fold a batch in
-    /// at the loop-bottom relock — so they survive worker respawns,
-    /// which detached per-thread metrics would not.
+    /// Per-model serving metrics (index-aligned with `models`). Under
+    /// the lock — workers fold a batch in at the loop-bottom relock — so
+    /// they survive worker respawns, which detached per-thread metrics
+    /// would not.
     metrics: Vec<Metrics>,
 }
 
@@ -1108,7 +1284,6 @@ struct EngineShared {
     workers: usize,
     /// Per-client in-flight quota (0 = unlimited, no accounting).
     client_quota: usize,
-    models: Vec<ModelEntry>,
     /// Live `Engine` handle clones; the last drop closes the queues.
     handles: AtomicUsize,
     rejected_unknown: AtomicU64,
@@ -1120,6 +1295,12 @@ struct EngineShared {
     deaths: mpsc::Sender<usize>,
     /// Respawns actually performed (reported and in `/healthz`).
     restarts: AtomicU64,
+    /// Fault-injection plan, retained so models added or swapped at
+    /// runtime are wrapped exactly like build-time registrations.
+    fault: FaultPlan,
+    /// Engine-wide breaker defaults `(threshold, cooldown_ms)` for specs
+    /// installed at runtime without their own overrides.
+    breaker_defaults: (u32, u64),
 }
 
 impl EngineShared {
@@ -1135,7 +1316,7 @@ impl EngineShared {
         let total = st
             .queues
             .iter()
-            .zip(&self.models)
+            .zip(&st.models)
             .map(|(q, m)| {
                 (q.len() as u64).saturating_mul(m.stats.service_ewma_us.load(Ordering::Relaxed))
             })
@@ -1169,31 +1350,39 @@ impl Drop for Engine {
 }
 
 impl Engine {
-    /// Names of the hosted model variants, in registration order.
+    /// Names of the *live* (non-retired) model variants, in registration
+    /// order.
     pub fn models(&self) -> Vec<String> {
-        self.shared.models.iter().map(|m| m.name.clone()).collect()
+        let st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.models.iter().filter(|m| m.live()).map(|m| m.name.clone()).collect()
     }
 
     /// Admit and enqueue a request, returning a waiter for its response.
     /// Fails immediately — typed, without enqueueing — when the target
-    /// model is unknown, the engine is shutting down, or admission
-    /// refuses ([`RejectReason`]).
+    /// model is unknown (never registered, or removed), the engine is
+    /// shutting down, or admission refuses ([`RejectReason`]).
     pub fn submit(&self, req: Request) -> std::result::Result<EngineWaiter, EngineError> {
         let Request { model, id, priority, deadline_us, client, image } = req;
-        let Some(midx) = self.shared.models.iter().position(|m| m.name == model) else {
+        let (reply, rx) = mpsc::channel();
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        let Some(midx) = st.models.iter().position(|m| m.live() && m.name == model) else {
+            let hosted = st
+                .models
+                .iter()
+                .filter(|m| m.live())
+                .map(|m| m.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", ");
+            drop(st);
             self.shared.rejected_unknown.fetch_add(1, Ordering::Relaxed);
-            let hosted =
-                self.shared.models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(", ");
             return Err(EngineError::Rejected {
                 model,
                 reason: RejectReason::UnknownModel,
                 detail: format!("hosted models: {hosted}"),
             });
         };
-        let entry = &self.shared.models[midx];
-        let deadline = deadline_us.or(entry.slo_us);
-        let (reply, rx) = mpsc::channel();
-        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        let entry = Arc::clone(&st.models[midx]);
+        let deadline = deadline_us.or(entry.slo());
         // A dead pool with respawns still pending is degraded, not
         // shutting down: the queue keeps absorbing while the supervisor
         // brings a worker back.
@@ -1202,7 +1391,8 @@ impl Engine {
         }
         // Circuit breaker: a model whose backend keeps failing fast-fails
         // typed instead of queueing work a sick backend will burn.
-        if !entry.breaker.admit(entry.breaker_cooldown_us, self.shared.now_us()) {
+        let cooldown_us = entry.breaker_cooldown_us.load(Ordering::Relaxed);
+        if !entry.breaker.admit(cooldown_us, self.shared.now_us()) {
             drop(st);
             entry.stats.rejected_breaker.fetch_add(1, Ordering::Relaxed);
             return Err(EngineError::Rejected {
@@ -1211,7 +1401,7 @@ impl Engine {
                 detail: format!(
                     "circuit breaker open after consecutive backend failures; \
                      retry after {}ms",
-                    entry.breaker_cooldown_us / 1_000
+                    cooldown_us / 1_000
                 ),
             });
         }
@@ -1268,6 +1458,10 @@ impl Engine {
                 client,
                 enqueued_at_us: now,
                 deadline_us: deadline,
+                // Under the state lock, so queued epochs never decrease:
+                // a swap (also under the lock) bumps this for every job
+                // admitted after it.
+                epoch: entry.epoch.load(Ordering::Acquire),
             },
             now,
         );
@@ -1281,6 +1475,82 @@ impl Engine {
         self.submit(req)?.wait()
     }
 
+    /// Host a new model variant in the running engine. The entry (queue,
+    /// metrics, breaker) is installed under the state lock; workers
+    /// build its backend lazily on the first batch. Re-adding a removed
+    /// name re-activates that entry with the new spec's weights (books
+    /// accumulate across the generations). Duplicate *live* names are
+    /// refused.
+    pub fn add_model(&self, spec: ModelSpec) -> std::result::Result<(), AdminError> {
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        if st.closed {
+            return Err(AdminError::ShuttingDown);
+        }
+        if let Some(existing) = st.models.iter().find(|m| m.name == spec.name) {
+            if existing.live() {
+                return Err(AdminError::DuplicateModel(spec.name.clone()));
+            }
+            // Re-activate the retired entry: install the new weights as
+            // a swap (keeps queued epochs monotone) and reopen admission.
+            let entry = Arc::clone(existing);
+            entry.swap_in(
+                &spec,
+                &self.shared.fault,
+                self.shared.breaker_defaults,
+                self.shared.now_us(),
+            );
+            entry.retired.store(false, Ordering::Release);
+            drop(st);
+            self.shared.work_cv.notify_all();
+            return Ok(());
+        }
+        st.models.push(Arc::new(ModelEntry::from_spec(
+            &spec,
+            &self.shared.fault,
+            self.shared.breaker_defaults,
+        )));
+        st.queues.push(DynamicBatcher::new(self.shared.policy));
+        st.metrics.push(Metrics::default());
+        drop(st);
+        self.shared.work_cv.notify_all();
+        Ok(())
+    }
+
+    /// Stop hosting a model variant. Queued jobs drain normally — an
+    /// admitted request is always answered — while new submissions to
+    /// the name are refused [`RejectReason::UnknownModel`] (counted in
+    /// `rejected_unknown_model`). The entry's metrics survive into the
+    /// final report, marked retired.
+    pub fn remove_model(&self, name: &str) -> std::result::Result<(), AdminError> {
+        let st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        if st.closed {
+            return Err(AdminError::ShuttingDown);
+        }
+        let Some(entry) = st.models.iter().find(|m| m.live() && m.name == name) else {
+            return Err(AdminError::UnknownModel(name.to_string()));
+        };
+        entry.retired.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Atomically replace a live variant's weights/backend. In-flight
+    /// and already-queued jobs complete on the old weights (their epoch's
+    /// factory is retained until the *next* swap); jobs admitted after
+    /// this call run on the new. The breaker resets — fresh weights get
+    /// a fresh verdict — and the swap is surfaced in the report and
+    /// `/healthz`.
+    pub fn swap_model(&self, name: &str, spec: ModelSpec) -> std::result::Result<(), AdminError> {
+        let st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        if st.closed {
+            return Err(AdminError::ShuttingDown);
+        }
+        let Some(entry) = st.models.iter().find(|m| m.live() && m.name == name) else {
+            return Err(AdminError::UnknownModel(name.to_string()));
+        };
+        entry.swap_in(&spec, &self.shared.fault, self.shared.breaker_defaults, self.shared.now_us());
+        Ok(())
+    }
+
     /// Point-in-time degradation snapshot (the `/healthz` surface).
     pub fn health(&self) -> EngineHealth {
         let st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
@@ -1289,15 +1559,52 @@ impl Engine {
             workers_total: self.shared.workers,
             respawns_pending: st.respawns_pending,
             restarts: self.shared.restarts.load(Ordering::Relaxed),
-            models: self
-                .shared
+            models: st
                 .models
                 .iter()
-                .map(|m| ModelHealth { name: m.name.clone(), breaker: m.breaker.state_str() })
+                .map(|m| ModelHealth {
+                    name: m.name.clone(),
+                    breaker: m.breaker.state_str(),
+                    breaker_transitions: m.breaker.transitions.load(Ordering::Relaxed),
+                    last_breaker_transition_us: m.breaker.last_transition_us.load(Ordering::Relaxed),
+                    epoch: m.epoch.load(Ordering::Relaxed),
+                    swaps: m.swaps.load(Ordering::Relaxed),
+                    last_swap_us: m.last_swap_us.load(Ordering::Relaxed),
+                    retired: !m.live(),
+                })
                 .collect(),
         }
     }
 }
+
+/// Typed failure surface of the runtime-registry operations
+/// ([`Engine::add_model`] / [`Engine::remove_model`] /
+/// [`Engine::swap_model`]) — the admin endpoints map these onto HTTP
+/// statuses (409 duplicate, 404 unknown, 503 shutting down).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdminError {
+    /// `add_model` of a name that is already hosted and live.
+    DuplicateModel(String),
+    /// `remove_model`/`swap_model` of a name that is not hosted (or
+    /// already removed).
+    UnknownModel(String),
+    /// The engine is draining; the registry no longer mutates.
+    ShuttingDown,
+}
+
+impl fmt::Display for AdminError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdminError::DuplicateModel(name) => {
+                write!(f, "model {name:?} is already hosted (remove or swap it instead)")
+            }
+            AdminError::UnknownModel(name) => write!(f, "model {name:?} is not hosted"),
+            AdminError::ShuttingDown => write!(f, "engine is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for AdminError {}
 
 /// Per-model slice of an [`EngineHealth`] snapshot.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -1305,6 +1612,20 @@ pub struct ModelHealth {
     pub name: String,
     /// Circuit breaker state: `"closed"`, `"open"`, or `"half_open"`.
     pub breaker: &'static str,
+    /// Breaker state changes since registration (structured events; 0 =
+    /// the breaker never moved).
+    pub breaker_transitions: u64,
+    /// Engine-relative time of the last breaker transition in
+    /// microseconds (meaningful only when `breaker_transitions > 0`).
+    pub last_breaker_transition_us: u64,
+    /// Current weight epoch (bumps by one per hot swap / re-add).
+    pub epoch: u64,
+    /// Hot swaps performed on this entry.
+    pub swaps: u64,
+    /// Engine-relative time of the last swap (`swaps == 0` = never).
+    pub last_swap_us: u64,
+    /// Removed from admission; queued work drained, books retained.
+    pub retired: bool,
 }
 
 /// Live degradation snapshot from [`Engine::health`] — what `/healthz`
@@ -1325,11 +1646,12 @@ pub struct EngineHealth {
 
 impl EngineHealth {
     /// Serving capacity is reduced (dead/respawning workers) or some
-    /// model's breaker is not closed.
+    /// *live* model's breaker is not closed (a removed model's frozen
+    /// breaker no longer degrades the engine).
     pub fn degraded(&self) -> bool {
         self.workers_alive < self.workers_total
             || self.respawns_pending > 0
-            || self.models.iter().any(|m| m.breaker != "closed")
+            || self.models.iter().any(|m| !m.retired && m.breaker != "closed")
     }
 }
 
@@ -1466,39 +1788,18 @@ impl EngineBuilder {
             bail!("engine has no registered models");
         }
         let fault = self.fault_plan.unwrap_or_default();
-        let models: Vec<ModelEntry> = self
+        let defaults = (self.breaker_threshold, self.breaker_cooldown_ms);
+        let models: Vec<Arc<ModelEntry>> = self
             .registry
             .specs()
             .iter()
-            .map(|s| ModelEntry {
-                name: s.name.clone(),
-                // An empty/unmatched fault plan wraps to the identity, so
-                // the faults-free path pays nothing.
-                factory: fault.wrap(&s.name, Arc::clone(&s.factory)),
-                slo_us: s.slo_us,
-                stats: ModelStats {
-                    rejected_full: AtomicU64::new(0),
-                    rejected_shed: AtomicU64::new(0),
-                    rejected_quota: AtomicU64::new(0),
-                    rejected_breaker: AtomicU64::new(0),
-                    deadline_exceeded: AtomicU64::new(0),
-                    backend_failed: AtomicU64::new(0),
-                    service_ewma_us: AtomicU64::new(s.service_hint_us),
-                },
-                breaker: Breaker::new(),
-                // Per-model overrides resolve against the engine-wide
-                // defaults ONCE, here — the hot paths read the entry.
-                breaker_threshold: s.breaker_threshold.unwrap_or(self.breaker_threshold),
-                breaker_cooldown_us: s
-                    .breaker_cooldown_ms
-                    .unwrap_or(self.breaker_cooldown_ms)
-                    .saturating_mul(1_000),
-            })
+            .map(|s| Arc::new(ModelEntry::from_spec(s, &fault, defaults)))
             .collect();
         let n_models = models.len();
         let (deaths_tx, deaths_rx) = mpsc::channel();
         let shared = Arc::new(EngineShared {
             state: Mutex::new(EngineState {
+                models,
                 queues: (0..n_models).map(|_| DynamicBatcher::new(self.policy)).collect(),
                 client_inflight: std::collections::HashMap::new(),
                 closed: false,
@@ -1517,13 +1818,14 @@ impl EngineBuilder {
             queue_depth: self.queue_depth,
             workers: self.workers,
             client_quota: self.client_quota,
-            models,
             handles: AtomicUsize::new(1),
             rejected_unknown: AtomicU64::new(0),
             restart_budget: self.restart_budget,
             backoff_base_ms: self.restart_backoff_ms,
             deaths: deaths_tx,
             restarts: AtomicU64::new(0),
+            fault,
+            breaker_defaults: defaults,
         });
         // Workers are detached: their lifecycle (exit accounting, metric
         // folds, respawns) runs through the shared state and the
@@ -1543,16 +1845,34 @@ impl EngineBuilder {
 /// Format tag of the `--report-json` artifact.
 pub const ENGINE_REPORT_FORMAT: &str = "mamba-x-engine-report";
 
-/// Version of the `--report-json` schema. v2 adds the fault-tolerance
+/// Version of the `--report-json` schema. v2 added the fault-tolerance
 /// counters: per-model `rejected_breaker` / `deadline_exceeded` /
-/// `backend_failed`, plus top-level `workers` and `restarts`.
-pub const ENGINE_REPORT_VERSION: u32 = 2;
+/// `backend_failed`, plus top-level `workers` and `restarts`. v3 adds
+/// the live-zoo fields: per-model `breaker_transitions` /
+/// `last_breaker_transition_us` / `epoch` / `swaps` / `last_swap_us` /
+/// `retired`.
+pub const ENGINE_REPORT_VERSION: u32 = 3;
 
 /// Per-model serving outcome, merged across the pool at join time.
 #[derive(Debug, Clone)]
 pub struct ModelReport {
     pub name: String,
     pub metrics: Metrics,
+    /// Breaker state changes over the engine's lifetime (0 = the
+    /// breaker never moved).
+    pub breaker_transitions: u64,
+    /// Engine-relative time of the last breaker transition
+    /// (microseconds; meaningful only when `breaker_transitions > 0`).
+    pub last_breaker_transition_us: u64,
+    /// Final weight epoch (swaps + re-adds performed on this entry).
+    pub epoch: u64,
+    /// Hot swaps performed on this entry.
+    pub swaps: u64,
+    /// Engine-relative time of the last swap (`swaps == 0` = never).
+    pub last_swap_us: u64,
+    /// The model had been removed from admission (`remove_model`) before
+    /// shutdown; its books are retained.
+    pub retired: bool,
 }
 
 /// Final engine accounting: one [`Metrics`] per hosted variant (latency
@@ -1600,6 +1920,18 @@ impl EngineReport {
                     _ => unreachable!("Metrics::to_json returns an object"),
                 };
                 obj.insert("name".to_string(), Json::Str(m.name.clone()));
+                obj.insert(
+                    "breaker_transitions".to_string(),
+                    Json::Num(m.breaker_transitions as f64),
+                );
+                obj.insert(
+                    "last_breaker_transition_us".to_string(),
+                    Json::Num(m.last_breaker_transition_us as f64),
+                );
+                obj.insert("epoch".to_string(), Json::Num(m.epoch as f64));
+                obj.insert("swaps".to_string(), Json::Num(m.swaps as f64));
+                obj.insert("last_swap_us".to_string(), Json::Num(m.last_swap_us as f64));
+                obj.insert("retired".to_string(), Json::Bool(m.retired));
                 Json::Obj(obj)
             })
             .collect();
@@ -1661,7 +1993,7 @@ impl EngineJoin {
                 .unwrap_or_else(|| "worker pool died without a recorded cause".to_string());
             return Err(anyhow!("{msg}"));
         }
-        let models = shared
+        let models = st
             .models
             .iter()
             .zip(&st.metrics)
@@ -1674,7 +2006,19 @@ impl EngineJoin {
                 metrics.deadline_exceeded +=
                     entry.stats.deadline_exceeded.load(Ordering::Relaxed);
                 metrics.backend_failed += entry.stats.backend_failed.load(Ordering::Relaxed);
-                ModelReport { name: entry.name.clone(), metrics }
+                ModelReport {
+                    name: entry.name.clone(),
+                    metrics,
+                    breaker_transitions: entry.breaker.transitions.load(Ordering::Relaxed),
+                    last_breaker_transition_us: entry
+                        .breaker
+                        .last_transition_us
+                        .load(Ordering::Relaxed),
+                    epoch: entry.epoch.load(Ordering::Relaxed),
+                    swaps: entry.swaps.load(Ordering::Relaxed),
+                    last_swap_us: entry.last_swap_us.load(Ordering::Relaxed),
+                    retired: !entry.live(),
+                }
             })
             .collect();
         Ok(EngineReport {
@@ -1691,11 +2035,12 @@ impl EngineJoin {
 /// leftovers), so no reply will ever come otherwise. Callers hold the
 /// state lock and have already established `workers_alive == 0 &&
 /// respawns_pending == 0`.
-fn fail_leftovers(shared: &EngineShared, st: &mut EngineState, error: &EngineError) {
+fn fail_leftovers(st: &mut EngineState, error: &EngineError) {
     for qi in 0..st.queues.len() {
+        let entry = Arc::clone(&st.models[qi]);
         for job in st.queues[qi].flush() {
             st.release_client(&job.client);
-            shared.models[qi].stats.backend_failed.fetch_add(1, Ordering::Relaxed);
+            entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
             let _ = job.reply.send(Err(error.clone()));
         }
     }
@@ -1739,7 +2084,7 @@ impl Drop for WorkerExit<'_> {
             }
         }
         if st.workers_alive == 0 && st.respawns_pending == 0 {
-            fail_leftovers(self.shared, &mut st, &self.error);
+            fail_leftovers(&mut st, &self.error);
         }
         drop(st);
         self.shared.work_cv.notify_all();
@@ -1773,7 +2118,7 @@ fn supervisor_loop(shared: &Arc<EngineShared>, deaths: &mpsc::Receiver<usize>) {
                     // Shutdown raced the respawn: don't bring capacity
                     // back up, just make sure nothing queued is stranded.
                     if st.workers_alive == 0 && st.respawns_pending == 0 {
-                        fail_leftovers(shared, &mut st, &EngineError::ShuttingDown);
+                        fail_leftovers(&mut st, &EngineError::ShuttingDown);
                     }
                     drop(st);
                     shared.work_cv.notify_all();
@@ -1804,11 +2149,25 @@ fn worker_entry(shared: &EngineShared, slot: usize) {
         clean: false,
         error: EngineError::Backend("worker panicked; request not served".to_string()),
     };
-    // One backend instance per hosted variant, all owned by this thread.
-    let mut backends: Vec<Box<dyn InferenceBackend>> = Vec::with_capacity(shared.models.len());
-    for entry in &shared.models {
-        match (entry.factory)(slot) {
-            Ok(b) => backends.push(b),
+    // Pre-build one backend per variant hosted at spawn time (init
+    // faults surface here, exactly as before the registry went live);
+    // variants added or swapped later are built lazily at batch time.
+    let entries: Vec<(Arc<ModelEntry>, u64)> = {
+        let st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.models.iter().map(|e| (Arc::clone(e), e.epoch.load(Ordering::Acquire))).collect()
+    };
+    let mut backends: Vec<Option<(u64, Box<dyn InferenceBackend>)>> =
+        Vec::with_capacity(entries.len());
+    for (entry, epoch) in &entries {
+        // A swap racing this spawn may have retired the snapshot epoch
+        // entirely (double swap): leave the slot empty and let batch
+        // time build the right generation.
+        let Some(factory) = entry.factory_for(*epoch) else {
+            backends.push(None);
+            continue;
+        };
+        match factory(slot) {
+            Ok(b) => backends.push(Some((*epoch, b))),
             Err(e) => {
                 exit.error =
                     EngineError::Backend(format!("backend init for {:?} failed: {e}", entry.name));
@@ -1816,7 +2175,10 @@ fn worker_entry(shared: &EngineShared, slot: usize) {
             }
         }
     }
-    worker_loop(shared, &mut backends);
+    if let Err(error) = worker_loop(shared, slot, &mut backends) {
+        exit.error = error;
+        return;
+    }
     exit.clean = true;
     exit.error = EngineError::ShuttingDown;
 }
@@ -1826,11 +2188,15 @@ fn worker_entry(shared: &EngineShared, slot: usize) {
 /// releases its quota slot, charges `backend_failed`, and gives the
 /// model's breaker one failure — so the dying worker strands no client
 /// and the supervised respawn starts from balanced books. Disarmed by
-/// taking the jobs back once the backend returns.
+/// taking the jobs back once the backend returns. Also dropped
+/// deliberately (with a specific `message`) on the epoch-pruned and
+/// rebuild-failure paths, so every fenced job is answered typed and the
+/// books stay exact.
 struct BatchGuard<'a> {
     shared: &'a EngineShared,
-    model: usize,
+    entry: Arc<ModelEntry>,
     jobs: Vec<Job>,
+    message: String,
 }
 
 impl Drop for BatchGuard<'_> {
@@ -1838,31 +2204,40 @@ impl Drop for BatchGuard<'_> {
         if self.jobs.is_empty() {
             return;
         }
-        let entry = &self.shared.models[self.model];
-        entry.breaker.record_failure(entry.breaker_threshold, self.shared.now_us());
+        let message = std::mem::take(&mut self.message);
+        self.entry
+            .breaker
+            .record_failure(self.entry.breaker_threshold.load(Ordering::Relaxed), self.shared.now_us());
         let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
         for job in self.jobs.drain(..) {
             st.release_client(&job.client);
-            entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
-            let _ = job.reply.send(Err(EngineError::Backend(
-                "backend panicked mid-batch; request not served".to_string(),
-            )));
+            self.entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
+            let _ = job.reply.send(Err(EngineError::Backend(message.clone())));
         }
     }
 }
 
-fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]) {
-    let n_models = backends.len();
+const PANIC_FENCE_MSG: &str = "backend panicked mid-batch; request not served";
+
+fn worker_loop(
+    shared: &EngineShared,
+    slot: usize,
+    backends: &mut Vec<Option<(u64, Box<dyn InferenceBackend>)>>,
+) -> std::result::Result<(), EngineError> {
     // One reusable batch buffer per worker (allocation-free hot loop).
     let mut batch: Vec<Job> = Vec::new();
     // Completed (latency_us, completed_at_us) pairs, folded into the
     // shared metrics at the loop-bottom relock.
     let mut completed: Vec<(u64, u64)> = Vec::new();
+    // Executed group sizes (one infer_batch call each), folded likewise.
+    let mut group_sizes: Vec<usize> = Vec::new();
     // Round-robin scan start so one busy model cannot starve the rest.
     let mut rr = 0usize;
     let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
     loop {
         let now = shared.now_us();
+        // Re-read every iteration: add_model grows the registry live.
+        let n_models = st.queues.len();
         if st.closed && st.queues.iter().all(|q| q.is_empty()) {
             break;
         }
@@ -1918,7 +2293,7 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
         // request that already waited past its target is failed typed —
         // no batch slot burned on an answer the client stopped wanting.
         let dequeue_now = shared.now_us();
-        let entry = &shared.models[m];
+        let entry = Arc::clone(&st.models[m]);
         batch.retain(|job| {
             let Some(deadline_us) = job.deadline_us else { return true };
             let waited_us = dequeue_now.saturating_sub(job.enqueued_at_us);
@@ -1938,78 +2313,160 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
             // The whole batch had expired; pick again.
             continue;
         }
-        let batch_n = batch.len();
         drop(st);
-        // One batched backend call for the whole released batch; results
-        // are per-item, so one malformed request fails only its own slot.
-        let exec_t0 = Instant::now();
-        let mut fence = BatchGuard { shared, model: m, jobs: std::mem::take(&mut batch) };
-        let results = {
-            let images: Vec<&Tensor> = fence.jobs.iter().map(|j| &j.image).collect();
-            backends[m].infer_batch(&images)
-        };
-        // The backend returned: take the batch back (disarms the fence).
-        batch = std::mem::take(&mut fence.jobs);
-        drop(fence);
-        // Fold the measured per-item service time into the model's EWMA
-        // (the admission layer's SLO projection reads it lock-free). CAS
-        // loop: a plain load/store pair would let concurrent workers
-        // overwrite each other's observations on a hot model.
-        let per_item_us = (exec_t0.elapsed().as_micros() as u64 / batch.len() as u64).max(1);
-        let _ = shared.models[m].stats.service_ewma_us.fetch_update(
-            Ordering::Relaxed,
-            Ordering::Relaxed,
-            |old| {
-                Some(if old == 0 {
-                    per_item_us
-                } else {
-                    old.saturating_mul(3).saturating_add(per_item_us) / 4
-                })
-            },
-        );
-        // Release quota slots BEFORE delivering replies, so a client that
-        // has seen its response can immediately submit again without a
-        // spurious ClientQuota refusal.
-        if shared.client_quota > 0 {
-            let mut guard = shared.state.lock().unwrap_or_else(|p| p.into_inner());
-            for job in &batch {
-                guard.release_client(&job.client);
-            }
+        if backends.len() <= m {
+            backends.resize_with(m + 1, || None);
         }
-        let entry = &shared.models[m];
-        if results.len() == batch.len() {
-            for (job, result) in batch.drain(..).zip(results) {
-                let latency_us = job.t0.elapsed().as_micros() as u64;
-                let res = match result {
-                    Ok(logits) => {
-                        entry.breaker.record_success();
-                        completed.push((latency_us, shared.now_us()));
-                        Ok(Response { id: job.id, model: entry.name.clone(), logits, latency_us })
+        // Execute in contiguous same-epoch groups: a swap landing between
+        // two admissions splits the batch at the boundary, so every job
+        // runs on exactly the weight generation it was admitted against
+        // (jobs are FIFO per queue and epochs are stamped under the state
+        // lock, so the sequence is non-decreasing — at most one rebuild
+        // per dequeued batch).
+        while !batch.is_empty() {
+            let ge = batch[0].epoch;
+            let split = batch.iter().position(|j| j.epoch != ge).unwrap_or(batch.len());
+            let rest = batch.split_off(split);
+            let mut fence = BatchGuard {
+                shared,
+                entry: Arc::clone(&entry),
+                jobs: std::mem::take(&mut batch),
+                message: PANIC_FENCE_MSG.to_string(),
+            };
+            batch = rest;
+            // (Re)build this worker's backend if its cached generation is
+            // not the group's. Failures here are answered typed through
+            // the fence, never by a worker panic.
+            if !matches!(&backends[m], Some((e, _)) if *e == ge) {
+                match entry.factory_for(ge) {
+                    Some(factory) => match factory(slot) {
+                        Ok(b) => backends[m] = Some((ge, b)),
+                        Err(e) => {
+                            // A factory that cannot build is a dying
+                            // variant: fail this group and everything
+                            // still batched, then die typed so the
+                            // supervisor's restart budget governs.
+                            let msg = format!(
+                                "backend rebuild for {:?} (epoch {ge}) failed: {e}",
+                                entry.name
+                            );
+                            fence.message = msg.clone();
+                            drop(fence);
+                            if !batch.is_empty() {
+                                drop(BatchGuard {
+                                    shared,
+                                    entry: Arc::clone(&entry),
+                                    jobs: std::mem::take(&mut batch),
+                                    message: msg.clone(),
+                                });
+                            }
+                            return Err(EngineError::Backend(msg));
+                        }
+                    },
+                    None => {
+                        // Epoch pruned by a double swap while queued: the
+                        // weights this job was admitted against no longer
+                        // exist. Fail typed; the worker stays healthy.
+                        fence.message = format!(
+                            "model {:?} was swapped twice while this request was queued; \
+                             its admitted weights (epoch {ge}) are gone",
+                            entry.name
+                        );
+                        drop(fence);
+                        continue;
                     }
-                    Err(e) => {
-                        entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
-                        entry.breaker.record_failure(entry.breaker_threshold, shared.now_us());
-                        Err(EngineError::Backend(format!("{e}")))
-                    }
-                };
-                let _ = job.reply.send(res);
+                }
             }
-        } else {
-            // A broken backend contract must not strand clients.
-            let msg = format!(
-                "backend {} returned {} results for a batch of {}",
-                backends[m].name(),
-                results.len(),
-                batch.len()
+            // One batched backend call for the whole same-epoch group;
+            // results are per-item, so one malformed request fails only
+            // its own slot.
+            let exec_t0 = Instant::now();
+            let results = {
+                let images: Vec<&Tensor> = fence.jobs.iter().map(|j| &j.image).collect();
+                let (_, backend) =
+                    backends[m].as_mut().expect("backend built or rebuilt above for this epoch");
+                backend.infer_batch(&images)
+            };
+            // The backend returned: take the group back (disarms the fence).
+            let mut group = std::mem::take(&mut fence.jobs);
+            drop(fence);
+            let group_n = group.len();
+            // Fold the measured per-item service time into the model's
+            // EWMA (the admission layer's SLO projection reads it
+            // lock-free). CAS loop: a plain load/store pair would let
+            // concurrent workers overwrite each other's observations on a
+            // hot model.
+            let per_item_us = (exec_t0.elapsed().as_micros() as u64 / group_n as u64).max(1);
+            let _ = entry.stats.service_ewma_us.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |old| {
+                    Some(if old == 0 {
+                        per_item_us
+                    } else {
+                        old.saturating_mul(3).saturating_add(per_item_us) / 4
+                    })
+                },
             );
-            entry.breaker.record_failure(entry.breaker_threshold, shared.now_us());
-            for job in batch.drain(..) {
-                entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
-                let _ = job.reply.send(Err(EngineError::Backend(msg.clone())));
+            // Release quota slots BEFORE delivering replies, so a client
+            // that has seen its response can immediately submit again
+            // without a spurious ClientQuota refusal.
+            if shared.client_quota > 0 {
+                let mut guard = shared.state.lock().unwrap_or_else(|p| p.into_inner());
+                for job in &group {
+                    guard.release_client(&job.client);
+                }
             }
+            if results.len() == group_n {
+                for (job, result) in group.drain(..).zip(results) {
+                    let latency_us = job.t0.elapsed().as_micros() as u64;
+                    let res = match result {
+                        Ok(logits) => {
+                            entry.breaker.record_success(shared.now_us());
+                            completed.push((latency_us, shared.now_us()));
+                            Ok(Response {
+                                id: job.id,
+                                model: entry.name.clone(),
+                                logits,
+                                latency_us,
+                            })
+                        }
+                        Err(e) => {
+                            entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
+                            entry.breaker.record_failure(
+                                entry.breaker_threshold.load(Ordering::Relaxed),
+                                shared.now_us(),
+                            );
+                            Err(EngineError::Backend(format!("{e}")))
+                        }
+                    };
+                    let _ = job.reply.send(res);
+                }
+            } else {
+                // A broken backend contract must not strand clients.
+                let backend_name = backends[m]
+                    .as_ref()
+                    .map(|(_, b)| b.name())
+                    .unwrap_or("<unknown>");
+                let msg = format!(
+                    "backend {backend_name} returned {} results for a batch of {group_n}",
+                    results.len(),
+                );
+                entry.breaker.record_failure(
+                    entry.breaker_threshold.load(Ordering::Relaxed),
+                    shared.now_us(),
+                );
+                for job in group.drain(..) {
+                    entry.stats.backend_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = job.reply.send(Err(EngineError::Backend(msg.clone())));
+                }
+            }
+            group_sizes.push(group_n);
         }
         st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
-        st.metrics[m].record_batch(batch_n);
+        for gn in group_sizes.drain(..) {
+            st.metrics[m].record_batch(gn);
+        }
         for (latency_us, at_us) in completed.drain(..) {
             st.metrics[m].record_request(latency_us, at_us);
         }
@@ -2018,6 +2475,7 @@ fn worker_loop(shared: &EngineShared, backends: &mut [Box<dyn InferenceBackend>]
     // leftovers) lives in the caller's WorkerExit guard so it also runs
     // on unwind.
     drop(st);
+    Ok(())
 }
 
 #[cfg(test)]

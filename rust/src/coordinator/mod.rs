@@ -36,7 +36,8 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, DynamicBatcher};
 pub use engine::{
-    admission_check, arch_forward_config, AdmissionDeny, Engine, EngineBuilder, EngineConfig,
+    admission_check, arch_forward_config, AdminError, AdmissionDeny, Engine, EngineBuilder,
+    EngineConfig,
     EngineError, EngineHealth, EngineJoin, EngineReport, EngineWaiter, ModelHealth, ModelReport,
     ModelSourceConfig, ModelVariantConfig, Priority, RejectReason, Request, Response,
     DEFAULT_BREAKER_COOLDOWN_MS, DEFAULT_BREAKER_THRESHOLD, DEFAULT_QUEUE_DEPTH,

@@ -28,10 +28,25 @@ COMMANDS:
                                   variants it hosts (factories resolved,
                                   calibration tables loaded + checked,
                                   per-variant weight bytes reported as
-                                  stored vs f32-equivalent, every
-                                  referenced artifact opened and its
-                                  manifest summarized — a bad path fails
-                                  here, not on the first request)
+                                  stored vs f32-equivalent plus the
+                                  cold-start milliseconds each factory
+                                  took to resolve — `"verify": "lazy"`
+                                  variants skip eager decode and show it
+                                  here — every referenced artifact opened
+                                  and its manifest summarized; a bad path
+                                  fails here, not on the first request)
+  models   --admin add|swap|remove --addr host:port [--admin-token T]
+           [--variant variant.json | --name model]
+                                  live model zoo admin against a running
+                                  `serve --listen` endpoint: `add`/`swap`
+                                  POST a model-variant JSON (a file path
+                                  or inline `{...}`; same shape as one
+                                  entry of an engine config's `models`
+                                  list) to /admin/models/{add,swap};
+                                  `remove --name m` retires a hosted
+                                  model. The token (flag or the
+                                  MAMBA_X_ADMIN_TOKEN env var) must match
+                                  the server's `serve --admin-token`
   export   [--arch micro] [--seed 7] [--out artifacts/vim_micro.mxa]
            [--quantize true [--quant-samples 12] [--quant-seed 7]]
            [--calib table.json | --calib-samples N [--percentile 1.0]]
@@ -75,7 +90,7 @@ COMMANDS:
            [--calib table.json] [--artifacts artifacts]
            [--report-json report.json] [--listen host:port]
            [--conn-workers 8] [--conn-backlog 64] [--client-quota N]
-           [--fault-plan plan.json]
+           [--fault-plan plan.json] [--admin-token T]
                                   serve inference E2E through the engine.
                                   `--report-json` writes the final
                                   EngineReport (per-model metrics incl.
@@ -100,8 +115,14 @@ COMMANDS:
                                   the in-process synthetic demo streams
                                   (README.md §Network serving): POST
                                   /v1/infer, GET /healthz, POST
-                                  /admin/shutdown; graceful drain on
-                                  shutdown; `--client-quota` caps each
+                                  /admin/shutdown and the live model zoo
+                                  POST /admin/models/{add,swap,remove};
+                                  graceful drain on shutdown;
+                                  `--admin-token` (or the
+                                  MAMBA_X_ADMIN_TOKEN env var) gates the
+                                  whole /admin/* surface — without it the
+                                  admin surface is OPEN and serve warns;
+                                  `--client-quota` caps each
                                   labeled client's in-flight requests.
                                   `--fault-plan` loads a seeded chaos
                                   plan (README.md §Fault tolerance) that
@@ -115,7 +136,7 @@ COMMANDS:
            [--seed 0] [--priorities high=1,normal=2,low=1]
            [--deadline-us N] [--model name] [--out BENCH_serving.json]
            [--shutdown true|false] [--timeout-ms 30000]
-           [--retries 0] [--retry-base-ms 10]
+           [--retries 0] [--retry-base-ms 10] [--admin-token T]
                                   seeded load harness against a live
                                   `serve --listen` endpoint: closed-loop
                                   (one in-flight request per client) or
@@ -126,7 +147,10 @@ COMMANDS:
                                   artifact (p50/p95/p99, goodput,
                                   per-priority shed rates) that
                                   `perfcheck` gates; `--shutdown true`
-                                  drains the server afterwards.
+                                  drains the server afterwards
+                                  (presenting `--admin-token` / the
+                                  MAMBA_X_ADMIN_TOKEN env var when the
+                                  server gates its admin surface).
                                   `--retries` bounds per-request retries
                                   of retryable outcomes (429/500/503/504,
                                   timeouts, transport errors) with
@@ -234,8 +258,11 @@ fn main() -> Result<()> {
             cmd_figures(flags.usize("fig", 0)? as u32)
         }
         "models" => {
-            flags.expect_keys("models", &["engine"])?;
-            cmd_models(flags.get("engine"))
+            flags.expect_keys(
+                "models",
+                &["engine", "admin", "addr", "admin-token", "variant", "name"],
+            )?;
+            cmd_models(&flags)
         }
         "calibrate" => {
             flags.expect_keys("calibrate", &["samples", "seed", "percentile", "out"])?;
@@ -281,6 +308,7 @@ fn main() -> Result<()> {
                     "conn-backlog",
                     "client-quota",
                     "fault-plan",
+                    "admin-token",
                 ],
             )?;
             cmd_serve(&flags)
@@ -304,6 +332,7 @@ fn main() -> Result<()> {
                     "timeout-ms",
                     "retries",
                     "retry-base-ms",
+                    "admin-token",
                 ],
             )?;
             cmd_loadgen(&flags)
@@ -886,11 +915,22 @@ pub mod figures {
 /// — including artifact opening and calibration-table load + model check
 /// — so a broken config or bad artifact path fails here, not on the
 /// first request).
-fn cmd_models(engine: Option<&str>) -> Result<()> {
+fn cmd_models(flags: &Flags) -> Result<()> {
     use mamba_x::coordinator::{EngineConfig, ModelSourceConfig};
     use mamba_x::runtime::ArtifactStore;
 
-    match engine {
+    if let Some(verb) = flags.get("admin") {
+        if flags.get("engine").is_some() {
+            bail!("--engine conflicts with --admin (one validates a config file, the other drives a live server)");
+        }
+        return cmd_models_admin(flags, verb);
+    }
+    for k in ["addr", "admin-token", "variant", "name"] {
+        if flags.get(k).is_some() {
+            bail!("--{k} applies to `models --admin` only");
+        }
+    }
+    match flags.get("engine") {
         Some(path) => {
             let cfg = EngineConfig::load(path)?;
             println!(
@@ -898,26 +938,32 @@ fn cmd_models(engine: Option<&str>) -> Result<()> {
                 cfg.workers, cfg.policy.max_batch, cfg.policy.max_wait_us, cfg.queue_depth
             );
             println!(
-                "{:<24} {:<32} {:>10} {:>8} {:>21}  calib",
-                "name", "source", "slo_us", "hint_us", "weight B stored/f32"
+                "{:<24} {:<32} {:>10} {:>8} {:>21} {:>8}  calib",
+                "name", "source", "slo_us", "hint_us", "weight B stored/f32", "cold_ms"
             );
             for v in &cfg.models {
                 // Resolve the factory (any config error — bad artifact
                 // path, misfit calib, failed quantization — surfaces
                 // here) and build one backend to read the variant's
-                // actual weight storage footprint.
+                // actual weight storage footprint. The resolution time
+                // is the variant's cold-start cost: `"verify": "lazy"`
+                // artifacts skip eager decode + per-tensor verification
+                // here and show a correspondingly smaller cold_ms.
+                let t0 = std::time::Instant::now();
                 let spec = v.to_spec()?;
+                let cold_ms = t0.elapsed().as_secs_f64() * 1e3;
                 let weights = match (spec.factory)(0)?.weight_bytes() {
                     Some((f32_eq, stored)) => format!("{stored}/{f32_eq}"),
                     None => "-".to_string(),
                 };
                 println!(
-                    "{:<24} {:<32} {:>10} {:>8} {:>21}  {}",
+                    "{:<24} {:<32} {:>10} {:>8} {:>21} {:>8.2}  {}",
                     v.name,
                     v.source.describe(),
                     v.slo_us.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string()),
                     v.service_hint_us,
                     weights,
+                    cold_ms,
                     v.calib.as_deref().unwrap_or("-")
                 );
             }
@@ -966,12 +1012,71 @@ fn cmd_models(engine: Option<&str>) -> Result<()> {
     Ok(())
 }
 
+/// Admin token resolution shared by `serve`, `loadgen`, and
+/// `models --admin`: the flag wins, then the `MAMBA_X_ADMIN_TOKEN` env
+/// var (so CI can keep the secret out of process listings).
+fn admin_token_from(flags: &Flags) -> Option<String> {
+    flags
+        .get("admin-token")
+        .map(str::to_string)
+        .or_else(|| std::env::var("MAMBA_X_ADMIN_TOKEN").ok())
+        .filter(|t| !t.is_empty())
+}
+
+/// `mamba-x models --admin <verb>`: drive a live server's model zoo over
+/// the authenticated `/admin/models/*` endpoints.
+fn cmd_models_admin(flags: &Flags, verb: &str) -> Result<()> {
+    use mamba_x::net::loadgen::admin_model_op;
+    use mamba_x::util::Json;
+
+    let addr = flags
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("--addr host:port is required (a live `serve --listen`)"))?;
+    let token = admin_token_from(flags);
+    let body = match verb {
+        "add" | "swap" => {
+            let spec = flags.get("variant").ok_or_else(|| {
+                anyhow::anyhow!(
+                    "--variant variant.json (a file path or inline JSON) is required \
+                     for --admin {verb}"
+                )
+            })?;
+            if flags.get("name").is_some() {
+                bail!("--name applies to --admin remove (add/swap read the name from the variant JSON)");
+            }
+            // Inline JSON (starts with `{`) or a file path; either way
+            // the body is one engine-config `models` entry, which the
+            // server validates end to end before touching the zoo.
+            let text = if spec.trim_start().starts_with('{') {
+                spec.to_string()
+            } else {
+                std::fs::read_to_string(spec)
+                    .map_err(|e| anyhow::anyhow!("reading variant file {spec:?}: {e}"))?
+            };
+            Json::parse(&text)?
+        }
+        "remove" => {
+            let name = flags
+                .get("name")
+                .ok_or_else(|| anyhow::anyhow!("--name model is required for --admin remove"))?;
+            if flags.get("variant").is_some() {
+                bail!("--variant applies to --admin add/swap");
+            }
+            Json::obj_from(vec![("model", Json::Str(name.to_string()))])
+        }
+        other => bail!("unknown --admin verb {other:?}; valid: add, swap, remove"),
+    };
+    let reply = admin_model_op(addr, token.as_deref(), verb, &body)?;
+    println!("{}", reply.dump());
+    Ok(())
+}
+
 fn cmd_serve(flags: &Flags) -> Result<()> {
     let requests = flags.usize("requests", 64)?;
     let report_json = flags.get("report-json").map(str::to_string);
     let listen = flags.get("listen").map(str::to_string);
     if listen.is_none() {
-        for k in ["conn-workers", "conn-backlog", "client-quota"] {
+        for k in ["conn-workers", "conn-backlog", "client-quota", "admin-token"] {
             if flags.get(k).is_some() {
                 bail!("--{k} applies to socket serving only (add --listen host:port)");
             }
@@ -984,6 +1089,7 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
     }
     let conn_workers = flags.usize("conn-workers", 8)?;
     let conn_backlog = flags.usize("conn-backlog", 64)?;
+    let admin_token = admin_token_from(flags);
     if let Some(engine_path) = flags.get("engine") {
         // The config file owns the pool geometry and the model list;
         // per-variant flags alongside it would silently fight it.
@@ -1004,9 +1110,14 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
         }
         let cfg = mamba_x::coordinator::EngineConfig::load(engine_path)?;
         return match listen {
-            Some(addr) => {
-                serve_listen(cfg, &addr, conn_workers, conn_backlog, report_json.as_deref())
-            }
+            Some(addr) => serve_listen(
+                cfg,
+                &addr,
+                conn_workers,
+                conn_backlog,
+                admin_token,
+                report_json.as_deref(),
+            ),
             None => run_engine(cfg, requests, report_json.as_deref()),
         };
     }
@@ -1039,9 +1150,14 @@ fn cmd_serve(flags: &Flags) -> Result<()> {
                 cfg.fault_plan = Some(plan);
             }
             match listen {
-                Some(addr) => {
-                    serve_listen(cfg, &addr, conn_workers, conn_backlog, report_json.as_deref())
-                }
+                Some(addr) => serve_listen(
+                    cfg,
+                    &addr,
+                    conn_workers,
+                    conn_backlog,
+                    admin_token,
+                    report_json.as_deref(),
+                ),
                 None => run_engine(cfg, requests, report_json.as_deref()),
             }
         }
@@ -1095,6 +1211,7 @@ fn serve_listen(
     addr: &str,
     conn_workers: usize,
     conn_backlog: usize,
+    admin_token: Option<String>,
     report_json: Option<&str>,
 ) -> Result<()> {
     use mamba_x::coordinator::EngineBuilder;
@@ -1123,9 +1240,19 @@ fn serve_listen(
     let mut ncfg = NetConfig::new(addr);
     ncfg.conn_workers = conn_workers.max(1);
     ncfg.conn_backlog = conn_backlog.max(1);
+    if admin_token.is_none() {
+        println!(
+            "WARNING: admin surface is OPEN (no --admin-token / MAMBA_X_ADMIN_TOKEN); \
+             any client can shut down or reshape the model zoo"
+        );
+    }
+    ncfg.admin_token = admin_token;
     let bound = BoundServer::bind(ncfg)?;
     println!("listening on http://{}", bound.local_addr()?);
-    println!("endpoints: POST /v1/infer, GET /healthz, POST /admin/shutdown");
+    println!(
+        "endpoints: POST /v1/infer, GET /healthz, POST /admin/shutdown, \
+         POST /admin/models/{{add,swap,remove}}"
+    );
     let net = bound.serve(engine, metas)?;
     // `serve` consumed the last engine clone besides ours-in-join; the
     // pool drains and the report merges every worker's metrics.
@@ -1135,7 +1262,7 @@ fn serve_listen(
     println!(
         "net: {} conns, {} ok, {} bad_request, {} not_found, 429 full/shed/quota {}/{}/{}, \
          {} unknown_model, {} shutting_down, {} backend_error, {} deadline_exceeded, \
-         {} breaker_open, {} busy",
+         {} breaker_open, {} busy, {} unauthorized, {} admin_model_ops",
         net.conns,
         net.ok,
         net.bad_request,
@@ -1149,6 +1276,8 @@ fn serve_listen(
         net.deadline_exceeded,
         net.breaker_open,
         net.conn_busy,
+        net.unauthorized,
+        net.admin_model_ops,
     );
     if let Some(path) = report_json {
         let mut json = match report.to_json() {
@@ -1205,6 +1334,7 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     cfg.timeout_ms = (flags.usize("timeout-ms", 30_000)? as u64).max(1);
     cfg.retries = u32::try_from(flags.usize("retries", 0)?)?;
     cfg.retry_base_ms = (flags.usize("retry-base-ms", 10)? as u64).max(1);
+    cfg.admin_token = admin_token_from(flags);
     let out = flags.string("out", "BENCH_serving.json");
 
     let artifact = loadgen::run(&cfg)?;

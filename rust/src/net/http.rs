@@ -20,6 +20,11 @@ pub const DEFAULT_MAX_HEAD_BYTES: usize = 16 * 1024;
 /// payload, small enough that one connection cannot balloon memory.
 pub const DEFAULT_MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
 
+/// Header carrying the admin bearer token for `/admin/*` endpoints
+/// (shared between the server's auth gate and the loadgen/CLI clients;
+/// header names are lower-cased by the parser).
+pub const ADMIN_TOKEN_HEADER: &str = "x-admin-token";
+
 /// Framing limits enforced while reading a message.
 #[derive(Debug, Clone, Copy)]
 pub struct HttpLimits {

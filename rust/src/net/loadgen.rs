@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::{LatencySnapshot, Priority};
 use crate::util::{bench::named_speedups, Json, Pcg};
 
-use super::http::{write_request, FrameError, HttpConn, HttpLimits, RawResponse};
+use super::http::{write_request, FrameError, HttpConn, HttpLimits, RawResponse, ADMIN_TOKEN_HEADER};
 
 /// Format tag of the `BENCH_serving.json` artifact.
 pub const SERVING_BENCH_FORMAT: &str = "mamba-x-serving-bench";
@@ -107,6 +107,9 @@ pub struct LoadgenConfig {
     /// Base delay (ms) for the decorrelated-jitter retry backoff; a
     /// server-sent `Retry-After` overrides the jitter.
     pub retry_base_ms: u64,
+    /// Bearer token for `/admin/*` calls (`--shutdown true` against a
+    /// token-gated server). Never echoed into the artifact.
+    pub admin_token: Option<String>,
 }
 
 impl LoadgenConfig {
@@ -124,6 +127,7 @@ impl LoadgenConfig {
             timeout_ms: 30_000,
             retries: 0,
             retry_base_ms: 10,
+            admin_token: None,
         }
     }
 
@@ -564,19 +568,49 @@ fn try_healthz(addr: &str) -> Result<Vec<String>> {
     json.get("models")?
         .arr()?
         .iter()
+        // Retired entries stay in /healthz for observability but no
+        // longer admit traffic — don't round-robin onto them.
+        .filter(|m| !matches!(m.opt("retired"), Some(Json::Bool(true))))
         .map(|m| Ok(m.get("name")?.str()?.to_string()))
         .collect()
 }
 
-/// Ask the server to drain (`POST /admin/shutdown`).
-pub fn send_shutdown(addr: &str) -> Result<()> {
+/// Headers for an admin call: the token header when a token is set.
+fn admin_headers(token: Option<&str>) -> Vec<(&str, &str)> {
+    match token {
+        Some(t) => vec![(ADMIN_TOKEN_HEADER, t)],
+        None => Vec::new(),
+    }
+}
+
+/// Ask the server to drain (`POST /admin/shutdown`), presenting the
+/// admin token when the server is token-gated.
+pub fn send_shutdown(addr: &str, token: Option<&str>) -> Result<()> {
     let mut conn = connect(addr, CONTROL_TIMEOUT)?;
-    write_request(conn.stream_mut(), "POST", "/admin/shutdown", &[], b"")?;
+    write_request(conn.stream_mut(), "POST", "/admin/shutdown", &admin_headers(token), b"")?;
     let resp = conn.read_response().map_err(|e| anyhow!("shutdown: {e}"))?;
     if resp.status != 200 {
-        bail!("shutdown returned {}", resp.status);
+        bail!("shutdown returned {} {}", resp.status, String::from_utf8_lossy(&resp.body));
     }
     Ok(())
+}
+
+/// One authenticated model-zoo admin call (`POST /admin/models/{verb}`).
+///
+/// Shared by the `mamba-x models --admin` CLI verbs and the CI hot-swap
+/// e2e step. Returns the parsed 200 response body; any other status is a
+/// typed error carrying the server's JSON error body verbatim.
+pub fn admin_model_op(addr: &str, token: Option<&str>, verb: &str, body: &Json) -> Result<Json> {
+    let target = format!("/admin/models/{verb}");
+    let payload = body.dump().into_bytes();
+    let mut conn = connect(addr, CONTROL_TIMEOUT)?;
+    write_request(conn.stream_mut(), "POST", &target, &admin_headers(token), &payload)?;
+    let resp = conn.read_response().map_err(|e| anyhow!("{target}: {e}"))?;
+    let text = String::from_utf8_lossy(&resp.body).into_owned();
+    if resp.status != 200 {
+        bail!("{target} returned {}: {text}", resp.status);
+    }
+    Json::parse(&text).with_context(|| format!("{target}: unparseable 200 body"))
 }
 
 /// Run the configured workload and build the `BENCH_serving.json`
@@ -588,7 +622,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json> {
         bail!("loadgen needs requests >= 1 and clients >= 1");
     }
     let models = match &cfg.model {
-        Some(m) => vec![m.clone()],
+        Some(m) => {
+            // Explicit target: still wait for the server to come up so a
+            // just-spawned `serve --listen` doesn't read as transport
+            // errors. The target needn't be hosted — 404s are a counted
+            // outcome, not a config mistake.
+            probe_models(&cfg.addr, Duration::from_secs(10))?;
+            vec![m.clone()]
+        }
         None => probe_models(&cfg.addr, Duration::from_secs(10))?,
     };
     if models.is_empty() {
@@ -617,7 +658,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json> {
     }
     let wall_s = start.elapsed().as_secs_f64().max(1e-9);
     if cfg.shutdown {
-        send_shutdown(&cfg.addr)?;
+        send_shutdown(&cfg.addr, cfg.admin_token.as_deref())?;
     }
 
     let per_priority = Priority::ALL
@@ -628,6 +669,18 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json> {
         0.0
     } else {
         total.overall.completed as f64 / total.overall.sent as f64
+    };
+    // Deadline floor: among requests the engine actually decided (served
+    // or timed out past their SLO), what fraction made the deadline?
+    // Admission rejections are excluded — they are the shedding knob's
+    // job, already gated by `serving_goodput_ratio`. A run with no
+    // deadline at all scores a perfect 1.0, so the perfcheck floor only
+    // bites workloads that opt in via `--deadline-us`.
+    let deadline_decided = total.overall.completed + total.overall.deadline_exceeded;
+    let deadline_hit_ratio = if deadline_decided == 0 {
+        1.0
+    } else {
+        total.overall.completed as f64 / deadline_decided as f64
     };
     // Start from the overall tally's counters, then layer the artifact
     // envelope on top (flat keys: the CI reconciliation step reads
@@ -646,9 +699,15 @@ pub fn run(cfg: &LoadgenConfig) -> Result<Json> {
         Json::Num(total.overall.completed as f64 / wall_s),
     );
     map.insert("per_priority".to_string(), Json::obj_from(per_priority));
+    map.insert("deadline_miss_ratio".to_string(), Json::Num(1.0 - deadline_hit_ratio));
     map.insert(
         "speedups".to_string(),
-        named_speedups(&[("serving_goodput_ratio", goodput_ratio)]),
+        named_speedups(&[
+            ("serving_goodput_ratio", goodput_ratio),
+            // Higher-is-better so the perfcheck floor semantics apply
+            // directly; the plain miss ratio above is for humans.
+            ("serving_deadline_hit_ratio", deadline_hit_ratio),
+        ]),
     );
     Ok(Json::Obj(map))
 }

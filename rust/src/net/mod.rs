@@ -17,7 +17,10 @@
 //!   `BENCH_serving.json` artifact for the perfcheck gate.
 //!
 //! Wire format (see README.md §Network serving): `POST /v1/infer` with a
-//! JSON body, `GET /healthz`, `POST /admin/shutdown`.
+//! JSON body, `GET /healthz`, and the admin surface — `POST
+//! /admin/shutdown` plus the live model zoo (`POST
+//! /admin/models/{add,remove,swap}`) — optionally gated by a bearer
+//! token in the [`http::ADMIN_TOKEN_HEADER`] header.
 //!
 //! Non-test code in this module must not `.unwrap()`: lock poisoning is
 //! recovered via `unwrap_or_else(|p| p.into_inner())` and every other
@@ -28,7 +31,7 @@ pub mod http;
 pub mod loadgen;
 pub mod server;
 
-pub use http::{FrameError, HttpConn, HttpLimits, RawRequest, RawResponse};
+pub use http::{FrameError, HttpConn, HttpLimits, RawRequest, RawResponse, ADMIN_TOKEN_HEADER};
 pub use loadgen::{
     parse_priority_mix, ArrivalMode, Dist, LoadgenConfig, SERVING_BENCH_FORMAT,
     SERVING_BENCH_VERSION,

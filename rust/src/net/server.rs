@@ -31,6 +31,17 @@
 //! is answered. `serve` returns once the last in-flight connection
 //! finishes; the caller then drops its engine handle and joins for the
 //! engine report.
+//!
+//! **Admin surface** (`/admin/*`): graceful shutdown plus the live model
+//! zoo — `POST /admin/models/add` and `/admin/models/swap` take a
+//! [`ModelVariantConfig`] JSON body (the engine-config `models` entry
+//! shape) and install it in the running engine; `/admin/models/remove`
+//! takes `{"model": name}`. When [`NetConfig::admin_token`] is set,
+//! every `/admin/*` request must carry it in the
+//! [`ADMIN_TOKEN_HEADER`] header; a missing or wrong token is a typed
+//! 401 counted in [`NetReport::unauthorized`]. With no token configured
+//! the admin surface is **open** (the pre-auth behavior, for trusted
+//! networks and tests).
 
 use anyhow::{anyhow, Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -39,11 +50,15 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::coordinator::{Engine, EngineError, Priority, RejectReason, Request};
+use crate::coordinator::{
+    AdminError, Engine, EngineError, ModelVariantConfig, Priority, RejectReason, Request,
+};
 use crate::runtime::{native::synthetic_image, Tensor};
 use crate::util::Json;
 
-use super::http::{write_response, FrameError, HttpConn, HttpLimits, RawRequest};
+use super::http::{
+    write_response, FrameError, HttpConn, HttpLimits, RawRequest, ADMIN_TOKEN_HEADER,
+};
 
 /// How long a connection worker blocks in `read` before re-checking the
 /// drain flag (keep-alive connections poll at this cadence).
@@ -80,6 +95,10 @@ pub struct NetConfig {
     /// connections get an immediate 503.
     pub conn_backlog: usize,
     pub limits: HttpLimits,
+    /// Bearer token required (in the [`ADMIN_TOKEN_HEADER`] header) on
+    /// every `/admin/*` request. `None` leaves the admin surface open —
+    /// acceptable only on trusted networks; `serve --listen` warns.
+    pub admin_token: Option<String>,
 }
 
 impl NetConfig {
@@ -89,6 +108,7 @@ impl NetConfig {
             conn_workers: 8,
             conn_backlog: 64,
             limits: HttpLimits::default(),
+            admin_token: None,
         }
     }
 }
@@ -112,6 +132,10 @@ struct NetCounters {
     backend_error: AtomicU64,
     deadline_exceeded: AtomicU64,
     breaker_open: AtomicU64,
+    /// `/admin/*` requests refused for a missing or wrong admin token.
+    unauthorized: AtomicU64,
+    /// Successful admin model-zoo mutations (add + swap + remove).
+    admin_model_ops: AtomicU64,
 }
 
 /// Final front-end accounting, returned by [`BoundServer::serve`] and
@@ -131,6 +155,10 @@ pub struct NetReport {
     pub backend_error: u64,
     pub deadline_exceeded: u64,
     pub breaker_open: u64,
+    /// `/admin/*` requests refused 401 (missing or wrong token).
+    pub unauthorized: u64,
+    /// Successful admin model-zoo mutations (add + swap + remove).
+    pub admin_model_ops: u64,
 }
 
 impl NetReport {
@@ -149,6 +177,8 @@ impl NetReport {
             ("backend_error", Json::Num(self.backend_error as f64)),
             ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
             ("breaker_open", Json::Num(self.breaker_open as f64)),
+            ("unauthorized", Json::Num(self.unauthorized as f64)),
+            ("admin_model_ops", Json::Num(self.admin_model_ops as f64)),
         ])
     }
 }
@@ -169,6 +199,8 @@ impl NetCounters {
             backend_error: self.backend_error.load(Ordering::Relaxed),
             deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
             breaker_open: self.breaker_open.load(Ordering::Relaxed),
+            unauthorized: self.unauthorized.load(Ordering::Relaxed),
+            admin_model_ops: self.admin_model_ops.load(Ordering::Relaxed),
         }
     }
 }
@@ -176,12 +208,18 @@ impl NetCounters {
 /// Shared state between the accept loop and the connection workers.
 struct Ctx {
     engine: Engine,
-    models: Vec<ModelMeta>,
+    /// Wire-contract metadata for the *live* variants, mutated by the
+    /// admin model-zoo endpoints in lockstep with the engine registry
+    /// (the engine op commits first; a removed model's requests then
+    /// fail engine-side as UnknownModel during the brief window).
+    models: Mutex<Vec<ModelMeta>>,
     limits: HttpLimits,
     counters: NetCounters,
     draining: AtomicBool,
     /// Connections accepted (or queued) and not yet finished.
     active: AtomicUsize,
+    /// Required `/admin/*` bearer token (`None` = open admin surface).
+    admin_token: Option<String>,
 }
 
 /// A listener that is bound but not yet serving — split from
@@ -213,11 +251,12 @@ impl BoundServer {
         listener.set_nonblocking(true).context("listener nonblocking")?;
         let ctx = Arc::new(Ctx {
             engine,
-            models,
+            models: Mutex::new(models),
             limits: cfg.limits,
             counters: NetCounters::default(),
             draining: AtomicBool::new(false),
             active: AtomicUsize::new(0),
+            admin_token: cfg.admin_token,
         });
         let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(cfg.conn_backlog.max(1));
         let rx = Arc::new(Mutex::new(rx));
@@ -390,12 +429,33 @@ fn handle_conn(ctx: &Ctx, stream: TcpStream) {
 /// Dispatch one framed request. Returns `false` when the connection must
 /// close afterwards.
 fn route(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, req: RawRequest) -> bool {
+    // Token gate in front of EVERY admin endpoint, before any body is
+    // looked at: with a token configured, a missing/wrong header is a
+    // typed 401 (counted); with none, the surface is open (documented).
+    if req.target.starts_with("/admin/") {
+        if let Some(want) = &ctx.admin_token {
+            if req.header(ADMIN_TOKEN_HEADER) != Some(want.as_str()) {
+                ctx.counters.unauthorized.fetch_add(1, Ordering::Relaxed);
+                let detail = format!("missing or wrong {ADMIN_TOKEN_HEADER} header");
+                return reply(
+                    conn,
+                    401,
+                    "Unauthorized",
+                    &[],
+                    &error_body("unauthorized", &detail),
+                    false,
+                );
+            }
+        }
+    }
     match (req.method.as_str(), req.target.as_str()) {
         ("GET", "/healthz") => {
             // Degradation-aware: "draining" wins (the server is going
             // away), then "degraded" (dead/respawning workers or a
-            // non-closed breaker), else "ok". Breaker state comes from
-            // the engine so /healthz never disagrees with the report.
+            // non-closed breaker), else "ok". Model state comes from the
+            // engine — breaker, swap epochs, retirement — so /healthz
+            // never disagrees with the report; the wire-level input_len
+            // joins in from the front-end metas for live variants.
             let health = ctx.engine.health();
             let status = if ctx.draining.load(Ordering::SeqCst) {
                 "draining"
@@ -404,22 +464,32 @@ fn route(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, req: RawRequest) -> bool {
             } else {
                 "ok"
             };
-            let models = ctx
+            let metas = ctx.models.lock().unwrap_or_else(|p| p.into_inner());
+            let models = health
                 .models
                 .iter()
-                .map(|m| {
-                    let breaker = health
-                        .models
+                .map(|h| {
+                    let input_len = metas
                         .iter()
-                        .find(|h| h.name == m.name)
-                        .map_or("closed", |h| h.breaker);
+                        .find(|m| m.name == h.name)
+                        .map_or(Json::Null, |m| Json::Num(m.input_len() as f64));
                     Json::obj_from(vec![
-                        ("name", Json::Str(m.name.clone())),
-                        ("input_len", Json::Num(m.input_len() as f64)),
-                        ("breaker", Json::Str(breaker.to_string())),
+                        ("name", Json::Str(h.name.clone())),
+                        ("input_len", input_len),
+                        ("breaker", Json::Str(h.breaker.to_string())),
+                        ("breaker_transitions", Json::Num(h.breaker_transitions as f64)),
+                        (
+                            "last_breaker_transition_us",
+                            Json::Num(h.last_breaker_transition_us as f64),
+                        ),
+                        ("epoch", Json::Num(h.epoch as f64)),
+                        ("swaps", Json::Num(h.swaps as f64)),
+                        ("last_swap_us", Json::Num(h.last_swap_us as f64)),
+                        ("retired", Json::Bool(h.retired)),
                     ])
                 })
                 .collect();
+            drop(metas);
             let body = Json::obj_from(vec![
                 ("status", Json::Str(status.to_string())),
                 ("workers_alive", Json::Num(health.workers_alive as f64)),
@@ -438,6 +508,11 @@ fn route(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, req: RawRequest) -> bool {
                 .into_bytes();
             reply(conn, 200, "OK", &[], &body, false)
         }
+        ("POST", "/admin/models/add") => admin_model_change(ctx, conn, &req.body, AdminOp::Add),
+        ("POST", "/admin/models/swap") => {
+            admin_model_change(ctx, conn, &req.body, AdminOp::Swap)
+        }
+        ("POST", "/admin/models/remove") => admin_model_remove(ctx, conn, &req.body),
         ("POST", "/v1/infer") => {
             if ctx.draining.load(Ordering::SeqCst) {
                 ctx.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
@@ -474,6 +549,138 @@ fn reply(
     let mut headers = vec![("content-type", "application/json")];
     headers.extend_from_slice(extra);
     write_response(conn.stream_mut(), status, reason, &headers, body, close).is_ok() && !close
+}
+
+/// Which mutation `admin_model_change` performs on the registry.
+#[derive(Clone, Copy, PartialEq)]
+enum AdminOp {
+    Add,
+    Swap,
+}
+
+/// Map an [`AdminError`] onto the wire: 409 duplicate, 404 unknown,
+/// 503 shutting down.
+fn admin_error_reply(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, err: AdminError) -> bool {
+    let (status, reason, code) = match &err {
+        AdminError::DuplicateModel(_) => (409, "Conflict", "duplicate_model"),
+        AdminError::UnknownModel(_) => (404, "Not Found", "unknown_model"),
+        AdminError::ShuttingDown => (503, "Service Unavailable", "shutting_down"),
+    };
+    if matches!(err, AdminError::ShuttingDown) {
+        ctx.counters.shutting_down.fetch_add(1, Ordering::Relaxed);
+    }
+    reply(conn, status, reason, &[], &error_body(code, &err.to_string()), false)
+}
+
+/// `POST /admin/models/{add,swap}`: the body is one [`ModelVariantConfig`]
+/// JSON object (exactly the engine-config `models` entry shape, so a
+/// variant can be promoted from a config file to a live engine verbatim).
+/// The factory is fully resolved — artifact opened, calibration loaded
+/// and validated, optional quantization run — *before* the engine
+/// registry mutates, so a broken variant is a 400 and the zoo is
+/// untouched.
+fn admin_model_change(
+    ctx: &Ctx,
+    conn: &mut HttpConn<TcpStream>,
+    body: &[u8],
+    op: AdminOp,
+) -> bool {
+    let bad = |ctx: &Ctx, conn: &mut HttpConn<TcpStream>, detail: &str| {
+        ctx.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+        reply(conn, 400, "Bad Request", &[], &error_body("bad_request", detail), false)
+    };
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return bad(ctx, conn, "body is not utf-8"),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return bad(ctx, conn, &format!("body is not valid json: {e}")),
+    };
+    let variant = match ModelVariantConfig::from_json(&json) {
+        Ok(v) => v,
+        Err(e) => return bad(ctx, conn, &format!("{e:#}")),
+    };
+    // Resolve geometry + factory before touching the registry (slow —
+    // artifact decode under eager verify — but outside any lock).
+    let fcfg = match variant.forward_config() {
+        Ok(c) => c,
+        Err(e) => return bad(ctx, conn, &format!("{e:#}")),
+    };
+    let spec = match variant.to_spec() {
+        Ok(s) => s,
+        Err(e) => return bad(ctx, conn, &format!("{e:#}")),
+    };
+    let result = match op {
+        AdminOp::Add => ctx.engine.add_model(spec),
+        AdminOp::Swap => ctx.engine.swap_model(&variant.name, spec),
+    };
+    if let Err(e) = result {
+        return admin_error_reply(ctx, conn, e);
+    }
+    // Engine committed; bring the wire contract in line.
+    let meta = ModelMeta { name: variant.name.clone(), input_shape: fcfg.input_shape() };
+    let mut metas = ctx.models.lock().unwrap_or_else(|p| p.into_inner());
+    match metas.iter_mut().find(|m| m.name == meta.name) {
+        Some(slot) => *slot = meta,
+        None => metas.push(meta),
+    }
+    drop(metas);
+    ctx.counters.admin_model_ops.fetch_add(1, Ordering::Relaxed);
+    let status = match op {
+        AdminOp::Add => "added",
+        AdminOp::Swap => "swapped",
+    };
+    let body = Json::obj_from(vec![
+        ("status", Json::Str(status.to_string())),
+        ("model", Json::Str(variant.name.clone())),
+        ("source", Json::Str(variant.source.describe())),
+    ])
+    .dump()
+    .into_bytes();
+    reply(conn, 200, "OK", &[], &body, false)
+}
+
+/// `POST /admin/models/remove` with `{"model": name}`: retire the
+/// variant. Already-queued requests still drain; new submissions 404.
+fn admin_model_remove(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, body: &[u8]) -> bool {
+    let bad = |ctx: &Ctx, conn: &mut HttpConn<TcpStream>, detail: &str| {
+        ctx.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+        reply(conn, 400, "Bad Request", &[], &error_body("bad_request", detail), false)
+    };
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return bad(ctx, conn, "body is not utf-8"),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return bad(ctx, conn, &format!("body is not valid json: {e}")),
+    };
+    let obj = match json.obj() {
+        Ok(o) => o,
+        Err(_) => return bad(ctx, conn, "body must be {\"model\": \"<name>\"}"),
+    };
+    if let Some(key) = obj.keys().find(|k| k.as_str() != "model") {
+        return bad(ctx, conn, &format!("unknown key {key:?}; allowed: model"));
+    }
+    let name = match obj.get("model").and_then(|v| v.str().ok()) {
+        Some(n) => n.to_string(),
+        None => return bad(ctx, conn, "body must be {\"model\": \"<name>\"}"),
+    };
+    if let Err(e) = ctx.engine.remove_model(&name) {
+        return admin_error_reply(ctx, conn, e);
+    }
+    let mut metas = ctx.models.lock().unwrap_or_else(|p| p.into_inner());
+    metas.retain(|m| m.name != name);
+    drop(metas);
+    ctx.counters.admin_model_ops.fetch_add(1, Ordering::Relaxed);
+    let body = Json::obj_from(vec![
+        ("status", Json::Str("removed".to_string())),
+        ("model", Json::Str(name)),
+    ])
+    .dump()
+    .into_bytes();
+    reply(conn, 200, "OK", &[], &body, false)
 }
 
 /// Everything `POST /v1/infer` accepts, parsed and validated before any
@@ -574,7 +781,10 @@ fn serve_infer(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, body: &[u8]) -> bool {
             return reply(conn, 400, "Bad Request", &[], &error_body("bad_request", &detail), false);
         }
     };
-    let meta = ctx.models.iter().find(|m| m.name == parsed.model);
+    let meta = {
+        let metas = ctx.models.lock().unwrap_or_else(|p| p.into_inner());
+        metas.iter().find(|m| m.name == parsed.model).cloned()
+    };
     let image = match (&meta, parsed.payload) {
         (Some(meta), Payload::Inline(data)) => {
             if data.len() != meta.input_len() {
@@ -787,6 +997,8 @@ mod tests {
             "backend_error",
             "deadline_exceeded",
             "breaker_open",
+            "unauthorized",
+            "admin_model_ops",
         ] {
             assert!(j.get(key).is_ok(), "missing {key}");
         }

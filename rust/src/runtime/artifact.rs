@@ -42,12 +42,14 @@ use std::fmt;
 use std::fs;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex as StdMutex};
 
 use crate::quant::{quant_absmax, CalibTable, QuantTensor, TensorDtype};
 use crate::util::Json;
 use crate::vision::{TensorSlotMut, TensorView, VimWeights, WeightMat};
 
-use super::manifest::{tensor_absmax, ArtifactManifest, Provenance};
+use super::manifest::{tensor_absmax, ArtifactManifest, Provenance, TensorMeta};
 
 /// File magic: the first 8 bytes of every artifact.
 pub const ARTIFACT_MAGIC: [u8; 8] = *b"MAMBAXAR";
@@ -146,15 +148,57 @@ impl fmt::Display for ArtifactError {
 
 impl std::error::Error for ArtifactError {}
 
-/// 64-bit FNV-1a over a byte stream — the artifact's whole-file checksum
-/// (mirrored by the python exporter).
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
+/// FNV-1a 64 offset basis (the hash of the empty stream).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold more bytes into a running FNV-1a 64 state — the streaming form
+/// the lazy loader uses to checksum a file without holding it resident.
+fn fnv1a64_update(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01B3);
     }
     h
+}
+
+/// 64-bit FNV-1a over a byte stream — the artifact's whole-file checksum
+/// (mirrored by the python exporter).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_update(FNV_OFFSET, bytes)
+}
+
+/// How much of an artifact [`ArtifactStore`] verifies before handing it
+/// to the caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum VerifyMode {
+    /// Today's semantics: decode and integrity-check every tensor before
+    /// the artifact is usable (what [`ArtifactStore::open`] does). The
+    /// default — golden pins and `inspect` rely on it.
+    #[default]
+    Eager,
+    /// Eager header + manifest + whole-file checksum, per-tensor
+    /// verification deferred to first touch (or a background verifier
+    /// thread) via [`ArtifactStore::open_lazy`]. Cold start stops paying
+    /// for per-tensor decode; corruption still surfaces as a typed
+    /// [`ArtifactError`], just later.
+    Lazy,
+}
+
+impl VerifyMode {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "eager" => Ok(VerifyMode::Eager),
+            "lazy" => Ok(VerifyMode::Lazy),
+            other => Err(format!("unknown verify mode {other:?}; valid: eager, lazy")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerifyMode::Eager => "eager",
+            VerifyMode::Lazy => "lazy",
+        }
+    }
 }
 
 /// One fully-loaded model artifact: manifest + weights + optional
@@ -376,78 +420,10 @@ impl ArtifactStore {
         let mut pending: Vec<(String, QuantTensor)> = Vec::new();
         let mut off = 0usize;
         for (meta, (_, slot)) in manifest.tensors.iter().zip(weights.named_slots_mut()) {
-            let elems = match &slot {
-                TensorSlotMut::Plain(v) => v.len(),
-                TensorSlotMut::Gemm(w) => w.len(),
-            };
-            match meta.dtype {
-                TensorDtype::F32 => {
-                    let span = &blob[off..off + 4 * elems];
-                    off += 4 * elems;
-                    let dst: &mut [f32] = match slot {
-                        TensorSlotMut::Plain(v) => v,
-                        TensorSlotMut::Gemm(w) => {
-                            w.as_f32_mut().expect("zeros() slots start dense")
-                        }
-                    };
-                    for (chunk, s) in span.chunks_exact(4).zip(dst.iter_mut()) {
-                        *s = f32::from_le_bytes(chunk.try_into().expect("4 bytes"));
-                    }
-                    let absmax = tensor_absmax(dst);
-                    if absmax.to_bits() != meta.absmax.to_bits() {
-                        return Err(ArtifactError::TensorCorrupt {
-                            name: meta.name.clone(),
-                            detail: format!(
-                                "data |max| {absmax:e} disagrees with the manifest \
-                                 record {:e}",
-                                meta.absmax
-                            ),
-                        });
-                    }
-                }
-                TensorDtype::I8 => {
-                    let cols = meta.scale_count();
-                    let codes = &blob[off..off + elems];
-                    off += elems;
-                    let q: Vec<i8> = codes.iter().map(|&b| b as i8).collect();
-                    let sspan = &blob[off..off + 4 * cols];
-                    off += 4 * cols;
-                    let scales: Vec<f32> = sspan
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
-                        .collect();
-                    for (i, s) in scales.iter().enumerate() {
-                        if !s.is_finite() || *s <= 0.0 {
-                            return Err(ArtifactError::TensorCorrupt {
-                                name: meta.name.clone(),
-                                detail: format!(
-                                    "quantization scale #{i} is {s:e}; scales must \
-                                     be finite and positive"
-                                ),
-                            });
-                        }
-                    }
-                    let absmax = quant_absmax(&q, &scales, cols);
-                    if absmax.to_bits() != meta.absmax.to_bits() {
-                        return Err(ArtifactError::TensorCorrupt {
-                            name: meta.name.clone(),
-                            detail: format!(
-                                "dequantized |max| {absmax:e} disagrees with the \
-                                 manifest record {:e}",
-                                meta.absmax
-                            ),
-                        });
-                    }
-                    let qt = QuantTensor { rows: elems / cols, cols, q, scales };
-                    match slot {
-                        TensorSlotMut::Gemm(w) => *w = WeightMat::I8(qt),
-                        TensorSlotMut::Plain(v) => {
-                            *v = qt.dequant();
-                            pending.push((meta.name.clone(), qt));
-                        }
-                    }
-                }
-            }
+            let stored = meta.stored_bytes() as usize;
+            let span = &blob[off..off + stored];
+            off += stored;
+            assign_tensor(decode_tensor_span(meta, span)?, meta, slot, &mut pending);
         }
         weights.store_q.extend(pending);
 
@@ -555,6 +531,422 @@ impl ArtifactStore {
             Some(table)
         };
         Ok(ArtifactSummary { manifest, weight_bytes: blob_len, params, calib, file_bytes })
+    }
+
+    /// Lazy open: run the eager phase only — header, manifest, section
+    /// accounting, whole-file checksum (streamed, nothing held resident)
+    /// and embedded-calibration fit — and return an [`ArtifactHandle`]
+    /// that decodes and integrity-checks tensors on first touch. Cold
+    /// start stops scaling with per-tensor decode; a tensor corrupted in
+    /// the file after this call still fails typed at touch time because
+    /// the manifest's integrity records are held in memory.
+    pub fn open_lazy(path: impl AsRef<Path>) -> Result<ArtifactHandle, ArtifactError> {
+        let path = path.as_ref();
+        let io = |e: std::io::Error| ArtifactError::Io {
+            path: path.to_path_buf(),
+            detail: e.to_string(),
+        };
+        let mut f = fs::File::open(path).map_err(io)?;
+        let file_bytes = f.metadata().map_err(io)?.len();
+        let mut head = [0u8; 16];
+        read_exact_section(&mut f, &mut head, "header", path)?;
+        if head[..8] != ARTIFACT_MAGIC {
+            return Err(ArtifactError::ForeignMagic {
+                found: head[..8].try_into().expect("8 bytes"),
+            });
+        }
+        let version = u32::from_le_bytes(head[8..12].try_into().expect("4 bytes"));
+        if !(ARTIFACT_MIN_VERSION..=ARTIFACT_VERSION).contains(&version) {
+            return Err(ArtifactError::FutureVersion { found: version });
+        }
+        let manifest_len = u32::from_le_bytes(head[12..16].try_into().expect("4 bytes")) as u64;
+        let fixed = 16 + manifest_len + 8 + 4 + 8;
+        if fixed > file_bytes {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "manifest declares {manifest_len} bytes; file is only {file_bytes}"
+                ),
+            });
+        }
+        let mut manifest_bytes = vec![0u8; manifest_len as usize];
+        read_exact_section(&mut f, &mut manifest_bytes, "manifest", path)?;
+        let mut len8 = [0u8; 8];
+        read_exact_section(&mut f, &mut len8, "tensor blob length", path)?;
+        let blob_len = u64::from_le_bytes(len8);
+        let declared = fixed.checked_add(blob_len).unwrap_or(u64::MAX);
+        if declared > file_bytes {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "sections declare at least {declared} bytes; file is {file_bytes}"
+                ),
+            });
+        }
+        let blob_off = 16 + manifest_len + 8;
+        f.seek(SeekFrom::Current(blob_len as i64)).map_err(io)?;
+        let mut len4 = [0u8; 4];
+        read_exact_section(&mut f, &mut len4, "calibration section length", path)?;
+        let calib_len = u32::from_le_bytes(len4) as u64;
+        let total = declared.checked_add(calib_len).unwrap_or(u64::MAX);
+        match total.cmp(&file_bytes) {
+            std::cmp::Ordering::Greater => {
+                return Err(ArtifactError::Truncated {
+                    detail: format!("sections declare {total} bytes; file is {file_bytes}"),
+                })
+            }
+            std::cmp::Ordering::Less => {
+                return Err(ArtifactError::TrailingBytes { extra: file_bytes - total })
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        let mut calib_bytes = vec![0u8; calib_len as usize];
+        read_exact_section(&mut f, &mut calib_bytes, "embedded calibration table", path)?;
+        let mut tail = [0u8; 8];
+        read_exact_section(&mut f, &mut tail, "checksum", path)?;
+        let stored_checksum = u64::from_le_bytes(tail);
+
+        // Streamed whole-file checksum: one sequential pass over
+        // everything before the trailer, 64 KiB at a time.
+        f.seek(SeekFrom::Start(0)).map_err(io)?;
+        let mut h = FNV_OFFSET;
+        let mut remaining = file_bytes - 8;
+        let mut chunk = vec![0u8; 64 * 1024];
+        while remaining > 0 {
+            let n = remaining.min(chunk.len() as u64) as usize;
+            read_exact_section(&mut f, &mut chunk[..n], "checksum stream", path)?;
+            h = fnv1a64_update(h, &chunk[..n]);
+            remaining -= n as u64;
+        }
+        if stored_checksum != h {
+            return Err(ArtifactError::Checksum { stored: stored_checksum, computed: h });
+        }
+
+        let manifest = parse_manifest(&manifest_bytes, version)?;
+        let cfg = manifest.forward_config()?;
+        let want_blob = manifest.blob_bytes()?;
+        if blob_len != want_blob {
+            return Err(ArtifactError::Truncated {
+                detail: format!(
+                    "tensor blob is {blob_len} bytes; manifest dtype records \
+                     account for {want_blob}"
+                ),
+            });
+        }
+        let calib = if calib_bytes.is_empty() {
+            None
+        } else {
+            let table = parse_calib(&calib_bytes)?;
+            table
+                .validate(cfg.model.name, cfg.model.n_blocks, cfg.model.d_inner())
+                .map_err(|e| ArtifactError::Calib(e.to_string()))?;
+            Some(table)
+        };
+        // Per-tensor spans within the blob, manifest order.
+        let mut offsets = Vec::with_capacity(manifest.tensors.len());
+        let mut off = 0u64;
+        for t in &manifest.tensors {
+            offsets.push(off);
+            off += t.stored_bytes();
+        }
+        let states = (0..manifest.tensors.len()).map(|_| AtomicU8::new(TENSOR_PENDING)).collect();
+        Ok(ArtifactHandle {
+            inner: Arc::new(HandleInner {
+                path: path.to_path_buf(),
+                manifest,
+                cfg,
+                calib,
+                blob_off,
+                offsets,
+                states,
+                first_error: StdMutex::new(None),
+            }),
+        })
+    }
+}
+
+/// Per-tensor verify state of an [`ArtifactHandle`] slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TensorVerify {
+    /// Never touched: not yet decoded or integrity-checked.
+    Pending,
+    /// Decoded and integrity-checked at least once; checks passed.
+    Verified,
+    /// Last touch failed its integrity check. Touching again re-verifies
+    /// (the typed error is regenerated, never silently cached away).
+    Failed,
+}
+
+const TENSOR_PENDING: u8 = 0;
+const TENSOR_VERIFIED: u8 = 1;
+const TENSOR_FAILED: u8 = 2;
+
+/// Counts of per-tensor verify states — what `models --engine` and the
+/// background verifier report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyStatus {
+    pub verified: usize,
+    pub pending: usize,
+    pub failed: usize,
+}
+
+struct HandleInner {
+    path: PathBuf,
+    manifest: ArtifactManifest,
+    cfg: crate::vision::ForwardConfig,
+    calib: Option<CalibTable>,
+    /// File offset where the tensor blob begins.
+    blob_off: u64,
+    /// Per-tensor offset within the blob, manifest order.
+    offsets: Vec<u64>,
+    states: Vec<AtomicU8>,
+    /// First integrity failure observed (any tensor) — for status
+    /// reporting; touches always regenerate their own typed error.
+    first_error: StdMutex<Option<ArtifactError>>,
+}
+
+/// A lazily-verified artifact: the eager phase ([`ArtifactStore::open_lazy`])
+/// has validated structure + checksum + manifest + calibration; tensors
+/// are decoded and integrity-checked on first touch, with per-tensor
+/// state recorded. Clone-cheap (`Arc` inside) and shareable with a
+/// background verifier thread.
+#[derive(Clone)]
+pub struct ArtifactHandle {
+    inner: Arc<HandleInner>,
+}
+
+impl fmt::Debug for ArtifactHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.status();
+        f.debug_struct("ArtifactHandle")
+            .field("path", &self.inner.path)
+            .field("arch", &self.inner.manifest.arch)
+            .field("verified", &s.verified)
+            .field("pending", &s.pending)
+            .field("failed", &s.failed)
+            .finish()
+    }
+}
+
+impl ArtifactHandle {
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.inner.manifest
+    }
+
+    pub fn config(&self) -> &crate::vision::ForwardConfig {
+        &self.inner.cfg
+    }
+
+    pub fn calib(&self) -> Option<&CalibTable> {
+        self.inner.calib.as_ref()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.inner.path
+    }
+
+    /// Per-tensor verify state, manifest order.
+    pub fn tensor_states(&self) -> Vec<TensorVerify> {
+        self.inner
+            .states
+            .iter()
+            .map(|s| match s.load(Ordering::Acquire) {
+                TENSOR_VERIFIED => TensorVerify::Verified,
+                TENSOR_FAILED => TensorVerify::Failed,
+                _ => TensorVerify::Pending,
+            })
+            .collect()
+    }
+
+    pub fn status(&self) -> VerifyStatus {
+        let mut v = VerifyStatus { verified: 0, pending: 0, failed: 0 };
+        for s in self.tensor_states() {
+            match s {
+                TensorVerify::Verified => v.verified += 1,
+                TensorVerify::Pending => v.pending += 1,
+                TensorVerify::Failed => v.failed += 1,
+            }
+        }
+        v
+    }
+
+    /// Touch one tensor: read its span from the file, decode and
+    /// integrity-check it. Verified slots are skipped (already proven);
+    /// failed slots re-verify so the typed error is always current.
+    pub fn verify_tensor(&self, idx: usize) -> Result<(), ArtifactError> {
+        self.touch(idx).map(|_| ())
+    }
+
+    /// Touch every tensor (the background-verifier body): first
+    /// integrity failure is returned typed.
+    pub fn verify_all(&self) -> Result<(), ArtifactError> {
+        for i in 0..self.inner.manifest.tensors.len() {
+            self.verify_tensor(i)?;
+        }
+        Ok(())
+    }
+
+    /// Run [`ArtifactHandle::verify_all`] on a background thread. The
+    /// verify ledger is shared, so tensors the serving path already
+    /// touched are not re-checked, and vice versa.
+    pub fn spawn_verifier(&self) -> std::thread::JoinHandle<Result<(), ArtifactError>> {
+        let h = self.clone();
+        std::thread::Builder::new()
+            .name("artifact-verifier".into())
+            .spawn(move || h.verify_all())
+            .expect("spawn artifact verifier thread")
+    }
+
+    /// Materialize the full artifact: every tensor is touched (first
+    /// touch = decode + integrity check), assembled into weights bitwise
+    /// identical to what [`ArtifactStore::open`] returns for the same
+    /// file image.
+    pub fn materialize(&self) -> Result<VimArtifact, ArtifactError> {
+        let inner = &self.inner;
+        let mut weights = VimWeights::zeros(&inner.cfg);
+        let mut pending: Vec<(String, QuantTensor)> = Vec::new();
+        for (i, (meta, (_, slot))) in
+            inner.manifest.tensors.iter().zip(weights.named_slots_mut()).enumerate()
+        {
+            assign_tensor(self.touch(i)?, meta, slot, &mut pending);
+        }
+        weights.store_q.extend(pending);
+        Ok(VimArtifact {
+            manifest: inner.manifest.clone(),
+            weights,
+            calib: inner.calib.clone(),
+        })
+    }
+
+    /// Decode + verify tensor `idx` from its on-disk span, updating the
+    /// ledger. Failed state never short-circuits: the check reruns so
+    /// the error reflects the file as it is now.
+    fn touch(&self, idx: usize) -> Result<DecodedTensor, ArtifactError> {
+        let inner = &self.inner;
+        let meta = &inner.manifest.tensors[idx];
+        let span = inner.read_span(idx)?;
+        match decode_tensor_span(meta, &span) {
+            Ok(d) => {
+                inner.states[idx].store(TENSOR_VERIFIED, Ordering::Release);
+                Ok(d)
+            }
+            Err(e) => {
+                inner.states[idx].store(TENSOR_FAILED, Ordering::Release);
+                let mut slot = inner.first_error.lock().unwrap_or_else(|p| p.into_inner());
+                if slot.is_none() {
+                    *slot = Some(e.clone());
+                }
+                Err(e)
+            }
+        }
+    }
+}
+
+impl HandleInner {
+    /// Read one tensor's stored span from the file (open + seek + exact
+    /// read — the handle holds no file descriptor between touches).
+    fn read_span(&self, idx: usize) -> Result<Vec<u8>, ArtifactError> {
+        let meta = &self.manifest.tensors[idx];
+        let io = |e: std::io::Error| ArtifactError::Io {
+            path: self.path.clone(),
+            detail: e.to_string(),
+        };
+        let mut f = fs::File::open(&self.path).map_err(io)?;
+        f.seek(SeekFrom::Start(self.blob_off + self.offsets[idx])).map_err(io)?;
+        let mut buf = vec![0u8; meta.stored_bytes() as usize];
+        read_exact_section(&mut f, &mut buf, &format!("tensor {:?}", meta.name), &self.path)?;
+        Ok(buf)
+    }
+}
+
+/// One tensor decoded from its stored span — the integrity-checked
+/// intermediate shared by [`ArtifactStore::decode`] and the lazy handle.
+enum DecodedTensor {
+    F32(Vec<f32>),
+    I8(QuantTensor),
+}
+
+/// Decode + integrity-check one tensor from exactly its stored-byte
+/// span. The single source of truth for per-tensor verification: the
+/// eager loader and the lazy handle both run this, so "verified" means
+/// the same thing in both modes.
+fn decode_tensor_span(meta: &TensorMeta, span: &[u8]) -> Result<DecodedTensor, ArtifactError> {
+    let elems: usize = meta.shape.iter().product();
+    match meta.dtype {
+        TensorDtype::F32 => {
+            let mut dst = vec![0f32; elems];
+            for (chunk, s) in span.chunks_exact(4).zip(dst.iter_mut()) {
+                *s = f32::from_le_bytes(chunk.try_into().expect("4 bytes"));
+            }
+            let absmax = tensor_absmax(&dst);
+            if absmax.to_bits() != meta.absmax.to_bits() {
+                return Err(ArtifactError::TensorCorrupt {
+                    name: meta.name.clone(),
+                    detail: format!(
+                        "data |max| {absmax:e} disagrees with the manifest \
+                         record {:e}",
+                        meta.absmax
+                    ),
+                });
+            }
+            Ok(DecodedTensor::F32(dst))
+        }
+        TensorDtype::I8 => {
+            let cols = meta.scale_count();
+            let q: Vec<i8> = span[..elems].iter().map(|&b| b as i8).collect();
+            let scales: Vec<f32> = span[elems..elems + 4 * cols]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                .collect();
+            for (i, s) in scales.iter().enumerate() {
+                if !s.is_finite() || *s <= 0.0 {
+                    return Err(ArtifactError::TensorCorrupt {
+                        name: meta.name.clone(),
+                        detail: format!(
+                            "quantization scale #{i} is {s:e}; scales must \
+                             be finite and positive"
+                        ),
+                    });
+                }
+            }
+            let absmax = quant_absmax(&q, &scales, cols);
+            if absmax.to_bits() != meta.absmax.to_bits() {
+                return Err(ArtifactError::TensorCorrupt {
+                    name: meta.name.clone(),
+                    detail: format!(
+                        "dequantized |max| {absmax:e} disagrees with the \
+                         manifest record {:e}",
+                        meta.absmax
+                    ),
+                });
+            }
+            Ok(DecodedTensor::I8(QuantTensor { rows: elems / cols, cols, q, scales }))
+        }
+    }
+}
+
+/// Land a decoded tensor in its weight slot (Plain-slot INT8 records
+/// dequantize into the dense slot and queue for the `store_q` sidecar —
+/// identical to the eager loader's assignment).
+fn assign_tensor(
+    decoded: DecodedTensor,
+    meta: &TensorMeta,
+    slot: TensorSlotMut<'_>,
+    pending: &mut Vec<(String, QuantTensor)>,
+) {
+    match decoded {
+        DecodedTensor::F32(data) => {
+            let dst: &mut [f32] = match slot {
+                TensorSlotMut::Plain(v) => v,
+                TensorSlotMut::Gemm(w) => w.as_f32_mut().expect("zeros() slots start dense"),
+            };
+            dst.copy_from_slice(&data);
+        }
+        DecodedTensor::I8(qt) => match slot {
+            TensorSlotMut::Gemm(w) => *w = WeightMat::I8(qt),
+            TensorSlotMut::Plain(v) => {
+                *v = qt.dequant();
+                pending.push((meta.name.clone(), qt));
+            }
+        },
     }
 }
 
@@ -715,6 +1107,98 @@ mod tests {
             ArtifactStore::decode(&ancient),
             Err(ArtifactError::FutureVersion { found: 0 })
         ));
+    }
+
+    fn temp_artifact_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "mamba_x_artifact_{tag}_{}_{:?}.mxa",
+            std::process::id(),
+            std::thread::current().id()
+        ))
+    }
+
+    #[test]
+    fn lazy_open_materialize_is_bitwise_eager_open() {
+        let cfg = crate::vision::ForwardConfig::micro_s();
+        let art = VimArtifact::from_weights(
+            VimWeights::init(&cfg, 11),
+            None,
+            Provenance { tool: "unit".into(), detail: "lazy".into() },
+        )
+        .unwrap();
+        let path = temp_artifact_path("lazy_bitwise");
+        ArtifactStore::save(&path, &art).unwrap();
+
+        let eager = ArtifactStore::open(&path).unwrap();
+        let handle = ArtifactStore::open_lazy(&path).unwrap();
+        // Eager phase alone touches nothing.
+        let s = handle.status();
+        assert_eq!((s.verified, s.failed), (0, 0));
+        assert_eq!(s.pending, handle.manifest().tensors.len());
+
+        let lazy = handle.materialize().unwrap();
+        assert_eq!(lazy.manifest, eager.manifest);
+        for ((name, a), (_, b)) in
+            eager.weights.named_tensors().iter().zip(lazy.weights.named_tensors())
+        {
+            assert_eq!(*a, b, "{name}");
+        }
+        let s = handle.status();
+        assert_eq!((s.pending, s.failed), (0, 0));
+        assert_eq!(s.verified, handle.manifest().tensors.len());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn lazy_catches_post_open_corruption_on_first_touch() {
+        let cfg = crate::vision::ForwardConfig::micro_s();
+        let art = VimArtifact::from_weights(
+            VimWeights::init(&cfg, 12),
+            None,
+            Provenance { tool: "unit".into(), detail: "corrupt".into() },
+        )
+        .unwrap();
+        let path = temp_artifact_path("lazy_corrupt");
+        ArtifactStore::save(&path, &art).unwrap();
+
+        // Eager phase passes (checksum was valid at open time) ...
+        let handle = ArtifactStore::open_lazy(&path).unwrap();
+        // ... then the file rots underneath the handle: blow out the
+        // first element of tensor #1 (absmax goes NaN — a guaranteed
+        // integrity-record mismatch, unlike a low-mantissa bit flip).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let blob_off = {
+            let mlen =
+                u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+            16 + mlen + 8
+        };
+        let t1_off: usize =
+            handle.manifest().tensors[..1].iter().map(|t| t.stored_bytes() as usize).sum();
+        bytes[blob_off + t1_off..blob_off + t1_off + 4]
+            .copy_from_slice(&f32::INFINITY.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+
+        // Tensor 0 is clean; tensor 1 fails typed on first touch.
+        handle.verify_tensor(0).unwrap();
+        let err = handle.verify_tensor(1).unwrap_err();
+        assert!(matches!(err, ArtifactError::TensorCorrupt { .. }), "{err}");
+        assert_eq!(handle.tensor_states()[1], TensorVerify::Failed);
+        // materialize and the background verifier surface the same error.
+        assert!(matches!(
+            handle.materialize(),
+            Err(ArtifactError::TensorCorrupt { .. })
+        ));
+        let join = handle.spawn_verifier();
+        assert!(matches!(
+            join.join().unwrap(),
+            Err(ArtifactError::TensorCorrupt { .. })
+        ));
+        // Eager open of the rotted file fails up front (checksum gate).
+        assert!(matches!(
+            ArtifactStore::open(&path),
+            Err(ArtifactError::Checksum { .. })
+        ));
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

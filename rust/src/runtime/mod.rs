@@ -40,8 +40,9 @@ pub mod native;
 pub mod pjrt;
 
 pub use artifact::{
-    fnv1a64, ArtifactError, ArtifactStore, ArtifactSummary, VimArtifact, ARTIFACT_MAGIC,
-    ARTIFACT_MIN_VERSION, ARTIFACT_VERSION,
+    fnv1a64, ArtifactError, ArtifactHandle, ArtifactStore, ArtifactSummary, TensorVerify,
+    VerifyMode, VerifyStatus, VimArtifact, ARTIFACT_MAGIC, ARTIFACT_MIN_VERSION,
+    ARTIFACT_VERSION,
 };
 pub use fault::{FaultPlan, FaultyBackend, ModelFaults, FAULT_PLAN_VERSION};
 pub use manifest::{

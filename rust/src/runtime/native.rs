@@ -14,7 +14,7 @@
 //! the INT8 scan fuse across the batch as well; without one, the dynamic
 //! per-item path (the oracle) runs.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex as StdMutex};
 
 use anyhow::{bail, Context as _, Result};
 
@@ -23,7 +23,7 @@ use crate::quant::{CalibTable, WeightQuantOpts};
 use crate::sim::sfu::SfuTables;
 use crate::vision::{ForwardConfig, ScanExec, VimWeights};
 
-use super::{BackendFactory, InferenceBackend, ModelSource, Tensor};
+use super::{ArtifactStore, BackendFactory, InferenceBackend, ModelSource, Tensor, VerifyMode};
 
 /// Per-variant weight-quantization request (the engine config's
 /// `"quantize"` spec): how many synthetic calibration images the
@@ -112,6 +112,79 @@ impl NativeBackend {
         calib_override: Option<Arc<CalibTable>>,
         quantize: Option<WeightQuantSpec>,
     ) -> Result<BackendFactory> {
+        Self::factory_ex(source, calib_override, quantize, VerifyMode::Eager)
+    }
+
+    /// [`NativeBackend::factory`] with an explicit artifact verify mode.
+    ///
+    /// `VerifyMode::Eager` is the classic path: the source resolves (and
+    /// an artifact fully decodes + verifies) here, before this returns.
+    /// `VerifyMode::Lazy` applies to artifact sources only (random init
+    /// has no decode cost to defer): the eager phase — header, manifest,
+    /// whole-file checksum, calibration fit — still runs here, so a bad
+    /// file or misfit override fails at build time; per-tensor decode +
+    /// verification is deferred to the first worker construction, where
+    /// all workers then share the one materialized copy. A tensor
+    /// corrupted between open and first touch fails worker construction
+    /// typed — which the engine's supervision and breaker machinery
+    /// surface — never silently.
+    pub fn factory_ex(
+        source: ModelSource,
+        calib_override: Option<Arc<CalibTable>>,
+        quantize: Option<WeightQuantSpec>,
+        verify: VerifyMode,
+    ) -> Result<BackendFactory> {
+        if let (ModelSource::Artifact(path), VerifyMode::Lazy) = (&source, verify) {
+            let handle = ArtifactStore::open_lazy(path)?;
+            let origin = format!("artifact {} (lazy verify)", path.display());
+            let calib = match calib_override {
+                Some(table) => {
+                    let m = &handle.config().model;
+                    table
+                        .validate(m.name, m.n_blocks, m.d_inner())
+                        .with_context(|| format!("calibration override for {origin}"))?;
+                    Some(table)
+                }
+                None => handle.calib().cloned().map(Arc::new),
+            };
+            // Deferred materialization, memoized: the first worker built
+            // pays per-tensor decode + verify (+ optional quantization)
+            // once; every later worker clones the shared Arc. Errors are
+            // memoized too — a corrupt tensor fails every construction
+            // typed instead of flapping.
+            let cell: Arc<StdMutex<Option<std::result::Result<Arc<VimWeights>, String>>>> =
+                Arc::new(StdMutex::new(None));
+            return Ok(Arc::new(move |_worker| {
+                let weights = {
+                    let mut slot = cell.lock().unwrap_or_else(|p| p.into_inner());
+                    if slot.is_none() {
+                        *slot = Some(
+                            handle
+                                .materialize()
+                                .map_err(|e| e.to_string())
+                                .and_then(|art| match quantize {
+                                    Some(spec) => {
+                                        Self::quantize_weights(&art.weights, &spec)
+                                            .map_err(|e| e.to_string())
+                                    }
+                                    None => Ok(art.weights),
+                                })
+                                .map(Arc::new),
+                        );
+                    }
+                    match slot.as_ref().expect("memoized above") {
+                        Ok(w) => Arc::clone(w),
+                        Err(e) => bail!("lazy materialization of {origin} failed: {e}"),
+                    }
+                };
+                let backend = NativeBackend::from_weights(weights);
+                let backend = match &calib {
+                    Some(table) => backend.with_calib(Arc::clone(table))?,
+                    None => backend,
+                };
+                Ok(Box::new(backend) as Box<dyn InferenceBackend>)
+            }));
+        }
         let resolved = source.resolve()?;
         let calib = match calib_override {
             Some(table) => {

@@ -82,12 +82,12 @@ fn prop_two_variants_bitwise_equal_direct() {
             .queue_depth(64)
             .register(ModelSpec::new(
                 "prop@dynamic",
-                NativeBackend::factory(source.clone(), None).unwrap(),
+                NativeBackend::factory(source.clone(), None, None).unwrap(),
             ))
             .unwrap()
             .register(ModelSpec::new(
                 "prop@calib",
-                NativeBackend::factory(source, Some(Arc::clone(&calib))).unwrap(),
+                NativeBackend::factory(source, Some(Arc::clone(&calib)), None).unwrap(),
             ))
             .unwrap()
             .build()

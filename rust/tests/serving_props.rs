@@ -146,6 +146,7 @@ fn v0_shim_and_engine_agree_bitwise() {
             NativeBackend::factory(
                 mamba_x::runtime::ModelSource::RandomInit { config: v1_cfg, seed },
                 None,
+                None,
             )
             .unwrap(),
         ))

@@ -1,0 +1,466 @@
+//! Live model zoo properties (the acceptance gate for lazy artifact
+//! loading + the dynamic hot-swap registry):
+//!
+//! * corruption matrix: a tensor corrupted *after* `open_lazy`'s eager
+//!   phase (header + manifest + whole-file checksum) is caught typed
+//!   (`ArtifactError::TensorCorrupt`, naming the tensor) on first touch —
+//!   across f32 and INT8-quantized artifacts, at several blob positions —
+//!   while an eager re-open of the same rotted file fails up front at the
+//!   checksum gate; the lazy backend factory surfaces the same failure
+//!   typed at build time, never as silent weight garbage;
+//! * hot swap is bitwise invariant: requests served before a
+//!   `swap_model` match the old weights' direct oracle bit-for-bit, and
+//!   requests after match the new weights' oracle — batching and the
+//!   swap window are invisible to response bits;
+//! * books stay exact across add/swap/remove under concurrent load:
+//!   every client-side admitted request is answered exactly once
+//!   (completed, deadline_exceeded, or backend_failed — never lost), and
+//!   engine-side ledgers reconcile with client-side tallies including
+//!   the removed-model window (`rejected_unknown_model`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use mamba_x::config::VimModel;
+use mamba_x::coordinator::{AdminError, BatchPolicy, EngineBuilder, RejectReason, Request};
+use mamba_x::quant::TensorDtype;
+use mamba_x::runtime::{
+    native::synthetic_image, ArtifactError, ArtifactStore, InferenceBackend, ModelSource,
+    ModelSpec, NativeBackend, Provenance, Tensor, TensorVerify, VerifyMode, VimArtifact,
+};
+use mamba_x::util::Pcg;
+use mamba_x::vision::{ForwardConfig, VimWeights};
+
+/// Small-but-real model (same as `engine_props.rs` / `serving_props.rs`):
+/// every datapath stage of the micro model, far fewer multiplies.
+fn prop_cfg() -> ForwardConfig {
+    ForwardConfig {
+        model: VimModel {
+            name: "prop",
+            d_model: 16,
+            n_blocks: 2,
+            d_state: 4,
+            expand: 2,
+            conv_k: 4,
+            patch: 4,
+        },
+        img: 8,
+        in_ch: 1,
+        n_classes: 6,
+    }
+}
+
+fn temp_artifact_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "mamba_x_zoo_{tag}_{}_{:?}.mxa",
+        std::process::id(),
+        std::thread::current().id()
+    ))
+}
+
+/// Byte offset where the tensor blob begins, read off the file image the
+/// same way the store computes it (header 16 bytes, manifest, blob len).
+fn blob_offset(bytes: &[u8]) -> usize {
+    let mlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    16 + mlen + 8
+}
+
+/// Return a corrupted copy of the artifact image with tensor at
+/// `span_off` rotted: for f32 records blow out the first element with
+/// +inf (absmax goes NaN — a guaranteed integrity-record mismatch,
+/// unlike a low-mantissa bit flip in a non-max element, which the
+/// absmax record cannot see); for INT8 records blow out the first
+/// dequantization scale the same way (a non-finite scale is refused
+/// before any code dequantizes).
+fn corrupt_tensor_at(pristine: &[u8], dtype: TensorDtype, span_off: usize, elems: usize) -> Vec<u8> {
+    let mut bytes = pristine.to_vec();
+    let blob = blob_offset(pristine);
+    let target = match dtype {
+        // First element of the f32 data.
+        TensorDtype::F32 => blob + span_off,
+        // First per-column scale (codes are `elems` bytes, scales follow).
+        TensorDtype::I8 => blob + span_off + elems,
+    };
+    bytes[target..target + 4].copy_from_slice(&f32::INFINITY.to_le_bytes());
+    bytes
+}
+
+/// ACCEPTANCE (corruption matrix): across f32 and quantized artifacts
+/// and several tensor positions (first, seeded middle picks, last), a
+/// tensor corrupted after the lazy eager phase fails typed on first
+/// touch with the tensor's name, other tensors still verify, the
+/// background verifier and `materialize` surface the same typed error,
+/// and an eager `open` of the rotted file fails at the checksum gate.
+#[test]
+fn corruption_after_eager_phase_caught_typed_matrix() {
+    let cfg = prop_cfg();
+    for quantized in [false, true] {
+        let mut weights = VimWeights::init(&cfg, 21);
+        if quantized {
+            let plan =
+                mamba_x::quant::WeightQuantPlan::all_at_absmax(&weights.weight_quant_candidates());
+            weights.apply_weight_quant(&plan).unwrap();
+        }
+        let art = VimArtifact::from_weights(
+            weights,
+            None,
+            Provenance { tool: "zoo-props".into(), detail: "corruption matrix".into() },
+        )
+        .unwrap();
+        let path = temp_artifact_path(if quantized { "matrix_i8" } else { "matrix_f32" });
+        ArtifactStore::save(&path, &art).unwrap();
+        let pristine = std::fs::read(&path).unwrap();
+
+        // Per-tensor spans, manifest order, recomputed like the store's.
+        let probe = ArtifactStore::open_lazy(&path).unwrap();
+        let tensors = probe.manifest().tensors.clone();
+        let mut offsets = Vec::new();
+        let mut off = 0usize;
+        for t in &tensors {
+            offsets.push(off);
+            off += t.stored_bytes() as usize;
+        }
+        // Matrix of positions: ends plus seeded middle picks; under the
+        // quantized artifact make sure at least one INT8 record is hit.
+        let mut rng = Pcg::new(0x500 + quantized as u64);
+        let mut picks = vec![0, tensors.len() - 1];
+        for _ in 0..3 {
+            picks.push(rng.usize_in(1, tensors.len() - 2));
+        }
+        if quantized {
+            let i8_idx = tensors
+                .iter()
+                .position(|t| t.dtype == TensorDtype::I8)
+                .expect("quantized artifact stores INT8 records");
+            picks.push(i8_idx);
+        }
+        picks.sort_unstable();
+        picks.dedup();
+
+        for idx in picks {
+            let meta = &tensors[idx];
+            let elems: usize = meta.shape.iter().product();
+            // Eager phase on the pristine image passes...
+            std::fs::write(&path, &pristine).unwrap();
+            let handle = ArtifactStore::open_lazy(&path).unwrap();
+            // ...then the file rots underneath the handle.
+            let rotted = corrupt_tensor_at(&pristine, meta.dtype, offsets[idx], elems);
+            std::fs::write(&path, &rotted).unwrap();
+
+            for (i, _) in tensors.iter().enumerate() {
+                if i == idx {
+                    let err = handle.verify_tensor(i).unwrap_err();
+                    match &err {
+                        ArtifactError::TensorCorrupt { name, .. } => assert_eq!(
+                            name, &meta.name,
+                            "typed error names the corrupted tensor ({:?})",
+                            meta.dtype
+                        ),
+                        other => panic!("want TensorCorrupt for {:?}, got {other}", meta.name),
+                    }
+                    assert_eq!(handle.tensor_states()[i], TensorVerify::Failed);
+                } else {
+                    handle.verify_tensor(i).unwrap_or_else(|e| {
+                        panic!("tensor {i} is clean but failed: {e} (corrupted {idx})")
+                    });
+                }
+            }
+            // materialize and the background verifier surface it typed.
+            assert!(matches!(handle.materialize(), Err(ArtifactError::TensorCorrupt { .. })));
+            assert!(matches!(
+                handle.spawn_verifier().join().unwrap(),
+                Err(ArtifactError::TensorCorrupt { .. })
+            ));
+            // Eager open of the rotted file never hands out weights: the
+            // whole-file checksum gate fires before any tensor decodes.
+            assert!(matches!(ArtifactStore::open(&path), Err(ArtifactError::Checksum { .. })));
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+/// The factory surface of the same guarantee: a lazy factory built over
+/// a then-valid artifact fails typed at backend-build time once the file
+/// rots (the memoized materialization error mentions the origin), and an
+/// eager factory over the rotted file refuses at construction.
+#[test]
+fn lazy_factory_surfaces_corruption_typed_at_build() {
+    let cfg = prop_cfg();
+    let art = VimArtifact::from_weights(
+        VimWeights::init(&cfg, 22),
+        None,
+        Provenance { tool: "zoo-props".into(), detail: "lazy factory".into() },
+    )
+    .unwrap();
+    let path = temp_artifact_path("lazy_factory");
+    ArtifactStore::save(&path, &art).unwrap();
+    let pristine = std::fs::read(&path).unwrap();
+
+    // Eager phase passes while the file is sound.
+    let factory =
+        NativeBackend::factory_ex(ModelSource::Artifact(path.clone()), None, None, VerifyMode::Lazy)
+            .expect("sound artifact passes the eager phase");
+
+    let meta = {
+        let probe = ArtifactStore::open_lazy(&path).unwrap();
+        probe.manifest().tensors[1].clone()
+    };
+    let span_off = {
+        let probe = ArtifactStore::open_lazy(&path).unwrap();
+        probe.manifest().tensors[..1].iter().map(|t| t.stored_bytes() as usize).sum::<usize>()
+    };
+    let elems: usize = meta.shape.iter().product();
+    std::fs::write(&path, corrupt_tensor_at(&pristine, meta.dtype, span_off, elems)).unwrap();
+
+    // First build touches every tensor: typed failure, never garbage.
+    let err = factory(0).expect_err("corrupted tensor fails the lazy build");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("lazy materialization"), "memoized origin in error: {msg}");
+    // The error is memoized — a second worker build fails identically
+    // instead of re-reading the rotted file into a different state.
+    let err2 = factory(1).expect_err("memoized failure repeats");
+    assert!(format!("{err2:#}").contains("lazy materialization"), "{err2:#}");
+
+    // Eager semantics preserved: the classic factory refuses up front.
+    assert!(
+        NativeBackend::factory_ex(ModelSource::Artifact(path.clone()), None, None, VerifyMode::Eager)
+            .is_err(),
+        "verify=eager catches the rot at construction"
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+fn spec_for_seed(name: &str, cfg: &ForwardConfig, seed: u64) -> ModelSpec {
+    let source = ModelSource::RandomInit { config: cfg.clone(), seed };
+    ModelSpec::new(name, NativeBackend::factory(source, None, None).unwrap())
+}
+
+/// ACCEPTANCE (hot-swap bitwise invariance): responses before a swap are
+/// bit-identical to the old weights' direct oracle; responses admitted
+/// after the swap are bit-identical to the new weights' oracle. The
+/// report records the swap and the final epoch.
+#[test]
+fn hot_swap_is_bitwise_invariant() {
+    let cfg = prop_cfg();
+    let (seed_a, seed_b) = (31u64, 32u64);
+    let n_elems = cfg.input_len();
+    let (engine, join) = EngineBuilder::new()
+        .workers(2)
+        .policy(BatchPolicy { max_batch: 4, max_wait_us: 200 })
+        .queue_depth(64)
+        .register(spec_for_seed("zoo@m", &cfg, seed_a))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    let mut before = Vec::new();
+    for id in 0..6u64 {
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(9, id, n_elems)).unwrap();
+        before.push((id, engine.infer(Request::new("zoo@m", id, img)).unwrap().logits));
+    }
+    engine.swap_model("zoo@m", spec_for_seed("zoo@m", &cfg, seed_b)).unwrap();
+    let mut after = Vec::new();
+    for id in 10..16u64 {
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(9, id, n_elems)).unwrap();
+        after.push((id, engine.infer(Request::new("zoo@m", id, img)).unwrap().logits));
+    }
+    drop(engine);
+    let report = join.join().unwrap();
+
+    let mut oracle_a = NativeBackend::new(&cfg, seed_a);
+    let mut oracle_b = NativeBackend::new(&cfg, seed_b);
+    for (id, logits) in before {
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(9, id, n_elems)).unwrap();
+        assert_eq!(logits, oracle_a.infer(&img).unwrap(), "pre-swap req {id} runs old weights");
+    }
+    for (id, logits) in after {
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(9, id, n_elems)).unwrap();
+        assert_eq!(logits, oracle_b.infer(&img).unwrap(), "post-swap req {id} runs new weights");
+    }
+    let m = report.model("zoo@m").expect("swapped model reported");
+    assert_eq!(m.swaps, 1, "one hot swap recorded");
+    assert_eq!(m.epoch, 1, "weight epoch advanced once");
+    assert!(!m.retired);
+    assert_eq!(m.metrics.count(), 12, "all 12 requests completed");
+}
+
+/// ACCEPTANCE (chaos books): under concurrent client load, the zoo is
+/// reshaped live — add a second variant, hot-swap the first twice
+/// (exercising the pruned-epoch window), remove the second, re-add it —
+/// and the ledgers stay exact: every client-admitted request is
+/// answered exactly once, engine-side
+/// `completed + deadline_exceeded + backend_failed` equals client-side
+/// admissions, and unknown-model refusals (the not-yet-added and
+/// removed windows) reconcile with the engine counter. Zero requests
+/// lost.
+#[test]
+fn books_reconcile_across_add_swap_remove_under_load() {
+    let cfg = prop_cfg();
+    let (engine, join) = EngineBuilder::new()
+        .workers(2)
+        .policy(BatchPolicy { max_batch: 4, max_wait_us: 200 })
+        .queue_depth(64)
+        .register(spec_for_seed("zoo@a", &cfg, 41))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    let admitted = Arc::new(AtomicU64::new(0));
+    let completed = Arc::new(AtomicU64::new(0));
+    let failed_after_admit = Arc::new(AtomicU64::new(0));
+    let unknown = Arc::new(AtomicU64::new(0));
+    let other_rejects = Arc::new(AtomicU64::new(0));
+
+    let mut clients = Vec::new();
+    for c in 0..2usize {
+        let eng = engine.clone();
+        let shape = cfg.input_shape();
+        let (admitted, completed, failed, unknown, other) = (
+            Arc::clone(&admitted),
+            Arc::clone(&completed),
+            Arc::clone(&failed_after_admit),
+            Arc::clone(&unknown),
+            Arc::clone(&other_rejects),
+        );
+        clients.push(std::thread::spawn(move || {
+            for i in 0..60usize {
+                let id = (c * 1000 + i) as u64;
+                let model = if i % 2 == 0 { "zoo@a" } else { "zoo@b" };
+                let img =
+                    Tensor::new(shape.clone(), synthetic_image(5, id, shape.iter().product()))
+                        .unwrap();
+                match eng.submit(Request::new(model, id, img)) {
+                    Ok(waiter) => {
+                        admitted.fetch_add(1, Ordering::Relaxed);
+                        match waiter.wait() {
+                            Ok(resp) => {
+                                assert_eq!(resp.id, id);
+                                completed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // Admitted but not served (e.g. its epoch was
+                            // pruned by a double swap): typed, counted —
+                            // never lost, never a hang.
+                            Err(e) => {
+                                assert!(
+                                    e.reject_reason().is_none(),
+                                    "post-admission failure must not be a rejection: {e}"
+                                );
+                                failed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Err(e) if e.reject_reason() == Some(RejectReason::UnknownModel) => {
+                        unknown.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        other.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                if i % 16 == 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }));
+    }
+
+    // Reshape the zoo while the clients hammer it.
+    let nap = |ms: u64| std::thread::sleep(std::time::Duration::from_millis(ms));
+    nap(5);
+    engine.add_model(spec_for_seed("zoo@b", &cfg, 42)).unwrap();
+    nap(5);
+    engine.swap_model("zoo@a", spec_for_seed("zoo@a", &cfg, 43)).unwrap();
+    engine.swap_model("zoo@a", spec_for_seed("zoo@a", &cfg, 44)).unwrap();
+    nap(5);
+    engine.remove_model("zoo@b").unwrap();
+    nap(5);
+    engine.add_model(spec_for_seed("zoo@b", &cfg, 45)).unwrap();
+
+    for cl in clients {
+        cl.join().unwrap();
+    }
+    drop(engine);
+    let report = join.join().unwrap();
+
+    let admitted = admitted.load(Ordering::Relaxed);
+    let completed = completed.load(Ordering::Relaxed);
+    let failed = failed_after_admit.load(Ordering::Relaxed);
+    let unknown = unknown.load(Ordering::Relaxed);
+    let other = other_rejects.load(Ordering::Relaxed);
+    assert_eq!(
+        admitted + unknown + other,
+        120,
+        "every client request lands in exactly one outcome class"
+    );
+    assert_eq!(admitted, completed + failed, "no admitted request is lost or double-answered");
+
+    // Engine-side ledger matches the client-side one exactly.
+    let merged = report.merged();
+    assert_eq!(report.completed() as u64, completed, "completed reconciles");
+    assert_eq!(
+        merged.count() as u64 + merged.deadline_exceeded + merged.backend_failed,
+        admitted,
+        "engine books: admitted == completed + deadline_exceeded + backend_failed"
+    );
+    assert_eq!(merged.deadline_exceeded + merged.backend_failed, failed, "failures reconcile");
+    assert_eq!(report.rejected_unknown_model, unknown, "removed/not-yet-added window counted");
+
+    let a = report.model("zoo@a").expect("zoo@a reported");
+    assert_eq!(a.swaps, 2, "both hot swaps recorded");
+    assert_eq!(a.epoch, 2);
+    let b = report.model("zoo@b").expect("zoo@b reported");
+    assert!(!b.retired, "re-added after removal");
+    assert!(b.epoch >= 1, "re-add re-activated the entry via a swap-in");
+}
+
+/// The removed window and re-add semantics, deterministically: removal
+/// makes submissions fail typed `UnknownModel` (counted engine-side),
+/// admin ops on the removed name fail typed `AdminError::UnknownModel`,
+/// re-adding the name serves the *new* weights bit-exactly, and a
+/// duplicate live add is refused.
+#[test]
+fn removed_window_typed_and_readd_serves_new_weights() {
+    let cfg = prop_cfg();
+    let n_elems = cfg.input_len();
+    let (engine, join) = EngineBuilder::new()
+        .workers(1)
+        .policy(BatchPolicy { max_batch: 2, max_wait_us: 100 })
+        .queue_depth(16)
+        .register(spec_for_seed("zoo@x", &cfg, 51))
+        .unwrap()
+        .build()
+        .unwrap();
+    let img = |id: u64| Tensor::new(cfg.input_shape(), synthetic_image(3, id, n_elems)).unwrap();
+
+    let first = engine.infer(Request::new("zoo@x", 1, img(1))).unwrap();
+    assert_eq!(first.logits, NativeBackend::new(&cfg, 51).infer(&img(1)).unwrap());
+
+    engine.remove_model("zoo@x").unwrap();
+    let err = engine.infer(Request::new("zoo@x", 2, img(2))).unwrap_err();
+    assert_eq!(err.reject_reason(), Some(RejectReason::UnknownModel));
+    assert!(matches!(engine.remove_model("zoo@x"), Err(AdminError::UnknownModel(_))));
+    assert!(matches!(
+        engine.swap_model("zoo@x", spec_for_seed("zoo@x", &cfg, 52)),
+        Err(AdminError::UnknownModel(_))
+    ));
+    assert!(engine.models().is_empty(), "retired names leave the live list");
+
+    engine.add_model(spec_for_seed("zoo@x", &cfg, 52)).unwrap();
+    assert_eq!(engine.models(), vec!["zoo@x".to_string()]);
+    assert!(matches!(
+        engine.add_model(spec_for_seed("zoo@x", &cfg, 53)),
+        Err(AdminError::DuplicateModel(_))
+    ));
+    let second = engine.infer(Request::new("zoo@x", 3, img(3))).unwrap();
+    assert_eq!(
+        second.logits,
+        NativeBackend::new(&cfg, 52).infer(&img(3)).unwrap(),
+        "re-added name serves the new generation's weights"
+    );
+
+    drop(engine);
+    let report = join.join().unwrap();
+    assert_eq!(report.rejected_unknown_model, 1);
+    let m = report.model("zoo@x").expect("entry survives into the report");
+    assert!(!m.retired);
+    assert_eq!(m.metrics.count(), 2, "books accumulate across the generations");
+}
