@@ -92,7 +92,7 @@ use crate::runtime::{
     ModelSource, ModelSpec, Tensor, VerifyMode, WeightQuantSpec,
 };
 use crate::util::Json;
-use crate::vision::ForwardConfig;
+use crate::vision::{ActMode, ForwardConfig};
 
 use super::batcher::{BatchPolicy, DynamicBatcher};
 use super::metrics::Metrics;
@@ -530,6 +530,13 @@ pub struct ModelVariantConfig {
     /// (`{"quantize": {"samples": N, "seed": S}}`). `None` serves the
     /// source's weights as stored.
     pub quantize: Option<WeightQuantSpec>,
+    /// GEMM activation precision (`"activations": "f32" | "i8"`). The
+    /// `f32` default serves bitwise-identically to the dense f32 oracle
+    /// even over INT8-stored weights; `i8` quantizes activations per
+    /// GEMM row and runs the INT8×INT8 kernel on INT8-stored sites —
+    /// numeric drift budgeted by the committed eval gate
+    /// (`EVAL_baseline.json` ceilings, `mamba-x evalcheck`).
+    pub activations: ActMode,
     /// Per-model circuit-breaker trip threshold; `None` = the
     /// engine-wide `breaker_threshold`.
     pub breaker_threshold: Option<u32>,
@@ -554,6 +561,7 @@ impl ModelVariantConfig {
             slo_us: None,
             service_hint_us: 0,
             quantize: None,
+            activations: ActMode::F32,
             breaker_threshold: None,
             breaker_cooldown_ms: None,
             verify: VerifyMode::Eager,
@@ -569,6 +577,7 @@ impl ModelVariantConfig {
             slo_us: None,
             service_hint_us: 0,
             quantize: None,
+            activations: ActMode::F32,
             breaker_threshold: None,
             breaker_cooldown_ms: None,
             verify: VerifyMode::Eager,
@@ -614,8 +623,14 @@ impl ModelVariantConfig {
             )),
             None => None,
         };
-        crate::runtime::NativeBackend::factory_ex(source, calib, self.quantize, self.verify)
-            .with_context(|| format!("model {:?}", self.name))
+        crate::runtime::NativeBackend::factory_ex(
+            source,
+            calib,
+            self.quantize,
+            self.verify,
+            self.activations,
+        )
+        .with_context(|| format!("model {:?}", self.name))
     }
 
     /// Resolve into a registrable [`ModelSpec`] (factory + SLO +
@@ -650,6 +665,7 @@ impl ModelVariantConfig {
                 "slo_us",
                 "service_hint_us",
                 "quantize",
+                "activations",
                 "breaker_threshold",
                 "breaker_cooldown_ms",
                 "verify",
@@ -683,6 +699,7 @@ impl ModelVariantConfig {
             slo_us: None,
             service_hint_us: 0,
             quantize: None,
+            activations: ActMode::F32,
             breaker_threshold: None,
             breaker_cooldown_ms: None,
             verify: VerifyMode::Eager,
@@ -709,6 +726,15 @@ impl ModelVariantConfig {
             }
             v.quantize =
                 Some(WeightQuantSpec { samples, seed: q.get("seed")?.u64_exact()? });
+        }
+        if let Some(a) = j.opt("activations") {
+            let s = a.str()?;
+            v.activations = ActMode::parse(s).ok_or_else(|| {
+                anyhow!(
+                    "model {:?}: unknown activation mode {s:?} (expected \"f32\" or \"i8\")",
+                    v.name
+                )
+            })?;
         }
         if let Some(t) = j.opt("breaker_threshold") {
             v.breaker_threshold = Some(
@@ -750,6 +776,9 @@ impl ModelVariantConfig {
                     ("seed", Json::Num(q.seed as f64)),
                 ]),
             ));
+        }
+        if self.activations != ActMode::F32 {
+            pairs.push(("activations", Json::Str(self.activations.name().to_string())));
         }
         if let Some(t) = self.breaker_threshold {
             pairs.push(("breaker_threshold", Json::Num(t as f64)));
@@ -1104,8 +1133,11 @@ impl Breaker {
 /// until the next swap so jobs admitted before a swap can still build
 /// their epoch's weights on a worker that never had them cached. At most
 /// two weight generations are reachable per model at any time.
+/// Both slots are `None` once a retired entry has been reaped — the
+/// tombstone then holds books only, no weights (re-adding the name
+/// installs a fresh factory via `swap_in`).
 struct FactorySet {
-    current: (u64, BackendFactory),
+    current: Option<(u64, BackendFactory)>,
     prev: Option<(u64, BackendFactory)>,
 }
 
@@ -1118,6 +1150,16 @@ struct ModelEntry {
     /// Tombstone: a removed model stops admitting (UnknownModel) but its
     /// queue drains normally and its books survive into the report.
     retired: AtomicBool,
+    /// Jobs of this model admitted into a worker's drained batch and not
+    /// yet answered. Incremented under the state lock at batch pickup,
+    /// decremented on every answer path (group completion, rebuild
+    /// failure, panic guard) — `retired && queue empty && inflight == 0`
+    /// is the reap condition.
+    inflight: AtomicUsize,
+    /// Retired AND drained: the factories (the weights) have been
+    /// dropped; only the books remain. Reported by [`ModelHealth`], reset
+    /// when the name is re-added.
+    reaped: AtomicBool,
     /// Default latency target in microseconds (0 = none); atomic so a
     /// hot swap can update it.
     slo_us: AtomicU64,
@@ -1144,11 +1186,13 @@ impl ModelEntry {
             // An empty/unmatched fault plan wraps to the identity, so
             // the faults-free path pays nothing.
             factories: Mutex::new(FactorySet {
-                current: (0, fault.wrap(&spec.name, Arc::clone(&spec.factory))),
+                current: Some((0, fault.wrap(&spec.name, Arc::clone(&spec.factory)))),
                 prev: None,
             }),
             epoch: AtomicU64::new(0),
             retired: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            reaped: AtomicBool::new(false),
             slo_us: AtomicU64::new(spec.slo_us.unwrap_or(0)),
             stats: ModelStats {
                 rejected_full: AtomicU64::new(0),
@@ -1187,8 +1231,10 @@ impl ModelEntry {
     /// are gone; it fails typed, never silently on the wrong weights).
     fn factory_for(&self, epoch: u64) -> Option<BackendFactory> {
         let f = self.factories.lock().unwrap_or_else(|p| p.into_inner());
-        if f.current.0 == epoch {
-            return Some(Arc::clone(&f.current.1));
+        if let Some((e, fac)) = &f.current {
+            if *e == epoch {
+                return Some(Arc::clone(fac));
+            }
         }
         f.prev.as_ref().filter(|(e, _)| *e == epoch).map(|(_, fac)| Arc::clone(fac))
     }
@@ -1200,8 +1246,12 @@ impl ModelEntry {
         let factory = fault.wrap(&spec.name, Arc::clone(&spec.factory));
         {
             let mut f = self.factories.lock().unwrap_or_else(|p| p.into_inner());
-            let next = f.current.0 + 1;
-            f.prev = Some(std::mem::replace(&mut f.current, (next, factory)));
+            // The epoch mirror, not `current.0`, drives the sequence: a
+            // reaped entry has dropped its factories but its epochs must
+            // stay monotone so stale jobs can never alias new weights.
+            let next = self.epoch.load(Ordering::Acquire) + 1;
+            f.prev = f.current.take();
+            f.current = Some((next, factory));
             self.epoch.store(next, Ordering::Release);
         }
         self.swaps.fetch_add(1, Ordering::Relaxed);
@@ -1301,6 +1351,10 @@ struct EngineShared {
     /// Engine-wide breaker defaults `(threshold, cooldown_ms)` for specs
     /// installed at runtime without their own overrides.
     breaker_defaults: (u32, u64),
+    /// Bumped whenever a retired entry is reaped. Workers compare it to
+    /// a local copy at the loop top and purge cached backends of reaped
+    /// entries — the last weight `Arc`s a reap must release.
+    reap_gen: AtomicU64,
 }
 
 impl EngineShared {
@@ -1322,6 +1376,40 @@ impl EngineShared {
             })
             .fold(0u64, u64::saturating_add);
         total / self.workers.max(1) as u64
+    }
+
+    /// Reap every retired entry whose work has fully drained: drop its
+    /// factories (the weight `Arc`s) and bump `reap_gen` so workers purge
+    /// their cached backends of it. Called with the state lock held —
+    /// the retired flag cannot un-set and no new job can be admitted or
+    /// picked up while we look, so `queue empty && inflight == 0` is a
+    /// stable drain certificate, not a race window. Lock order
+    /// state→factories matches `swap_in`'s callers. Books (stats,
+    /// metrics, breaker history) are untouched: the tombstone still
+    /// reports, it just no longer holds weights.
+    fn maybe_reap(&self, st: &mut EngineState) {
+        let mut reaped_any = false;
+        for (entry, queue) in st.models.iter().zip(&st.queues) {
+            if entry.live()
+                || entry.reaped.load(Ordering::Acquire)
+                || !queue.is_empty()
+                || entry.inflight.load(Ordering::Acquire) != 0
+            {
+                continue;
+            }
+            let mut f = entry.factories.lock().unwrap_or_else(|p| p.into_inner());
+            f.current = None;
+            f.prev = None;
+            drop(f);
+            entry.reaped.store(true, Ordering::Release);
+            reaped_any = true;
+        }
+        if reaped_any {
+            self.reap_gen.fetch_add(1, Ordering::Release);
+            // Wake idle workers so they drop their cached backends now,
+            // not on the next organic batch.
+            self.work_cv.notify_all();
+        }
     }
 }
 
@@ -1500,6 +1588,9 @@ impl Engine {
                 self.shared.now_us(),
             );
             entry.retired.store(false, Ordering::Release);
+            // A reaped tombstone comes back to life: swap_in above
+            // installed fresh weights at the next epoch.
+            entry.reaped.store(false, Ordering::Release);
             drop(st);
             self.shared.work_cv.notify_all();
             return Ok(());
@@ -1520,9 +1611,11 @@ impl Engine {
     /// admitted request is always answered — while new submissions to
     /// the name are refused [`RejectReason::UnknownModel`] (counted in
     /// `rejected_unknown_model`). The entry's metrics survive into the
-    /// final report, marked retired.
+    /// final report, marked retired. Once the queue and in-flight work
+    /// drain, the tombstone's factories (the weights) are *reaped* —
+    /// under add/remove churn the books stay but the memory does not.
     pub fn remove_model(&self, name: &str) -> std::result::Result<(), AdminError> {
-        let st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
+        let mut st = self.shared.state.lock().unwrap_or_else(|p| p.into_inner());
         if st.closed {
             return Err(AdminError::ShuttingDown);
         }
@@ -1530,6 +1623,10 @@ impl Engine {
             return Err(AdminError::UnknownModel(name.to_string()));
         };
         entry.retired.store(true, Ordering::Release);
+        // An idle model (empty queue, nothing in flight) reaps right
+        // here; a busy one reaps at a worker's loop-bottom once its last
+        // job answers.
+        self.shared.maybe_reap(&mut st);
         Ok(())
     }
 
@@ -1571,6 +1668,7 @@ impl Engine {
                     swaps: m.swaps.load(Ordering::Relaxed),
                     last_swap_us: m.last_swap_us.load(Ordering::Relaxed),
                     retired: !m.live(),
+                    reaped: m.reaped.load(Ordering::Relaxed),
                 })
                 .collect(),
         }
@@ -1626,6 +1724,10 @@ pub struct ModelHealth {
     pub last_swap_us: u64,
     /// Removed from admission; queued work drained, books retained.
     pub retired: bool,
+    /// Retired AND fully drained: the tombstone's weights have been
+    /// released; only its books remain (false again if the name is
+    /// re-added).
+    pub reaped: bool,
 }
 
 /// Live degradation snapshot from [`Engine::health`] — what `/healthz`
@@ -1826,6 +1928,7 @@ impl EngineBuilder {
             restarts: AtomicU64::new(0),
             fault,
             breaker_defaults: defaults,
+            reap_gen: AtomicU64::new(0),
         });
         // Workers are detached: their lifecycle (exit accounting, metric
         // folds, respawns) runs through the shared state and the
@@ -2204,6 +2307,10 @@ impl Drop for BatchGuard<'_> {
         if self.jobs.is_empty() {
             return;
         }
+        // Failed jobs leave the in-flight window here; the normal path
+        // takes the jobs back first (empty guard, decrement of zero) and
+        // settles its own count after replies are delivered.
+        self.entry.inflight.fetch_sub(self.jobs.len(), Ordering::AcqRel);
         let message = std::mem::take(&mut self.message);
         self.entry
             .breaker
@@ -2233,9 +2340,23 @@ fn worker_loop(
     let mut group_sizes: Vec<usize> = Vec::new();
     // Round-robin scan start so one busy model cannot starve the rest.
     let mut rr = 0usize;
+    // Last observed reap generation; a bump means some retired entry's
+    // factories were dropped and any cached backend for it must go too.
+    let mut reap_seen = 0u64;
     let mut st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
     loop {
         let now = shared.now_us();
+        let reap_now = shared.reap_gen.load(Ordering::Acquire);
+        if reap_now != reap_seen {
+            reap_seen = reap_now;
+            for (i, entry) in st.models.iter().enumerate() {
+                if entry.reaped.load(Ordering::Acquire) {
+                    if let Some(slot) = backends.get_mut(i) {
+                        *slot = None;
+                    }
+                }
+            }
+        }
         // Re-read every iteration: add_model grows the registry live.
         let n_models = st.queues.len();
         if st.closed && st.queues.iter().all(|q| q.is_empty()) {
@@ -2313,6 +2434,10 @@ fn worker_loop(
             // The whole batch had expired; pick again.
             continue;
         }
+        // Count the dequeued jobs in flight while still under the state
+        // lock, so `maybe_reap` can never observe an empty queue between
+        // dequeue and this increment.
+        entry.inflight.fetch_add(batch.len(), Ordering::AcqRel);
         drop(st);
         if backends.len() <= m {
             backends.resize_with(m + 1, || None);
@@ -2461,6 +2586,7 @@ fn worker_loop(
                     let _ = job.reply.send(Err(EngineError::Backend(msg.clone())));
                 }
             }
+            entry.inflight.fetch_sub(group_n, Ordering::AcqRel);
             group_sizes.push(group_n);
         }
         st = shared.state.lock().unwrap_or_else(|p| p.into_inner());
@@ -2470,6 +2596,10 @@ fn worker_loop(
         for (latency_us, at_us) in completed.drain(..) {
             st.metrics[m].record_request(latency_us, at_us);
         }
+        // This worker may have just drained the last in-flight job of a
+        // retired variant; reap its factories now rather than waiting for
+        // the next admin call.
+        shared.maybe_reap(&mut st);
     }
     // Exit bookkeeping (workers_alive, respawn reservation, failing
     // leftovers) lives in the caller's WorkerExit guard so it also runs

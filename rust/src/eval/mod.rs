@@ -1,0 +1,196 @@
+//! Accuracy evaluation subsystem: deterministic eval sets, the f32
+//! reference oracle, and the accuracy/size frontier sweep.
+//!
+//! The bench/perfcheck pattern measured *speed*; this subsystem is its
+//! accuracy twin. An [`EvalSet`] is a seeded synthetic image stream
+//! (the same generator the calibration and chaos harnesses use), so the
+//! "golden labels" are hermetic: the label of item `i` is whatever the
+//! f32 reference forward — dense weights, dynamic per-item scan, no
+//! calibration — says it is. Every served variant (quantized weights,
+//! INT8 activations, static calibration, lazy artifacts) is then scored
+//! *against that oracle*: top-1/top-5 agreement, per-class logit MSE,
+//! and max relative logit error ([`report::ModelEval`]).
+//!
+//! `mamba-x eval` drives the variants through the real serving engine
+//! (admission, batching, epoch machinery — not a direct forward call)
+//! and emits `EVAL_hotpath.json`; `mamba-x evalcheck` compares it
+//! against committed `EVAL_baseline.json` floors in CI exactly like
+//! `perfcheck` ([`report::check_eval`]). The INT8-activation serving
+//! path (`"activations": "i8"`) landed gated on this subsystem: its
+//! drift budget is a committed ceiling here, not a hope.
+
+pub mod report;
+
+pub use report::{
+    argmax, check_eval, top_k, BoundKind, EvalCheck, EvalGate, EvalReport, FrontierPoint,
+    FrontierSweep, ModelEval, EVAL_BASELINE_FORMAT, EVAL_BASELINE_VERSION, EVAL_FORMAT,
+    EVAL_VERSION,
+};
+
+use anyhow::{bail, Result};
+
+use crate::config::MambaXConfig;
+use crate::quant::{WeightQuantOpts, WeightQuantPlan};
+use crate::sim::sfu::SfuTables;
+use crate::vision::VimWeights;
+
+/// A deterministic seeded evaluation set: `samples` flattened images of
+/// `input_len` elements each. Item `i` is
+/// [`crate::runtime::native::synthetic_image`]`(seed, i, input_len)` —
+/// the same stream the quantization search calibrates on (under its own
+/// seed), so identical `(seed, samples, input_len)` always reproduces
+/// the set bit-for-bit, on any host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalSet {
+    pub seed: u64,
+    pub input_len: usize,
+    pub items: Vec<Vec<f32>>,
+}
+
+impl EvalSet {
+    pub fn synthetic(seed: u64, samples: usize, input_len: usize) -> Result<EvalSet> {
+        if samples == 0 {
+            bail!("eval set needs at least one sample");
+        }
+        if input_len == 0 {
+            bail!("eval set needs a nonzero input length");
+        }
+        let items = (0..samples as u64)
+            .map(|id| crate::runtime::native::synthetic_image(seed, id, input_len))
+            .collect();
+        Ok(EvalSet { seed, input_len, items })
+    }
+
+    /// Borrowed view of the items, the shape the forward pass takes.
+    pub fn refs(&self) -> Vec<&[f32]> {
+        self.items.iter().map(|v| v.as_slice()).collect()
+    }
+}
+
+/// The f32 reference oracle: densify the weights (INT8 storage is
+/// decoded back to f32 — for dense weights this is an exact copy) and
+/// run the dynamic-scan batched forward. This is the accuracy
+/// ground-truth every variant is scored against; for a dense f32
+/// variant served without calibration it is bitwise-identical to what
+/// the engine serves, which is why the committed f32 floors sit at
+/// exactly 1.0.
+pub fn oracle_logits(weights: &VimWeights, set: &EvalSet) -> Result<Vec<Vec<f32>>> {
+    let want = weights.cfg.input_len();
+    if set.input_len != want {
+        bail!(
+            "eval set has {}-element images but model {} expects {want}",
+            set.input_len,
+            weights.cfg.model.name
+        );
+    }
+    let dense = weights.dequantized();
+    Ok(dense.forward_batch(&SfuTables::fitted(), &MambaXConfig::default(), &set.refs()))
+}
+
+/// Sweep the weight-quantization accuracy/size frontier: for each clip
+/// percentile in `opts.percentiles`, quantize *every* eligible tensor
+/// at that percentile (no per-site search — the point is to chart the
+/// uniform-candidate curve the search picks from) and score the result
+/// against the f32 oracle. Input weights must be dense f32 (pass the
+/// variant's dequantized source).
+pub fn weight_quant_frontier(
+    weights: &VimWeights,
+    set: &EvalSet,
+    opts: &WeightQuantOpts,
+) -> Result<Vec<FrontierPoint>> {
+    let dense = weights.dequantized();
+    let oracle = oracle_logits(&dense, set)?;
+    let names = dense.weight_quant_candidates();
+    let tables = SfuTables::fitted();
+    let scan_cfg = MambaXConfig::default();
+    let mut points = Vec::with_capacity(opts.percentiles.len());
+    for &p in &opts.percentiles {
+        let plan = WeightQuantPlan::all_at_percentile(&names, p);
+        let mut q = dense.clone();
+        q.apply_weight_quant(&plan)?;
+        let got = q.forward_batch(&tables, &scan_cfg, &set.refs());
+        let m = ModelEval::compute(&format!("frontier@{p}"), "f32", &oracle, &got)?;
+        let (f32_eq, stored) = q.weight_bytes();
+        points.push(FrontierPoint {
+            percentile: p,
+            weight_bytes_f32: f32_eq as u64,
+            weight_bytes_stored: stored as u64,
+            top1_agreement: m.top1_agreement,
+            max_rel_err: m.max_rel_err,
+        });
+    }
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::VimModel;
+    use crate::vision::ForwardConfig;
+
+    fn tiny_weights(seed: u64) -> VimWeights {
+        let cfg = ForwardConfig {
+            model: VimModel {
+                name: "eval-tiny",
+                d_model: 16,
+                n_blocks: 2,
+                d_state: 4,
+                expand: 2,
+                conv_k: 4,
+                patch: 4,
+            },
+            img: 8,
+            in_ch: 1,
+            n_classes: 6,
+        };
+        VimWeights::init(&cfg, seed)
+    }
+
+    #[test]
+    fn eval_sets_are_deterministic_and_validated() {
+        let a = EvalSet::synthetic(7, 4, 64).unwrap();
+        let b = EvalSet::synthetic(7, 4, 64).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.items.len(), 4);
+        assert!(a.items.iter().all(|i| i.len() == 64));
+        let c = EvalSet::synthetic(8, 4, 64).unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+        assert!(EvalSet::synthetic(7, 0, 64).is_err());
+        assert!(EvalSet::synthetic(7, 4, 0).is_err());
+    }
+
+    #[test]
+    fn oracle_agrees_with_itself_exactly() {
+        let w = tiny_weights(11);
+        let set = EvalSet::synthetic(3, 3, w.cfg.input_len()).unwrap();
+        let a = oracle_logits(&w, &set).unwrap();
+        let b = oracle_logits(&w, &set).unwrap();
+        assert_eq!(a, b);
+        let m = ModelEval::compute("self", "f32", &a, &b).unwrap();
+        assert_eq!(m.top1_agreement, 1.0);
+        assert_eq!(m.max_rel_err, 0.0);
+        // Shape mismatch is a typed error, not a panic.
+        let bad = EvalSet::synthetic(3, 2, 7).unwrap();
+        assert!(oracle_logits(&w, &bad).is_err());
+    }
+
+    #[test]
+    fn frontier_sweeps_every_candidate_and_shrinks_storage() {
+        let w = tiny_weights(5);
+        let set = EvalSet::synthetic(9, 3, w.cfg.input_len()).unwrap();
+        let opts = WeightQuantOpts::default();
+        let points = weight_quant_frontier(&w, &set, &opts).unwrap();
+        assert_eq!(points.len(), opts.percentiles.len());
+        for (pt, &p) in points.iter().zip(&opts.percentiles) {
+            assert_eq!(pt.percentile, p);
+            assert!(
+                pt.weight_bytes_stored < pt.weight_bytes_f32,
+                "uniform INT8 at p={p} must shrink storage"
+            );
+            assert!(pt.max_rel_err.is_finite());
+            assert!((0.0..=1.0).contains(&pt.top1_agreement));
+        }
+        let again = weight_quant_frontier(&w, &set, &opts).unwrap();
+        assert_eq!(points, again, "frontier sweep is deterministic");
+    }
+}

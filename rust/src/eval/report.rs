@@ -1,0 +1,624 @@
+//! Accuracy reports and the `evalcheck` gate.
+//!
+//! [`EvalReport`] is the machine-readable output of `mamba-x eval`
+//! (`EVAL_hotpath.json`): per served model variant, agreement and drift
+//! metrics against the f32 reference oracle, plus the optional
+//! weight-quantization accuracy/size frontier. Everything in the file is
+//! a deterministic function of (engine config, eval seed, sample count)
+//! — no wall-clock fields — so two runs with identical inputs produce
+//! *byte-identical* JSON (the CI determinism gate `cmp`s the files).
+//!
+//! [`check_eval`] is the accuracy twin of the perf gate
+//! ([`crate::util::bench::check_speedups`]): a committed
+//! `EVAL_baseline.json` carries **floors** for agreement metrics
+//! (current must reach `floor - tolerance`) and **ceilings** for drift
+//! metrics (current must stay under `ceiling + tolerance`). The
+//! tolerance is *absolute* — agreements live in [0, 1], so a relative
+//! margin would be meaningless at 1.0. A metric the baseline names but
+//! the current report lacks is a FAILURE: silently dropping a gated
+//! model variant must not pass CI. Foreign and future baseline files
+//! are refused typed, mirroring [`crate::quant::CalibTable`].
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Format tag of `EVAL_hotpath.json` (the eval report).
+pub const EVAL_FORMAT: &str = "mamba-x-eval";
+
+/// Current eval report version; readers reject anything else.
+pub const EVAL_VERSION: u32 = 1;
+
+/// Format tag of `EVAL_baseline.json` (the committed gate floors).
+pub const EVAL_BASELINE_FORMAT: &str = "mamba-x-eval-baseline";
+
+/// Current baseline version; `check_eval` refuses future versions.
+pub const EVAL_BASELINE_VERSION: u32 = 1;
+
+/// First index of the row maximum (ties break to the lowest class
+/// index, deterministically).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if v.total_cmp(&row[best]).is_gt() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the `k` largest values, ordered by (value desc, index
+/// asc) — a total order, so identical logits always rank identically.
+pub fn top_k(row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+/// Accuracy metrics of one served model variant against the f32 oracle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelEval {
+    /// Registry name the engine served this variant under.
+    pub name: String,
+    /// Activation mode the variant ran with (`"f32"` or `"i8"`).
+    pub activations: String,
+    /// Eval items measured.
+    pub samples: usize,
+    /// Fraction of items whose argmax matches the oracle's.
+    pub top1_agreement: f64,
+    /// Fraction of items whose top-5 (or top-`n_classes` for tiny heads)
+    /// contains the oracle's top-1 class.
+    pub top5_agreement: f64,
+    /// Per-class mean squared logit error over items.
+    pub logit_mse: Vec<f64>,
+    /// Mean of `logit_mse` across classes.
+    pub mean_logit_mse: f64,
+    /// Max over items of `||got - oracle||_2 / ||oracle||_2` (the same
+    /// shape as the weight-quant search's relative logit error).
+    pub max_rel_err: f64,
+    /// f32-equivalent weight bytes of the served backend.
+    pub weight_bytes_f32: u64,
+    /// Actually stored weight bytes (smaller once INT8 storage is in
+    /// play; equal for dense f32 variants).
+    pub weight_bytes_stored: u64,
+}
+
+impl ModelEval {
+    /// Compute the metrics for one variant: `got[i]` is the engine's
+    /// logits row for eval item `i`, `oracle[i]` the f32 reference's.
+    /// Fails on shape mismatches and on a zero-norm oracle row that the
+    /// candidate did not reproduce exactly (the relative error would be
+    /// unbounded — synthetic and real heads never emit all-zero logits).
+    pub fn compute(
+        name: &str,
+        activations: &str,
+        oracle: &[Vec<f32>],
+        got: &[Vec<f32>],
+    ) -> Result<ModelEval> {
+        if oracle.is_empty() {
+            bail!("eval of model {name:?} has no items");
+        }
+        if oracle.len() != got.len() {
+            bail!(
+                "eval of model {name:?}: {} oracle rows vs {} served rows",
+                oracle.len(),
+                got.len()
+            );
+        }
+        let n_classes = oracle[0].len();
+        let k = n_classes.min(5);
+        let mut top1 = 0usize;
+        let mut top5 = 0usize;
+        let mut sq_err = vec![0f64; n_classes];
+        let mut max_rel_err = 0f64;
+        for (item, (o, g)) in oracle.iter().zip(got).enumerate() {
+            if o.len() != n_classes || g.len() != n_classes {
+                bail!(
+                    "eval of model {name:?} item {item}: logits width {} vs {} \
+                     (oracle has {n_classes} classes)",
+                    o.len(),
+                    g.len()
+                );
+            }
+            let want = argmax(o);
+            if argmax(g) == want {
+                top1 += 1;
+            }
+            if top_k(g, k).contains(&want) {
+                top5 += 1;
+            }
+            let mut num = 0f64;
+            let mut den = 0f64;
+            for (c, (ov, gv)) in o.iter().zip(g).enumerate() {
+                let d = *gv as f64 - *ov as f64;
+                sq_err[c] += d * d;
+                num += d * d;
+                den += *ov as f64 * *ov as f64;
+            }
+            let rel = if den == 0.0 {
+                if num == 0.0 {
+                    0.0
+                } else {
+                    bail!(
+                        "eval of model {name:?} item {item}: oracle logits have zero \
+                         norm but the served logits differ (relative error unbounded)"
+                    );
+                }
+            } else {
+                (num / den).sqrt()
+            };
+            if rel > max_rel_err {
+                max_rel_err = rel;
+            }
+        }
+        let n = oracle.len();
+        let logit_mse: Vec<f64> = sq_err.into_iter().map(|s| s / n as f64).collect();
+        let mean_logit_mse = logit_mse.iter().sum::<f64>() / n_classes as f64;
+        Ok(ModelEval {
+            name: name.to_string(),
+            activations: activations.to_string(),
+            samples: n,
+            top1_agreement: top1 as f64 / n as f64,
+            top5_agreement: top5 as f64 / n as f64,
+            logit_mse,
+            mean_logit_mse,
+            max_rel_err,
+            weight_bytes_f32: 0,
+            weight_bytes_stored: 0,
+        })
+    }
+
+    /// The gate-facing `"model:metric"` pairs of this variant.
+    pub fn metric_pairs(&self) -> Vec<(String, f64)> {
+        vec![
+            (format!("{}:top1_agreement", self.name), self.top1_agreement),
+            (format!("{}:top5_agreement", self.name), self.top5_agreement),
+            (format!("{}:mean_logit_mse", self.name), self.mean_logit_mse),
+            (format!("{}:max_rel_err", self.name), self.max_rel_err),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("activations", Json::Str(self.activations.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("top1_agreement", Json::Num(self.top1_agreement)),
+            ("top5_agreement", Json::Num(self.top5_agreement)),
+            ("logit_mse", Json::Arr(self.logit_mse.iter().map(|&v| Json::Num(v)).collect())),
+            ("mean_logit_mse", Json::Num(self.mean_logit_mse)),
+            ("max_rel_err", Json::Num(self.max_rel_err)),
+            ("weight_bytes_f32", Json::Num(self.weight_bytes_f32 as f64)),
+            ("weight_bytes_stored", Json::Num(self.weight_bytes_stored as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelEval> {
+        let logit_mse = j
+            .get("logit_mse")?
+            .arr()?
+            .iter()
+            .map(|v| v.num())
+            .collect::<Result<Vec<f64>>>()?;
+        Ok(ModelEval {
+            name: j.get("name")?.str()?.to_string(),
+            activations: j.get("activations")?.str()?.to_string(),
+            samples: j.get("samples")?.usize()?,
+            top1_agreement: j.get("top1_agreement")?.num()?,
+            top5_agreement: j.get("top5_agreement")?.num()?,
+            logit_mse,
+            mean_logit_mse: j.get("mean_logit_mse")?.num()?,
+            max_rel_err: j.get("max_rel_err")?.num()?,
+            weight_bytes_f32: j.get("weight_bytes_f32")?.u64_exact()?,
+            weight_bytes_stored: j.get("weight_bytes_stored")?.u64_exact()?,
+        })
+    }
+}
+
+/// One point of a weight-quantization accuracy/size frontier: every
+/// eligible tensor quantized at one clip percentile, measured against
+/// the same f32 oracle as the serving metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierPoint {
+    pub percentile: f32,
+    pub weight_bytes_f32: u64,
+    pub weight_bytes_stored: u64,
+    pub top1_agreement: f64,
+    pub max_rel_err: f64,
+}
+
+impl FrontierPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj_from(vec![
+            ("percentile", Json::Num(self.percentile as f64)),
+            ("weight_bytes_f32", Json::Num(self.weight_bytes_f32 as f64)),
+            ("weight_bytes_stored", Json::Num(self.weight_bytes_stored as f64)),
+            ("top1_agreement", Json::Num(self.top1_agreement)),
+            ("max_rel_err", Json::Num(self.max_rel_err)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FrontierPoint> {
+        Ok(FrontierPoint {
+            percentile: j.get("percentile")?.num()? as f32,
+            weight_bytes_f32: j.get("weight_bytes_f32")?.u64_exact()?,
+            weight_bytes_stored: j.get("weight_bytes_stored")?.u64_exact()?,
+            top1_agreement: j.get("top1_agreement")?.num()?,
+            max_rel_err: j.get("max_rel_err")?.num()?,
+        })
+    }
+}
+
+/// The frontier sweep of one quantize-spec variant (one point per
+/// candidate percentile, in candidate order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierSweep {
+    pub model: String,
+    pub points: Vec<FrontierPoint>,
+}
+
+/// The full `mamba-x eval` artifact (`EVAL_hotpath.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalReport {
+    /// Seed of the deterministic eval image stream.
+    pub seed: u64,
+    /// Items per model variant.
+    pub samples: usize,
+    /// Engine config the models were served through (path or label).
+    pub config: String,
+    pub models: Vec<ModelEval>,
+    /// Accuracy/size frontiers of quantize-spec variants (empty when no
+    /// variant carries a `quantize` spec).
+    pub frontier: Vec<FrontierSweep>,
+}
+
+impl EvalReport {
+    /// Flattened `"model:metric"` map the gate consumes.
+    pub fn metric_pairs(&self) -> Vec<(String, f64)> {
+        self.models.iter().flat_map(|m| m.metric_pairs()).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let frontier = self
+            .frontier
+            .iter()
+            .map(|f| {
+                Json::obj_from(vec![
+                    ("model", Json::Str(f.model.clone())),
+                    ("points", Json::Arr(f.points.iter().map(FrontierPoint::to_json).collect())),
+                ])
+            })
+            .collect();
+        Json::obj_from(vec![
+            ("format", Json::Str(EVAL_FORMAT.to_string())),
+            ("version", Json::Num(EVAL_VERSION as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("config", Json::Str(self.config.clone())),
+            ("models", Json::Arr(self.models.iter().map(ModelEval::to_json).collect())),
+            ("frontier", Json::Arr(frontier)),
+        ])
+    }
+
+    /// Parse a report, refusing foreign formats and non-current versions
+    /// typed (same policy as every other versioned artifact here).
+    pub fn from_json(j: &Json) -> Result<EvalReport> {
+        let format = j.get("format")?.str()?;
+        if format != EVAL_FORMAT {
+            bail!("not an eval report (format {format:?}, expected {EVAL_FORMAT:?})");
+        }
+        let version = j.get("version")?.num()? as u32;
+        if version != EVAL_VERSION {
+            bail!(
+                "unsupported eval report version {version} (this build reads \
+                 v{EVAL_VERSION}; re-run `mamba-x eval`)"
+            );
+        }
+        let models = j
+            .get("models")?
+            .arr()?
+            .iter()
+            .map(ModelEval::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut frontier = Vec::new();
+        for f in j.get("frontier")?.arr()? {
+            frontier.push(FrontierSweep {
+                model: f.get("model")?.str()?.to_string(),
+                points: f
+                    .get("points")?
+                    .arr()?
+                    .iter()
+                    .map(FrontierPoint::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+        Ok(EvalReport {
+            seed: j.get("seed")?.u64_exact()?,
+            samples: j.get("samples")?.usize()?,
+            config: j.get("config")?.str()?.to_string(),
+            models,
+            frontier,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        crate::util::write_creating_dirs(path, self.to_json().dump().as_bytes())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<EvalReport> {
+        let path = path.as_ref();
+        Self::from_json(&Json::load(path)?)
+            .with_context(|| format!("loading eval report {}", path.display()))
+    }
+}
+
+/// Whether a gate bound is a floor (agreement must reach it) or a
+/// ceiling (drift must stay under it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoundKind {
+    Floor,
+    Ceiling,
+}
+
+/// One gate comparison: the committed bound vs the current value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalCheck {
+    /// `"model:metric"` key.
+    pub name: String,
+    pub kind: BoundKind,
+    /// The committed floor or ceiling.
+    pub bound: f64,
+    /// The current report's value; `None` when the metric is missing
+    /// (always a failure).
+    pub current: Option<f64>,
+    pub pass: bool,
+}
+
+/// Outcome of [`check_eval`]: per-metric verdicts under one absolute
+/// tolerance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalGate {
+    pub tolerance: f64,
+    pub checks: Vec<EvalCheck>,
+}
+
+impl EvalGate {
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.pass)
+    }
+
+    pub fn failed(&self) -> Vec<&EvalCheck> {
+        self.checks.iter().filter(|c| !c.pass).collect()
+    }
+}
+
+/// Compare a current eval report against a committed baseline.
+///
+/// The baseline shape is
+/// `{"format", "version", "tolerance", "floors": {"model:metric": f},
+///   "ceilings": {"model:metric": c}}` — floors fail when
+/// `current < floor - tolerance`, ceilings when
+/// `current > ceiling + tolerance`, and a missing metric always fails.
+/// `tolerance_override` (the `--tolerance` flag) replaces the baseline's
+/// committed tolerance. Foreign/future files on either side are refused
+/// typed, never partially evaluated.
+pub fn check_eval(
+    current: &Json,
+    baseline: &Json,
+    tolerance_override: Option<f64>,
+) -> Result<EvalGate> {
+    let report = EvalReport::from_json(current).context("current eval report")?;
+    let format = baseline.get("format").context("eval baseline")?.str()?;
+    if format != EVAL_BASELINE_FORMAT {
+        bail!("not an eval baseline (format {format:?}, expected {EVAL_BASELINE_FORMAT:?})");
+    }
+    let version = baseline.get("version")?.num()? as u32;
+    if version > EVAL_BASELINE_VERSION {
+        bail!(
+            "eval baseline version {version} is newer than this build understands \
+             (v{EVAL_BASELINE_VERSION}); update the binary or recommit the baseline"
+        );
+    }
+    let tolerance = match tolerance_override {
+        Some(t) => t,
+        None => match baseline.opt("tolerance") {
+            Some(t) => t.num()?,
+            None => 0.0,
+        },
+    };
+    if !(tolerance.is_finite() && tolerance >= 0.0) {
+        bail!("eval tolerance must be finite and >= 0, got {tolerance}");
+    }
+    let current_map: std::collections::BTreeMap<String, f64> =
+        report.metric_pairs().into_iter().collect();
+    let mut checks = Vec::new();
+    for (kind, key) in [(BoundKind::Floor, "floors"), (BoundKind::Ceiling, "ceilings")] {
+        let Some(bounds) = baseline.opt(key) else { continue };
+        for (name, bound) in bounds.obj()? {
+            let bound = bound.num().with_context(|| format!("baseline {key} entry {name:?}"))?;
+            let current_v = current_map.get(name).copied();
+            let pass = match kind {
+                BoundKind::Floor => current_v.is_some_and(|c| c >= bound - tolerance),
+                BoundKind::Ceiling => current_v.is_some_and(|c| c <= bound + tolerance),
+            };
+            checks.push(EvalCheck { name: name.clone(), kind, bound, current: current_v, pass });
+        }
+    }
+    if checks.is_empty() {
+        bail!("eval baseline contains no floors or ceilings — nothing would be gated");
+    }
+    Ok(EvalGate { tolerance, checks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report_with(models: Vec<ModelEval>) -> EvalReport {
+        EvalReport {
+            seed: 7,
+            samples: models.first().map_or(0, |m| m.samples),
+            config: "test".to_string(),
+            models,
+            frontier: Vec::new(),
+        }
+    }
+
+    fn eval_of(name: &str, top1: f64, rel: f64) -> ModelEval {
+        ModelEval {
+            name: name.to_string(),
+            activations: "f32".to_string(),
+            samples: 4,
+            top1_agreement: top1,
+            top5_agreement: 1.0,
+            logit_mse: vec![0.0, 0.0],
+            mean_logit_mse: 0.0,
+            max_rel_err: rel,
+            weight_bytes_f32: 100,
+            weight_bytes_stored: 100,
+        }
+    }
+
+    fn baseline(tol: f64, floors: Vec<(&str, f64)>, ceilings: Vec<(&str, f64)>) -> Json {
+        let fl = floors.into_iter().map(|(n, v)| (n, Json::Num(v))).collect();
+        let ce = ceilings.into_iter().map(|(n, v)| (n, Json::Num(v))).collect();
+        Json::obj_from(vec![
+            ("format", Json::Str(EVAL_BASELINE_FORMAT.to_string())),
+            ("version", Json::Num(EVAL_BASELINE_VERSION as f64)),
+            ("tolerance", Json::Num(tol)),
+            ("floors", Json::obj_from(fl)),
+            ("ceilings", Json::obj_from(ce)),
+        ])
+    }
+
+    #[test]
+    fn argmax_and_top_k_are_deterministic_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1, "first max wins");
+        assert_eq!(top_k(&[1.0, 3.0, 3.0, 2.0], 3), vec![1, 2, 3]);
+        assert_eq!(top_k(&[0.5], 5), vec![0], "k larger than the row");
+    }
+
+    #[test]
+    fn identical_logits_score_perfect_agreement() {
+        let rows = vec![vec![0.1f32, 0.9, -0.4], vec![2.0, -1.0, 0.5]];
+        let m = ModelEval::compute("m", "f32", &rows, &rows).unwrap();
+        assert_eq!(m.top1_agreement, 1.0);
+        assert_eq!(m.top5_agreement, 1.0);
+        assert_eq!(m.max_rel_err, 0.0);
+        assert_eq!(m.logit_mse, vec![0.0; 3]);
+        assert_eq!(m.mean_logit_mse, 0.0);
+    }
+
+    #[test]
+    fn disagreement_and_drift_are_measured() {
+        let oracle = vec![vec![1.0f32, 0.0], vec![0.0, 1.0]];
+        // Item 0 flips the argmax; item 1 agrees but drifts.
+        let got = vec![vec![0.0f32, 1.0], vec![0.0, 0.5]];
+        let m = ModelEval::compute("m", "i8", &oracle, &got).unwrap();
+        assert_eq!(m.top1_agreement, 0.5);
+        // Two classes: top-2 always contains the oracle class.
+        assert_eq!(m.top5_agreement, 1.0);
+        assert!(m.max_rel_err > 0.0);
+        // Item 0 contributes 1.0 to both classes, item 1 contributes 0.25
+        // to class 1: mse = [0.5, 0.625].
+        assert_eq!(m.logit_mse, vec![0.5, 0.625]);
+        let e = ModelEval::compute("m", "f32", &oracle, &got[..1].to_vec()).unwrap_err();
+        assert!(e.to_string().contains("oracle rows"), "{e}");
+    }
+
+    #[test]
+    fn report_json_roundtrip_is_exact_and_refuses_foreign_or_future() {
+        let mut m = eval_of("a@f32", 1.0, 0.0);
+        m.logit_mse = vec![0.125, 0.25];
+        let report = EvalReport {
+            seed: 9,
+            samples: 4,
+            config: "engine.json".to_string(),
+            models: vec![m],
+            frontier: vec![FrontierSweep {
+                model: "a@f32".to_string(),
+                points: vec![FrontierPoint {
+                    percentile: 0.999,
+                    weight_bytes_f32: 400,
+                    weight_bytes_stored: 120,
+                    top1_agreement: 0.75,
+                    max_rel_err: 0.125,
+                }],
+            }],
+        };
+        let dump = report.to_json().dump();
+        let back = EvalReport::from_json(&Json::parse(&dump).unwrap()).unwrap();
+        assert_eq!(back, report);
+        // Determinism: dump -> parse -> dump is byte-stable.
+        assert_eq!(back.to_json().dump(), dump);
+
+        let future = dump.replace("\"version\":1", "\"version\":99");
+        let e = EvalReport::from_json(&Json::parse(&future).unwrap()).unwrap_err();
+        assert!(e.to_string().contains("version 99"), "{e}");
+        let foreign = dump.replace(EVAL_FORMAT, "mamba-x-bench");
+        assert!(EvalReport::from_json(&Json::parse(&foreign).unwrap()).is_err());
+    }
+
+    #[test]
+    fn gate_floor_and_ceiling_semantics() {
+        let report = report_with(vec![eval_of("m@f32", 0.95, 0.08)]);
+        let current = report.to_json();
+        // Floor met within tolerance, ceiling met exactly.
+        let gate = check_eval(
+            &current,
+            &baseline(0.05, vec![("m@f32:top1_agreement", 1.0)], vec![("m@f32:max_rel_err", 0.08)]),
+            None,
+        )
+        .unwrap();
+        assert!(gate.passed(), "{:?}", gate.failed());
+        // Floor missed beyond tolerance.
+        let gate = check_eval(
+            &current,
+            &baseline(0.01, vec![("m@f32:top1_agreement", 1.0)], vec![]),
+            None,
+        )
+        .unwrap();
+        assert!(!gate.passed());
+        // Ceiling exceeded beyond tolerance; override rescues it.
+        let b = baseline(0.001, vec![], vec![("m@f32:max_rel_err", 0.05)]);
+        assert!(!check_eval(&current, &b, None).unwrap().passed());
+        assert!(check_eval(&current, &b, Some(0.5)).unwrap().passed());
+    }
+
+    #[test]
+    fn gate_missing_metric_fails_and_bad_baselines_are_refused() {
+        let report = report_with(vec![eval_of("m@f32", 1.0, 0.0)]);
+        let current = report.to_json();
+        let gate = check_eval(
+            &current,
+            &baseline(0.1, vec![("gone@i8:top1_agreement", 0.5)], vec![]),
+            None,
+        )
+        .unwrap();
+        assert!(!gate.passed(), "missing metric must fail");
+        assert_eq!(gate.failed()[0].current, None);
+
+        let mut foreign = baseline(0.1, vec![("m@f32:top1_agreement", 1.0)], vec![]);
+        if let Json::Obj(o) = &mut foreign {
+            o.insert("format".to_string(), Json::Str("mamba-x-bench".to_string()));
+        }
+        assert!(check_eval(&current, &foreign, None).is_err());
+
+        let mut future = baseline(0.1, vec![("m@f32:top1_agreement", 1.0)], vec![]);
+        if let Json::Obj(o) = &mut future {
+            o.insert("version".to_string(), Json::Num(99.0));
+        }
+        let e = check_eval(&current, &future, None).unwrap_err();
+        assert!(e.to_string().contains("newer"), "{e}");
+
+        let empty = Json::obj_from(vec![
+            ("format", Json::Str(EVAL_BASELINE_FORMAT.to_string())),
+            ("version", Json::Num(1.0)),
+        ]);
+        assert!(check_eval(&current, &empty, None).is_err(), "empty baseline gates nothing");
+
+        let bad_tol = baseline(-0.5, vec![("m@f32:top1_agreement", 1.0)], vec![]);
+        assert!(check_eval(&current, &bad_tol, None).is_err());
+    }
+}

@@ -18,6 +18,13 @@
 //!   (paper §4.4, Fig 16), replaying golden vectors from the python side;
 //! * [`energy`] — energy and area models with technology scaling
 //!   (paper §5, Table 4);
+//! * [`eval`] — the accuracy evaluation subsystem: deterministic seeded
+//!   eval sets scored against the f32 reference oracle (top-1/top-5
+//!   agreement, per-class logit MSE, max relative logit error), the
+//!   machine-readable [`eval::EvalReport`] (`EVAL_hotpath.json`), the
+//!   weight-quantization accuracy/size frontier, and the `evalcheck`
+//!   CI gate ([`eval::check_eval`]) over committed `EVAL_baseline.json`
+//!   floors — the accuracy twin of the bench/perfcheck pattern;
 //! * [`runtime`] — pluggable inference backends behind
 //!   [`runtime::InferenceBackend`]: the pure-rust
 //!   [`runtime::NativeBackend`] executing the quantized Vim forward pass
@@ -53,6 +60,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod energy;
+pub mod eval;
 pub mod gpu;
 pub mod net;
 pub mod quant;

@@ -137,6 +137,7 @@ COMMANDS:
            [--deadline-us N] [--model name] [--out BENCH_serving.json]
            [--shutdown true|false] [--timeout-ms 30000]
            [--retries 0] [--retry-base-ms 10] [--admin-token T]
+           [--chaos-close-rate 0.0]
                                   seeded load harness against a live
                                   `serve --listen` endpoint: closed-loop
                                   (one in-flight request per client) or
@@ -156,12 +157,44 @@ COMMANDS:
                                   timeouts, transport errors) with
                                   decorrelated-jitter backoff honoring
                                   Retry-After; retries are ledgered
-                                  separately so goodput stays exact
+                                  separately so goodput stays exact.
+                                  `--chaos-close-rate p` tears down a
+                                  seeded fraction of requests mid-frame
+                                  (half the bytes, then drop the
+                                  connection) to exercise the server's
+                                  truncated-frame path; torn requests
+                                  are ledgered as chaos_closed, never
+                                  retried
   perfcheck [--current BENCH_hotpath.json] [--baseline BENCH_baseline.json]
             [--tolerance 0.5]     CI perf-regression gate: compare the
                                   bench record's speedup pairs against
                                   the committed baseline; exits nonzero
                                   on regression beyond the tolerance band
+  eval     --engine engine.json [--samples 32] [--seed 7]
+           [--out EVAL_hotpath.json]
+                                  accuracy evaluation: score every model
+                                  variant of an engine config against the
+                                  f32 reference oracle on a deterministic
+                                  seeded eval set, driving requests
+                                  through the REAL serving engine
+                                  (admission, batching, workers). Per
+                                  variant: top-1/top-5 agreement,
+                                  per-class logit MSE, max relative logit
+                                  error, stored-vs-f32 weight bytes; for
+                                  quantize-spec variants also the
+                                  accuracy/size frontier (each candidate
+                                  clip percentile). Byte-identical output
+                                  for identical inputs (no wall-clock
+                                  fields)
+  evalcheck [--current EVAL_hotpath.json] [--baseline EVAL_baseline.json]
+            [--tolerance 0.05]    CI accuracy gate, the eval twin of
+                                  perfcheck: committed floors (agreement
+                                  must reach floor - tolerance) and
+                                  ceilings (drift must stay under
+                                  ceiling + tolerance; absolute
+                                  tolerance). A metric the baseline names
+                                  but the report lacks FAILS; exits
+                                  nonzero on any violated bound
 
 Unknown flags for a subcommand are rejected, not silently ignored.
 ";
@@ -333,6 +366,7 @@ fn main() -> Result<()> {
                     "retries",
                     "retry-base-ms",
                     "admin-token",
+                    "chaos-close-rate",
                 ],
             )?;
             cmd_loadgen(&flags)
@@ -340,6 +374,14 @@ fn main() -> Result<()> {
         "perfcheck" => {
             flags.expect_keys("perfcheck", &["current", "baseline", "tolerance"])?;
             cmd_perfcheck(&flags)
+        }
+        "eval" => {
+            flags.expect_keys("eval", &["engine", "samples", "seed", "out"])?;
+            cmd_eval(&flags)
+        }
+        "evalcheck" => {
+            flags.expect_keys("evalcheck", &["current", "baseline", "tolerance"])?;
+            cmd_evalcheck(&flags)
         }
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
     }
@@ -487,6 +529,13 @@ fn cmd_export(flags: &Flags) -> Result<()> {
         "serve it:       engine config {{\"models\": [{{\"name\": \"vim-{arch}@v1\", \
          \"source\": {{\"artifact\": \"{out}\"}}}}]}}"
     );
+    if quantize {
+        println!(
+            "activations:    add \"activations\": \"i8\" to the variant to run INT8 \
+             activations over the INT8-stored weights (f32 is the bitwise default; \
+             drift gated by `mamba-x eval` + `mamba-x evalcheck`)"
+        );
+    }
     Ok(())
 }
 
@@ -521,12 +570,14 @@ fn cmd_inspect(flags: &Flags) -> Result<()> {
             ]),
             None => Json::Null,
         };
+        let int8_tensors = m.tensors.iter().filter(|t| t.dtype.name() == "i8").count();
         let j = Json::obj_from(vec![
             ("file", Json::Str(path.to_string())),
             ("file_bytes", Json::Num(summary.file_bytes as f64)),
             ("params", Json::Num(summary.params as f64)),
             ("weight_bytes_f32", Json::Num(f32_eq as f64)),
             ("weight_bytes_stored", Json::Num(summary.weight_bytes as f64)),
+            ("int8_tensors", Json::Num(int8_tensors as f64)),
             ("calib", calib),
             ("verified", Json::Bool(true)),
             ("manifest", m.to_json()),
@@ -553,6 +604,16 @@ fn cmd_inspect(flags: &Flags) -> Result<()> {
             t.percentile
         ),
         None => println!("  calib: none (dynamic scan scales)"),
+    }
+    let int8_tensors = m.tensors.iter().filter(|t| t.dtype.name() == "i8").count();
+    if int8_tensors > 0 {
+        println!(
+            "  activations: f32 (default, bitwise) or i8 — {int8_tensors} INT8-stored \
+             tensor(s) can run the INT8xINT8 GEMM hot path via \
+             `\"activations\": \"i8\"` (drift gated by `mamba-x evalcheck`)"
+        );
+    } else {
+        println!("  activations: f32 (no INT8-stored tensors; \"i8\" would change nothing)");
     }
     println!("  {} tensors:", m.tensors.len());
     println!("    {:<24} {:<14} {:>5} {:>10} {:>7}", "name", "shape", "dtype", "bytes", "ratio");
@@ -614,6 +675,182 @@ fn cmd_perfcheck(flags: &Flags) -> Result<()> {
         );
     }
     println!("perf gate passed ({} records)", gate.checks.len());
+    Ok(())
+}
+
+/// `mamba-x eval`: score every variant of an engine config against the
+/// f32 reference oracle and write the `EVAL_hotpath.json` artifact.
+///
+/// The oracle for each variant is its *source* weights — no quantize
+/// spec, no INT8 activations, INT8-stored artifacts decoded back to f32
+/// — run through the dense dynamic-scan forward. The variant itself is
+/// then served through the REAL engine (admission, batching, worker
+/// pool, epoch machinery), so the measured drift covers everything a
+/// production request would see. The whole report is a deterministic
+/// function of (config, seed, samples): identical inputs produce
+/// byte-identical files, which CI pins with `cmp`.
+fn cmd_eval(flags: &Flags) -> Result<()> {
+    use mamba_x::coordinator::{EngineBuilder, EngineConfig, Request};
+    use mamba_x::eval::{
+        oracle_logits, weight_quant_frontier, EvalReport, EvalSet, FrontierSweep, ModelEval,
+    };
+    use mamba_x::quant::WeightQuantOpts;
+    use mamba_x::runtime::{InferenceBackend as _, Tensor};
+
+    let Some(engine_path) = flags.get("engine") else {
+        bail!("eval needs --engine engine.json (the config whose variants to score)");
+    };
+    let samples = flags.usize("samples", 32)?.max(1);
+    let seed = flags.usize("seed", 7)? as u64;
+    let out = flags.string("out", "EVAL_hotpath.json");
+
+    let cfg = EngineConfig::load(engine_path)?;
+    if cfg.fault_plan.is_some() {
+        bail!("eval refuses a config with a fault plan: accuracy under injected faults is noise");
+    }
+    println!(
+        "eval: {} variant(s) from {engine_path}, {samples} samples, seed {seed}",
+        cfg.models.len()
+    );
+
+    // Resolve every variant's dense source once: oracle logits + the
+    // eval set matched to its geometry.
+    let mut sets = Vec::with_capacity(cfg.models.len());
+    let mut oracles = Vec::with_capacity(cfg.models.len());
+    let mut sources = Vec::with_capacity(cfg.models.len());
+    for v in &cfg.models {
+        let resolved = v.source.to_source()?.resolve()?;
+        let set = EvalSet::synthetic(seed, samples, resolved.weights.cfg.input_len())?;
+        let oracle = oracle_logits(&resolved.weights, &set)?;
+        sets.push(set);
+        oracles.push(oracle);
+        sources.push(resolved.weights);
+    }
+
+    // One engine hosting every variant, exactly as `serve --engine`
+    // builds it; factories are shared with the weight-bytes probe below
+    // so quantization searches run once.
+    let mut builder = EngineBuilder::new()
+        .workers(cfg.workers)
+        .policy(cfg.policy)
+        .queue_depth(cfg.queue_depth)
+        .client_quota(cfg.client_quota);
+    let mut factories = Vec::with_capacity(cfg.models.len());
+    for v in &cfg.models {
+        let spec = v.to_spec()?;
+        factories.push(std::sync::Arc::clone(&spec.factory));
+        builder = builder.register(spec)?;
+    }
+    let (engine, join) = builder.build()?;
+    let mut models = Vec::with_capacity(cfg.models.len());
+    for (i, v) in cfg.models.iter().enumerate() {
+        let fcfg = v.forward_config()?;
+        let mut got = Vec::with_capacity(sets[i].items.len());
+        for (k, item) in sets[i].items.iter().enumerate() {
+            let image = Tensor::new(fcfg.input_shape(), item.clone())?;
+            let resp = engine
+                .infer(Request::new(v.name.clone(), k as u64, image))
+                .map_err(|e| anyhow::anyhow!("eval item {k} for {:?}: {e}", v.name))?;
+            got.push(resp.logits);
+        }
+        let mut m = ModelEval::compute(&v.name, v.activations.name(), &oracles[i], &got)?;
+        if let Some((f32_eq, stored)) = (factories[i])(0)?.weight_bytes() {
+            m.weight_bytes_f32 = f32_eq as u64;
+            m.weight_bytes_stored = stored as u64;
+        }
+        println!(
+            "  {:<24} act {:<3} top1 {:.4} top5 {:.4} mean_mse {:.3e} max_rel_err {:.3e}",
+            m.name,
+            m.activations,
+            m.top1_agreement,
+            m.top5_agreement,
+            m.mean_logit_mse,
+            m.max_rel_err
+        );
+        models.push(m);
+    }
+    drop(engine);
+    join.join()?;
+
+    // Accuracy/size frontier for quantize-spec variants: chart every
+    // candidate clip percentile the per-site search picks from.
+    let mut frontier = Vec::new();
+    for ((v, set), weights) in cfg.models.iter().zip(&sets).zip(&sources) {
+        if v.quantize.is_none() {
+            continue;
+        }
+        let points = weight_quant_frontier(weights, set, &WeightQuantOpts::default())?;
+        for pt in &points {
+            println!(
+                "  frontier {:<16} p={:<6} stored {}/{} B top1 {:.4} max_rel_err {:.3e}",
+                v.name,
+                pt.percentile,
+                pt.weight_bytes_stored,
+                pt.weight_bytes_f32,
+                pt.top1_agreement,
+                pt.max_rel_err
+            );
+        }
+        frontier.push(FrontierSweep { model: v.name.clone(), points });
+    }
+
+    let report = EvalReport {
+        seed,
+        samples,
+        config: engine_path.to_string(),
+        models,
+        frontier,
+    };
+    report.save(&out)?;
+    let abs = std::fs::canonicalize(&out).unwrap_or_else(|_| out.clone().into());
+    println!("wrote eval report to {}", abs.display());
+    println!("gate it: mamba-x evalcheck --current {out} --baseline EVAL_baseline.json");
+    Ok(())
+}
+
+/// CI accuracy gate over the committed `EVAL_baseline.json` bounds.
+fn cmd_evalcheck(flags: &Flags) -> Result<()> {
+    use mamba_x::eval::{check_eval, BoundKind};
+    use mamba_x::util::Json;
+
+    let current_path = flags.string("current", "EVAL_hotpath.json");
+    let baseline_path = flags.string("baseline", "EVAL_baseline.json");
+    let tolerance = match flags.get("tolerance") {
+        Some(v) => Some(v.parse::<f64>()?),
+        None => None,
+    };
+    let current = Json::load(&current_path)?;
+    let baseline = Json::load(&baseline_path)?;
+    let gate = check_eval(&current, &baseline, tolerance)?;
+    println!(
+        "eval gate: {current_path} vs {baseline_path} (absolute tolerance {})",
+        gate.tolerance
+    );
+    for c in &gate.checks {
+        let verdict = if c.pass { "ok  " } else { "FAIL" };
+        let kind = match c.kind {
+            BoundKind::Floor => "floor",
+            BoundKind::Ceiling => "ceiling",
+        };
+        match c.current {
+            Some(v) => println!(
+                "  {verdict} {:<40} current {v:>9.4}  {kind} {:>9.4}",
+                c.name, c.bound
+            ),
+            None => println!(
+                "  {verdict} {:<40} missing from {current_path} ({kind} {:>9.4})",
+                c.name, c.bound
+            ),
+        }
+    }
+    if !gate.passed() {
+        bail!(
+            "accuracy regression: {}/{} eval bounds violated",
+            gate.failed().len(),
+            gate.checks.len()
+        );
+    }
+    println!("eval gate passed ({} bounds)", gate.checks.len());
     Ok(())
 }
 
@@ -938,8 +1175,8 @@ fn cmd_models(flags: &Flags) -> Result<()> {
                 cfg.workers, cfg.policy.max_batch, cfg.policy.max_wait_us, cfg.queue_depth
             );
             println!(
-                "{:<24} {:<32} {:>10} {:>8} {:>21} {:>8}  calib",
-                "name", "source", "slo_us", "hint_us", "weight B stored/f32", "cold_ms"
+                "{:<24} {:<32} {:>4} {:>10} {:>8} {:>21} {:>8}  calib",
+                "name", "source", "act", "slo_us", "hint_us", "weight B stored/f32", "cold_ms"
             );
             for v in &cfg.models {
                 // Resolve the factory (any config error — bad artifact
@@ -957,9 +1194,10 @@ fn cmd_models(flags: &Flags) -> Result<()> {
                     None => "-".to_string(),
                 };
                 println!(
-                    "{:<24} {:<32} {:>10} {:>8} {:>21} {:>8.2}  {}",
+                    "{:<24} {:<32} {:>4} {:>10} {:>8} {:>21} {:>8.2}  {}",
                     v.name,
                     v.source.describe(),
+                    v.activations.name(),
                     v.slo_us.map(|s| s.to_string()).unwrap_or_else(|| "-".to_string()),
                     v.service_hint_us,
                     weights,
@@ -1335,6 +1573,7 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     cfg.retries = u32::try_from(flags.usize("retries", 0)?)?;
     cfg.retry_base_ms = (flags.usize("retry-base-ms", 10)? as u64).max(1);
     cfg.admin_token = admin_token_from(flags);
+    cfg.chaos_close_rate = flags.f64("chaos-close-rate", 0.0)?;
     let out = flags.string("out", "BENCH_serving.json");
 
     let artifact = loadgen::run(&cfg)?;
@@ -1357,7 +1596,7 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
     println!(
         "refusals: full {} shed {} quota {} unknown_model {} bad_request {} \
          shutting_down {} backend_error {} deadline_exceeded {} breaker_open {} \
-         timeouts {} transport {} (retries {} reconnects {})",
+         timeouts {} transport {} chaos_closed {} (retries {} reconnects {})",
         n("rejected_full"),
         n("rejected_shed"),
         n("rejected_quota"),
@@ -1369,6 +1608,7 @@ fn cmd_loadgen(flags: &Flags) -> Result<()> {
         n("breaker_open"),
         n("timeouts"),
         n("transport_errors"),
+        n("chaos_closed"),
         n("retries"),
         n("reconnects"),
     );

@@ -20,6 +20,7 @@
 //! every run.
 
 use anyhow::{anyhow, bail, Context, Result};
+use std::io::Write;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -41,6 +42,12 @@ const STREAM_SPLIT: u64 = 0x9E37_79B9_7F4A_7C15;
 /// Extra split for the per-client retry-backoff stream, so backoff draws
 /// never perturb the workload stream.
 const RETRY_SPLIT: u64 = 0xC2B2_AE3D_27D4_EB4F;
+
+/// Extra split for the per-client connection-chaos stream
+/// (`--chaos-close-rate`): teardown decisions draw from their own rng,
+/// so enabling chaos never perturbs the workload stream (ids,
+/// priorities, payload seeds stay bit-identical).
+const CHAOS_SPLIT: u64 = 0x94D0_49BB_1331_11EB;
 
 /// Open-loop inter-arrival distribution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -110,6 +117,13 @@ pub struct LoadgenConfig {
     /// Bearer token for `/admin/*` calls (`--shutdown true` against a
     /// token-gated server). Never echoed into the artifact.
     pub admin_token: Option<String>,
+    /// Probability in `[0, 1]` that a logical request is *torn down*
+    /// instead of sent: the client writes half the request (headers plus
+    /// a truncated body) and drops the connection mid-frame, exercising
+    /// the server's truncated-frame path. Seeded from its own stream
+    /// ([`CHAOS_SPLIT`]); torn-down requests count as `chaos_closed`
+    /// (never retried) and the reconnect is counted in `reconnects`.
+    pub chaos_close_rate: f64,
 }
 
 impl LoadgenConfig {
@@ -128,6 +142,7 @@ impl LoadgenConfig {
             retries: 0,
             retry_base_ms: 10,
             admin_token: None,
+            chaos_close_rate: 0.0,
         }
     }
 
@@ -166,6 +181,7 @@ impl LoadgenConfig {
             ("timeout_ms", Json::Num(self.timeout_ms as f64)),
             ("retries", Json::Num(self.retries as f64)),
             ("retry_base_ms", Json::Num(self.retry_base_ms as f64)),
+            ("chaos_close_rate", Json::Num(self.chaos_close_rate)),
         ])
     }
 }
@@ -190,10 +206,10 @@ pub fn parse_priority_mix(s: &str) -> Result<Vec<(Priority, u32)>> {
 /// Per-class outcome tally (one overall + one per priority tier).
 ///
 /// Ledger identity: every *attempt* (original send or retry) lands in
-/// exactly one outcome class, so
-/// `completed + rejected_* + unknown_model + bad_request +
+/// exactly one outcome class — a chaos-torn request is its own class —
+/// so `completed + rejected_* + unknown_model + bad_request +
 /// shutting_down + backend_error + deadline_exceeded + breaker_open +
-/// timeouts + transport_errors == sent + retries`.
+/// timeouts + transport_errors + chaos_closed == sent + retries`.
 #[derive(Debug, Default, Clone)]
 struct Tally {
     sent: u64,
@@ -214,6 +230,11 @@ struct Tally {
     /// transport failures.
     timeouts: u64,
     transport_errors: u64,
+    /// Requests the chaos knob (`--chaos-close-rate`) tore down
+    /// mid-frame instead of completing the send. Deliberate client-side
+    /// aborts: never retried, never an engine outcome, but still one
+    /// attempt in the ledger so the books reconcile exactly.
+    chaos_closed: u64,
     /// Connections re-established after the initial one (server sent
     /// `Connection: close`, or the client abandoned a desynced stream
     /// after a transport failure). Connection-level, not part of the
@@ -240,6 +261,7 @@ impl Tally {
         self.breaker_open += other.breaker_open;
         self.timeouts += other.timeouts;
         self.transport_errors += other.transport_errors;
+        self.chaos_closed += other.chaos_closed;
         self.reconnects += other.reconnects;
         self.latencies_us.extend_from_slice(&other.latencies_us);
     }
@@ -302,6 +324,7 @@ impl Tally {
             ("breaker_open", Json::Num(self.breaker_open as f64)),
             ("timeouts", Json::Num(self.timeouts as f64)),
             ("transport_errors", Json::Num(self.transport_errors as f64)),
+            ("chaos_closed", Json::Num(self.chaos_closed as f64)),
             ("reconnects", Json::Num(self.reconnects as f64)),
             ("shed_rate", Json::Num(shed_rate)),
             ("latency_us", self.latency_json()),
@@ -443,6 +466,8 @@ fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> C
     let mut rng = Pcg::new(cfg.seed ^ (ci as u64).wrapping_mul(STREAM_SPLIT));
     let mut backoff_rng =
         Pcg::new(cfg.seed ^ (ci as u64).wrapping_mul(STREAM_SPLIT) ^ RETRY_SPLIT);
+    let mut chaos_rng =
+        Pcg::new(cfg.seed ^ (ci as u64).wrapping_mul(STREAM_SPLIT) ^ CHAOS_SPLIT);
     let schedule = match cfg.mode {
         ArrivalMode::Closed => Vec::new(),
         ArrivalMode::Open { rate_rps, dist } => {
@@ -470,6 +495,32 @@ fn client_loop(cfg: &LoadgenConfig, ci: usize, n: usize, models: &[String]) -> C
         let body = infer_body(model, id, priority, cfg.deadline_us, ci, cfg.seed);
         stats.overall.sent += 1;
         stats.per_priority[pidx(priority)].sent += 1;
+        // Connection chaos: tear this request down mid-frame instead of
+        // sending it — half the request goes out (request line,
+        // content-length, truncated body) and the socket drops, so the
+        // server walks its truncated-frame path on a kept-alive
+        // connection. One draw per logical request from the dedicated
+        // stream; torn requests are never retried.
+        if chaos_rng.f64() < cfg.chaos_close_rate {
+            let head = format!(
+                "POST /v1/infer HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+                body.len()
+            );
+            let mut partial = head.into_bytes();
+            partial.extend_from_slice(&body[..body.len() / 2]);
+            let stream = conn.stream_mut();
+            let _ = stream.write_all(&partial);
+            let _ = stream.flush();
+            drop(conn);
+            stats.overall.chaos_closed += 1;
+            stats.per_priority[pidx(priority)].chaos_closed += 1;
+            stats.overall.reconnects += 1;
+            match connect(&cfg.addr, timeout) {
+                Ok(c) => conn = c,
+                Err(_) => break 'requests,
+            }
+            continue 'requests;
+        }
         // Every attempt (original + retries) is classified at wire
         // truth, so per-status counters still reconcile exactly with
         // the front-end's; `retries` records the extra attempts.
@@ -620,6 +671,9 @@ pub fn admin_model_op(addr: &str, token: Option<&str>, verb: &str, body: &Json) 
 pub fn run(cfg: &LoadgenConfig) -> Result<Json> {
     if cfg.requests == 0 || cfg.clients == 0 {
         bail!("loadgen needs requests >= 1 and clients >= 1");
+    }
+    if !cfg.chaos_close_rate.is_finite() || !(0.0..=1.0).contains(&cfg.chaos_close_rate) {
+        bail!("chaos close rate {} outside [0, 1]", cfg.chaos_close_rate);
     }
     let models = match &cfg.model {
         Some(m) => {
@@ -811,10 +865,45 @@ mod tests {
         assert_eq!(j.get("timeouts").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("retries").unwrap().usize().unwrap(), 0);
         assert_eq!(j.get("reconnects").unwrap().usize().unwrap(), 0);
-        let other = Tally { reconnects: 2, ..Tally::default() };
+        assert_eq!(j.get("chaos_closed").unwrap().usize().unwrap(), 0);
+        let other = Tally { reconnects: 2, chaos_closed: 3, ..Tally::default() };
         t.merge(&other);
         assert_eq!(t.reconnects, 2, "reconnects merge across clients");
+        assert_eq!(t.chaos_closed, 3, "chaos teardowns merge across clients");
         assert_eq!(j.get("latency_us").unwrap().get("p50").unwrap().usize().unwrap(), 120);
+    }
+
+    #[test]
+    fn chaos_stream_is_seeded_decorrelated_and_validated() {
+        let draws = |seed: u64, ci: u64| {
+            let mut rng = Pcg::new(seed ^ ci.wrapping_mul(STREAM_SPLIT) ^ CHAOS_SPLIT);
+            (0..512).map(|_| rng.f64()).collect::<Vec<_>>()
+        };
+        assert_eq!(draws(9, 0), draws(9, 0), "same seed, same teardown decisions");
+        assert_ne!(draws(9, 0), draws(9, 1), "client streams decorrelated");
+        assert_ne!(
+            draws(9, 0),
+            {
+                let mut rng = Pcg::new(9 ^ 0u64.wrapping_mul(STREAM_SPLIT) ^ RETRY_SPLIT);
+                (0..512).map(|_| rng.f64()).collect::<Vec<_>>()
+            },
+            "chaos draws come from their own stream, not the backoff stream"
+        );
+        // At rate 0.25, roughly a quarter of 512 draws fire.
+        let fired = draws(9, 0).iter().filter(|&&u| u < 0.25).count();
+        assert!((64..=192).contains(&fired), "rate 0.25 fired {fired}/512");
+        // The knob is validated before any network activity.
+        let mut cfg = LoadgenConfig::new("127.0.0.1:0");
+        cfg.chaos_close_rate = 1.5;
+        assert!(run(&cfg).is_err(), "rate > 1 refused");
+        cfg.chaos_close_rate = f64::NAN;
+        assert!(run(&cfg).is_err(), "NaN rate refused");
+        cfg.chaos_close_rate = 1.0;
+        assert_eq!(
+            cfg.to_json().get("chaos_close_rate").unwrap().num().unwrap(),
+            1.0,
+            "rate echoed into the artifact config"
+        );
     }
 
     #[test]

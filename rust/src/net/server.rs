@@ -486,6 +486,7 @@ fn route(ctx: &Ctx, conn: &mut HttpConn<TcpStream>, req: RawRequest) -> bool {
                         ("swaps", Json::Num(h.swaps as f64)),
                         ("last_swap_us", Json::Num(h.last_swap_us as f64)),
                         ("retired", Json::Bool(h.retired)),
+                        ("reaped", Json::Bool(h.reaped)),
                     ])
                 })
                 .collect();

@@ -317,7 +317,12 @@ impl Default for WeightQuantOpts {
         WeightQuantOpts {
             samples: 12,
             seed: 0x5EED,
-            percentiles: vec![1.0, 0.999],
+            // Candidate clip percentiles, widest first: plain absmax,
+            // then two clipping tiers. The eval harness charts the
+            // accuracy/size frontier of each candidate
+            // (`eval::weight_quant_frontier`), so adding a tier here
+            // automatically adds a frontier point to EVAL_hotpath.json.
+            percentiles: vec![1.0, 0.999, 0.99],
             site_budget: 0.05,
             total_budget: 0.10,
         }
@@ -364,8 +369,16 @@ impl WeightQuantPlan {
     /// A plan quantizing every listed site at plain absmax (percentile
     /// 1.0) — the "force INT8 everywhere eligible" shortcut.
     pub fn all_at_absmax(names: &[String]) -> Self {
+        Self::all_at_percentile(names, 1.0)
+    }
+
+    /// A plan quantizing every listed site at one uniform clip
+    /// percentile — the frontier sweep's per-candidate plan
+    /// ([`crate::eval::weight_quant_frontier`] charts one point per
+    /// candidate in [`WeightQuantOpts::percentiles`]).
+    pub fn all_at_percentile(names: &[String], p: f32) -> Self {
         WeightQuantPlan {
-            sites: names.iter().map(|n| (n.clone(), 1.0)).collect(),
+            sites: names.iter().map(|n| (n.clone(), p)).collect(),
             rejected: Vec::new(),
         }
     }
@@ -602,5 +615,14 @@ mod tests {
         let plan = WeightQuantPlan::all_at_absmax(&names(&["p", "q"]));
         assert_eq!(plan.sites, vec![("p".to_string(), 1.0), ("q".to_string(), 1.0)]);
         assert!(plan.rejected.is_empty());
+    }
+
+    #[test]
+    fn all_at_percentile_is_uniform_and_defaults_carry_three_tiers() {
+        let plan = WeightQuantPlan::all_at_percentile(&names(&["p", "q"]), 0.99);
+        assert_eq!(plan.sites, vec![("p".to_string(), 0.99), ("q".to_string(), 0.99)]);
+        assert!(plan.rejected.is_empty());
+        // The frontier sweep charts one point per default candidate.
+        assert_eq!(WeightQuantOpts::default().percentiles, vec![1.0, 0.999, 0.99]);
     }
 }

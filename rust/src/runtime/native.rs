@@ -21,7 +21,7 @@ use anyhow::{bail, Context as _, Result};
 use crate::config::MambaXConfig;
 use crate::quant::{CalibTable, WeightQuantOpts};
 use crate::sim::sfu::SfuTables;
-use crate::vision::{ForwardConfig, ScanExec, VimWeights};
+use crate::vision::{ActMode, ForwardConfig, ScanExec, VimWeights};
 
 use super::{ArtifactStore, BackendFactory, InferenceBackend, ModelSource, Tensor, VerifyMode};
 
@@ -53,6 +53,10 @@ pub struct NativeBackend {
     scan_cfg: MambaXConfig,
     /// Static scan calibration; `None` = dynamic per-invocation scales.
     calib: Option<Arc<CalibTable>>,
+    /// GEMM activation precision; the `ActMode::F32` default keeps the
+    /// bitwise f32-oracle contract, `ActMode::I8` is the eval-gated
+    /// INT8-activation serving path.
+    act: ActMode,
 }
 
 impl NativeBackend {
@@ -64,6 +68,7 @@ impl NativeBackend {
             tables: SfuTables::fitted(),
             scan_cfg: MambaXConfig::default(),
             calib: None,
+            act: ActMode::F32,
         }
     }
 
@@ -112,7 +117,7 @@ impl NativeBackend {
         calib_override: Option<Arc<CalibTable>>,
         quantize: Option<WeightQuantSpec>,
     ) -> Result<BackendFactory> {
-        Self::factory_ex(source, calib_override, quantize, VerifyMode::Eager)
+        Self::factory_ex(source, calib_override, quantize, VerifyMode::Eager, ActMode::F32)
     }
 
     /// [`NativeBackend::factory`] with an explicit artifact verify mode.
@@ -128,11 +133,16 @@ impl NativeBackend {
     /// corrupted between open and first touch fails worker construction
     /// typed — which the engine's supervision and breaker machinery
     /// surface — never silently.
+    ///
+    /// `act` is the GEMM activation precision every built worker serves
+    /// with ([`Self::with_activations`]); `ActMode::F32` reproduces the
+    /// classic bitwise path exactly.
     pub fn factory_ex(
         source: ModelSource,
         calib_override: Option<Arc<CalibTable>>,
         quantize: Option<WeightQuantSpec>,
         verify: VerifyMode,
+        act: ActMode,
     ) -> Result<BackendFactory> {
         if let (ModelSource::Artifact(path), VerifyMode::Lazy) = (&source, verify) {
             let handle = ArtifactStore::open_lazy(path)?;
@@ -177,7 +187,7 @@ impl NativeBackend {
                         Err(e) => bail!("lazy materialization of {origin} failed: {e}"),
                     }
                 };
-                let backend = NativeBackend::from_weights(weights);
+                let backend = NativeBackend::from_weights(weights).with_activations(act);
                 let backend = match &calib {
                     Some(table) => backend.with_calib(Arc::clone(table))?,
                     None => backend,
@@ -204,7 +214,8 @@ impl NativeBackend {
             None => resolved.weights,
         };
         Ok(Arc::new(move |_worker| {
-            let backend = NativeBackend::from_weights(Arc::clone(&weights));
+            let backend =
+                NativeBackend::from_weights(Arc::clone(&weights)).with_activations(act);
             let backend = match &calib {
                 Some(table) => backend.with_calib(Arc::clone(table))?,
                 None => backend,
@@ -277,6 +288,21 @@ impl NativeBackend {
         self.calib.as_deref()
     }
 
+    /// Set the GEMM activation precision. `ActMode::F32` (the default)
+    /// serves bitwise-identically to the dense f32 oracle even over
+    /// INT8-stored weights; `ActMode::I8` quantizes activations per GEMM
+    /// row and runs the INT8×INT8 kernel on INT8-stored sites — numeric
+    /// drift the eval gate budgets (config key `"activations": "i8"`).
+    pub fn with_activations(mut self, act: ActMode) -> Self {
+        self.act = act;
+        self
+    }
+
+    /// The activation precision this backend serves with.
+    pub fn activations(&self) -> ActMode {
+        self.act
+    }
+
     /// The scan execution mode the loaded calibration state implies.
     fn scan_exec(&self) -> ScanExec<'_> {
         match &self.calib {
@@ -316,7 +342,13 @@ impl InferenceBackend for NativeBackend {
         let mut exec = self.scan_exec();
         Ok(self
             .weights
-            .forward_batch_ex(&self.tables, &self.scan_cfg, &[image.data.as_slice()], &mut exec)
+            .forward_batch_act(
+                &self.tables,
+                &self.scan_cfg,
+                &[image.data.as_slice()],
+                &mut exec,
+                self.act,
+            )
             .pop()
             .expect("batch of one yields one logits row"))
     }
@@ -344,8 +376,13 @@ impl InferenceBackend for NativeBackend {
             }
         }
         let mut exec = self.scan_exec();
-        let logits =
-            self.weights.forward_batch_ex(&self.tables, &self.scan_cfg, &valid, &mut exec);
+        let logits = self.weights.forward_batch_act(
+            &self.tables,
+            &self.scan_cfg,
+            &valid,
+            &mut exec,
+            self.act,
+        );
         for (slot, row) in valid_slots.into_iter().zip(logits) {
             results[slot] = Ok(row);
         }

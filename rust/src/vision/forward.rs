@@ -48,7 +48,7 @@ use anyhow::{bail, Result};
 use crate::config::{MambaXConfig, VimModel};
 use crate::quant::{
     channel_abs_max, dequantize_states, derive_scan_scales, plan_weight_precision,
-    quantize_scan_inputs, quantize_scan_inputs_static, quantize_tensor,
+    quantize_rows_i8, quantize_scan_inputs, quantize_scan_inputs_static, quantize_tensor,
     spe_scan_int_batch_fused, CalibBuilder, CalibTable, QuantTensor, TensorDtype, WeightQuantOpts,
     WeightQuantPlan,
 };
@@ -56,7 +56,7 @@ use crate::sim::sfu::SfuTables;
 use crate::sim::{ssa_scan_chunked_ref, ssa_scan_functional};
 use crate::util::Pcg;
 
-use super::gemm::{matmul, matmul_q8, matmul_ref};
+use super::gemm::{matmul, matmul_i8, matmul_q8, matmul_ref};
 use super::ops::SfuFunc;
 use super::vim::{quantizable_tensor, vim_tensor_schema, TensorSlotMut};
 
@@ -76,6 +76,43 @@ pub enum ScanExec<'a> {
     /// The dynamic path, additionally recording every item's per-channel
     /// scan ranges into a [`CalibBuilder`] (the offline calibration pass).
     Record(&'a mut CalibBuilder),
+}
+
+/// Activation precision of the GEMM hot path.
+///
+/// `F32` (the default) keeps activations dense: quantized weights run
+/// through [`matmul_q8`], which is *bitwise identical* to densifying
+/// first — the PR-8 serving contract. `I8` additionally quantizes each
+/// GEMM's activation rows to symmetric per-row INT8
+/// ([`quantize_rows_i8`]) and runs the hardware-shaped INT8×INT8 kernel
+/// [`matmul_i8`] wherever the weight side is stored INT8 — this *is*
+/// numeric drift, which is why the serving path only enables it behind
+/// the eval drift gate (`"activations": "i8"` + `evalcheck`). F32-stored
+/// weights (including the always-dense sensitive tensors like `dt_proj`)
+/// stay on the f32 kernels in either mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ActMode {
+    #[default]
+    F32,
+    I8,
+}
+
+impl ActMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ActMode::F32 => "f32",
+            ActMode::I8 => "i8",
+        }
+    }
+
+    /// Parse a config-surface name (`"f32"` / `"i8"`).
+    pub fn parse(s: &str) -> Option<ActMode> {
+        match s {
+            "f32" => Some(ActMode::F32),
+            "i8" => Some(ActMode::I8),
+            _ => None,
+        }
+    }
 }
 
 /// Shape of one executable Vim instance: model config + input geometry.
@@ -186,9 +223,12 @@ impl WeightMat {
     }
 }
 
-/// GEMM dispatch over [`WeightMat`]: dense weights take the f32 tiled
-/// kernel, INT8 weights the dequantize-in-tile kernel — bitwise the same
-/// result as densifying first (see [`matmul_q8`]).
+/// GEMM dispatch over [`WeightMat`] × [`ActMode`]: dense weights take
+/// the f32 tiled kernel in either mode; INT8 weights take the
+/// dequantize-in-tile kernel (bitwise the same result as densifying
+/// first, see [`matmul_q8`]) under f32 activations, or the INT8×INT8
+/// MAC kernel [`matmul_i8`] with per-row activation quantization under
+/// `ActMode::I8` (numeric drift, eval-gated).
 fn matmul_w(
     x: &[f32],
     w: &WeightMat,
@@ -196,10 +236,15 @@ fn matmul_w(
     m: usize,
     k: usize,
     n: usize,
+    act: ActMode,
 ) -> Vec<f32> {
-    match w {
-        WeightMat::F32(v) => matmul(x, v, bias, m, k, n),
-        WeightMat::I8(qt) => matmul_q8(x, &qt.q, &qt.scales, bias, m, k, n),
+    match (w, act) {
+        (WeightMat::F32(v), _) => matmul(x, v, bias, m, k, n),
+        (WeightMat::I8(qt), ActMode::F32) => matmul_q8(x, &qt.q, &qt.scales, bias, m, k, n),
+        (WeightMat::I8(qt), ActMode::I8) => {
+            let (qx, xscales) = quantize_rows_i8(x, m, k);
+            matmul_i8(&qx, &xscales, &qt.q, &qt.scales, bias, m, k, n)
+        }
     }
 }
 
@@ -375,6 +420,23 @@ impl VimWeights {
         images: &[&[f32]],
         exec: &mut ScanExec<'_>,
     ) -> Vec<Vec<f32>> {
+        self.forward_batch_act(tables, scan_cfg, images, exec, ActMode::F32)
+    }
+
+    /// [`Self::forward_batch_ex`] with an explicit activation precision
+    /// ([`ActMode`]). `ActMode::F32` is exactly `forward_batch_ex` —
+    /// every existing caller keeps its bitwise contract; `ActMode::I8`
+    /// switches INT8-stored GEMM sites to the INT8×INT8 kernel (the
+    /// `"activations": "i8"` serving path, gated by the eval drift
+    /// budget).
+    pub fn forward_batch_act(
+        &self,
+        tables: &SfuTables,
+        scan_cfg: &MambaXConfig,
+        images: &[&[f32]],
+        exec: &mut ScanExec<'_>,
+        act: ActMode,
+    ) -> Vec<Vec<f32>> {
         let cfg = &self.cfg;
         let b = images.len();
         if b == 0 {
@@ -390,7 +452,7 @@ impl VimWeights {
         for img in images {
             self.patchify_into(img, &mut patches);
         }
-        let tok = matmul_w(&patches, &self.patch_w, Some(&self.patch_b), b * np, pd, d);
+        let tok = matmul_w(&patches, &self.patch_w, Some(&self.patch_b), b * np, pd, d, act);
         // Middle class token (paper Fig 3(a) step 2) + position embedding,
         // per item -> contiguous (B·L, D) activations.
         let mid = np / 2;
@@ -405,7 +467,7 @@ impl VimWeights {
             }
         }
         for (bi, bw) in self.blocks.iter().enumerate() {
-            self.block(bi, bw, &mut x, b, tables, scan_cfg, exec);
+            self.block(bi, bw, &mut x, b, tables, scan_cfg, exec, act);
         }
         layer_norm(&mut x, d, &self.head_norm_g, &self.head_norm_b);
         // Gather every item's class-token row -> (B, D); one head GEMM.
@@ -414,7 +476,8 @@ impl VimWeights {
             let base = (item * l + mid) * d;
             cls_rows.extend_from_slice(&x[base..base + d]);
         }
-        let logits = matmul_w(&cls_rows, &self.head_w, Some(&self.head_b), b, d, cfg.n_classes);
+        let logits =
+            matmul_w(&cls_rows, &self.head_w, Some(&self.head_b), b, d, cfg.n_classes, act);
         logits.chunks_exact(cfg.n_classes).map(|row| row.to_vec()).collect()
     }
 
@@ -471,27 +534,28 @@ impl VimWeights {
         tables: &SfuTables,
         scan_cfg: &MambaXConfig,
         exec: &mut ScanExec<'_>,
+        act: ActMode,
     ) {
         let (d, e) = (self.cfg.model.d_model, self.cfg.model.d_inner());
         let l = self.cfg.seq_len();
         let rows = b * l;
         let mut h = x.to_vec();
         layer_norm(&mut h, d, &bw.norm_g, &bw.norm_b);
-        let xz = matmul_w(&h, &bw.in_w, Some(&bw.in_b), rows, d, 2 * e);
+        let xz = matmul_w(&h, &bw.in_w, Some(&bw.in_b), rows, d, 2 * e, act);
         let mut xi = vec![0f32; rows * e];
         let mut z = vec![0f32; rows * e];
         for row in 0..rows {
             xi[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e..row * 2 * e + e]);
             z[row * e..(row + 1) * e].copy_from_slice(&xz[row * 2 * e + e..(row + 1) * 2 * e]);
         }
-        let y_f = self.ssm_path(2 * bi, &bw.fwd, &xi, &z, b, tables, scan_cfg, exec);
+        let y_f = self.ssm_path(2 * bi, &bw.fwd, &xi, &z, b, tables, scan_cfg, exec, act);
         let xi_rev = reversed_rows_batched(&xi, b, l, e);
         let z_rev = reversed_rows_batched(&z, b, l, e);
         let y_b_rev =
-            self.ssm_path(2 * bi + 1, &bw.bwd, &xi_rev, &z_rev, b, tables, scan_cfg, exec);
+            self.ssm_path(2 * bi + 1, &bw.bwd, &xi_rev, &z_rev, b, tables, scan_cfg, exec, act);
         let y_b = reversed_rows_batched(&y_b_rev, b, l, e);
         let sum: Vec<f32> = y_f.iter().zip(&y_b).map(|(a, b)| a + b).collect();
-        let y = matmul_w(&sum, &bw.out_w, Some(&bw.out_b), rows, e, d);
+        let y = matmul_w(&sum, &bw.out_w, Some(&bw.out_b), rows, e, d, act);
         for (xv, yv) in x.iter_mut().zip(&y) {
             *xv += yv;
         }
@@ -516,6 +580,7 @@ impl VimWeights {
         tables: &SfuTables,
         scan_cfg: &MambaXConfig,
         exec: &mut ScanExec<'_>,
+        act: ActMode,
     ) -> Vec<f32> {
         let m = &self.cfg.model;
         let (e, n, r, k) = (m.d_inner(), m.d_state, m.dt_rank(), m.conv_k);
@@ -532,7 +597,7 @@ impl VimWeights {
         }
         // x-proj: split into (dt_raw, B, C) per step.
         let cols = r + 2 * n;
-        let xdbc = matmul_w(&u, &dw.xproj_w, None, rows, e, cols);
+        let xdbc = matmul_w(&u, &dw.xproj_w, None, rows, e, cols, act);
         let mut dt_raw = vec![0f32; rows * r];
         let mut b_mat = vec![0f32; rows * n];
         let mut c_mat = vec![0f32; rows * n];
@@ -1105,6 +1170,52 @@ mod tests {
             VimWeights::init(&cfg, 21).forward(&tables, &scan, &img),
             "quantization must actually change the weights"
         );
+    }
+
+    #[test]
+    fn int8_activations_drift_bounded_and_default_stays_bitwise() {
+        let cfg = tiny_cfg();
+        let tables = SfuTables::fitted();
+        let scan = MambaXConfig::default();
+        let mut w = VimWeights::init(&cfg, 33);
+        w.apply_weight_quant(&WeightQuantPlan::all_at_absmax(&w.weight_quant_candidates()))
+            .unwrap();
+        let imgs: Vec<Vec<f32>> = (0..3).map(|s| image(200 + s, cfg.input_len())).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let f32_act = w.forward_batch(&tables, &scan, &refs);
+        // The explicit-ActMode entry at F32 is the same code path.
+        let f32_act_ex = w.forward_batch_act(
+            &tables,
+            &scan,
+            &refs,
+            &mut ScanExec::Dynamic,
+            ActMode::F32,
+        );
+        assert_eq!(f32_act, f32_act_ex, "default activation mode must stay bitwise");
+        let i8_act =
+            w.forward_batch_act(&tables, &scan, &refs, &mut ScanExec::Dynamic, ActMode::I8);
+        let again =
+            w.forward_batch_act(&tables, &scan, &refs, &mut ScanExec::Dynamic, ActMode::I8);
+        assert_eq!(i8_act, again, "i8 activations are deterministic");
+        assert_ne!(f32_act, i8_act, "i8 activations must engage a different kernel");
+        for row in &i8_act {
+            assert_eq!(row.len(), cfg.n_classes);
+            assert!(row.iter().all(|v| v.is_finite()));
+        }
+        let drift = relative_logit_error(&f32_act, &i8_act);
+        assert!(drift > 0.0 && drift < 0.6, "i8 activation drift out of range: {drift}");
+        // Dense f32 weights ignore the activation mode entirely: every
+        // GEMM site falls back to the f32 kernel.
+        let dense = VimWeights::init(&cfg, 33);
+        assert_eq!(
+            dense.forward_batch(&tables, &scan, &refs),
+            dense.forward_batch_act(&tables, &scan, &refs, &mut ScanExec::Dynamic, ActMode::I8),
+            "f32-stored weights must stay bitwise under ActMode::I8"
+        );
+        assert_eq!(ActMode::parse("i8"), Some(ActMode::I8));
+        assert_eq!(ActMode::parse("f32"), Some(ActMode::F32));
+        assert_eq!(ActMode::parse("int8"), None);
+        assert_eq!(ActMode::default().name(), "f32");
     }
 
     #[test]

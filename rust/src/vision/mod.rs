@@ -15,7 +15,9 @@ mod ops;
 mod vim;
 mod vit;
 
-pub use forward::{BlockWeights, DirWeights, ForwardConfig, ScanExec, VimWeights, WeightMat};
+pub use forward::{
+    ActMode, BlockWeights, DirWeights, ForwardConfig, ScanExec, VimWeights, WeightMat,
+};
 pub use gemm::{matmul, matmul_i8, matmul_q8, matmul_ref};
 pub use ops::{Op, OpClass, SfuFunc};
 pub use vim::{

@@ -1,0 +1,328 @@
+//! Accuracy-evaluation subsystem properties (the acceptance gate for
+//! the eval harness + drift-gated INT8-activation serving):
+//!
+//! * same-seed determinism: two independently built eval reports over
+//!   the same (seed, samples, weights) dump *byte-identical* JSON — the
+//!   contract behind the CI `cmp` determinism gate — while a different
+//!   seed produces a different stream;
+//! * the f32 oracle is honest: a dense f32 variant served through the
+//!   real engine (admission, batching, epoch machinery) is bitwise the
+//!   reference oracle, so its agreement floors sit at exactly 1.0;
+//! * INT8 activations are gated drift, not silent corruption: over
+//!   random model geometries the `"activations": "i8"` forward stays
+//!   within a generous relative-error budget of the f32 oracle, is
+//!   run-to-run deterministic, and the f32 default stays bitwise the
+//!   plain forward on the same INT8-stored weights;
+//! * the committed golden eval report fixture decodes pinned
+//!   (field-for-field) and re-encodes to a stable fixpoint;
+//! * the committed `EVAL_baseline.json` is well-formed and gates:
+//!   a perfect report passes it, while foreign formats, future
+//!   versions, and missing metrics are refused/failed typed.
+
+use std::path::PathBuf;
+
+use mamba_x::config::{MambaXConfig, VimModel};
+use mamba_x::coordinator::{BatchPolicy, EngineBuilder, Request};
+use mamba_x::eval::{
+    check_eval, oracle_logits, weight_quant_frontier, EvalReport, EvalSet, FrontierSweep,
+    ModelEval, EVAL_BASELINE_FORMAT, EVAL_BASELINE_VERSION,
+};
+use mamba_x::quant::{WeightQuantOpts, WeightQuantPlan};
+use mamba_x::runtime::{ModelSource, ModelSpec, NativeBackend, Tensor};
+use mamba_x::sim::sfu::SfuTables;
+use mamba_x::util::{Json, Pcg};
+use mamba_x::vision::{ActMode, ForwardConfig, ScanExec, VimWeights};
+
+/// Small-but-real model (same shape as the other property suites).
+fn tiny_cfg() -> ForwardConfig {
+    ForwardConfig {
+        model: VimModel {
+            name: "eval-prop",
+            d_model: 16,
+            n_blocks: 2,
+            d_state: 4,
+            expand: 2,
+            conv_k: 4,
+            patch: 4,
+        },
+        img: 8,
+        in_ch: 1,
+        n_classes: 6,
+    }
+}
+
+/// Build a full eval report from scratch — set, oracle, a quantized
+/// variant scored against it, and the frontier sweep — with no caching
+/// between calls, so equality below is end-to-end determinism.
+fn build_report(seed: u64) -> EvalReport {
+    let cfg = tiny_cfg();
+    let weights = VimWeights::init(&cfg, 19);
+    let set = EvalSet::synthetic(seed, 4, cfg.input_len()).unwrap();
+    let oracle = oracle_logits(&weights, &set).unwrap();
+    let mut q = weights.clone();
+    q.apply_weight_quant(&WeightQuantPlan::all_at_percentile(
+        &q.weight_quant_candidates(),
+        0.999,
+    ))
+    .unwrap();
+    let got = q.forward_batch(&SfuTables::fitted(), &MambaXConfig::default(), &set.refs());
+    let mut m = ModelEval::compute("det@w8", "f32", &oracle, &got).unwrap();
+    let (f32_eq, stored) = q.weight_bytes();
+    m.weight_bytes_f32 = f32_eq as u64;
+    m.weight_bytes_stored = stored as u64;
+    let points = weight_quant_frontier(&weights, &set, &WeightQuantOpts::default()).unwrap();
+    EvalReport {
+        seed,
+        samples: set.items.len(),
+        config: "det".to_string(),
+        models: vec![m],
+        frontier: vec![FrontierSweep { model: "det@w8".to_string(), points }],
+    }
+}
+
+/// PROPERTY: identical seeds produce byte-identical report JSON — the
+/// whole pipeline (synthetic stream, oracle forward, quantization,
+/// metric reduction, frontier sweep, JSON dump) is deterministic, which
+/// is exactly what the CI runs `mamba-x eval` twice to `cmp`-verify.
+#[test]
+fn same_seed_reports_dump_byte_identical() {
+    let a = build_report(3).to_json().dump();
+    let b = build_report(3).to_json().dump();
+    assert_eq!(a, b, "same seed must reproduce the report byte-for-byte");
+    let c = build_report(4).to_json().dump();
+    assert_ne!(a, c, "different eval seeds must change the report");
+    // And the dump round-trips exactly.
+    let back = EvalReport::from_json(&Json::parse(&a).unwrap()).unwrap();
+    assert_eq!(back.to_json().dump(), a);
+}
+
+/// ACCEPTANCE (oracle honesty): a dense f32 variant driven through the
+/// serving engine — admission, batching, the epoch machinery — returns
+/// logits bitwise identical to [`oracle_logits`], so the committed 1.0
+/// agreement floors for `"activations": "f32"` variants are exact, not
+/// statistical.
+#[test]
+fn f32_variant_served_through_engine_is_bitwise_the_oracle() {
+    let cfg = tiny_cfg();
+    let seed = 23u64;
+    let set = EvalSet::synthetic(11, 6, cfg.input_len()).unwrap();
+    let oracle = oracle_logits(&VimWeights::init(&cfg, seed), &set).unwrap();
+
+    let source = ModelSource::RandomInit { config: cfg.clone(), seed };
+    let spec = ModelSpec::new("eval@f32", NativeBackend::factory(source, None, None).unwrap());
+    let (engine, join) = EngineBuilder::new()
+        .workers(2)
+        .policy(BatchPolicy { max_batch: 4, max_wait_us: 200 })
+        .queue_depth(32)
+        .register(spec)
+        .unwrap()
+        .build()
+        .unwrap();
+    let mut got = Vec::new();
+    for (k, item) in set.items.iter().enumerate() {
+        let img = Tensor::new(cfg.input_shape(), item.clone()).unwrap();
+        got.push(engine.infer(Request::new("eval@f32", k as u64, img)).unwrap().logits);
+    }
+    drop(engine);
+    join.join().unwrap();
+
+    assert_eq!(got, oracle, "engine-served f32 logits are bitwise the reference oracle");
+    let m = ModelEval::compute("eval@f32", "f32", &oracle, &got).unwrap();
+    assert_eq!(m.top1_agreement, 1.0);
+    assert_eq!(m.top5_agreement, 1.0);
+    assert_eq!(m.mean_logit_mse, 0.0);
+    assert_eq!(m.max_rel_err, 0.0);
+}
+
+/// PROPERTY (drift budget): over random model geometries, running INT8
+/// activations on INT8-stored weights (the `matmul_i8` hot path) stays
+/// within a generous relative-logit-error budget of the f32 oracle and
+/// is run-to-run deterministic — while `ActMode::F32` on the *same*
+/// quantized weights remains bitwise the plain `forward_batch`, i.e.
+/// the default activation mode can never change served bits.
+#[test]
+fn i8_activation_drift_bounded_over_random_geometries_f32_default_bitwise() {
+    let tables = SfuTables::fitted();
+    let scan = MambaXConfig::default();
+    let mut rng = Pcg::new(0xE7A1_0001);
+    for case in 0..4u64 {
+        let cfg = ForwardConfig {
+            model: VimModel {
+                name: "eval-rand",
+                d_model: 8 * rng.usize_in(1, 2),
+                n_blocks: rng.usize_in(1, 2),
+                d_state: 2 * rng.usize_in(1, 2),
+                expand: 2,
+                conv_k: 4,
+                patch: if rng.f64() < 0.5 { 2 } else { 4 },
+            },
+            img: 8,
+            in_ch: 1,
+            n_classes: rng.usize_in(4, 8),
+        };
+        let tag = format!(
+            "case {case}: d_model={} n_blocks={} d_state={} patch={} classes={}",
+            cfg.model.d_model, cfg.model.n_blocks, cfg.model.d_state, cfg.model.patch, cfg.n_classes
+        );
+        let weights = VimWeights::init(&cfg, 100 + case);
+        let set = EvalSet::synthetic(40 + case, 3, cfg.input_len()).unwrap();
+        let oracle = oracle_logits(&weights, &set).unwrap();
+
+        let mut q = weights.clone();
+        q.apply_weight_quant(&WeightQuantPlan::all_at_percentile(
+            &q.weight_quant_candidates(),
+            0.999,
+        ))
+        .unwrap();
+
+        // The default stays bitwise: ActMode::F32 is plain forward_batch.
+        let f32_plain = q.forward_batch(&tables, &scan, &set.refs());
+        let f32_act =
+            q.forward_batch_act(&tables, &scan, &set.refs(), &mut ScanExec::Dynamic, ActMode::F32);
+        assert_eq!(f32_act, f32_plain, "{tag}: f32 activations must not change bits");
+
+        // The i8 hot path engages (different kernel, different bits)...
+        let i8_act =
+            q.forward_batch_act(&tables, &scan, &set.refs(), &mut ScanExec::Dynamic, ActMode::I8);
+        assert_ne!(i8_act, f32_plain, "{tag}: i8 activations must engage the INT8 GEMM");
+        // ...deterministically...
+        let again =
+            q.forward_batch_act(&tables, &scan, &set.refs(), &mut ScanExec::Dynamic, ActMode::I8);
+        assert_eq!(i8_act, again, "{tag}: i8 forward must be run-to-run deterministic");
+
+        // ...and within the drift budget of the f32 oracle.
+        let m = ModelEval::compute("rand@w8a8", "i8", &oracle, &i8_act).unwrap();
+        assert!(m.max_rel_err.is_finite(), "{tag}: rel err must be finite");
+        assert!(
+            m.max_rel_err < 1.0,
+            "{tag}: i8 activation drift {} blew the relative-error budget",
+            m.max_rel_err
+        );
+        assert!((0.0..=1.0).contains(&m.top1_agreement), "{tag}");
+        assert!(m.top5_agreement >= m.top1_agreement, "{tag}: top-5 contains top-1");
+    }
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/data/eval_v1.json")
+}
+
+/// The committed golden eval report decodes pinned: every field of the
+/// fixture is asserted, and decode -> encode is a stable fixpoint (the
+/// byte layout of *fresh* dumps is covered by the determinism property;
+/// the fixture pins the decode semantics across future format work).
+#[test]
+fn golden_eval_report_v1_decodes_pinned() {
+    let report = EvalReport::load(golden_path()).unwrap();
+    assert_eq!(report.seed, 7);
+    assert_eq!(report.samples, 4);
+    assert_eq!(report.config, "golden-engine.json");
+    assert_eq!(report.models.len(), 2);
+
+    let f = &report.models[0];
+    assert_eq!(f.name, "golden@f32");
+    assert_eq!(f.activations, "f32");
+    assert_eq!(f.samples, 4);
+    assert_eq!(f.top1_agreement, 1.0);
+    assert_eq!(f.top5_agreement, 1.0);
+    assert_eq!(f.logit_mse, vec![0.0, 0.0, 0.0]);
+    assert_eq!(f.mean_logit_mse, 0.0);
+    assert_eq!(f.max_rel_err, 0.0);
+    assert_eq!(f.weight_bytes_f32, 4096);
+    assert_eq!(f.weight_bytes_stored, 4096);
+
+    let q = &report.models[1];
+    assert_eq!(q.name, "golden@w8a8");
+    assert_eq!(q.activations, "i8");
+    assert_eq!(q.top1_agreement, 0.75);
+    assert_eq!(q.logit_mse, vec![0.015625, 0.03125, 0.046875]);
+    assert_eq!(q.mean_logit_mse, 0.03125, "dyadic mean is exact in binary");
+    assert_eq!(q.max_rel_err, 0.125);
+    assert_eq!(q.weight_bytes_stored, 1280);
+
+    assert_eq!(report.frontier.len(), 1);
+    let sweep = &report.frontier[0];
+    assert_eq!(sweep.model, "golden@w8a8");
+    let pcts: Vec<f32> = sweep.points.iter().map(|p| p.percentile).collect();
+    assert_eq!(pcts, vec![1.0, 0.999, 0.99], "candidate order is pinned");
+    assert!(sweep.points.iter().all(|p| p.weight_bytes_stored < p.weight_bytes_f32));
+
+    // Decode -> encode -> decode is a fixpoint.
+    let dump = report.to_json().dump();
+    let back = EvalReport::from_json(&Json::parse(&dump).unwrap()).unwrap();
+    assert_eq!(back, report);
+    assert_eq!(back.to_json().dump(), dump);
+}
+
+/// A gate-facing report whose metrics are all perfect for `name`.
+fn perfect_eval(name: &str, activations: &str) -> ModelEval {
+    ModelEval {
+        name: name.to_string(),
+        activations: activations.to_string(),
+        samples: 8,
+        top1_agreement: 1.0,
+        top5_agreement: 1.0,
+        logit_mse: vec![0.0, 0.0],
+        mean_logit_mse: 0.0,
+        max_rel_err: 0.0,
+        weight_bytes_f32: 1024,
+        weight_bytes_stored: 1024,
+    }
+}
+
+/// ACCEPTANCE (gate wiring): the *committed* `EVAL_baseline.json` is a
+/// well-formed current-version baseline that actually gates — a perfect
+/// report over the CI variant names passes it, dropping a gated variant
+/// fails it — and foreign/future baselines are refused typed before any
+/// comparison runs.
+#[test]
+fn committed_baseline_gates_and_refuses_foreign_or_future() {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("EVAL_baseline.json");
+    let baseline = Json::load(&path).unwrap();
+    assert_eq!(baseline.get("format").unwrap().str().unwrap(), EVAL_BASELINE_FORMAT);
+    assert_eq!(
+        baseline.get("version").unwrap().num().unwrap() as u32,
+        EVAL_BASELINE_VERSION,
+        "committed baseline must be the current version"
+    );
+
+    // Every gated model name, served perfectly, passes the real floors.
+    let report = EvalReport {
+        seed: 7,
+        samples: 8,
+        config: "ci".to_string(),
+        models: vec![
+            perfect_eval("eval@f32", "f32"),
+            perfect_eval("eval@w8", "f32"),
+            perfect_eval("eval@w8a8", "i8"),
+        ],
+        frontier: Vec::new(),
+    };
+    let current = report.to_json();
+    let gate = check_eval(&current, &baseline, None).unwrap();
+    assert!(gate.passed(), "perfect report fails committed baseline: {:?}", gate.failed());
+    assert!(!gate.checks.is_empty());
+
+    // Dropping a gated variant is a failure, never a silent pass.
+    let partial = EvalReport {
+        models: vec![perfect_eval("eval@f32", "f32")],
+        ..report.clone()
+    };
+    let gate = check_eval(&partial.to_json(), &baseline, None).unwrap();
+    assert!(!gate.passed(), "missing gated variants must fail");
+    assert!(gate.failed().iter().all(|c| c.current.is_none()));
+
+    // Foreign and future baselines are refused typed.
+    let dump = baseline.dump();
+    let foreign =
+        Json::parse(&dump.replace(EVAL_BASELINE_FORMAT, "mamba-x-bench-baseline")).unwrap();
+    assert!(check_eval(&current, &foreign, None).is_err(), "foreign baseline refused");
+    let future = Json::parse(&dump.replace("\"version\":1", "\"version\":99")).unwrap();
+    let e = check_eval(&current, &future, None).unwrap_err();
+    assert!(e.to_string().contains("newer"), "future baseline names the problem: {e}");
+
+    // A future *report* is refused symmetrically.
+    let cur_dump = current.dump();
+    let future_report = Json::parse(&cur_dump.replace("\"version\":1", "\"version\":99")).unwrap();
+    assert!(check_eval(&future_report, &baseline, None).is_err());
+}

@@ -29,7 +29,7 @@ use mamba_x::runtime::{
     ModelSpec, NativeBackend, Provenance, Tensor, TensorVerify, VerifyMode, VimArtifact,
 };
 use mamba_x::util::Pcg;
-use mamba_x::vision::{ForwardConfig, VimWeights};
+use mamba_x::vision::{ActMode, ForwardConfig, VimWeights};
 
 /// Small-but-real model (same as `engine_props.rs` / `serving_props.rs`):
 /// every datapath stage of the micro model, far fewer multiplies.
@@ -197,9 +197,14 @@ fn lazy_factory_surfaces_corruption_typed_at_build() {
     let pristine = std::fs::read(&path).unwrap();
 
     // Eager phase passes while the file is sound.
-    let factory =
-        NativeBackend::factory_ex(ModelSource::Artifact(path.clone()), None, None, VerifyMode::Lazy)
-            .expect("sound artifact passes the eager phase");
+    let factory = NativeBackend::factory_ex(
+        ModelSource::Artifact(path.clone()),
+        None,
+        None,
+        VerifyMode::Lazy,
+        ActMode::F32,
+    )
+    .expect("sound artifact passes the eager phase");
 
     let meta = {
         let probe = ArtifactStore::open_lazy(&path).unwrap();
@@ -223,8 +228,14 @@ fn lazy_factory_surfaces_corruption_typed_at_build() {
 
     // Eager semantics preserved: the classic factory refuses up front.
     assert!(
-        NativeBackend::factory_ex(ModelSource::Artifact(path.clone()), None, None, VerifyMode::Eager)
-            .is_err(),
+        NativeBackend::factory_ex(
+            ModelSource::Artifact(path.clone()),
+            None,
+            None,
+            VerifyMode::Eager,
+            ActMode::F32,
+        )
+        .is_err(),
         "verify=eager catches the rot at construction"
     );
     std::fs::remove_file(&path).unwrap();
@@ -463,4 +474,113 @@ fn removed_window_typed_and_readd_serves_new_weights() {
     let m = report.model("zoo@x").expect("entry survives into the report");
     assert!(!m.retired);
     assert_eq!(m.metrics.count(), 2, "books accumulate across the generations");
+}
+
+/// REGRESSION (tombstone reap): removing a model under concurrent load
+/// retires it immediately but releases its weights only after every
+/// in-flight job for the name drains — `health()` flips `reaped` once
+/// the queue window closes, the books stay exact across the drain, and
+/// re-adding the name revives the entry (`reaped == false`, monotone
+/// epoch) serving the new generation's weights bit-exactly.
+#[test]
+fn retired_tombstone_reaps_after_drain_and_readd_revives() {
+    let cfg = prop_cfg();
+    let n_elems = cfg.input_len();
+    let (engine, join) = EngineBuilder::new()
+        .workers(2)
+        .policy(BatchPolicy { max_batch: 4, max_wait_us: 200 })
+        .queue_depth(64)
+        .register(spec_for_seed("zoo@keep", &cfg, 61))
+        .unwrap()
+        .register(spec_for_seed("zoo@gone", &cfg, 62))
+        .unwrap()
+        .build()
+        .unwrap();
+
+    // Hammer the doomed model until removal makes submissions fail
+    // typed; count both windows exactly.
+    let admitted = Arc::new(AtomicU64::new(0));
+    let completed = Arc::new(AtomicU64::new(0));
+    let unknown = Arc::new(AtomicU64::new(0));
+    let client = {
+        let eng = engine.clone();
+        let shape = cfg.input_shape();
+        let (admitted, completed, unknown) =
+            (Arc::clone(&admitted), Arc::clone(&completed), Arc::clone(&unknown));
+        std::thread::spawn(move || {
+            for id in 0..80u64 {
+                let img =
+                    Tensor::new(shape.clone(), synthetic_image(6, id, shape.iter().product()))
+                        .unwrap();
+                match eng.submit(Request::new("zoo@gone", id, img)) {
+                    Ok(waiter) => {
+                        admitted.fetch_add(1, Ordering::Relaxed);
+                        waiter.wait().expect("admitted pre-removal jobs drain normally");
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        assert_eq!(
+                            e.reject_reason(),
+                            Some(RejectReason::UnknownModel),
+                            "post-removal submissions fail typed"
+                        );
+                        unknown.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    engine.remove_model("zoo@gone").unwrap();
+    client.join().unwrap();
+
+    // Keeper traffic cycles the workers so the loop-bottom reap check
+    // runs after the last in-flight `zoo@gone` job settles; poll health
+    // until the tombstone's weights are released.
+    let mut reaped = false;
+    for round in 0..200u64 {
+        let img = Tensor::new(cfg.input_shape(), synthetic_image(7, round, n_elems)).unwrap();
+        engine.infer(Request::new("zoo@keep", round, img)).unwrap();
+        let health = engine.health();
+        let gone = health.models.iter().find(|m| m.name == "zoo@gone").expect("tombstone listed");
+        assert!(gone.retired, "removed name stays retired while tombstoned");
+        let keep = health.models.iter().find(|m| m.name == "zoo@keep").unwrap();
+        assert!(!keep.retired && !keep.reaped, "live sibling is never reaped");
+        if gone.reaped {
+            reaped = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(reaped, "drained tombstone releases its weights");
+
+    // Re-adding the name revives the entry: weights are rebuilt at a
+    // monotone epoch and the reaped flag clears.
+    engine.add_model(spec_for_seed("zoo@gone", &cfg, 63)).unwrap();
+    let health = engine.health();
+    let gone = health.models.iter().find(|m| m.name == "zoo@gone").unwrap();
+    assert!(!gone.retired && !gone.reaped, "re-add revives the reaped entry");
+    assert!(gone.epoch >= 1, "revival swaps in at a fresh epoch");
+    let img = Tensor::new(cfg.input_shape(), synthetic_image(8, 1, n_elems)).unwrap();
+    let resp = engine.infer(Request::new("zoo@gone", 9001, img.clone())).unwrap();
+    assert_eq!(
+        resp.logits,
+        NativeBackend::new(&cfg, 63).infer(&img).unwrap(),
+        "revived name serves the new generation's weights bit-exactly"
+    );
+
+    drop(engine);
+    let report = join.join().unwrap();
+    let admitted = admitted.load(Ordering::Relaxed);
+    let completed = completed.load(Ordering::Relaxed);
+    let unknown = unknown.load(Ordering::Relaxed);
+    assert_eq!(admitted + unknown, 80, "every client request lands in exactly one class");
+    assert_eq!(admitted, completed, "no admitted request is lost across the reap");
+    assert_eq!(report.rejected_unknown_model, unknown, "removed window reconciles");
+    let gone = report.model("zoo@gone").expect("books survive the reap");
+    assert_eq!(
+        gone.metrics.count() as u64,
+        completed + 1,
+        "tombstone books are exact: drained jobs plus the revived probe"
+    );
 }
